@@ -1,0 +1,53 @@
+//! Quickstart: quantize a small trained model to 1 bit with NanoQuant and
+//! verify the quality/size trade against naive binarization.
+//!
+//!     cargo run --release --example quickstart
+
+use nanoquant::data::{gen_corpus, sample_sequences, tokenize, CorpusKind};
+use nanoquant::eval::perplexity;
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::{LayerKind, ModelParams};
+use nanoquant::nn::trainer::train;
+use nanoquant::quant::{quantize, PipelineConfig};
+use nanoquant::util::rng::Rng;
+
+fn main() {
+    // 1. A small teacher, trained briefly on the synthetic corpus.
+    let cfg = family_config("l2", "xs");
+    let mut rng = Rng::new(0);
+    let mut teacher = ModelParams::init(&cfg, &mut rng);
+    let corpus = tokenize(&gen_corpus(CorpusKind::SynthText, 400_000, 0));
+    println!("training a {} teacher ({} params)…", cfg.name, nanoquant::nn::param_count(&cfg));
+    train(&mut teacher, &corpus, 300, 8, 48, 3e-3, 1, false);
+
+    // 2. Calibration set: 24 sequences (the paper uses 128 x 2048 tokens).
+    let seq = 48;
+    let calib = sample_sequences(&corpus, seq + 1, 24, &mut rng);
+
+    // 3. Quantize to an effective 1.0 bits per weight.
+    let pcfg = PipelineConfig { bpw: 1.0, verbose: true, ..Default::default() };
+    let (qm, report) = quantize(&teacher, &calib, seq, &pcfg);
+    println!(
+        "quantized: {:.3} effective BPW, {:.2} MB, {:.1}s wall",
+        report.effective_bpw,
+        report.effective_bytes as f64 / 1e6,
+        report.wall_seconds
+    );
+
+    // 4. Compare perplexity: teacher vs NanoQuant vs naive sign binarization.
+    let eval = tokenize(&gen_corpus(CorpusKind::SynthText, 60_000, 9));
+    let ppl_teacher = perplexity(&teacher, &eval, seq, 10);
+    let ppl_quant = perplexity(&qm.params, &eval, seq, 10);
+    let mut naive = teacher.clone();
+    for b in naive.blocks.iter_mut() {
+        for kind in LayerKind::ALL {
+            let w = b.linear(kind);
+            let alpha = w.abs_mean() as f32;
+            *b.linear_mut(kind) = w.sign_pm1().scale(alpha);
+        }
+    }
+    let ppl_naive = perplexity(&naive, &eval, seq, 10);
+    println!("perplexity:  teacher {ppl_teacher:.2}  |  NanoQuant@1bit {ppl_quant:.2}  |  naive sign {ppl_naive:.2}");
+    assert!(ppl_quant < ppl_naive, "NanoQuant must beat naive binarization");
+    println!("quickstart OK");
+}

@@ -1,0 +1,45 @@
+//! Sweep the accuracy-per-bit frontier: quantize one teacher across a range
+//! of BPW targets and print the (bits, size, perplexity) curve — a
+//! minimal version of the paper's Fig. 6 Pareto analysis.
+//!
+//!     cargo run --release --example sweep_bpw [-- --family l2 --size xs]
+
+use nanoquant::data::{gen_corpus, sample_sequences, tokenize, CorpusKind};
+use nanoquant::eval::perplexity;
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::ModelParams;
+use nanoquant::nn::trainer::train;
+use nanoquant::quant::{quantize, PipelineConfig};
+use nanoquant::util::cli::Args;
+use nanoquant::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let family = args.get_or("family", "l2");
+    let size = args.get_or("size", "xs");
+    let cfg = family_config(family, size);
+    let mut rng = Rng::new(1);
+    let mut teacher = ModelParams::init(&cfg, &mut rng);
+    let corpus = tokenize(&gen_corpus(CorpusKind::SynthText, 500_000, 3));
+    eprintln!("training {}…", cfg.name);
+    train(&mut teacher, &corpus, 300, 6, 48, 3e-3, 4, false);
+
+    let seq = 48;
+    let calib = sample_sequences(&corpus, seq + 1, 16, &mut rng);
+    let eval = tokenize(&gen_corpus(CorpusKind::SynthText, 80_000, 5));
+    let ppl_fp = perplexity(&teacher, &eval, seq, 10);
+    println!("{:<8} {:>8} {:>10} {:>8}", "bpw", "achieved", "size (KB)", "ppl");
+    println!("{:<8} {:>8} {:>10} {:>8.2}", "16.0", "16.00", "-", ppl_fp);
+    for bpw in [3.0, 2.0, 1.5, 1.0, 0.8, 0.55] {
+        let pcfg = PipelineConfig { bpw, ..Default::default() };
+        let (qm, report) = quantize(&teacher, &calib, seq, &pcfg);
+        let ppl = perplexity(&qm.params, &eval, seq, 10);
+        println!(
+            "{:<8} {:>8.2} {:>10.0} {:>8.2}",
+            bpw,
+            report.effective_bpw,
+            report.effective_bytes as f64 / 1e3,
+            ppl
+        );
+    }
+}

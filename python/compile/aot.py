@@ -1,0 +1,153 @@
+"""AOT export: lower the L2 JAX graphs (with L1 Pallas kernels inside) to
+HLO *text* artifacts consumed by the Rust runtime.
+
+HLO text — NOT `lowered.compiler_ir("hlo")`-proto serialization — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published `xla` crate wraps)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run from python/: `python -m compile.aot --out ../artifacts`
+(`make artifacts` wraps this and is a no-op when sources are unchanged).
+
+Exported set (see DESIGN.md §7):
+  <cfg>_fwd_dense       logits = f(params..., tokens[B,S])
+  <cfg>_fwd_quant       same, every decoder linear through the Pallas
+                        packed binary kernels (rank from --bpw)
+  <cfg>_decode_dense    single-token decode with KV cache
+  <cfg>_decode_quant    same through the Pallas kernels
+  <cfg>_decode_naive    quantized but dense-dequantize (GemLite-like)
+  gemv_<n>x<m>x<r>_{pallas,naive,dense}  kernel micro-graphs (Figs. 10-13)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.binary_gemv import binary_gemv
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(out_dir: str, name: str, text: str, manifest: dict, meta: dict):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest[name] = {"file": f"{name}.hlo.txt", **meta}
+    print(f"  wrote {name} ({len(text) / 1e6:.2f} MB)")
+
+
+def export_model_graphs(cfg: M.Config, out_dir: str, manifest: dict, *, bpw: float,
+                        batch: int, seq: int):
+    base = cfg.name.replace("-", "_")
+    shapes = M.linear_shapes(cfg)
+    ranks = {k: M.rank_for_bpw(n, m, bpw) for k, (n, m) in shapes.items()}
+
+    # Dense full-sequence forward.
+    fn = M.forward_fn(cfg, engine="dense", quant_bpw=None, batch=batch, seq=seq)
+    args = M.example_args(cfg, quant_bpw=None, batch=batch, seq=seq, mode="forward")
+    write(out_dir, f"{base}_fwd_dense", to_hlo_text(jax.jit(fn).lower(*args)), manifest,
+          {"kind": "forward", "engine": "dense", "config": cfg.name, "batch": batch,
+           "seq": seq, "quant_bpw": None})
+
+    # Quantized full-sequence forward (Pallas kernels).
+    fn = M.forward_fn(cfg, engine="pallas", quant_bpw=bpw, batch=batch, seq=seq)
+    args = M.example_args(cfg, quant_bpw=bpw, batch=batch, seq=seq, mode="forward")
+    write(out_dir, f"{base}_fwd_quant", to_hlo_text(jax.jit(fn).lower(*args)), manifest,
+          {"kind": "forward", "engine": "pallas", "config": cfg.name, "batch": batch,
+           "seq": seq, "quant_bpw": bpw, "ranks": ranks})
+
+    # Decode graphs.
+    for engine, qb, name in [
+        ("dense", None, f"{base}_decode_dense"),
+        ("pallas", bpw, f"{base}_decode_quant"),
+        ("naive", bpw, f"{base}_decode_naive"),
+    ]:
+        fn = M.decode_fn(cfg, engine=engine, quant_bpw=qb)
+        args = M.example_args(cfg, quant_bpw=qb, batch=1, seq=seq, mode="decode")
+        write(out_dir, name, to_hlo_text(jax.jit(fn).lower(*args)), manifest,
+              {"kind": "decode", "engine": engine, "config": cfg.name,
+               "max_seq": cfg.max_seq, "quant_bpw": qb,
+               "ranks": ranks if qb else None})
+
+
+def export_kernel_micrographs(out_dir: str, manifest: dict):
+    """Isolated kernel graphs for the Fig. 10-13 benches."""
+    shapes = [(256, 256, 112), (512, 512, 240), (1024, 1024, 496)]
+    for (n, m, r) in shapes:
+        wpr_r = (r + 31) // 32
+        wpr_m = (m + 31) // 32
+        specs_common = [
+            jax.ShapeDtypeStruct((n, wpr_r), jnp.uint32),
+            jax.ShapeDtypeStruct((r, wpr_m), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ]
+
+        def pallas_fn(up, vtp, s1, s2, x):
+            return (binary_gemv(up, vtp, s1, s2, x, n=n, m=m, r=r),)
+
+        def naive_fn(up, vtp, s1, s2, x):
+            w = ref.dense_reconstruct(up, vtp, s1, s2, n=n, m=m, r=r)
+            return (w @ x,)
+
+        def dense_fn(w, x):
+            return (w @ x,)
+
+        write(out_dir, f"gemv_{n}x{m}x{r}_pallas",
+              to_hlo_text(jax.jit(pallas_fn).lower(*specs_common)), manifest,
+              {"kind": "gemv", "engine": "pallas", "n": n, "m": m, "r": r})
+        write(out_dir, f"gemv_{n}x{m}x{r}_naive",
+              to_hlo_text(jax.jit(naive_fn).lower(*specs_common)), manifest,
+              {"kind": "gemv", "engine": "naive", "n": n, "m": m, "r": r})
+        dense_specs = [
+            jax.ShapeDtypeStruct((n, m), jnp.float32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+        ]
+        write(out_dir, f"gemv_{n}x{m}_dense",
+              to_hlo_text(jax.jit(dense_fn).lower(*dense_specs)), manifest,
+              {"kind": "gemv", "engine": "dense", "n": n, "m": m, "r": None})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default="l2-s", help="family-size, e.g. l2-s")
+    ap.add_argument("--bpw", type=float, default=1.0)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {}
+    family, size = args.config.split("-")
+    cfg = M.family_config(family, size)
+    print(f"[aot] exporting graphs for {cfg.name} (bpw={args.bpw})")
+    export_model_graphs(cfg, args.out, manifest, bpw=args.bpw, batch=args.batch,
+                        seq=args.seq)
+    if not args.skip_kernels:
+        print("[aot] exporting kernel micro-graphs")
+        export_kernel_micrographs(args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] {len(manifest)} artifacts -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Layer-1 Pallas kernel: packed binary low-rank GEMM (batched inference).
+
+The Marlin-style batched kernel of paper Appendix E.3, rethought for the
+MXU: the ±1 tile expanded in VMEM feeds a dense [TILE_B, cols] x
+[cols, TILE_N] matmul — exactly the shape the 128x128 systolic array wants
+(the CUDA version uses mma.sync 16x8x16 tiles + cp.async pipelining; on
+TPU the BlockSpec grid expresses the same HBM→VMEM pipeline and the MXU
+replaces the tensor cores).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128  # output-feature tile
+TILE_B = 8    # batch tile
+
+
+def _unpack_tile(words, cols):
+    rows, wpr = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    flat = bits.reshape(rows, wpr * 32)[:, :cols]
+    return flat.astype(jnp.float32) * 2.0 - 1.0
+
+
+def _gemm_stage_kernel(w_ref, x_ref, scale_ref, o_ref, *, cols):
+    """o[b_tile, n_tile] = x[b_tile, :] @ W±1[n_tile, :]ᵀ ⊙ scale[n_tile]."""
+    w_tile = _unpack_tile(w_ref[...], cols)  # [TILE_N, cols]
+    x = x_ref[...]  # [TILE_B, cols]
+    # MXU-shaped contraction: [TILE_B, cols] @ [cols, TILE_N].
+    o_ref[...] = (x @ w_tile.T) * scale_ref[...][None, :]
+
+
+def _padded(n, t):
+    return ((n + t - 1) // t) * t
+
+
+def packed_matmul(w_packed, x, scale, *, rows: int, cols: int):
+    """x [b, cols] @ W±1ᵀ [cols, rows] ⊙ scale — batched packed stage."""
+    b = x.shape[0]
+    wpr = w_packed.shape[1]
+    rows_p = _padded(rows, TILE_N)
+    b_p = _padded(b, TILE_B)
+    if rows_p != rows:
+        w_packed = jnp.pad(w_packed, ((0, rows_p - rows), (0, 0)))
+        scale = jnp.pad(scale, (0, rows_p - rows))
+    if b_p != b:
+        x = jnp.pad(x, ((0, b_p - b), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_gemm_stage_kernel, cols=cols),
+        grid=(b_p // TILE_B, rows_p // TILE_N),
+        in_specs=[
+            pl.BlockSpec((TILE_N, wpr), lambda bi, ni: (ni, 0)),
+            pl.BlockSpec((TILE_B, cols), lambda bi, ni: (bi, 0)),
+            pl.BlockSpec((TILE_N,), lambda bi, ni: (ni,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, TILE_N), lambda bi, ni: (bi, ni)),
+        out_shape=jax.ShapeDtypeStruct((b_p, rows_p), jnp.float32),
+        interpret=True,
+    )(w_packed, x, scale)
+    return out[:b, :rows]
+
+
+def binary_gemm(u_packed, vt_packed, s1, s2, x, *, n: int, m: int, r: int):
+    """Batched packed binary low-rank GEMM: x [b, m] -> y [b, n]."""
+    ones_r = jnp.ones((r,), jnp.float32)
+    t = packed_matmul(vt_packed, x * s2[None, :], ones_r, rows=r, cols=m)
+    return packed_matmul(u_packed, t, s1, rows=n, cols=r)

@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernels: packed binary low-rank GEMV.
+
+The paper's CUDA GEMV kernel (Appendix E.2) rethought for TPU/Pallas:
+
+  stage 1:  t = V±1ᵀ (s2 ⊙ x)      — reduce over the input dim
+  stage 2:  y = s1 ⊙ (U±1 t)       — reduce over the rank dim
+
+Hardware-adaptation choices (DESIGN.md §8):
+- Weights cross HBM as packed u32 words; the ±1 expansion
+  (shift → mask → 2b−1, VPU-friendly broadcast ops, not warp ballots)
+  exists only inside the kernel, i.e. only in VMEM.
+- BlockSpec tiles the *output* dimension so each grid step streams one
+  `[TILE, words_per_row]` packed panel into VMEM — this is the HBM→VMEM
+  schedule that the CUDA version expresses with threadblocks.
+- The rank-r intermediate `t` stays resident between the two stages
+  (as the CUDA kernel keeps it in shared memory).
+- Channel scales fuse into the stages' epilogues (s2 pre-scale, s1
+  post-scale), mirroring the fused FMA of the CUDA kernel.
+
+interpret=True is mandatory on this CPU-PJRT stack: real TPU lowering
+emits Mosaic custom-calls the CPU plugin cannot execute. The BlockSpec
+structure is still what a real TPU run would use; VMEM footprints are
+estimated in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile per grid step (rows of the packed matrix handled at once).
+# 128 rows aligns with the TPU lane width; see DESIGN.md §Perf for the
+# VMEM budget at this setting.
+TILE = 128
+
+
+def _unpack_tile(words, cols):
+    """[rows, wpr] u32 -> [rows, cols] ±1 f32 (in-kernel expansion)."""
+    rows, wpr = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    flat = bits.reshape(rows, wpr * 32)[:, :cols]
+    return flat.astype(jnp.float32) * 2.0 - 1.0
+
+
+def _stage_kernel(w_ref, x_ref, scale_ref, o_ref, *, cols):
+    """One fused stage: o = scale ⊙ (W±1 @ x) for a packed row-tile of W."""
+    w_tile = _unpack_tile(w_ref[...], cols)  # [TILE, cols] ±1, VMEM only
+    x = x_ref[...]  # [cols]
+    o_ref[...] = scale_ref[...] * (w_tile @ x)
+
+
+def _padded(n: int, tile: int) -> int:
+    return ((n + tile - 1) // tile) * tile
+
+
+def packed_matvec(w_packed, x, scale, *, rows: int, cols: int, tile: int = TILE):
+    """scale ⊙ (W±1 @ x) with W packed [rows, ceil(cols/32)] u32.
+
+    Grid over row tiles; each step sees one packed panel (BlockSpec) and
+    the full x vector (VMEM-resident: cols ≤ a few thousand f32).
+    """
+    wpr = w_packed.shape[1]
+    rows_p = _padded(rows, tile)
+    if rows_p != rows:
+        w_packed = jnp.pad(w_packed, ((0, rows_p - rows), (0, 0)))
+        scale = jnp.pad(scale, (0, rows_p - rows))
+    out = pl.pallas_call(
+        functools.partial(_stage_kernel, cols=cols),
+        grid=(rows_p // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, wpr), lambda i: (i, 0)),
+            pl.BlockSpec((cols,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows_p,), jnp.float32),
+        interpret=True,
+    )(w_packed, x, scale)
+    return out[:rows]
+
+
+def binary_gemv(u_packed, vt_packed, s1, s2, x, *, n: int, m: int, r: int):
+    """Two-stage packed binary low-rank GEMV (the L1 kernel).
+
+    u_packed: [n, ceil(r/32)] u32, vt_packed: [r, ceil(m/32)] u32,
+    s1: [n], s2: [m], x: [m] -> y: [n].
+    """
+    ones_r = jnp.ones((r,), jnp.float32)
+    # Stage 1: t = V±1ᵀ (s2 ⊙ x); the s2 scale fuses into the stage input.
+    t = packed_matvec(vt_packed, x * s2, ones_r, rows=r, cols=m)
+    # Stage 2: y = s1 ⊙ (U±1 t).
+    return packed_matvec(u_packed, t, s1, rows=n, cols=r)

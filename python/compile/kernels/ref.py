@@ -1,0 +1,68 @@
+"""Pure-jnp reference implementations (the correctness oracle for the
+Pallas kernels) and the shared bit-packing utilities.
+
+Packing format (shared verbatim with rust/src/quant/pack.rs):
+row-major; element j of a row lives in u32 word j // 32, bit j % 32
+(LSB-first). +1 -> bit 1, -1 -> bit 0. Rows are padded to whole words with
+zero bits; `cols` is carried separately so padding never contributes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_signs(w) -> np.ndarray:
+    """Pack the signs of a [rows, cols] array into u32 words [rows, ceil(cols/32)].
+
+    sign convention: w >= 0 -> bit 1 (+1), w < 0 -> bit 0 (-1).
+    """
+    w = np.asarray(w)
+    rows, cols = w.shape
+    wpr = (cols + 31) // 32
+    bits = (w >= 0).astype(np.uint32)
+    padded = np.zeros((rows, wpr * 32), dtype=np.uint32)
+    padded[:, :cols] = bits
+    shifts = np.arange(32, dtype=np.uint32)
+    words = (padded.reshape(rows, wpr, 32) << shifts[None, None, :]).sum(
+        axis=2, dtype=np.uint32
+    )
+    return words
+
+
+def unpack_signs(words, cols: int) -> jnp.ndarray:
+    """Unpack u32 words [rows, wpr] back to a ±1 float32 array [rows, cols]."""
+    words = jnp.asarray(words, dtype=jnp.uint32)
+    rows, wpr = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    flat = bits.reshape(rows, wpr * 32)[:, :cols]
+    return flat.astype(jnp.float32) * 2.0 - 1.0
+
+
+def binary_gemv_ref(u_packed, vt_packed, s1, s2, x, *, n, m, r):
+    """Reference two-stage packed binary low-rank GEMV.
+
+    y = diag(s1) . U±1 . (V±1^T . (diag(s2) . x))
+    u_packed: [n, ceil(r/32)], vt_packed: [r, ceil(m/32)].
+    """
+    u = unpack_signs(u_packed, r)  # [n, r]
+    vt = unpack_signs(vt_packed, m)  # [r, m]
+    xs = x * s2
+    t = vt @ xs  # [r]
+    return s1 * (u @ t)
+
+
+def binary_gemm_ref(u_packed, vt_packed, s1, s2, x, *, n, m, r):
+    """Batched reference: x [b, m] -> y [b, n]."""
+    u = unpack_signs(u_packed, r)
+    vt = unpack_signs(vt_packed, m)
+    xs = x * s2[None, :]
+    t = xs @ vt.T  # [b, r]
+    return (t @ u.T) * s1[None, :]
+
+
+def dense_reconstruct(u_packed, vt_packed, s1, s2, *, n, m, r):
+    """Materialize Ŵ = diag(s1) U V^T diag(s2) (the naive-unpack engine)."""
+    u = unpack_signs(u_packed, r)
+    vt = unpack_signs(vt_packed, m)
+    return s1[:, None] * (u @ vt) * s2[None, :]

@@ -1,0 +1,391 @@
+"""Layer-2 JAX model: the same Llama-style decoder as rust/src/nn
+(RMSNorm, RoPE, causal MHA/GQA, SwiGLU, tied/untied head), in both dense
+and quantized (L1-kernel-backed) forms, plus single-token decode graphs
+with KV caches. AOT-lowered to HLO text by aot.py; numerical parity with
+the Rust implementation is enforced by rust/tests/runtime_parity.rs.
+
+Parameter convention (must match the Rust side exactly):
+- every linear is stored [d_out, d_in] and applied as y = x @ W.T
+- canonical flat parameter order:
+    embed, (ln1, wq, wk, wv, wo, ln2, wg, wu, wd) per block, ln_f[, head]
+- quantized linears are replaced by (u_packed, vt_packed, s1, s2).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.binary_gemm import binary_gemm
+from .kernels.binary_gemv import binary_gemv
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    max_seq: int
+    rope_theta: float
+    tied: bool
+    eps: float = 1e-5
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+def family_config(family: str, size: str) -> Config:
+    """Mirror of rust nn::family_config."""
+    dims = {"xs": (64, 2, 4), "s": (128, 4, 4), "m": (192, 6, 6), "l": (256, 8, 8)}
+    d_model, n_layers, n_heads = dims[size]
+    d_ff = d_model * 8 // 3 // 8 * 8
+    n_kv = n_heads
+    theta = 10_000.0
+    tied = False
+    if family == "l3":
+        n_kv = max(n_heads // 2, 1)
+    elif family == "g3":
+        tied = True
+        d_ff = d_model * 4
+    elif family == "q3":
+        n_kv = max(n_heads // 2, 1)
+        theta = 100_000.0
+    elif family == "r1":
+        d_ff = d_model * 2
+    elif family != "l2":
+        raise ValueError(f"unknown family {family}")
+    return Config(
+        name=f"{family}-{size}",
+        vocab=257,
+        d_model=d_model,
+        n_layers=n_layers,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        d_ff=d_ff,
+        max_seq=128,
+        rope_theta=theta,
+        tied=tied,
+    )
+
+
+def rank_for_bpw(n: int, m: int, bpw: float) -> int:
+    """Mirror of rust quant::scheme::rank_for_bpw (round half away from 0)."""
+    r = bpw * n * m / (n + m) - 16.0
+    return max(int(np.floor(r + 0.5)), 1)
+
+
+# ---------------------------------------------------------------------------
+# Core ops (must match the Rust math).
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps):
+    ms = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope(x, positions, n_heads, hd, theta):
+    """x: [..., n_heads*hd]; rotate pairs (i, i+half) per head."""
+    half = hd // 2
+    shape = x.shape[:-1] + (n_heads, hd)
+    xh = x.reshape(shape)
+    a = xh[..., :half]
+    b = xh[..., half:]
+    inv_freq = 1.0 / (theta ** (2.0 * jnp.arange(half) / hd))
+    angle = positions[..., None, None] * inv_freq[None, None, :]
+    sin, cos = jnp.sin(angle), jnp.cos(angle)
+    ra = a * cos - b * sin
+    rb = a * sin + b * cos
+    return jnp.concatenate([ra, rb], axis=-1).reshape(x.shape)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Linear-layer abstraction: dense weights or packed quantized tuples.
+# ---------------------------------------------------------------------------
+
+
+def linear_apply(w, x, *, engine: str):
+    """Apply a linear layer. `w` is either a dense [n, m] array or a tuple
+    (u_packed, vt_packed, s1, s2, (n, m, r)) of packed binary factors.
+    `x` is [..., m]. engine: dense|pallas|naive.
+    """
+    if not isinstance(w, tuple):
+        return x @ w.T
+    u_packed, vt_packed, s1, s2, (n, m, r) = w
+    if engine == "naive":
+        w_hat = ref.dense_reconstruct(u_packed, vt_packed, s1, s2, n=n, m=m, r=r)
+        return x @ w_hat.T
+    if engine == "pallas":
+        lead = x.shape[:-1]
+        xb = x.reshape((-1, m))
+        if xb.shape[0] == 1:
+            y = binary_gemv(u_packed, vt_packed, s1, s2, xb[0], n=n, m=m, r=r)[None, :]
+        else:
+            y = binary_gemm(u_packed, vt_packed, s1, s2, xb, n=n, m=m, r=r)
+        return y.reshape(lead + (n,))
+    raise ValueError(f"unknown engine {engine}")
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward.
+# ---------------------------------------------------------------------------
+
+
+def block_forward(cfg: Config, bw, x, *, engine: str):
+    """bw: dict with ln1, wq, wk, wv, wo, ln2, wg, wu, wd. x: [B, S, D]."""
+    bsz, seq, d = x.shape
+    hd = cfg.head_dim
+    groups = cfg.n_heads // cfg.n_kv_heads
+    h1 = rmsnorm(x, bw["ln1"], cfg.eps)
+    q = linear_apply(bw["wq"], h1, engine=engine)
+    k = linear_apply(bw["wk"], h1, engine=engine)
+    v = linear_apply(bw["wv"], h1, engine=engine)
+    positions = jnp.arange(seq, dtype=jnp.float32)[None, :].repeat(bsz, 0)
+    q = rope(q, positions, cfg.n_heads, hd, cfg.rope_theta)
+    k = rope(k, positions, cfg.n_kv_heads, hd, cfg.rope_theta)
+
+    qh = q.reshape(bsz, seq, cfg.n_heads, hd)
+    kh = k.reshape(bsz, seq, cfg.n_kv_heads, hd)
+    vh = v.reshape(bsz, seq, cfg.n_kv_heads, hd)
+    # Expand KV heads for GQA.
+    kh = jnp.repeat(kh, groups, axis=2)
+    vh = jnp.repeat(vh, groups, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", qh, kh) / np.sqrt(hd)
+    causal = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+    scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    att = jnp.einsum("bhst,bthd->bshd", probs, vh).reshape(bsz, seq, cfg.n_heads * hd)
+    x = x + linear_apply(bw["wo"], att, engine=engine)
+
+    h2 = rmsnorm(x, bw["ln2"], cfg.eps)
+    gate = linear_apply(bw["wg"], h2, engine=engine)
+    up = linear_apply(bw["wu"], h2, engine=engine)
+    x = x + linear_apply(bw["wd"], silu(gate) * up, engine=engine)
+    return x
+
+
+def model_forward(cfg: Config, params, tokens, *, engine: str = "dense"):
+    """tokens: [B, S] int32 -> logits [B, S, vocab].
+
+    params: dict {embed, blocks: [block dicts], ln_f, head?}.
+    """
+    x = params["embed"][tokens]
+    for bw in params["blocks"]:
+        x = block_forward(cfg, bw, x, engine=engine)
+    x = rmsnorm(x, params["ln_f"], cfg.eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"]
+    return x @ head.T
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode with KV cache.
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: Config, params, token, pos, k_cache, v_cache, *, engine: str):
+    """One decode step.
+
+    token: [] int32, pos: [] int32,
+    k_cache/v_cache: [n_layers, max_seq, n_kv_heads*hd].
+    Returns (logits [vocab], new_k_cache, new_v_cache).
+    """
+    hd = cfg.head_dim
+    groups = cfg.n_heads // cfg.n_kv_heads
+    x = params["embed"][token]  # [D]
+    posf = pos.astype(jnp.float32)
+    for li, bw in enumerate(params["blocks"]):
+        h1 = rmsnorm(x, bw["ln1"], cfg.eps)
+        q = linear_apply(bw["wq"], h1[None, :], engine=engine)[0]
+        k = linear_apply(bw["wk"], h1[None, :], engine=engine)[0]
+        v = linear_apply(bw["wv"], h1[None, :], engine=engine)[0]
+        q = rope(q[None, :], posf[None], cfg.n_heads, hd, cfg.rope_theta)[0]
+        k = rope(k[None, :], posf[None], cfg.n_kv_heads, hd, cfg.rope_theta)[0]
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None, None, :], (li, pos, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None, None, :], (li, pos, 0))
+
+        qh = q.reshape(cfg.n_heads, hd)
+        kh = k_cache[li].reshape(cfg.max_seq, cfg.n_kv_heads, hd)
+        vh = v_cache[li].reshape(cfg.max_seq, cfg.n_kv_heads, hd)
+        kh = jnp.repeat(kh, groups, axis=1)  # [S, H, hd]
+        vh = jnp.repeat(vh, groups, axis=1)
+        scores = jnp.einsum("hd,shd->hs", qh, kh) / np.sqrt(hd)
+        valid = jnp.arange(cfg.max_seq) <= pos
+        scores = jnp.where(valid[None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("hs,shd->hd", probs, vh).reshape(cfg.n_heads * hd)
+        x = x + linear_apply(bw["wo"], att[None, :], engine=engine)[0]
+
+        h2 = rmsnorm(x, bw["ln2"], cfg.eps)
+        gate = linear_apply(bw["wg"], h2[None, :], engine=engine)[0]
+        up = linear_apply(bw["wu"], h2[None, :], engine=engine)[0]
+        x = x + linear_apply(bw["wd"], (silu(gate) * up)[None, :], engine=engine)[0]
+    x = rmsnorm(x, params["ln_f"], cfg.eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"]
+    logits = x @ head.T
+    return logits, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization / flattening (the artifact calling convention).
+# ---------------------------------------------------------------------------
+
+LINEAR_NAMES = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+
+
+def linear_shapes(cfg: Config):
+    d, hd = cfg.d_model, cfg.head_dim
+    kv = cfg.n_kv_heads * hd
+    return {
+        "wq": (d, d),
+        "wk": (kv, d),
+        "wv": (kv, d),
+        "wo": (d, d),
+        "wg": (cfg.d_ff, d),
+        "wu": (cfg.d_ff, d),
+        "wd": (d, cfg.d_ff),
+    }
+
+
+def init_params(cfg: Config, seed: int = 0, *, quant_bpw: float | None = None):
+    """Random params (dense, or packed-quantized when quant_bpw given)."""
+    rng = np.random.default_rng(seed)
+    shapes = linear_shapes(cfg)
+
+    def dense(shape, std=0.02):
+        return jnp.asarray(rng.standard_normal(shape) * std, jnp.float32)
+
+    def make_linear(name):
+        w = rng.standard_normal(shapes[name]) * 0.02
+        if quant_bpw is None:
+            return jnp.asarray(w, jnp.float32)
+        n, m = shapes[name]
+        r = rank_for_bpw(n, m, quant_bpw)
+        u = rng.standard_normal((n, r))
+        v = rng.standard_normal((m, r))
+        s1 = rng.uniform(0.01, 0.05, n).astype(np.float32)
+        s2 = rng.uniform(0.5, 1.5, m).astype(np.float32)
+        return (
+            jnp.asarray(ref.pack_signs(u)),
+            jnp.asarray(ref.pack_signs(v.T)),
+            jnp.asarray(s1),
+            jnp.asarray(s2),
+            (n, m, r),
+        )
+
+    blocks = []
+    for _ in range(cfg.n_layers):
+        blocks.append(
+            {
+                "ln1": jnp.ones(cfg.d_model, jnp.float32),
+                "ln2": jnp.ones(cfg.d_model, jnp.float32),
+                **{name: make_linear(name) for name in LINEAR_NAMES},
+            }
+        )
+    params = {
+        "embed": dense((cfg.vocab, cfg.d_model)),
+        "blocks": blocks,
+        "ln_f": jnp.ones(cfg.d_model, jnp.float32),
+    }
+    if not cfg.tied:
+        params["head"] = dense((cfg.vocab, cfg.d_model))
+    return params
+
+
+def flatten_params(cfg: Config, params):
+    """Canonical flat list (the artifact argument order)."""
+    flat = [params["embed"]]
+    for bw in params["blocks"]:
+        flat.append(bw["ln1"])
+        for name in LINEAR_NAMES:
+            w = bw[name]
+            if isinstance(w, tuple):
+                flat.extend(w[:4])  # u_packed, vt_packed, s1, s2
+            else:
+                flat.append(w)
+        flat.append(bw["ln2"])
+    flat.append(params["ln_f"])
+    if "head" in params:
+        flat.append(params["head"])
+    return flat
+
+
+def unflatten_params(cfg: Config, flat, *, quant_bpw: float | None = None):
+    """Inverse of flatten_params (given the same quantization layout)."""
+    shapes = linear_shapes(cfg)
+    it = iter(flat)
+    params = {"embed": next(it), "blocks": []}
+    for _ in range(cfg.n_layers):
+        bw = {"ln1": next(it)}
+        for name in LINEAR_NAMES:
+            if quant_bpw is None:
+                bw[name] = next(it)
+            else:
+                n, m = shapes[name]
+                r = rank_for_bpw(n, m, quant_bpw)
+                bw[name] = (next(it), next(it), next(it), next(it), (n, m, r))
+        bw["ln2"] = next(it)
+        params["blocks"].append(bw)
+    params["ln_f"] = next(it)
+    if not cfg.tied:
+        params["head"] = next(it)
+    return params
+
+
+def forward_fn(cfg: Config, *, engine: str, quant_bpw: float | None, batch: int, seq: int):
+    """A jit-able f(*flat_params, tokens) -> logits for AOT lowering."""
+
+    def fn(*args):
+        flat, tokens = list(args[:-1]), args[-1]
+        params = unflatten_params(cfg, flat, quant_bpw=quant_bpw)
+        return (model_forward(cfg, params, tokens, engine=engine),)
+
+    return fn
+
+
+def decode_fn(cfg: Config, *, engine: str, quant_bpw: float | None):
+    """A jit-able f(*flat_params, token, pos, k_cache, v_cache)."""
+
+    def fn(*args):
+        flat = list(args[:-4])
+        token, pos, k_cache, v_cache = args[-4:]
+        params = unflatten_params(cfg, flat, quant_bpw=quant_bpw)
+        logits, nk, nv = decode_step(
+            cfg, params, token, pos, k_cache, v_cache, engine=engine
+        )
+        return (logits, nk, nv)
+
+    return fn
+
+
+def example_args(cfg: Config, *, quant_bpw: float | None, batch: int, seq: int, mode: str):
+    """ShapeDtypeStructs for lowering."""
+    params = init_params(cfg, 0, quant_bpw=quant_bpw)
+    flat = flatten_params(cfg, params)
+    specs = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in flat]
+    if mode == "forward":
+        specs.append(jax.ShapeDtypeStruct((batch, seq), jnp.int32))
+    elif mode == "decode":
+        kv = cfg.n_kv_heads * cfg.head_dim
+        specs.append(jax.ShapeDtypeStruct((), jnp.int32))  # token
+        specs.append(jax.ShapeDtypeStruct((), jnp.int32))  # pos
+        specs.append(jax.ShapeDtypeStruct((cfg.n_layers, cfg.max_seq, kv), jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((cfg.n_layers, cfg.max_seq, kv), jnp.float32))
+    else:
+        raise ValueError(mode)
+    return specs

@@ -1,0 +1,141 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/ranks; every case asserts allclose between the
+Pallas packed kernels (interpret mode) and ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_gemm import binary_gemm
+from compile.kernels.binary_gemv import binary_gemv
+
+
+def make_case(n, m, r, seed):
+    rng = np.random.default_rng(seed)
+    u = rng.standard_normal((n, r))
+    v = rng.standard_normal((m, r))
+    up = ref.pack_signs(u)
+    vtp = ref.pack_signs(v.T)
+    s1 = rng.uniform(0.2, 2.0, n).astype(np.float32)
+    s2 = rng.uniform(0.2, 2.0, m).astype(np.float32)
+    return up, vtp, s1, s2
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 80),
+    cols=st.integers(1, 130),
+    seed=st.integers(0, 2**31),
+)
+def test_pack_unpack_roundtrip(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    w = np.sign(rng.standard_normal((rows, cols)))
+    w[w == 0] = 1.0
+    packed = ref.pack_signs(w)
+    assert packed.shape == (rows, (cols + 31) // 32)
+    back = np.asarray(ref.unpack_signs(packed, cols))
+    np.testing.assert_array_equal(back, w.astype(np.float32))
+
+
+def test_pack_bit_layout_is_lsb_first():
+    # Element j lives in word j//32, bit j%32 — shared with rust pack.rs.
+    w = -np.ones((1, 40), dtype=np.float32)
+    w[0, 0] = 1.0   # word 0, bit 0
+    w[0, 33] = 1.0  # word 1, bit 1
+    packed = ref.pack_signs(w)
+    assert packed[0, 0] == 1
+    assert packed[0, 1] == 2
+
+
+# ---------------------------------------------------------------------------
+# GEMV kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    m=st.integers(1, 200),
+    r=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+)
+def test_gemv_matches_ref(n, m, r, seed):
+    up, vtp, s1, s2 = make_case(n, m, r, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.standard_normal(m).astype(np.float32)
+    want = np.asarray(ref.binary_gemv_ref(up, vtp, s1, s2, x, n=n, m=m, r=r))
+    got = np.asarray(binary_gemv(up, vtp, s1, s2, x, n=n, m=m, r=r))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemv_matches_dense_reconstruction():
+    n, m, r = 64, 96, 24
+    up, vtp, s1, s2 = make_case(n, m, r, 7)
+    rng = np.random.default_rng(8)
+    x = rng.standard_normal(m).astype(np.float32)
+    w_hat = np.asarray(ref.dense_reconstruct(up, vtp, s1, s2, n=n, m=m, r=r))
+    got = np.asarray(binary_gemv(up, vtp, s1, s2, x, n=n, m=m, r=r))
+    np.testing.assert_allclose(got, w_hat @ x, rtol=1e-4, atol=1e-4)
+
+
+def test_gemv_exact_at_tile_boundaries():
+    # Shapes exactly at / around the TILE boundary (128).
+    for n in (127, 128, 129):
+        up, vtp, s1, s2 = make_case(n, 64, 32, n)
+        x = np.random.default_rng(n).standard_normal(64).astype(np.float32)
+        want = np.asarray(ref.binary_gemv_ref(up, vtp, s1, s2, x, n=n, m=64, r=32))
+        got = np.asarray(binary_gemv(up, vtp, s1, s2, x, n=n, m=64, r=32))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# GEMM kernel vs oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 20),
+    n=st.integers(1, 150),
+    m=st.integers(1, 150),
+    r=st.integers(1, 64),
+    seed=st.integers(0, 2**31),
+)
+def test_gemm_matches_ref(b, n, m, r, seed):
+    up, vtp, s1, s2 = make_case(n, m, r, seed)
+    rng = np.random.default_rng(seed + 2)
+    x = rng.standard_normal((b, m)).astype(np.float32)
+    want = np.asarray(ref.binary_gemm_ref(up, vtp, s1, s2, x, n=n, m=m, r=r))
+    got = np.asarray(binary_gemm(up, vtp, s1, s2, x, n=n, m=m, r=r))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_consistent_with_gemv_rows():
+    n, m, r = 40, 56, 16
+    up, vtp, s1, s2 = make_case(n, m, r, 11)
+    rng = np.random.default_rng(12)
+    x = rng.standard_normal((3, m)).astype(np.float32)
+    batch = np.asarray(binary_gemm(up, vtp, s1, s2, x, n=n, m=m, r=r))
+    for i in range(3):
+        row = np.asarray(binary_gemv(up, vtp, s1, s2, x[i], n=n, m=m, r=r))
+        np.testing.assert_allclose(batch[i], row, rtol=1e-4, atol=1e-4)
+
+
+def test_scales_apply_in_the_right_places():
+    # Doubling s1 doubles y; doubling s2 doubles y (linear in both).
+    n, m, r = 16, 24, 8
+    up, vtp, s1, s2 = make_case(n, m, r, 13)
+    x = np.random.default_rng(14).standard_normal(m).astype(np.float32)
+    base = np.asarray(binary_gemv(up, vtp, s1, s2, x, n=n, m=m, r=r))
+    y1 = np.asarray(binary_gemv(up, vtp, 2 * s1, s2, x, n=n, m=m, r=r))
+    y2 = np.asarray(binary_gemv(up, vtp, s1, 2 * s2, x, n=n, m=m, r=r))
+    np.testing.assert_allclose(y1, 2 * base, rtol=1e-5)
+    np.testing.assert_allclose(y2, 2 * base, rtol=1e-5)

@@ -1,0 +1,113 @@
+"""L2 model graph tests: shapes, causality, engine consistency, decode/fwd
+parity, and the flatten/unflatten calling convention used by the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return M.family_config("l2", "xs")
+
+
+def test_forward_shapes(cfg):
+    params = M.init_params(cfg, 0)
+    tokens = jnp.arange(2 * 8, dtype=jnp.int32).reshape(2, 8) % 250
+    logits = M.model_forward(cfg, params, tokens)
+    assert logits.shape == (2, 8, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_causality(cfg):
+    params = M.init_params(cfg, 1)
+    t1 = jnp.array([[5, 6, 7, 8, 9, 10, 11, 12]], dtype=jnp.int32)
+    t2 = t1.at[0, 7].set(99)
+    l1 = M.model_forward(cfg, params, t1)
+    l2 = M.model_forward(cfg, params, t2)
+    np.testing.assert_allclose(l1[0, :7], l2[0, :7], rtol=1e-6)
+    assert float(jnp.abs(l1[0, 7] - l2[0, 7]).sum()) > 0
+
+
+def test_quant_engines_agree(cfg):
+    """pallas and naive engines compute the same quantized forward."""
+    params = M.init_params(cfg, 2, quant_bpw=2.0)
+    tokens = jnp.arange(6, dtype=jnp.int32).reshape(1, 6)
+    lp = M.model_forward(cfg, params, tokens, engine="pallas")
+    ln = M.model_forward(cfg, params, tokens, engine="naive")
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(ln), rtol=1e-3, atol=1e-3)
+
+
+def test_decode_matches_forward_dense(cfg):
+    params = M.init_params(cfg, 3)
+    tokens = np.array([3, 14, 15, 92, 65, 35], dtype=np.int32)
+    full = M.model_forward(cfg, params, jnp.asarray(tokens[None, :]))
+    kv = cfg.n_kv_heads * cfg.head_dim
+    k_cache = jnp.zeros((cfg.n_layers, cfg.max_seq, kv), jnp.float32)
+    v_cache = jnp.zeros((cfg.n_layers, cfg.max_seq, kv), jnp.float32)
+    for pos, tok in enumerate(tokens):
+        logits, k_cache, v_cache = M.decode_step(
+            cfg, params, jnp.int32(tok), jnp.int32(pos), k_cache, v_cache,
+            engine="dense",
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[0, pos]), rtol=1e-3, atol=1e-4
+        )
+
+
+def test_decode_matches_forward_quant(cfg):
+    params = M.init_params(cfg, 4, quant_bpw=2.0)
+    tokens = np.array([3, 14, 15], dtype=np.int32)
+    full = M.model_forward(cfg, params, jnp.asarray(tokens[None, :]), engine="naive")
+    kv = cfg.n_kv_heads * cfg.head_dim
+    k_cache = jnp.zeros((cfg.n_layers, cfg.max_seq, kv), jnp.float32)
+    v_cache = jnp.zeros((cfg.n_layers, cfg.max_seq, kv), jnp.float32)
+    for pos, tok in enumerate(tokens):
+        logits, k_cache, v_cache = M.decode_step(
+            cfg, params, jnp.int32(tok), jnp.int32(pos), k_cache, v_cache,
+            engine="naive",
+        )
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[0, pos]), rtol=1e-3, atol=1e-3
+        )
+
+
+def test_flatten_unflatten_roundtrip(cfg):
+    for bpw in (None, 1.0):
+        params = M.init_params(cfg, 5, quant_bpw=bpw)
+        flat = M.flatten_params(cfg, params)
+        back = M.unflatten_params(cfg, flat, quant_bpw=bpw)
+        tokens = jnp.arange(4, dtype=jnp.int32).reshape(1, 4)
+        engine = "dense" if bpw is None else "naive"
+        a = M.model_forward(cfg, params, tokens, engine=engine)
+        b = M.model_forward(cfg, back, tokens, engine=engine)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_rank_for_bpw_matches_rust_convention():
+    # round-half-away-from-zero, min 1 — must agree with rust scheme.rs.
+    assert M.rank_for_bpw(4096, 4096, 1.0) == 2032
+    assert M.rank_for_bpw(64, 64, 1.0) == 16
+    assert M.rank_for_bpw(16, 16, 0.1) == 1  # clamped
+
+
+def test_gqa_family(cfg):
+    q3 = M.family_config("q3", "xs")
+    assert q3.n_kv_heads < q3.n_heads
+    params = M.init_params(q3, 6)
+    tokens = jnp.arange(5, dtype=jnp.int32).reshape(1, 5)
+    logits = M.model_forward(q3, params, tokens)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_tied_embeddings_have_no_head():
+    g3 = M.family_config("g3", "xs")
+    params = M.init_params(g3, 7)
+    assert "head" not in params
+    flat = M.flatten_params(g3, params)
+    back = M.unflatten_params(g3, flat)
+    assert "head" not in back

@@ -1,0 +1,23 @@
+//! `cargo bench` — LB-ADMM factorization cost across layer shapes and
+//! iteration budgets (the compression-time axis of Table 4).
+
+use nanoquant::quant::{lb_admm, rank_for_bpw, AdmmConfig};
+use nanoquant::tensor::Tensor;
+use nanoquant::util::rng::Rng;
+use nanoquant::util::timer::bench;
+
+fn main() {
+    println!("== LB-ADMM solver ==");
+    for (n, m) in [(128usize, 128usize), (336, 128), (256, 256), (512, 512)] {
+        let r = rank_for_bpw(n, m, 1.0).min(n).min(m);
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[n, m], 1.0, &mut rng);
+        for iters in [10usize, 40] {
+            let cfg = AdmmConfig { iters, ..Default::default() };
+            let st = bench(&format!("lb-admm {n}x{m} r{r} K{iters}"), 0.5, 20, || {
+                std::hint::black_box(lb_admm(&w, r, &cfg));
+            });
+            println!("{st}");
+        }
+    }
+}

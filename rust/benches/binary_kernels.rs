@@ -1,0 +1,50 @@
+//! `cargo bench` — packed binary GEMV/GEMM kernels (Figs. 10–13 data).
+//! Custom harness (criterion is unavailable offline); see util::timer.
+
+use nanoquant::nn::decode::MatVec;
+use nanoquant::quant::kernels::{NaiveUnpackLinear, PackedLinear};
+use nanoquant::quant::{rank_for_bpw, LatentFactors};
+use nanoquant::tensor::Tensor;
+use nanoquant::util::rng::Rng;
+use nanoquant::util::timer::bench;
+
+fn main() {
+    println!("== binary kernels (GEMV/GEMM engines across shapes) ==");
+    for (n, m) in [(256usize, 256usize), (512, 512), (1024, 1024), (2048, 512)] {
+        let r = rank_for_bpw(n, m, 1.0);
+        let mut rng = Rng::new(0);
+        let q = LatentFactors {
+            u: Tensor::randn(&[n, r], 1.0, &mut rng),
+            v: Tensor::randn(&[m, r], 1.0, &mut rng),
+            s1: (0..n).map(|_| rng.uniform_in(0.2, 2.0)).collect(),
+            s2: (0..m).map(|_| rng.uniform_in(0.2, 2.0)).collect(),
+        }
+        .freeze();
+        let x = rng.normal_vec(m, 1.0);
+        let packed = PackedLinear::new(q.clone());
+        let naive = NaiveUnpackLinear { q: q.clone() };
+        let dense = q.reconstruct();
+
+        let st = bench(&format!("gemv {n}x{m} r{r} packed"), 0.3, 400, || {
+            std::hint::black_box(packed.forward_vec(&x));
+        });
+        println!("{st}");
+        let st = bench(&format!("gemv {n}x{m} r{r} naive-unpack"), 0.3, 50, || {
+            std::hint::black_box(naive.matvec(&x));
+        });
+        println!("{st}");
+        let st = bench(&format!("gemv {n}x{m} dense f32"), 0.3, 400, || {
+            std::hint::black_box(dense.matvec(&x));
+        });
+        println!("{st}");
+
+        for b in [4usize, 16] {
+            let xb = Tensor::randn(&[b, m], 1.0, &mut rng);
+            let st = bench(&format!("gemm {n}x{m} r{r} packed b{b}"), 0.3, 100, || {
+                std::hint::black_box(packed.forward_batch(&xb));
+            });
+            println!("{st}");
+        }
+        println!();
+    }
+}

@@ -1,0 +1,39 @@
+//! `cargo bench` — dense matmul substrate (the pipeline's compute floor;
+//! §Perf iterates the k-block size here).
+
+use nanoquant::tensor::{matmul, matmul_a_bt, set_matmul_block, Tensor};
+use nanoquant::util::rng::Rng;
+use nanoquant::util::timer::bench;
+
+fn main() {
+    println!("== dense matmul substrate ==");
+    let mut rng = Rng::new(0);
+    for (m, k, n) in [(256usize, 256usize, 256usize), (512, 512, 512), (1024, 512, 256)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        let st = bench(&format!("matmul {m}x{k}x{n}"), 0.4, 200, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!("{}   [{:.2} GFLOP/s]", st, flops / st.mean_s / 1e9);
+
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let st = bench(&format!("matmul_a_bt {m}x{k}x{n}"), 0.4, 200, || {
+            std::hint::black_box(matmul_a_bt(&a, &bt));
+        });
+        println!("{}   [{:.2} GFLOP/s]", st, flops / st.mean_s / 1e9);
+    }
+
+    println!("\n== k-block sweep (matmul 512^3) ==");
+    let a = Tensor::randn(&[512, 512], 1.0, &mut rng);
+    let b = Tensor::randn(&[512, 512], 1.0, &mut rng);
+    let flops = 2.0 * 512f64.powi(3);
+    for kb in [32usize, 64, 128, 256, 512] {
+        set_matmul_block(kb);
+        let st = bench(&format!("kblock={kb}"), 0.3, 100, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!("{}   [{:.2} GFLOP/s]", st, flops / st.mean_s / 1e9);
+    }
+    set_matmul_block(256);
+}

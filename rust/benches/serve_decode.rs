@@ -1,0 +1,61 @@
+//! `cargo bench` — end-to-end serving throughput across engines and batch
+//! sizes (Table 12 / Fig. 7 measured axis).
+
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::{LayerKind, ModelParams};
+use nanoquant::nn::LayerId;
+use nanoquant::quant::{rank_for_bpw, Engine, LatentFactors, QuantModel};
+use nanoquant::serve::{Request, Server, ServerConfig};
+use nanoquant::tensor::Tensor;
+use nanoquant::util::rng::Rng;
+use nanoquant::util::timer::stats_from;
+
+fn main() {
+    println!("== serving decode throughput (l2-s) ==");
+    let cfg = family_config("l2", "s");
+    let mut rng = Rng::new(0);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let mut qm = QuantModel::from_teacher(&params);
+    for bi in 0..cfg.n_layers {
+        for kind in LayerKind::ALL {
+            let w = params.blocks[bi].linear(kind);
+            let (n, m) = (w.rows(), w.cols());
+            let r = rank_for_bpw(n, m, 1.0).min(n).min(m);
+            qm.set_layer(
+                LayerId { block: bi, kind },
+                LatentFactors {
+                    u: Tensor::randn(&[n, r], 1.0, &mut rng),
+                    v: Tensor::randn(&[m, r], 1.0, &mut rng),
+                    s1: (0..n).map(|_| rng.uniform_in(0.005, 0.02)).collect(),
+                    s2: (0..m).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+                },
+            );
+        }
+        qm.freeze_block(bi);
+    }
+
+    for (engine, label) in [
+        (Engine::Dense, "dense"),
+        (Engine::Packed, "packed"),
+        (Engine::NaiveUnpack, "naive-unpack"),
+    ] {
+        for batch in [1usize, 4] {
+            let mut times = Vec::new();
+            let mut toks_per_s = 0.0;
+            for _ in 0..3 {
+                let mut server = Server::new(
+                    qm.to_decode_model(engine),
+                    ServerConfig { max_batch: batch, seed: 0 },
+                );
+                let reqs: Vec<Request> = (0..batch as u64)
+                    .map(|i| Request::greedy(i, vec![(i * 3 % 250) as u16; 8], 24))
+                    .collect();
+                server.run(reqs);
+                times.push(server.metrics.wall_s);
+                toks_per_s = server.metrics.tokens_per_s;
+            }
+            let st = stats_from(&format!("serve {label} batch{batch}"), &times);
+            println!("{st}   [{toks_per_s:.1} tok/s]");
+        }
+    }
+}

@@ -1,0 +1,277 @@
+//! Seeded synthetic corpora.
+//!
+//! Substitutes for the paper's WikiText-2 and C4: two *distinct* text
+//! distributions generated from a shared knowledge base, so that
+//! (a) next-token perplexity is meaningful and sensitive to quantization,
+//! (b) the zero-shot tasks in [`super::tasks`] are answerable from corpus
+//! facts, and (c) the calibration-mixture ablation (paper App. D.2) has a
+//! genuine train/eval distribution shift to exhibit.
+
+use crate::util::rng::Rng;
+
+/// Which synthetic distribution to sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorpusKind {
+    /// Clean prose built from the knowledge base + filler grammar
+    /// (WikiText-2 stand-in).
+    SynthText,
+    /// Noisy web-like mixture: headers, URLs, numbers, casing noise
+    /// (C4 stand-in).
+    WebMix,
+}
+
+impl CorpusKind {
+    pub fn parse(s: &str) -> CorpusKind {
+        match s {
+            "synthtext" | "wikitext" | "wt2" => CorpusKind::SynthText,
+            "webmix" | "c4" => CorpusKind::WebMix,
+            _ => panic!("unknown corpus kind '{s}' (expected synthtext|webmix)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusKind::SynthText => "synthtext",
+            CorpusKind::WebMix => "webmix",
+        }
+    }
+}
+
+/// (entity, category, place, color)
+pub const ENTITIES: &[(&str, &str, &str, &str)] = &[
+    ("robin", "bird", "forest", "red"),
+    ("sparrow", "bird", "meadow", "brown"),
+    ("eagle", "bird", "mountain", "golden"),
+    ("owl", "bird", "barn", "grey"),
+    ("crow", "bird", "field", "black"),
+    ("heron", "bird", "marsh", "white"),
+    ("salmon", "fish", "river", "silver"),
+    ("trout", "fish", "lake", "spotted"),
+    ("shark", "fish", "ocean", "grey"),
+    ("carp", "fish", "pond", "golden"),
+    ("wolf", "mammal", "forest", "grey"),
+    ("fox", "mammal", "den", "red"),
+    ("bear", "mammal", "cave", "brown"),
+    ("deer", "mammal", "meadow", "tan"),
+    ("rabbit", "mammal", "burrow", "white"),
+    ("mouse", "mammal", "barn", "grey"),
+    ("otter", "mammal", "river", "brown"),
+    ("oak", "tree", "valley", "green"),
+    ("pine", "tree", "mountain", "green"),
+    ("birch", "tree", "forest", "white"),
+    ("willow", "tree", "riverbank", "silver"),
+    ("maple", "tree", "park", "red"),
+    ("rose", "flower", "garden", "red"),
+    ("tulip", "flower", "field", "yellow"),
+    ("daisy", "flower", "meadow", "white"),
+    ("lily", "flower", "pond", "pink"),
+    ("violet", "flower", "woodland", "purple"),
+];
+
+/// (tool, use)
+pub const TOOLS: &[(&str, &str)] = &[
+    ("hammer", "drive nails"),
+    ("saw", "cut wood"),
+    ("needle", "sew cloth"),
+    ("spoon", "stir soup"),
+    ("kettle", "boil water"),
+    ("broom", "sweep floors"),
+    ("ladder", "reach high shelves"),
+    ("shovel", "dig holes"),
+    ("knife", "slice bread"),
+    ("lantern", "light the path"),
+];
+
+/// (cause, effect) continuations for the HellaSwag-like task.
+pub const CAUSE_EFFECT: &[(&str, &str)] = &[
+    ("when the rain falls", "the river rises"),
+    ("when the sun sets", "the sky darkens"),
+    ("when the wind blows", "the leaves fall"),
+    ("when winter comes", "the lake freezes"),
+    ("when the fire burns", "the smoke rises"),
+    ("when the snow melts", "the streams flood"),
+    ("when the night ends", "the birds sing"),
+    ("when the storm passes", "the air clears"),
+    ("when the seed sprouts", "the roots spread"),
+    ("when the moon rises", "the tide turns"),
+];
+
+const FILLER_SUBJECTS: &[&str] =
+    &["the farmer", "the child", "the traveler", "an old woman", "the miller", "a young boy"];
+const FILLER_VERBS: &[&str] = &["walked to", "looked at", "remembered", "found", "returned to", "watched"];
+const FILLER_OBJECTS: &[&str] =
+    &["the village", "the market", "the old bridge", "the quiet road", "the stone wall", "the harvest"];
+
+/// Distinct categories in the knowledge base.
+pub fn categories() -> Vec<&'static str> {
+    let mut cats: Vec<&str> = ENTITIES.iter().map(|e| e.1).collect();
+    cats.sort();
+    cats.dedup();
+    cats
+}
+
+fn fact_sentence(rng: &mut Rng) -> String {
+    let (name, cat, place, color) = *rng_choose(rng, ENTITIES);
+    match rng.below(6) {
+        0 => format!("the {name} is a kind of {cat}."),
+        1 => format!("the {name} lives in the {place}."),
+        2 => format!("the {name} is {color}."),
+        3 => {
+            // Boolean QA form, both polarities, so yes/no scoring is learnable.
+            if rng.below(2) == 0 {
+                format!("is the {name} a {cat}? yes.")
+            } else {
+                let other = other_category(rng, cat);
+                format!("is the {name} a {other}? no.")
+            }
+        }
+        4 => {
+            // Plural agreement (WinoGrande-like minimal pair material).
+            format!("the {name}s are {color}.")
+        }
+        _ => {
+            let (tool, use_) = *rng_choose(rng, TOOLS);
+            format!("you can use a {tool} to {use_}.")
+        }
+    }
+}
+
+fn other_category(rng: &mut Rng, not: &str) -> &'static str {
+    let cats = categories();
+    loop {
+        let c = cats[rng.below(cats.len())];
+        if c != not {
+            return c;
+        }
+    }
+}
+
+fn cause_effect_sentence(rng: &mut Rng) -> String {
+    let (c, e) = *rng_choose(rng, CAUSE_EFFECT);
+    format!("{c}, {e}.")
+}
+
+fn filler_sentence(rng: &mut Rng) -> String {
+    format!(
+        "{} {} {}.",
+        rng_choose(rng, FILLER_SUBJECTS),
+        rng_choose(rng, FILLER_VERBS),
+        rng_choose(rng, FILLER_OBJECTS)
+    )
+}
+
+fn rng_choose<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len())]
+}
+
+fn synthtext_sentence(rng: &mut Rng) -> String {
+    // Fact-heavy mixture keeps the corpus learnable at small scale.
+    match rng.categorical(&[5.0, 2.0, 3.0]) {
+        0 => fact_sentence(rng),
+        1 => cause_effect_sentence(rng),
+        _ => filler_sentence(rng),
+    }
+}
+
+fn webmix_chunk(rng: &mut Rng) -> String {
+    match rng.categorical(&[4.0, 1.0, 1.0, 1.0, 1.0]) {
+        0 => {
+            // Facts still appear, but with casing noise.
+            let s = synthtext_sentence(rng);
+            if rng.below(3) == 0 {
+                let mut c = s.chars();
+                match c.next() {
+                    Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+                    None => s,
+                }
+            } else {
+                s
+            }
+        }
+        1 => format!("== {} ==", rng_choose(rng, FILLER_OBJECTS).to_uppercase()),
+        2 => format!(
+            "http://site{}.example/page{}?id={}",
+            rng.below(90),
+            rng.below(900),
+            rng.below(10_000)
+        ),
+        3 => format!("{}, {}, {}", rng.below(1000), rng.below(1000), rng.below(1000)),
+        _ => format!(
+            "{} kg of {} cost {} coins",
+            rng.below(50) + 1,
+            rng_choose(rng, ENTITIES).0,
+            rng.below(500) + 1
+        ),
+    }
+}
+
+/// Generate at least `min_bytes` of corpus text.
+pub fn gen_corpus(kind: CorpusKind, min_bytes: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed ^ 0x5EED_C0DE);
+    let mut out = String::with_capacity(min_bytes + 128);
+    let mut sentence_in_par = 0usize;
+    while out.len() < min_bytes {
+        let chunk = match kind {
+            CorpusKind::SynthText => synthtext_sentence(&mut rng),
+            CorpusKind::WebMix => webmix_chunk(&mut rng),
+        };
+        out.push_str(&chunk);
+        sentence_in_par += 1;
+        if sentence_in_par >= 5 + rng.below(5) {
+            out.push('\n');
+            sentence_in_par = 0;
+        } else {
+            out.push(' ');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = gen_corpus(CorpusKind::SynthText, 10_000, 42);
+        let b = gen_corpus(CorpusKind::SynthText, 10_000, 42);
+        assert_eq!(a, b);
+        let c = gen_corpus(CorpusKind::SynthText, 10_000, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn meets_size_and_is_ascii() {
+        let s = gen_corpus(CorpusKind::WebMix, 50_000, 0);
+        assert!(s.len() >= 50_000);
+        assert!(s.is_ascii());
+    }
+
+    #[test]
+    fn distributions_differ() {
+        let a = gen_corpus(CorpusKind::SynthText, 50_000, 0);
+        let b = gen_corpus(CorpusKind::WebMix, 50_000, 0);
+        assert!(!a.contains("http://"));
+        assert!(b.contains("http://"));
+    }
+
+    #[test]
+    fn facts_appear_in_both() {
+        for kind in [CorpusKind::SynthText, CorpusKind::WebMix] {
+            let s = gen_corpus(kind, 200_000, 7);
+            assert!(s.contains("is a kind of"), "{kind:?} missing facts");
+            assert!(s.contains("you can use a"), "{kind:?} missing tool facts");
+        }
+    }
+
+    #[test]
+    fn knowledge_base_consistency() {
+        // Every entity category is in categories(); names are lowercase ascii.
+        let cats = categories();
+        for (name, cat, _, _) in ENTITIES {
+            assert!(cats.contains(cat));
+            assert!(name.chars().all(|c| c.is_ascii_lowercase()));
+        }
+        assert!(cats.len() >= 4);
+    }
+}

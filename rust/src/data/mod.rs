@@ -1,0 +1,75 @@
+//! Data substrate: synthetic corpora (substituting WikiText-2 / C4), the
+//! byte-level tokenizer, sequence batching, and the synthetic zero-shot
+//! task suite (substituting ARC/BoolQ/HellaSwag/WinoGrande/PIQA).
+
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{gen_corpus, CorpusKind};
+pub use tasks::{gen_task, score_tasks, McItem, TaskKind, ALL_TASKS};
+pub use tokenizer::{detokenize, tokenize, BOS, VOCAB_SIZE};
+
+use crate::util::rng::Rng;
+
+/// Sample `count` training/calibration sequences of `seq_len` tokens from a
+/// token stream, each prefixed with BOS (sampling calibration windows the
+/// way the paper samples 128 WikiText-2 sequences).
+pub fn sample_sequences(
+    tokens: &[u16],
+    seq_len: usize,
+    count: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<u16>> {
+    assert!(tokens.len() > seq_len + 1, "corpus too small for seq_len {seq_len}");
+    (0..count)
+        .map(|_| {
+            let start = rng.below(tokens.len() - seq_len - 1);
+            let mut seq = Vec::with_capacity(seq_len);
+            seq.push(BOS);
+            seq.extend_from_slice(&tokens[start..start + seq_len - 1]);
+            seq
+        })
+        .collect()
+}
+
+/// Contiguous non-overlapping evaluation windows (the conventional
+/// WikiText-2 perplexity protocol).
+pub fn eval_windows(tokens: &[u16], seq_len: usize, max_windows: usize) -> Vec<Vec<u16>> {
+    let mut out = Vec::new();
+    let mut pos = 0;
+    while pos + seq_len < tokens.len() && out.len() < max_windows {
+        let mut seq = Vec::with_capacity(seq_len);
+        seq.push(BOS);
+        seq.extend_from_slice(&tokens[pos..pos + seq_len - 1]);
+        out.push(seq);
+        pos += seq_len - 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_shapes_and_bos() {
+        let toks: Vec<u16> = (0..10_000).map(|i| (i % 250) as u16).collect();
+        let mut rng = Rng::new(0);
+        let seqs = sample_sequences(&toks, 64, 10, &mut rng);
+        assert_eq!(seqs.len(), 10);
+        for s in &seqs {
+            assert_eq!(s.len(), 64);
+            assert_eq!(s[0], BOS);
+        }
+    }
+
+    #[test]
+    fn eval_windows_cover_stream_without_overlap() {
+        let toks: Vec<u16> = (0..1000).map(|i| (i % 250) as u16).collect();
+        let w = eval_windows(&toks, 101, usize::MAX);
+        assert!(w.len() >= 8);
+        assert_eq!(&w[0][1..], &toks[0..100]);
+        assert_eq!(w[1][1], toks[100]);
+    }
+}

@@ -1,0 +1,51 @@
+//! Byte-level tokenizer.
+//!
+//! The synthetic corpora are ASCII, so a byte vocabulary (256) plus a BOS
+//! token (id 256) covers everything with zero out-of-vocabulary risk —
+//! the same trade the paper's models make at the other extreme (BPE over a
+//! 32k–256k vocab). Vocab size 257 keeps the embedding/head matrices small
+//! enough for the in-repo teachers.
+
+/// Total vocabulary size (256 bytes + BOS).
+pub const VOCAB_SIZE: usize = 257;
+
+/// Beginning-of-sequence token id.
+pub const BOS: u16 = 256;
+
+/// Encode text to token ids.
+pub fn tokenize(text: &str) -> Vec<u16> {
+    text.bytes().map(|b| b as u16).collect()
+}
+
+/// Decode token ids back to text (skips BOS; lossy on invalid UTF-8).
+pub fn detokenize(tokens: &[u16]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t < 256)
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "the robin lives in the forest. 123!";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn bos_is_out_of_byte_range() {
+        assert!(BOS as usize >= 256);
+        assert!((BOS as usize) < VOCAB_SIZE);
+        assert_eq!(detokenize(&[BOS, b'h' as u16, b'i' as u16]), "hi");
+    }
+
+    #[test]
+    fn tokens_are_bytes() {
+        assert_eq!(tokenize("ab"), vec![97, 98]);
+    }
+}

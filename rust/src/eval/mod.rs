@@ -1,0 +1,115 @@
+//! Evaluation: next-token perplexity (the WikiText-2 protocol) and the
+//! zero-shot multiple-choice harness (the lm-eval protocol) over the
+//! synthetic task suite.
+
+use crate::data::{eval_windows, gen_task, score_tasks, tokenize, TaskKind, ALL_TASKS, BOS};
+use crate::nn::loss::log_probs;
+use crate::nn::model::{model_forward, ModelParams};
+
+/// Perplexity over contiguous non-overlapping windows of `eval_tokens`.
+pub fn perplexity(
+    params: &ModelParams,
+    eval_tokens: &[u16],
+    seq: usize,
+    max_windows: usize,
+) -> f64 {
+    let windows = eval_windows(eval_tokens, seq + 1, max_windows);
+    assert!(!windows.is_empty(), "no eval windows");
+    let mut total_nll = 0.0f64;
+    let mut count = 0usize;
+    for w in &windows {
+        let inputs = &w[..seq];
+        let targets = &w[1..seq + 1];
+        let (logits, _) = model_forward(params, inputs, 1, seq, false);
+        let lps = log_probs(&logits, targets);
+        total_nll -= lps.iter().sum::<f64>();
+        count += seq;
+    }
+    (total_nll / count as f64).exp()
+}
+
+/// Total log-probability of `choice` given `prompt` under the model.
+pub fn choice_logprob(params: &ModelParams, prompt: &str, choice: &str) -> f64 {
+    let mut tokens = vec![BOS];
+    tokens.extend(tokenize(prompt));
+    let prompt_len = tokens.len();
+    tokens.extend(tokenize(choice));
+    let seq = tokens.len() - 1; // inputs predict the next token
+    let inputs = &tokens[..seq];
+    let targets = &tokens[1..];
+    let (logits, _) = model_forward(params, inputs, 1, seq, false);
+    let lps = log_probs(&logits, targets);
+    // Only the choice tokens count (targets from index prompt_len-1 on).
+    lps[prompt_len - 1..].iter().sum()
+}
+
+/// Accuracy (%) of the model on one task.
+pub fn eval_task(params: &ModelParams, kind: TaskKind, n_items: usize, seed: u64) -> f64 {
+    let items = gen_task(kind, n_items, seed);
+    score_tasks(&items, |prompt, choice| choice_logprob(params, prompt, choice))
+}
+
+/// The paper's Table 3 row: per-task accuracy plus the average.
+pub fn zero_shot_suite(
+    params: &ModelParams,
+    n_items: usize,
+    seed: u64,
+) -> (Vec<(String, f64)>, f64) {
+    let per_task: Vec<(String, f64)> = ALL_TASKS
+        .iter()
+        .map(|&k| (k.name().to_string(), eval_task(params, k, n_items, seed)))
+        .collect();
+    let avg = per_task.iter().map(|(_, a)| a).sum::<f64>() / per_task.len() as f64;
+    (per_task, avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_corpus, CorpusKind};
+    use crate::nn::family_config;
+    use crate::nn::trainer::train;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn untrained_model_ppl_near_vocab_size() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let corpus = gen_corpus(CorpusKind::SynthText, 30_000, 0);
+        let toks = tokenize(&corpus);
+        let ppl = perplexity(&params, &toks, 32, 4);
+        // Untrained byte model: PPL near 257 (uniform).
+        assert!(ppl > 120.0 && ppl < 500.0, "ppl={ppl}");
+    }
+
+    #[test]
+    fn training_improves_ppl_and_zero_shot() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(1);
+        let mut params = ModelParams::init(&cfg, &mut rng);
+        let corpus = gen_corpus(CorpusKind::SynthText, 200_000, 1);
+        let toks = tokenize(&corpus);
+        let ppl_before = perplexity(&params, &toks[150_000..], 48, 6);
+        train(&mut params, &toks[..150_000], 200, 8, 48, 3e-3, 2, false);
+        let ppl_after = perplexity(&params, &toks[150_000..], 48, 6);
+        assert!(
+            ppl_after < ppl_before / 10.0,
+            "before={ppl_before} after={ppl_after}"
+        );
+        // Zero-shot: above chance on the category task after training.
+        let acc = eval_task(&params, crate::data::TaskKind::Agreement, 40, 3);
+        assert!(acc > 55.0, "agreement acc={acc}"); // chance = 50
+    }
+
+    #[test]
+    fn choice_logprob_is_additive_in_choice_tokens() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(2);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let lp_short = choice_logprob(&params, "abc", " d");
+        let lp_long = choice_logprob(&params, "abc", " de");
+        // Adding a token adds (negative) log-probability.
+        assert!(lp_long < lp_short);
+    }
+}

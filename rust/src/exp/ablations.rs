@@ -1,0 +1,300 @@
+//! Ablations: Table 5 (initialization), Table 6 (component efficacy),
+//! Table 9 (data budgets), Table 10 (calibration mixture), Fig. 8 (latent
+//! dynamics), Fig. 9 (ADMM iterations / penalty schedules).
+
+use super::accuracy::{pipeline_cfg, ppl_of, prepare};
+use super::{zoo, Ctx};
+use crate::data::{gen_corpus, sample_sequences, tokenize, CorpusKind};
+use crate::eval::{perplexity, zero_shot_suite};
+use crate::quant::pipeline::quantize;
+use crate::quant::recon::tune_scales_global;
+use crate::quant::{lb_admm, AdmmConfig, InitMethod, RhoSchedule};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::tables::{fmt_ppl, Table};
+
+// ---------------------------------------------------------------------------
+// Table 5 — initialization strategy (on the r1 family at 0.8 bits).
+// ---------------------------------------------------------------------------
+
+pub fn table5(ctx: &Ctx) {
+    let p = prepare(ctx, "r1", "s");
+    let mut table = Table::new(
+        "Table 5 — initialization ablation (r1-s @ 0.8 bits)",
+        &["Initialization Method", "PPL", "Zero-shot"],
+    );
+    let mut raw = Json::obj();
+    let items = if ctx.quick { 15 } else { 30 };
+    for init in [InitMethod::DualSvid, InitMethod::DbfAdmm, InitMethod::LbAdmm] {
+        let mut cfg = pipeline_cfg(ctx, 0.8);
+        cfg.init = init;
+        let (qm, _) = quantize(&p.teacher, &p.calib, p.seq, &cfg);
+        let ppl = ppl_of(&p, &qm.params);
+        let (_, zs) = zero_shot_suite(&qm.params, items, ctx.seed);
+        table.row(vec![init.name().into(), fmt_ppl(ppl), format!("{zs:.2}")]);
+        raw.insert(init.name(), Json::obj().set("ppl", ppl).set("zs", zs));
+    }
+    ctx.save("table5", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Table 6 — component efficacy (q3-s @ 1 bit).
+// ---------------------------------------------------------------------------
+
+pub fn table6(ctx: &Ctx) {
+    let p = prepare(ctx, "q3", "s");
+    let mut table = Table::new(
+        "Table 6 — component efficacy (q3-s @ 1 bit)",
+        &["Init", "Error Mitig.", "Fact. Refine", "Model Recon.", "PPL", "Zero-shot"],
+    );
+    let mut raw = Json::obj();
+    let items = if ctx.quick { 15 } else { 30 };
+    // (init enabled?, mitigation, refinement, reconstruction)
+    let rows = [
+        (false, false, false, false),
+        (true, true, false, false),
+        (true, false, true, false),
+        (true, true, true, false),
+        (true, true, true, true),
+    ];
+    for (init, mitig, refine, recon) in rows {
+        let mut cfg = pipeline_cfg(ctx, 1.0);
+        cfg.init = if init { InitMethod::LbAdmm } else { InitMethod::Random };
+        cfg.enable_mitigation = mitig;
+        cfg.enable_refine = refine;
+        cfg.enable_recon = recon;
+        let (qm, _) = quantize(&p.teacher, &p.calib, p.seq, &cfg);
+        let ppl = ppl_of(&p, &qm.params);
+        let (_, zs) = zero_shot_suite(&qm.params, items, ctx.seed);
+        let mark = |b: bool| if b { "v" } else { "x" };
+        table.row(vec![
+            mark(init).into(),
+            mark(mitig).into(),
+            mark(refine).into(),
+            mark(recon).into(),
+            fmt_ppl(ppl),
+            format!("{zs:.2}"),
+        ]);
+        raw.insert(
+            &format!("init={init},mitig={mitig},refine={refine},recon={recon}"),
+            Json::obj().set("ppl", ppl).set("zs", zs),
+        );
+    }
+    ctx.save("table6", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Table 9 — data budgets for block vs model reconstruction (App. D.1).
+// ---------------------------------------------------------------------------
+
+pub fn table9(ctx: &Ctx) {
+    let tokens = zoo::train_tokens();
+    let teacher = zoo::teacher(&ctx.checkpoints, "l2", "s", &tokens, true);
+    let eval_toks = zoo::eval_tokens(CorpusKind::SynthText);
+    let seq = 48usize;
+    let windows = if ctx.quick { 6 } else { 16 };
+    let block_budgets = if ctx.quick { vec![8, 16] } else { vec![8, 16, 32] };
+    let model_budgets = if ctx.quick { vec![8, 16] } else { vec![8, 16, 32] };
+
+    let headers: Vec<String> = std::iter::once("Block \\ Model samples".to_string())
+        .chain(model_budgets.iter().map(|m| m.to_string()))
+        .collect();
+    let mut table = Table::new(
+        "Table 9 — calibration budgets: block recon samples x model recon samples (PPL, l2-s @ 1 bit)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut raw = Json::obj();
+    for &nb in &block_budgets {
+        let mut rng = Rng::new(ctx.seed ^ nb as u64);
+        let calib = sample_sequences(&tokens, seq + 1, nb, &mut rng);
+        // Block phase without the global phase.
+        let mut cfg = pipeline_cfg(ctx, 1.0);
+        cfg.enable_recon = false;
+        let (qm_base, _) = quantize(&teacher, &calib, seq, &cfg);
+        let mut row = vec![nb.to_string()];
+        for &nm in &model_budgets {
+            // Clone the block-reconstructed model, run Phase 3 with its own
+            // budget of fresh sequences.
+            let mut qm = crate::quant::QuantModel {
+                params: qm_base.params.clone(),
+                layers: qm_base.layers.clone(),
+            };
+            let mut rng2 = Rng::new(ctx.seed ^ 0xF00D ^ nm as u64);
+            let recon_calib = sample_sequences(&tokens, seq + 1, nm, &mut rng2);
+            tune_scales_global(
+                &mut qm, &teacher, &recon_calib, cfg.t_glob, cfg.batch_seqs, seq,
+                cfg.lr_glob, cfg.kl_temperature, &mut rng2,
+            );
+            let ppl = perplexity(&qm.params, &eval_toks, seq, windows);
+            row.push(fmt_ppl(ppl));
+            raw.insert(&format!("block{nb}_model{nm}"), ppl);
+        }
+        table.row(row);
+    }
+    ctx.save("table9", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Table 10 — calibration dataset composition (App. D.2).
+// ---------------------------------------------------------------------------
+
+pub fn table10(ctx: &Ctx) {
+    let tokens_st = zoo::train_tokens();
+    let tokens_wm = tokenize(&gen_corpus(CorpusKind::WebMix, 1_000_000, 4242));
+    let teacher = zoo::teacher(&ctx.checkpoints, "l2", "s", &tokens_st, true);
+    let eval_st = zoo::eval_tokens(CorpusKind::SynthText);
+    let eval_wm = zoo::eval_tokens(CorpusKind::WebMix);
+    let seq = 48usize;
+    let windows = if ctx.quick { 6 } else { 16 };
+    let total = if ctx.quick { 8 } else { 24 };
+
+    let mut table = Table::new(
+        "Table 10 — calibration mixture (l2-s @ 1 bit); WM=webmix(C4*), ST=synthtext(WT2*)",
+        &["WM", "ST", "ST PPL", "WM PPL", "Zero-shot"],
+    );
+    let mut raw = Json::obj();
+    let items = if ctx.quick { 15 } else { 30 };
+    let fractions = [(0, 4), (1, 3), (2, 2), (3, 1), (4, 0)];
+    for (wm_q, st_q) in fractions {
+        let n_wm = total * wm_q / 4;
+        let n_st = total * st_q / 4;
+        let mut rng = Rng::new(ctx.seed ^ (wm_q as u64) << 4);
+        let mut calib = if n_st > 0 {
+            sample_sequences(&tokens_st, seq + 1, n_st, &mut rng)
+        } else {
+            vec![]
+        };
+        if n_wm > 0 {
+            calib.extend(sample_sequences(&tokens_wm, seq + 1, n_wm, &mut rng));
+        }
+        let cfg = pipeline_cfg(ctx, 1.0);
+        let (qm, _) = quantize(&teacher, &calib, seq, &cfg);
+        let ppl_st = perplexity(&qm.params, &eval_st, seq, windows);
+        let ppl_wm = perplexity(&qm.params, &eval_wm, seq, windows);
+        let (_, zs) = zero_shot_suite(&qm.params, items, ctx.seed);
+        table.row(vec![
+            n_wm.to_string(),
+            n_st.to_string(),
+            fmt_ppl(ppl_st),
+            fmt_ppl(ppl_wm),
+            format!("{zs:.2}"),
+        ]);
+        raw.insert(
+            &format!("wm{n_wm}_st{n_st}"),
+            Json::obj().set("st_ppl", ppl_st).set("wm_ppl", ppl_wm).set("zs", zs),
+        );
+    }
+    ctx.save("table10", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8 — latent dynamics during STE refinement (block 0).
+// ---------------------------------------------------------------------------
+
+pub fn fig8(ctx: &Ctx) {
+    let p = prepare(ctx, "l2", "s");
+    let cfg = pipeline_cfg(ctx, 1.0);
+    let (_, report) = quantize(&p.teacher, &p.calib, p.seq, &cfg);
+    let mut table = Table::new(
+        "Fig. 8 — latent dynamics, block 0: sign-flip ratio and |delta| by initial magnitude",
+        &["Layer", "Flip %", "flips@|u0|<q25 %", "flips@|u0|>q75 %", "mean |delta| low-mag", "mean |delta| high-mag"],
+    );
+    let mut raw = Json::obj();
+    let block0 = report.ste.first().expect("refinement ran");
+    for layer in &block0.layers {
+        // Quartiles of initial magnitude.
+        let mut mags: Vec<f32> = layer.samples.iter().map(|s| s.0).collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if mags.is_empty() {
+            continue;
+        }
+        let q25 = mags[mags.len() / 4];
+        let q75 = mags[(3 * mags.len()) / 4];
+        let low: Vec<_> = layer.samples.iter().filter(|s| s.0 < q25).collect();
+        let high: Vec<_> = layer.samples.iter().filter(|s| s.0 > q75).collect();
+        let flip_rate = |xs: &[&(f32, f32, bool)]| {
+            100.0 * xs.iter().filter(|s| s.2).count() as f64 / xs.len().max(1) as f64
+        };
+        let mean_delta = |xs: &[&(f32, f32, bool)]| {
+            xs.iter().map(|s| s.1 as f64).sum::<f64>() / xs.len().max(1) as f64
+        };
+        table.row(vec![
+            layer.id.to_string(),
+            format!("{:.2}", 100.0 * layer.flip_ratio),
+            format!("{:.2}", flip_rate(&low)),
+            format!("{:.2}", flip_rate(&high)),
+            format!("{:.4}", mean_delta(&low)),
+            format!("{:.4}", mean_delta(&high)),
+        ]);
+        raw.insert(
+            &layer.id.to_string(),
+            Json::obj()
+                .set("flip_ratio", layer.flip_ratio)
+                .set("flip_low_mag", flip_rate(&low))
+                .set("flip_high_mag", flip_rate(&high)),
+        );
+    }
+    ctx.save("fig8", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9 — ADMM ablations: outer iterations and penalty schedules.
+// ---------------------------------------------------------------------------
+
+pub fn fig9(ctx: &Ctx) {
+    // Block-0 q_proj of the l2-m teacher (the paper uses Gemma block 0).
+    let tokens = zoo::train_tokens();
+    let teacher = zoo::teacher(&ctx.checkpoints, "l2", "m", &tokens, true);
+    let w = teacher.blocks[0].wq.clone();
+    let r = crate::quant::rank_for_bpw(w.rows(), w.cols(), 1.0);
+
+    let mut table = Table::new(
+        "Fig. 9 — ADMM ablations on l2-m block-0 q_proj (final binarized recon error)",
+        &["Variant", "Iters", "Schedule", "Final err", "Err @25%", "Err @50%"],
+    );
+    let mut raw = Json::obj();
+
+    // (a) outer-iteration sweep.
+    for iters in [5usize, 10, 20, 40] {
+        let cfg = AdmmConfig { iters, trace: true, seed: ctx.seed, ..Default::default() };
+        let res = lb_admm(&w, r, &cfg);
+        let errs = &res.trace.recon_err;
+        let at = |f: f64| errs[((errs.len() - 1) as f64 * f) as usize];
+        table.row(vec![
+            "iterations".into(),
+            iters.to_string(),
+            "linear".into(),
+            format!("{:.4}", errs.last().unwrap()),
+            format!("{:.4}", at(0.25)),
+            format!("{:.4}", at(0.5)),
+        ]);
+        raw.insert(&format!("iters{iters}"), Json::Arr(errs.iter().map(|&e| Json::Num(e)).collect()));
+    }
+
+    // (b) penalty schedules at fixed iterations.
+    for sched in [RhoSchedule::Constant, RhoSchedule::Linear, RhoSchedule::Exponential] {
+        let cfg = AdmmConfig {
+            iters: 30,
+            schedule: sched,
+            trace: true,
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let res = lb_admm(&w, r, &cfg);
+        let errs = &res.trace.recon_err;
+        let at = |f: f64| errs[((errs.len() - 1) as f64 * f) as usize];
+        table.row(vec![
+            "schedule".into(),
+            "30".into(),
+            format!("{sched:?}"),
+            format!("{:.4}", errs.last().unwrap()),
+            format!("{:.4}", at(0.25)),
+            format!("{:.4}", at(0.5)),
+        ]);
+        raw.insert(
+            &format!("sched_{sched:?}"),
+            Json::Arr(errs.iter().map(|&e| Json::Num(e)).collect()),
+        );
+    }
+    ctx.save("fig9", &table, raw);
+}

@@ -1,0 +1,313 @@
+//! Accuracy experiments: Table 2 (perplexity grid), Table 3 (zero-shot),
+//! Fig. 1 (PPL vs effective BPW), Fig. 6 (Pareto frontier).
+
+use super::zoo;
+use super::Ctx;
+use crate::data::{sample_sequences, CorpusKind};
+use crate::eval::{perplexity, zero_shot_suite};
+use crate::nn::model::ModelParams;
+use crate::nn::LayerId;
+use crate::quant::baselines::{
+    arbllm::ArbLlmRc, billm::BiLlm, gptq::Gptq, hbllm::HbLlmCol, quantize_model_with,
+    stbllm::StbLlm, Rtn, WeightQuantizer, Xnor,
+};
+use crate::quant::pipeline::{calibrate_preconditioners, quantize, PipelineConfig};
+use crate::quant::{AdmmConfig, QuantModel, QuantReport};
+use crate::util::json::Json;
+use crate::util::tables::{fmt_ppl, Table};
+use std::collections::BTreeMap;
+
+/// Everything needed to quantize + evaluate one teacher.
+pub struct Prepared {
+    pub teacher: ModelParams,
+    pub calib: Vec<Vec<u16>>,
+    pub seq: usize,
+    pub d_ins: BTreeMap<LayerId, Vec<f32>>,
+    pub eval_toks: Vec<u16>,
+    pub eval_windows: usize,
+}
+
+pub fn prepare(ctx: &Ctx, family: &str, size: &str) -> Prepared {
+    let tokens = zoo::train_tokens();
+    let teacher = zoo::teacher(&ctx.checkpoints, family, size, &tokens, true);
+    let seq = 48usize;
+    let n_calib = if ctx.quick { 8 } else { 24 };
+    let mut rng = crate::util::rng::Rng::new(ctx.seed ^ 0xCA11B);
+    let calib = sample_sequences(&tokens, seq + 1, n_calib, &mut rng);
+    // Input sensitivities for the baselines (same calibration pass).
+    let pcfg = pipeline_cfg(ctx, 1.0);
+    let pre = calibrate_preconditioners(&teacher, &calib, seq, &pcfg);
+    let d_ins = pre.into_iter().map(|(id, (_out, d_in))| (id, d_in)).collect();
+    Prepared {
+        teacher,
+        calib,
+        seq,
+        d_ins,
+        eval_toks: zoo::eval_tokens(CorpusKind::SynthText),
+        eval_windows: if ctx.quick { 6 } else { 16 },
+    }
+}
+
+/// Pipeline config scaled to the experiment budget.
+pub fn pipeline_cfg(ctx: &Ctx, bpw: f64) -> PipelineConfig {
+    if ctx.quick {
+        PipelineConfig {
+            bpw,
+            t_pre: 6,
+            t_post: 12,
+            t_glob: 6,
+            stats_seqs: 8,
+            admm: AdmmConfig { iters: 10, ..Default::default() },
+            seed: ctx.seed,
+            ..Default::default()
+        }
+    } else {
+        PipelineConfig {
+            bpw,
+            t_pre: 12,
+            t_post: 32,
+            t_glob: 16,
+            stats_seqs: 16,
+            admm: AdmmConfig { iters: 30, ..Default::default() },
+            seed: ctx.seed,
+            ..Default::default()
+        }
+    }
+}
+
+pub fn ppl_of(p: &Prepared, params: &ModelParams) -> f64 {
+    perplexity(params, &p.eval_toks, p.seq, p.eval_windows)
+}
+
+/// Run NanoQuant at a BPW target and return (model, report, ppl).
+pub fn nanoquant_run(ctx: &Ctx, p: &Prepared, bpw: f64) -> (QuantModel, QuantReport, f64) {
+    let cfg = pipeline_cfg(ctx, bpw);
+    let (qm, report) = quantize(&p.teacher, &p.calib, p.seq, &cfg);
+    let ppl = ppl_of(p, &qm.params);
+    (qm, report, ppl)
+}
+
+/// Run a baseline quantizer and return (ppl, achieved bpw, size bytes).
+pub fn baseline_run(p: &Prepared, q: &dyn WeightQuantizer) -> (f64, f64, usize) {
+    let res = quantize_model_with(q, &p.teacher, &p.d_ins);
+    (ppl_of(p, &res.params), res.effective_bpw, res.effective_bytes)
+}
+
+/// The baseline set of Table 2 (name, total-bits label, quantizer).
+pub fn binary_ptq_baselines() -> Vec<(&'static str, Box<dyn WeightQuantizer>)> {
+    vec![
+        ("RTN", Box::new(Rtn)),
+        ("XNOR", Box::new(Xnor)),
+        ("BiLLM", Box::new(BiLlm::default())),
+        ("STBLLM (6:8)", Box::new(StbLlm::new(6, 8))),
+        ("ARB-LLM_RC", Box::new(ArbLlmRc::default())),
+        ("HBLLM_col", Box::new(HbLlmCol::default())),
+        ("GPTQ (W2g64)", Box::new(Gptq::default())),
+    ]
+}
+
+// ---------------------------------------------------------------------------
+// Table 2 — WikiText-2-analogue perplexity across families and bitrates.
+// ---------------------------------------------------------------------------
+
+pub fn table2(ctx: &Ctx) {
+    let mut table = Table::new(
+        "Table 2 — perplexity (synthtext eval) of 1-bit and sub-1-bit PTQ",
+        &["Method", "W Bits", "l2-s", "l3-s", "g3-s", "q3-s", "r1-s"],
+    );
+    let mut raw = Json::obj();
+    let preps: Vec<(String, Prepared)> = zoo::FAMILIES
+        .iter()
+        .map(|f| (f.to_string(), prepare(ctx, f, "s")))
+        .collect();
+
+    // FP16 teacher row.
+    let mut row = vec!["FP teacher".to_string(), "16.00".to_string()];
+    let mut teacher_json = Json::obj();
+    for (f, p) in &preps {
+        let ppl = ppl_of(p, &p.teacher);
+        teacher_json.insert(f, ppl);
+        row.push(fmt_ppl(ppl));
+    }
+    table.row(row);
+    raw.insert("fp16", teacher_json);
+
+    // Binary PTQ baselines.
+    for (name, q) in binary_ptq_baselines() {
+        let mut row = vec![name.to_string(), String::new()];
+        let mut j = Json::obj();
+        let mut bpw_seen = 0.0;
+        for (f, p) in &preps {
+            let (ppl, bpw, _) = baseline_run(p, q.as_ref());
+            j.insert(f, Json::obj().set("ppl", ppl).set("bpw", bpw));
+            bpw_seen = bpw;
+            row.push(fmt_ppl(ppl));
+        }
+        row[1] = format!("{bpw_seen:.2}");
+        table.row(row);
+        raw.insert(name, j);
+    }
+
+    // NanoQuant at 1.0 / 0.8 / 0.55 bits.
+    for bpw in [1.0, 0.8, 0.55] {
+        let mut row = vec![format!("NanoQuant"), format!("{bpw:.2}")];
+        let mut j = Json::obj();
+        for (f, p) in &preps {
+            let (_, report, ppl) = nanoquant_run(ctx, p, bpw);
+            j.insert(
+                f,
+                Json::obj()
+                    .set("ppl", ppl)
+                    .set("bpw", report.effective_bpw)
+                    .set("bytes", report.effective_bytes)
+                    .set("wall_s", report.wall_seconds),
+            );
+            row.push(fmt_ppl(ppl));
+        }
+        table.row(row);
+        raw.insert(&format!("nanoquant@{bpw}"), j);
+    }
+    ctx.save("table2", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Table 3 — zero-shot accuracy.
+// ---------------------------------------------------------------------------
+
+pub fn table3(ctx: &Ctx) {
+    let mut table = Table::new(
+        "Table 3 — zero-shot accuracy (synthetic suite)",
+        &["Model", "Bits", "Method", "ARC-e*", "ARC-c*", "BoolQ*", "Hella*", "Wino*", "PIQA*", "Avg."],
+    );
+    let mut raw = Json::obj();
+    let items = if ctx.quick { 20 } else { 40 };
+    for family in ["l3", "q3"] {
+        let p = prepare(ctx, family, "s");
+        let mut eval_model = |name: &str, bits: f64, params: &ModelParams, raw: &mut Json| {
+            let (per_task, avg) = zero_shot_suite(params, items, ctx.seed);
+            let mut row = vec![
+                format!("{family}-s"),
+                format!("{bits:.2}"),
+                name.to_string(),
+            ];
+            let mut j = Json::obj();
+            for (task, acc) in &per_task {
+                row.push(format!("{acc:.2}"));
+                j.insert(task, *acc);
+            }
+            row.push(format!("{avg:.2}"));
+            j.insert("avg", avg);
+            table.row(row);
+            raw.insert(&format!("{family}/{name}"), j);
+        };
+        eval_model("BF16", 16.0, &p.teacher.clone(), &mut raw);
+        for (name, q) in binary_ptq_baselines() {
+            if name == "RTN" || name == "XNOR" {
+                continue; // catastrophic rows add nothing to Table 3
+            }
+            let res = quantize_model_with(q.as_ref(), &p.teacher, &p.d_ins);
+            eval_model(name, res.effective_bpw, &res.params.clone(), &mut raw);
+        }
+        let (qm, report, _) = nanoquant_run(ctx, &p, 1.0);
+        eval_model("NanoQuant", report.effective_bpw, &qm.params.clone(), &mut raw);
+    }
+    ctx.save("table3", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — PPL vs effective storage; Fig. 6 — Pareto frontier.
+// ---------------------------------------------------------------------------
+
+pub fn fig1(ctx: &Ctx) {
+    // Derived from the table2 measurements (re-run if absent).
+    let path = format!("{}/table2.json", ctx.results);
+    if !std::path::Path::new(&path).exists() {
+        eprintln!("[fig1] table2 results missing; running table2 first");
+        table2(ctx);
+    }
+    let raw = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let mut table = Table::new(
+        "Fig. 1 — PPL vs effective BPW (series: method, x: BPW, y: ppl, per family)",
+        &["Method", "Family", "BPW", "PPL"],
+    );
+    if let Json::Obj(methods) = &raw {
+        for (method, fams) in methods {
+            if method == "fp16" {
+                continue;
+            }
+            if let Json::Obj(fmap) = fams {
+                for (fam, v) in fmap {
+                    let (Some(ppl), Some(bpw)) = (
+                        v.get("ppl").and_then(|x| x.as_f64()),
+                        v.get("bpw").and_then(|x| x.as_f64()),
+                    ) else {
+                        continue;
+                    };
+                    table.row(vec![
+                        method.clone(),
+                        fam.clone(),
+                        format!("{bpw:.2}"),
+                        fmt_ppl(ppl),
+                    ]);
+                }
+            }
+        }
+    }
+    ctx.save("fig1", &table, raw);
+}
+
+pub fn fig6(ctx: &Ctx) {
+    let mut table = Table::new(
+        "Fig. 6 — Pareto frontier, q3 family (x: model MB, y: ppl)",
+        &["Method", "Model", "Size (MB)", "BPW", "PPL"],
+    );
+    let mut raw = Json::obj();
+    let sizes = if ctx.quick { vec!["xs", "s"] } else { vec!["xs", "s", "m"] };
+    for size in sizes {
+        let p = prepare(ctx, "q3", size);
+        // FP16 point.
+        let fp_bytes: usize = crate::nn::param_count(&p.teacher.cfg) * 2;
+        table.row(vec![
+            "BF16".into(),
+            format!("q3-{size}"),
+            format!("{:.2}", fp_bytes as f64 / 1e6),
+            "16.00".into(),
+            fmt_ppl(ppl_of(&p, &p.teacher)),
+        ]);
+        for (name, q) in binary_ptq_baselines() {
+            if name == "RTN" || name == "XNOR" {
+                continue;
+            }
+            let (ppl, bpw, bytes) = baseline_run(&p, q.as_ref());
+            table.row(vec![
+                name.to_string(),
+                format!("q3-{size}"),
+                format!("{:.2}", bytes as f64 / 1e6),
+                format!("{bpw:.2}"),
+                fmt_ppl(ppl),
+            ]);
+            raw.insert(
+                &format!("{name}/q3-{size}"),
+                Json::obj().set("ppl", ppl).set("bytes", bytes).set("bpw", bpw),
+            );
+        }
+        for bpw in [1.0, 0.8, 0.55] {
+            let (_, report, ppl) = nanoquant_run(ctx, &p, bpw);
+            table.row(vec![
+                format!("NanoQuant@{bpw}"),
+                format!("q3-{size}"),
+                format!("{:.2}", report.effective_bytes as f64 / 1e6),
+                format!("{:.2}", report.effective_bpw),
+                fmt_ppl(ppl),
+            ]);
+            raw.insert(
+                &format!("nanoquant@{bpw}/q3-{size}"),
+                Json::obj()
+                    .set("ppl", ppl)
+                    .set("bytes", report.effective_bytes)
+                    .set("bpw", report.effective_bpw),
+            );
+        }
+    }
+    ctx.save("fig6", &table, raw);
+}

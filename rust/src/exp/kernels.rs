@@ -1,0 +1,137 @@
+//! Kernel micro-benchmarks: Figs. 10–13 (GEMV/GEMM across shapes, ours vs
+//! GemLite-like naive-unpack vs dense, native engines and PJRT artifacts).
+
+use super::Ctx;
+use crate::quant::kernels::{NaiveUnpackLinear, PackedLinear};
+use crate::quant::{rank_for_bpw, LatentFactors};
+use crate::runtime::{literal_f32, packed_literal, vec_literal, Runtime};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::tables::Table;
+use crate::util::timer::bench;
+
+pub const SHAPES: &[(usize, usize)] = &[(256, 256), (512, 512), (1024, 1024)];
+
+pub fn make_packed(n: usize, m: usize, r: usize, seed: u64) -> crate::quant::QuantLinear {
+    let mut rng = Rng::new(seed);
+    LatentFactors {
+        u: Tensor::randn(&[n, r], 1.0, &mut rng),
+        v: Tensor::randn(&[m, r], 1.0, &mut rng),
+        s1: (0..n).map(|_| rng.uniform_in(0.2, 2.0)).collect(),
+        s2: (0..m).map(|_| rng.uniform_in(0.2, 2.0)).collect(),
+    }
+    .freeze()
+}
+
+pub fn fig10_13(ctx: &Ctx) {
+    let mut table = Table::new(
+        "Figs. 10-13 — packed binary GEMV/GEMM kernels across shapes and engines",
+        &["Kernel", "Shape", "Engine", "ms/op", "ops/s", "Eff. MB"],
+    );
+    let mut raw = Json::obj();
+    let min_t = if ctx.quick { 0.05 } else { 0.2 };
+    let iters = if ctx.quick { 20 } else { 200 };
+
+    // --- Native Rust engines (Fig. 10 GEMV shape sweep; Fig. 12-13 engines) ---
+    for &(n, m) in SHAPES {
+        let r = rank_for_bpw(n, m, 1.0);
+        let q = make_packed(n, m, r, ctx.seed);
+        let mut rng = Rng::new(ctx.seed ^ 1);
+        let x = rng.normal_vec(m, 1.0);
+
+        let packed = PackedLinear::new(q.clone());
+        let st = bench(&format!("gemv {n}x{m} packed"), min_t, iters, || {
+            std::hint::black_box(packed.forward_vec(&x));
+        });
+        push_row(&mut table, &mut raw, "GEMV", n, m, "packed (ours)", &st, q.effective_bits() / 8_000_000);
+
+        let naive = NaiveUnpackLinear { q: q.clone() };
+        use crate::nn::decode::MatVec;
+        let st = bench(&format!("gemv {n}x{m} naive"), min_t, iters.min(40), || {
+            std::hint::black_box(naive.matvec(&x));
+        });
+        push_row(&mut table, &mut raw, "GEMV", n, m, "naive-unpack (GemLite-like)", &st, q.effective_bits() / 8_000_000);
+
+        let dense = q.reconstruct();
+        let st = bench(&format!("gemv {n}x{m} dense"), min_t, iters, || {
+            std::hint::black_box(dense.matvec(&x));
+        });
+        push_row(&mut table, &mut raw, "GEMV", n, m, "dense f32", &st, dense.numel() * 4 / 1_000_000);
+
+        // Batched GEMM (Fig. 11): batch 8.
+        let xb = Tensor::randn(&[8, m], 1.0, &mut rng);
+        let st = bench(&format!("gemm {n}x{m} packed b8"), min_t, iters / 4, || {
+            std::hint::black_box(packed.forward_batch(&xb));
+        });
+        push_row(&mut table, &mut raw, "GEMM-b8", n, m, "packed (ours)", &st, q.effective_bits() / 8_000_000);
+        let st = bench(&format!("gemm {n}x{m} dense b8"), min_t, iters / 4, || {
+            std::hint::black_box(crate::tensor::matmul_a_bt(&xb, &dense));
+        });
+        push_row(&mut table, &mut raw, "GEMM-b8", n, m, "dense f32", &st, dense.numel() * 4 / 1_000_000);
+    }
+
+    // --- PJRT artifact engines (the L1 Pallas kernels through XLA) ---
+    if let Ok(mut rt) = Runtime::new("artifacts") {
+        for &(n, m) in SHAPES {
+            let r = rank_for_bpw(n, m, 1.0);
+            let q = make_packed(n, m, r, ctx.seed);
+            let mut rng = Rng::new(ctx.seed ^ 2);
+            let x = rng.normal_vec(m, 1.0);
+            for engine in ["pallas", "naive"] {
+                let name = format!("gemv_{n}x{m}x{r}_{engine}");
+                if rt.load(&name).is_err() {
+                    continue;
+                }
+                let args = vec![
+                    packed_literal(&q.u).unwrap(),
+                    packed_literal(&q.vt).unwrap(),
+                    vec_literal(&q.s1),
+                    vec_literal(&q.s2),
+                    vec_literal(&x),
+                ];
+                let st = bench(&name, min_t, iters.min(30), || {
+                    let out = rt.execute(&name, &args).unwrap();
+                    std::hint::black_box(literal_f32(&out[0]).unwrap());
+                });
+                push_row(
+                    &mut table,
+                    &mut raw,
+                    "GEMV-pjrt",
+                    n,
+                    m,
+                    &format!("{engine} (XLA)"),
+                    &st,
+                    q.effective_bits() / 8_000_000,
+                );
+            }
+        }
+    } else {
+        eprintln!("[fig10_13] artifacts missing; skipping PJRT rows");
+    }
+    ctx.save("fig10_13", &table, raw);
+}
+
+fn push_row(
+    table: &mut Table,
+    raw: &mut Json,
+    kernel: &str,
+    n: usize,
+    m: usize,
+    engine: &str,
+    st: &crate::util::timer::BenchStats,
+    eff_mb: usize,
+) {
+    table.row(vec![
+        kernel.into(),
+        format!("{n}x{m}"),
+        engine.into(),
+        format!("{:.3}", st.mean_s * 1e3),
+        format!("{:.1}", 1.0 / st.mean_s),
+        format!("{eff_mb}"),
+    ]);
+    raw.insert(
+        &format!("{kernel}/{n}x{m}/{engine}"),
+        Json::obj().set("mean_ms", st.mean_s * 1e3).set("p50_ms", st.p50_s * 1e3),
+    );
+}

@@ -1,0 +1,81 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §6).
+//!
+//! Every driver prints a paper-formatted table and writes
+//! `results/<id>.{json,md}`. `run("all", …)` regenerates the full set.
+
+pub mod ablations;
+pub mod accuracy;
+pub mod kernels;
+pub mod resources;
+pub mod serving;
+pub mod sizes;
+pub mod zoo;
+
+use crate::util::cli::Args;
+use crate::util::json::{write_json, Json};
+use crate::util::tables::Table;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub checkpoints: String,
+    pub results: String,
+    pub quick: bool,
+    pub seed: u64,
+}
+
+impl Ctx {
+    pub fn from_args(args: &Args) -> Ctx {
+        Ctx {
+            checkpoints: args.get_or("checkpoints", "checkpoints").to_string(),
+            results: args.get_or("results", "results").to_string(),
+            quick: args.flag("quick"),
+            seed: args.get_u64("seed", 0),
+        }
+    }
+
+    /// Persist a table + raw JSON under results/.
+    pub fn save(&self, id: &str, table: &Table, raw: Json) {
+        table.print();
+        table.write(&format!("{}/{id}.md", self.results)).expect("write md");
+        write_json(&format!("{}/{id}.json", self.results), &raw).expect("write json");
+        eprintln!("[exp] saved results/{id}.{{md,json}}");
+    }
+}
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, ctx: &Ctx) {
+    match id {
+        "zoo" => zoo::build_zoo(&ctx.checkpoints, true),
+        "table2" => accuracy::table2(ctx),
+        "table3" => accuracy::table3(ctx),
+        "fig1" => accuracy::fig1(ctx),
+        "fig6" => accuracy::fig6(ctx),
+        "table4" => resources::table4(ctx),
+        "table7" => resources::table7(ctx),
+        "table8" => resources::table8(ctx),
+        "table5" => ablations::table5(ctx),
+        "table6" => ablations::table6(ctx),
+        "table9" => ablations::table9(ctx),
+        "table10" => ablations::table10(ctx),
+        "fig8" => ablations::fig8(ctx),
+        "fig9" => ablations::fig9(ctx),
+        "table12" => serving::table12(ctx),
+        "fig4" | "fig5" | "fig4_5" => serving::fig4_5(ctx),
+        "fig7" => serving::fig7(ctx),
+        "table15" => serving::table15(ctx),
+        "fig10" | "fig11" | "fig12" | "fig13" | "fig10_13" => kernels::fig10_13(ctx),
+        "table13" | "table14" | "table13_14" => sizes::table13_14(ctx),
+        "all" => {
+            zoo::build_zoo(&ctx.checkpoints, true);
+            for id in [
+                "table13_14", "fig10_13", "table2", "fig1", "fig6", "table3", "table5",
+                "table6", "table9", "table10", "fig8", "fig9", "table4", "table7", "table8",
+                "table12", "fig4_5", "fig7", "table15",
+            ] {
+                eprintln!("\n=== exp {id} ===");
+                run(id, ctx);
+            }
+        }
+        other => panic!("unknown experiment '{other}' (see DESIGN.md §6)"),
+    }
+}

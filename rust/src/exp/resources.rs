@@ -1,0 +1,222 @@
+//! Resource-efficiency experiments: Table 4 (compression cost), Table 7
+//! (PTQ vs low-rank binary QAT), Table 8 (vs vector quantization).
+
+use super::accuracy::{baseline_run, nanoquant_run, pipeline_cfg, ppl_of, prepare};
+use super::{zoo, Ctx};
+use crate::eval::zero_shot_suite;
+use crate::quant::baselines::qat::{qat_train, QatConfig};
+use crate::quant::baselines::vq::KmeansVq;
+use crate::quant::baselines::{quantize_model_with, WeightQuantizer};
+use crate::quant::pipeline::quantize;
+use crate::quant::InitMethod;
+use crate::util::json::Json;
+use crate::util::tables::{fmt_ppl, Table};
+use crate::util::timer::time_once;
+
+// ---------------------------------------------------------------------------
+// Table 4 — compression & resource efficiency on the l2-s teacher.
+// ---------------------------------------------------------------------------
+
+pub fn table4(ctx: &Ctx) {
+    let p = prepare(ctx, "l2", "s");
+    let mut table = Table::new(
+        "Table 4 — compression cost vs quality (l2-s teacher)",
+        &["Method", "Scheme", "Bits", "Size (MB)", "Data (tokens)", "Wall (s)", "PPL"],
+    );
+    let mut raw = Json::obj();
+    let calib_tokens = p.calib.len() * p.seq;
+
+    // Full precision reference.
+    let fp_bytes = crate::nn::param_count(&p.teacher.cfg) * 2;
+    table.row(vec![
+        "Full-Precision".into(),
+        "-".into(),
+        "16.00".into(),
+        format!("{:.2}", fp_bytes as f64 / 1e6),
+        "-".into(),
+        "-".into(),
+        fmt_ppl(ppl_of(&p, &p.teacher)),
+    ]);
+
+    // PTQ baselines (calibration-only data, measured wall-clock).
+    for (name, q) in super::accuracy::binary_ptq_baselines() {
+        if name == "RTN" || name == "XNOR" {
+            continue;
+        }
+        let ((ppl, bpw, bytes), secs) = time_once(|| baseline_run(&p, q.as_ref()));
+        table.row(vec![
+            name.to_string(),
+            "PTQ".into(),
+            format!("{bpw:.2}"),
+            format!("{:.2}", bytes as f64 / 1e6),
+            format!("{calib_tokens}"),
+            format!("{secs:.1}"),
+            fmt_ppl(ppl),
+        ]);
+        raw.insert(name, Json::obj().set("ppl", ppl).set("bpw", bpw).set("wall_s", secs));
+    }
+
+    // QAT baselines: far more data, far more compute (the paper's gap).
+    let tokens = zoo::train_tokens();
+    let qat_steps = if ctx.quick { 60 } else { 300 };
+    for (name, init) in [("LittleBit (QAT)", InitMethod::DualSvid), ("DBF (QAT)", InitMethod::DbfAdmm)] {
+        let qcfg = QatConfig {
+            bpw: 1.0,
+            init,
+            steps: qat_steps,
+            batch: 4,
+            seq: p.seq,
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let (qm, report) = qat_train(&p.teacher, &tokens, &qcfg);
+        let ppl = ppl_of(&p, &qm.params);
+        table.row(vec![
+            name.into(),
+            "QAT".into(),
+            format!("{:.2}", qm.effective_bpw()),
+            format!("{:.2}", qm.effective_bytes() as f64 / 1e6),
+            format!("{}", report.tokens_seen),
+            format!("{:.1}", report.wall_seconds),
+            fmt_ppl(ppl),
+        ]);
+        raw.insert(name, Json::obj().set("ppl", ppl).set("tokens", report.tokens_seen).set("wall_s", report.wall_seconds));
+    }
+
+    // NanoQuant: default calibration budget + a 2x-data variant.
+    for (label, extra) in [("NanoQuant", 1usize), ("NanoQuant (2x data)", 2)] {
+        let mut rng = crate::util::rng::Rng::new(ctx.seed ^ 0xDA7A);
+        let calib = crate::data::sample_sequences(&tokens, p.seq + 1, p.calib.len() * extra, &mut rng);
+        let cfg = pipeline_cfg(ctx, 1.0);
+        let (qm, report) = quantize(&p.teacher, &calib, p.seq, &cfg);
+        let ppl = ppl_of(&p, &qm.params);
+        table.row(vec![
+            label.into(),
+            "PTQ".into(),
+            format!("{:.2}", report.effective_bpw),
+            format!("{:.2}", report.effective_bytes as f64 / 1e6),
+            format!("{}", report.calib_tokens),
+            format!("{:.1}", report.wall_seconds),
+            fmt_ppl(ppl),
+        ]);
+        raw.insert(
+            label,
+            Json::obj()
+                .set("ppl", ppl)
+                .set("tokens", report.calib_tokens)
+                .set("wall_s", report.wall_seconds),
+        );
+    }
+    ctx.save("table4", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Table 7 — vs low-rank binary QAT at matched 1 bit.
+// ---------------------------------------------------------------------------
+
+pub fn table7(ctx: &Ctx) {
+    let mut table = Table::new(
+        "Table 7 — NanoQuant (PTQ) vs low-rank binary QAT at 1 bit",
+        &["Model", "Method", "Data (tokens)", "Wall (s)", "PPL", "Zero-shot"],
+    );
+    let mut raw = Json::obj();
+    let tokens = zoo::train_tokens();
+    let items = if ctx.quick { 15 } else { 30 };
+    let qat_steps = if ctx.quick { 60 } else { 300 };
+    for family in ["q3", "l2"] {
+        let p = prepare(ctx, family, "s");
+        for (name, init) in
+            [("LittleBit", InitMethod::DualSvid), ("DBF", InitMethod::DbfAdmm)]
+        {
+            let qcfg = QatConfig {
+                bpw: 1.0,
+                init,
+                steps: qat_steps,
+                batch: 4,
+                seq: p.seq,
+                seed: ctx.seed,
+                ..Default::default()
+            };
+            let (qm, report) = qat_train(&p.teacher, &tokens, &qcfg);
+            let ppl = ppl_of(&p, &qm.params);
+            let (_, zs) = zero_shot_suite(&qm.params, items, ctx.seed);
+            table.row(vec![
+                format!("{family}-s"),
+                name.into(),
+                format!("{}", report.tokens_seen),
+                format!("{:.1}", report.wall_seconds),
+                fmt_ppl(ppl),
+                format!("{zs:.2}"),
+            ]);
+            raw.insert(
+                &format!("{family}/{name}"),
+                Json::obj().set("ppl", ppl).set("zs", zs).set("tokens", report.tokens_seen),
+            );
+        }
+        let (qm, report, ppl) = nanoquant_run(ctx, &p, 1.0);
+        let (_, zs) = zero_shot_suite(&qm.params, items, ctx.seed);
+        table.row(vec![
+            format!("{family}-s"),
+            "NanoQuant".into(),
+            format!("{}", report.calib_tokens),
+            format!("{:.1}", report.wall_seconds),
+            fmt_ppl(ppl),
+            format!("{zs:.2}"),
+        ]);
+        raw.insert(
+            &format!("{family}/nanoquant"),
+            Json::obj().set("ppl", ppl).set("zs", zs).set("tokens", report.calib_tokens),
+        );
+    }
+    ctx.save("table7", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Table 8 — vs vector quantization at 2 / 1.5 / 1 bits.
+// ---------------------------------------------------------------------------
+
+pub fn table8(ctx: &Ctx) {
+    let p = prepare(ctx, "l2", "s");
+    let mut table = Table::new(
+        "Table 8 — NanoQuant vs vector quantization (l2-s)",
+        &["Target", "Method", "Bits", "Size (MB)", "PPL", "Zero-shot"],
+    );
+    let mut raw = Json::obj();
+    let items = if ctx.quick { 15 } else { 30 };
+
+    let mut vq_row = |target: &str, name: &str, q: &dyn WeightQuantizer, raw: &mut Json| {
+        let res = quantize_model_with(q, &p.teacher, &p.d_ins);
+        let ppl = ppl_of(&p, &res.params);
+        let (_, zs) = zero_shot_suite(&res.params, items, ctx.seed);
+        table.row(vec![
+            target.into(),
+            name.into(),
+            format!("{:.2}", res.effective_bpw),
+            format!("{:.2}", res.effective_bytes as f64 / 1e6),
+            fmt_ppl(ppl),
+            format!("{zs:.2}"),
+        ]);
+        raw.insert(name, Json::obj().set("ppl", ppl).set("zs", zs).set("bpw", res.effective_bpw));
+    };
+    vq_row("2-bit", "QTIP-like", &KmeansVq::qtip_like(ctx.seed), &mut raw);
+    vq_row("2-bit", "AQLM-like", &KmeansVq::aqlm_like(ctx.seed), &mut raw);
+    vq_row("2-bit", "AQLM+PV-like", &KmeansVq::aqlm_pv_like(ctx.seed), &mut raw);
+
+    for (target, bpw) in [("2-bit", 2.0), ("1.5-bit", 1.5), ("1-bit", 1.0)] {
+        let (qm, report, ppl) = nanoquant_run(ctx, &p, bpw);
+        let (_, zs) = zero_shot_suite(&qm.params, items, ctx.seed);
+        table.row(vec![
+            target.into(),
+            format!("NanoQuant@{bpw}"),
+            format!("{:.2}", report.effective_bpw),
+            format!("{:.2}", report.effective_bytes as f64 / 1e6),
+            fmt_ppl(ppl),
+            format!("{zs:.2}"),
+        ]);
+        raw.insert(
+            &format!("nanoquant@{bpw}"),
+            Json::obj().set("ppl", ppl).set("zs", zs).set("bpw", report.effective_bpw),
+        );
+    }
+    ctx.save("table8", &table, raw);
+}

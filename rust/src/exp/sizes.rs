@@ -1,0 +1,73 @@
+//! Tables 13–14 — model sizes and BPW bounds for the published models.
+//! Purely analytic (Appendix F formulas + public model dimensions), so
+//! this reproduction is *exact* up to the paper's own rounding.
+
+use super::Ctx;
+use crate::quant::bpw::{
+    arbllm_rc_bits, billm_bits, hbllm_col_bits, hbllm_row_bits, model_specs, nanoquant_bits,
+    stbllm_bits,
+};
+use crate::quant::rank_for_bpw;
+use crate::util::json::Json;
+use crate::util::tables::Table;
+
+const C: usize = 50; // salient-column cap of the open-source baselines
+const K: usize = 128; // scale block size
+
+pub fn table13_14(ctx: &Ctx) {
+    let mut t13 = Table::new(
+        "Table 13 — quantized model sizes (GB)",
+        &["Model", "BF16", "NanoQuant@1", "BiLLM", "STBLLM4:8", "STBLLM6:8", "ARB-LLM_RC", "HBLLM_row", "HBLLM_col"],
+    );
+    let mut t14 = Table::new(
+        "Table 14 — effective bits per weight (decoder linears)",
+        &["Model", "NanoQuant@1", "BiLLM", "STBLLM4:8", "STBLLM6:8", "ARB-LLM_RC", "HBLLM_row", "HBLLM_col"],
+    );
+    let mut raw = Json::obj();
+    for spec in model_specs() {
+        let nq = |n: usize, m: usize| nanoquant_bits(n, m, rank_for_bpw(n, m, 1.0));
+        let billm = |n: usize, m: usize| billm_bits(n, m, C, K);
+        let stb48 = |n: usize, m: usize| stbllm_bits(n, m, C, K, 4, 8);
+        let stb68 = |n: usize, m: usize| stbllm_bits(n, m, C, K, 6, 8);
+        let arb = |n: usize, m: usize| arbllm_rc_bits(n, m, C, K);
+        let hbr = |n: usize, m: usize| hbllm_row_bits(n, m, C, K);
+        let hbc = |n: usize, m: usize| hbllm_col_bits(n, m, K);
+
+        let gb = |f: &dyn Fn(usize, usize) -> usize| spec.quantized_bytes(f) / 1e9;
+        t13.row(vec![
+            spec.name.to_string(),
+            format!("{:.2}", spec.bf16_bytes() / 1e9),
+            format!("{:.2}", gb(&nq)),
+            format!("{:.2}", gb(&billm)),
+            format!("{:.2}", gb(&stb48)),
+            format!("{:.2}", gb(&stb68)),
+            format!("{:.2}", gb(&arb)),
+            format!("{:.2}", gb(&hbr)),
+            format!("{:.2}", gb(&hbc)),
+        ]);
+        let bpw = |f: &dyn Fn(usize, usize) -> usize| spec.bpw(f);
+        t14.row(vec![
+            spec.name.to_string(),
+            format!("{:.2}", bpw(&nq)),
+            format!("{:.2}", bpw(&billm)),
+            format!("{:.2}", bpw(&stb48)),
+            format!("{:.2}", bpw(&stb68)),
+            format!("{:.2}", bpw(&arb)),
+            format!("{:.2}", bpw(&hbr)),
+            format!("{:.2}", bpw(&hbc)),
+        ]);
+        raw.insert(
+            spec.name,
+            Json::obj()
+                .set("bf16_gb", spec.bf16_bytes() / 1e9)
+                .set("nanoquant_gb", gb(&nq))
+                .set("nanoquant_bpw", bpw(&nq))
+                .set("billm_bpw", bpw(&billm))
+                .set("arb_bpw", bpw(&arb))
+                .set("hbllm_row_bpw", bpw(&hbr)),
+        );
+    }
+    t14.print();
+    t14.write(&format!("{}/table14.md", ctx.results)).ok();
+    ctx.save("table13", &t13, raw);
+}

@@ -1,0 +1,111 @@
+//! Teacher model zoo: the pretrained-checkpoint substitute.
+//!
+//! Teachers are trained once on the synthetic corpus and cached under
+//! `checkpoints/`; every experiment loads from the cache so results are
+//! reproducible and experiments are independently runnable.
+
+use crate::data::{gen_corpus, tokenize, CorpusKind};
+use crate::nn::checkpoint::{load_model, save_model};
+use crate::nn::model::ModelParams;
+use crate::nn::trainer::train;
+use crate::nn::{family_config, param_count};
+use crate::util::rng::Rng;
+
+/// Models used across the experiment suite (family axis of Table 2 + the
+/// size axes of Fig. 6 / Table 12).
+pub const ZOO: &[(&str, &str)] = &[
+    ("l2", "xs"),
+    ("l2", "s"),
+    ("l2", "m"),
+    ("l3", "s"),
+    ("g3", "s"),
+    ("q3", "xs"),
+    ("q3", "s"),
+    ("q3", "m"),
+    ("r1", "s"),
+];
+
+/// Families evaluated in the Table 2 / Table 3 grids.
+pub const FAMILIES: &[&str] = &["l2", "l3", "g3", "q3", "r1"];
+
+pub fn ckpt_path(dir: &str, family: &str, size: &str) -> String {
+    format!("{dir}/{family}-{size}.bin")
+}
+
+/// Training budget per size (Adam steps).
+fn steps_for(size: &str) -> usize {
+    match size {
+        "xs" => 300,
+        "s" => 400,
+        _ => 400,
+    }
+}
+
+/// Shared training corpus (SynthText; WebMix is used by the D.2 ablation).
+pub fn train_tokens() -> Vec<u16> {
+    tokenize(&gen_corpus(CorpusKind::SynthText, 1_500_000, 1234))
+}
+
+/// Held-out eval stream (disjoint seed).
+pub fn eval_tokens(kind: CorpusKind) -> Vec<u16> {
+    tokenize(&gen_corpus(kind, 200_000, 777))
+}
+
+/// Load a cached teacher or train and cache it.
+pub fn teacher(dir: &str, family: &str, size: &str, tokens: &[u16], verbose: bool) -> ModelParams {
+    let path = ckpt_path(dir, family, size);
+    if std::path::Path::new(&path).exists() {
+        if let Ok(params) = load_model(&path) {
+            return params;
+        }
+    }
+    let cfg = family_config(family, size);
+    if verbose {
+        eprintln!(
+            "[zoo] training {family}-{size} ({} params, {} steps)…",
+            param_count(&cfg),
+            steps_for(size)
+        );
+    }
+    let mut rng = Rng::new(0x2EE7 ^ fxhash(family) ^ fxhash(size));
+    let mut params = ModelParams::init(&cfg, &mut rng);
+    train(&mut params, tokens, steps_for(size), 6, 48, 3e-3, 99, verbose);
+    std::fs::create_dir_all(dir).ok();
+    save_model(&path, &params).expect("save checkpoint");
+    params
+}
+
+/// Train every zoo model (idempotent).
+pub fn build_zoo(dir: &str, verbose: bool) {
+    let tokens = train_tokens();
+    for (family, size) in ZOO {
+        let t0 = std::time::Instant::now();
+        let _ = teacher(dir, family, size, &tokens, verbose);
+        if verbose {
+            eprintln!("[zoo] {family}-{size} ready ({:.1}s)", t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkpoint_cache_roundtrip() {
+        let dir = "/tmp/nanoquant_zoo_test";
+        std::fs::remove_dir_all(dir).ok();
+        let tokens: Vec<u16> = train_tokens()[..100_000].to_vec();
+        // Train a throwaway xs teacher with a tiny budget by calling teacher
+        // directly (steps_for(xs)=300 is fine in release tests).
+        let a = teacher(dir, "l2", "xs", &tokens, false);
+        assert!(std::path::Path::new(&ckpt_path(dir, "l2", "xs")).exists());
+        let b = teacher(dir, "l2", "xs", &tokens, false);
+        assert_eq!(a.embed, b.embed, "second call must load the cache");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

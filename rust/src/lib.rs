@@ -1,0 +1,31 @@
+//! # NanoQuant
+//!
+//! A production-oriented reproduction of *"NanoQuant: Efficient Sub-1-Bit
+//! Quantization of Large Language Models"* (ICML 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the coordinator: the full post-training
+//!   quantization pipeline (robust Hessian preconditioning, LB-ADMM latent
+//!   binary factorization, magnitude balancing, STE block refinement,
+//!   scale-only KL model reconstruction), every baseline quantizer the paper
+//!   compares against, a serving runtime with a dynamic batcher and KV-cache
+//!   manager, and the experiment harness that regenerates every table and
+//!   figure of the paper.
+//! - **Layer 2 (python/compile/model.py)** — the JAX transformer graphs,
+//!   AOT-lowered once to HLO text and executed from Rust via PJRT.
+//! - **Layer 1 (python/compile/kernels/)** — Pallas packed binary low-rank
+//!   GEMV/GEMM kernels, lowered into the L2 graphs.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod linalg;
+pub mod nn;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;

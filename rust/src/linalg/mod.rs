@@ -1,0 +1,306 @@
+//! Dense linear algebra needed by the quantization pipeline:
+//! Cholesky factorization + triangular solves (the LB-ADMM factor updates,
+//! Eq. 5 of the paper), and a power-iteration truncated SVD (used by the
+//! Dual-SVID baseline initializer of LittleBit).
+
+use crate::tensor::{matmul, matmul_at_b, Tensor};
+use crate::util::rng::Rng;
+
+/// Cholesky factorization A = L L^T of a symmetric positive-definite matrix.
+///
+/// Returns lower-triangular L. The caller guarantees SPD; the LB-ADMM
+/// systems are `G + (ρ+λ)I` which Appendix B proves SPD for ρ > 0. A small
+/// stabilizing jitter is retried automatically if numerical round-off makes
+/// a pivot non-positive (the "stabilized Cholesky" of §3.2).
+pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "cholesky needs a square matrix");
+    for attempt in 0..3 {
+        let jitter = if attempt == 0 {
+            0.0
+        } else {
+            // Scale jitter to the matrix magnitude.
+            let diag_mean =
+                (0..n).map(|i| a.at2(i, i) as f64).sum::<f64>() / n as f64;
+            diag_mean.abs().max(1e-12) * 1e-6 * 10f64.powi(attempt - 1)
+        };
+        if let Some(l) = try_cholesky(a, jitter as f32) {
+            return Ok(l);
+        }
+    }
+    Err("cholesky: matrix is not positive definite (after jitter retries)".into())
+}
+
+fn try_cholesky(a: &Tensor, jitter: f32) -> Option<Tensor> {
+    let n = a.rows();
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            // Accumulate in f64 for stability.
+            let mut s = a.at2(i, j) as f64;
+            if i == j {
+                s += jitter as f64;
+            }
+            for k in 0..j {
+                s -= l.at2(i, k) as f64 * l.at2(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                *l.at2_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at2_mut(i, j) = (s / l.at2(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (lower triangular, forward substitution) for matrix RHS.
+/// b: [n, m] -> y: [n, m].
+pub fn solve_lower(l: &Tensor, b: &Tensor) -> Tensor {
+    let n = l.rows();
+    assert_eq!(b.rows(), n);
+    let m = b.cols();
+    let mut y = b.clone();
+    for i in 0..n {
+        // y[i,:] = (b[i,:] - sum_k<i L[i,k] y[k,:]) / L[i,i]
+        for k in 0..i {
+            let lik = l.at2(i, k);
+            if lik != 0.0 {
+                let (head, tail) = y.data.split_at_mut(i * m);
+                let yk = &head[k * m..k * m + m];
+                let yi = &mut tail[..m];
+                for (yi_e, yk_e) in yi.iter_mut().zip(yk.iter()) {
+                    *yi_e -= lik * *yk_e;
+                }
+            }
+        }
+        let inv = 1.0 / l.at2(i, i);
+        for x in y.row_mut(i) {
+            *x *= inv;
+        }
+    }
+    y
+}
+
+/// Solve L^T x = y (upper triangular via the transpose of L, back substitution).
+pub fn solve_upper_t(l: &Tensor, y: &Tensor) -> Tensor {
+    let n = l.rows();
+    assert_eq!(y.rows(), n);
+    let m = y.cols();
+    let mut x = y.clone();
+    for i in (0..n).rev() {
+        for k in i + 1..n {
+            let lki = l.at2(k, i); // (L^T)[i,k] = L[k,i]
+            if lki != 0.0 {
+                let (head, tail) = x.data.split_at_mut(k * m);
+                let xi = &mut head[i * m..i * m + m];
+                let xk = &tail[..m];
+                for (xi_e, xk_e) in xi.iter_mut().zip(xk.iter()) {
+                    *xi_e -= lki * *xk_e;
+                }
+            }
+        }
+        let inv = 1.0 / l.at2(i, i);
+        for v in x.row_mut(i) {
+            *v *= inv;
+        }
+    }
+    x
+}
+
+/// Solve A X = B with SPD A via Cholesky (A = L L^T).
+pub fn solve_spd(a: &Tensor, b: &Tensor) -> Result<Tensor, String> {
+    let l = cholesky(a)?;
+    Ok(solve_upper_t(&l, &solve_lower(&l, b)))
+}
+
+/// Gram matrix G = M^T M (r x r for M: [n, r]).
+pub fn gram(m: &Tensor) -> Tensor {
+    matmul_at_b(m, m)
+}
+
+/// Truncated SVD via subspace (block power) iteration:
+/// A ≈ U diag(s) V^T with `k` components. Deterministic given `seed`.
+pub fn svd_truncated(a: &Tensor, k: usize, iters: usize, seed: u64) -> (Tensor, Vec<f32>, Tensor) {
+    let (m, n) = (a.rows(), a.cols());
+    let k = k.min(m.min(n));
+    let mut rng = Rng::new(seed);
+    // Subspace iteration on A^T A via alternating projections with QR.
+    let mut v = Tensor::randn(&[n, k], 1.0, &mut rng);
+    qr_orthonormalize(&mut v);
+    for _ in 0..iters.max(2) {
+        let mut u_it = matmul(a, &v); // [m, k]
+        qr_orthonormalize(&mut u_it);
+        v = matmul_at_b(a, &u_it); // [n, k]
+        qr_orthonormalize(&mut v);
+    }
+    // Singular values from column norms of A V (V has orthonormal columns).
+    let mut u = matmul(a, &v);
+    // Column norms of AV are the singular values; normalize U.
+    let mut s = vec![0.0f32; k];
+    for j in 0..k {
+        let mut norm = 0.0f64;
+        for i in 0..m {
+            norm += (u.at2(i, j) as f64).powi(2);
+        }
+        let norm = norm.sqrt();
+        s[j] = norm as f32;
+        let inv = if norm > 1e-30 { 1.0 / norm } else { 0.0 };
+        for i in 0..m {
+            *u.at2_mut(i, j) = (u.at2(i, j) as f64 * inv) as f32;
+        }
+    }
+    // Sort components by descending singular value.
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&i, &j| s[j].partial_cmp(&s[i]).unwrap());
+    let u_sorted = reorder_cols(&u, &order);
+    let v_sorted = reorder_cols(&v, &order);
+    let s_sorted: Vec<f32> = order.iter().map(|&i| s[i]).collect();
+    (u_sorted, s_sorted, v_sorted)
+}
+
+fn reorder_cols(t: &Tensor, order: &[usize]) -> Tensor {
+    let m = t.rows();
+    let mut out = Tensor::zeros(&[m, order.len()]);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for i in 0..m {
+            *out.at2_mut(i, newj) = t.at2(i, oldj);
+        }
+    }
+    out
+}
+
+/// In-place modified Gram-Schmidt orthonormalization of columns.
+pub fn qr_orthonormalize(t: &mut Tensor) {
+    let (m, k) = (t.rows(), t.cols());
+    for j in 0..k {
+        // Subtract projections on previous columns.
+        for p in 0..j {
+            let mut dot = 0.0f64;
+            for i in 0..m {
+                dot += t.at2(i, p) as f64 * t.at2(i, j) as f64;
+            }
+            for i in 0..m {
+                *t.at2_mut(i, j) = (t.at2(i, j) as f64 - dot * t.at2(i, p) as f64) as f32;
+            }
+        }
+        let mut norm = 0.0f64;
+        for i in 0..m {
+            norm += (t.at2(i, j) as f64).powi(2);
+        }
+        let norm = norm.sqrt();
+        if norm > 1e-20 {
+            let inv = 1.0 / norm;
+            for i in 0..m {
+                *t.at2_mut(i, j) = (t.at2(i, j) as f64 * inv) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul_a_bt;
+
+    fn random_spd(n: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let m = Tensor::randn(&[n, n], 1.0, &mut rng);
+        let mut g = matmul_at_b(&m, &m);
+        for i in 0..n {
+            *g.at2_mut(i, i) += 0.5;
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 0);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul_a_bt(&l, &l);
+        assert!(rec.rel_error(&a) < 1e-4, "err={}", rec.rel_error(&a));
+        // L is lower triangular.
+        for i in 0..12 {
+            for j in i + 1..12 {
+                assert_eq!(l.at2(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::new(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_solve_matches_direct() {
+        let a = random_spd(9, 1);
+        let mut rng = Rng::new(2);
+        let x_true = Tensor::randn(&[9, 4], 1.0, &mut rng);
+        let b = matmul(&a, &x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        assert!(x.rel_error(&x_true) < 1e-3, "err={}", x.rel_error(&x_true));
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let a = random_spd(7, 3);
+        let l = cholesky(&a).unwrap();
+        let mut rng = Rng::new(4);
+        let y_true = Tensor::randn(&[7, 3], 1.0, &mut rng);
+        let b = matmul(&l, &y_true);
+        let y = solve_lower(&l, &b);
+        assert!(y.rel_error(&y_true) < 1e-4);
+        let c = matmul(&l.t(), &y_true);
+        let y2 = solve_upper_t(&l, &c);
+        assert!(y2.rel_error(&y_true) < 1e-4);
+    }
+
+    #[test]
+    fn svd_reconstructs_low_rank_matrix() {
+        // Build an exactly rank-3 matrix and recover it.
+        let mut rng = Rng::new(5);
+        let u = Tensor::randn(&[20, 3], 1.0, &mut rng);
+        let v = Tensor::randn(&[15, 3], 1.0, &mut rng);
+        let a = matmul_a_bt(&u, &v);
+        let (us, s, vs) = svd_truncated(&a, 3, 30, 0);
+        let mut rec = Tensor::zeros(&[20, 15]);
+        for c in 0..3 {
+            for i in 0..20 {
+                for j in 0..15 {
+                    *rec.at2_mut(i, j) += s[c] * us.at2(i, c) * vs.at2(j, c);
+                }
+            }
+        }
+        assert!(rec.rel_error(&a) < 1e-3, "err={}", rec.rel_error(&a));
+        // Singular values descending.
+        assert!(s[0] >= s[1] && s[1] >= s[2]);
+    }
+
+    #[test]
+    fn svd_rank1_matches_outer_product() {
+        let u = Tensor::new(&[3, 1], vec![1.0, 2.0, 2.0]); // norm 3
+        let v = Tensor::new(&[2, 1], vec![3.0, 4.0]); // norm 5
+        let a = matmul_a_bt(&u, &v);
+        let (_, s, _) = svd_truncated(&a, 1, 20, 1);
+        assert!((s[0] - 15.0).abs() < 1e-3, "s0={}", s[0]);
+    }
+
+    #[test]
+    fn orthonormalize_gives_orthonormal_columns() {
+        let mut rng = Rng::new(6);
+        let mut t = Tensor::randn(&[30, 5], 1.0, &mut rng);
+        qr_orthonormalize(&mut t);
+        let g = gram(&t);
+        for i in 0..5 {
+            for j in 0..5 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at2(i, j) - expect).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! NanoQuant CLI — the L3 entrypoint.
+//!
+//! Subcommands:
+//!   zoo                         train/cache the teacher model zoo
+//!   train   --family --size     train one teacher
+//!   quantize --family --size --bpw ...   run Algorithm 1, save checkpoint stats
+//!   eval    --family --size [--bpw]      perplexity + zero-shot
+//!   serve   --family --size --engine     demo serving run with metrics
+//!   exp <id>                    regenerate a paper table/figure (or `all`)
+//!   artifacts-check             load every AOT artifact via PJRT
+//!   size    --bpw               Appendix-F model-size calculator
+
+use nanoquant::data::{sample_sequences, CorpusKind};
+use nanoquant::eval::{perplexity, zero_shot_suite};
+use nanoquant::exp::{self, zoo, Ctx};
+use nanoquant::quant::{self, InitMethod, PipelineConfig};
+use nanoquant::serve::{Request, Server, ServerConfig};
+use nanoquant::util::cli::Args;
+use nanoquant::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "zoo" => zoo::build_zoo(args.get_or("checkpoints", "checkpoints"), true),
+        "train" => {
+            let tokens = zoo::train_tokens();
+            zoo::teacher(
+                args.get_or("checkpoints", "checkpoints"),
+                args.get_or("family", "l2"),
+                args.get_or("size", "s"),
+                &tokens,
+                true,
+            );
+        }
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "exp" => {
+            let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+            exp::run(id, &Ctx::from_args(&args));
+        }
+        "artifacts-check" => cmd_artifacts_check(&args),
+        "size" => cmd_size(&args),
+        _ => {
+            eprintln!(
+                "usage: nanoquant <zoo|train|quantize|eval|serve|exp|artifacts-check|size> [--flags]\n\
+                 see README.md for details"
+            );
+        }
+    }
+}
+
+fn cmd_quantize(args: &Args) {
+    let family = args.get_or("family", "l2");
+    let size = args.get_or("size", "s");
+    let bpw = args.get_f64("bpw", 1.0);
+    let tokens = zoo::train_tokens();
+    let teacher = zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+    let seq = args.get_usize("seq", 48);
+    let n_calib = args.get_usize("calib", 24);
+    let mut rng = Rng::new(args.get_u64("seed", 0));
+    let calib = sample_sequences(&tokens, seq + 1, n_calib, &mut rng);
+    let pcfg = PipelineConfig {
+        bpw,
+        init: InitMethod::parse(args.get_or("init", "lb-admm")),
+        verbose: true,
+        ..Default::default()
+    };
+    let (qm, report) = quant::quantize(&teacher, &calib, seq, &pcfg);
+    println!(
+        "quantized {family}-{size}: bpw={:.3} size={:.2} MB wall={:.1}s calib_tokens={}",
+        report.effective_bpw,
+        report.effective_bytes as f64 / 1e6,
+        report.wall_seconds,
+        report.calib_tokens,
+    );
+    let eval_toks = zoo::eval_tokens(CorpusKind::SynthText);
+    let ppl_t = perplexity(&teacher, &eval_toks, seq, 16);
+    let ppl_q = perplexity(&qm.params, &eval_toks, seq, 16);
+    println!("teacher ppl={ppl_t:.2}  quantized ppl={ppl_q:.2}");
+}
+
+fn cmd_eval(args: &Args) {
+    let family = args.get_or("family", "l2");
+    let size = args.get_or("size", "s");
+    let tokens = zoo::train_tokens();
+    let teacher = zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+    let eval_toks = zoo::eval_tokens(CorpusKind::SynthText);
+    let ppl = perplexity(&teacher, &eval_toks, 48, 16);
+    let (per_task, avg) = zero_shot_suite(&teacher, 40, 0);
+    println!("{family}-{size}: ppl={ppl:.2}  zero-shot avg={avg:.2}");
+    for (name, acc) in per_task {
+        println!("  {name:<8} {acc:.2}");
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let family = args.get_or("family", "l2");
+    let size = args.get_or("size", "s");
+    let tokens = zoo::train_tokens();
+    let teacher = zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+    let dm = nanoquant::nn::decode::dense_decode_model(&teacher);
+    let mut server = Server::new(
+        dm,
+        ServerConfig { max_batch: args.get_usize("max-batch", 4), seed: 0 },
+    );
+    let prompt = args.get_or("prompt", "the robin is a kind of");
+    let reqs: Vec<Request> = (0..args.get_usize("requests", 4))
+        .map(|i| Request {
+            id: i as u64,
+            prompt: nanoquant::data::tokenize(prompt),
+            max_new: args.get_usize("max-new", 32),
+            temperature: args.get_f32("temperature", 0.8),
+            top_k: args.get_usize("top-k", 32),
+        })
+        .collect();
+    let resps = server.run(reqs);
+    for r in &resps {
+        println!("[{}] ttft={:.1}ms  {:?}", r.id, r.ttft_s * 1e3, r.text);
+    }
+    println!(
+        "throughput: {:.1} tok/s  peak slots: {}  weights: {:.2} MB",
+        server.metrics.tokens_per_s,
+        server.metrics.peak_active_slots,
+        server.metrics.weight_bytes as f64 / 1e6
+    );
+}
+
+fn cmd_artifacts_check(args: &Args) {
+    let dir = args.get_or("artifacts", "artifacts");
+    let mut rt = nanoquant::runtime::Runtime::new(dir).expect("runtime");
+    println!("platform: {}", rt.platform());
+    let names = rt.available();
+    for name in &names {
+        match rt.load(name) {
+            Ok(()) => println!("  ok   {name}"),
+            Err(e) => println!("  FAIL {name}: {e}"),
+        }
+    }
+    println!("{} artifacts checked", names.len());
+}
+
+fn cmd_size(args: &Args) {
+    let bpw = args.get_f64("bpw", 1.0);
+    println!("Appendix-F model sizes at NanoQuant bpw={bpw} (GB):");
+    for spec in nanoquant::quant::bpw::model_specs() {
+        println!(
+            "  {:<7} bf16={:>7.2}  nanoquant={:>6.2}  ({:.1}x)",
+            spec.name,
+            spec.bf16_bytes() / 1e9,
+            spec.nanoquant_bytes(bpw) / 1e9,
+            spec.bf16_bytes() / spec.nanoquant_bytes(bpw)
+        );
+    }
+}

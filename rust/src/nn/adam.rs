@@ -1,0 +1,91 @@
+//! Adam optimizer over flat f32 slices, with cosine LR scheduling — used by
+//! the teacher trainer and every tuning stage of the quantization pipeline
+//! (error-propagation mitigation, STE refinement, scale-only reconstruction),
+//! matching the paper's Appendix C setup (Adam + cosine schedule, 8 epochs).
+
+/// Adam state for one parameter tensor.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub t: u64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// One update: `param -= lr_scale * lr * m_hat / (sqrt(v_hat) + eps)`.
+    pub fn step(&mut self, param: &mut [f32], grad: &[f32], lr_scale: f32) {
+        assert_eq!(param.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        let lr = self.lr * lr_scale;
+        for i in 0..param.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mh = self.m[i] / b1t;
+            let vh = self.v[i] / b2t;
+            param[i] -= lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Cosine learning-rate multiplier over `total` steps (1.0 -> ~0.0).
+pub fn cosine_lr(step: u64, total: u64) -> f32 {
+    if total == 0 {
+        return 1.0;
+    }
+    let x = (step.min(total) as f32) / total as f32;
+    0.5 * (1.0 + (std::f32::consts::PI * x).cos())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize f(p) = sum (p - target)^2
+        let target = [3.0f32, -1.5, 0.25];
+        let mut p = vec![0.0f32; 3];
+        let mut opt = Adam::new(3, 0.05);
+        for _ in 0..2000 {
+            let grad: Vec<f32> = p.iter().zip(target.iter()).map(|(&x, &t)| 2.0 * (x - t)).collect();
+            opt.step(&mut p, &grad, 1.0);
+        }
+        for (x, t) in p.iter().zip(target.iter()) {
+            assert!((x - t).abs() < 1e-2, "{x} vs {t}");
+        }
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        assert!((cosine_lr(0, 100) - 1.0).abs() < 1e-6);
+        assert!(cosine_lr(100, 100) < 1e-6);
+        assert!(cosine_lr(50, 100) > 0.45 && cosine_lr(50, 100) < 0.55);
+        // Monotone decreasing.
+        let mut prev = f32::INFINITY;
+        for s in 0..=10 {
+            let v = cosine_lr(s * 10, 100);
+            assert!(v <= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn zero_grad_is_noop_after_warm_state() {
+        let mut p = vec![1.0f32, 2.0];
+        let mut opt = Adam::new(2, 0.1);
+        opt.step(&mut p, &[0.0, 0.0], 1.0);
+        assert_eq!(p, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,497 @@
+//! Hand-written reverse-mode gradients for the transformer.
+//!
+//! Validated against central finite differences in the tests below and
+//! against JAX in `rust/tests/runtime_parity.rs`. Gradients flow through
+//! RMSNorm, RoPE (orthogonal, so the adjoint is the inverse rotation),
+//! causal softmax attention (with GQA accumulation), SwiGLU, residuals,
+//! the embedding and the (possibly tied) head.
+//!
+//! The backward pass also feeds the calibration statistics: per-linear
+//! input activation second moments (for D_in) and output-gradient second
+//! moments (for D_out), the K-FAC diagonals of paper Eq. (2).
+
+use super::model::{
+    rope_inplace, silu, silu_grad, BlockCache, BlockWeights, LayerKind, ModelCache, ModelConfig,
+    ModelParams,
+};
+use super::stats::StatsCollector;
+use crate::nn::LayerId;
+use crate::tensor::{matmul, matmul_at_b, Tensor};
+
+/// Gradients of one block's weights.
+#[derive(Clone, Debug)]
+pub struct BlockGrads {
+    pub ln1: Vec<f32>,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ln2: Vec<f32>,
+    pub wg: Tensor,
+    pub wu: Tensor,
+    pub wd: Tensor,
+}
+
+impl BlockGrads {
+    pub fn zeros_like(w: &BlockWeights) -> BlockGrads {
+        BlockGrads {
+            ln1: vec![0.0; w.ln1.len()],
+            wq: Tensor::zeros(&w.wq.shape),
+            wk: Tensor::zeros(&w.wk.shape),
+            wv: Tensor::zeros(&w.wv.shape),
+            wo: Tensor::zeros(&w.wo.shape),
+            ln2: vec![0.0; w.ln2.len()],
+            wg: Tensor::zeros(&w.wg.shape),
+            wu: Tensor::zeros(&w.wu.shape),
+            wd: Tensor::zeros(&w.wd.shape),
+        }
+    }
+
+    pub fn linear(&self, kind: LayerKind) -> &Tensor {
+        match kind {
+            LayerKind::Q => &self.wq,
+            LayerKind::K => &self.wk,
+            LayerKind::V => &self.wv,
+            LayerKind::O => &self.wo,
+            LayerKind::Gate => &self.wg,
+            LayerKind::Up => &self.wu,
+            LayerKind::Down => &self.wd,
+        }
+    }
+}
+
+/// Full-model gradients.
+pub struct ModelGrads {
+    pub embed: Tensor,
+    pub blocks: Vec<BlockGrads>,
+    pub ln_f: Vec<f32>,
+    pub head: Option<Tensor>,
+}
+
+/// RMSNorm backward.
+/// Inputs: x (pre-norm), w, rstd (cached), dy. Returns (dx, dw).
+pub fn rmsnorm_backward(
+    x: &Tensor,
+    w: &[f32],
+    rstd: &[f32],
+    dy: &Tensor,
+) -> (Tensor, Vec<f32>) {
+    let (n, d) = (x.rows(), x.cols());
+    let mut dx = Tensor::zeros(&[n, d]);
+    let mut dw = vec![0.0f32; d];
+    for i in 0..n {
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        let r = rstd[i];
+        // dw_j += dy_j * x_j * r
+        for j in 0..d {
+            dw[j] += dyr[j] * xr[j] * r;
+        }
+        // dxhat_j = dy_j * w_j ; dx = r * dxhat - x * r^3/d * (dxhat . x)
+        let mut dot = 0.0f64;
+        for j in 0..d {
+            dot += (dyr[j] * w[j]) as f64 * xr[j] as f64;
+        }
+        let coef = (dot * (r as f64).powi(3) / d as f64) as f32;
+        let dxr = dx.row_mut(i);
+        for j in 0..d {
+            dxr[j] = dyr[j] * w[j] * r - xr[j] * coef;
+        }
+    }
+    (dx, dw)
+}
+
+/// Backward of one block. `dy` is the gradient wrt the block output.
+/// Returns (dx, weight grads). If `stats` is given, record the K-FAC
+/// diagonals for each linear in this block.
+pub fn block_backward(
+    cfg: &ModelConfig,
+    w: &BlockWeights,
+    cache: &BlockCache,
+    dy: &Tensor,
+    block_idx: usize,
+    mut stats: Option<&mut StatsCollector>,
+) -> (Tensor, BlockGrads) {
+    let (batch, seq) = (cache.batch, cache.seq);
+    let _d = cfg.d_model;
+    let hd = cfg.head_dim();
+    let groups = cfg.gqa_groups();
+
+    // ---- MLP backward ----
+    // x_out = x_mid + down(act); down = act @ wd^T
+    let d_down = dy; // gradient into the down-proj output
+    let d_act = matmul(d_down, &w.wd); // [BS, F]
+    let g_wd = matmul_at_b(d_down, &cache.act); // [F_out? no: [d, F]] -> see below
+    // wd: [d, F]; y = act @ wd^T -> dW = dy^T @ act : [d, F]. matmul_at_b(dy, act) = dy^T @ act.
+    // act = silu(gate) * up
+    let mut d_gate = Tensor::zeros(&cache.gate.shape);
+    let mut d_up = Tensor::zeros(&cache.up.shape);
+    for idx in 0..cache.gate.data.len() {
+        let g = cache.gate.data[idx];
+        let u = cache.up.data[idx];
+        let da = d_act.data[idx];
+        d_gate.data[idx] = da * u * silu_grad(g);
+        d_up.data[idx] = da * silu(g);
+    }
+    let g_wg = matmul_at_b(&d_gate, &cache.h2);
+    let g_wu = matmul_at_b(&d_up, &cache.h2);
+    let mut d_h2 = matmul(&d_gate, &w.wg);
+    d_h2.add_inplace(&matmul(&d_up, &w.wu));
+    let (d_xmid_from_norm, g_ln2) = rmsnorm_backward(&cache.x_mid, &w.ln2, &cache.rstd2, &d_h2);
+    // Residual: d_xmid = dy + d(through norm/MLP)
+    let mut d_xmid = dy.clone();
+    d_xmid.add_inplace(&d_xmid_from_norm);
+
+    if let Some(s) = stats.as_deref_mut() {
+        s.record(LayerId { block: block_idx, kind: LayerKind::Gate }, &cache.h2, &d_gate);
+        s.record(LayerId { block: block_idx, kind: LayerKind::Up }, &cache.h2, &d_up);
+        s.record(LayerId { block: block_idx, kind: LayerKind::Down }, &cache.act, d_down);
+    }
+
+    // ---- Attention backward ----
+    // x_mid = x_in + att @ wo^T
+    let d_o = &d_xmid; // gradient into o-proj output
+    let d_att = matmul(d_o, &w.wo); // [BS, H*hd]
+    let g_wo = matmul_at_b(d_o, &cache.att); // [d, H*hd]
+
+    // Per (b, h): out[s] = sum_t p[s,t] v[t]; scores -> softmax backward.
+    let kvdim = cfg.n_kv_heads * hd;
+    let mut d_q = Tensor::zeros(&[batch * seq, cfg.n_heads * hd]);
+    let mut d_k = Tensor::zeros(&[batch * seq, kvdim]);
+    let mut d_v = Tensor::zeros(&[batch * seq, kvdim]);
+    let scale = 1.0 / (hd as f32).sqrt();
+    for b in 0..batch {
+        for h in 0..cfg.n_heads {
+            let g = h / groups;
+            let p = &cache.probs[b * cfg.n_heads + h];
+            // d_p[s,t] = d_att[s,h] . v[t,g]
+            // d_scores via softmax: ds[s,t] = p[s,t] * (d_p[s,t] - sum_u p[s,u] d_p[s,u])
+            for s in 0..seq {
+                let da = &d_att.row(b * seq + s)[h * hd..(h + 1) * hd];
+                // d_v accumulation and d_p
+                let mut dp = vec![0.0f32; s + 1];
+                for t in 0..=s {
+                    let vrow = &cache.v.row(b * seq + t)[g * hd..(g + 1) * hd];
+                    dp[t] = crate::tensor::dot(da, vrow);
+                    // d_v[t] += p[s,t] * da
+                    let pst = p.at2(s, t);
+                    if pst != 0.0 {
+                        let dvrow = &mut d_v.row_mut(b * seq + t)[g * hd..(g + 1) * hd];
+                        for (dv, &a) in dvrow.iter_mut().zip(da.iter()) {
+                            *dv += pst * a;
+                        }
+                    }
+                }
+                let mut inner = 0.0f64;
+                for t in 0..=s {
+                    inner += (p.at2(s, t) * dp[t]) as f64;
+                }
+                for t in 0..=s {
+                    let ds = p.at2(s, t) * (dp[t] - inner as f32) * scale;
+                    if ds != 0.0 {
+                        // scores[s,t] = q[s,h] . k[t,g] * scale
+                        let krow = &cache.k.row(b * seq + t)[g * hd..(g + 1) * hd];
+                        let dqrow = &mut d_q.row_mut(b * seq + s)[h * hd..(h + 1) * hd];
+                        for (dq, &kk) in dqrow.iter_mut().zip(krow.iter()) {
+                            *dq += ds * kk;
+                        }
+                        let qrow = &cache.q.row(b * seq + s)[h * hd..(h + 1) * hd];
+                        let dkrow = &mut d_k.row_mut(b * seq + t)[g * hd..(g + 1) * hd];
+                        for (dk, &qq) in dkrow.iter_mut().zip(qrow.iter()) {
+                            *dk += ds * qq;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // RoPE adjoint = inverse rotation.
+    let positions: Vec<usize> = (0..batch * seq).map(|i| i % seq).collect();
+    rope_inplace(&mut d_q, &positions, cfg.n_heads, hd, cfg.rope_theta, true);
+    rope_inplace(&mut d_k, &positions, cfg.n_kv_heads, hd, cfg.rope_theta, true);
+
+    let g_wq = matmul_at_b(&d_q, &cache.h1);
+    let g_wk = matmul_at_b(&d_k, &cache.h1);
+    let g_wv = matmul_at_b(&d_v, &cache.h1);
+    let mut d_h1 = matmul(&d_q, &w.wq);
+    d_h1.add_inplace(&matmul(&d_k, &w.wk));
+    d_h1.add_inplace(&matmul(&d_v, &w.wv));
+    let (d_x_from_norm, g_ln1) = rmsnorm_backward(&cache.x_in, &w.ln1, &cache.rstd1, &d_h1);
+    let mut d_x = d_xmid.clone();
+    d_x.add_inplace(&d_x_from_norm);
+
+    if let Some(s) = stats.as_deref_mut() {
+        // q/k/v use rope'd grads? No: stats want the gradient at the linear's
+        // *output* (pre-rope for q/k). d_q/d_k above are already rotated back
+        // to pre-rope coordinates, which is exactly the linear output frame.
+        s.record(LayerId { block: block_idx, kind: LayerKind::Q }, &cache.h1, &d_q);
+        s.record(LayerId { block: block_idx, kind: LayerKind::K }, &cache.h1, &d_k);
+        s.record(LayerId { block: block_idx, kind: LayerKind::V }, &cache.h1, &d_v);
+        s.record(LayerId { block: block_idx, kind: LayerKind::O }, &cache.att, d_o);
+    }
+
+    let grads = BlockGrads {
+        ln1: g_ln1,
+        wq: g_wq,
+        wk: g_wk,
+        wv: g_wv,
+        wo: g_wo,
+        ln2: g_ln2,
+        wg: g_wg,
+        wu: g_wu,
+        wd: g_wd,
+    };
+    (d_x, grads)
+}
+
+/// Full-model backward from `dlogits`. Returns gradients for all params.
+pub fn model_backward(
+    params: &ModelParams,
+    cache: &ModelCache,
+    dlogits: &Tensor,
+    mut stats: Option<&mut StatsCollector>,
+) -> ModelGrads {
+    let cfg = &params.cfg;
+    // logits = hf @ head^T
+    let head_w = params.head_weight();
+    let mut d_hf = matmul(dlogits, head_w);
+    let g_head = matmul_at_b(dlogits, &cache.hf); // [vocab, d]
+    let (mut d_x, g_lnf) = rmsnorm_backward(&cache.x_final, &params.ln_f, &cache.rstd_f, &d_hf);
+    d_hf = Tensor::zeros(&[0, 0]); // drop
+    let _ = d_hf;
+
+    let mut block_grads: Vec<Option<BlockGrads>> = (0..cfg.n_layers).map(|_| None).collect();
+    for bi in (0..cfg.n_layers).rev() {
+        let (dxb, g) = block_backward(
+            cfg,
+            &params.blocks[bi],
+            &cache.blocks[bi],
+            &d_x,
+            bi,
+            stats.as_deref_mut(),
+        );
+        d_x = dxb;
+        block_grads[bi] = Some(g);
+    }
+
+    // Embedding gradient: scatter-add d_x rows by token id.
+    let mut g_embed = Tensor::zeros(&params.embed.shape);
+    for (i, &t) in cache.tokens.iter().enumerate() {
+        let src = d_x.row(i);
+        let dst = g_embed.row_mut(t as usize);
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d += s;
+        }
+    }
+    // Tied head: head grad folds into the embedding grad.
+    let head_grad = if params.head.is_some() {
+        Some(g_head)
+    } else {
+        g_embed.add_inplace(&g_head);
+        None
+    };
+
+    ModelGrads {
+        embed: g_embed,
+        blocks: block_grads.into_iter().map(|g| g.unwrap()).collect(),
+        ln_f: g_lnf,
+        head: head_grad,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::cross_entropy;
+    use crate::nn::model::{block_forward, model_forward, ModelParams};
+    use crate::nn::family_config;
+    use crate::util::rng::Rng;
+
+    /// Block-level loss = 0.5 * ||block(x)||^2, gradient wrt everything.
+    #[test]
+    fn block_gradients_match_finite_differences() {
+        let cfg = family_config("l3", "xs"); // GQA path
+        let mut rng = Rng::new(0);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let mut w = params.blocks[0].clone();
+        let (batch, seq) = (2, 5);
+        let x = Tensor::randn(&[batch * seq, cfg.d_model], 1.0, &mut rng);
+
+        let loss_of = |w: &BlockWeights, x: &Tensor| -> f64 {
+            let (y, _) = block_forward(&cfg, w, x, batch, seq);
+            0.5 * y.fro_norm_sq()
+        };
+        // Analytic grads with dy = y.
+        let (y, cache) = block_forward(&cfg, &w, &x, batch, seq);
+        let (dx, g) = block_backward(&cfg, &w, &cache, &y, 0, None);
+
+        // Spot-check a handful of coordinates in every linear weight.
+        let mut rng2 = Rng::new(7);
+        for kind in LayerKind::ALL {
+            let grad = g.linear(kind);
+            for _ in 0..4 {
+                let idx = rng2.below(grad.data.len());
+                let analytic = grad.data[idx];
+                let eps = 3e-3f32;
+                let orig = w.linear(kind).data[idx];
+                let mut w2 = w.clone();
+                w2.linear_mut(kind).data[idx] = orig + eps;
+                let lp = loss_of(&w2, &x);
+                w2.linear_mut(kind).data[idx] = orig - eps;
+                let lm = loss_of(&w2, &x);
+                let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let denom = 1.0f32.max(numeric.abs()).max(analytic.abs());
+                assert!(
+                    (numeric - analytic).abs() / denom < 0.03,
+                    "{} grad mismatch at {idx}: numeric={numeric} analytic={analytic}",
+                    kind.name()
+                );
+            }
+        }
+
+        // Norm weights.
+        for (vecref, gvec) in [(0usize, &g.ln1), (1, &g.ln2)] {
+            for _ in 0..3 {
+                let idx = rng2.below(cfg.d_model);
+                let analytic = gvec[idx];
+                let eps = 3e-3f32;
+                let mut wp = w.clone();
+                let slot = if vecref == 0 { &mut wp.ln1 } else { &mut wp.ln2 };
+                let orig = slot[idx];
+                slot[idx] = orig + eps;
+                let lp = loss_of(&wp, &x);
+                let slot = if vecref == 0 { &mut wp.ln1 } else { &mut wp.ln2 };
+                slot[idx] = orig - eps;
+                let lm = loss_of(&wp, &x);
+                let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let denom = 1.0f32.max(numeric.abs()).max(analytic.abs());
+                assert!(
+                    (numeric - analytic).abs() / denom < 0.03,
+                    "ln grad mismatch: numeric={numeric} analytic={analytic}"
+                );
+            }
+        }
+
+        // Input gradient.
+        let mut x2 = x.clone();
+        for _ in 0..5 {
+            let idx = rng2.below(x2.data.len());
+            let analytic = dx.data[idx];
+            let eps = 3e-3f32;
+            let orig = x2.data[idx];
+            x2.data[idx] = orig + eps;
+            let lp = loss_of(&w, &x2);
+            x2.data[idx] = orig - eps;
+            let lm = loss_of(&w, &x2);
+            x2.data[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let denom = 1.0f32.max(numeric.abs()).max(analytic.abs());
+            assert!(
+                (numeric - analytic).abs() / denom < 0.03,
+                "dx mismatch: numeric={numeric} analytic={analytic}"
+            );
+        }
+        let _ = &mut w;
+    }
+
+    /// End-to-end: CE loss gradient wrt a few weights across the whole model,
+    /// covering the embedding, mid-block weights and the (tied) head.
+    #[test]
+    fn model_gradients_match_finite_differences() {
+        for family in ["l2", "g3"] {
+            let cfg = family_config(family, "xs");
+            let mut rng = Rng::new(1);
+            let mut params = ModelParams::init(&cfg, &mut rng);
+            let tokens: Vec<u16> = (0..8).map(|i| (i * 13 % 250) as u16).collect();
+            let targets: Vec<u16> = (0..8).map(|i| ((i * 13 + 1) % 250) as u16).collect();
+
+            let loss_of = |p: &ModelParams| -> f64 {
+                let (logits, _) = model_forward(p, &tokens, 1, 8, false);
+                cross_entropy(&logits, &targets).0
+            };
+
+            let (logits, cache) = model_forward(&params, &tokens, 1, 8, true);
+            let (_, dlogits) = cross_entropy(&logits, &targets);
+            let grads = model_backward(&params, &cache.unwrap(), &dlogits, None);
+
+            let mut rng2 = Rng::new(2);
+            // Embedding coordinate used by token 0.
+            let tok = tokens[0] as usize;
+            let j = rng2.below(cfg.d_model);
+            let idx = tok * cfg.d_model + j;
+            let analytic = grads.embed.data[idx];
+            let eps = 1e-2f32;
+            let orig = params.embed.data[idx];
+            params.embed.data[idx] = orig + eps;
+            let lp = loss_of(&params);
+            params.embed.data[idx] = orig - eps;
+            let lm = loss_of(&params);
+            params.embed.data[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let denom = 1e-3f32.max(numeric.abs()).max(analytic.abs());
+            assert!(
+                (numeric - analytic).abs() / denom < 0.05,
+                "{family} embed grad: numeric={numeric} analytic={analytic}"
+            );
+
+            // A weight in the last block's down projection.
+            let bi = cfg.n_layers - 1;
+            let idx = rng2.below(params.blocks[bi].wd.data.len());
+            let analytic = grads.blocks[bi].wd.data[idx];
+            let orig = params.blocks[bi].wd.data[idx];
+            params.blocks[bi].wd.data[idx] = orig + eps;
+            let lp = loss_of(&params);
+            params.blocks[bi].wd.data[idx] = orig - eps;
+            let lm = loss_of(&params);
+            params.blocks[bi].wd.data[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let denom = 1e-3f32.max(numeric.abs()).max(analytic.abs());
+            assert!(
+                (numeric - analytic).abs() / denom < 0.05,
+                "{family} wd grad: numeric={numeric} analytic={analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn rmsnorm_backward_finite_diff() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let w: Vec<f32> = (0..6).map(|i| 0.5 + 0.1 * i as f32).collect();
+        let dy = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let loss_of = |x: &Tensor, w: &[f32]| -> f64 {
+            let (y, _) = crate::nn::model::rmsnorm(x, w, 1e-5);
+            y.data
+                .iter()
+                .zip(dy.data.iter())
+                .map(|(&a, &b)| (a * b) as f64)
+                .sum()
+        };
+        let (_, rstd) = crate::nn::model::rmsnorm(&x, &w, 1e-5);
+        let (dx, dw) = rmsnorm_backward(&x, &w, &rstd, &dy);
+        let mut x2 = x.clone();
+        for idx in [0usize, 7, 17] {
+            let eps = 1e-3;
+            let orig = x2.data[idx];
+            x2.data[idx] = orig + eps;
+            let lp = loss_of(&x2, &w);
+            x2.data[idx] = orig - eps;
+            let lm = loss_of(&x2, &w);
+            x2.data[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((numeric - dx.data[idx]).abs() < 2e-2, "{numeric} vs {}", dx.data[idx]);
+        }
+        let mut w2 = w.clone();
+        for idx in [0usize, 3, 5] {
+            let eps = 1e-3;
+            let orig = w2[idx];
+            w2[idx] = orig + eps;
+            let lp = loss_of(&x, &w2);
+            w2[idx] = orig - eps;
+            let lm = loss_of(&x, &w2);
+            w2[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((numeric - dw[idx]).abs() < 2e-2, "{numeric} vs {}", dw[idx]);
+        }
+    }
+}

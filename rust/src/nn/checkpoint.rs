@@ -1,0 +1,208 @@
+//! Binary checkpoint format for teachers and quantized models.
+//!
+//! Layout: a JSON header (config + tensor manifest) length-prefixed with a
+//! u64, followed by raw little-endian payloads in manifest order. Supports
+//! f32 tensors, f32 vectors and packed u32 words, so both FP teachers and
+//! bit-packed NanoQuant models round-trip.
+
+use super::model::{BlockWeights, ModelConfig, ModelParams};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::io::{Read, Write};
+
+const MAGIC: &[u8; 8] = b"NANOQCK1";
+
+fn cfg_to_json(cfg: &ModelConfig) -> Json {
+    Json::obj()
+        .set("name", cfg.name.as_str())
+        .set("vocab", cfg.vocab)
+        .set("d_model", cfg.d_model)
+        .set("n_layers", cfg.n_layers)
+        .set("n_heads", cfg.n_heads)
+        .set("n_kv_heads", cfg.n_kv_heads)
+        .set("d_ff", cfg.d_ff)
+        .set("max_seq", cfg.max_seq)
+        .set("rope_theta", cfg.rope_theta)
+        .set("tied", cfg.tied_embeddings)
+        .set("eps", cfg.eps)
+}
+
+fn cfg_from_json(j: &Json) -> ModelConfig {
+    ModelConfig {
+        name: j.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+        vocab: j.get("vocab").unwrap().as_usize().unwrap(),
+        d_model: j.get("d_model").unwrap().as_usize().unwrap(),
+        n_layers: j.get("n_layers").unwrap().as_usize().unwrap(),
+        n_heads: j.get("n_heads").unwrap().as_usize().unwrap(),
+        n_kv_heads: j.get("n_kv_heads").unwrap().as_usize().unwrap(),
+        d_ff: j.get("d_ff").unwrap().as_usize().unwrap(),
+        max_seq: j.get("max_seq").unwrap().as_usize().unwrap(),
+        rope_theta: j.get("rope_theta").unwrap().as_f64().unwrap() as f32,
+        tied_embeddings: j.get("tied").unwrap().as_bool().unwrap(),
+        eps: j.get("eps").unwrap().as_f64().unwrap() as f32,
+    }
+}
+
+/// Save a FP model checkpoint.
+pub fn save_model(path: &str, params: &ModelParams) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut tensors: Vec<(String, Vec<usize>, &[f32])> = Vec::new();
+    tensors.push(("embed".into(), params.embed.shape.clone(), &params.embed.data));
+    for (i, b) in params.blocks.iter().enumerate() {
+        tensors.push((format!("b{i}.ln1"), vec![b.ln1.len()], &b.ln1));
+        for (name, t) in [
+            ("wq", &b.wq),
+            ("wk", &b.wk),
+            ("wv", &b.wv),
+            ("wo", &b.wo),
+            ("wg", &b.wg),
+            ("wu", &b.wu),
+            ("wd", &b.wd),
+        ] {
+            tensors.push((format!("b{i}.{name}"), t.shape.clone(), &t.data));
+        }
+        tensors.push((format!("b{i}.ln2"), vec![b.ln2.len()], &b.ln2));
+    }
+    tensors.push(("ln_f".into(), vec![params.ln_f.len()], &params.ln_f));
+    if let Some(h) = &params.head {
+        tensors.push(("head".into(), h.shape.clone(), &h.data));
+    }
+
+    let manifest: Vec<Json> = tensors
+        .iter()
+        .map(|(n, s, _)| Json::obj().set("name", n.as_str()).set("shape", s.clone()))
+        .collect();
+    let header = Json::obj()
+        .set("config", cfg_to_json(&params.cfg))
+        .set("tensors", Json::Arr(manifest))
+        .to_string();
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u64).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    for (_, _, data) in &tensors {
+        for &x in *data {
+            f.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Load a FP model checkpoint.
+pub fn load_model(path: &str) -> std::io::Result<ModelParams> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+    }
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb)?;
+    let hlen = u64::from_le_bytes(lenb) as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf).map_err(invalid)?).map_err(invalid)?;
+    let cfg = cfg_from_json(header.get("config").ok_or_else(|| invalid("no config"))?);
+    let manifest = header.get("tensors").and_then(|t| t.as_arr()).ok_or_else(|| invalid("no tensors"))?;
+
+    let mut read_tensor = |shape: &[usize]| -> std::io::Result<Vec<f32>> {
+        let n: usize = shape.iter().product();
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    };
+
+    let mut tensors: std::collections::BTreeMap<String, (Vec<usize>, Vec<f32>)> =
+        std::collections::BTreeMap::new();
+    for entry in manifest {
+        let name = entry.get("name").and_then(|v| v.as_str()).unwrap().to_string();
+        let shape: Vec<usize> = entry
+            .get("shape")
+            .and_then(|v| v.as_arr())
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        let data = read_tensor(&shape)?;
+        tensors.insert(name, (shape, data));
+    }
+
+    let get_t = |name: &str| -> Tensor {
+        let (shape, data) = tensors.get(name).unwrap_or_else(|| panic!("missing tensor {name}"));
+        Tensor::new(shape, data.clone())
+    };
+    let get_v = |name: &str| -> Vec<f32> { tensors.get(name).unwrap().1.clone() };
+
+    let blocks = (0..cfg.n_layers)
+        .map(|i| BlockWeights {
+            ln1: get_v(&format!("b{i}.ln1")),
+            wq: get_t(&format!("b{i}.wq")),
+            wk: get_t(&format!("b{i}.wk")),
+            wv: get_t(&format!("b{i}.wv")),
+            wo: get_t(&format!("b{i}.wo")),
+            ln2: get_v(&format!("b{i}.ln2")),
+            wg: get_t(&format!("b{i}.wg")),
+            wu: get_t(&format!("b{i}.wu")),
+            wd: get_t(&format!("b{i}.wd")),
+        })
+        .collect();
+
+    Ok(ModelParams {
+        embed: get_t("embed"),
+        blocks,
+        ln_f: get_v("ln_f"),
+        head: if cfg.tied_embeddings { None } else { Some(get_t("head")) },
+        cfg,
+    })
+}
+
+fn invalid<E: ToString>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_untied() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let path = "/tmp/nanoquant_test_ckpt_untied.bin";
+        save_model(path, &params).unwrap();
+        let back = load_model(path).unwrap();
+        assert_eq!(back.cfg, params.cfg);
+        assert_eq!(back.embed, params.embed);
+        assert_eq!(back.blocks[0].wq, params.blocks[0].wq);
+        assert_eq!(back.blocks[1].ln2, params.blocks[1].ln2);
+        assert_eq!(back.head.unwrap(), params.head.unwrap());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn roundtrip_tied() {
+        let cfg = family_config("g3", "xs");
+        let mut rng = Rng::new(1);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let path = "/tmp/nanoquant_test_ckpt_tied.bin";
+        save_model(path, &params).unwrap();
+        let back = load_model(path).unwrap();
+        assert!(back.head.is_none());
+        assert_eq!(back.embed, params.embed);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = "/tmp/nanoquant_test_ckpt_garbage.bin";
+        std::fs::write(path, b"not a checkpoint").unwrap();
+        assert!(load_model(path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,302 @@
+//! Incremental (single-token) decoding with a KV cache — the native-Rust
+//! serving engine. Weights are accessed through the [`MatVec`] trait so the
+//! same decode loop runs dense FP32 teachers, NanoQuant packed binary
+//! models (via `quant::kernels::PackedLinear`), and the VQ baselines; this
+//! is the engine the paper's Figures 4/5/7/10–13 and Table 12 exercise.
+
+use super::model::{silu, ModelConfig};
+use crate::tensor::Tensor;
+
+/// A weight matrix that can multiply a vector: `y = W x` (W: [out, in]).
+pub trait MatVec: Send + Sync {
+    fn out_dim(&self) -> usize;
+    fn in_dim(&self) -> usize;
+    fn matvec(&self, x: &[f32]) -> Vec<f32>;
+    /// Storage footprint in bytes (for peak-memory accounting).
+    fn storage_bytes(&self) -> usize;
+}
+
+impl MatVec for Tensor {
+    fn out_dim(&self) -> usize {
+        self.rows()
+    }
+    fn in_dim(&self) -> usize {
+        self.cols()
+    }
+    fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols());
+        (0..self.rows()).map(|i| crate::tensor::dot(self.row(i), x)).collect()
+    }
+    fn storage_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+/// One block's weights for decoding.
+pub struct DecodeBlock {
+    pub ln1: Vec<f32>,
+    pub wq: Box<dyn MatVec>,
+    pub wk: Box<dyn MatVec>,
+    pub wv: Box<dyn MatVec>,
+    pub wo: Box<dyn MatVec>,
+    pub ln2: Vec<f32>,
+    pub wg: Box<dyn MatVec>,
+    pub wu: Box<dyn MatVec>,
+    pub wd: Box<dyn MatVec>,
+}
+
+/// A decode-ready model (any engine).
+pub struct DecodeModel {
+    pub cfg: ModelConfig,
+    pub embed: Tensor,
+    pub blocks: Vec<DecodeBlock>,
+    pub ln_f: Vec<f32>,
+    /// LM head; `None` = tied to `embed`.
+    pub head: Option<Box<dyn MatVec>>,
+}
+
+impl DecodeModel {
+    /// Total weight storage (the quantity the paper's "peak memory" tracks
+    /// for the weights; KV cache is accounted separately by the server).
+    pub fn weight_bytes(&self) -> usize {
+        let mut total = self.embed.storage_bytes();
+        for b in &self.blocks {
+            total += b.ln1.len() * 4 + b.ln2.len() * 4;
+            for w in [&b.wq, &b.wk, &b.wv, &b.wo, &b.wg, &b.wu, &b.wd] {
+                total += w.storage_bytes();
+            }
+        }
+        total += self.ln_f.len() * 4;
+        if let Some(h) = &self.head {
+            total += h.storage_bytes();
+        }
+        total
+    }
+}
+
+/// Per-sequence KV cache.
+pub struct KvCache {
+    /// Per layer: [max_seq, n_kv_heads * head_dim].
+    pub k: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub len: usize,
+    pub max_seq: usize,
+}
+
+impl KvCache {
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        let kv = cfg.n_kv_heads * cfg.head_dim();
+        KvCache {
+            k: (0..cfg.n_layers).map(|_| Tensor::zeros(&[cfg.max_seq, kv])).collect(),
+            v: (0..cfg.n_layers).map(|_| Tensor::zeros(&[cfg.max_seq, kv])).collect(),
+            len: 0,
+            max_seq: cfg.max_seq,
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.k.iter().map(|t| t.numel() * 4).sum::<usize>() * 2
+    }
+
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+}
+
+fn rmsnorm_vec(x: &[f32], w: &[f32], eps: f32) -> Vec<f32> {
+    let d = x.len();
+    let ms: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+    let r = (1.0 / (ms + eps as f64).sqrt()) as f32;
+    x.iter().zip(w.iter()).map(|(&v, &wi)| v * r * wi).collect()
+}
+
+fn rope_vec(x: &mut [f32], pos: usize, n_heads: usize, hd: usize, theta: f32) {
+    let half = hd / 2;
+    for h in 0..n_heads {
+        let base = h * hd;
+        for i in 0..half {
+            let angle = pos as f64 / (theta as f64).powf(2.0 * i as f64 / hd as f64);
+            let (sin, cos) = angle.sin_cos();
+            let (sin, cos) = (sin as f32, cos as f32);
+            let a = x[base + i];
+            let b = x[base + half + i];
+            x[base + i] = a * cos - b * sin;
+            x[base + half + i] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Run one token through the model, appending to the cache.
+/// Returns the logits for the next-token distribution.
+pub fn decode_step(model: &DecodeModel, cache: &mut KvCache, token: u16) -> Vec<f32> {
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let hd = cfg.head_dim();
+    let groups = cfg.gqa_groups();
+    let pos = cache.len;
+    assert!(pos < cache.max_seq, "KV cache overflow (max_seq={})", cache.max_seq);
+
+    let mut x: Vec<f32> = model.embed.row(token as usize).to_vec();
+    for (li, b) in model.blocks.iter().enumerate() {
+        // Attention.
+        let h1 = rmsnorm_vec(&x, &b.ln1, cfg.eps);
+        let mut q = b.wq.matvec(&h1);
+        let mut k = b.wk.matvec(&h1);
+        let v = b.wv.matvec(&h1);
+        rope_vec(&mut q, pos, cfg.n_heads, hd, cfg.rope_theta);
+        rope_vec(&mut k, pos, cfg.n_kv_heads, hd, cfg.rope_theta);
+        cache.k[li].row_mut(pos).copy_from_slice(&k);
+        cache.v[li].row_mut(pos).copy_from_slice(&v);
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut att = vec![0.0f32; cfg.n_heads * hd];
+        for h in 0..cfg.n_heads {
+            let g = h / groups;
+            let qh = &q[h * hd..(h + 1) * hd];
+            // scores over positions 0..=pos
+            let mut scores = Vec::with_capacity(pos + 1);
+            let mut maxv = f32::NEG_INFINITY;
+            for t in 0..=pos {
+                let kt = &cache.k[li].row(t)[g * hd..(g + 1) * hd];
+                let s = crate::tensor::dot(qh, kt) * scale;
+                scores.push(s);
+                maxv = maxv.max(s);
+            }
+            let mut z = 0.0f32;
+            for s in scores.iter_mut() {
+                *s = (*s - maxv).exp();
+                z += *s;
+            }
+            let inv = 1.0 / z;
+            let out = &mut att[h * hd..(h + 1) * hd];
+            for t in 0..=pos {
+                let p = scores[t] * inv;
+                if p != 0.0 {
+                    let vt = &cache.v[li].row(t)[g * hd..(g + 1) * hd];
+                    for (o, &vv) in out.iter_mut().zip(vt.iter()) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+        let o = b.wo.matvec(&att);
+        for i in 0..d {
+            x[i] += o[i];
+        }
+
+        // MLP.
+        let h2 = rmsnorm_vec(&x, &b.ln2, cfg.eps);
+        let gate = b.wg.matvec(&h2);
+        let up = b.wu.matvec(&h2);
+        let act: Vec<f32> = gate.iter().zip(up.iter()).map(|(&g, &u)| silu(g) * u).collect();
+        let down = b.wd.matvec(&act);
+        for i in 0..d {
+            x[i] += down[i];
+        }
+    }
+    cache.len = pos + 1;
+
+    let hf = rmsnorm_vec(&x, &model.ln_f, cfg.eps);
+    match &model.head {
+        Some(h) => h.matvec(&hf),
+        None => (0..model.embed.rows())
+            .map(|i| crate::tensor::dot(model.embed.row(i), &hf))
+            .collect(),
+    }
+}
+
+/// Feed a prompt through the model (prefill), returning the final logits.
+pub fn prefill(model: &DecodeModel, cache: &mut KvCache, prompt: &[u16]) -> Vec<f32> {
+    let mut logits = Vec::new();
+    for &t in prompt {
+        logits = decode_step(model, cache, t);
+    }
+    logits
+}
+
+/// Build a dense decode model from FP params (reference engine).
+pub fn dense_decode_model(params: &super::model::ModelParams) -> DecodeModel {
+    DecodeModel {
+        cfg: params.cfg.clone(),
+        embed: params.embed.clone(),
+        blocks: params
+            .blocks
+            .iter()
+            .map(|b| DecodeBlock {
+                ln1: b.ln1.clone(),
+                wq: Box::new(b.wq.clone()),
+                wk: Box::new(b.wk.clone()),
+                wv: Box::new(b.wv.clone()),
+                wo: Box::new(b.wo.clone()),
+                ln2: b.ln2.clone(),
+                wg: Box::new(b.wg.clone()),
+                wu: Box::new(b.wu.clone()),
+                wd: Box::new(b.wd.clone()),
+            })
+            .collect(),
+        ln_f: params.ln_f.clone(),
+        head: params.head.as_ref().map(|h| Box::new(h.clone()) as Box<dyn MatVec>),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+    use crate::nn::model::{model_forward, ModelParams};
+    use crate::util::rng::Rng;
+
+    /// Incremental decode must reproduce the full (batched) forward exactly.
+    #[test]
+    fn decode_matches_full_forward() {
+        for family in ["l2", "l3", "g3"] {
+            let cfg = family_config(family, "xs");
+            let mut rng = Rng::new(0);
+            let params = ModelParams::init(&cfg, &mut rng);
+            let tokens: Vec<u16> = (0..10).map(|i| (i * 31 % 250) as u16).collect();
+            let (full_logits, _) = model_forward(&params, &tokens, 1, 10, false);
+
+            let dm = dense_decode_model(&params);
+            let mut cache = KvCache::new(&cfg);
+            for (pos, &t) in tokens.iter().enumerate() {
+                let logits = decode_step(&dm, &mut cache, t);
+                for vidx in 0..cfg.vocab {
+                    let a = full_logits.at2(pos, vidx);
+                    let b = logits[vidx];
+                    assert!(
+                        (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+                        "{family} pos {pos} vocab {vidx}: full={a} decode={b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_len_tracks_and_overflows() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(1);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let dm = dense_decode_model(&params);
+        let mut cache = KvCache::new(&cfg);
+        for i in 0..5 {
+            decode_step(&dm, &mut cache, (i * 3) as u16);
+        }
+        assert_eq!(cache.len, 5);
+        cache.reset();
+        assert_eq!(cache.len, 0);
+    }
+
+    #[test]
+    fn weight_bytes_counts_dense_f32() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(2);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let dm = dense_decode_model(&params);
+        let expected = crate::nn::param_count(&cfg) * 4;
+        let actual = dm.weight_bytes();
+        // param_count approximates (it counts ln_f once etc.) — within 1%.
+        let ratio = actual as f64 / expected as f64;
+        assert!(ratio > 0.98 && ratio < 1.02, "ratio={ratio}");
+    }
+}

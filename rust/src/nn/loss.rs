@@ -1,0 +1,168 @@
+//! Losses: token cross-entropy (training, perplexity) and temperature KL
+//! divergence (the scale-only model-reconstruction objective, paper Eq. 11).
+
+use crate::tensor::Tensor;
+
+/// Mean cross-entropy over positions. `logits: [N, V]`, `targets: [N]`.
+/// Returns (loss, dlogits) with dlogits already divided by N.
+pub fn cross_entropy(logits: &Tensor, targets: &[u16]) -> (f64, Tensor) {
+    let (n, v) = (logits.rows(), logits.cols());
+    assert_eq!(targets.len(), n);
+    let mut dlogits = Tensor::zeros(&[n, v]);
+    let mut total = 0.0f64;
+    let inv_n = 1.0 / n as f64;
+    for i in 0..n {
+        let row = logits.row(i);
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0f64;
+        for &x in row {
+            z += ((x - m) as f64).exp();
+        }
+        let logz = z.ln() + m as f64;
+        let t = targets[i] as usize;
+        total += logz - row[t] as f64;
+        let drow = dlogits.row_mut(i);
+        for j in 0..v {
+            let p = ((row[j] as f64 - logz).exp()) as f32;
+            drow[j] = p * inv_n as f32;
+        }
+        drow[t] -= inv_n as f32;
+    }
+    (total * inv_n, dlogits)
+}
+
+/// Per-position log-probabilities of given targets (no gradient), used by
+/// perplexity evaluation and zero-shot scoring. Returns `logprob[i] =
+/// log p(targets[i] | context_i)`.
+pub fn log_probs(logits: &Tensor, targets: &[u16]) -> Vec<f64> {
+    let (n, _) = (logits.rows(), logits.cols());
+    assert_eq!(targets.len(), n);
+    (0..n)
+        .map(|i| {
+            let row = logits.row(i);
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0.0f64;
+            for &x in row {
+                z += ((x - m) as f64).exp();
+            }
+            row[targets[i] as usize] as f64 - (z.ln() + m as f64)
+        })
+        .collect()
+}
+
+/// KL(p_teacher || p_student) with temperature `t`, averaged over rows.
+/// Returns (loss, d_student_logits). Gradient: (q - p) / (N * T) where
+/// p, q are the tempered teacher/student distributions.
+pub fn kl_divergence(
+    teacher_logits: &Tensor,
+    student_logits: &Tensor,
+    t: f32,
+) -> (f64, Tensor) {
+    assert_eq!(teacher_logits.shape, student_logits.shape);
+    let (n, v) = (teacher_logits.rows(), teacher_logits.cols());
+    let p = teacher_logits.scale(1.0 / t).softmax_lastdim();
+    let q_logits = student_logits.scale(1.0 / t);
+    let q = q_logits.softmax_lastdim();
+    let mut total = 0.0f64;
+    let mut dlogits = Tensor::zeros(&[n, v]);
+    let inv = 1.0 / (n as f64);
+    for i in 0..n {
+        let pr = p.row(i);
+        let qr = q.row(i);
+        for j in 0..v {
+            if pr[j] > 0.0 {
+                total += pr[j] as f64 * ((pr[j] as f64).ln() - (qr[j] as f64).max(1e-30).ln());
+            }
+        }
+        let drow = dlogits.row_mut(i);
+        for j in 0..v {
+            drow[j] = (qr[j] - pr[j]) * (inv as f32) / t;
+        }
+    }
+    (total * inv, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ce_of_uniform_logits_is_log_v() {
+        let logits = Tensor::zeros(&[4, 10]);
+        let targets = vec![0u16, 3, 7, 9];
+        let (loss, _) = cross_entropy(&logits, &targets);
+        assert!((loss - (10f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ce_gradient_matches_finite_diff() {
+        let mut rng = Rng::new(0);
+        let mut logits = Tensor::randn(&[3, 7], 1.0, &mut rng);
+        let targets = vec![1u16, 4, 6];
+        let (_, d) = cross_entropy(&logits, &targets);
+        for idx in [0usize, 10, 20] {
+            let eps = 1e-3f32;
+            let orig = logits.data[idx];
+            logits.data[idx] = orig + eps;
+            let lp = cross_entropy(&logits, &targets).0;
+            logits.data[idx] = orig - eps;
+            let lm = cross_entropy(&logits, &targets).0;
+            logits.data[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((numeric - d.data[idx]).abs() < 1e-3, "{numeric} vs {}", d.data[idx]);
+        }
+    }
+
+    #[test]
+    fn ce_gradient_rows_sum_to_zero() {
+        let mut rng = Rng::new(1);
+        let logits = Tensor::randn(&[5, 11], 2.0, &mut rng);
+        let targets = vec![0u16, 1, 2, 3, 4];
+        let (_, d) = cross_entropy(&logits, &targets);
+        for i in 0..5 {
+            let s: f32 = d.row(i).iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn log_probs_consistent_with_ce() {
+        let mut rng = Rng::new(2);
+        let logits = Tensor::randn(&[6, 9], 1.0, &mut rng);
+        let targets = vec![0u16, 2, 4, 6, 8, 1];
+        let (ce, _) = cross_entropy(&logits, &targets);
+        let lps = log_probs(&logits, &targets);
+        let mean_nll = -lps.iter().sum::<f64>() / 6.0;
+        assert!((ce - mean_nll).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kl_zero_for_identical_distributions() {
+        let mut rng = Rng::new(3);
+        let logits = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let (loss, d) = kl_divergence(&logits, &logits, 2.0);
+        assert!(loss.abs() < 1e-9);
+        assert!(d.abs_max() < 1e-6);
+    }
+
+    #[test]
+    fn kl_positive_and_gradient_matches_fd() {
+        let mut rng = Rng::new(4);
+        let p = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let mut q = Tensor::randn(&[3, 6], 1.0, &mut rng);
+        let (loss, d) = kl_divergence(&p, &q, 1.5);
+        assert!(loss > 0.0);
+        for idx in [0usize, 8, 17] {
+            let eps = 1e-3f32;
+            let orig = q.data[idx];
+            q.data[idx] = orig + eps;
+            let lp = kl_divergence(&p, &q, 1.5).0;
+            q.data[idx] = orig - eps;
+            let lm = kl_divergence(&p, &q, 1.5).0;
+            q.data[idx] = orig;
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!((numeric - d.data[idx]).abs() < 1e-3, "{numeric} vs {}", d.data[idx]);
+        }
+    }
+}

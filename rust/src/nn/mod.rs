@@ -1,0 +1,154 @@
+//! Native transformer substrate: Llama-style decoder (RMSNorm, RoPE,
+//! MHA/GQA, SwiGLU) with hand-written forward *and* backward passes.
+//!
+//! This replaces PyTorch/Transformers for everything the PTQ pipeline needs
+//! shape-polymorphic access to: teacher training, calibration statistics
+//! (activation/gradient second moments for the Hessian preconditioners),
+//! block-level reconstruction losses and their gradients, and the KL
+//! model-reconstruction phase. The JAX/Pallas side (python/compile/) mirrors
+//! this architecture exactly; parity is enforced by `rust/tests/runtime_parity.rs`.
+
+pub mod adam;
+pub mod backward;
+pub mod checkpoint;
+pub mod decode;
+pub mod loss;
+pub mod model;
+pub mod stats;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use model::{
+    block_forward, model_forward, BlockCache, BlockWeights, LayerKind, ModelConfig, ModelParams,
+};
+
+use crate::tensor::Tensor;
+
+/// Identifies one linear layer in the model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LayerId {
+    pub block: usize,
+    pub kind: LayerKind,
+}
+
+impl std::fmt::Display for LayerId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "blk{}.{}", self.block, self.kind.name())
+    }
+}
+
+/// A named family of model configurations, mirroring the paper's model
+/// families (Llama-2/3, Gemma-3, Qwen-3, Rnj-1). The families differ in
+/// architectural knobs the quantizer is sensitive to (GQA vs MHA, FFN
+/// ratio, tied embeddings), reproducing the family axis of Table 2.
+pub fn family_config(family: &str, size: &str) -> ModelConfig {
+    let (d_model, n_layers, n_heads): (usize, usize, usize) = match size {
+        "xs" => (64, 2, 4),
+        "s" => (128, 4, 4),
+        "m" => (192, 6, 6),
+        "l" => (256, 8, 8),
+        other => panic!("unknown size '{other}' (xs|s|m|l)"),
+    };
+    let mut cfg = ModelConfig {
+        name: format!("{family}-{size}"),
+        vocab: crate::data::VOCAB_SIZE,
+        d_model,
+        n_layers,
+        n_heads,
+        n_kv_heads: n_heads,
+        d_ff: d_model * 8 / 3 / 8 * 8, // SwiGLU 8/3 ratio, rounded to 8
+        max_seq: 128,
+        rope_theta: 10_000.0,
+        tied_embeddings: false,
+        eps: 1e-5,
+    };
+    match family {
+        // Llama-2-like: MHA, 8/3 FFN.
+        "l2" => {}
+        // Llama-3-like: GQA (2 groups).
+        "l3" => cfg.n_kv_heads = (n_heads / 2).max(1),
+        // Gemma-3-like: tied embeddings, wide FFN.
+        "g3" => {
+            cfg.tied_embeddings = true;
+            cfg.d_ff = d_model * 4;
+        }
+        // Qwen-3-like: GQA + higher rope theta.
+        "q3" => {
+            cfg.n_kv_heads = (n_heads / 2).max(1);
+            cfg.rope_theta = 100_000.0;
+        }
+        // Rnj-1-like: narrow FFN, MHA.
+        "r1" => cfg.d_ff = d_model * 2,
+        other => panic!("unknown family '{other}' (l2|l3|g3|q3|r1)"),
+    }
+    cfg
+}
+
+/// Approximate parameter count of a config.
+pub fn param_count(cfg: &ModelConfig) -> usize {
+    let d = cfg.d_model;
+    let hd = d / cfg.n_heads;
+    let kv = cfg.n_kv_heads * hd;
+    let per_block = d * d // wq
+        + kv * d * 2 // wk, wv
+        + d * d // wo
+        + cfg.d_ff * d * 2 // gate, up
+        + d * cfg.d_ff // down
+        + 2 * d; // norms
+    let emb = cfg.vocab * d;
+    let head = if cfg.tied_embeddings { 0 } else { cfg.vocab * d };
+    emb + head + cfg.n_layers * per_block + d
+}
+
+/// All linear weight matrices of a block, as mutable references, with ids.
+pub fn block_linears_mut(b: &mut BlockWeights, block: usize) -> Vec<(LayerId, &mut Tensor)> {
+    vec![
+        (LayerId { block, kind: LayerKind::Q }, &mut b.wq),
+        (LayerId { block, kind: LayerKind::K }, &mut b.wk),
+        (LayerId { block, kind: LayerKind::V }, &mut b.wv),
+        (LayerId { block, kind: LayerKind::O }, &mut b.wo),
+        (LayerId { block, kind: LayerKind::Gate }, &mut b.wg),
+        (LayerId { block, kind: LayerKind::Up }, &mut b.wu),
+        (LayerId { block, kind: LayerKind::Down }, &mut b.wd),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn families_have_distinct_architectures() {
+        let l2 = family_config("l2", "s");
+        let l3 = family_config("l3", "s");
+        let g3 = family_config("g3", "s");
+        let q3 = family_config("q3", "s");
+        let r1 = family_config("r1", "s");
+        assert_eq!(l2.n_kv_heads, l2.n_heads);
+        assert!(l3.n_kv_heads < l3.n_heads);
+        assert!(g3.tied_embeddings);
+        assert!(q3.rope_theta > l2.rope_theta);
+        assert!(r1.d_ff < l2.d_ff);
+    }
+
+    #[test]
+    fn sizes_are_monotone() {
+        let xs = param_count(&family_config("l2", "xs"));
+        let s = param_count(&family_config("l2", "s"));
+        let m = param_count(&family_config("l2", "m"));
+        let l = param_count(&family_config("l2", "l"));
+        assert!(xs < s && s < m && m < l);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for f in ["l2", "l3", "g3", "q3", "r1"] {
+            for s in ["xs", "s", "m", "l"] {
+                let c = family_config(f, s);
+                assert_eq!(c.d_model % c.n_heads, 0, "{f}-{s}");
+                assert_eq!(c.n_heads % c.n_kv_heads, 0, "{f}-{s}");
+                assert_eq!(c.d_ff % 8, 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,534 @@
+//! Model definition and forward pass (with caches for backward).
+//!
+//! Llama-style decoder: pre-RMSNorm, rotary position embeddings, causal
+//! multi-head attention with optional grouped KV heads, SwiGLU MLP,
+//! residual connections, tied or untied LM head. Activations are kept as
+//! `[B*S, D]` row-major tensors; attention reshapes per (batch, head).
+
+use crate::tensor::{matmul_a_bt, Tensor};
+use crate::util::rng::Rng;
+
+/// Architecture hyperparameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_theta: f32,
+    pub tied_embeddings: bool,
+    pub eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+    /// Heads per KV group.
+    pub fn gqa_groups(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+}
+
+/// Which linear inside a block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LayerKind {
+    Q,
+    K,
+    V,
+    O,
+    Gate,
+    Up,
+    Down,
+}
+
+impl LayerKind {
+    pub const ALL: [LayerKind; 7] = [
+        LayerKind::Q,
+        LayerKind::K,
+        LayerKind::V,
+        LayerKind::O,
+        LayerKind::Gate,
+        LayerKind::Up,
+        LayerKind::Down,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerKind::Q => "q_proj",
+            LayerKind::K => "k_proj",
+            LayerKind::V => "v_proj",
+            LayerKind::O => "o_proj",
+            LayerKind::Gate => "gate_proj",
+            LayerKind::Up => "up_proj",
+            LayerKind::Down => "down_proj",
+        }
+    }
+}
+
+/// Weights of one transformer block. All linears are `[d_out, d_in]` and
+/// applied as `y = x W^T`.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub ln1: Vec<f32>,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ln2: Vec<f32>,
+    pub wg: Tensor,
+    pub wu: Tensor,
+    pub wd: Tensor,
+}
+
+impl BlockWeights {
+    pub fn linear(&self, kind: LayerKind) -> &Tensor {
+        match kind {
+            LayerKind::Q => &self.wq,
+            LayerKind::K => &self.wk,
+            LayerKind::V => &self.wv,
+            LayerKind::O => &self.wo,
+            LayerKind::Gate => &self.wg,
+            LayerKind::Up => &self.wu,
+            LayerKind::Down => &self.wd,
+        }
+    }
+
+    pub fn linear_mut(&mut self, kind: LayerKind) -> &mut Tensor {
+        match kind {
+            LayerKind::Q => &mut self.wq,
+            LayerKind::K => &mut self.wk,
+            LayerKind::V => &mut self.wv,
+            LayerKind::O => &mut self.wo,
+            LayerKind::Gate => &mut self.wg,
+            LayerKind::Up => &mut self.wu,
+            LayerKind::Down => &mut self.wd,
+        }
+    }
+}
+
+/// Full model parameters.
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub cfg: ModelConfig,
+    pub embed: Tensor, // [vocab, d]
+    pub blocks: Vec<BlockWeights>,
+    pub ln_f: Vec<f32>,
+    /// LM head [vocab, d]; `None` when embeddings are tied.
+    pub head: Option<Tensor>,
+}
+
+impl ModelParams {
+    /// Random initialization (scaled like standard transformer init).
+    pub fn init(cfg: &ModelConfig, rng: &mut Rng) -> ModelParams {
+        let d = cfg.d_model;
+        let hd = cfg.head_dim();
+        let kv = cfg.n_kv_heads * hd;
+        let std = 0.02f32;
+        let out_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+        let blocks = (0..cfg.n_layers)
+            .map(|_| BlockWeights {
+                ln1: vec![1.0; d],
+                wq: Tensor::randn(&[d, d], std, rng),
+                wk: Tensor::randn(&[kv, d], std, rng),
+                wv: Tensor::randn(&[kv, d], std, rng),
+                wo: Tensor::randn(&[d, d], out_std, rng),
+                ln2: vec![1.0; d],
+                wg: Tensor::randn(&[cfg.d_ff, d], std, rng),
+                wu: Tensor::randn(&[cfg.d_ff, d], std, rng),
+                wd: Tensor::randn(&[d, cfg.d_ff], out_std, rng),
+            })
+            .collect();
+        ModelParams {
+            cfg: cfg.clone(),
+            embed: Tensor::randn(&[cfg.vocab, d], std, rng),
+            blocks,
+            ln_f: vec![1.0; d],
+            head: if cfg.tied_embeddings {
+                None
+            } else {
+                Some(Tensor::randn(&[cfg.vocab, d], std, rng))
+            },
+        }
+    }
+
+    pub fn head_weight(&self) -> &Tensor {
+        self.head.as_ref().unwrap_or(&self.embed)
+    }
+}
+
+/// RMSNorm forward. Returns (y, rstd per row).
+pub fn rmsnorm(x: &Tensor, w: &[f32], eps: f32) -> (Tensor, Vec<f32>) {
+    let (n, d) = (x.rows(), x.cols());
+    assert_eq!(w.len(), d);
+    let mut y = Tensor::zeros(&[n, d]);
+    let mut rstd = vec![0.0f32; n];
+    for i in 0..n {
+        let row = x.row(i);
+        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+        let r = 1.0 / (ms + eps as f64).sqrt();
+        rstd[i] = r as f32;
+        let out = y.row_mut(i);
+        for j in 0..d {
+            out[j] = row[j] * rstd[i] * w[j];
+        }
+    }
+    (y, rstd)
+}
+
+/// Apply rotary embeddings in place to a `[B*S, H*hd]` tensor.
+/// `positions[i]` is the sequence position of row i.
+pub fn rope_inplace(x: &mut Tensor, positions: &[usize], n_heads: usize, hd: usize, theta: f32, inverse: bool) {
+    let n = x.rows();
+    assert_eq!(x.cols(), n_heads * hd);
+    assert_eq!(positions.len(), n);
+    let half = hd / 2;
+    // Precompute inverse frequencies.
+    let inv_freq: Vec<f64> = (0..half)
+        .map(|i| 1.0 / (theta as f64).powf(2.0 * i as f64 / hd as f64))
+        .collect();
+    for row_i in 0..n {
+        let pos = positions[row_i] as f64;
+        let row = x.row_mut(row_i);
+        for h in 0..n_heads {
+            let base = h * hd;
+            for i in 0..half {
+                let angle = pos * inv_freq[i];
+                let (sin, cos) = angle.sin_cos();
+                let (sin, cos) = (sin as f32, cos as f32);
+                let sin = if inverse { -sin } else { sin };
+                let a = row[base + i];
+                let b = row[base + half + i];
+                row[base + i] = a * cos - b * sin;
+                row[base + half + i] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+/// Cache of intermediate activations of one block (for backward).
+pub struct BlockCache {
+    pub x_in: Tensor,
+    pub rstd1: Vec<f32>,
+    pub h1: Tensor, // post-ln1
+    pub q: Tensor,  // post-rope [BS, H*hd]
+    pub k: Tensor,  // post-rope [BS, KV*hd]
+    pub v: Tensor,  // [BS, KV*hd]
+    /// Per (batch, head): S x S softmax probabilities (causal).
+    pub probs: Vec<Tensor>,
+    pub att: Tensor,   // concat head outputs [BS, H*hd]
+    pub x_mid: Tensor, // after attention residual
+    pub rstd2: Vec<f32>,
+    pub h2: Tensor,   // post-ln2
+    pub gate: Tensor, // pre-activation gate [BS, F]
+    pub up: Tensor,   // [BS, F]
+    pub act: Tensor,  // silu(gate) * up
+    pub batch: usize,
+    pub seq: usize,
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// Forward one block over `[B*S, D]` activations (batch-major rows:
+/// row = b * seq + s). Returns output activations and the backward cache.
+pub fn block_forward(
+    cfg: &ModelConfig,
+    w: &BlockWeights,
+    x: &Tensor,
+    batch: usize,
+    seq: usize,
+) -> (Tensor, BlockCache) {
+    let d = cfg.d_model;
+    assert_eq!(x.rows(), batch * seq);
+    assert_eq!(x.cols(), d);
+    let hd = cfg.head_dim();
+    let (h1, rstd1) = rmsnorm(x, &w.ln1, cfg.eps);
+    let mut q = matmul_a_bt(&h1, &w.wq); // [BS, H*hd]
+    let mut k = matmul_a_bt(&h1, &w.wk); // [BS, KV*hd]
+    let v = matmul_a_bt(&h1, &w.wv); // [BS, KV*hd]
+    let positions: Vec<usize> = (0..batch * seq).map(|i| i % seq).collect();
+    rope_inplace(&mut q, &positions, cfg.n_heads, hd, cfg.rope_theta, false);
+    rope_inplace(&mut k, &positions, cfg.n_kv_heads, hd, cfg.rope_theta, false);
+
+    // Attention per (batch, head).
+    let scale = 1.0 / (hd as f32).sqrt();
+    let groups = cfg.gqa_groups();
+    let mut att = Tensor::zeros(&[batch * seq, cfg.n_heads * hd]);
+    let mut probs = Vec::with_capacity(batch * cfg.n_heads);
+    for b in 0..batch {
+        for h in 0..cfg.n_heads {
+            let g = h / groups; // kv head index
+            // scores[s, t] = q[b,s,h] . k[b,t,g] * scale   (t <= s)
+            let mut p = Tensor::zeros(&[seq, seq]);
+            for s in 0..seq {
+                let qrow = &q.row(b * seq + s)[h * hd..(h + 1) * hd];
+                let prow = p.row_mut(s);
+                let mut maxv = f32::NEG_INFINITY;
+                for t in 0..=s {
+                    let krow = &k.row(b * seq + t)[g * hd..(g + 1) * hd];
+                    let sc = crate::tensor::dot(qrow, krow) * scale;
+                    prow[t] = sc;
+                    maxv = maxv.max(sc);
+                }
+                // softmax over [0..=s]
+                let mut z = 0.0f32;
+                for t in 0..=s {
+                    prow[t] = (prow[t] - maxv).exp();
+                    z += prow[t];
+                }
+                let inv = 1.0 / z;
+                for t in 0..=s {
+                    prow[t] *= inv;
+                }
+            }
+            // out[s] = sum_t p[s,t] v[b,t,g]
+            for s in 0..seq {
+                let (orow_start, orow_end) = (h * hd, (h + 1) * hd);
+                let mut acc = vec![0.0f32; hd];
+                for t in 0..=s {
+                    let pv = p.at2(s, t);
+                    if pv != 0.0 {
+                        let vrow = &v.row(b * seq + t)[g * hd..(g + 1) * hd];
+                        for (a, &vv) in acc.iter_mut().zip(vrow.iter()) {
+                            *a += pv * vv;
+                        }
+                    }
+                }
+                att.row_mut(b * seq + s)[orow_start..orow_end].copy_from_slice(&acc);
+            }
+            probs.push(p);
+        }
+    }
+    let o = matmul_a_bt(&att, &w.wo); // [BS, D]
+    let x_mid = x.add(&o);
+
+    // MLP.
+    let (h2, rstd2) = rmsnorm(&x_mid, &w.ln2, cfg.eps);
+    let gate = matmul_a_bt(&h2, &w.wg);
+    let up = matmul_a_bt(&h2, &w.wu);
+    let act = gate.zip(&up, |g, u| silu(g) * u);
+    let down = matmul_a_bt(&act, &w.wd);
+    let x_out = x_mid.add(&down);
+
+    let cache = BlockCache {
+        x_in: x.clone(),
+        rstd1,
+        h1,
+        q,
+        k,
+        v,
+        probs,
+        att,
+        x_mid,
+        rstd2,
+        h2,
+        gate,
+        up,
+        act,
+        batch,
+        seq,
+    };
+    (x_out, cache)
+}
+
+/// Cache for the full model forward.
+pub struct ModelCache {
+    pub tokens: Vec<u16>,
+    pub batch: usize,
+    pub seq: usize,
+    pub x0: Tensor,
+    pub blocks: Vec<BlockCache>,
+    pub x_final: Tensor,
+    pub rstd_f: Vec<f32>,
+    pub hf: Tensor,
+}
+
+/// Full forward: tokens (batch-major, length B*S) -> logits [B*S, vocab].
+pub fn model_forward(
+    params: &ModelParams,
+    tokens: &[u16],
+    batch: usize,
+    seq: usize,
+    want_cache: bool,
+) -> (Tensor, Option<ModelCache>) {
+    let cfg = &params.cfg;
+    assert_eq!(tokens.len(), batch * seq);
+    let d = cfg.d_model;
+    let mut x = Tensor::zeros(&[batch * seq, d]);
+    for (i, &t) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(params.embed.row(t as usize));
+    }
+    let x0 = if want_cache { x.clone() } else { Tensor::zeros(&[0, 0]) };
+    let mut caches = Vec::new();
+    for bw in &params.blocks {
+        let (x_next, cache) = block_forward(cfg, bw, &x, batch, seq);
+        x = x_next;
+        if want_cache {
+            caches.push(cache);
+        }
+    }
+    let (hf, rstd_f) = rmsnorm(&x, &params.ln_f, cfg.eps);
+    let logits = matmul_a_bt(&hf, params.head_weight());
+    let cache = if want_cache {
+        Some(ModelCache {
+            tokens: tokens.to_vec(),
+            batch,
+            seq,
+            x0,
+            blocks: caches,
+            x_final: x,
+            rstd_f,
+            hf,
+        })
+    } else {
+        None
+    };
+    (logits, cache)
+}
+
+/// Forward through blocks only (given embedded input), used by the
+/// reconstruction pipeline to produce block inputs under an
+/// already-quantized prefix.
+pub fn forward_blocks_range(
+    cfg: &ModelConfig,
+    blocks: &[BlockWeights],
+    x: &Tensor,
+    batch: usize,
+    seq: usize,
+) -> Tensor {
+    let mut cur = x.clone();
+    for bw in blocks {
+        let (next, _) = block_forward(cfg, bw, &cur, batch, seq);
+        cur = next;
+    }
+    cur
+}
+
+/// Embed tokens.
+pub fn embed_tokens(params: &ModelParams, tokens: &[u16]) -> Tensor {
+    let d = params.cfg.d_model;
+    let mut x = Tensor::zeros(&[tokens.len(), d]);
+    for (i, &t) in tokens.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(params.embed.row(t as usize));
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+
+    fn tiny() -> (ModelConfig, ModelParams) {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let params = ModelParams::init(&cfg, &mut rng);
+        (cfg, params)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let (cfg, params) = tiny();
+        let tokens: Vec<u16> = (0..2 * 8).map(|i| (i % 250) as u16).collect();
+        let (logits, cache) = model_forward(&params, &tokens, 2, 8, true);
+        assert_eq!(logits.shape, vec![16, cfg.vocab]);
+        let c = cache.unwrap();
+        assert_eq!(c.blocks.len(), cfg.n_layers);
+        assert_eq!(c.blocks[0].probs.len(), 2 * cfg.n_heads);
+    }
+
+    #[test]
+    fn causality_future_tokens_do_not_affect_past() {
+        let (_, params) = tiny();
+        let t1: Vec<u16> = vec![5, 6, 7, 8, 9, 10, 11, 12];
+        let mut t2 = t1.clone();
+        t2[7] = 99; // change the last token only
+        let (l1, _) = model_forward(&params, &t1, 1, 8, false);
+        let (l2, _) = model_forward(&params, &t2, 1, 8, false);
+        // Logits at positions 0..7 must be identical.
+        for p in 0..7 {
+            for v in 0..l1.cols() {
+                assert_eq!(l1.at2(p, v), l2.at2(p, v), "pos {p}");
+            }
+        }
+        // Position 7 must differ (input changed there).
+        let diff: f32 = (0..l1.cols()).map(|v| (l1.at2(7, v) - l2.at2(7, v)).abs()).sum();
+        assert!(diff > 0.0);
+    }
+
+    #[test]
+    fn batch_rows_are_independent() {
+        let (_, params) = tiny();
+        let a: Vec<u16> = vec![1, 2, 3, 4];
+        let b: Vec<u16> = vec![9, 8, 7, 6];
+        let (la, _) = model_forward(&params, &a, 1, 4, false);
+        let combined: Vec<u16> = a.iter().chain(b.iter()).copied().collect();
+        let (lc, _) = model_forward(&params, &combined, 2, 4, false);
+        for p in 0..4 {
+            for v in 0..la.cols() {
+                let x = la.at2(p, v);
+                let y = lc.at2(p, v);
+                assert!((x - y).abs() < 1e-5, "pos {p} vocab {v}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn rope_inverse_roundtrips() {
+        let mut rng = Rng::new(1);
+        let mut x = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let orig = x.clone();
+        let pos: Vec<usize> = (0..6).collect();
+        rope_inplace(&mut x, &pos, 2, 4, 10_000.0, false);
+        assert!(x.rel_error(&orig) > 1e-3); // actually rotated
+        rope_inplace(&mut x, &pos, 2, 4, 10_000.0, true);
+        assert!(x.rel_error(&orig) < 1e-5);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[4, 16], 3.0, &mut rng);
+        let w = vec![1.0f32; 16];
+        let (y, _) = rmsnorm(&x, &w, 1e-6);
+        for i in 0..4 {
+            let ms: f32 = y.row(i).iter().map(|v| v * v).sum::<f32>() / 16.0;
+            assert!((ms - 1.0).abs() < 1e-3, "ms={ms}");
+        }
+    }
+
+    #[test]
+    fn gqa_runs_and_differs_from_mha() {
+        let cfg_mha = family_config("l2", "xs");
+        let cfg_gqa = family_config("l3", "xs");
+        let mut rng = Rng::new(3);
+        let p1 = ModelParams::init(&cfg_mha, &mut rng);
+        let p2 = ModelParams::init(&cfg_gqa, &mut rng);
+        assert!(p2.blocks[0].wk.rows() < p1.blocks[0].wk.rows());
+        let tokens: Vec<u16> = (0..8).collect();
+        let (l, _) = model_forward(&p2, &tokens, 1, 8, false);
+        assert!(l.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn tied_embeddings_share_head() {
+        let cfg = family_config("g3", "xs");
+        let mut rng = Rng::new(4);
+        let p = ModelParams::init(&cfg, &mut rng);
+        assert!(p.head.is_none());
+        assert_eq!(p.head_weight().shape, p.embed.shape);
+    }
+}

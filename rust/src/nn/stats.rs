@@ -1,0 +1,92 @@
+//! Calibration statistics: the K-FAC diagonal estimates feeding the robust
+//! Hessian preconditioners (paper §3.2, Algorithm 1 Phase 1).
+//!
+//! For each linear layer `y = x W^T` we accumulate, over calibration tokens:
+//! - `D_in[j]  ∝ E[x_j^2]`  — input-activation second moments,
+//! - `D_out[i] ∝ E[g_i^2]`  — output-gradient second moments,
+//!
+//! recorded during the teacher's forward/backward over the calibration set.
+
+use super::LayerId;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// Running second-moment accumulators per layer.
+#[derive(Clone, Debug, Default)]
+pub struct StatsCollector {
+    pub layers: BTreeMap<LayerId, LayerStats>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    /// Sum of squared inputs per input channel.
+    pub in_sq: Vec<f64>,
+    /// Sum of squared output gradients per output channel.
+    pub out_sq: Vec<f64>,
+    /// Token count accumulated.
+    pub count: usize,
+}
+
+impl StatsCollector {
+    pub fn new() -> StatsCollector {
+        StatsCollector::default()
+    }
+
+    /// Record one batch: `x [N, d_in]` is the layer input, `g [N, d_out]`
+    /// the gradient at the layer output.
+    pub fn record(&mut self, id: LayerId, x: &Tensor, g: &Tensor) {
+        assert_eq!(x.rows(), g.rows());
+        let entry = self.layers.entry(id).or_insert_with(|| LayerStats {
+            in_sq: vec![0.0; x.cols()],
+            out_sq: vec![0.0; g.cols()],
+            count: 0,
+        });
+        assert_eq!(entry.in_sq.len(), x.cols());
+        assert_eq!(entry.out_sq.len(), g.cols());
+        for i in 0..x.rows() {
+            for (acc, &v) in entry.in_sq.iter_mut().zip(x.row(i).iter()) {
+                *acc += (v as f64) * (v as f64);
+            }
+            for (acc, &v) in entry.out_sq.iter_mut().zip(g.row(i).iter()) {
+                *acc += (v as f64) * (v as f64);
+            }
+        }
+        entry.count += x.rows();
+    }
+
+    /// Mean squared input activations (the raw `D_in^2` diagonal).
+    pub fn mean_in_sq(&self, id: LayerId) -> Vec<f64> {
+        let s = &self.layers[&id];
+        s.in_sq.iter().map(|&v| v / s.count.max(1) as f64).collect()
+    }
+
+    /// Mean squared output gradients (the raw `D_out^2` diagonal).
+    pub fn mean_out_sq(&self, id: LayerId) -> Vec<f64> {
+        let s = &self.layers[&id];
+        s.out_sq.iter().map(|&v| v / s.count.max(1) as f64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::LayerKind;
+
+    #[test]
+    fn accumulates_across_batches() {
+        let id = LayerId { block: 0, kind: LayerKind::Q };
+        let mut s = StatsCollector::new();
+        let x1 = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let g1 = Tensor::new(&[2, 3], vec![1., 0., 0., 0., 2., 0.]);
+        s.record(id, &x1, &g1);
+        s.record(id, &x1, &g1);
+        let din = s.mean_in_sq(id);
+        // E[x_0^2] = (1 + 9 + 1 + 9)/4 = 5
+        assert!((din[0] - 5.0).abs() < 1e-12);
+        assert!((din[1] - 10.0).abs() < 1e-12);
+        let dout = s.mean_out_sq(id);
+        assert!((dout[0] - 0.5).abs() < 1e-12);
+        assert!((dout[1] - 2.0).abs() < 1e-12);
+        assert!((dout[2] - 0.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,136 @@
+//! Latent magnitude balancing and scale extraction (paper §3.2 Step 2-3,
+//! Eq. 7–9; Appendix A).
+//!
+//! The factorization `U Vᵀ` is scale-ambiguous: `(ηU)(η⁻¹V)ᵀ` reconstructs
+//! the same matrix. Balancing picks the minimum-energy representative
+//! (η* = sqrt(‖V̂‖F/‖Û‖F), Proposition 1) which equalizes the factor
+//! norms, then extracts the channel scales as row-wise mean magnitudes.
+
+use super::scheme::LatentFactors;
+use crate::tensor::Tensor;
+
+/// Given the ADMM consensus variables and the preconditioners, recover the
+/// unscaled proxies, balance them, and extract scales + latents.
+///
+/// `p_u [n, r]`, `p_v [m, r]`; `d_out [n]`, `d_in [m]` are the diagonal
+/// preconditioner entries (the quantized weight lives in the *original*
+/// coordinate frame: Û = D_out⁻¹ P_U, V̂ = D_in⁻¹ P_V, Eq. 9).
+pub fn balance_and_extract(
+    p_u: &Tensor,
+    p_v: &Tensor,
+    d_out: &[f32],
+    d_in: &[f32],
+) -> LatentFactors {
+    let (n, r) = (p_u.rows(), p_u.cols());
+    let m = p_v.rows();
+    assert_eq!(p_v.cols(), r);
+    assert_eq!(d_out.len(), n);
+    assert_eq!(d_in.len(), m);
+
+    // Û = D_out^-1 P_U, V̂ = D_in^-1 P_V.
+    let inv_out: Vec<f32> = d_out.iter().map(|&x| 1.0 / x.max(1e-12)).collect();
+    let inv_in: Vec<f32> = d_in.iter().map(|&x| 1.0 / x.max(1e-12)).collect();
+    let u_hat = p_u.scale_rows(&inv_out);
+    let v_hat = p_v.scale_rows(&inv_in);
+
+    // η* = sqrt(‖V̂‖F / ‖Û‖F)  (Eq. 7).
+    let nu = u_hat.fro_norm().max(1e-30);
+    let nv = v_hat.fro_norm().max(1e-30);
+    let eta = (nv / nu).sqrt() as f32;
+
+    // Balanced latents 𝒰 = η Û, 𝒱 = η^-1 V̂ (Eq. 9).
+    let u = u_hat.scale(eta);
+    let v = v_hat.scale(1.0 / eta);
+
+    // Scales from mean absolute row magnitudes of the balanced latents
+    // (Eq. 8): s1_i = mean|η û_i|, s2_j = mean|η^-1 v̂_j|.
+    let s1 = u.row_abs_mean();
+    let s2 = v.row_abs_mean();
+
+    LatentFactors { u, v, s1, s2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn balanced_factors_have_equal_norms() {
+        check("balanced factor norms equal", 30, |g| {
+            let n = g.int(4, 40);
+            let m = g.int(4, 40);
+            let r = g.int(1, 8);
+            let mut rng = Rng::new(g.seed);
+            let p_u = Tensor::randn(&[n, r], 3.0, &mut rng);
+            let p_v = Tensor::randn(&[m, r], 0.1, &mut rng);
+            let d_out = vec![1.0f32; n];
+            let d_in = vec![1.0f32; m];
+            let lat = balance_and_extract(&p_u, &p_v, &d_out, &d_in);
+            let nu = lat.u.fro_norm();
+            let nv = lat.v.fro_norm();
+            assert!((nu - nv).abs() / nu.max(1e-9) < 1e-3, "nu={nu} nv={nv}");
+        });
+    }
+
+    #[test]
+    fn balancing_preserves_product() {
+        let mut rng = Rng::new(0);
+        let p_u = Tensor::randn(&[10, 4], 5.0, &mut rng);
+        let p_v = Tensor::randn(&[12, 4], 0.2, &mut rng);
+        let d_out = vec![1.0f32; 10];
+        let d_in = vec![1.0f32; 12];
+        let before = crate::tensor::matmul_a_bt(&p_u, &p_v);
+        let lat = balance_and_extract(&p_u, &p_v, &d_out, &d_in);
+        let after = crate::tensor::matmul_a_bt(&lat.u, &lat.v);
+        assert!(after.rel_error(&before) < 1e-4);
+    }
+
+    #[test]
+    fn preconditioner_inverse_is_applied() {
+        let mut rng = Rng::new(1);
+        let p_u = Tensor::randn(&[6, 3], 1.0, &mut rng);
+        let p_v = Tensor::randn(&[8, 3], 1.0, &mut rng);
+        // Doubling d_out[0] must halve latent row 0 (up to the global η).
+        let mut d_out = vec![1.0f32; 6];
+        let d_in = vec![1.0f32; 8];
+        let base = balance_and_extract(&p_u, &p_v, &d_out, &d_in);
+        d_out[0] = 2.0;
+        let scaled = balance_and_extract(&p_u, &p_v, &d_out, &d_in);
+        // Ratio of row-0 norms base/scaled ≈ 2 (η changes only globally, and
+        // only slightly for one row of six; allow tolerance).
+        let norm = |t: &Tensor, i: usize| -> f32 {
+            t.row(i).iter().map(|x| x * x).sum::<f32>().sqrt()
+        };
+        let ratio = norm(&base.u, 0) / norm(&scaled.u, 0);
+        assert!(ratio > 1.7 && ratio < 2.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn scales_are_positive_and_track_magnitude() {
+        let mut rng = Rng::new(2);
+        let mut p_u = Tensor::randn(&[5, 4], 1.0, &mut rng);
+        // Make row 3 much larger.
+        for x in p_u.row_mut(3) {
+            *x *= 10.0;
+        }
+        let p_v = Tensor::randn(&[7, 4], 1.0, &mut rng);
+        let lat = balance_and_extract(&p_u, &p_v, &[1.0; 5], &[1.0; 7]);
+        assert!(lat.s1.iter().all(|&s| s > 0.0));
+        assert!(lat.s2.iter().all(|&s| s > 0.0));
+        assert!(lat.s1[3] > 3.0 * lat.s1[0], "s1={:?}", lat.s1);
+    }
+
+    #[test]
+    fn reconstruction_quality_invariant_to_input_imbalance() {
+        // Feeding (cU, V/c) must give the same reconstruct() as (U, V).
+        let mut rng = Rng::new(3);
+        let p_u = Tensor::randn(&[9, 5], 1.0, &mut rng);
+        let p_v = Tensor::randn(&[11, 5], 1.0, &mut rng);
+        let a = balance_and_extract(&p_u, &p_v, &[1.0; 9], &[1.0; 11]).reconstruct();
+        let b = balance_and_extract(&p_u.scale(100.0), &p_v.scale(0.01), &[1.0; 9], &[1.0; 11])
+            .reconstruct();
+        assert!(b.rel_error(&a) < 1e-3, "err={}", b.rel_error(&a));
+    }
+}

@@ -1,0 +1,174 @@
+//! BiLLM (Huang et al., 2024): salient/non-salient split binarization.
+//!
+//! Salient columns (Hessian-diagonal criterion) get *second-order residual
+//! binarization* (`W ≈ α₁B₁ + α₂B₂`); non-salient columns are split by
+//! magnitude into two groups ("bell-shaped distribution splitting"), each
+//! binarized with per-row-block scales. Storage follows Appendix F Eq. 44.
+
+use super::{salient_columns, WeightQuantizer};
+use crate::quant::bpw::billm_bits;
+use crate::tensor::Tensor;
+
+pub struct BiLlm {
+    /// Max salient columns (open-source cap: 50).
+    pub salient: usize,
+    /// Column block size for scales (k = 128).
+    pub block: usize,
+}
+
+impl Default for BiLlm {
+    fn default() -> Self {
+        BiLlm { salient: 50, block: 128 }
+    }
+}
+
+/// Per-row second-order residual binarization of the selected columns:
+/// w ≈ α₁ sign(w) + α₂ sign(w − α₁ sign(w)).
+pub fn residual_binarize_cols(w: &mut Tensor, cols: &[usize]) {
+    let n = w.rows();
+    for i in 0..n {
+        // α₁ = mean |w_ij| over selected cols.
+        let mut a1 = 0.0f64;
+        for &j in cols {
+            a1 += w.at2(i, j).abs() as f64;
+        }
+        let a1 = (a1 / cols.len().max(1) as f64) as f32;
+        // Residual and α₂.
+        let mut a2 = 0.0f64;
+        for &j in cols {
+            let r = w.at2(i, j) - a1 * w.at2(i, j).signum_pm1();
+            a2 += r.abs() as f64;
+        }
+        let a2 = (a2 / cols.len().max(1) as f64) as f32;
+        for &j in cols {
+            let x = w.at2(i, j);
+            let b1 = x.signum_pm1();
+            let r = x - a1 * b1;
+            *w.at2_mut(i, j) = a1 * b1 + a2 * r.signum_pm1();
+        }
+    }
+}
+
+/// Magnitude-split two-group binarization of the given columns, per row:
+/// entries with |w| above the row median of the selected set form the
+/// "concentrated" group; each group gets its own α.
+pub fn split_binarize_cols(w: &mut Tensor, cols: &[usize]) {
+    let n = w.rows();
+    for i in 0..n {
+        let mut mags: Vec<f32> = cols.iter().map(|&j| w.at2(i, j).abs()).collect();
+        if mags.is_empty() {
+            continue;
+        }
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let thr = mags[mags.len() / 2];
+        let (mut hi_sum, mut hi_n, mut lo_sum, mut lo_n) = (0.0f64, 0usize, 0.0f64, 0usize);
+        for &j in cols {
+            let a = w.at2(i, j).abs();
+            if a >= thr {
+                hi_sum += a as f64;
+                hi_n += 1;
+            } else {
+                lo_sum += a as f64;
+                lo_n += 1;
+            }
+        }
+        let hi_a = (hi_sum / hi_n.max(1) as f64) as f32;
+        let lo_a = (lo_sum / lo_n.max(1) as f64) as f32;
+        for &j in cols {
+            let x = w.at2(i, j);
+            let alpha = if x.abs() >= thr { hi_a } else { lo_a };
+            *w.at2_mut(i, j) = alpha * x.signum_pm1();
+        }
+    }
+}
+
+trait SignumPm1 {
+    fn signum_pm1(self) -> f32;
+}
+impl SignumPm1 for f32 {
+    #[inline]
+    fn signum_pm1(self) -> f32 {
+        if self >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+impl WeightQuantizer for BiLlm {
+    fn name(&self) -> String {
+        "BiLLM".into()
+    }
+    fn quantize_weight(&self, w: &Tensor, d_in: &[f32]) -> (Tensor, usize) {
+        let (n, m) = (w.rows(), w.cols());
+        let c = self.salient.min(m / 2);
+        let sal = salient_columns(w, d_in, c);
+        let sal_set: Vec<bool> = {
+            let mut v = vec![false; m];
+            for &j in &sal {
+                v[j] = true;
+            }
+            v
+        };
+        let nonsal: Vec<usize> = (0..m).filter(|&j| !sal_set[j]).collect();
+        let mut out = w.clone();
+        residual_binarize_cols(&mut out, &sal);
+        split_binarize_cols(&mut out, &nonsal);
+        (out, billm_bits(n, m, c, self.block))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn billm_beats_xnor_on_outlier_weights() {
+        let mut rng = Rng::new(0);
+        let mut w = Tensor::randn(&[48, 128], 0.2, &mut rng);
+        // Salient outlier columns.
+        for i in 0..48 {
+            *w.at2_mut(i, 7) = rng.normal_f32(0.0, 3.0);
+            *w.at2_mut(i, 70) = rng.normal_f32(0.0, 3.0);
+        }
+        let d_in = vec![1.0f32; 128];
+        let (bq, _) = BiLlm::default().quantize_weight(&w, &d_in);
+        let (xq, _) = super::super::Xnor.quantize_weight(&w, &d_in);
+        assert!(bq.rel_error(&w) < xq.rel_error(&w), "billm={} xnor={}", bq.rel_error(&w), xq.rel_error(&w));
+    }
+
+    #[test]
+    fn effective_bits_match_appendix_f_scale() {
+        // BPW should land in the high-2s (paper: 2.88) for big layers.
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[512, 512], 1.0, &mut rng);
+        let d_in = vec![1.0f32; 512];
+        let (_, bits) = BiLlm::default().quantize_weight(&w, &d_in);
+        let bpw = bits as f64 / (512.0 * 512.0);
+        assert!(bpw > 2.5 && bpw < 3.3, "bpw={bpw}");
+    }
+
+    #[test]
+    fn residual_binarization_reduces_error_vs_first_order() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[16, 64], 1.0, &mut rng);
+        let cols: Vec<usize> = (0..64).collect();
+        let mut second = w.clone();
+        residual_binarize_cols(&mut second, &cols);
+        let alpha = w.row_abs_mean();
+        let first = w.sign_pm1().scale_rows(&alpha);
+        assert!(second.rel_error(&w) < first.rel_error(&w));
+    }
+
+    #[test]
+    fn full_model_quantization_runs() {
+        let cfg = crate::nn::family_config("l2", "xs");
+        let mut rng = Rng::new(3);
+        let teacher = crate::nn::model::ModelParams::init(&cfg, &mut rng);
+        let res = super::super::quantize_model_with(&BiLlm::default(), &teacher, &BTreeMap::new());
+        assert!(res.effective_bpw > 2.0, "{}", res.effective_bpw);
+    }
+}

@@ -1,0 +1,119 @@
+//! GPTQ (Frantar et al., 2022) at 2 bits with grouping (`W2g64`), the
+//! higher-bit PTQ reference of Tables 3–4.
+//!
+//! Column-by-column quantization with error feedback into the not-yet
+//! quantized columns, using the diagonal Hessian approximation
+//! `H ≈ diag(E[x_j²])` from calibration. Group-wise asymmetric 2-bit grid.
+
+use super::WeightQuantizer;
+use crate::quant::bpw::gptq_bits;
+use crate::tensor::Tensor;
+
+pub struct Gptq {
+    pub bits: u32,
+    pub group: usize,
+}
+
+impl Default for Gptq {
+    fn default() -> Self {
+        Gptq { bits: 2, group: 64 }
+    }
+}
+
+impl WeightQuantizer for Gptq {
+    fn name(&self) -> String {
+        format!("GPTQ (W{}g{})", self.bits, self.group)
+    }
+    fn quantize_weight(&self, w: &Tensor, d_in: &[f32]) -> (Tensor, usize) {
+        let (n, m) = (w.rows(), w.cols());
+        let levels = (1u32 << self.bits) as f32;
+        let mut out = w.clone();
+        // Residual copy that receives error feedback.
+        let mut work = w.clone();
+        for g0 in (0..m).step_by(self.group) {
+            let g1 = (g0 + self.group).min(m);
+            // Per-row group grid from the *current* (feedback-adjusted) values.
+            for i in 0..n {
+                let row = work.row(i);
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for j in g0..g1 {
+                    lo = lo.min(row[j]);
+                    hi = hi.max(row[j]);
+                }
+                if !(hi > lo) {
+                    hi = lo + 1e-6;
+                }
+                let scale = (hi - lo) / (levels - 1.0);
+                // Quantize column-by-column with error feedback weighted by
+                // the remaining columns' sensitivities.
+                for j in g0..g1 {
+                    let x = work.at2(i, j);
+                    let qv = ((x - lo) / scale).round().clamp(0.0, levels - 1.0);
+                    let deq = lo + qv * scale;
+                    *out.at2_mut(i, j) = deq;
+                    let err = x - deq;
+                    // Spread the error into the remaining group columns,
+                    // weighted by inverse sensitivity (diagonal-H GPTQ).
+                    if j + 1 < g1 {
+                        let wsum: f32 = (j + 1..g1).map(|jj| d_in[jj]).sum();
+                        if wsum > 0.0 {
+                            for jj in j + 1..g1 {
+                                *work.at2_mut(i, jj) += err * d_in[jj] / wsum;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        (out, gptq_bits(n, m, self.bits, self.group))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn two_bit_beats_binary_rtn() {
+        let mut rng = Rng::new(0);
+        let w = Tensor::randn(&[32, 128], 1.0, &mut rng);
+        let ones = vec![1.0f32; 128];
+        let (gq, _) = Gptq::default().quantize_weight(&w, &ones);
+        let (rq, _) = super::super::Rtn.quantize_weight(&w, &ones);
+        assert!(gq.rel_error(&w) < rq.rel_error(&w));
+    }
+
+    #[test]
+    fn output_values_lie_on_grid() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[4, 64], 1.0, &mut rng);
+        let (q, _) = Gptq { bits: 2, group: 64 }.quantize_weight(&w, &vec![1.0; 64]);
+        // Each row has at most 4 distinct values (one group).
+        for i in 0..4 {
+            let mut vals: Vec<f32> = q.row(i).to_vec();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup_by(|a, b| (*a - *b).abs() < 1e-6);
+            assert!(vals.len() <= 4, "row {i} has {} distinct values", vals.len());
+        }
+    }
+
+    #[test]
+    fn bpw_matches_paper_2_28() {
+        let bits = gptq_bits(4096, 4096, 2, 64);
+        let bpw = bits as f64 / (4096.0 * 4096.0);
+        assert!((bpw - 2.28).abs() < 0.05, "bpw={bpw}");
+    }
+
+    #[test]
+    fn more_bits_reduce_error() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[16, 128], 1.0, &mut rng);
+        let ones = vec![1.0f32; 128];
+        let (q2, _) = Gptq { bits: 2, group: 64 }.quantize_weight(&w, &ones);
+        let (q3, _) = Gptq { bits: 3, group: 64 }.quantize_weight(&w, &ones);
+        let (q4, _) = Gptq { bits: 4, group: 64 }.quantize_weight(&w, &ones);
+        assert!(q3.rel_error(&w) < q2.rel_error(&w));
+        assert!(q4.rel_error(&w) < q3.rel_error(&w));
+    }
+}

@@ -1,0 +1,128 @@
+//! HBLLM (Chen et al., 2026): high-fidelity 1-bit quantization with
+//! structure-aware grouping (the `HBLLM_col` variant of the paper's
+//! tables: column-block subgroups with shared means, salient columns at
+//! second-order fidelity). Storage per Appendix F Eq. 52.
+
+use super::billm::residual_binarize_cols;
+use super::{salient_columns, WeightQuantizer};
+use crate::quant::bpw::hbllm_col_bits;
+use crate::tensor::Tensor;
+
+pub struct HbLlmCol {
+    pub salient: usize,
+    pub block: usize,
+}
+
+impl Default for HbLlmCol {
+    fn default() -> Self {
+        HbLlmCol { salient: 50, block: 128 }
+    }
+}
+
+impl WeightQuantizer for HbLlmCol {
+    fn name(&self) -> String {
+        "HBLLM_col".into()
+    }
+    fn quantize_weight(&self, w: &Tensor, d_in: &[f32]) -> (Tensor, usize) {
+        let (n, m) = (w.rows(), w.cols());
+        let c = self.salient.min(m / 2);
+        let sal = salient_columns(w, d_in, c);
+        let mut is_sal = vec![false; m];
+        for &j in &sal {
+            is_sal[j] = true;
+        }
+        let mut out = w.clone();
+        residual_binarize_cols(&mut out, &sal);
+
+        // Non-salient: per (row, column-block) mean-centered binarization
+        // with two magnitude subgroups — higher fidelity than BiLLM's global
+        // row split because scales are local to a k-column block.
+        for i in 0..n {
+            for b0 in (0..m).step_by(self.block) {
+                let b1 = (b0 + self.block).min(m);
+                let cols: Vec<usize> = (b0..b1).filter(|&j| !is_sal[j]).collect();
+                if cols.is_empty() {
+                    continue;
+                }
+                // Mean-center the block (intra-band mean sharing).
+                let mu = cols.iter().map(|&j| w.at2(i, j) as f64).sum::<f64>()
+                    / cols.len() as f64;
+                let mu = mu as f32;
+                // Two magnitude subgroups of the centered values.
+                let mut mags: Vec<f32> =
+                    cols.iter().map(|&j| (w.at2(i, j) - mu).abs()).collect();
+                mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let thr = mags[mags.len() / 2];
+                let (mut hs, mut hn, mut ls, mut ln) = (0.0f64, 0usize, 0.0f64, 0usize);
+                for &j in &cols {
+                    let a = (w.at2(i, j) - mu).abs();
+                    if a >= thr {
+                        hs += a as f64;
+                        hn += 1;
+                    } else {
+                        ls += a as f64;
+                        ln += 1;
+                    }
+                }
+                let ha = (hs / hn.max(1) as f64) as f32;
+                let la = (ls / ln.max(1) as f64) as f32;
+                for &j in &cols {
+                    let xc = w.at2(i, j) - mu;
+                    let alpha = if xc.abs() >= thr { ha } else { la };
+                    let s = if xc >= 0.0 { 1.0 } else { -1.0 };
+                    *out.at2_mut(i, j) = mu + alpha * s;
+                }
+            }
+        }
+        (out, hbllm_col_bits(n, m, self.block))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn hbllm_has_best_fidelity_of_binary_ptq_family() {
+        // Paper Table 2 ordering: HBLLM < ARB < BiLLM in PPL (HBLLM best).
+        let mut rng = Rng::new(0);
+        let mut w = Tensor::randn(&[64, 256], 0.5, &mut rng);
+        // Heterogeneous block structure + offset means.
+        for i in 0..64 {
+            for j in 0..256 {
+                *w.at2_mut(i, j) = w.at2(i, j) * (0.2 + 0.01 * (j / 32) as f32)
+                    + 0.05 * ((j / 128) as f32);
+            }
+        }
+        let d_in = vec![1.0f32; 256];
+        let (hb, _) = HbLlmCol::default().quantize_weight(&w, &d_in);
+        let (arb, _) = super::super::arbllm::ArbLlmRc::default().quantize_weight(&w, &d_in);
+        let (bi, _) = super::super::billm::BiLlm::default().quantize_weight(&w, &d_in);
+        let (ehb, earb, ebi) = (hb.rel_error(&w), arb.rel_error(&w), bi.rel_error(&w));
+        assert!(ehb < ebi, "hbllm={ehb} billm={ebi}");
+        assert!(ehb < earb * 1.15, "hbllm={ehb} arb={earb}"); // competitive or better
+    }
+
+    #[test]
+    fn bits_match_col_formula() {
+        // Eq. 52 gives ~2.88 BPW on square layers (the paper's headline
+        // 3.25 figure is the HBLLM_row variant, Eq. 50).
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[512, 512], 1.0, &mut rng);
+        let (_, bits) = HbLlmCol::default().quantize_weight(&w, &vec![1.0; 512]);
+        let bpw = bits as f64 / (512.0 * 512.0);
+        assert!(bpw > 2.6 && bpw < 3.2, "bpw={bpw}");
+    }
+
+    #[test]
+    fn model_level_quantization() {
+        let cfg = crate::nn::family_config("q3", "xs");
+        let mut rng = Rng::new(2);
+        let teacher = crate::nn::model::ModelParams::init(&cfg, &mut rng);
+        let res =
+            super::super::quantize_model_with(&HbLlmCol::default(), &teacher, &BTreeMap::new());
+        assert!(res.effective_bpw > 2.0 && res.effective_bpw < 6.0, "{}", res.effective_bpw);
+    }
+}

@@ -1,0 +1,195 @@
+//! Baseline quantizers the paper compares against (Tables 2–4, 8).
+//!
+//! Each baseline implements [`WeightQuantizer`]: given a weight matrix and
+//! the input-channel sensitivity diagonal (from calibration), produce the
+//! quantized dense approximation plus its effective storage in bits
+//! (Appendix F accounting). [`quantize_model_with`] applies a quantizer to
+//! every decoder linear of a teacher.
+
+pub mod arbllm;
+pub mod billm;
+pub mod gptq;
+pub mod hbllm;
+pub mod qat;
+pub mod stbllm;
+pub mod vq;
+
+use crate::nn::model::{LayerKind, ModelParams};
+use crate::nn::LayerId;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// A per-layer weight quantizer.
+pub trait WeightQuantizer {
+    fn name(&self) -> String;
+    /// Quantize `w [n, m]`. `d_in[j]` is the input-channel sensitivity
+    /// (robust sqrt second moment of activations). Returns the dense
+    /// approximation and the effective storage in bits.
+    fn quantize_weight(&self, w: &Tensor, d_in: &[f32]) -> (Tensor, usize);
+}
+
+/// Result of quantizing a whole model with a baseline.
+pub struct BaselineResult {
+    pub params: ModelParams,
+    pub bits_per_layer: BTreeMap<LayerId, usize>,
+    /// Effective bits per weight over the decoder linears.
+    pub effective_bpw: f64,
+    /// Model size in bytes (quantized linears + FP16 rest).
+    pub effective_bytes: usize,
+}
+
+/// Apply a quantizer to every decoder linear layer of the teacher.
+/// `d_ins` maps layers to input sensitivities (identity if absent).
+pub fn quantize_model_with(
+    q: &dyn WeightQuantizer,
+    teacher: &ModelParams,
+    d_ins: &BTreeMap<LayerId, Vec<f32>>,
+) -> BaselineResult {
+    let mut params = teacher.clone();
+    let mut bits_per_layer = BTreeMap::new();
+    let mut total_bits = 0usize;
+    let mut total_weights = 0usize;
+    for (bi, b) in params.blocks.iter_mut().enumerate() {
+        for kind in LayerKind::ALL {
+            let id = LayerId { block: bi, kind };
+            let w = b.linear(kind);
+            let ones;
+            let d_in: &[f32] = match d_ins.get(&id) {
+                Some(v) => v,
+                None => {
+                    ones = vec![1.0f32; w.cols()];
+                    &ones
+                }
+            };
+            let (wq, bits) = q.quantize_weight(w, d_in);
+            assert_eq!(wq.shape, w.shape, "{} changed weight shape", q.name());
+            total_bits += bits;
+            total_weights += w.numel();
+            bits_per_layer.insert(id, bits);
+            *b.linear_mut(kind) = wq;
+        }
+    }
+    // FP16 for the rest (embeddings, head, norms).
+    let mut rest_bits = params.embed.numel() * 16 + params.ln_f.len() * 16;
+    if let Some(h) = &params.head {
+        rest_bits += h.numel() * 16;
+    }
+    for b in &params.blocks {
+        rest_bits += (b.ln1.len() + b.ln2.len()) * 16;
+    }
+    BaselineResult {
+        params,
+        bits_per_layer,
+        effective_bpw: total_bits as f64 / total_weights as f64,
+        effective_bytes: (total_bits + rest_bits).div_ceil(8),
+    }
+}
+
+/// Per-row optimal binary scale: `argmin_α ‖w − α·sign(w)‖` = mean |w_i|.
+pub fn row_alpha(w: &Tensor) -> Vec<f32> {
+    w.row_abs_mean()
+}
+
+/// RTN: per-tensor scale binarization `W ≈ α sign(W)`, α = mean|W|.
+/// The crudest 1-bit PTQ (Table 2's catastrophic first row).
+pub struct Rtn;
+
+impl WeightQuantizer for Rtn {
+    fn name(&self) -> String {
+        "RTN".into()
+    }
+    fn quantize_weight(&self, w: &Tensor, _d_in: &[f32]) -> (Tensor, usize) {
+        let alpha = w.abs_mean() as f32;
+        // 1 bit per weight + one FP16 scalar.
+        (w.sign_pm1().scale(alpha), w.numel() + 16)
+    }
+}
+
+/// XNOR-Net: per-output-channel scales `w_i ≈ α_i sign(w_i)`.
+pub struct Xnor;
+
+impl WeightQuantizer for Xnor {
+    fn name(&self) -> String {
+        "XNOR".into()
+    }
+    fn quantize_weight(&self, w: &Tensor, _d_in: &[f32]) -> (Tensor, usize) {
+        let alpha = row_alpha(w);
+        (w.sign_pm1().scale_rows(&alpha), w.numel() + 16 * w.rows())
+    }
+}
+
+/// Select the `c` most salient input columns by sensitivity-weighted mass
+/// `d_in[j]² · Σ_i w_ij²` (the BiLLM/STBLLM Hessian-diagonal criterion).
+pub fn salient_columns(w: &Tensor, d_in: &[f32], c: usize) -> Vec<usize> {
+    let m = w.cols();
+    let mut mass = vec![0.0f64; m];
+    for i in 0..w.rows() {
+        for (j, &x) in w.row(i).iter().enumerate() {
+            mass[j] += (x as f64) * (x as f64);
+        }
+    }
+    for (j, s) in mass.iter_mut().enumerate() {
+        *s *= (d_in[j] as f64) * (d_in[j] as f64);
+    }
+    let mut idx: Vec<usize> = (0..m).collect();
+    idx.sort_by(|&a, &b| mass[b].partial_cmp(&mass[a]).unwrap());
+    idx.truncate(c.min(m));
+    idx.sort();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rtn_and_xnor_reconstruction_ordering() {
+        // Per-row scales (XNOR) are at least as good as a global scale (RTN).
+        let mut rng = Rng::new(0);
+        let mut w = Tensor::randn(&[32, 48], 1.0, &mut rng);
+        for i in 0..32 {
+            let s = 0.1 + i as f32 * 0.2;
+            for x in w.row_mut(i) {
+                *x *= s;
+            }
+        }
+        let ones = vec![1.0f32; 48];
+        let (rtn, _) = Rtn.quantize_weight(&w, &ones);
+        let (xnor, _) = Xnor.quantize_weight(&w, &ones);
+        assert!(xnor.rel_error(&w) < rtn.rel_error(&w));
+    }
+
+    #[test]
+    fn quantize_model_preserves_shapes_and_counts_bits() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(1);
+        let teacher = crate::nn::model::ModelParams::init(&cfg, &mut rng);
+        let res = quantize_model_with(&Xnor, &teacher, &BTreeMap::new());
+        assert_eq!(res.bits_per_layer.len(), cfg.n_layers * 7);
+        // XNOR ~ 1 bit + per-row scale overhead.
+        assert!(res.effective_bpw > 1.0 && res.effective_bpw < 1.5, "{}", res.effective_bpw);
+        assert_eq!(res.params.blocks[0].wq.shape, teacher.blocks[0].wq.shape);
+        assert!(res.effective_bytes < teacher.embed.numel() * 4 * 100);
+    }
+
+    #[test]
+    fn salient_columns_pick_high_mass() {
+        let mut rng = Rng::new(2);
+        let mut w = Tensor::randn(&[16, 20], 0.1, &mut rng);
+        // Make columns 3 and 17 huge.
+        for i in 0..16 {
+            *w.at2_mut(i, 3) = 5.0;
+            *w.at2_mut(i, 17) = -4.0;
+        }
+        let d_in = vec![1.0f32; 20];
+        let sal = salient_columns(&w, &d_in, 2);
+        assert_eq!(sal, vec![3, 17]);
+        // Sensitivity weighting can change the pick.
+        let mut d2 = vec![1.0f32; 20];
+        d2[5] = 100.0;
+        let sal2 = salient_columns(&w, &d2, 1);
+        assert_eq!(sal2, vec![5]);
+    }
+}

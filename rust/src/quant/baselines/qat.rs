@@ -1,0 +1,163 @@
+//! Mini binary QAT (the LittleBit / DBF / OneBit comparison of Tables 4
+//! and 7): end-to-end training of the low-rank binary model with STE on the
+//! language-modeling loss, consuming orders of magnitude more tokens than
+//! the PTQ pipeline — that data/compute gap is exactly what those tables
+//! measure.
+
+use crate::nn::adam::{cosine_lr, Adam};
+use crate::nn::backward::model_backward;
+use crate::nn::loss::cross_entropy;
+use crate::nn::model::{model_forward, LayerKind, ModelParams};
+use crate::nn::LayerId;
+use crate::quant::balance::balance_and_extract;
+use crate::quant::init::{initialize, InitMethod};
+use crate::quant::qmodel::{latent_grads, QuantModel};
+use crate::quant::scheme::rank_for_bpw;
+use crate::quant::AdmmConfig;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct QatConfig {
+    pub bpw: f64,
+    pub init: InitMethod,
+    pub steps: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub lr: f32,
+    pub admm: AdmmConfig,
+    pub seed: u64,
+}
+
+impl Default for QatConfig {
+    fn default() -> Self {
+        QatConfig {
+            bpw: 1.0,
+            init: InitMethod::DualSvid,
+            steps: 200,
+            batch: 4,
+            seq: 32,
+            lr: 1e-3,
+            admm: AdmmConfig { iters: 8, ..Default::default() },
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct QatReport {
+    pub losses: Vec<f64>,
+    pub tokens_seen: usize,
+    pub wall_seconds: f64,
+}
+
+/// End-to-end STE training of all latent binary layers on `tokens`.
+pub fn qat_train(teacher: &ModelParams, tokens: &[u16], cfg: &QatConfig) -> (QuantModel, QatReport) {
+    let t0 = std::time::Instant::now();
+    let mcfg = &teacher.cfg;
+    let mut rng = Rng::new(cfg.seed);
+    let mut qm = QuantModel::from_teacher(teacher);
+
+    // Initialize every decoder linear (identity preconditioning — QAT
+    // methods do not have a calibration phase).
+    for bi in 0..mcfg.n_layers {
+        for kind in LayerKind::ALL {
+            let id = LayerId { block: bi, kind };
+            let w = teacher.blocks[bi].linear(kind).clone();
+            let (n, m) = (w.rows(), w.cols());
+            let r = rank_for_bpw(n, m, cfg.bpw).min(n).min(m).max(1);
+            let mut acfg = cfg.admm.clone();
+            acfg.seed = cfg.seed ^ ((bi as u64) << 8) ^ kind as u64;
+            let (pu, pv) = initialize(cfg.init, &w, r, &acfg);
+            let lat = balance_and_extract(&pu, &pv, &vec![1.0; n], &vec![1.0; m]);
+            qm.set_layer(id, lat);
+        }
+    }
+
+    // Optimizers per layer.
+    let mut opts: BTreeMap<LayerId, [Adam; 4]> = qm
+        .layers
+        .iter()
+        .map(|(&id, q)| {
+            (
+                id,
+                [
+                    Adam::new(q.latent.u.numel(), cfg.lr),
+                    Adam::new(q.latent.v.numel(), cfg.lr),
+                    Adam::new(q.latent.s1.len(), cfg.lr * 10.0),
+                    Adam::new(q.latent.s2.len(), cfg.lr * 10.0),
+                ],
+            )
+        })
+        .collect();
+
+    let mut report = QatReport::default();
+    for step in 0..cfg.steps {
+        let seqs = crate::data::sample_sequences(tokens, cfg.seq + 1, cfg.batch, &mut rng);
+        let mut inputs = Vec::with_capacity(cfg.batch * cfg.seq);
+        let mut targets = Vec::with_capacity(cfg.batch * cfg.seq);
+        for s in &seqs {
+            inputs.extend_from_slice(&s[..cfg.seq]);
+            targets.extend_from_slice(&s[1..cfg.seq + 1]);
+        }
+        let (logits, cache) = model_forward(&qm.params, &inputs, cfg.batch, cfg.seq, true);
+        let (loss, dlogits) = cross_entropy(&logits, &targets);
+        report.losses.push(loss);
+        report.tokens_seen += cfg.batch * cfg.seq;
+        let grads = model_backward(&qm.params, &cache.unwrap(), &dlogits, None);
+        let lr_scale = cosine_lr(step as u64, cfg.steps as u64);
+
+        let ids: Vec<LayerId> = qm.layers.keys().copied().collect();
+        for id in ids {
+            let lg = {
+                let q = &qm.layers[&id];
+                latent_grads(&q.latent, grads.blocks[id.block].linear(id.kind))
+            };
+            let q = qm.layers.get_mut(&id).unwrap();
+            let o = opts.get_mut(&id).unwrap();
+            o[0].step(&mut q.latent.u.data, &lg.du.data, lr_scale);
+            o[1].step(&mut q.latent.v.data, &lg.dv.data, lr_scale);
+            o[2].step(&mut q.latent.s1, &lg.ds1, lr_scale);
+            o[3].step(&mut q.latent.s2, &lg.ds2, lr_scale);
+            for s in q.latent.s1.iter_mut().chain(q.latent.s2.iter_mut()) {
+                if *s < 1e-8 {
+                    *s = 1e-8;
+                }
+            }
+            qm.rematerialize(id);
+        }
+    }
+    // Freeze everything.
+    for bi in 0..mcfg.n_layers {
+        qm.freeze_block(bi);
+    }
+    report.wall_seconds = t0.elapsed().as_secs_f64();
+    (qm, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_corpus, tokenize, CorpusKind};
+    use crate::nn::family_config;
+    use crate::nn::trainer::train;
+
+    #[test]
+    fn qat_training_reduces_lm_loss() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let mut teacher = ModelParams::init(&cfg, &mut rng);
+        let corpus = gen_corpus(CorpusKind::SynthText, 120_000, 0);
+        let toks = tokenize(&corpus);
+        train(&mut teacher, &toks, 30, 4, 32, 3e-3, 1, false);
+
+        let qcfg = QatConfig { bpw: 2.0, steps: 30, batch: 2, seq: 24, ..Default::default() };
+        let (qm, report) = qat_train(&teacher, &toks, &qcfg);
+        assert_eq!(report.losses.len(), 30);
+        let first: f64 = report.losses[..5].iter().sum::<f64>() / 5.0;
+        let last: f64 = report.losses[report.losses.len() - 5..].iter().sum::<f64>() / 5.0;
+        assert!(last < first, "first={first} last={last}");
+        assert!(report.tokens_seen == 30 * 2 * 24);
+        assert!(qm.layers.values().all(|q| q.frozen.is_some()));
+    }
+}

@@ -1,0 +1,263 @@
+//! Appendix F — storage accounting for every binary quantization method,
+//! plus the published model shape specs needed to regenerate Tables 13–14
+//! **exactly** (these formulas are analytic; no hardware substitution is
+//! involved).
+//!
+//! All quantities are in *bits* for an `n × m` weight (n rows = d_out).
+//! `c` = salient columns (open-source cap 50), `k` = scale block (128).
+
+/// BiLLM (Eq. 44): `n(2m + c) + m + 112 n ⌈m/k⌉`.
+pub fn billm_bits(n: usize, m: usize, c: usize, k: usize) -> usize {
+    n * (2 * m + c) + m + 112 * n * m.div_ceil(k)
+}
+
+/// STBLLM (Eq. 46) with N:M structured sparsity.
+pub fn stbllm_bits(n: usize, m: usize, c: usize, k: usize, nn: usize, mm: usize) -> usize {
+    let idx_bits_per_block = log2_ceil(binomial(mm, nn));
+    let salient = 2 * n * c + m.div_ceil(k) * 3 * n * 16;
+    let nonsalient = (nn * (n * (m - c) + 2 * n * m)) / mm;
+    let indices = (n * (m - c) / mm) * idx_bits_per_block;
+    let scales = m.div_ceil(k) * 2 * n * 16 * 3;
+    let bitmap = m;
+    salient + nonsalient + indices + scales + bitmap
+}
+
+/// ARB-LLM_RC (Eq. 48): `n(2m + c) + 33m + 64 n ⌈m/k⌉`.
+pub fn arbllm_rc_bits(n: usize, m: usize, c: usize, k: usize) -> usize {
+    n * (2 * m + c) + 33 * m + 64 * n * m.div_ceil(k)
+}
+
+/// HBLLM-row (Eq. 50): `2n(m + c) + m + 160 n ⌈m/k⌉`.
+pub fn hbllm_row_bits(n: usize, m: usize, c: usize, k: usize) -> usize {
+    2 * n * (m + c) + m + 160 * n * m.div_ceil(k)
+}
+
+/// HBLLM-col (Eq. 52): `2nm + m + 112 n ⌈m/k⌉`.
+pub fn hbllm_col_bits(n: usize, m: usize, k: usize) -> usize {
+    2 * n * m + m + 112 * n * m.div_ceil(k)
+}
+
+/// DBF / LittleBit (Eq. 55): `r(n+m) + 16(n + r + m)` (extra mid scale).
+pub fn dbf_bits(n: usize, m: usize, r: usize) -> usize {
+    r * (n + m) + 16 * (n + r + m)
+}
+
+/// NanoQuant (Eq. 58): `r(n+m) + 16(n+m)`.
+pub fn nanoquant_bits(n: usize, m: usize, r: usize) -> usize {
+    r * (n + m) + 16 * (n + m)
+}
+
+/// GPTQ WBgG: payload + FP16 scale + 2-bit zero point per group
+/// (2.28 BPW at W2g64 as Table 4 reports).
+pub fn gptq_bits(n: usize, m: usize, bits: u32, group: usize) -> usize {
+    n * m * bits as usize + n * m.div_ceil(group) * (16 + 2)
+}
+
+fn binomial(n: usize, k: usize) -> usize {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num = 1usize;
+    let mut den = 1usize;
+    for i in 0..k {
+        num *= n - i;
+        den *= i + 1;
+    }
+    num / den
+}
+
+fn log2_ceil(x: usize) -> usize {
+    if x <= 1 {
+        return 0;
+    }
+    (usize::BITS - (x - 1).leading_zeros()) as usize
+}
+
+// ---------------------------------------------------------------------------
+// Published model shape specs (Tables 13–14). Dimensions from the public
+// model cards: (q_dim, kv_dim, ffn) describe one decoder block's linears:
+//   q: [q_dim, d], k/v: [kv_dim, d], o: [d, q_dim],
+//   gate/up: [ffn, d], down: [d, ffn].
+// ---------------------------------------------------------------------------
+
+/// Shape spec of a published LLM.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub q_dim: usize,
+    pub kv_dim: usize,
+    pub ffn: usize,
+    pub tied: bool,
+}
+
+impl ModelSpec {
+    /// (n, m) of every decoder linear in the model (with multiplicity).
+    pub fn decoder_linears(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for _ in 0..self.layers {
+            out.push((self.q_dim, self.d)); // q
+            out.push((self.kv_dim, self.d)); // k
+            out.push((self.kv_dim, self.d)); // v
+            out.push((self.d, self.q_dim)); // o
+            out.push((self.ffn, self.d)); // gate
+            out.push((self.ffn, self.d)); // up
+            out.push((self.d, self.ffn)); // down
+        }
+        out
+    }
+
+    /// Total decoder-linear weight count.
+    pub fn decoder_weights(&self) -> usize {
+        self.decoder_linears().iter().map(|&(n, m)| n * m).sum()
+    }
+
+    /// Non-decoder-linear parameters (embeddings, head, norms) — stored at
+    /// FP16 by every method compared.
+    pub fn rest_weights(&self) -> usize {
+        let emb = self.vocab * self.d;
+        let head = if self.tied { 0 } else { self.vocab * self.d };
+        let norms = (2 * self.layers + 1) * self.d;
+        emb + head + norms
+    }
+
+    /// BF16 checkpoint size in bytes.
+    pub fn bf16_bytes(&self) -> f64 {
+        ((self.decoder_weights() + self.rest_weights()) as f64) * 2.0
+    }
+
+    /// Model size in bytes under a per-layer bits function.
+    pub fn quantized_bytes(&self, bits_of: impl Fn(usize, usize) -> usize) -> f64 {
+        let dec_bits: usize = self.decoder_linears().iter().map(|&(n, m)| bits_of(n, m)).sum();
+        (dec_bits as f64) / 8.0 + (self.rest_weights() as f64) * 2.0
+    }
+
+    /// Decoder-linear BPW under a bits function.
+    pub fn bpw(&self, bits_of: impl Fn(usize, usize) -> usize) -> f64 {
+        let dec_bits: usize = self.decoder_linears().iter().map(|&(n, m)| bits_of(n, m)).sum();
+        dec_bits as f64 / self.decoder_weights() as f64
+    }
+
+    /// NanoQuant rank per layer for a target BPW, then the achieved size.
+    pub fn nanoquant_bytes(&self, bpw: f64) -> f64 {
+        self.quantized_bytes(|n, m| {
+            let r = super::scheme::rank_for_bpw(n, m, bpw);
+            nanoquant_bits(n, m, r)
+        })
+    }
+}
+
+/// The 16 pretrained models of Table 13/14.
+pub fn model_specs() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec { name: "L2-7", vocab: 32000, d: 4096, layers: 32, q_dim: 4096, kv_dim: 4096, ffn: 11008, tied: false },
+        ModelSpec { name: "L2-13", vocab: 32000, d: 5120, layers: 40, q_dim: 5120, kv_dim: 5120, ffn: 13824, tied: false },
+        ModelSpec { name: "L2-70", vocab: 32000, d: 8192, layers: 80, q_dim: 8192, kv_dim: 1024, ffn: 28672, tied: false },
+        ModelSpec { name: "L3-1", vocab: 128256, d: 2048, layers: 16, q_dim: 2048, kv_dim: 512, ffn: 8192, tied: true },
+        ModelSpec { name: "L3-3", vocab: 128256, d: 3072, layers: 28, q_dim: 3072, kv_dim: 1024, ffn: 8192, tied: true },
+        ModelSpec { name: "L3-8", vocab: 128256, d: 4096, layers: 32, q_dim: 4096, kv_dim: 1024, ffn: 14336, tied: false },
+        ModelSpec { name: "L3-70", vocab: 128256, d: 8192, layers: 80, q_dim: 8192, kv_dim: 1024, ffn: 28672, tied: false },
+        ModelSpec { name: "G3-1", vocab: 262144, d: 1152, layers: 26, q_dim: 1024, kv_dim: 256, ffn: 6912, tied: true },
+        ModelSpec { name: "G3-4", vocab: 262144, d: 2560, layers: 34, q_dim: 2048, kv_dim: 1024, ffn: 10240, tied: true },
+        ModelSpec { name: "G3-12", vocab: 262144, d: 3840, layers: 48, q_dim: 4096, kv_dim: 2048, ffn: 15360, tied: true },
+        ModelSpec { name: "G3-27", vocab: 262144, d: 5376, layers: 62, q_dim: 4096, kv_dim: 2048, ffn: 21504, tied: true },
+        ModelSpec { name: "Q3-0.6", vocab: 151936, d: 1024, layers: 28, q_dim: 2048, kv_dim: 1024, ffn: 3072, tied: true },
+        ModelSpec { name: "Q3-1.7", vocab: 151936, d: 2048, layers: 28, q_dim: 2048, kv_dim: 1024, ffn: 6144, tied: true },
+        ModelSpec { name: "Q3-4", vocab: 151936, d: 2560, layers: 36, q_dim: 4096, kv_dim: 1024, ffn: 9728, tied: true },
+        ModelSpec { name: "Q3-8", vocab: 151936, d: 4096, layers: 36, q_dim: 4096, kv_dim: 1024, ffn: 12288, tied: false },
+        ModelSpec { name: "Q3-14", vocab: 151936, d: 5120, layers: 40, q_dim: 5120, kv_dim: 1024, ffn: 17408, tied: false },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const C_MAX: usize = 50;
+    const K: usize = 128;
+
+    #[test]
+    fn large_layer_bpw_matches_paper_table14() {
+        // Paper Table 14 reports, for large models (e.g. L2-70), BPW within
+        // (min, max): BiLLM 2.88, STBLLM4:8 3.50, STBLLM6:8 4.00,
+        // ARB 2.50-2.51, HBLLM_col ~3.25. Check on L2-7 dims.
+        let spec = &model_specs()[0];
+        let b_billm = spec.bpw(|n, m| billm_bits(n, m, C_MAX, K));
+        assert!((b_billm - 2.88).abs() < 0.03, "billm={b_billm}");
+        let b_arb = spec.bpw(|n, m| arbllm_rc_bits(n, m, C_MAX, K));
+        assert!((b_arb - 2.51).abs() < 0.03, "arb={b_arb}");
+        let b_hb_row = spec.bpw(|n, m| hbllm_row_bits(n, m, C_MAX, K));
+        assert!((b_hb_row - 3.25).abs() < 0.06, "hbllm_row={b_hb_row}");
+        let b_hb_col = spec.bpw(|n, m| hbllm_col_bits(n, m, K));
+        assert!((b_hb_col - 2.88).abs() < 0.06, "hbllm_col={b_hb_col}");
+        let b_stb48 = spec.bpw(|n, m| stbllm_bits(n, m, C_MAX, K, 4, 8));
+        assert!((b_stb48 - 3.50).abs() < 0.06, "stbllm48={b_stb48}");
+        let b_stb68 = spec.bpw(|n, m| stbllm_bits(n, m, C_MAX, K, 6, 8));
+        assert!((b_stb68 - 4.00).abs() < 0.06, "stbllm68={b_stb68}");
+    }
+
+    #[test]
+    fn nanoquant_1bit_is_exactly_1() {
+        for spec in model_specs() {
+            let bpw = spec.bpw(|n, m| {
+                let r = crate::quant::scheme::rank_for_bpw(n, m, 1.0);
+                nanoquant_bits(n, m, r)
+            });
+            assert!((bpw - 1.0).abs() < 0.01, "{}: bpw={bpw}", spec.name);
+        }
+    }
+
+    #[test]
+    fn bf16_sizes_match_paper_table13() {
+        // Paper Table 13 BF16 column (GB): L2-7 13.48, L2-13 26.03,
+        // L2-70 137.95, L3-8 16.06, Q3-8 16.38.
+        let specs = model_specs();
+        let gb = |name: &str| -> f64 {
+            specs.iter().find(|s| s.name == name).unwrap().bf16_bytes() / 1e9
+        };
+        assert!((gb("L2-7") - 13.48).abs() < 0.1, "{}", gb("L2-7"));
+        assert!((gb("L2-13") - 26.03).abs() < 0.15, "{}", gb("L2-13"));
+        assert!((gb("L2-70") - 137.95).abs() < 0.8, "{}", gb("L2-70"));
+        assert!((gb("L3-8") - 16.06).abs() < 0.15, "{}", gb("L3-8"));
+        assert!((gb("Q3-8") - 16.38).abs() < 0.2, "{}", gb("Q3-8"));
+    }
+
+    #[test]
+    fn nanoquant_model_sizes_match_paper() {
+        // Table 13 NanoQuant column: L2-7 1.33 GB, L2-70 9.58 GB.
+        let specs = model_specs();
+        let nq = |name: &str| -> f64 {
+            specs.iter().find(|s| s.name == name).unwrap().nanoquant_bytes(1.0) / 1e9
+        };
+        assert!((nq("L2-7") - 1.33).abs() < 0.05, "{}", nq("L2-7"));
+        assert!((nq("L2-70") - 9.58).abs() < 0.4, "{}", nq("L2-70"));
+    }
+
+    #[test]
+    fn dbf_overhead_exceeds_nanoquant() {
+        // The mid-scale makes DBF strictly larger at the same rank.
+        for (n, m, r) in [(4096, 4096, 2032), (1024, 4096, 800)] {
+            assert!(dbf_bits(n, m, r) > nanoquant_bits(n, m, r));
+        }
+    }
+
+    #[test]
+    fn binomial_and_log2() {
+        assert_eq!(binomial(8, 4), 70);
+        assert_eq!(binomial(8, 6), 28);
+        assert_eq!(log2_ceil(70), 7);
+        assert_eq!(log2_ceil(28), 5);
+        assert_eq!(log2_ceil(1), 0);
+    }
+
+    #[test]
+    fn compression_factor_l2_70_is_24x() {
+        // Headline claim: 137.95 GB -> 5.75 GB at 0.55 bits (24x).
+        let spec = model_specs().into_iter().find(|s| s.name == "L2-70").unwrap();
+        let ratio = spec.bf16_bytes() / spec.nanoquant_bytes(0.55);
+        assert!(ratio > 20.0 && ratio < 28.0, "ratio={ratio}");
+    }
+}

@@ -1,0 +1,231 @@
+//! Initialization strategies for the latent binary factors (paper Table 5).
+//!
+//! - **LB-ADMM** (ours): the full latent-binary ADMM of `admm.rs`.
+//! - **Dual-SVID** (LittleBit, Lee et al. 2025a): truncated SVD of the
+//!   target, factors absorbed as `U√Σ, V√Σ` — no combinatorial solve.
+//! - **DBF-ADMM** (Boža & Macko 2026): ADMM with a *global-scalar* sign
+//!   proxy (`sign(P)·mean|P|`) instead of the rank-1 SVID magnitude
+//!   structure, and no ridge term.
+//!
+//! All three return pre-binary consensus factors `(P_U, P_V)` that feed the
+//! same magnitude-balancing and scale-extraction step.
+
+use super::admm::{lb_admm, AdmmConfig};
+use crate::linalg::svd_truncated;
+use crate::tensor::{matmul, matmul_at_b, Tensor};
+use crate::util::rng::Rng;
+
+/// Which initializer to use (Table 5 ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMethod {
+    LbAdmm,
+    DualSvid,
+    DbfAdmm,
+    /// No principled initialization: random latents at the target's scale
+    /// (the "Initialization ✗" row of Table 6).
+    Random,
+}
+
+impl InitMethod {
+    pub fn parse(s: &str) -> InitMethod {
+        match s {
+            "lb-admm" | "lbadmm" | "ours" => InitMethod::LbAdmm,
+            "dual-svid" | "dualsvid" | "littlebit" => InitMethod::DualSvid,
+            "dbf-admm" | "dbf" => InitMethod::DbfAdmm,
+            "random" | "none" => InitMethod::Random,
+            _ => panic!("unknown init method '{s}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InitMethod::LbAdmm => "LB-ADMM (Ours)",
+            InitMethod::DualSvid => "Dual-SVID",
+            InitMethod::DbfAdmm => "DBF ADMM",
+            InitMethod::Random => "Random",
+        }
+    }
+}
+
+/// Dispatch: factorize the preconditioned target into pre-binary factors.
+pub fn initialize(
+    method: InitMethod,
+    w_target: &Tensor,
+    rank: usize,
+    admm_cfg: &AdmmConfig,
+) -> (Tensor, Tensor) {
+    match method {
+        InitMethod::LbAdmm => {
+            let res = lb_admm(w_target, rank, admm_cfg);
+            (res.p_u, res.p_v)
+        }
+        InitMethod::DualSvid => init_dual_svid(w_target, rank, admm_cfg.seed),
+        InitMethod::DbfAdmm => init_dbf_admm(w_target, rank, admm_cfg),
+        InitMethod::Random => init_random(w_target, rank, admm_cfg.seed),
+    }
+}
+
+/// LittleBit-style: P_U = U_k √Σ_k, P_V = V_k √Σ_k from the truncated SVD.
+pub fn init_dual_svid(w: &Tensor, rank: usize, seed: u64) -> (Tensor, Tensor) {
+    let rank = rank.min(w.rows()).min(w.cols()).max(1);
+    let (mut u, s, mut v) = svd_truncated(w, rank, 10, seed);
+    for c in 0..rank {
+        let sq = s[c].max(0.0).sqrt();
+        for i in 0..u.rows() {
+            *u.at2_mut(i, c) *= sq;
+        }
+        for j in 0..v.rows() {
+            *v.at2_mut(j, c) *= sq;
+        }
+    }
+    (u, v)
+}
+
+/// DBF-style ADMM: scalar-scale sign proxy, λ = 0, constant penalty.
+pub fn init_dbf_admm(w: &Tensor, rank: usize, cfg: &AdmmConfig) -> (Tensor, Tensor) {
+    let (n, m) = (w.rows(), w.cols());
+    let rank = rank.min(n).min(m).max(1);
+    let (mut u, s, mut v) = svd_truncated(w, rank, 8, cfg.seed);
+    for c in 0..rank {
+        let sq = s[c].max(0.0).sqrt();
+        for i in 0..n {
+            *u.at2_mut(i, c) *= sq;
+        }
+        for j in 0..m {
+            *v.at2_mut(j, c) *= sq;
+        }
+    }
+    let scalar_proxy = |p: &Tensor| -> Tensor {
+        let alpha = p.abs_mean() as f32;
+        p.sign_pm1().scale(alpha)
+    };
+    let mut z_u = scalar_proxy(&u);
+    let mut z_v = scalar_proxy(&v);
+    let mut l_u = Tensor::zeros(&[n, rank]);
+    let mut l_v = Tensor::zeros(&[m, rank]);
+    let rho = cfg.rho_final;
+    for _ in 0..cfg.iters {
+        u = dbf_factor_update(w, &v, &z_u, &l_u, rho, false);
+        v = dbf_factor_update(w, &u, &z_v, &l_v, rho, true);
+        z_u = scalar_proxy(&u.add(&l_u));
+        z_v = scalar_proxy(&v.add(&l_v));
+        l_u = l_u.add(&u).sub(&z_u);
+        l_v = l_v.add(&v).sub(&z_v);
+    }
+    // Continuous-factor readout, consistent with lb_admm (see AdmmResult).
+    (u, v)
+}
+
+fn dbf_factor_update(
+    w: &Tensor,
+    other: &Tensor,
+    z: &Tensor,
+    dual: &Tensor,
+    rho: f64,
+    transposed: bool,
+) -> Tensor {
+    let r = other.cols();
+    let mut h = matmul_at_b(other, other);
+    for i in 0..r {
+        *h.at2_mut(i, i) += rho as f32;
+    }
+    let wv = if transposed { matmul_at_b(other, w) } else { matmul(w, other).t() };
+    let rhs = wv.add(&z.sub(dual).t().scale(rho as f32));
+    let l = crate::linalg::cholesky(&h).expect("DBF ADMM system SPD");
+    crate::linalg::solve_upper_t(&l, &crate::linalg::solve_lower(&l, &rhs)).t()
+}
+
+/// Random latents scaled to the target's magnitude (ablation floor).
+pub fn init_random(w: &Tensor, rank: usize, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = Rng::new(seed ^ 0xBAD_1117);
+    let scale = (w.abs_mean() as f32 / (rank as f32).sqrt()).sqrt().max(1e-4);
+    (
+        Tensor::randn(&[w.rows(), rank.max(1)], scale, &mut rng),
+        Tensor::randn(&[w.cols(), rank.max(1)], scale, &mut rng),
+    )
+}
+
+/// Binarized reconstruction error of an initializer's output (used by the
+/// Table 5 experiment and tests): builds the balanced latents, binarizes,
+/// and measures ‖W − Ŵ‖/‖W‖.
+pub fn init_recon_error(method: InitMethod, w: &Tensor, rank: usize, cfg: &AdmmConfig) -> f64 {
+    let (p_u, p_v) = initialize(method, w, rank, cfg);
+    let ones_n = vec![1.0f32; w.rows()];
+    let ones_m = vec![1.0f32; w.cols()];
+    let lat = super::balance::balance_and_extract(&p_u, &p_v, &ones_n, &ones_m);
+    lat.reconstruct().rel_error(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target(seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::randn(&[48, 56], 1.0, &mut rng)
+    }
+
+    /// Heterogeneous row magnitudes (the structure real output channels
+    /// have): separates the row-aware LB-ADMM proxy from DBF's scalar
+    /// proxy and from plain SVD factors.
+    fn row_structured_target(seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut w = Tensor::randn(&[48, 56], 1.0, &mut rng);
+        for i in 0..48 {
+            let s = 0.2 + 0.15 * i as f32;
+            for x in w.row_mut(i) {
+                *x *= s;
+            }
+        }
+        w
+    }
+
+    #[test]
+    fn lb_admm_beats_alternatives_on_binarized_error() {
+        // The Table 5 ordering: LB-ADMM < DBF-ADMM < Dual-SVID, averaged
+        // over seeds (single draws can tie).
+        let cfg = AdmmConfig { iters: 30, ..Default::default() };
+        let r = 16;
+        let (mut ours, mut dbf, mut svid_e, mut rand_e) = (0.0, 0.0, 0.0, 0.0);
+        for seed in 0..3u64 {
+            let w = row_structured_target(seed);
+            ours += init_recon_error(InitMethod::LbAdmm, &w, r, &cfg);
+            dbf += init_recon_error(InitMethod::DbfAdmm, &w, r, &cfg);
+            svid_e += init_recon_error(InitMethod::DualSvid, &w, r, &cfg);
+            rand_e += init_recon_error(InitMethod::Random, &w, r, &cfg);
+        }
+        assert!(ours < dbf, "ours={ours} dbf={dbf}");
+        assert!(ours < svid_e, "ours={ours} dual-svid={svid_e}");
+        assert!(ours < rand_e, "ours={ours} random={rand_e}");
+    }
+
+    #[test]
+    fn all_methods_produce_factor_shapes() {
+        let w = target(1);
+        let cfg = AdmmConfig { iters: 5, ..Default::default() };
+        for m in [InitMethod::LbAdmm, InitMethod::DualSvid, InitMethod::DbfAdmm, InitMethod::Random]
+        {
+            let (pu, pv) = initialize(m, &w, 8, &cfg);
+            assert_eq!(pu.shape, vec![48, 8], "{m:?}");
+            assert_eq!(pv.shape, vec![56, 8], "{m:?}");
+            assert!(pu.data.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn svid_proxy_matches_module() {
+        // Consistency: LB-ADMM's proxy preserves the sign structure.
+        let w = target(2);
+        let z = crate::quant::svid::svid(&w, 6);
+        for (a, b) in z.data.iter().zip(w.data.iter()) {
+            assert_eq!(a.signum(), if *b >= 0.0 { 1.0 } else { -1.0 });
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(InitMethod::parse("lb-admm"), InitMethod::LbAdmm);
+        assert_eq!(InitMethod::parse("littlebit"), InitMethod::DualSvid);
+        assert_eq!(InitMethod::parse("dbf"), InitMethod::DbfAdmm);
+    }
+}

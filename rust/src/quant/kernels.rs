@@ -1,0 +1,177 @@
+//! Native packed binary low-rank kernels — the Rust serving hot path
+//! (the CUDA GEMV/GEMM kernels of paper Appendix E, rethought for a CPU:
+//! word-level bit iteration + the `2·sel − total` sign-dot identity replace
+//! warp ballots; the two-stage `y = s1 ⊙ U (Vᵀ (s2 ⊙ x))` structure keeps
+//! the rank-r intermediate register/cache resident exactly as the CUDA
+//! kernel keeps it in shared memory).
+
+use super::pack::packed_dot;
+use super::scheme::QuantLinear;
+use crate::nn::decode::MatVec;
+use crate::tensor::Tensor;
+
+/// Packed low-rank binary linear layer, decode-ready.
+#[derive(Clone, Debug)]
+pub struct PackedLinear {
+    pub q: QuantLinear,
+}
+
+impl PackedLinear {
+    pub fn new(q: QuantLinear) -> PackedLinear {
+        PackedLinear { q }
+    }
+
+    /// y = diag(s1) U±1 (V±1ᵀ (diag(s2) x)) — two packed stages.
+    pub fn forward_vec(&self, x: &[f32]) -> Vec<f32> {
+        let q = &self.q;
+        assert_eq!(x.len(), q.in_dim());
+        // Stage 0: fuse the input scale.
+        let xs: Vec<f32> = x.iter().zip(q.s2.iter()).map(|(&a, &s)| a * s).collect();
+        let total_x: f32 = xs.iter().sum();
+        // Stage 1: t = V^T xs  (rank-length intermediate).
+        let r = q.rank();
+        let mut t = vec![0.0f32; r];
+        for c in 0..r {
+            t[c] = packed_dot(q.vt.row(c), &xs, total_x);
+        }
+        // Stage 2: y = s1 ⊙ (U t).
+        let total_t: f32 = t.iter().sum();
+        let n = q.out_dim();
+        let mut y = vec![0.0f32; n];
+        for i in 0..n {
+            y[i] = q.s1[i] * packed_dot(q.u.row(i), &t, total_t);
+        }
+        y
+    }
+
+    /// Batched GEMM-style forward: X [b, m] -> Y [b, n].
+    pub fn forward_batch(&self, x: &Tensor) -> Tensor {
+        let b = x.rows();
+        let n = self.q.out_dim();
+        let mut out = Tensor::zeros(&[b, n]);
+        crate::util::threadpool::parallel_chunks_mut(&mut out.data, n, |i, row| {
+            row.copy_from_slice(&self.forward_vec(x.row(i)));
+        });
+        out
+    }
+}
+
+impl MatVec for PackedLinear {
+    fn out_dim(&self) -> usize {
+        self.q.out_dim()
+    }
+    fn in_dim(&self) -> usize {
+        self.q.in_dim()
+    }
+    fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        self.forward_vec(x)
+    }
+    /// Effective compressed bytes: packed bits + FP16 scales
+    /// (matches Appendix F accounting).
+    fn storage_bytes(&self) -> usize {
+        self.q.effective_bits() / 8
+    }
+}
+
+/// "Naive unpack" engine: dequantizes the packed weights to a dense ±1
+/// product on every call (bandwidth-profile of a generic 1-bit kernel
+/// library — the GemLite comparator of paper Figs. 12–13). Stores packed
+/// bits (same memory) but pays full dequantization per matvec.
+#[derive(Clone, Debug)]
+pub struct NaiveUnpackLinear {
+    pub q: QuantLinear,
+}
+
+impl MatVec for NaiveUnpackLinear {
+    fn out_dim(&self) -> usize {
+        self.q.out_dim()
+    }
+    fn in_dim(&self) -> usize {
+        self.q.in_dim()
+    }
+    fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        // Dequantize W = diag(s1) U V^T diag(s2) densely, then dense matvec.
+        let w = self.q.reconstruct();
+        (0..w.rows()).map(|i| crate::tensor::dot(w.row(i), x)).collect()
+    }
+    fn storage_bytes(&self) -> usize {
+        self.q.effective_bits() / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scheme::LatentFactors;
+    use crate::util::quickcheck::check;
+    use crate::util::rng::Rng;
+
+    fn random_q(n: usize, m: usize, r: usize, seed: u64) -> QuantLinear {
+        let mut rng = Rng::new(seed);
+        LatentFactors {
+            u: Tensor::randn(&[n, r], 1.0, &mut rng),
+            v: Tensor::randn(&[m, r], 1.0, &mut rng),
+            s1: (0..n).map(|_| rng.uniform_in(0.2, 2.0)).collect(),
+            s2: (0..m).map(|_| rng.uniform_in(0.2, 2.0)).collect(),
+        }
+        .freeze()
+    }
+
+    #[test]
+    fn packed_matvec_matches_dense_reconstruction() {
+        check("packed matvec == dense Ŵ x", 30, |g| {
+            let n = g.int(1, 70);
+            let m = g.int(1, 70);
+            let r = g.int(1, 40);
+            let q = random_q(n, m, r, g.seed);
+            let mut rng = Rng::new(g.seed ^ 1);
+            let x = rng.normal_vec(m, 1.0);
+            let pl = PackedLinear::new(q.clone());
+            let got = pl.forward_vec(&x);
+            let w = q.reconstruct();
+            for i in 0..n {
+                let want = crate::tensor::dot(w.row(i), &x);
+                assert!(
+                    (got[i] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                    "n={n} m={m} r={r} i={i}: {} vs {want}",
+                    got[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn naive_engine_matches_packed_engine() {
+        let q = random_q(33, 47, 9, 3);
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(47, 1.0);
+        let a = PackedLinear::new(q.clone()).matvec(&x);
+        let b = NaiveUnpackLinear { q }.matvec(&x);
+        for (p, n) in a.iter().zip(b.iter()) {
+            assert!((p - n).abs() < 1e-3 * (1.0 + n.abs()));
+        }
+    }
+
+    #[test]
+    fn batch_forward_matches_per_row() {
+        let q = random_q(16, 24, 6, 5);
+        let pl = PackedLinear::new(q);
+        let mut rng = Rng::new(6);
+        let x = Tensor::randn(&[5, 24], 1.0, &mut rng);
+        let y = pl.forward_batch(&x);
+        for i in 0..5 {
+            let yi = pl.forward_vec(x.row(i));
+            for j in 0..16 {
+                assert_eq!(y.at2(i, j), yi[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn storage_is_sub_dense() {
+        let q = random_q(256, 256, 112, 7);
+        let pl = PackedLinear::new(q);
+        let dense_bytes = 256 * 256 * 4;
+        assert!(pl.storage_bytes() < dense_bytes / 8, "{}", pl.storage_bytes());
+    }
+}

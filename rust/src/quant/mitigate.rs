@@ -1,0 +1,143 @@
+//! Step 1 — Error Propagation Mitigation (paper §3.2).
+//!
+//! Before factorizing block `b`, its *full-precision* weights are tuned so
+//! that, fed with the quantized prefix's activations `X_q`, the block
+//! reproduces the teacher's output `Y_fp` (computed on the clean FP path).
+//! This absorbs the error accumulated by blocks `< b` into block `b`'s
+//! weights before they are factorized (cf. GPTQ error propagation;
+//! Tseng et al. 2024a; Boža & Macko 2026).
+
+use crate::nn::adam::{cosine_lr, Adam};
+use crate::nn::backward::block_backward;
+use crate::nn::model::{block_forward, BlockWeights, ModelConfig};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Optimizer state for a FP block.
+struct BlockOpt {
+    ln1: Adam,
+    wq: Adam,
+    wk: Adam,
+    wv: Adam,
+    wo: Adam,
+    ln2: Adam,
+    wg: Adam,
+    wu: Adam,
+    wd: Adam,
+}
+
+impl BlockOpt {
+    fn new(w: &BlockWeights, lr: f32) -> BlockOpt {
+        BlockOpt {
+            ln1: Adam::new(w.ln1.len(), lr),
+            wq: Adam::new(w.wq.numel(), lr),
+            wk: Adam::new(w.wk.numel(), lr),
+            wv: Adam::new(w.wv.numel(), lr),
+            wo: Adam::new(w.wo.numel(), lr),
+            ln2: Adam::new(w.ln2.len(), lr),
+            wg: Adam::new(w.wg.numel(), lr),
+            wu: Adam::new(w.wu.numel(), lr),
+            wd: Adam::new(w.wd.numel(), lr),
+        }
+    }
+}
+
+/// Tune the FP weights of `weights` to map `x_q -> y_fp`.
+/// Returns the loss curve (MSE per step).
+pub fn mitigate_block(
+    mcfg: &ModelConfig,
+    weights: &mut BlockWeights,
+    x_q: &Tensor,
+    y_fp: &Tensor,
+    n_seqs: usize,
+    seq: usize,
+    steps: usize,
+    batch_seqs: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut losses = Vec::new();
+    if steps == 0 {
+        return losses;
+    }
+    let mut opt = BlockOpt::new(weights, lr);
+    let batch_seqs = batch_seqs.clamp(1, n_seqs);
+    let d = mcfg.d_model;
+    for step in 0..steps {
+        let picks = rng.sample_indices(n_seqs, batch_seqs);
+        let mut xb = Tensor::zeros(&[batch_seqs * seq, d]);
+        let mut yb = Tensor::zeros(&[batch_seqs * seq, d]);
+        for (bi, &si) in picks.iter().enumerate() {
+            for s in 0..seq {
+                xb.row_mut(bi * seq + s).copy_from_slice(x_q.row(si * seq + s));
+                yb.row_mut(bi * seq + s).copy_from_slice(y_fp.row(si * seq + s));
+            }
+        }
+        let (yhat, cache) = block_forward(mcfg, weights, &xb, batch_seqs, seq);
+        let diff = yhat.sub(&yb);
+        losses.push(diff.fro_norm_sq() / diff.numel() as f64);
+        let dy = diff.scale(2.0 / diff.numel() as f32);
+        let (_, g) = block_backward(mcfg, weights, &cache, &dy, 0, None);
+        let s = cosine_lr(step as u64, steps as u64);
+        opt.ln1.step(&mut weights.ln1, &g.ln1, s);
+        opt.wq.step(&mut weights.wq.data, &g.wq.data, s);
+        opt.wk.step(&mut weights.wk.data, &g.wk.data, s);
+        opt.wv.step(&mut weights.wv.data, &g.wv.data, s);
+        opt.wo.step(&mut weights.wo.data, &g.wo.data, s);
+        opt.ln2.step(&mut weights.ln2, &g.ln2, s);
+        opt.wg.step(&mut weights.wg.data, &g.wg.data, s);
+        opt.wu.step(&mut weights.wu.data, &g.wu.data, s);
+        opt.wd.step(&mut weights.wd.data, &g.wd.data, s);
+    }
+    losses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+    use crate::nn::model::ModelParams;
+
+    /// With perturbed inputs, tuning must recover most of the block-output
+    /// error relative to the clean teacher targets.
+    #[test]
+    fn mitigation_absorbs_input_perturbation() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let (n_seqs, seq, d) = (6, 8, cfg.d_model);
+        let tokens: Vec<u16> = (0..n_seqs * seq).map(|i| (i * 11 % 250) as u16).collect();
+        let x_fp = crate::nn::model::embed_tokens(&teacher, &tokens);
+        let (y_fp, _) = block_forward(&cfg, &teacher.blocks[0], &x_fp, n_seqs, seq);
+        // Simulated prefix quantization error on the inputs.
+        let noise = Tensor::randn(&[n_seqs * seq, d], 0.02, &mut rng);
+        let x_q = x_fp.add(&noise);
+
+        let mut w = teacher.blocks[0].clone();
+        let before = {
+            let (y, _) = block_forward(&cfg, &w, &x_q, n_seqs, seq);
+            y.sub(&y_fp).fro_norm_sq()
+        };
+        let mut rng2 = Rng::new(1);
+        let losses = mitigate_block(&cfg, &mut w, &x_q, &y_fp, n_seqs, seq, 40, 4, 1e-3, &mut rng2);
+        let after = {
+            let (y, _) = block_forward(&cfg, &w, &x_q, n_seqs, seq);
+            y.sub(&y_fp).fro_norm_sq()
+        };
+        assert!(after < before * 0.8, "before={before} after={after}");
+        assert!(losses.last().unwrap() < &losses[0]);
+    }
+
+    #[test]
+    fn noop_with_zero_steps() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(2);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut w = teacher.blocks[0].clone();
+        let x = Tensor::zeros(&[8, cfg.d_model]);
+        let y = Tensor::zeros(&[8, cfg.d_model]);
+        let losses = mitigate_block(&cfg, &mut w, &x, &y, 1, 8, 0, 1, 1e-3, &mut rng);
+        assert!(losses.is_empty());
+        assert_eq!(w.wq, teacher.blocks[0].wq);
+    }
+}

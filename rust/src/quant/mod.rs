@@ -1,0 +1,37 @@
+//! NanoQuant quantization core: the paper's contribution (§3) plus every
+//! baseline it compares against.
+//!
+//! - [`scheme`] / [`pack`] / [`kernels`] — the low-rank binary
+//!   representation, bit packing, and the packed serving kernels.
+//! - [`precond`] / [`svid`] / [`admm`] / [`balance`] / [`init`] — Step 2
+//!   (robust Hessian preconditioning, LB-ADMM, magnitude balancing) and the
+//!   alternative initializers of Table 5.
+//! - [`mitigate`] / [`ste`] / [`recon`] — Steps 1, 3 and Phase 3 tuning.
+//! - [`pipeline`] — Algorithm 1 end to end.
+//! - [`qmodel`] — the quantized-model container and engines.
+//! - [`baselines`] — RTN/XNOR/BiLLM/STBLLM/ARB-LLM/HBLLM/GPTQ/VQ/QAT.
+//! - [`bpw`] — Appendix F storage accounting (Tables 13–14).
+
+pub mod admm;
+pub mod balance;
+pub mod baselines;
+pub mod bpw;
+pub mod init;
+pub mod kernels;
+pub mod mitigate;
+pub mod pack;
+pub mod pipeline;
+pub mod precond;
+pub mod qmodel;
+pub mod recon;
+pub mod scheme;
+pub mod ste;
+pub mod svid;
+
+pub use admm::{lb_admm, AdmmConfig, RhoSchedule};
+pub use init::InitMethod;
+pub use kernels::{NaiveUnpackLinear, PackedLinear};
+pub use pack::PackedBits;
+pub use pipeline::{quantize, PipelineConfig, QuantReport};
+pub use qmodel::{Engine, QuantModel};
+pub use scheme::{bpw_for_rank, rank_for_bpw, LatentFactors, QuantLinear};

@@ -1,0 +1,193 @@
+//! Bit packing of ±1 matrices into `u32` words (paper Fig. 2c: map
+//! −1 → 0, +1 → 1 and pack into integer blocks).
+//!
+//! Layout: row-major; within a row, element `j` lives in word `j / 32`,
+//! bit `j % 32` (LSB-first). Rows are padded to whole words; padding bits
+//! are zero and are never consumed because `cols` is stored.
+//! This layout is shared verbatim with the Pallas kernels
+//! (`python/compile/kernels/binary_gemv.py`) and the AOT artifacts.
+
+use crate::tensor::Tensor;
+
+/// A packed ±1 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedBits {
+    pub rows: usize,
+    pub cols: usize,
+    pub words_per_row: usize,
+    pub words: Vec<u32>,
+}
+
+impl PackedBits {
+    /// Pack the signs of a dense matrix (>= 0 -> +1 bit, < 0 -> 0 bit).
+    pub fn from_signs(t: &Tensor) -> PackedBits {
+        assert_eq!(t.rank(), 2);
+        let (rows, cols) = (t.rows(), t.cols());
+        let wpr = cols.div_ceil(32);
+        let mut words = vec![0u32; rows * wpr];
+        for i in 0..rows {
+            let row = t.row(i);
+            for (j, &x) in row.iter().enumerate() {
+                if x >= 0.0 {
+                    words[i * wpr + j / 32] |= 1 << (j % 32);
+                }
+            }
+        }
+        PackedBits { rows, cols, words_per_row: wpr, words }
+    }
+
+    /// Row of packed words.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.words[i * self.words_per_row..(i + 1) * self.words_per_row]
+    }
+
+    /// Sign at (i, j) as ±1.
+    #[inline]
+    pub fn sign_at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(j < self.cols);
+        let w = self.words[i * self.words_per_row + j / 32];
+        if (w >> (j % 32)) & 1 == 1 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Unpack to a dense ±1 tensor.
+    pub fn unpack(&self) -> Tensor {
+        let mut out = Tensor::zeros(&[self.rows, self.cols]);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *out.at2_mut(i, j) = self.sign_at(i, j);
+            }
+        }
+        out
+    }
+
+    /// Storage in bytes (words only).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 4
+    }
+
+    /// Number of bits that differ from another packed matrix of equal shape.
+    pub fn hamming(&self, other: &PackedBits) -> usize {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        let mut count = 0usize;
+        for i in 0..self.rows {
+            for (wa, wb) in self.row(i).iter().zip(other.row(i).iter()) {
+                count += (wa ^ wb).count_ones() as usize;
+            }
+        }
+        count
+    }
+}
+
+/// `dot(signs_row, x)` where the row is packed bits over x.len() elements.
+///
+/// Uses the identity `Σ b_j x_j = 2 Σ_{b_j=+1} x_j − Σ_j x_j` with a
+/// *branchless* per-word selection: each word expands to 32 independent
+/// `mask * x` lanes that LLVM autovectorizes (§Perf: 2.4–3.1x over the
+/// original `trailing_zeros` set-bit walk, whose serial dependency chain
+/// defeated SIMD).
+#[inline]
+pub fn packed_dot(row: &[u32], x: &[f32], total: f32) -> f32 {
+    let full_words = x.len() / 32;
+    let mut sel = 0.0f32;
+    // Full words: fixed 32-lane branchless select, 4 accumulators.
+    let mut acc = [0.0f32; 4];
+    for wi in 0..full_words {
+        let w = row[wi];
+        if w == 0 {
+            continue;
+        }
+        let chunk = &x[wi * 32..wi * 32 + 32];
+        for l in 0..4 {
+            let mut a = acc[l];
+            for j in 0..8 {
+                let bit = (w >> (l * 8 + j)) & 1;
+                // mask = 1.0 if bit else 0.0, branchless.
+                a += (bit as f32) * chunk[l * 8 + j];
+            }
+            acc[l] = a;
+        }
+    }
+    sel += acc.iter().sum::<f32>();
+    // Tail word (partial).
+    if full_words < row.len() {
+        let w = row[full_words];
+        let base = full_words * 32;
+        for j in 0..x.len() - base {
+            sel += (((w >> j) & 1) as f32) * x[base + j];
+        }
+    }
+    2.0 * sel - total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Rng::new(0);
+        for (r, c) in [(1, 1), (3, 31), (4, 32), (5, 33), (16, 100)] {
+            let t = Tensor::randn(&[r, c], 1.0, &mut rng).sign_pm1();
+            let p = PackedBits::from_signs(&t);
+            assert_eq!(p.unpack(), t, "shape ({r},{c})");
+        }
+    }
+
+    #[test]
+    fn storage_is_one_bit_per_element_padded() {
+        let t = Tensor::ones(&[64, 65]);
+        let p = PackedBits::from_signs(&t);
+        // 65 cols -> 3 words per row
+        assert_eq!(p.bytes(), 64 * 3 * 4);
+    }
+
+    #[test]
+    fn packed_dot_matches_dense() {
+        let mut rng = Rng::new(1);
+        check("packed_dot == dense sign dot", 50, |g| {
+            let n = g.int(1, 130);
+            let mut rng2 = Rng::new(g.seed);
+            let signs = Tensor::randn(&[1, n], 1.0, &mut rng2).sign_pm1();
+            let x: Vec<f32> = rng2.normal_vec(n, 1.0);
+            let p = PackedBits::from_signs(&signs);
+            let total: f32 = x.iter().sum();
+            let got = packed_dot(p.row(0), &x, total);
+            let want: f32 = signs.data.iter().zip(x.iter()).map(|(&s, &v)| s * v).sum();
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "{got} vs {want}");
+        });
+        let _ = &mut rng;
+    }
+
+    #[test]
+    fn sign_at_matches_unpack() {
+        let mut rng = Rng::new(2);
+        let t = Tensor::randn(&[7, 45], 1.0, &mut rng).sign_pm1();
+        let p = PackedBits::from_signs(&t);
+        let u = p.unpack();
+        for i in 0..7 {
+            for j in 0..45 {
+                assert_eq!(p.sign_at(i, j), u.at2(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn hamming_counts_flips() {
+        let a = Tensor::ones(&[2, 40]);
+        let mut bvals = Tensor::ones(&[2, 40]);
+        bvals.data[3] = -1.0;
+        bvals.data[77] = -1.0;
+        let pa = PackedBits::from_signs(&a);
+        let pb = PackedBits::from_signs(&bvals);
+        assert_eq!(pa.hamming(&pb), 2);
+        assert_eq!(pa.hamming(&pa), 0);
+    }
+}

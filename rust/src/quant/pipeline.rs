@@ -1,0 +1,400 @@
+//! Algorithm 1 — the full NanoQuant pipeline.
+//!
+//! Phase 1: global calibration (K-FAC diagonal statistics over the
+//! calibration set → robust preconditioners per linear layer).
+//! Phase 2: sequential block reconstruction — error-propagation
+//! mitigation, low-rank binary initialization (preconditioning → LB-ADMM →
+//! magnitude balancing), STE refinement, packing.
+//! Phase 3: scale-only model reconstruction under tempered KL.
+
+use super::admm::AdmmConfig;
+use super::balance::balance_and_extract;
+use super::init::{initialize, InitMethod};
+use super::mitigate::mitigate_block;
+use super::precond::{robust_diag, RobustDiagConfig};
+use super::qmodel::QuantModel;
+use super::recon::tune_scales_global;
+use super::scheme::rank_for_bpw;
+use super::ste::{refine_block, SteReport};
+use crate::nn::backward::model_backward;
+use crate::nn::loss::cross_entropy;
+use crate::nn::model::{block_forward, model_forward, LayerKind, ModelParams};
+use crate::nn::stats::StatsCollector;
+use crate::nn::LayerId;
+use crate::util::rng::Rng;
+use crate::util::timer::time_once;
+use std::collections::BTreeMap;
+
+/// Full pipeline configuration (paper Appendix C defaults, scaled to the
+/// in-repo model sizes).
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Target effective bits per weight (1.0, 0.8, 0.55, ...).
+    pub bpw: f64,
+    /// Optional fixed rank override (otherwise from `bpw` per layer).
+    pub rank_override: Option<usize>,
+    pub admm: AdmmConfig,
+    pub diag: RobustDiagConfig,
+    pub init: InitMethod,
+    /// Component toggles (Table 6 ablation).
+    pub enable_mitigation: bool,
+    pub enable_refine: bool,
+    pub enable_recon: bool,
+    /// Tuning steps: pre-factorization (Step 1), post (Step 3), global.
+    pub t_pre: usize,
+    pub t_post: usize,
+    pub t_glob: usize,
+    pub lr_pre: f32,
+    pub lr_post: f32,
+    pub lr_glob: f32,
+    /// Minibatch (in sequences) for the tuning stages.
+    pub batch_seqs: usize,
+    /// Sequences used for the calibration-statistics pass.
+    pub stats_seqs: usize,
+    pub kl_temperature: f32,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            bpw: 1.0,
+            rank_override: None,
+            admm: AdmmConfig::default(),
+            diag: RobustDiagConfig::default(),
+            init: InitMethod::LbAdmm,
+            enable_mitigation: true,
+            enable_refine: true,
+            enable_recon: true,
+            t_pre: 24,
+            t_post: 48,
+            t_glob: 32,
+            lr_pre: 1e-3,
+            lr_post: 1e-3,
+            lr_glob: 2e-3,
+            batch_seqs: 4,
+            stats_seqs: 32,
+            kl_temperature: 2.0,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// What happened during quantization (feeds Tables 4–7 and Figs. 8–9).
+#[derive(Default)]
+pub struct QuantReport {
+    /// (relative block-output error before refinement, after) per block.
+    pub block_errors: Vec<(f64, f64)>,
+    pub ste: Vec<SteReport>,
+    pub recon_losses: Vec<f64>,
+    /// ADMM traces of block 0 (Fig. 9).
+    pub admm_traces: Vec<(LayerId, super::admm::AdmmTrace)>,
+    pub wall_seconds: f64,
+    pub calib_tokens: usize,
+    pub effective_bpw: f64,
+    pub effective_bytes: usize,
+}
+
+/// Run Algorithm 1. Calibration sequences must be `seq+1` tokens long
+/// (inputs + shifted targets); `seq` is the reconstruction context length.
+pub fn quantize(
+    teacher: &ModelParams,
+    calib: &[Vec<u16>],
+    seq: usize,
+    cfg: &PipelineConfig,
+) -> (QuantModel, QuantReport) {
+    let (out, secs) = time_once(|| quantize_inner(teacher, calib, seq, cfg));
+    let (qm, mut report) = out;
+    report.wall_seconds = secs;
+    (qm, report)
+}
+
+fn quantize_inner(
+    teacher: &ModelParams,
+    calib: &[Vec<u16>],
+    seq: usize,
+    cfg: &PipelineConfig,
+) -> (QuantModel, QuantReport) {
+    assert!(!calib.is_empty(), "need calibration data");
+    assert!(calib.iter().all(|s| s.len() > seq), "calib sequences must be seq+1 tokens");
+    let mcfg = &teacher.cfg;
+    let mut rng = Rng::new(cfg.seed);
+    let mut report = QuantReport {
+        calib_tokens: calib.len() * seq,
+        ..Default::default()
+    };
+
+    // ---------- Phase 1: global calibration ----------
+    let preconds = calibrate_preconditioners(teacher, calib, seq, cfg);
+
+    // ---------- Phase 2: block reconstruction ----------
+    let mut qm = QuantModel::from_teacher(teacher);
+    let n_seqs = calib.len();
+    let mut tokens_flat = Vec::with_capacity(n_seqs * seq);
+    for s in calib {
+        tokens_flat.extend_from_slice(&s[..seq]);
+    }
+    // FP (teacher) and quantized activation paths.
+    let mut x_fp = crate::nn::model::embed_tokens(teacher, &tokens_flat);
+    let mut x_q = x_fp.clone();
+
+    for b in 0..mcfg.n_layers {
+        if cfg.verbose {
+            eprintln!("[nanoquant] block {b}/{}", mcfg.n_layers);
+        }
+        // Teacher output for this block on the clean FP path.
+        let (y_fp, _) = block_forward(mcfg, &teacher.blocks[b], &x_fp, n_seqs, seq);
+
+        // Step 1: error-propagation mitigation on the FP copy.
+        if cfg.enable_mitigation && cfg.t_pre > 0 {
+            let mut w = qm.params.blocks[b].clone();
+            mitigate_block(
+                mcfg, &mut w, &x_q, &y_fp, n_seqs, seq, cfg.t_pre, cfg.batch_seqs, cfg.lr_pre,
+                &mut rng,
+            );
+            qm.params.blocks[b] = w;
+        }
+
+        // Step 2: low-rank binary initialization per linear.
+        for kind in LayerKind::ALL {
+            let id = LayerId { block: b, kind };
+            let w = qm.params.blocks[b].linear(kind).clone();
+            let (n, m) = (w.rows(), w.cols());
+            let rank = cfg
+                .rank_override
+                .unwrap_or_else(|| rank_for_bpw(n, m, cfg.bpw))
+                .min(n)
+                .min(m)
+                .max(1);
+            let (d_out, d_in) = &preconds[&id];
+            // W̃ = D_out W D_in  (Algorithm 1 line 15).
+            let w_target = w.scale_rows(d_out).scale_cols(d_in);
+            let mut admm_cfg = cfg.admm.clone();
+            admm_cfg.seed = cfg.seed ^ ((b as u64) << 8) ^ kind as u64;
+            // Record per-iteration traces for block 0 (Fig. 9).
+            admm_cfg.trace = cfg.admm.trace || b == 0;
+            let (p_u, p_v) = if cfg.init == InitMethod::LbAdmm {
+                let res = super::admm::lb_admm(&w_target, rank, &admm_cfg);
+                if b == 0 {
+                    report.admm_traces.push((id, res.trace.clone()));
+                }
+                (res.p_u, res.p_v)
+            } else {
+                initialize(cfg.init, &w_target, rank, &admm_cfg)
+            };
+            // Step 2-3: magnitude balancing + scale extraction (Eq. 7–9).
+            let latent = balance_and_extract(&p_u, &p_v, d_out, d_in);
+            qm.set_layer(id, latent);
+        }
+
+        // Block error before refinement.
+        let err_before = {
+            let (yq, _) = block_forward(mcfg, &qm.params.blocks[b], &x_q, n_seqs, seq);
+            yq.sub(&y_fp).fro_norm() / y_fp.fro_norm().max(1e-30)
+        };
+
+        // Step 3: factorized component refinement (STE).
+        if cfg.enable_refine && cfg.t_post > 0 {
+            let ste = refine_block(
+                mcfg, &mut qm, b, &x_q, &y_fp, n_seqs, seq, cfg.t_post, cfg.batch_seqs,
+                cfg.lr_post, &mut rng,
+            );
+            report.ste.push(ste);
+        }
+        let err_after = {
+            let (yq, _) = block_forward(mcfg, &qm.params.blocks[b], &x_q, n_seqs, seq);
+            yq.sub(&y_fp).fro_norm() / y_fp.fro_norm().max(1e-30)
+        };
+        report.block_errors.push((err_before, err_after));
+
+        // Pack the block (Algorithm 1 lines 20–23).
+        qm.freeze_block(b);
+
+        // Advance both activation paths.
+        let (xq_next, _) = block_forward(mcfg, &qm.params.blocks[b], &x_q, n_seqs, seq);
+        x_q = xq_next;
+        let (xfp_next, _) = block_forward(mcfg, &teacher.blocks[b], &x_fp, n_seqs, seq);
+        x_fp = xfp_next;
+    }
+
+    // ---------- Phase 3: scale-only model reconstruction ----------
+    if cfg.enable_recon && cfg.t_glob > 0 {
+        report.recon_losses = tune_scales_global(
+            &mut qm,
+            teacher,
+            calib,
+            cfg.t_glob,
+            cfg.batch_seqs,
+            seq,
+            cfg.lr_glob,
+            cfg.kl_temperature,
+            &mut rng,
+        );
+    }
+
+    report.effective_bpw = qm.effective_bpw();
+    report.effective_bytes = qm.effective_bytes();
+    (qm, report)
+}
+
+/// Phase 1: run the teacher with CE loss over calibration batches,
+/// collecting per-layer activation/gradient second moments, then build the
+/// robust diagonal preconditioners.
+pub fn calibrate_preconditioners(
+    teacher: &ModelParams,
+    calib: &[Vec<u16>],
+    seq: usize,
+    cfg: &PipelineConfig,
+) -> BTreeMap<LayerId, (Vec<f32>, Vec<f32>)> {
+    let mut stats = StatsCollector::new();
+    let use_seqs = cfg.stats_seqs.clamp(1, calib.len());
+    let batch = cfg.batch_seqs.clamp(1, use_seqs);
+    let mut i = 0usize;
+    while i < use_seqs {
+        let b = batch.min(use_seqs - i);
+        let mut inputs = Vec::with_capacity(b * seq);
+        let mut targets = Vec::with_capacity(b * seq);
+        for s in &calib[i..i + b] {
+            inputs.extend_from_slice(&s[..seq]);
+            targets.extend_from_slice(&s[1..seq + 1]);
+        }
+        let (logits, cache) = model_forward(teacher, &inputs, b, seq, true);
+        let (_, dlogits) = cross_entropy(&logits, &targets);
+        model_backward(teacher, &cache.unwrap(), &dlogits, Some(&mut stats));
+        i += b;
+    }
+
+    let mut out = BTreeMap::new();
+    for bi in 0..teacher.cfg.n_layers {
+        for kind in LayerKind::ALL {
+            let id = LayerId { block: bi, kind };
+            let d_in = robust_diag(&stats.mean_in_sq(id), &cfg.diag);
+            let d_out = robust_diag(&stats.mean_out_sq(id), &cfg.diag);
+            out.insert(id, (d_out, d_in));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{gen_corpus, sample_sequences, tokenize, CorpusKind};
+    use crate::nn::family_config;
+    use crate::nn::trainer::train;
+
+    /// End-to-end smoke: quantizing a (briefly trained) teacher with the
+    /// full pipeline must produce a model dramatically better than naive
+    /// sign quantization and with the requested BPW.
+    #[test]
+    fn pipeline_end_to_end_improves_over_rtn() {
+        let cfgm = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let mut teacher = ModelParams::init(&cfgm, &mut rng);
+        let corpus = gen_corpus(CorpusKind::SynthText, 150_000, 0);
+        let toks = tokenize(&corpus);
+        train(&mut teacher, &toks, 300, 8, 32, 3e-3, 1, false);
+
+        let seq = 24usize;
+        let calib = sample_sequences(&toks, seq + 1, 12, &mut rng);
+        let pcfg = PipelineConfig {
+            bpw: 2.0, // generous for the tiny d=64 model
+            t_pre: 16,
+            t_post: 48,
+            t_glob: 16,
+            stats_seqs: 8,
+            admm: AdmmConfig { iters: 20, ..Default::default() },
+            ..Default::default()
+        };
+        let (qm, report) = quantize(&teacher, &calib, seq, &pcfg);
+
+        // Evaluate CE on held-out windows.
+        let eval = crate::data::eval_windows(&toks[100_000 / 1..], seq + 1, 8);
+        let ce_of = |params: &ModelParams| -> f64 {
+            let mut total = 0.0;
+            let mut count = 0usize;
+            for w in &eval {
+                let (logits, _) = model_forward(params, &w[..seq], 1, seq, false);
+                let (ce, _) = cross_entropy(&logits, &w[1..seq + 1]);
+                total += ce * seq as f64;
+                count += seq;
+            }
+            total / count as f64
+        };
+        let ce_teacher = ce_of(&teacher);
+        let ce_quant = ce_of(&qm.params);
+
+        // Naive sign baseline (RTN-style): binarize every decoder linear.
+        let mut naive = teacher.clone();
+        for b in naive.blocks.iter_mut() {
+            for kind in LayerKind::ALL {
+                let w = b.linear(kind);
+                let alpha = w.abs_mean() as f32;
+                *b.linear_mut(kind) = w.sign_pm1().scale(alpha);
+            }
+        }
+        let ce_naive = ce_of(&naive);
+
+        assert!(
+            ce_quant < ce_naive - 0.1,
+            "quant CE {ce_quant} should beat naive {ce_naive} (teacher {ce_teacher})"
+        );
+        // BPW within tolerance of the target (rank rounding).
+        assert!(
+            (report.effective_bpw - 2.0).abs() < 0.4,
+            "bpw={}",
+            report.effective_bpw
+        );
+        assert_eq!(report.block_errors.len(), cfgm.n_layers);
+        // Refinement did not make block errors worse.
+        for (before, after) in &report.block_errors {
+            assert!(after <= &(before * 1.05), "before={before} after={after}");
+        }
+        // Every decoder linear is packed.
+        assert_eq!(qm.layers.len(), cfgm.n_layers * 7);
+        assert!(qm.layers.values().all(|q| q.frozen.is_some()));
+    }
+
+    #[test]
+    fn preconditioners_cover_all_layers_and_are_positive() {
+        let cfgm = family_config("l3", "xs");
+        let mut rng = Rng::new(1);
+        let teacher = ModelParams::init(&cfgm, &mut rng);
+        let calib: Vec<Vec<u16>> =
+            (0..4).map(|i| (0..17).map(|j| ((i * 31 + j) % 250) as u16).collect()).collect();
+        let pcfg = PipelineConfig { stats_seqs: 4, ..Default::default() };
+        let pre = calibrate_preconditioners(&teacher, &calib, 16, &pcfg);
+        assert_eq!(pre.len(), cfgm.n_layers * 7);
+        for (id, (d_out, d_in)) in &pre {
+            let w = teacher.blocks[id.block].linear(id.kind);
+            assert_eq!(d_out.len(), w.rows(), "{id}");
+            assert_eq!(d_in.len(), w.cols(), "{id}");
+            assert!(d_out.iter().all(|&x| x > 0.0));
+            assert!(d_in.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn ablation_toggles_disable_stages() {
+        let cfgm = family_config("l2", "xs");
+        let mut rng = Rng::new(2);
+        let teacher = ModelParams::init(&cfgm, &mut rng);
+        let calib: Vec<Vec<u16>> =
+            (0..3).map(|i| (0..13).map(|j| ((i * 13 + j) % 250) as u16).collect()).collect();
+        let pcfg = PipelineConfig {
+            bpw: 2.0,
+            enable_mitigation: false,
+            enable_refine: false,
+            enable_recon: false,
+            stats_seqs: 2,
+            admm: AdmmConfig { iters: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let (qm, report) = quantize(&teacher, &calib, 12, &pcfg);
+        assert!(report.ste.is_empty());
+        assert!(report.recon_losses.is_empty());
+        assert_eq!(qm.layers.len(), cfgm.n_layers * 7);
+    }
+}

@@ -1,0 +1,121 @@
+//! Robust diagonal Hessian preconditioners (paper §3.2 Step 2-1, Eq. 2–3).
+//!
+//! `D_in = sqrt(E[x_j²])`, `D_out = sqrt(E[g_i²])` (K-FAC diagonals from
+//! the calibration statistics), made robust by (a) normalizing to unit
+//! mean, (b) clipping to `[1/τ, τ]` (Lemma 1's boundedness), and (c)
+//! Ledoit–Wolf shrinkage toward the mean with coefficient γ (Eq. 3).
+
+/// ROBUSTDIAG of Algorithm 1.
+#[derive(Clone, Debug)]
+pub struct RobustDiagConfig {
+    /// Clip bound τ ≥ 1 — entries clipped to [1/τ, τ] after normalization.
+    pub tau: f32,
+    /// Shrinkage coefficient γ ∈ [0, 1] (0.2 for Llama/Qwen-like, 0.6 for
+    /// Gemma-like per the paper).
+    pub gamma: f32,
+    /// Damping added to the second moments before the square root.
+    pub damping: f64,
+}
+
+impl Default for RobustDiagConfig {
+    fn default() -> Self {
+        RobustDiagConfig { tau: 16.0, gamma: 0.2, damping: 1e-8 }
+    }
+}
+
+/// Turn raw second moments into a robust diagonal preconditioner.
+pub fn robust_diag(second_moments: &[f64], cfg: &RobustDiagConfig) -> Vec<f32> {
+    assert!(cfg.tau >= 1.0, "tau must be >= 1");
+    assert!((0.0..=1.0).contains(&cfg.gamma));
+    let n = second_moments.len();
+    // D = sqrt(moment + damping)
+    let mut d: Vec<f64> = second_moments.iter().map(|&m| (m.max(0.0) + cfg.damping).sqrt()).collect();
+    // Normalize to unit mean so clipping is scale-free (the reconstruction
+    // objective is invariant to a global rescale of D).
+    let mean = d.iter().sum::<f64>() / n as f64;
+    if mean > 0.0 {
+        for x in d.iter_mut() {
+            *x /= mean;
+        }
+    } else {
+        return vec![1.0; n];
+    }
+    // Clip to [1/τ, τ].
+    let (lo, hi) = (1.0 / cfg.tau as f64, cfg.tau as f64);
+    for x in d.iter_mut() {
+        *x = x.clamp(lo, hi);
+    }
+    // Shrinkage toward the (post-clip) mean, Eq. (3).
+    let mean2 = d.iter().sum::<f64>() / n as f64;
+    d.iter()
+        .map(|&x| ((1.0 - cfg.gamma as f64) * x + cfg.gamma as f64 * mean2) as f32)
+        .collect()
+}
+
+/// Elementwise inverse of a positive diagonal.
+pub fn diag_inverse(d: &[f32]) -> Vec<f32> {
+    d.iter().map(|&x| 1.0 / x.max(1e-12)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_moments_give_unit_diag() {
+        let cfg = RobustDiagConfig::default();
+        let d = robust_diag(&[4.0; 10], &cfg);
+        for &x in &d {
+            assert!((x - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clipping_bounds_outliers() {
+        let cfg = RobustDiagConfig { tau: 4.0, gamma: 0.0, damping: 0.0 };
+        let mut moments = vec![1.0f64; 100];
+        moments[0] = 1e12; // extreme outlier
+        let d = robust_diag(&moments, &cfg);
+        let max = d.iter().cloned().fold(0.0f32, f32::max);
+        let min = d.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(max <= 4.0 + 1e-5, "max={max}");
+        assert!(min >= 0.25 - 1e-5, "min={min}");
+    }
+
+    #[test]
+    fn full_shrinkage_is_constant() {
+        let cfg = RobustDiagConfig { tau: 16.0, gamma: 1.0, damping: 0.0 };
+        let d = robust_diag(&[0.1, 1.0, 10.0, 100.0], &cfg);
+        for w in d.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn shrinkage_interpolates() {
+        let moments = vec![0.25, 1.0, 4.0, 16.0];
+        let none = robust_diag(&moments, &RobustDiagConfig { tau: 100.0, gamma: 0.0, damping: 0.0 });
+        let half = robust_diag(&moments, &RobustDiagConfig { tau: 100.0, gamma: 0.5, damping: 0.0 });
+        // Spread (max-min) shrinks monotonically with gamma.
+        let spread = |d: &[f32]| d.iter().cloned().fold(0.0f32, f32::max) - d.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(spread(&half) < spread(&none));
+        assert!(spread(&half) > 0.0);
+    }
+
+    #[test]
+    fn zero_moments_fall_back_to_identity() {
+        let d = robust_diag(&[0.0; 5], &RobustDiagConfig { tau: 8.0, gamma: 0.2, damping: 0.0 });
+        for &x in &d {
+            assert!((x - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn diag_inverse_roundtrip() {
+        let d = vec![0.5f32, 2.0, 4.0];
+        let inv = diag_inverse(&d);
+        for (a, b) in d.iter().zip(inv.iter()) {
+            assert!((a * b - 1.0).abs() < 1e-6);
+        }
+    }
+}

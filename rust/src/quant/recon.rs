@@ -1,0 +1,137 @@
+//! Phase 3 — Scale-Only Model Reconstruction (paper §3.3, Eq. 11).
+//!
+//! With the packed binaries frozen, only the floating-point scale vectors
+//! `{s1, s2}` of every quantized layer are tuned to minimize the tempered
+//! KL divergence between teacher and student logits. The binary matrices
+//! are never touched, which is what keeps the paper's 70B calibration
+//! within a single GPU's memory — here it keeps the phase cheap.
+
+use super::qmodel::{latent_grads, QuantModel};
+use crate::nn::adam::{cosine_lr, Adam};
+use crate::nn::backward::model_backward;
+use crate::nn::loss::kl_divergence;
+use crate::nn::model::{model_forward, ModelParams};
+use crate::nn::LayerId;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Tune all scales to align the student's predictive distribution with the
+/// teacher's. Calibration sequences must be at least `seq+1` tokens.
+/// Returns the KL loss curve.
+pub fn tune_scales_global(
+    qm: &mut QuantModel,
+    teacher: &ModelParams,
+    calib: &[Vec<u16>],
+    steps: usize,
+    batch_seqs: usize,
+    seq: usize,
+    lr: f32,
+    temperature: f32,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let mut losses = Vec::new();
+    if steps == 0 || qm.layers.is_empty() {
+        return losses;
+    }
+    let mut opts: BTreeMap<LayerId, (Adam, Adam)> = qm
+        .layers
+        .iter()
+        .map(|(&id, q)| {
+            (id, (Adam::new(q.latent.s1.len(), lr), Adam::new(q.latent.s2.len(), lr)))
+        })
+        .collect();
+
+    let batch_seqs = batch_seqs.clamp(1, calib.len());
+    for step in 0..steps {
+        let picks = rng.sample_indices(calib.len(), batch_seqs);
+        let mut tokens = Vec::with_capacity(batch_seqs * seq);
+        for &si in &picks {
+            assert!(calib[si].len() >= seq, "calibration sequence too short");
+            tokens.extend_from_slice(&calib[si][..seq]);
+        }
+        let (t_logits, _) = model_forward(teacher, &tokens, batch_seqs, seq, false);
+        let (s_logits, cache) = model_forward(&qm.params, &tokens, batch_seqs, seq, true);
+        let (loss, dlogits) = kl_divergence(&t_logits, &s_logits, temperature);
+        losses.push(loss);
+        let grads = model_backward(&qm.params, &cache.unwrap(), &dlogits, None);
+        let lr_scale = cosine_lr(step as u64, steps as u64);
+
+        let ids: Vec<LayerId> = qm.layers.keys().copied().collect();
+        for id in ids {
+            let lg = {
+                let q = &qm.layers[&id];
+                latent_grads(&q.latent, grads.blocks[id.block].linear(id.kind))
+            };
+            let q = qm.layers.get_mut(&id).unwrap();
+            let (o1, o2) = opts.get_mut(&id).unwrap();
+            o1.step(&mut q.latent.s1, &lg.ds1, lr_scale);
+            o2.step(&mut q.latent.s2, &lg.ds2, lr_scale);
+            for s in q.latent.s1.iter_mut().chain(q.latent.s2.iter_mut()) {
+                if *s < 1e-8 {
+                    *s = 1e-8;
+                }
+            }
+            qm.rematerialize(id);
+        }
+    }
+    losses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+    use crate::nn::model::LayerKind;
+    use crate::quant::admm::{lb_admm, AdmmConfig};
+    use crate::quant::balance::balance_and_extract;
+    use crate::quant::pack::PackedBits;
+
+    #[test]
+    fn scale_tuning_reduces_kl_and_keeps_binaries_frozen() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+        // Quantize Q and Up of each block (enough to create KL gap).
+        for bi in 0..cfg.n_layers {
+            for kind in [LayerKind::Q, LayerKind::Up] {
+                let id = LayerId { block: bi, kind };
+                let w = teacher.blocks[bi].linear(kind).clone();
+                let (n, m) = (w.rows(), w.cols());
+                let r = 12usize;
+                let res = lb_admm(&w, r, &AdmmConfig { iters: 8, ..Default::default() });
+                let lat = balance_and_extract(&res.p_u, &res.p_v, &vec![1.0; n], &vec![1.0; m]);
+                qm.set_layer(id, lat);
+            }
+            qm.freeze_block(bi);
+        }
+        let frozen_before: Vec<PackedBits> =
+            qm.layers.values().map(|q| q.frozen.as_ref().unwrap().u.clone()).collect();
+
+        let calib: Vec<Vec<u16>> =
+            (0..8).map(|i| (0..17).map(|j| ((i * 31 + j * 7) % 250) as u16).collect()).collect();
+        let mut rng2 = Rng::new(1);
+        let losses =
+            tune_scales_global(&mut qm, &teacher, &calib, 25, 4, 16, 5e-3, 2.0, &mut rng2);
+        assert_eq!(losses.len(), 25);
+        let first: f64 = losses[..3].iter().sum::<f64>() / 3.0;
+        let last: f64 = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
+        assert!(last < first, "first={first} last={last}");
+
+        // Binaries untouched.
+        for (before, q) in frozen_before.iter().zip(qm.layers.values()) {
+            assert_eq!(before.hamming(&q.frozen.as_ref().unwrap().u), 0);
+        }
+    }
+
+    #[test]
+    fn noop_without_quantized_layers() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(2);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+        let calib = vec![vec![1u16; 17]];
+        let losses = tune_scales_global(&mut qm, &teacher, &calib, 5, 1, 16, 1e-3, 1.0, &mut rng);
+        assert!(losses.is_empty());
+    }
+}

@@ -1,0 +1,165 @@
+//! The NanoQuant representation (paper Eq. 1 / Appendix F.5):
+//!
+//! `W ≈ Ŵ = diag(s1) · U±1 V±1ᵀ · diag(s2)`
+//!
+//! with `U±1 ∈ {±1}^{n×r}`, `V±1 ∈ {±1}^{m×r}` and FP16 channel scales.
+//! The rank `r` sets the effective bits-per-weight:
+//! `BPW = (r(n+m) + 16(n+m)) / (nm)`.
+
+use super::pack::PackedBits;
+use crate::tensor::{matmul_a_bt, Tensor};
+
+/// Continuous latent factorization (pre-binarization): `𝒰, 𝒱` and scales.
+/// `sign(𝒰) sign(𝒱)ᵀ` scaled by `s1, s2` is the quantized weight.
+#[derive(Clone, Debug)]
+pub struct LatentFactors {
+    /// [n, r]
+    pub u: Tensor,
+    /// [m, r]
+    pub v: Tensor,
+    /// [n]
+    pub s1: Vec<f32>,
+    /// [m]
+    pub s2: Vec<f32>,
+}
+
+impl LatentFactors {
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    /// Materialize the quantized weight Ŵ = diag(s1) sign(U) sign(V)ᵀ diag(s2).
+    pub fn reconstruct(&self) -> Tensor {
+        let bu = self.u.sign_pm1();
+        let bv = self.v.sign_pm1();
+        matmul_a_bt(&bu, &bv).scale_rows(&self.s1).scale_cols(&self.s2)
+    }
+
+    /// Freeze into packed form.
+    pub fn freeze(&self) -> QuantLinear {
+        QuantLinear {
+            u: PackedBits::from_signs(&self.u),
+            // V is stored transposed ([r, m]) so the serving matvec reduces
+            // over contiguous packed input-dim words.
+            vt: PackedBits::from_signs(&self.v.t()),
+            s1: self.s1.clone(),
+            s2: self.s2.clone(),
+        }
+    }
+}
+
+/// Frozen, packed quantized linear layer.
+#[derive(Clone, Debug)]
+pub struct QuantLinear {
+    /// Packed sign(U): [n, r].
+    pub u: PackedBits,
+    /// Packed sign(V)ᵀ: [r, m].
+    pub vt: PackedBits,
+    pub s1: Vec<f32>,
+    pub s2: Vec<f32>,
+}
+
+impl QuantLinear {
+    pub fn out_dim(&self) -> usize {
+        self.u.rows
+    }
+    pub fn in_dim(&self) -> usize {
+        self.vt.cols
+    }
+    pub fn rank(&self) -> usize {
+        self.u.cols
+    }
+
+    /// Materialize the dense Ŵ.
+    pub fn reconstruct(&self) -> Tensor {
+        let bu = self.u.unpack(); // [n, r]
+        let bv_t = self.vt.unpack(); // [r, m]
+        crate::tensor::matmul(&bu, &bv_t).scale_rows(&self.s1).scale_cols(&self.s2)
+    }
+
+    /// Effective storage in **bits**, counting scales at FP16
+    /// (paper Eq. 58: `r(n+m) + 16(n+m)`).
+    pub fn effective_bits(&self) -> usize {
+        let (n, m, r) = (self.out_dim(), self.in_dim(), self.rank());
+        r * (n + m) + 16 * (n + m)
+    }
+}
+
+/// Rank that hits a target BPW for an `n × m` layer (paper Eq. 59 solved
+/// for r). Clamped to at least 1.
+pub fn rank_for_bpw(n: usize, m: usize, bpw: f64) -> usize {
+    let r = bpw * (n as f64) * (m as f64) / ((n + m) as f64) - 16.0;
+    r.round().max(1.0) as usize
+}
+
+/// Exact effective BPW achieved by rank `r` on an `n × m` layer.
+pub fn bpw_for_rank(n: usize, m: usize, r: usize) -> f64 {
+    ((r * (n + m) + 16 * (n + m)) as f64) / ((n * m) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::check;
+    use crate::util::rng::Rng;
+
+    fn random_latents(n: usize, m: usize, r: usize, seed: u64) -> LatentFactors {
+        let mut rng = Rng::new(seed);
+        LatentFactors {
+            u: Tensor::randn(&[n, r], 1.0, &mut rng),
+            v: Tensor::randn(&[m, r], 1.0, &mut rng),
+            s1: (0..n).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+            s2: (0..m).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+        }
+    }
+
+    #[test]
+    fn freeze_reconstruct_matches_latent_reconstruct() {
+        let lat = random_latents(20, 36, 7, 0);
+        let dense = lat.reconstruct();
+        let frozen = lat.freeze();
+        let dense2 = frozen.reconstruct();
+        assert!(dense2.rel_error(&dense) < 1e-5);
+        assert_eq!(frozen.out_dim(), 20);
+        assert_eq!(frozen.in_dim(), 36);
+        assert_eq!(frozen.rank(), 7);
+    }
+
+    #[test]
+    fn rank_bpw_inverse_relationship() {
+        check("rank_for_bpw inverts bpw_for_rank", 100, |g| {
+            let n = g.int(64, 512);
+            let m = g.int(64, 512);
+            let r = g.int(1, 64);
+            let bpw = bpw_for_rank(n, m, r);
+            let r2 = rank_for_bpw(n, m, bpw);
+            assert_eq!(r2, r, "n={n} m={m} r={r} bpw={bpw}");
+        });
+    }
+
+    #[test]
+    fn paper_rank_example_square_layer() {
+        // For an n=m square layer, BPW = (r + 16) * 2 / n: at n=4096 and
+        // 1 bit, r = 4096/2 - 16 = 2032.
+        assert_eq!(rank_for_bpw(4096, 4096, 1.0), 2032);
+        // 0.55 bits
+        assert_eq!(rank_for_bpw(4096, 4096, 0.55), (0.55f64 * 2048.0 - 16.0).round() as usize);
+    }
+
+    #[test]
+    fn bpw_monotone_in_rank() {
+        let mut prev = 0.0;
+        for r in 1..40 {
+            let b = bpw_for_rank(256, 256, r);
+            assert!(b > prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn effective_bits_formula() {
+        let lat = random_latents(32, 64, 5, 1);
+        let q = lat.freeze();
+        assert_eq!(q.effective_bits(), 5 * 96 + 16 * 96);
+    }
+}

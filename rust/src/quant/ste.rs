@@ -1,0 +1,234 @@
+//! Step 3 — Factorized Component Refinement (paper §3.2, Eq. 10).
+//!
+//! Jointly tunes the continuous latents `𝒰, 𝒱` and the channel scales
+//! `s1, s2` of every quantized linear in the current block to align the
+//! quantized block's output with the FP teacher block's output, using the
+//! Straight-Through Estimator through `sign(·)`.
+
+use super::qmodel::{latent_grads, QuantModel};
+use crate::nn::adam::{cosine_lr, Adam};
+use crate::nn::backward::block_backward;
+use crate::nn::model::{block_forward, LayerKind, ModelConfig};
+use crate::nn::LayerId;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Per-layer refinement statistics (feeds Fig. 8's latent-dynamics plot).
+#[derive(Clone, Debug)]
+pub struct LayerSteStats {
+    pub id: LayerId,
+    /// Fraction of latent entries whose sign flipped during refinement.
+    pub flip_ratio: f64,
+    /// Subsampled (initial |latent|, |delta|, flipped) triples.
+    pub samples: Vec<(f32, f32, bool)>,
+}
+
+/// Refinement report for one block.
+#[derive(Clone, Debug, Default)]
+pub struct SteReport {
+    pub layers: Vec<LayerSteStats>,
+    pub loss_curve: Vec<f64>,
+}
+
+/// Optimizer state for one layer's latents+scales.
+struct LayerOpt {
+    id: LayerId,
+    u: Adam,
+    v: Adam,
+    s1: Adam,
+    s2: Adam,
+    u0: Tensor,
+    v0: Tensor,
+}
+
+/// Run STE refinement on block `block`.
+///
+/// `x_q`: block inputs from the quantized prefix `[n_seqs*seq, d]`;
+/// `y_fp`: teacher block outputs (targets), same shape.
+pub fn refine_block(
+    mcfg: &ModelConfig,
+    qm: &mut QuantModel,
+    block: usize,
+    x_q: &Tensor,
+    y_fp: &Tensor,
+    n_seqs: usize,
+    seq: usize,
+    steps: usize,
+    batch_seqs: usize,
+    lr: f32,
+    rng: &mut Rng,
+) -> SteReport {
+    assert_eq!(x_q.rows(), n_seqs * seq);
+    assert_eq!(y_fp.rows(), n_seqs * seq);
+    let mut report = SteReport::default();
+    if steps == 0 {
+        return report;
+    }
+
+    // Collect the quantized layers of this block.
+    let ids: Vec<LayerId> = LayerKind::ALL
+        .iter()
+        .map(|&kind| LayerId { block, kind })
+        .filter(|id| qm.layers.contains_key(id))
+        .collect();
+    if ids.is_empty() {
+        return report;
+    }
+    let mut opts: Vec<LayerOpt> = ids
+        .iter()
+        .map(|&id| {
+            let q = &qm.layers[&id];
+            LayerOpt {
+                id,
+                u: Adam::new(q.latent.u.numel(), lr),
+                v: Adam::new(q.latent.v.numel(), lr),
+                // Scales get a larger step (they are few and well-scaled).
+                s1: Adam::new(q.latent.s1.len(), lr * 10.0),
+                s2: Adam::new(q.latent.s2.len(), lr * 10.0),
+                u0: q.latent.u.clone(),
+                v0: q.latent.v.clone(),
+            }
+        })
+        .collect();
+
+    let batch_seqs = batch_seqs.clamp(1, n_seqs);
+    let d = mcfg.d_model;
+    for step in 0..steps {
+        // Sample a minibatch of sequences.
+        let picks = rng.sample_indices(n_seqs, batch_seqs);
+        let mut xb = Tensor::zeros(&[batch_seqs * seq, d]);
+        let mut yb = Tensor::zeros(&[batch_seqs * seq, d]);
+        for (bi, &si) in picks.iter().enumerate() {
+            for s in 0..seq {
+                xb.row_mut(bi * seq + s).copy_from_slice(x_q.row(si * seq + s));
+                yb.row_mut(bi * seq + s).copy_from_slice(y_fp.row(si * seq + s));
+            }
+        }
+        let bw = &qm.params.blocks[block];
+        let (yhat, cache) = block_forward(mcfg, bw, &xb, batch_seqs, seq);
+        let diff = yhat.sub(&yb);
+        let loss = diff.fro_norm_sq() / diff.numel() as f64;
+        report.loss_curve.push(loss);
+        let dy = diff.scale(2.0 / diff.numel() as f32);
+        let (_, grads) = block_backward(mcfg, bw, &cache, &dy, block, None);
+
+        let lr_scale = cosine_lr(step as u64, steps as u64);
+        for opt in opts.iter_mut() {
+            let lg = {
+                let q = &qm.layers[&opt.id];
+                latent_grads(&q.latent, grads.linear(opt.id.kind))
+            };
+            let q = qm.layers.get_mut(&opt.id).unwrap();
+            opt.u.step(&mut q.latent.u.data, &lg.du.data, lr_scale);
+            opt.v.step(&mut q.latent.v.data, &lg.dv.data, lr_scale);
+            opt.s1.step(&mut q.latent.s1, &lg.ds1, lr_scale);
+            opt.s2.step(&mut q.latent.s2, &lg.ds2, lr_scale);
+            // Keep scales positive (they are magnitudes by construction).
+            for s in q.latent.s1.iter_mut().chain(q.latent.s2.iter_mut()) {
+                if *s < 1e-8 {
+                    *s = 1e-8;
+                }
+            }
+            qm.rematerialize(opt.id);
+        }
+    }
+
+    // Latent-dynamics statistics (Fig. 8).
+    for opt in &opts {
+        let q = &qm.layers[&opt.id];
+        let mut flips = 0usize;
+        let mut samples = Vec::new();
+        let total = opt.u0.numel() + opt.v0.numel();
+        let stride = (total / 2000).max(1);
+        let mut idx = 0usize;
+        for (t0, t1) in [(&opt.u0, &q.latent.u), (&opt.v0, &q.latent.v)] {
+            for (a, b) in t0.data.iter().zip(t1.data.iter()) {
+                let flipped = (*a >= 0.0) != (*b >= 0.0);
+                if flipped {
+                    flips += 1;
+                }
+                if idx % stride == 0 {
+                    samples.push((a.abs(), (b - a).abs(), flipped));
+                }
+                idx += 1;
+            }
+        }
+        report.layers.push(LayerSteStats {
+            id: opt.id,
+            flip_ratio: flips as f64 / total as f64,
+            samples,
+        });
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+    use crate::nn::model::ModelParams;
+    use crate::quant::admm::{lb_admm, AdmmConfig};
+    use crate::quant::balance::balance_and_extract;
+    use crate::quant::scheme::rank_for_bpw;
+
+    /// Build a tiny quantized block and check refinement reduces the loss.
+    #[test]
+    fn refinement_reduces_block_error() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+
+        // Quantize every linear of block 0 with LB-ADMM (identity precond).
+        let _d = cfg.d_model;
+        for kind in LayerKind::ALL {
+            let id = LayerId { block: 0, kind };
+            let w = teacher.blocks[0].linear(kind).clone();
+            let (n, m) = (w.rows(), w.cols());
+            let r = rank_for_bpw(n, m, 2.0).min(n).min(m); // generous rank
+            let res = lb_admm(&w, r, &AdmmConfig { iters: 12, ..Default::default() });
+            let lat = balance_and_extract(&res.p_u, &res.p_v, &vec![1.0; n], &vec![1.0; m]);
+            qm.set_layer(id, lat);
+        }
+
+        // Calibration activations: teacher embeddings of random tokens.
+        let (n_seqs, seq) = (6, 10);
+        let tokens: Vec<u16> = (0..n_seqs * seq).map(|i| (i * 7 % 250) as u16).collect();
+        let x = crate::nn::model::embed_tokens(&teacher, &tokens);
+        let (y_fp, _) = block_forward(&cfg, &teacher.blocks[0], &x, n_seqs, seq);
+
+        let before = {
+            let (yq, _) = block_forward(&cfg, &qm.params.blocks[0], &x, n_seqs, seq);
+            yq.sub(&y_fp).fro_norm_sq() / yq.numel() as f64
+        };
+        let mut rng2 = Rng::new(1);
+        let report =
+            refine_block(&cfg, &mut qm, 0, &x, &y_fp, n_seqs, seq, 30, 4, 1e-3, &mut rng2);
+        let after = {
+            let (yq, _) = block_forward(&cfg, &qm.params.blocks[0], &x, n_seqs, seq);
+            yq.sub(&y_fp).fro_norm_sq() / yq.numel() as f64
+        };
+        assert!(after < before, "before={before} after={after}");
+        assert_eq!(report.layers.len(), 7);
+        // Loss curve is recorded and mostly decreasing end-to-end.
+        assert!(report.loss_curve.len() == 30);
+        assert!(report.loss_curve.last().unwrap() < &report.loss_curve[0]);
+        // Sign flips are rare (LB-ADMM init is near a local optimum, App D.3).
+        for l in &report.layers {
+            assert!(l.flip_ratio < 0.5, "{}: flip={}", l.id, l.flip_ratio);
+            assert!(!l.samples.is_empty());
+        }
+    }
+
+    #[test]
+    fn zero_steps_is_noop() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(2);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+        let x = Tensor::zeros(&[4, cfg.d_model]);
+        let y = Tensor::zeros(&[4, cfg.d_model]);
+        let r = refine_block(&cfg, &mut qm, 0, &x, &y, 1, 4, 0, 2, 1e-3, &mut rng);
+        assert!(r.loss_curve.is_empty());
+    }
+}

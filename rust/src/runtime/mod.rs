@@ -1,0 +1,226 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. Weights and
+//! caches are graph *parameters*, so one compiled executable serves any
+//! checkpoint of the matching config (Python never runs at request time).
+
+use crate::nn::model::{LayerKind, ModelParams};
+use crate::quant::QuantModel;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// Lazily-compiled artifact registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: std::path::PathBuf,
+    pub manifest: Json,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (expects `manifest.json` inside).
+    pub fn new(artifacts_dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        let manifest_path = std::path::Path::new(artifacts_dir).join("manifest.json");
+        let manifest = if manifest_path.exists() {
+            Json::parse(&std::fs::read_to_string(&manifest_path)?)
+                .map_err(|e| anyhow!("manifest: {e}"))?
+        } else {
+            Json::obj()
+        };
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.into(),
+            manifest,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact names available in the manifest.
+    pub fn available(&self) -> Vec<String> {
+        match &self.manifest {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            _ => vec![],
+        }
+    }
+
+    /// Compile (and cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto =
+            xla::HloModuleProto::from_text_file(path.to_str().context("bad path")?)
+                .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. The artifacts are lowered with
+    /// `return_tuple=True`, so the single output literal is a tuple that we
+    /// decompose into its elements.
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let exe = &self.executables[name];
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
+        lit.decompose_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshalling
+// ---------------------------------------------------------------------------
+
+/// Dense f32 tensor -> literal.
+pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// f32 vector -> literal.
+pub fn vec_literal(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// Packed u32 words -> literal [rows, words_per_row].
+pub fn packed_literal(p: &crate::quant::PackedBits) -> Result<xla::Literal> {
+    xla::Literal::vec1(&p.words)
+        .reshape(&[p.rows as i64, p.words_per_row as i64])
+        .map_err(|e| anyhow!("reshape packed: {e:?}"))
+}
+
+/// Tokens -> i32 literal of shape [batch, seq].
+pub fn tokens_literal(tokens: &[u16], batch: usize, seq: usize) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), batch * seq);
+    let v: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    xla::Literal::vec1(&v)
+        .reshape(&[batch as i64, seq as i64])
+        .map_err(|e| anyhow!("reshape tokens: {e:?}"))
+}
+
+/// Scalar i32 literal.
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// Literal -> f32 vec (flattened).
+pub fn literal_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+// ---------------------------------------------------------------------------
+// Model parameter marshalling (the canonical flat order of model.py)
+// ---------------------------------------------------------------------------
+
+/// Flatten dense FP params in the artifact calling convention.
+pub fn flatten_dense_params(params: &ModelParams) -> Result<Vec<xla::Literal>> {
+    let mut out = Vec::new();
+    out.push(tensor_literal(&params.embed)?);
+    for b in &params.blocks {
+        out.push(vec_literal(&b.ln1));
+        for kind in LayerKind::ALL {
+            out.push(tensor_literal(b.linear(kind))?);
+        }
+        out.push(vec_literal(&b.ln2));
+    }
+    out.push(vec_literal(&params.ln_f));
+    if let Some(h) = &params.head {
+        out.push(tensor_literal(h)?);
+    }
+    Ok(out)
+}
+
+/// Flatten a quantized model: packed (u, vt, s1, s2) per decoder linear.
+/// Every decoder linear must be quantized at the rank layout the artifact
+/// was lowered with.
+pub fn flatten_quant_params(qm: &QuantModel) -> Result<Vec<xla::Literal>> {
+    let params = &qm.params;
+    let mut out = Vec::new();
+    out.push(tensor_literal(&params.embed)?);
+    for (bi, b) in params.blocks.iter().enumerate() {
+        out.push(vec_literal(&b.ln1));
+        for kind in LayerKind::ALL {
+            let id = crate::nn::LayerId { block: bi, kind };
+            let q = qm
+                .layers
+                .get(&id)
+                .with_context(|| format!("layer {id} not quantized"))?
+                .packed();
+            out.push(packed_literal(&q.u)?);
+            out.push(packed_literal(&q.vt)?);
+            out.push(vec_literal(&q.s1));
+            out.push(vec_literal(&q.s2));
+        }
+        out.push(vec_literal(&b.ln2));
+    }
+    out.push(vec_literal(&params.ln_f));
+    if let Some(h) = &params.head {
+        out.push(tensor_literal(h)?);
+    }
+    Ok(out)
+}
+
+/// Zeroed KV-cache literal [n_layers, max_seq, kv_dim].
+pub fn kv_cache_literal(cfg: &crate::nn::model::ModelConfig) -> Result<xla::Literal> {
+    let kv = cfg.n_kv_heads * cfg.head_dim();
+    let zeros = vec![0.0f32; cfg.n_layers * cfg.max_seq * kv];
+    xla::Literal::vec1(&zeros)
+        .reshape(&[cfg.n_layers as i64, cfg.max_seq as i64, kv as i64])
+        .map_err(|e| anyhow!("reshape kv: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    // Full artifact round-trips live in rust/tests/runtime_parity.rs (they
+    // need `make artifacts`). Here: marshalling-only units.
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[3, 5], 1.0, &mut rng);
+        let lit = tensor_literal(&t).unwrap();
+        let back = literal_f32(&lit).unwrap();
+        assert_eq!(back, t.data);
+    }
+
+    #[test]
+    fn packed_literal_shape() {
+        let t = Tensor::ones(&[4, 70]).sign_pm1();
+        let p = crate::quant::PackedBits::from_signs(&t);
+        let lit = packed_literal(&p).unwrap();
+        let back = lit.to_vec::<u32>().unwrap();
+        assert_eq!(back.len(), 4 * 3);
+        assert!(back.iter().all(|&w| w != 0));
+    }
+
+    #[test]
+    fn tokens_literal_casts() {
+        let lit = tokens_literal(&[1, 2, 256], 1, 3).unwrap();
+        let back = lit.to_vec::<i32>().unwrap();
+        assert_eq!(back, vec![1, 2, 256]);
+    }
+}

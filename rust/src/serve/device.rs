@@ -1,0 +1,176 @@
+//! Device cost model — the hardware substitution for the paper's
+//! RTX 3050 / Jetson TX2 / A100 / H100 testbeds (Table 11).
+//!
+//! Single-batch LLM decoding is memory-bandwidth bound: every generated
+//! token must stream the full weight set (plus the KV cache) through the
+//! memory hierarchy. The model therefore estimates
+//!
+//!   time/token  = bytes_moved / bandwidth     (roofline)
+//!   energy/token = board_power × time/token
+//!   peak memory  = weights + KV cache + activations
+//!
+//! which preserves exactly the quantity the paper's Figures 4/5/7/10–13
+//! measure: *who wins and by what factor* is a ratio of bytes moved, and
+//! NanoQuant moves ~16–24× fewer weight bytes. Measured CPU wall-clock from
+//! the real engines is reported alongside (for kernel-order validation);
+//! absolute GPU numbers are out of reach in this sandbox by construction.
+
+/// Hardware specs from paper Table 11.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub mem_gb: f64,
+    pub bandwidth_gbs: f64,
+    pub cuda_cores: u32,
+    pub tensor_cores: u32,
+    /// Board power used for the energy estimate (W).
+    pub board_power_w: f64,
+}
+
+pub const JETSON_TX2: DeviceSpec = DeviceSpec {
+    name: "Jetson TX2",
+    mem_gb: 8.0,
+    bandwidth_gbs: 59.7,
+    cuda_cores: 256,
+    tensor_cores: 0,
+    board_power_w: 15.0,
+};
+
+pub const RTX_3050: DeviceSpec = DeviceSpec {
+    name: "RTX 3050 (8GB)",
+    mem_gb: 8.0,
+    bandwidth_gbs: 224.0,
+    cuda_cores: 2560,
+    tensor_cores: 80,
+    board_power_w: 130.0,
+};
+
+pub const A100: DeviceSpec = DeviceSpec {
+    name: "A100 SXM (80GB)",
+    mem_gb: 80.0,
+    bandwidth_gbs: 2039.0,
+    cuda_cores: 6912,
+    tensor_cores: 432,
+    board_power_w: 400.0,
+};
+
+pub const H100: DeviceSpec = DeviceSpec {
+    name: "H100 PCIe (80GB)",
+    mem_gb: 80.0,
+    bandwidth_gbs: 2000.0,
+    cuda_cores: 14592,
+    tensor_cores: 456,
+    board_power_w: 350.0,
+};
+
+pub const ALL_DEVICES: [DeviceSpec; 4] = [JETSON_TX2, RTX_3050, A100, H100];
+
+/// Roofline estimate for single-batch decoding.
+#[derive(Clone, Debug)]
+pub struct DecodeEstimate {
+    pub tokens_per_s: f64,
+    pub energy_per_token_j: f64,
+    pub peak_mem_gb: f64,
+    /// Whether the model fits in device memory at all.
+    pub fits: bool,
+}
+
+/// Estimate decode throughput at a given context length.
+///
+/// `weight_bytes` — effective compressed weight bytes moved per token;
+/// `kv_bytes_at_len` — KV-cache bytes *read* per token at this context;
+/// `act_bytes` — transient activation working set.
+pub fn estimate_decode(
+    spec: &DeviceSpec,
+    weight_bytes: usize,
+    kv_bytes_at_len: usize,
+    act_bytes: usize,
+) -> DecodeEstimate {
+    let moved = (weight_bytes + kv_bytes_at_len) as f64;
+    let t = moved / (spec.bandwidth_gbs * 1e9);
+    let peak = (weight_bytes + kv_bytes_at_len + act_bytes) as f64 / 1e9;
+    DecodeEstimate {
+        tokens_per_s: 1.0 / t,
+        energy_per_token_j: spec.board_power_w * t,
+        peak_mem_gb: peak,
+        fits: peak <= spec.mem_gb,
+    }
+}
+
+/// Batched (GEMM) estimate: compute-bound once the batch amortizes weight
+/// traffic. Effective throughput = min(bandwidth bound × batch, flop bound).
+pub fn estimate_batched(
+    spec: &DeviceSpec,
+    weight_bytes: usize,
+    flops_per_token: f64,
+    batch: usize,
+) -> f64 {
+    // Weight traffic amortized over the batch.
+    let bw_tokens_per_s = (spec.bandwidth_gbs * 1e9) / (weight_bytes as f64 / batch as f64);
+    // Crude FLOP ceiling: cores × 2 ops × clock(1.5 GHz equivalent).
+    let flops = (spec.cuda_cores as f64 + 16.0 * spec.tensor_cores as f64) * 2.0 * 1.5e9;
+    let compute_tokens_per_s = flops / flops_per_token;
+    bw_tokens_per_s.min(compute_tokens_per_s) * 0.85 // efficiency factor
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compressed_weights_give_proportional_speedup() {
+        // 16x fewer weight bytes -> ~16x decode speedup when KV is small.
+        let dense = estimate_decode(&RTX_3050, 2_000_000_000, 10_000_000, 10_000_000);
+        let quant = estimate_decode(&RTX_3050, 125_000_000, 10_000_000, 10_000_000);
+        let ratio = quant.tokens_per_s / dense.tokens_per_s;
+        assert!(ratio > 10.0 && ratio < 16.5, "ratio={ratio}");
+        // Energy per token improves by the same factor.
+        let eratio = dense.energy_per_token_j / quant.energy_per_token_j;
+        assert!((eratio - ratio / 1.0).abs() / ratio < 0.2);
+    }
+
+    #[test]
+    fn paper_70b_on_8gb_scenario() {
+        // Llama-2-70B BF16 (137.95 GB) does not fit on an RTX 3050; the
+        // 0.55-bit NanoQuant model (5.75 GB weights) does — the headline
+        // accessibility claim.
+        let dense = estimate_decode(&RTX_3050, 137_950_000_000, 0, 100_000_000);
+        assert!(!dense.fits);
+        let quant = estimate_decode(&RTX_3050, 5_750_000_000, 120_000_000, 100_000_000);
+        assert!(quant.fits);
+        // Paper Table 12 reports ~20.11 tok/s at short contexts; the
+        // roofline should land in the same decade.
+        assert!(
+            quant.tokens_per_s > 15.0 && quant.tokens_per_s < 60.0,
+            "tok/s={}",
+            quant.tokens_per_s
+        );
+    }
+
+    #[test]
+    fn kv_growth_degrades_throughput() {
+        let short = estimate_decode(&H100, 1_000_000_000, 10_000_000, 0);
+        let long = estimate_decode(&H100, 1_000_000_000, 500_000_000, 0);
+        assert!(long.tokens_per_s < short.tokens_per_s);
+    }
+
+    #[test]
+    fn batching_amortizes_weight_traffic_until_compute_bound() {
+        let w = 2_000_000_000usize;
+        let flops = 4e9;
+        let b1 = estimate_batched(&A100, w, flops, 1);
+        let b8 = estimate_batched(&A100, w, flops, 8);
+        let b1024 = estimate_batched(&A100, w, flops, 1024);
+        let b4096 = estimate_batched(&A100, w, flops, 4096);
+        assert!(b8 > b1 * 6.0);
+        // Eventually the FLOP ceiling binds and batching stops helping.
+        assert!((b4096 - b1024).abs() / b1024 < 0.5);
+    }
+
+    #[test]
+    fn device_table_matches_paper() {
+        assert_eq!(JETSON_TX2.tensor_cores, 0);
+        assert_eq!(H100.cuda_cores, 14592);
+        assert!((A100.bandwidth_gbs - 2039.0).abs() < 1.0);
+    }
+}

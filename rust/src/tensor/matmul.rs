@@ -1,0 +1,207 @@
+//! Blocked, multithreaded f32 matrix multiplication.
+//!
+//! The pipeline's compute cost is dominated by dense GEMMs (ADMM factor
+//! updates, block forward/backward during reconstruction, teacher training),
+//! so this file is a hot path. Strategy: row-parallel over the output, with
+//! a k-blocked inner kernel that keeps panels of B in cache and vectorizes
+//! (autovectorized 8-wide FMA over contiguous rows).
+
+use super::Tensor;
+use crate::util::threadpool::parallel_chunks_mut;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Tunable k-block (cache panel height). See EXPERIMENTS.md §Perf.
+static KBLOCK: AtomicUsize = AtomicUsize::new(256);
+
+/// Override the k-block size (used by the perf harness).
+pub fn set_matmul_block(k: usize) {
+    KBLOCK.store(k.max(8), Ordering::Relaxed);
+}
+
+/// C = A @ B for A:[m,k], B:[k,n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims: {:?} x {:?}", a.shape, b.shape);
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(&a.data, &b.data, &mut out.data, m, k, n);
+    out
+}
+
+/// C = A^T @ B for A:[k,m], B:[k,n] (no explicit transpose materialized).
+pub fn matmul_at_b(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (k, m) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_at_b inner dims: {:?} x {:?}", a.shape, b.shape);
+    // Transposing A once and reusing the fast row kernel beats a strided
+    // inner loop for the sizes we care about.
+    let at = a.t();
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(&at.data, &b.data, &mut out.data, m, k, n);
+    out
+}
+
+/// C = A @ B^T for A:[m,k], B:[n,k].
+pub fn matmul_a_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rank(), 2);
+    assert_eq!(b.rank(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_a_bt inner dims: {:?} x {:?}", a.shape, b.shape);
+    let mut out = Tensor::zeros(&[m, n]);
+    // Dot-product kernel: rows of A against rows of B are both contiguous.
+    parallel_chunks_mut(&mut out.data, n, |i, crow| {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for (j, c) in crow.iter_mut().enumerate() {
+            let brow = &b.data[j * k..(j + 1) * k];
+            *c = dot(arow, brow);
+        }
+    });
+    out
+}
+
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    // 8 accumulators: breaks the dependency chain so LLVM vectorizes.
+    let mut acc = [0.0f32; 8];
+    let chunks = x.len() / 8;
+    for c in 0..chunks {
+        let xi = &x[c * 8..c * 8 + 8];
+        let yi = &y[c * 8..c * 8 + 8];
+        for l in 0..8 {
+            acc[l] += xi[l] * yi[l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for i in chunks * 8..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// axpy: y += a * x (vectorizable).
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * *xi;
+    }
+}
+
+/// Core kernel: out[m,n] = a[m,k] @ b[k,n], row-parallel, k-blocked.
+fn matmul_into(a: &[f32], b: &[f32], out: &mut [f32], _m: usize, k: usize, n: usize) {
+    let kb = KBLOCK.load(Ordering::Relaxed);
+    parallel_chunks_mut(out, n, |i, crow| {
+        // crow = C[i, :]. Accumulate over k in blocks so B panel rows stay hot.
+        let arow = &a[i * k..(i + 1) * k];
+        for k0 in (0..k).step_by(kb) {
+            let k1 = (k0 + kb).min(k);
+            for kk in k0..k1 {
+                let aik = arow[kk];
+                if aik != 0.0 {
+                    axpy(aik, &b[kk * n..kk * n + n], crow);
+                }
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape[0], a.shape[1]);
+        let n = b.shape[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for l in 0..k {
+                    s += (a.at2(i, l) * b.at2(l, j)) as f64;
+                }
+                *c.at2_mut(i, j) = s as f32;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Tensor, b: &Tensor, tol: f32) {
+        assert_eq!(a.shape, b.shape);
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert!(
+                (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+                "mismatch {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_on_random() {
+        let mut rng = Rng::new(0);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (17, 33, 9), (64, 128, 32), (50, 300, 50)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            assert_close(&matmul(&a, &b), &naive_matmul(&a, &b), 1e-4);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[9, 9], 1.0, &mut rng);
+        let mut eye = Tensor::zeros(&[9, 9]);
+        for i in 0..9 {
+            *eye.at2_mut(i, i) = 1.0;
+        }
+        assert_close(&matmul(&a, &eye), &a, 1e-6);
+        assert_close(&matmul(&eye, &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[40, 13], 1.0, &mut rng);
+        let b = Tensor::randn(&[40, 21], 1.0, &mut rng);
+        assert_close(&matmul_at_b(&a, &b), &matmul(&a.t(), &b), 1e-4);
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[12, 30], 1.0, &mut rng);
+        let b = Tensor::randn(&[18, 30], 1.0, &mut rng);
+        assert_close(&matmul_a_bt(&a, &b), &matmul(&a, &b.t()), 1e-4);
+    }
+
+    #[test]
+    fn kblock_setting_preserves_results() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[33, 77], 1.0, &mut rng);
+        let b = Tensor::randn(&[77, 19], 1.0, &mut rng);
+        let c1 = matmul(&a, &b);
+        set_matmul_block(16);
+        let c2 = matmul(&a, &b);
+        set_matmul_block(256);
+        assert_close(&c1, &c2, 1e-5);
+    }
+
+    #[test]
+    fn dot_and_axpy() {
+        let x: Vec<f32> = (0..19).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..19).map(|i| (i * 2) as f32).collect();
+        let expect: f32 = (0..19).map(|i| (i * i * 2) as f32).sum();
+        assert_eq!(dot(&x, &y), expect);
+        let mut z = y.clone();
+        axpy(0.5, &x, &mut z);
+        for i in 0..19 {
+            assert_eq!(z[i], y[i] + 0.5 * x[i]);
+        }
+    }
+}

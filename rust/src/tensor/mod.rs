@@ -1,0 +1,185 @@
+//! Dense f32 tensors (row-major) and the operations the library needs.
+//!
+//! This is the numeric substrate for the native Rust side of the stack: the
+//! quantization pipeline (ADMM solves, STE tuning), the transformer
+//! forward/backward used for teacher training and calibration, and the
+//! packed-binary serving kernels. It is deliberately small: f32 only,
+//! row-major contiguous storage, explicit shapes.
+
+mod matmul;
+mod ops;
+
+pub use matmul::{axpy, dot, matmul, matmul_a_bt, matmul_at_b, set_matmul_block};
+
+use crate::util::rng::Rng;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    /// iid N(0, std^2).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(shape.iter().product(), std) }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.uniform_in(lo, hi)).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2, "rows() on non-matrix {:?}", self.shape);
+        self.shape[0]
+    }
+
+    /// Columns of a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2, "cols() on non-matrix {:?}", self.shape);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c + j]
+    }
+
+    /// Row slice of a 2-D tensor.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.rank(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.numel(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for i0 in (0..r).step_by(B) {
+            for j0 in (0..c).step_by(B) {
+                for i in i0..(i0 + B).min(r) {
+                    for j in j0..(j0 + B).min(c) {
+                        out[j * r + i] = self.data[i * c + j];
+                    }
+                }
+            }
+        }
+        Tensor { shape: vec![c, r], data: out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn shape_mismatch_panics() {
+        Tensor::new(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let t = Tensor::randn(&[37, 53], 1.0, &mut rng);
+        let tt = t.t().t();
+        assert_eq!(t, tt);
+        assert_eq!(t.t().shape, vec![53, 37]);
+        assert_eq!(t.at2(5, 7), t.t().at2(7, 5));
+    }
+
+    #[test]
+    fn zeros_ones_full() {
+        assert!(Tensor::zeros(&[4]).data.iter().all(|&x| x == 0.0));
+        assert!(Tensor::ones(&[4]).data.iter().all(|&x| x == 1.0));
+        assert!(Tensor::full(&[4], 2.5).data.iter().all(|&x| x == 2.5));
+    }
+
+    #[test]
+    fn randn_statistics() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[100, 100], 2.0, &mut rng);
+        let mean = t.data.iter().sum::<f32>() / t.numel() as f32;
+        let var = t.data.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / t.numel() as f32;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.2, "var={var}");
+    }
+}

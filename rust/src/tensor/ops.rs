@@ -1,0 +1,268 @@
+//! Elementwise operations, reductions and activations on [`Tensor`].
+
+use super::Tensor;
+
+impl Tensor {
+    /// Elementwise in-place map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise binary op (shapes must match).
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn add_inplace(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    pub fn sub_inplace(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a -= b;
+        }
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// sign(x) with sign(0) = +1 (the convention used when binarizing).
+    pub fn sign_pm1(&self) -> Tensor {
+        self.map(|x| if x >= 0.0 { 1.0 } else { -1.0 })
+    }
+
+    /// Sum of all elements (f64 accumulation).
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.numel() as f64
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn fro_norm_sq(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Mean of |x|.
+    pub fn abs_mean(&self) -> f64 {
+        self.data.iter().map(|&x| x.abs() as f64).sum::<f64>() / self.numel() as f64
+    }
+
+    /// Relative Frobenius error ‖a−b‖F / ‖b‖F.
+    pub fn rel_error(&self, reference: &Tensor) -> f64 {
+        let denom = reference.fro_norm().max(1e-30);
+        self.sub(reference).fro_norm() / denom
+    }
+
+    /// Per-row mean of |x| for a 2-D tensor -> Vec of length rows.
+    pub fn row_abs_mean(&self) -> Vec<f32> {
+        assert_eq!(self.rank(), 2);
+        (0..self.shape[0])
+            .map(|i| {
+                let r = self.row(i);
+                (r.iter().map(|&x| x.abs() as f64).sum::<f64>() / r.len() as f64) as f32
+            })
+            .collect()
+    }
+
+    /// Scale row i by s[i] (diag(s) @ A).
+    pub fn scale_rows(&self, s: &[f32]) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(s.len(), self.shape[0]);
+        let mut out = self.clone();
+        for i in 0..self.shape[0] {
+            let si = s[i];
+            for x in out.row_mut(i) {
+                *x *= si;
+            }
+        }
+        out
+    }
+
+    /// Scale column j by s[j] (A @ diag(s)).
+    pub fn scale_cols(&self, s: &[f32]) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(s.len(), self.shape[1]);
+        let mut out = self.clone();
+        let c = self.shape[1];
+        for i in 0..self.shape[0] {
+            let row = &mut out.data[i * c..(i + 1) * c];
+            for (x, &sj) in row.iter_mut().zip(s.iter()) {
+                *x *= sj;
+            }
+        }
+        out
+    }
+
+    /// Softmax along the last axis, numerically stable.
+    pub fn softmax_lastdim(&self) -> Tensor {
+        let cols = *self.shape.last().expect("softmax on scalar");
+        let mut out = self.clone();
+        for row in out.data.chunks_mut(cols) {
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (*x - m).exp();
+                z += *x;
+            }
+            let inv = 1.0 / z;
+            for x in row.iter_mut() {
+                *x *= inv;
+            }
+        }
+        out
+    }
+
+    /// Slice rows [r0, r1) of a 2-D tensor.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert!(r0 <= r1 && r1 <= self.shape[0]);
+        let c = self.shape[1];
+        Tensor::new(&[r1 - r0, c], self.data[r0 * c..r1 * c].to_vec())
+    }
+
+    /// Vertically stack 2-D tensors with equal column counts.
+    pub fn vstack(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let c = parts[0].cols();
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            assert_eq!(p.cols(), c, "vstack column mismatch");
+            rows += p.rows();
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::new(&[rows, c], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn elementwise_arithmetic() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![10., 20., 30., 40.]);
+        assert_eq!(a.add(&b).data, vec![11., 22., 33., 44.]);
+        assert_eq!(b.sub(&a).data, vec![9., 18., 27., 36.]);
+        assert_eq!(a.mul(&b).data, vec![10., 40., 90., 160.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4., 6., 8.]);
+    }
+
+    #[test]
+    fn sign_convention_at_zero() {
+        let t = Tensor::new(&[4], vec![-0.5, 0.0, 0.5, -0.0]);
+        // sign(+0.0)=+1 and sign(-0.0)=+1 (>= 0.0 is true for -0.0 in IEEE).
+        assert_eq!(t.sign_pm1().data, vec![-1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn norms_and_means() {
+        let t = Tensor::new(&[3], vec![3., 4., 0.]);
+        assert!((t.fro_norm() - 5.0).abs() < 1e-12);
+        assert!((t.fro_norm_sq() - 25.0).abs() < 1e-12);
+        assert_eq!(t.abs_max(), 4.0);
+        assert!((t.abs_mean() - 7.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_col_scaling_matches_diag_matmul() {
+        let mut rng = Rng::new(0);
+        let a = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let s_r: Vec<f32> = (0..4).map(|i| 1.0 + i as f32).collect();
+        let s_c: Vec<f32> = (0..5).map(|j| 0.5 * (j as f32 + 1.0)).collect();
+        let scaled = a.scale_rows(&s_r).scale_cols(&s_c);
+        for i in 0..4 {
+            for j in 0..5 {
+                let expect = s_r[i] * a.at2(i, j) * s_c[j];
+                assert!((scaled.at2(i, j) - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one_and_order_preserved() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 1000., 1001., 999.]);
+        let s = t.softmax_lastdim();
+        for r in 0..2 {
+            let sum: f32 = s.row(r).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        // Stability with large logits, monotone with logit order.
+        assert!(s.at2(1, 1) > s.at2(1, 0));
+        assert!(s.at2(1, 0) > s.at2(1, 2));
+        assert!(s.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn slicing_and_stacking() {
+        let a = Tensor::new(&[3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let top = a.slice_rows(0, 1);
+        let rest = a.slice_rows(1, 3);
+        assert_eq!(top.data, vec![1., 2.]);
+        let back = Tensor::vstack(&[&top, &rest]);
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let mut rng = Rng::new(5);
+        let a = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        assert_eq!(a.rel_error(&a), 0.0);
+        let b = a.scale(1.1);
+        assert!(b.rel_error(&a) > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Support substrate built in-repo (the sandbox has no network, so the usual
+//! crates — rand / rayon / serde_json / clap / criterion / proptest — are
+//! replaced by the minimal implementations in this module).
+
+pub mod cli;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod tables;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,127 @@
+//! Minimal property-based testing helper (offline substitute for `proptest`).
+//!
+//! `check(name, cases, |gen| { ... })` runs a closure over `cases` randomly
+//! generated inputs. The closure receives a [`Gen`] that draws sizes, values
+//! and shapes from a per-case seeded RNG; on failure the panic message
+//! includes the case seed so the exact input can be replayed with
+//! [`check_seed`].
+
+use super::rng::Rng;
+
+/// Random input generator handed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f32 uniform in [lo, hi).
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// Vector of iid normals.
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, std)
+    }
+
+    /// Random boolean.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `body` over `cases` random cases. Panics (with replay seed) on failure.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, body: F) {
+    // Derive the base seed from the property name so different properties use
+    // different streams but every run is reproducible.
+    let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut gen = Gen { rng: Rng::new(seed), seed };
+            body(&mut gen);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case} (replay with check_seed(.., {seed:#x}, ..)): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn check_seed<F: Fn(&mut Gen)>(_name: &str, seed: u64, body: F) {
+    let mut gen = Gen { rng: Rng::new(seed), seed };
+    body(&mut gen);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("addition commutes", 50, |g| {
+            let a = g.f32(-10.0, 10.0);
+            let b = g.f32(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails", 10, |_g| {
+                panic!("intentional");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| format!("{err:?}"));
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("replay"), "{msg}");
+    }
+
+    #[test]
+    fn gen_int_in_range() {
+        check("int bounds", 100, |g| {
+            let x = g.int(3, 9);
+            assert!((3..=9).contains(&x));
+        });
+    }
+
+    #[test]
+    fn deterministic_between_runs() {
+        use std::cell::RefCell;
+        let first = RefCell::new(Vec::new());
+        check("capture", 5, |g| {
+            first.borrow_mut().push(g.int(0, 1000));
+        });
+        let second = RefCell::new(Vec::new());
+        check("capture", 5, |g| {
+            second.borrow_mut().push(g.int(0, 1000));
+        });
+        assert_eq!(first.into_inner(), second.into_inner());
+    }
+}

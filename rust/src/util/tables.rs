@@ -1,0 +1,127 @@
+//! Markdown/ASCII table rendering for experiment outputs.
+//!
+//! Every `exp/*` driver prints its paper table through this, so the console
+//! output looks like the paper's rows and the same structure lands in
+//! `results/*.md`.
+
+/// A simple column-aligned table with a title.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table '{}'",
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn to_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let body: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect();
+            format!("| {} |\n", body.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.headers));
+        let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+        out.push_str(&format!("| {} |\n", sep.join(" | ")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+
+    /// Append to a markdown results file (creating parents).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_markdown())
+    }
+}
+
+/// Format a perplexity the way the paper's tables do: plain for small values,
+/// scientific ("1.63e5") once it explodes.
+pub fn fmt_ppl(x: f64) -> String {
+    if !x.is_finite() {
+        return "inf".to_string();
+    }
+    if x >= 1e4 {
+        let exp = x.log10().floor() as i32;
+        let mant = x / 10f64.powi(exp);
+        format!("{mant:.2}e{exp}")
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+/// Format gigabytes with two decimals.
+pub fn fmt_gb(bytes: f64) -> String {
+    format!("{:.2}", bytes / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new("Demo", &["Method", "PPL"]);
+        t.row(vec!["NanoQuant".into(), "10.34".into()]);
+        t.row(vec!["RTN".into(), "1.63e5".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| Method    | PPL    |"));
+        assert!(md.contains("| NanoQuant | 10.34  |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("Bad", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn ppl_formatting_matches_paper_style() {
+        assert_eq!(fmt_ppl(5.47), "5.47");
+        assert_eq!(fmt_ppl(163_000.0), "1.63e5");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+}

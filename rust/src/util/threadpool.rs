@@ -1,0 +1,152 @@
+//! Scoped data-parallel helpers (offline substitute for `rayon`).
+//!
+//! The library's hot loops (blocked matmul, per-layer ADMM, batched decode)
+//! are embarrassingly parallel over row/layer/request chunks. `parallel_for`
+//! splits an index range into contiguous chunks and runs them on scoped OS
+//! threads; with one chunk (or one CPU) it degrades to the serial loop.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use, overridable via `NANOQUANT_THREADS`.
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("NANOQUANT_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Run `body(i)` for each `i` in `0..n`, in parallel over contiguous chunks.
+///
+/// `body` must be `Sync` (it is shared across threads) and is responsible for
+/// disjoint writes (typically via raw pointers into disjoint output rows, or
+/// interior mutability). Most callers use [`parallel_chunks_mut`] instead,
+/// which hands out disjoint `&mut` chunks safely.
+pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for i in 0..n {
+            body(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    // Grain: keep scheduling overhead low while balancing load.
+    let grain = (n / (workers * 4)).max(1);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let start = counter.fetch_add(grain, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + grain).min(n);
+                for i in start..end {
+                    body(i);
+                }
+            });
+        }
+    });
+}
+
+/// Split `data` into `chunk` sized mutable chunks and process them in
+/// parallel. `body(chunk_index, chunk)` — chunk indices are in order, the
+/// last chunk may be short.
+pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
+    data: &mut [T],
+    chunk: usize,
+    body: F,
+) {
+    assert!(chunk > 0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    let n = chunks.len();
+    let workers = num_threads().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        for (i, c) in chunks {
+            body(i, c);
+        }
+        return;
+    }
+    let items: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let idx = counter.fetch_add(1, Ordering::Relaxed);
+                if idx >= n {
+                    break;
+                }
+                if let Some((i, c)) = items[idx].lock().unwrap().take() {
+                    body(i, c);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n` collecting results in index order.
+pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    parallel_chunks_mut(&mut out, 1, |i, slot| {
+        slot[0] = Some(f(i));
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(1000, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_empty_and_single() {
+        parallel_for(0, |_| panic!("should not run"));
+        let c = AtomicU64::new(0);
+        parallel_for(1, |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn chunks_mut_writes_disjoint() {
+        let mut v = vec![0usize; 103];
+        parallel_chunks_mut(&mut v, 10, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = ci * 10 + j;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(257, |i| i * i);
+        for (i, x) in out.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+}

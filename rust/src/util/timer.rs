@@ -1,0 +1,120 @@
+//! Wall-clock timing and a tiny statistics-collecting bench harness
+//! (offline substitute for `criterion`). Used by `cargo bench` targets
+//! (declared with `harness = false`) and by the experiment drivers.
+
+use std::time::Instant;
+
+/// Time a closure once, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Summary statistics of repeated timings.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub p50_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput_line(&self, unit: &str, per_iter: f64) -> String {
+        format!(
+            "{:<44} {:>10.3} ms/iter  {:>12.1} {unit}/s  (min {:.3} ms, p50 {:.3} ms, n={})",
+            self.name,
+            self.mean_s * 1e3,
+            per_iter / self.mean_s,
+            self.min_s * 1e3,
+            self.p50_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} mean {:>9.4} ms  min {:>9.4} ms  p50 {:>9.4} ms  sd {:>8.4} ms  n={}",
+            self.name,
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.p50_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: a warmup, then adaptively enough iterations to cover
+/// `min_time_s` (bounded by `max_iters`), and report stats.
+pub fn bench(name: &str, min_time_s: f64, max_iters: usize, mut f: impl FnMut()) -> BenchStats {
+    // Warmup.
+    f();
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < max_iters
+        && (start.elapsed().as_secs_f64() < min_time_s || times.len() < 3)
+    {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    stats_from(name, &times)
+}
+
+/// Build stats from raw per-iteration seconds.
+pub fn stats_from(name: &str, times: &[f64]) -> BenchStats {
+    assert!(!times.is_empty());
+    let n = times.len();
+    let mean = times.iter().sum::<f64>() / n as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n as f64;
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_s: mean,
+        min_s: sorted[0],
+        max_s: sorted[n - 1],
+        p50_s: sorted[n / 2],
+        stddev_s: var.sqrt(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_measures() {
+        let (v, s) = time_once(|| {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(s >= 0.004, "s={s}");
+    }
+
+    #[test]
+    fn bench_runs_at_least_three() {
+        let st = bench("noop", 0.0, 100, || {});
+        assert!(st.iters >= 3);
+        assert!(st.min_s <= st.p50_s && st.p50_s <= st.max_s);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let st = stats_from("x", &[0.3, 0.1, 0.2]);
+        assert_eq!(st.min_s, 0.1);
+        assert_eq!(st.max_s, 0.3);
+        assert_eq!(st.p50_s, 0.2);
+        assert!((st.mean_s - 0.2).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,234 @@
+//! L2 ↔ L3 parity: the AOT JAX/Pallas artifacts must reproduce the native
+//! Rust implementation bit-closely. Requires `make artifacts` (tests skip
+//! with a notice when the artifact directory is absent).
+
+use nanoquant::nn::decode::{decode_step, dense_decode_model, KvCache};
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::{model_forward, LayerKind, ModelParams};
+use nanoquant::nn::LayerId;
+use nanoquant::quant::{rank_for_bpw, Engine, LatentFactors, PackedLinear, QuantModel};
+use nanoquant::runtime::{
+    flatten_dense_params, flatten_quant_params, kv_cache_literal, literal_f32, packed_literal,
+    scalar_i32, tokens_literal, vec_literal, Runtime,
+};
+use nanoquant::tensor::Tensor;
+use nanoquant::util::rng::Rng;
+
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("[skip] artifacts not built; run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(ARTIFACTS).expect("pjrt runtime"))
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}[{i}]: rust={x} artifact={y}"
+        );
+    }
+}
+
+/// The artifact config: l2-s, batch 1, seq 64, bpw 1.0 (see aot.py).
+fn artifact_model() -> ModelParams {
+    let cfg = family_config("l2", "s");
+    let mut rng = Rng::new(42);
+    ModelParams::init(&cfg, &mut rng)
+}
+
+fn random_quant_model(params: &ModelParams, seed: u64) -> QuantModel {
+    let mut qm = QuantModel::from_teacher(params);
+    let mut rng = Rng::new(seed);
+    for bi in 0..params.cfg.n_layers {
+        for kind in LayerKind::ALL {
+            let w = params.blocks[bi].linear(kind);
+            let (n, m) = (w.rows(), w.cols());
+            let r = rank_for_bpw(n, m, 1.0).min(n).min(m);
+            qm.set_layer(
+                LayerId { block: bi, kind },
+                LatentFactors {
+                    u: Tensor::randn(&[n, r], 1.0, &mut rng),
+                    v: Tensor::randn(&[m, r], 1.0, &mut rng),
+                    s1: (0..n).map(|_| rng.uniform_in(0.005, 0.02)).collect(),
+                    s2: (0..m).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+                },
+            );
+        }
+        qm.freeze_block(bi);
+    }
+    qm
+}
+
+#[test]
+fn dense_forward_parity() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let params = artifact_model();
+    let (batch, seq) = (1usize, 64usize);
+    let tokens: Vec<u16> = (0..seq).map(|i| ((i * 37 + 11) % 256) as u16).collect();
+
+    let (native, _) = model_forward(&params, &tokens, batch, seq, false);
+
+    let mut args = flatten_dense_params(&params).unwrap();
+    args.push(tokens_literal(&tokens, batch, seq).unwrap());
+    let out = rt.execute("l2_s_fwd_dense", &args).expect("execute");
+    let logits = literal_f32(&out[0]).unwrap();
+
+    assert_eq!(logits.len(), native.numel());
+    assert_close(&native.data, &logits, 2e-3, "dense fwd logits");
+}
+
+#[test]
+fn quant_forward_parity_pallas_kernels() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let params = artifact_model();
+    let (batch, seq) = (1usize, 64usize);
+    let tokens: Vec<u16> = (0..seq).map(|i| ((i * 53 + 5) % 256) as u16).collect();
+    let qm = random_quant_model(&params, 7);
+
+    // Native reference: materialized dense forward.
+    let (native, _) = model_forward(&qm.params, &tokens, batch, seq, false);
+
+    let mut args = flatten_quant_params(&qm).unwrap();
+    args.push(tokens_literal(&tokens, batch, seq).unwrap());
+    let out = rt.execute("l2_s_fwd_quant", &args).expect("execute quant fwd");
+    let logits = literal_f32(&out[0]).unwrap();
+    assert_close(&native.data, &logits, 5e-3, "quant fwd logits (pallas)");
+}
+
+#[test]
+fn dense_decode_parity_with_kv_cache() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let params = artifact_model();
+    let cfg = &params.cfg;
+    let tokens: Vec<u16> = vec![17, 3, 250, 88, 4];
+
+    // Native incremental decode.
+    let dm = dense_decode_model(&params);
+    let mut cache = KvCache::new(cfg);
+
+    // Artifact decode loop: KV caches round-trip as literals.
+    let flat = flatten_dense_params(&params).unwrap();
+    let mut k_cache = kv_cache_literal(cfg).unwrap();
+    let mut v_cache = kv_cache_literal(cfg).unwrap();
+    for (pos, &tok) in tokens.iter().enumerate() {
+        let native_logits = decode_step(&dm, &mut cache, tok);
+
+        let mut args: Vec<xla::Literal> = flat.iter().map(clone_lit).collect();
+        args.push(scalar_i32(tok as i32));
+        args.push(scalar_i32(pos as i32));
+        args.push(clone_lit(&k_cache));
+        args.push(clone_lit(&v_cache));
+        let mut out = rt.execute("l2_s_decode_dense", &args).expect("decode step");
+        let logits = literal_f32(&out[0]).unwrap();
+        v_cache = out.pop().unwrap();
+        k_cache = out.pop().unwrap();
+
+        assert_close(&native_logits, &logits, 2e-3, &format!("decode logits @{pos}"));
+    }
+}
+
+#[test]
+fn gemv_kernel_artifact_matches_rust_packed_kernel() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (n, m, r) = (256usize, 256usize, 112usize);
+    let mut rng = Rng::new(3);
+    let lat = LatentFactors {
+        u: Tensor::randn(&[n, r], 1.0, &mut rng),
+        v: Tensor::randn(&[m, r], 1.0, &mut rng),
+        s1: (0..n).map(|_| rng.uniform_in(0.2, 2.0)).collect(),
+        s2: (0..m).map(|_| rng.uniform_in(0.2, 2.0)).collect(),
+    };
+    let q = lat.freeze();
+    let x: Vec<f32> = rng.normal_vec(m, 1.0);
+
+    let native = PackedLinear::new(q.clone()).forward_vec(&x);
+
+    for engine in ["pallas", "naive"] {
+        let args = vec![
+            packed_literal(&q.u).unwrap(),
+            packed_literal(&q.vt).unwrap(),
+            vec_literal(&q.s1),
+            vec_literal(&q.s2),
+            vec_literal(&x),
+        ];
+        let out = rt
+            .execute(&format!("gemv_{n}x{m}x{r}_{engine}"), &args)
+            .unwrap_or_else(|e| panic!("gemv {engine}: {e}"));
+        let y = literal_f32(&out[0]).unwrap();
+        assert_close(&native, &y, 1e-2, &format!("gemv {engine}"));
+    }
+}
+
+#[test]
+fn quant_decode_engines_agree() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let params = artifact_model();
+    let cfg = &params.cfg;
+    let qm = random_quant_model(&params, 9);
+
+    // Native packed-engine decode.
+    let dm = qm.to_decode_model(Engine::Packed);
+    let mut cache = KvCache::new(cfg);
+    let tok = 99u16;
+    let native = decode_step(&dm, &mut cache, tok);
+
+    // Both quantized decode artifacts must agree with it.
+    let flat = flatten_quant_params(&qm).unwrap();
+    for name in ["l2_s_decode_quant", "l2_s_decode_naive"] {
+        let mut args: Vec<xla::Literal> = flat.iter().map(clone_lit).collect();
+        args.push(scalar_i32(tok as i32));
+        args.push(scalar_i32(0));
+        args.push(kv_cache_literal(cfg).unwrap());
+        args.push(kv_cache_literal(cfg).unwrap());
+        let out = rt.execute(name, &args).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let logits = literal_f32(&out[0]).unwrap();
+        assert_close(&native, &logits, 5e-3, name);
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.available();
+    for expect in [
+        "l2_s_fwd_dense",
+        "l2_s_fwd_quant",
+        "l2_s_decode_dense",
+        "l2_s_decode_quant",
+        "l2_s_decode_naive",
+        "gemv_256x256x112_pallas",
+    ] {
+        assert!(names.iter().any(|n| n == expect), "missing artifact {expect}");
+    }
+}
+
+/// Literal is not Clone in the xla crate; copy dense arrays by value.
+fn clone_lit(l: &xla::Literal) -> xla::Literal {
+    let shape = l.shape().expect("shape");
+    let array = match &shape {
+        xla::Shape::Array(a) => a,
+        _ => panic!("clone_lit: not an array literal"),
+    };
+    let dims: Vec<i64> = array.dims().to_vec();
+    match array.element_type() {
+        xla::ElementType::F32 => {
+            xla::Literal::vec1(&l.to_vec::<f32>().unwrap()).reshape(&dims).unwrap()
+        }
+        xla::ElementType::U32 => {
+            xla::Literal::vec1(&l.to_vec::<u32>().unwrap()).reshape(&dims).unwrap()
+        }
+        xla::ElementType::S32 => {
+            if dims.is_empty() {
+                xla::Literal::from(l.to_vec::<i32>().unwrap()[0])
+            } else {
+                xla::Literal::vec1(&l.to_vec::<i32>().unwrap()).reshape(&dims).unwrap()
+            }
+        }
+        other => panic!("unsupported element type {other:?}"),
+    }
+}
