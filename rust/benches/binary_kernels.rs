@@ -1,15 +1,35 @@
 //! `cargo bench` — packed binary GEMV/GEMM kernels (Figs. 10–13 data).
 //! Custom harness (criterion is unavailable offline); see util::timer.
+//!
+//! The GEMV loops call `matvec_into` with a preallocated output buffer —
+//! the same allocation-free form the decode hot path uses — so the numbers
+//! measure the kernels, not the allocator. Results also land in
+//! `BENCH_kernels.json` at the repository root (overwritten per run).
 
 use nanoquant::nn::decode::MatVec;
 use nanoquant::quant::kernels::{NaiveUnpackLinear, PackedLinear};
 use nanoquant::quant::{rank_for_bpw, LatentFactors};
 use nanoquant::tensor::Tensor;
+use nanoquant::util::json::{write_json, Json};
 use nanoquant::util::rng::Rng;
-use nanoquant::util::timer::bench;
+use nanoquant::util::timer::{bench, BenchStats};
+
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernels.json");
+
+fn record(results: &mut Json, key: &str, st: &BenchStats) {
+    results.insert(
+        key,
+        Json::obj()
+            .set("mean_ms", st.mean_s * 1e3)
+            .set("min_ms", st.min_s * 1e3)
+            .set("p50_ms", st.p50_s * 1e3)
+            .set("ops_per_s", 1.0 / st.mean_s),
+    );
+}
 
 fn main() {
     println!("== binary kernels (GEMV/GEMM engines across shapes) ==");
+    let mut results = Json::obj();
     for (n, m) in [(256usize, 256usize), (512, 512), (1024, 1024), (2048, 512)] {
         let r = rank_for_bpw(n, m, 1.0);
         let mut rng = Rng::new(0);
@@ -24,19 +44,26 @@ fn main() {
         let packed = PackedLinear::new(q.clone());
         let naive = NaiveUnpackLinear { q: q.clone() };
         let dense = q.reconstruct();
+        let mut y = vec![0.0f32; n];
 
         let st = bench(&format!("gemv {n}x{m} r{r} packed"), 0.3, 400, || {
-            std::hint::black_box(packed.forward_vec(&x));
+            packed.matvec_into(&x, &mut y);
+            std::hint::black_box(&y);
         });
         println!("{st}");
+        record(&mut results, &format!("gemv/{n}x{m}/packed"), &st);
         let st = bench(&format!("gemv {n}x{m} r{r} naive-unpack"), 0.3, 50, || {
-            std::hint::black_box(naive.matvec(&x));
+            naive.matvec_into(&x, &mut y);
+            std::hint::black_box(&y);
         });
         println!("{st}");
+        record(&mut results, &format!("gemv/{n}x{m}/naive-unpack"), &st);
         let st = bench(&format!("gemv {n}x{m} dense f32"), 0.3, 400, || {
-            std::hint::black_box(dense.matvec(&x));
+            dense.matvec_into(&x, &mut y);
+            std::hint::black_box(&y);
         });
         println!("{st}");
+        record(&mut results, &format!("gemv/{n}x{m}/dense"), &st);
 
         for b in [4usize, 16] {
             let xb = Tensor::randn(&[b, m], 1.0, &mut rng);
@@ -44,7 +71,17 @@ fn main() {
                 std::hint::black_box(packed.forward_batch(&xb));
             });
             println!("{st}");
+            record(&mut results, &format!("gemm/{n}x{m}/packed-b{b}"), &st);
         }
         println!();
+    }
+
+    let doc = Json::obj()
+        .set("bench", "binary_kernels")
+        .set("threads", nanoquant::util::threadpool::num_threads())
+        .set("results", results);
+    match write_json(OUT_PATH, &doc) {
+        Ok(()) => println!("wrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
     }
 }

@@ -1,5 +1,9 @@
 //! `cargo bench` — end-to-end serving throughput across engines and batch
 //! sizes (Table 12 / Fig. 7 measured axis).
+//!
+//! Besides the human-readable lines, results land in `BENCH_serve.json` at
+//! the repository root (machine-readable, overwritten per run) so the perf
+//! trajectory is tracked across PRs.
 
 use nanoquant::nn::family_config;
 use nanoquant::nn::model::{LayerKind, ModelParams};
@@ -7,8 +11,11 @@ use nanoquant::nn::LayerId;
 use nanoquant::quant::{rank_for_bpw, Engine, LatentFactors, QuantModel};
 use nanoquant::serve::{Request, Server, ServerConfig};
 use nanoquant::tensor::Tensor;
+use nanoquant::util::json::{write_json, Json};
 use nanoquant::util::rng::Rng;
 use nanoquant::util::timer::stats_from;
+
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
 
 fn main() {
     println!("== serving decode throughput (l2-s) ==");
@@ -34,6 +41,9 @@ fn main() {
         qm.freeze_block(bi);
     }
 
+    // Per run: every request decodes MAX_NEW tokens.
+    const MAX_NEW: usize = 24;
+    let mut results = Json::obj();
     for (engine, label) in [
         (Engine::Dense, "dense"),
         (Engine::Packed, "packed"),
@@ -41,21 +51,44 @@ fn main() {
     ] {
         for batch in [1usize, 4] {
             let mut times = Vec::new();
-            let mut toks_per_s = 0.0;
-            for _ in 0..3 {
+            // Run 0 is an untimed warm-up (pool spawn, arena/LUT allocation)
+            // so the recorded trajectory metric reflects steady state.
+            for run in 0..4 {
                 let mut server = Server::new(
                     qm.to_decode_model(engine),
                     ServerConfig { max_batch: batch, seed: 0 },
                 );
                 let reqs: Vec<Request> = (0..batch as u64)
-                    .map(|i| Request::greedy(i, vec![(i * 3 % 250) as u16; 8], 24))
+                    .map(|i| Request::greedy(i, vec![(i * 3 % 250) as u16; 8], MAX_NEW))
                     .collect();
                 server.run(reqs);
-                times.push(server.metrics.wall_s);
-                toks_per_s = server.metrics.tokens_per_s;
+                assert_eq!(server.metrics.total_tokens, batch * MAX_NEW);
+                if run > 0 {
+                    times.push(server.metrics.wall_s);
+                }
             }
             let st = stats_from(&format!("serve {label} batch{batch}"), &times);
-            println!("{st}   [{toks_per_s:.1} tok/s]");
+            // Aggregate tok/s over all runs, not the (noisy) last one.
+            let tok_s = (batch * MAX_NEW) as f64 / st.mean_s;
+            println!("{st}   [{tok_s:.1} tok/s]");
+            results.insert(
+                &format!("{label}/batch{batch}"),
+                Json::obj()
+                    .set("tok_s", tok_s)
+                    .set("mean_wall_s", st.mean_s)
+                    .set("min_wall_s", st.min_s)
+                    .set("p50_wall_s", st.p50_s),
+            );
         }
+    }
+
+    let doc = Json::obj()
+        .set("bench", "serve_decode")
+        .set("model", cfg.name.as_str())
+        .set("threads", nanoquant::util::threadpool::num_threads())
+        .set("results", results);
+    match write_json(OUT_PATH, &doc) {
+        Ok(()) => println!("wrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
     }
 }

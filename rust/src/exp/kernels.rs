@@ -39,23 +39,28 @@ pub fn fig10_13(ctx: &Ctx) {
         let q = make_packed(n, m, r, ctx.seed);
         let mut rng = Rng::new(ctx.seed ^ 1);
         let x = rng.normal_vec(m, 1.0);
+        // Decode-hot-path form: preallocated output, `matvec_into` only.
+        let mut y = vec![0.0f32; n];
 
+        use crate::nn::decode::MatVec;
         let packed = PackedLinear::new(q.clone());
         let st = bench(&format!("gemv {n}x{m} packed"), min_t, iters, || {
-            std::hint::black_box(packed.forward_vec(&x));
+            packed.matvec_into(&x, &mut y);
+            std::hint::black_box(&y);
         });
         push_row(&mut table, &mut raw, "GEMV", n, m, "packed (ours)", &st, q.effective_bits() / 8_000_000);
 
         let naive = NaiveUnpackLinear { q: q.clone() };
-        use crate::nn::decode::MatVec;
         let st = bench(&format!("gemv {n}x{m} naive"), min_t, iters.min(40), || {
-            std::hint::black_box(naive.matvec(&x));
+            naive.matvec_into(&x, &mut y);
+            std::hint::black_box(&y);
         });
         push_row(&mut table, &mut raw, "GEMV", n, m, "naive-unpack (GemLite-like)", &st, q.effective_bits() / 8_000_000);
 
         let dense = q.reconstruct();
         let st = bench(&format!("gemv {n}x{m} dense"), min_t, iters, || {
-            std::hint::black_box(dense.matvec(&x));
+            dense.matvec_into(&x, &mut y);
+            std::hint::black_box(&y);
         });
         push_row(&mut table, &mut raw, "GEMV", n, m, "dense f32", &st, dense.numel() * 4 / 1_000_000);
 
@@ -72,42 +77,48 @@ pub fn fig10_13(ctx: &Ctx) {
     }
 
     // --- PJRT artifact engines (the L1 Pallas kernels through XLA) ---
-    if let Ok(mut rt) = Runtime::new("artifacts") {
-        for &(n, m) in SHAPES {
-            let r = rank_for_bpw(n, m, 1.0);
-            let q = make_packed(n, m, r, ctx.seed);
-            let mut rng = Rng::new(ctx.seed ^ 2);
-            let x = rng.normal_vec(m, 1.0);
-            for engine in ["pallas", "naive"] {
-                let name = format!("gemv_{n}x{m}x{r}_{engine}");
-                if rt.load(&name).is_err() {
-                    continue;
+    match Runtime::new("artifacts") {
+        Ok(rt) if !rt.can_execute() => {
+            eprintln!("[fig10_13] no pjrt backend in this build; skipping PJRT rows");
+        }
+        Err(e) => {
+            eprintln!("[fig10_13] {e}; skipping PJRT rows");
+        }
+        Ok(mut rt) => {
+            for &(n, m) in SHAPES {
+                let r = rank_for_bpw(n, m, 1.0);
+                let q = make_packed(n, m, r, ctx.seed);
+                let mut rng = Rng::new(ctx.seed ^ 2);
+                let x = rng.normal_vec(m, 1.0);
+                for engine in ["pallas", "naive"] {
+                    let name = format!("gemv_{n}x{m}x{r}_{engine}");
+                    if rt.load(&name).is_err() {
+                        continue;
+                    }
+                    let args = vec![
+                        packed_literal(&q.u).unwrap(),
+                        packed_literal(&q.vt).unwrap(),
+                        vec_literal(&q.s1),
+                        vec_literal(&q.s2),
+                        vec_literal(&x),
+                    ];
+                    let st = bench(&name, min_t, iters.min(30), || {
+                        let out = rt.execute(&name, &args).unwrap();
+                        std::hint::black_box(literal_f32(&out[0]).unwrap());
+                    });
+                    push_row(
+                        &mut table,
+                        &mut raw,
+                        "GEMV-pjrt",
+                        n,
+                        m,
+                        &format!("{engine} (XLA)"),
+                        &st,
+                        q.effective_bits() / 8_000_000,
+                    );
                 }
-                let args = vec![
-                    packed_literal(&q.u).unwrap(),
-                    packed_literal(&q.vt).unwrap(),
-                    vec_literal(&q.s1),
-                    vec_literal(&q.s2),
-                    vec_literal(&x),
-                ];
-                let st = bench(&name, min_t, iters.min(30), || {
-                    let out = rt.execute(&name, &args).unwrap();
-                    std::hint::black_box(literal_f32(&out[0]).unwrap());
-                });
-                push_row(
-                    &mut table,
-                    &mut raw,
-                    "GEMV-pjrt",
-                    n,
-                    m,
-                    &format!("{engine} (XLA)"),
-                    &st,
-                    q.effective_bits() / 8_000_000,
-                );
             }
         }
-    } else {
-        eprintln!("[fig10_13] artifacts missing; skipping PJRT rows");
     }
     ctx.save("fig10_13", &table, raw);
 }

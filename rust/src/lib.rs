@@ -17,7 +17,12 @@
 //!   GEMV/GEMM kernels, lowered into the L2 graphs.
 //!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! paper-vs-measured results and perf tuning notes (both at the repository
+//! root).
+
+// Clippy house-style allows live in Cargo.toml `[lints.clippy]` so they
+// cover every target (bin, tests, benches, out-of-tree examples), not just
+// this library crate.
 
 pub mod data;
 pub mod eval;

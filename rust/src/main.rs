@@ -129,7 +129,13 @@ fn cmd_serve(args: &Args) {
 
 fn cmd_artifacts_check(args: &Args) {
     let dir = args.get_or("artifacts", "artifacts");
-    let mut rt = nanoquant::runtime::Runtime::new(dir).expect("runtime");
+    let mut rt = match nanoquant::runtime::Runtime::new(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("artifacts-check unavailable: {e}");
+            return;
+        }
+    };
     println!("platform: {}", rt.platform());
     let names = rt.available();
     for name in &names {

@@ -8,10 +8,22 @@ use super::model::{silu, ModelConfig};
 use crate::tensor::Tensor;
 
 /// A weight matrix that can multiply a vector: `y = W x` (W: [out, in]).
+///
+/// Engines implement [`MatVec::matvec_into`], the allocation-free entry
+/// point the decode hot path uses exclusively (outputs land in the caller's
+/// reusable scratch, see [`DecodeScratch`]); `matvec` is a default
+/// convenience wrapper for tests and one-off callers.
 pub trait MatVec: Send + Sync {
     fn out_dim(&self) -> usize;
     fn in_dim(&self) -> usize;
-    fn matvec(&self, x: &[f32]) -> Vec<f32>;
+    /// Write `W x` into `out` (`out.len() == out_dim()`) without allocating.
+    fn matvec_into(&self, x: &[f32], out: &mut [f32]);
+    /// Allocating wrapper around [`MatVec::matvec_into`].
+    fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.out_dim()];
+        self.matvec_into(x, &mut out);
+        out
+    }
     /// Storage footprint in bytes (for peak-memory accounting).
     fn storage_bytes(&self) -> usize;
 }
@@ -23,9 +35,12 @@ impl MatVec for Tensor {
     fn in_dim(&self) -> usize {
         self.cols()
     }
-    fn matvec(&self, x: &[f32]) -> Vec<f32> {
+    fn matvec_into(&self, x: &[f32], out: &mut [f32]) {
         assert_eq!(x.len(), self.cols());
-        (0..self.rows()).map(|i| crate::tensor::dot(self.row(i), x)).collect()
+        assert_eq!(out.len(), self.rows());
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = crate::tensor::dot(self.row(i), x);
+        }
     }
     fn storage_bytes(&self) -> usize {
         self.numel() * 4
@@ -103,11 +118,68 @@ impl KvCache {
     }
 }
 
-fn rmsnorm_vec(x: &[f32], w: &[f32], eps: f32) -> Vec<f32> {
+fn rmsnorm_into(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     let d = x.len();
     let ms: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
     let r = (1.0 / (ms + eps as f64).sqrt()) as f32;
-    x.iter().zip(w.iter()).map(|(&v, &wi)| v * r * wi).collect()
+    for ((o, &v), &wi) in out.iter_mut().zip(x.iter()).zip(w.iter()) {
+        *o = v * r * wi;
+    }
+}
+
+/// Reusable per-sequence buffers for [`decode_step_into`]: every temporary
+/// of one token step lives here, so a steady-state decode loop performs no
+/// heap allocation at all (the serving coordinator keeps one arena per KV
+/// slot and reuses it across tokens and requests).
+pub struct DecodeScratch {
+    /// Residual stream [d].
+    x: Vec<f32>,
+    /// RMSNorm output, shared by attention/MLP/final norms [d].
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention output accumulator [n_heads * head_dim == d].
+    att: Vec<f32>,
+    /// Softmax scores [max_seq].
+    scores: Vec<f32>,
+    /// Attention / MLP projection outputs [d].
+    o: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    act: Vec<f32>,
+    down: Vec<f32>,
+    /// Next-token logits [vocab].
+    logits: Vec<f32>,
+}
+
+impl DecodeScratch {
+    /// Logits written by the most recent [`decode_step_into`] on this
+    /// scratch (callers that sample after the step read them in place
+    /// instead of copying the vocab-sized buffer).
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    pub fn new(cfg: &ModelConfig) -> DecodeScratch {
+        let d = cfg.d_model;
+        let kv = cfg.n_kv_heads * cfg.head_dim();
+        DecodeScratch {
+            x: vec![0.0; d],
+            h: vec![0.0; d],
+            q: vec![0.0; d],
+            k: vec![0.0; kv],
+            v: vec![0.0; kv],
+            att: vec![0.0; d],
+            scores: vec![0.0; cfg.max_seq],
+            o: vec![0.0; d],
+            gate: vec![0.0; cfg.d_ff],
+            up: vec![0.0; cfg.d_ff],
+            act: vec![0.0; cfg.d_ff],
+            down: vec![0.0; d],
+            logits: vec![0.0; cfg.vocab],
+        }
+    }
 }
 
 fn rope_vec(x: &mut [f32], pos: usize, n_heads: usize, hd: usize, theta: f32) {
@@ -126,9 +198,16 @@ fn rope_vec(x: &mut [f32], pos: usize, n_heads: usize, hd: usize, theta: f32) {
     }
 }
 
-/// Run one token through the model, appending to the cache.
-/// Returns the logits for the next-token distribution.
-pub fn decode_step(model: &DecodeModel, cache: &mut KvCache, token: u16) -> Vec<f32> {
+/// Run one token through the model, appending to the cache, with every
+/// temporary taken from `s` — zero heap allocations per token once the
+/// scratch is warm. Returns the logits for the next-token distribution as a
+/// slice into the scratch.
+pub fn decode_step_into<'s>(
+    model: &DecodeModel,
+    cache: &mut KvCache,
+    token: u16,
+    s: &'s mut DecodeScratch,
+) -> &'s [f32] {
     let cfg = &model.cfg;
     let d = cfg.d_model;
     let hd = cfg.head_dim();
@@ -136,39 +215,39 @@ pub fn decode_step(model: &DecodeModel, cache: &mut KvCache, token: u16) -> Vec<
     let pos = cache.len;
     assert!(pos < cache.max_seq, "KV cache overflow (max_seq={})", cache.max_seq);
 
-    let mut x: Vec<f32> = model.embed.row(token as usize).to_vec();
+    s.x.copy_from_slice(model.embed.row(token as usize));
     for (li, b) in model.blocks.iter().enumerate() {
         // Attention.
-        let h1 = rmsnorm_vec(&x, &b.ln1, cfg.eps);
-        let mut q = b.wq.matvec(&h1);
-        let mut k = b.wk.matvec(&h1);
-        let v = b.wv.matvec(&h1);
-        rope_vec(&mut q, pos, cfg.n_heads, hd, cfg.rope_theta);
-        rope_vec(&mut k, pos, cfg.n_kv_heads, hd, cfg.rope_theta);
-        cache.k[li].row_mut(pos).copy_from_slice(&k);
-        cache.v[li].row_mut(pos).copy_from_slice(&v);
+        rmsnorm_into(&s.x, &b.ln1, cfg.eps, &mut s.h);
+        b.wq.matvec_into(&s.h, &mut s.q);
+        b.wk.matvec_into(&s.h, &mut s.k);
+        b.wv.matvec_into(&s.h, &mut s.v);
+        rope_vec(&mut s.q, pos, cfg.n_heads, hd, cfg.rope_theta);
+        rope_vec(&mut s.k, pos, cfg.n_kv_heads, hd, cfg.rope_theta);
+        cache.k[li].row_mut(pos).copy_from_slice(&s.k);
+        cache.v[li].row_mut(pos).copy_from_slice(&s.v);
 
         let scale = 1.0 / (hd as f32).sqrt();
-        let mut att = vec![0.0f32; cfg.n_heads * hd];
+        s.att.fill(0.0);
         for h in 0..cfg.n_heads {
             let g = h / groups;
-            let qh = &q[h * hd..(h + 1) * hd];
+            let qh = &s.q[h * hd..(h + 1) * hd];
             // scores over positions 0..=pos
-            let mut scores = Vec::with_capacity(pos + 1);
+            let scores = &mut s.scores[..=pos];
             let mut maxv = f32::NEG_INFINITY;
-            for t in 0..=pos {
+            for (t, slot) in scores.iter_mut().enumerate() {
                 let kt = &cache.k[li].row(t)[g * hd..(g + 1) * hd];
-                let s = crate::tensor::dot(qh, kt) * scale;
-                scores.push(s);
-                maxv = maxv.max(s);
+                let sc = crate::tensor::dot(qh, kt) * scale;
+                *slot = sc;
+                maxv = maxv.max(sc);
             }
             let mut z = 0.0f32;
-            for s in scores.iter_mut() {
-                *s = (*s - maxv).exp();
-                z += *s;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - maxv).exp();
+                z += *sc;
             }
             let inv = 1.0 / z;
-            let out = &mut att[h * hd..(h + 1) * hd];
+            let out = &mut s.att[h * hd..(h + 1) * hd];
             for t in 0..=pos {
                 let p = scores[t] * inv;
                 if p != 0.0 {
@@ -179,39 +258,54 @@ pub fn decode_step(model: &DecodeModel, cache: &mut KvCache, token: u16) -> Vec<
                 }
             }
         }
-        let o = b.wo.matvec(&att);
+        b.wo.matvec_into(&s.att, &mut s.o);
         for i in 0..d {
-            x[i] += o[i];
+            s.x[i] += s.o[i];
         }
 
         // MLP.
-        let h2 = rmsnorm_vec(&x, &b.ln2, cfg.eps);
-        let gate = b.wg.matvec(&h2);
-        let up = b.wu.matvec(&h2);
-        let act: Vec<f32> = gate.iter().zip(up.iter()).map(|(&g, &u)| silu(g) * u).collect();
-        let down = b.wd.matvec(&act);
+        rmsnorm_into(&s.x, &b.ln2, cfg.eps, &mut s.h);
+        b.wg.matvec_into(&s.h, &mut s.gate);
+        b.wu.matvec_into(&s.h, &mut s.up);
+        for ((a, &g), &u) in s.act.iter_mut().zip(s.gate.iter()).zip(s.up.iter()) {
+            *a = silu(g) * u;
+        }
+        b.wd.matvec_into(&s.act, &mut s.down);
         for i in 0..d {
-            x[i] += down[i];
+            s.x[i] += s.down[i];
         }
     }
     cache.len = pos + 1;
 
-    let hf = rmsnorm_vec(&x, &model.ln_f, cfg.eps);
+    rmsnorm_into(&s.x, &model.ln_f, cfg.eps, &mut s.h);
     match &model.head {
-        Some(h) => h.matvec(&hf),
-        None => (0..model.embed.rows())
-            .map(|i| crate::tensor::dot(model.embed.row(i), &hf))
-            .collect(),
+        Some(head) => head.matvec_into(&s.h, &mut s.logits),
+        None => {
+            for (i, l) in s.logits.iter_mut().enumerate() {
+                *l = crate::tensor::dot(model.embed.row(i), &s.h);
+            }
+        }
     }
+    &s.logits
+}
+
+/// Allocating convenience wrapper around [`decode_step_into`] (builds a
+/// fresh scratch per call; hot loops hold a [`DecodeScratch`] instead).
+pub fn decode_step(model: &DecodeModel, cache: &mut KvCache, token: u16) -> Vec<f32> {
+    let mut s = DecodeScratch::new(&model.cfg);
+    decode_step_into(model, cache, token, &mut s).to_vec()
 }
 
 /// Feed a prompt through the model (prefill), returning the final logits.
 pub fn prefill(model: &DecodeModel, cache: &mut KvCache, prompt: &[u16]) -> Vec<f32> {
-    let mut logits = Vec::new();
-    for &t in prompt {
-        logits = decode_step(model, cache, t);
+    if prompt.is_empty() {
+        return Vec::new();
     }
-    logits
+    let mut s = DecodeScratch::new(&model.cfg);
+    for &t in prompt {
+        decode_step_into(model, cache, t, &mut s);
+    }
+    s.logits
 }
 
 /// Build a dense decode model from FP params (reference engine).

@@ -5,10 +5,34 @@
 //! the rank-r intermediate register/cache resident exactly as the CUDA
 //! kernel keeps it in shared memory).
 
-use super::pack::packed_dot;
+use super::pack::{build_byte_lut, lut_dot, packed_gemv};
 use super::scheme::QuantLinear;
 use crate::nn::decode::MatVec;
 use crate::tensor::Tensor;
+use std::cell::RefCell;
+
+/// Below this output-row count the stage-2 byte LUT does not amortize its
+/// ~256·(r/8) build adds over the rows and the register-blocked GEMV wins.
+/// Analytic crossover ≈ 37 rows (build ~256·g adds vs ~7·8·g saved per row,
+/// g byte groups); 64 leaves margin for the LUT's worse cache behavior.
+/// Re-measure with `cargo bench --bench binary_kernels` (EXPERIMENTS.md
+/// §Perf) before tuning.
+const LUT_MIN_ROWS: usize = 64;
+
+/// Per-thread kernel scratch: scaled input, rank intermediate, and the
+/// stage-2 byte LUT. Reused across calls (and across the rows a worker
+/// handles in `forward_batch`), so a warmed-up decode loop performs zero
+/// heap allocations inside `matvec_into`.
+#[derive(Default)]
+struct KernelScratch {
+    xs: Vec<f32>,
+    t: Vec<f32>,
+    lut: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<KernelScratch> = RefCell::new(KernelScratch::default());
+}
 
 /// Packed low-rank binary linear layer, decode-ready.
 #[derive(Clone, Debug)]
@@ -21,36 +45,61 @@ impl PackedLinear {
         PackedLinear { q }
     }
 
-    /// y = diag(s1) U±1 (V±1ᵀ (diag(s2) x)) — two packed stages.
-    pub fn forward_vec(&self, x: &[f32]) -> Vec<f32> {
+    /// y = diag(s1) U±1 (V±1ᵀ (diag(s2) x)) — two packed stages, written
+    /// into `out` with all temporaries taken from the thread-local scratch.
+    ///
+    /// Stage 1 runs the register-blocked multi-row GEMV over the `r` rows of
+    /// Vᵀ. Stage 2 (`y = U t`) switches between the same blocked GEMV and
+    /// the T-MAC-style byte-LUT path: with the 256-entry tables built once
+    /// per call, each output row costs `⌈r/8⌉` lookups instead of `r`
+    /// multiply-adds, which pays off once `out_dim` clears the build cost
+    /// ([`LUT_MIN_ROWS`]).
+    pub fn forward_into(&self, x: &[f32], out: &mut [f32]) {
         let q = &self.q;
         assert_eq!(x.len(), q.in_dim());
-        // Stage 0: fuse the input scale.
-        let xs: Vec<f32> = x.iter().zip(q.s2.iter()).map(|(&a, &s)| a * s).collect();
-        let total_x: f32 = xs.iter().sum();
-        // Stage 1: t = V^T xs  (rank-length intermediate).
-        let r = q.rank();
-        let mut t = vec![0.0f32; r];
-        for c in 0..r {
-            t[c] = packed_dot(q.vt.row(c), &xs, total_x);
-        }
-        // Stage 2: y = s1 ⊙ (U t).
-        let total_t: f32 = t.iter().sum();
-        let n = q.out_dim();
-        let mut y = vec![0.0f32; n];
-        for i in 0..n {
-            y[i] = q.s1[i] * packed_dot(q.u.row(i), &t, total_t);
-        }
+        assert_eq!(out.len(), q.out_dim());
+        SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            // Stage 0: fuse the input scale.
+            s.xs.clear();
+            s.xs.extend(x.iter().zip(q.s2.iter()).map(|(&a, &sc)| a * sc));
+            let total_x: f32 = s.xs.iter().sum();
+            // Stage 1: t = V^T xs  (rank-length intermediate).
+            s.t.resize(q.rank(), 0.0);
+            packed_gemv(&q.vt, &s.xs, total_x, &mut s.t);
+            // Stage 2: y = s1 ⊙ (U t).
+            let total_t: f32 = s.t.iter().sum();
+            let n = q.out_dim();
+            if n >= LUT_MIN_ROWS {
+                build_byte_lut(&s.t, q.u.words_per_row, &mut s.lut);
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = q.s1[i] * lut_dot(q.u.row(i), &s.lut, total_t);
+                }
+            } else {
+                packed_gemv(&q.u, &s.t, total_t, out);
+                for (o, &sc) in out.iter_mut().zip(q.s1.iter()) {
+                    *o *= sc;
+                }
+            }
+        });
+    }
+
+    /// Allocating wrapper around [`PackedLinear::forward_into`].
+    pub fn forward_vec(&self, x: &[f32]) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.q.out_dim()];
+        self.forward_into(x, &mut y);
         y
     }
 
-    /// Batched GEMM-style forward: X [b, m] -> Y [b, n].
+    /// Batched GEMM-style forward: X [b, m] -> Y [b, n]. Rows fan out over
+    /// the worker pool; each worker's thread-local scratch (including the
+    /// stage-2 LUT allocation) is reused across all the rows it handles.
     pub fn forward_batch(&self, x: &Tensor) -> Tensor {
         let b = x.rows();
         let n = self.q.out_dim();
         let mut out = Tensor::zeros(&[b, n]);
         crate::util::threadpool::parallel_chunks_mut(&mut out.data, n, |i, row| {
-            row.copy_from_slice(&self.forward_vec(x.row(i)));
+            self.forward_into(x.row(i), row);
         });
         out
     }
@@ -63,8 +112,8 @@ impl MatVec for PackedLinear {
     fn in_dim(&self) -> usize {
         self.q.in_dim()
     }
-    fn matvec(&self, x: &[f32]) -> Vec<f32> {
-        self.forward_vec(x)
+    fn matvec_into(&self, x: &[f32], out: &mut [f32]) {
+        self.forward_into(x, out);
     }
     /// Effective compressed bytes: packed bits + FP16 scales
     /// (matches Appendix F accounting).
@@ -89,10 +138,16 @@ impl MatVec for NaiveUnpackLinear {
     fn in_dim(&self) -> usize {
         self.q.in_dim()
     }
-    fn matvec(&self, x: &[f32]) -> Vec<f32> {
+    fn matvec_into(&self, x: &[f32], out: &mut [f32]) {
         // Dequantize W = diag(s1) U V^T diag(s2) densely, then dense matvec.
+        // The per-call reconstruction allocation is the point of this
+        // comparator (it models a generic dequantize-then-GEMV library), so
+        // it deliberately stays outside the scratch-arena discipline.
         let w = self.q.reconstruct();
-        (0..w.rows()).map(|i| crate::tensor::dot(w.row(i), x)).collect()
+        assert_eq!(out.len(), w.rows());
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = crate::tensor::dot(w.row(i), x);
+        }
     }
     fn storage_bytes(&self) -> usize {
         self.q.effective_bits() / 8
@@ -119,8 +174,10 @@ mod tests {
 
     #[test]
     fn packed_matvec_matches_dense_reconstruction() {
+        // n spans both stage-2 paths (blocked GEMV below LUT_MIN_ROWS, byte
+        // LUT above); r down to rank 1.
         check("packed matvec == dense Ŵ x", 30, |g| {
-            let n = g.int(1, 70);
+            let n = g.int(1, 150);
             let m = g.int(1, 70);
             let r = g.int(1, 40);
             let q = random_q(n, m, r, g.seed);
@@ -163,6 +220,23 @@ mod tests {
             let yi = pl.forward_vec(x.row(i));
             for j in 0..16 {
                 assert_eq!(y.at2(i, j), yi[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_into_reuses_buffer_and_matches_matvec() {
+        // One engine on each side of the LUT crossover.
+        for (n, m, r, seed) in [(16usize, 24usize, 6usize, 11u64), (96, 40, 12, 12)] {
+            let q = random_q(n, m, r, seed);
+            let pl = PackedLinear::new(q);
+            let mut rng = Rng::new(seed ^ 0xFF);
+            let mut out = vec![f32::NAN; n];
+            for _ in 0..3 {
+                let x = rng.normal_vec(m, 1.0);
+                pl.matvec_into(&x, &mut out);
+                let want = pl.matvec(&x);
+                assert_eq!(out, want, "n={n} m={m} r={r}");
             }
         }
     }

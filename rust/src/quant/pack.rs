@@ -125,6 +125,124 @@ pub fn packed_dot(row: &[u32], x: &[f32], total: f32) -> f32 {
     2.0 * sel - total
 }
 
+/// Rows processed together by [`packed_gemv`] (register blocking: the 32
+/// lanes of `x` per word are loaded once and reused across the block).
+const ROW_BLOCK: usize = 4;
+
+/// Multi-row packed GEMV: `out[i] = dot(signs_row_i, x)` for every row of
+/// `bits`, via the same `2·sel − total` identity as [`packed_dot`].
+///
+/// Register-blocked over [`ROW_BLOCK`] rows: each 32-lane chunk of `x` is
+/// read once per block instead of once per row, which is what the
+/// single-row stage-2 loop paid before (§Perf in EXPERIMENTS.md). `total`
+/// must be `x.iter().sum()`.
+pub fn packed_gemv(bits: &PackedBits, x: &[f32], total: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), bits.cols, "packed_gemv: x length vs cols");
+    assert_eq!(out.len(), bits.rows, "packed_gemv: out length vs rows");
+    let wpr = bits.words_per_row;
+    let full_words = bits.cols / 32;
+    let blocks = bits.rows / ROW_BLOCK;
+    for blk in 0..blocks {
+        let i0 = blk * ROW_BLOCK;
+        let rows: [&[u32]; ROW_BLOCK] =
+            [bits.row(i0), bits.row(i0 + 1), bits.row(i0 + 2), bits.row(i0 + 3)];
+        let mut sel = [0.0f32; ROW_BLOCK];
+        for wi in 0..full_words {
+            let ws = [rows[0][wi], rows[1][wi], rows[2][wi], rows[3][wi]];
+            if (ws[0] | ws[1] | ws[2] | ws[3]) == 0 {
+                continue;
+            }
+            let chunk = &x[wi * 32..wi * 32 + 32];
+            for (l, &w) in ws.iter().enumerate() {
+                if w == 0 {
+                    continue;
+                }
+                // 4 accumulators per row break the dependency chain so the
+                // 8-lane groups autovectorize (same shape as packed_dot).
+                let mut acc = [0.0f32; 4];
+                for k in 0..4 {
+                    let mut a = acc[k];
+                    for j in 0..8 {
+                        let bit = (w >> (k * 8 + j)) & 1;
+                        a += (bit as f32) * chunk[k * 8 + j];
+                    }
+                    acc[k] = a;
+                }
+                sel[l] += acc.iter().sum::<f32>();
+            }
+        }
+        // Tail word (partial; absent when cols % 32 == 0).
+        if full_words < wpr {
+            let base = full_words * 32;
+            let tail = bits.cols - base;
+            for (l, row) in rows.iter().enumerate() {
+                let w = row[full_words];
+                let mut s = 0.0f32;
+                for j in 0..tail {
+                    s += (((w >> j) & 1) as f32) * x[base + j];
+                }
+                sel[l] += s;
+            }
+        }
+        for l in 0..ROW_BLOCK {
+            out[i0 + l] = 2.0 * sel[l] - total;
+        }
+    }
+    // Remainder rows.
+    for i in blocks * ROW_BLOCK..bits.rows {
+        out[i] = packed_dot(bits.row(i), x, total);
+    }
+}
+
+/// Build the T-MAC-style byte lookup tables for [`lut_dot`]: one 256-entry
+/// table per byte group of `t`, where `table[g][b] = Σ_{bit j set in b}
+/// t[8g + j]`. With the tables built, a packed sign dot against `t` costs
+/// one table lookup per *byte* instead of eight multiply-adds per bit.
+///
+/// Each table is filled in 255 adds with the subset-sum recurrence
+/// `table[b] = table[b & (b-1)] + t[8g + trailing_zeros(b)]`. Entries whose
+/// bit index falls beyond `t.len()` contribute zero, so rows whose padding
+/// bits are zero (the [`PackedBits`] invariant) index the tables safely.
+///
+/// `lut` is a caller-owned scratch buffer (cleared and resized here) so
+/// repeated calls — e.g. once per decode token, or once per batch row with
+/// the allocation shared across the batch — stay allocation-free after the
+/// first use.
+pub fn build_byte_lut(t: &[f32], words_per_row: usize, lut: &mut Vec<f32>) {
+    let groups = words_per_row * 4;
+    lut.clear();
+    lut.resize(groups * 256, 0.0);
+    for g in 0..groups {
+        let base = g * 8;
+        let table = &mut lut[g * 256..(g + 1) * 256];
+        for b in 1usize..256 {
+            let j = base + b.trailing_zeros() as usize;
+            let v = if j < t.len() { t[j] } else { 0.0 };
+            table[b] = table[b & (b - 1)] + v;
+        }
+    }
+}
+
+/// `dot(signs_row, t)` via byte-group table lookups (see [`build_byte_lut`];
+/// `total` must be `t.iter().sum()`). Cost per row: `words * 4` lookups.
+#[inline]
+pub fn lut_dot(row: &[u32], lut: &[f32], total: f32) -> f32 {
+    debug_assert!(lut.len() >= row.len() * 4 * 256);
+    let mut sel = 0.0f32;
+    for (wi, &w) in row.iter().enumerate() {
+        if w == 0 {
+            // All-zero word: every byte indexes table[0] == 0.
+            continue;
+        }
+        let g = wi * 4 * 256;
+        sel += lut[g + (w & 0xFF) as usize]
+            + lut[g + 256 + ((w >> 8) & 0xFF) as usize]
+            + lut[g + 512 + ((w >> 16) & 0xFF) as usize]
+            + lut[g + 768 + ((w >> 24) & 0xFF) as usize];
+    }
+    2.0 * sel - total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +307,93 @@ mod tests {
         let pb = PackedBits::from_signs(&bvals);
         assert_eq!(pa.hamming(&pb), 2);
         assert_eq!(pa.hamming(&pa), 0);
+    }
+
+    /// Dense reference for one row: Σ sign_ij · x_j.
+    fn dense_row_dot(signs: &Tensor, i: usize, x: &[f32]) -> f32 {
+        signs.row(i).iter().zip(x.iter()).map(|(&s, &v)| s * v).sum()
+    }
+
+    #[test]
+    fn gemv_and_lut_match_packed_dot_and_dense() {
+        check("packed_gemv == lut_dot == packed_dot == dense", 60, |g| {
+            // Bias toward the edge cases: exact word multiples and rank 1.
+            let rows = g.int(1, 70);
+            let cols = match g.int(0, 3) {
+                0 => 32 * g.int(1, 4),
+                1 => 1,
+                _ => g.int(1, 130),
+            };
+            let mut rng = Rng::new(g.seed);
+            let signs = Tensor::randn(&[rows, cols], 1.0, &mut rng).sign_pm1();
+            let p = PackedBits::from_signs(&signs);
+            let x: Vec<f32> = rng.normal_vec(cols, 1.0);
+            let total: f32 = x.iter().sum();
+
+            let mut got = vec![0.0f32; rows];
+            packed_gemv(&p, &x, total, &mut got);
+            let mut lut = Vec::new();
+            build_byte_lut(&x, p.words_per_row, &mut lut);
+            for i in 0..rows {
+                let want = dense_row_dot(&signs, i, &x);
+                let tol = 1e-3 * (1.0 + want.abs());
+                let a = packed_dot(p.row(i), &x, total);
+                let b = lut_dot(p.row(i), &lut, total);
+                assert!((a - want).abs() < tol, "packed_dot r{rows} c{cols} i{i}: {a} vs {want}");
+                assert!((b - want).abs() < tol, "lut_dot r{rows} c{cols} i{i}: {b} vs {want}");
+                assert!(
+                    (got[i] - want).abs() < tol,
+                    "packed_gemv r{rows} c{cols} i{i}: {} vs {want}",
+                    got[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn gemv_handles_empty_rows() {
+        let p = PackedBits { rows: 0, cols: 48, words_per_row: 2, words: Vec::new() };
+        let x = vec![1.0f32; 48];
+        let mut out: Vec<f32> = Vec::new();
+        packed_gemv(&p, &x, 48.0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn gemv_all_minus_one_rows_are_all_zero_words() {
+        // sign < 0 packs to bit 0, so an all −1 matrix is all-zero words and
+        // every dot must equal −Σx through the zero-word fast paths.
+        let signs = Tensor::full(&[6, 64], -1.0);
+        let p = PackedBits::from_signs(&signs);
+        assert!(p.words.iter().all(|&w| w == 0));
+        let x: Vec<f32> = (0..64).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let total: f32 = x.iter().sum();
+        let mut out = vec![0.0f32; 6];
+        packed_gemv(&p, &x, total, &mut out);
+        let mut lut = Vec::new();
+        build_byte_lut(&x, p.words_per_row, &mut lut);
+        for i in 0..6 {
+            assert!((out[i] + total).abs() < 1e-4, "gemv row {i}: {}", out[i]);
+            let l = lut_dot(p.row(i), &lut, total);
+            assert!((l + total).abs() < 1e-4, "lut row {i}: {l}");
+        }
+    }
+
+    #[test]
+    fn lut_ignores_padding_groups() {
+        // cols = 20: one word, bits 20..32 are padding (zero). The byte
+        // tables beyond t.len() must contribute exactly zero.
+        let mut rng = Rng::new(9);
+        let signs = Tensor::randn(&[5, 20], 1.0, &mut rng).sign_pm1();
+        let p = PackedBits::from_signs(&signs);
+        let t: Vec<f32> = rng.normal_vec(20, 1.0);
+        let total: f32 = t.iter().sum();
+        let mut lut = Vec::new();
+        build_byte_lut(&t, p.words_per_row, &mut lut);
+        for i in 0..5 {
+            let want = dense_row_dot(&signs, i, &t);
+            let got = lut_dot(p.row(i), &lut, total);
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "{got} vs {want}");
+        }
     }
 }

@@ -1,47 +1,198 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Artifact runtime: marshalling for the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, plus a PJRT execution stub.
 //!
-//! Flow: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`. Weights and
+//! The original flow is `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. Weights and
 //! caches are graph *parameters*, so one compiled executable serves any
 //! checkpoint of the matching config (Python never runs at request time).
+//!
+//! This build is **offline**: the `xla` PJRT bindings are not available, so
+//! [`Runtime::new`] fails cleanly and every harness that benches or checks
+//! artifacts skips its PJRT section (`exp::kernels::fig10_13`,
+//! `tests/runtime_parity.rs`, `nanoquant artifacts-check`). The literal
+//! marshalling below is real and fully tested — it defines the calling
+//! convention the artifacts were lowered with, and is what a PJRT-enabled
+//! build feeds to `execute`. See DESIGN.md §Runtime.
 
 use crate::nn::model::{LayerKind, ModelParams};
 use crate::quant::QuantModel;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
 
-/// Lazily-compiled artifact registry.
+/// Runtime error (offline substitute for `anyhow::Error`).
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// Literals
+// ---------------------------------------------------------------------------
+
+/// A typed host buffer with logical dimensions — the offline stand-in for
+/// `xla::Literal`. Row-major, matching the artifact calling convention.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+    U32(Vec<u32>, Vec<i64>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait LiteralElem: Copy {
+    fn wrap(v: Vec<Self>) -> Literal;
+    fn unwrap(l: &Literal) -> Result<Vec<Self>>;
+}
+
+impl LiteralElem for f32 {
+    fn wrap(v: Vec<f32>) -> Literal {
+        let n = v.len() as i64;
+        Literal::F32(v, vec![n])
+    }
+    fn unwrap(l: &Literal) -> Result<Vec<f32>> {
+        match l {
+            Literal::F32(v, _) => Ok(v.clone()),
+            other => Err(err(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl LiteralElem for i32 {
+    fn wrap(v: Vec<i32>) -> Literal {
+        let n = v.len() as i64;
+        Literal::I32(v, vec![n])
+    }
+    fn unwrap(l: &Literal) -> Result<Vec<i32>> {
+        match l {
+            Literal::I32(v, _) => Ok(v.clone()),
+            other => Err(err(format!("literal is not i32: {other:?}"))),
+        }
+    }
+}
+
+impl LiteralElem for u32 {
+    fn wrap(v: Vec<u32>) -> Literal {
+        let n = v.len() as i64;
+        Literal::U32(v, vec![n])
+    }
+    fn unwrap(l: &Literal) -> Result<Vec<u32>> {
+        match l {
+            Literal::U32(v, _) => Ok(v.clone()),
+            other => Err(err(format!("literal is not u32: {other:?}"))),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: LiteralElem>(v: &[T]) -> Literal {
+        T::wrap(v.to_vec())
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            Literal::F32(v, _) => v.len(),
+            Literal::I32(v, _) => v.len(),
+            Literal::U32(v, _) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logical dimensions.
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            Literal::F32(_, d) => d,
+            Literal::I32(_, d) => d,
+            Literal::U32(_, d) => d,
+        }
+    }
+
+    /// Reinterpret with new dimensions (same element count).
+    pub fn reshape(self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(err(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims(),
+                dims
+            )));
+        }
+        let dims = dims.to_vec();
+        Ok(match self {
+            Literal::F32(v, _) => Literal::F32(v, dims),
+            Literal::I32(v, _) => Literal::I32(v, dims),
+            Literal::U32(v, _) => Literal::U32(v, dims),
+        })
+    }
+
+    /// Flattened host copy of the elements.
+    pub fn to_vec<T: LiteralElem>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+}
+
+impl From<i32> for Literal {
+    fn from(v: i32) -> Literal {
+        Literal::I32(vec![v], vec![])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime (PJRT stub)
+// ---------------------------------------------------------------------------
+
+/// Artifact registry. In a PJRT-enabled build this owns the client and the
+/// lazily-compiled executables; offline, the manifest still loads (it is
+/// plain JSON) but `load`/`execute` fail cleanly, so every execution caller
+/// takes its documented skip path.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: std::path::PathBuf,
     pub manifest: Json,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
     /// Open an artifact directory (expects `manifest.json` inside).
     pub fn new(artifacts_dir: &str) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
         let manifest_path = std::path::Path::new(artifacts_dir).join("manifest.json");
-        let manifest = if manifest_path.exists() {
-            Json::parse(&std::fs::read_to_string(&manifest_path)?)
-                .map_err(|e| anyhow!("manifest: {e}"))?
-        } else {
-            Json::obj()
-        };
-        Ok(Runtime {
-            client,
-            dir: artifacts_dir.into(),
-            manifest,
-            executables: HashMap::new(),
-        })
+        if !manifest_path.exists() {
+            return Err(err(format!(
+                "no manifest.json in '{artifacts_dir}' (run `make artifacts`)"
+            )));
+        }
+        let manifest = Json::parse(&std::fs::read_to_string(&manifest_path)?)
+            .map_err(|e| err(format!("manifest: {e}")))?;
+        Ok(Runtime { manifest })
+    }
+
+    /// Whether this build can compile/execute artifacts. `false` offline:
+    /// gate `execute` call sites on this (or on `load`'s error) and skip.
+    pub fn can_execute(&self) -> bool {
+        false
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "offline-stub".to_string()
     }
 
     /// Artifact names available in the manifest.
@@ -54,35 +205,13 @@ impl Runtime {
 
     /// Compile (and cache) an artifact by name.
     pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
-            return Ok(());
-        }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto =
-            xla::HloModuleProto::from_text_file(path.to_str().context("bad path")?)
-                .map_err(|e| anyhow!("parse {name}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.executables.insert(name.to_string(), exe);
-        Ok(())
+        Err(err(format!("artifact '{name}': pjrt backend unavailable")))
     }
 
-    /// Execute a loaded artifact. The artifacts are lowered with
-    /// `return_tuple=True`, so the single output literal is a tuple that we
-    /// decompose into its elements.
-    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        self.load(name)?;
-        let exe = &self.executables[name];
-        let result = exe
-            .execute::<xla::Literal>(args)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let mut lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
-        lit.decompose_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    /// Execute a loaded artifact.
+    pub fn execute(&mut self, name: &str, args: &[Literal]) -> Result<Vec<Literal>> {
+        let _ = args;
+        Err(err(format!("artifact '{name}': pjrt backend unavailable")))
     }
 }
 
@@ -91,42 +220,36 @@ impl Runtime {
 // ---------------------------------------------------------------------------
 
 /// Dense f32 tensor -> literal.
-pub fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+pub fn tensor_literal(t: &Tensor) -> Result<Literal> {
     let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(&t.data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("reshape: {e:?}"))
+    Literal::vec1(&t.data).reshape(&dims)
 }
 
 /// f32 vector -> literal.
-pub fn vec_literal(v: &[f32]) -> xla::Literal {
-    xla::Literal::vec1(v)
+pub fn vec_literal(v: &[f32]) -> Literal {
+    Literal::vec1(v)
 }
 
 /// Packed u32 words -> literal [rows, words_per_row].
-pub fn packed_literal(p: &crate::quant::PackedBits) -> Result<xla::Literal> {
-    xla::Literal::vec1(&p.words)
-        .reshape(&[p.rows as i64, p.words_per_row as i64])
-        .map_err(|e| anyhow!("reshape packed: {e:?}"))
+pub fn packed_literal(p: &crate::quant::PackedBits) -> Result<Literal> {
+    Literal::vec1(&p.words).reshape(&[p.rows as i64, p.words_per_row as i64])
 }
 
 /// Tokens -> i32 literal of shape [batch, seq].
-pub fn tokens_literal(tokens: &[u16], batch: usize, seq: usize) -> Result<xla::Literal> {
+pub fn tokens_literal(tokens: &[u16], batch: usize, seq: usize) -> Result<Literal> {
     assert_eq!(tokens.len(), batch * seq);
     let v: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-    xla::Literal::vec1(&v)
-        .reshape(&[batch as i64, seq as i64])
-        .map_err(|e| anyhow!("reshape tokens: {e:?}"))
+    Literal::vec1(&v).reshape(&[batch as i64, seq as i64])
 }
 
 /// Scalar i32 literal.
-pub fn scalar_i32(v: i32) -> xla::Literal {
-    xla::Literal::from(v)
+pub fn scalar_i32(v: i32) -> Literal {
+    Literal::from(v)
 }
 
 /// Literal -> f32 vec (flattened).
-pub fn literal_f32(l: &xla::Literal) -> Result<Vec<f32>> {
-    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+pub fn literal_f32(l: &Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>()
 }
 
 // ---------------------------------------------------------------------------
@@ -134,7 +257,7 @@ pub fn literal_f32(l: &xla::Literal) -> Result<Vec<f32>> {
 // ---------------------------------------------------------------------------
 
 /// Flatten dense FP params in the artifact calling convention.
-pub fn flatten_dense_params(params: &ModelParams) -> Result<Vec<xla::Literal>> {
+pub fn flatten_dense_params(params: &ModelParams) -> Result<Vec<Literal>> {
     let mut out = Vec::new();
     out.push(tensor_literal(&params.embed)?);
     for b in &params.blocks {
@@ -154,7 +277,7 @@ pub fn flatten_dense_params(params: &ModelParams) -> Result<Vec<xla::Literal>> {
 /// Flatten a quantized model: packed (u, vt, s1, s2) per decoder linear.
 /// Every decoder linear must be quantized at the rank layout the artifact
 /// was lowered with.
-pub fn flatten_quant_params(qm: &QuantModel) -> Result<Vec<xla::Literal>> {
+pub fn flatten_quant_params(qm: &QuantModel) -> Result<Vec<Literal>> {
     let params = &qm.params;
     let mut out = Vec::new();
     out.push(tensor_literal(&params.embed)?);
@@ -165,7 +288,7 @@ pub fn flatten_quant_params(qm: &QuantModel) -> Result<Vec<xla::Literal>> {
             let q = qm
                 .layers
                 .get(&id)
-                .with_context(|| format!("layer {id} not quantized"))?
+                .ok_or_else(|| err(format!("layer {id} not quantized")))?
                 .packed();
             out.push(packed_literal(&q.u)?);
             out.push(packed_literal(&q.vt)?);
@@ -182,12 +305,10 @@ pub fn flatten_quant_params(qm: &QuantModel) -> Result<Vec<xla::Literal>> {
 }
 
 /// Zeroed KV-cache literal [n_layers, max_seq, kv_dim].
-pub fn kv_cache_literal(cfg: &crate::nn::model::ModelConfig) -> Result<xla::Literal> {
+pub fn kv_cache_literal(cfg: &crate::nn::model::ModelConfig) -> Result<Literal> {
     let kv = cfg.n_kv_heads * cfg.head_dim();
     let zeros = vec![0.0f32; cfg.n_layers * cfg.max_seq * kv];
-    xla::Literal::vec1(&zeros)
-        .reshape(&[cfg.n_layers as i64, cfg.max_seq as i64, kv as i64])
-        .map_err(|e| anyhow!("reshape kv: {e:?}"))
+    Literal::vec1(&zeros).reshape(&[cfg.n_layers as i64, cfg.max_seq as i64, kv as i64])
 }
 
 #[cfg(test)]
@@ -196,13 +317,14 @@ mod tests {
     use crate::util::rng::Rng;
 
     // Full artifact round-trips live in rust/tests/runtime_parity.rs (they
-    // need `make artifacts`). Here: marshalling-only units.
+    // need `make artifacts` and a PJRT build). Here: marshalling-only units.
 
     #[test]
     fn tensor_literal_roundtrip() {
         let mut rng = Rng::new(0);
         let t = Tensor::randn(&[3, 5], 1.0, &mut rng);
         let lit = tensor_literal(&t).unwrap();
+        assert_eq!(lit.dims(), &[3, 5]);
         let back = literal_f32(&lit).unwrap();
         assert_eq!(back, t.data);
     }
@@ -222,5 +344,46 @@ mod tests {
         let lit = tokens_literal(&[1, 2, 256], 1, 3).unwrap();
         let back = lit.to_vec::<i32>().unwrap();
         assert_eq!(back, vec![1, 2, 256]);
+    }
+
+    #[test]
+    fn reshape_rejects_bad_counts() {
+        let six = [1.0f32; 6];
+        assert!(Literal::vec1(six.as_slice()).reshape(&[2, 3]).is_ok());
+        assert!(Literal::vec1(six.as_slice()).reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn typed_extraction_is_checked() {
+        let two = [1.0f32, 2.0];
+        let lit = Literal::vec1(two.as_slice());
+        assert!(lit.to_vec::<f32>().is_ok());
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn runtime_without_artifacts_fails_cleanly() {
+        // Per-process path: a stray shared /tmp entry must not flip this.
+        let dir = std::env::temp_dir()
+            .join(format!("nanoquant-no-artifacts-{}", std::process::id()));
+        let e = Runtime::new(dir.to_str().unwrap()).err().unwrap();
+        assert!(e.to_string().contains("manifest"), "{e}");
+    }
+
+    #[test]
+    fn runtime_loads_manifest_but_cannot_execute_offline() {
+        let dir = std::env::temp_dir()
+            .join(format!("nanoquant-runtime-test-artifacts-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"gemv_a": {"args": 5}, "fwd_b": {"args": 3}}"#,
+        )
+        .unwrap();
+        let mut rt = Runtime::new(dir.to_str().unwrap()).unwrap();
+        assert_eq!(rt.available(), vec!["fwd_b".to_string(), "gemv_a".to_string()]);
+        assert!(!rt.can_execute());
+        let e = rt.load("gemv_a").err().unwrap();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

@@ -7,7 +7,7 @@
 pub mod device;
 
 use crate::data::detokenize;
-use crate::nn::decode::{decode_step, DecodeModel, KvCache};
+use crate::nn::decode::{decode_step_into, DecodeModel, DecodeScratch, KvCache};
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks_mut;
 use std::collections::VecDeque;
@@ -72,10 +72,14 @@ pub struct ServeMetrics {
 struct Slot {
     req: Request,
     cache: KvCache,
+    /// Per-slot decode arena, reused across tokens *and* across the
+    /// requests recycled through this slot — the steady-state tick performs
+    /// no allocation inside the model step. Also holds the step's logits,
+    /// which sampling reads in place (no vocab-sized copy per token).
+    scratch: DecodeScratch,
     generated: Vec<u16>,
     prefill_done: bool,
     prefill_cursor: usize,
-    last_logits: Vec<f32>,
     started: Instant,
     ttft_s: Option<f64>,
 }
@@ -99,26 +103,57 @@ impl Server {
     /// immediately. Slots step in parallel across OS threads.
     pub fn run(&mut self, requests: Vec<Request>) -> Vec<Response> {
         let t0 = Instant::now();
-        let mut queue: VecDeque<Request> = requests.into();
-        let mut active: Vec<Option<Slot>> = (0..self.cfg.max_batch).map(|_| None).collect();
         let mut done: Vec<Response> = Vec::new();
+        // Normalize degenerate requests once, before scheduling:
+        // - A prompt that would overflow the KV cache panics mid-prefill;
+        //   truncate to leave one position for generation (the post-sample
+        //   capacity check then finishes the request gracefully). At
+        //   max_seq <= 1 nothing can prefill, so the prompt empties.
+        // - Empty prompt (nothing to decode from) or max_new == 0 (nothing
+        //   asked for): complete immediately with no tokens instead of
+        //   panicking / overshooting in the tick.
+        let cap = self.model.cfg.max_seq.saturating_sub(1);
+        let mut queue: VecDeque<Request> = VecDeque::with_capacity(requests.len());
+        for mut req in requests {
+            if req.prompt.len() > cap {
+                req.prompt.truncate(cap);
+            }
+            if req.prompt.is_empty() || req.max_new == 0 {
+                done.push(Response {
+                    id: req.id,
+                    tokens: Vec::new(),
+                    text: String::new(),
+                    ttft_s: 0.0,
+                    decode_s: 0.0,
+                });
+            } else {
+                queue.push_back(req);
+            }
+        }
+        let mut active: Vec<Option<Slot>> = (0..self.cfg.max_batch).map(|_| None).collect();
         let mut rng = Rng::new(self.cfg.seed);
         let mut total_tokens = 0usize;
         let mut peak_active = 0usize;
         let mut peak_kv = 0usize;
+        // KV caches and decode arenas recovered from finished requests;
+        // recycling them keeps steady-state admission allocation-free.
+        let mut spares: Vec<(KvCache, DecodeScratch)> = Vec::new();
 
         loop {
             // ---- Admission: fill free slots FIFO ----
             for slot in active.iter_mut() {
                 if slot.is_none() {
                     if let Some(req) = queue.pop_front() {
-                        let cache = KvCache::new(&self.model.cfg);
+                        let (mut cache, scratch) = spares.pop().unwrap_or_else(|| {
+                            (KvCache::new(&self.model.cfg), DecodeScratch::new(&self.model.cfg))
+                        });
+                        cache.reset();
                         *slot = Some(Slot {
                             cache,
+                            scratch,
                             generated: Vec::with_capacity(req.max_new),
                             prefill_done: false,
                             prefill_cursor: 0,
-                            last_logits: Vec::new(),
                             started: Instant::now(),
                             ttft_s: None,
                             req,
@@ -152,16 +187,13 @@ impl Server {
                     } else {
                         *slot.generated.last().unwrap()
                     };
-                    let logits = decode_step(model, &mut slot.cache, next_token);
+                    decode_step_into(model, &mut slot.cache, next_token, &mut slot.scratch);
                     if !slot.prefill_done {
                         slot.prefill_cursor += 1;
                         if slot.prefill_cursor == slot.req.prompt.len() {
                             slot.prefill_done = true;
                             slot.ttft_s = Some(slot.started.elapsed().as_secs_f64());
-                            slot.last_logits = logits;
                         }
-                    } else {
-                        slot.last_logits = logits;
                     }
                 }
             });
@@ -174,7 +206,7 @@ impl Server {
                         false
                     } else {
                         let tok = sample(
-                            &slot.last_logits,
+                            slot.scratch.logits(),
                             slot.req.temperature,
                             slot.req.top_k,
                             &mut rng,
@@ -187,6 +219,7 @@ impl Server {
                 };
                 if finished {
                     let slot = slot_opt.take().unwrap();
+                    spares.push((slot.cache, slot.scratch));
                     done.push(Response {
                         id: slot.req.id,
                         text: detokenize(&slot.generated),
@@ -347,6 +380,47 @@ mod tests {
             }
         }
         assert!(saw_other);
+    }
+
+    #[test]
+    fn empty_prompts_complete_without_tokens_or_starving_real_requests() {
+        // Two leading empties on a 2-slot server must not consume the
+        // admission pops and strand the real request in the queue.
+        let mut srv = tiny_server(2);
+        let reqs = vec![
+            Request::greedy(0, Vec::new(), 4),
+            Request::greedy(1, Vec::new(), 4),
+            Request::greedy(2, vec![5, 6], 3),
+        ];
+        let resps = srv.run(reqs);
+        assert_eq!(resps.len(), 3);
+        assert!(resps[0].tokens.is_empty());
+        assert!(resps[1].tokens.is_empty());
+        assert_eq!(resps[2].id, 2);
+        assert_eq!(resps[2].tokens.len(), 3);
+        // max_new == 0 likewise yields exactly zero tokens.
+        let mut srv = tiny_server(1);
+        let resps = srv.run(vec![Request::greedy(0, vec![5, 6], 0)]);
+        assert_eq!(resps.len(), 1);
+        assert!(resps[0].tokens.is_empty());
+        // All-empty workloads terminate too.
+        let mut srv = tiny_server(2);
+        let resps = srv.run((0..3).map(|i| Request::greedy(i, Vec::new(), 4)).collect());
+        assert_eq!(resps.len(), 3);
+        assert!(resps.iter().all(|r| r.tokens.is_empty()));
+    }
+
+    #[test]
+    fn overlong_prompt_is_truncated_not_panicking() {
+        // Prompt longer than max_seq: truncated at admission to leave one
+        // position for generation; the capacity check then finishes the
+        // request after a single token instead of overflowing the KV cache.
+        let mut srv = tiny_server(1);
+        let max_seq = srv.model.cfg.max_seq;
+        let prompt: Vec<u16> = (0..max_seq + 40).map(|i| (i % 250) as u16).collect();
+        let resps = srv.run(vec![Request::greedy(0, prompt, 5)]);
+        assert_eq!(resps.len(), 1);
+        assert_eq!(resps[0].tokens.len(), 1);
     }
 
     #[test]

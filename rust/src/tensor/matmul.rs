@@ -2,9 +2,11 @@
 //!
 //! The pipeline's compute cost is dominated by dense GEMMs (ADMM factor
 //! updates, block forward/backward during reconstruction, teacher training),
-//! so this file is a hot path. Strategy: row-parallel over the output, with
-//! a k-blocked inner kernel that keeps panels of B in cache and vectorizes
-//! (autovectorized 8-wide FMA over contiguous rows).
+//! so this file is a hot path. Strategy: row-parallel over the output (on
+//! the persistent worker pool of `util::threadpool` — dispatch is a queue
+//! push, not a thread spawn), with a k-blocked inner kernel that keeps
+//! panels of B in cache and vectorizes (autovectorized 8-wide FMA over
+//! contiguous rows). K-block tuning notes: EXPERIMENTS.md §Perf.
 
 use super::Tensor;
 use crate::util::threadpool::parallel_chunks_mut;

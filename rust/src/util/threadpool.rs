@@ -1,13 +1,29 @@
-//! Scoped data-parallel helpers (offline substitute for `rayon`).
+//! Data-parallel helpers on a persistent worker pool (offline substitute
+//! for `rayon`).
 //!
-//! The library's hot loops (blocked matmul, per-layer ADMM, batched decode)
-//! are embarrassingly parallel over row/layer/request chunks. `parallel_for`
-//! splits an index range into contiguous chunks and runs them on scoped OS
-//! threads; with one chunk (or one CPU) it degrades to the serial loop.
+//! The library's hot loops (blocked matmul, per-layer ADMM, batched decode,
+//! the server's slot-step fan-out) are embarrassingly parallel over
+//! row/layer/request chunks. Earlier revisions spawned fresh scoped OS
+//! threads on every `parallel_*` call, which put thread-creation latency
+//! (tens of microseconds) on the per-token serving path. Now a pool of
+//! `num_threads() - 1` workers is created lazily on first use and parked on
+//! a condvar between calls; each `parallel_*` call enqueues one execution
+//! ticket per helper and participates in the work itself.
+//!
+//! Deadlock freedom under nesting: the issuing thread always runs the job
+//! to completion itself (work is claimed from a shared atomic counter), then
+//! removes its still-unpicked tickets from the queue and waits only for
+//! tickets a worker actually picked. A picked ticket is run without waiting
+//! on any other region, so waits always terminate even when every worker is
+//! busy with an enclosing region.
 
+use std::any::Any;
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use, overridable via `NANOQUANT_THREADS`.
+/// See EXPERIMENTS.md §Perf for tuning notes.
 pub fn num_threads() -> usize {
     static CACHED: AtomicUsize = AtomicUsize::new(0);
     let c = CACHED.load(Ordering::Relaxed);
@@ -27,6 +43,155 @@ pub fn num_threads() -> usize {
     n
 }
 
+/// One parallel region. `job` points at the caller's stack closure; it stays
+/// valid because the issuing `run_region` call does not return until every
+/// picked ticket has finished and every unpicked ticket has been drained.
+struct Region {
+    job: *const (dyn Fn() + Sync),
+    /// Tickets currently executing on a worker. Incremented under the pool's
+    /// queue lock at pick time so the issuer can never observe "queue empty"
+    /// while a picked ticket has not yet registered itself.
+    running: Mutex<usize>,
+    done: Condvar,
+    /// First panic payload raised by a worker ticket; re-raised on the
+    /// issuing thread so parallel bodies panic like serial ones.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+}
+
+// SAFETY: `job` is only dereferenced while the issuing call keeps the
+// closure alive (see `run_region`), and the closure itself is `Sync` so
+// shared calls from several threads are sound.
+unsafe impl Send for Region {}
+unsafe impl Sync for Region {}
+
+struct Pool {
+    queue: Mutex<VecDeque<Arc<Region>>>,
+    available: Condvar,
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let region = {
+            let mut q = pool.queue.lock().unwrap();
+            loop {
+                if let Some(r) = q.pop_front() {
+                    // Register as running before releasing the queue lock —
+                    // see the comment on `Region::running`.
+                    *r.running.lock().unwrap() += 1;
+                    break r;
+                }
+                q = pool.available.wait(q).unwrap();
+            }
+        };
+        // SAFETY: the issuer waits for this ticket before returning, so the
+        // closure behind `job` is alive for the duration of the call.
+        let job: &(dyn Fn() + Sync) = unsafe { &*region.job };
+        // A panicking body must not strand the issuer: capture the payload
+        // (the issuer re-raises it) and always deregister the ticket.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job()));
+        if let Err(payload) = result {
+            let mut slot = region.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let mut running = region.running.lock().unwrap();
+        *running -= 1;
+        if *running == 0 {
+            region.done.notify_all();
+        }
+    }
+}
+
+/// The lazily-started shared pool; `None` when only one hardware thread is
+/// available (every `parallel_*` then degrades to a serial loop).
+fn pool() -> Option<&'static Pool> {
+    static POOL: OnceLock<Option<&'static Pool>> = OnceLock::new();
+    *POOL.get_or_init(|| {
+        let helpers = num_threads().saturating_sub(1);
+        if helpers == 0 {
+            return None;
+        }
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        }));
+        for i in 0..helpers {
+            // Workers are detached daemons; they park between regions and
+            // die with the process.
+            let _ = std::thread::Builder::new()
+                .name(format!("nanoquant-worker-{i}"))
+                .spawn(move || worker_loop(pool));
+        }
+        Some(pool)
+    })
+}
+
+/// Run `job` on the issuing thread plus up to `helpers` pool workers. `job`
+/// must be idempotent-by-construction: it claims work items from a shared
+/// counter, so extra invocations simply find nothing left to do.
+/// Drains a region's unpicked tickets and waits out the picked ones. Runs
+/// on drop so the stack closure behind `Region::job` outlives every worker
+/// that might call it even when the issuer's own share of the work panics.
+struct RegionGuard<'a> {
+    pool: &'static Pool,
+    region: &'a Arc<Region>,
+}
+
+impl Drop for RegionGuard<'_> {
+    fn drop(&mut self) {
+        {
+            let mut q = self.pool.queue.lock().unwrap();
+            q.retain(|r| !Arc::ptr_eq(r, self.region));
+        }
+        let mut running = self.region.running.lock().unwrap();
+        while *running > 0 {
+            running = self.region.done.wait(running).unwrap();
+        }
+    }
+}
+
+fn run_region(job: &(dyn Fn() + Sync), helpers: usize) {
+    let pool = match pool() {
+        Some(p) if helpers > 0 => p,
+        _ => {
+            job();
+            return;
+        }
+    };
+    // Erase the stack lifetime: `Region::job`'s `*const dyn` field defaults
+    // to `+ 'static`, which a plain coercion from the `'a` trait object
+    // cannot reach — transmute the fat pointer (identical layout, lifetime
+    // change only). Soundness argument on `Region::job`.
+    let erased: *const (dyn Fn() + Sync) = unsafe {
+        std::mem::transmute::<&(dyn Fn() + Sync), *const (dyn Fn() + Sync)>(job)
+    };
+    let region = Arc::new(Region {
+        job: erased,
+        running: Mutex::new(0),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    {
+        let mut q = pool.queue.lock().unwrap();
+        for _ in 0..helpers {
+            q.push_back(region.clone());
+        }
+    }
+    pool.available.notify_all();
+
+    {
+        let _guard = RegionGuard { pool, region: &region };
+        // Participate: the issuer alone completes the region if no worker is
+        // free. The guard drains + waits even if this panics.
+        job();
+    }
+    // Surface a worker-side panic on the issuing thread.
+    if let Some(payload) = region.panic.lock().unwrap().take() {
+        std::panic::resume_unwind(payload);
+    }
+}
+
 /// Run `body(i)` for each `i` in `0..n`, in parallel over contiguous chunks.
 ///
 /// `body` must be `Sync` (it is shared across threads) and is responsible for
@@ -44,55 +209,55 @@ pub fn parallel_for<F: Fn(usize) + Sync>(n: usize, body: F) {
     let counter = AtomicUsize::new(0);
     // Grain: keep scheduling overhead low while balancing load.
     let grain = (n / (workers * 4)).max(1);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let start = counter.fetch_add(grain, Ordering::Relaxed);
-                if start >= n {
-                    break;
-                }
-                let end = (start + grain).min(n);
-                for i in start..end {
-                    body(i);
-                }
-            });
+    let work = || loop {
+        let start = counter.fetch_add(grain, Ordering::Relaxed);
+        if start >= n {
+            break;
         }
-    });
+        let end = (start + grain).min(n);
+        for i in start..end {
+            body(i);
+        }
+    };
+    run_region(&work, workers - 1);
 }
 
 /// Split `data` into `chunk` sized mutable chunks and process them in
 /// parallel. `body(chunk_index, chunk)` — chunk indices are in order, the
 /// last chunk may be short.
+///
+/// Chunks are handed out by index arithmetic over the base pointer (no
+/// per-chunk lock): chunk `i` covers `[i * chunk, min((i + 1) * chunk, len))`
+/// and the ranges are pairwise disjoint by construction.
 pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     data: &mut [T],
     chunk: usize,
     body: F,
 ) {
     assert!(chunk > 0);
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
-    let n = chunks.len();
-    let workers = num_threads().min(n.max(1));
-    if workers <= 1 || n <= 1 {
-        for (i, c) in chunks {
+    let len = data.len();
+    let n = len.div_ceil(chunk);
+    if n <= 1 || num_threads() <= 1 {
+        for (i, c) in data.chunks_mut(chunk).enumerate() {
             body(i, c);
         }
         return;
     }
-    let items: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
-        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
-    let counter = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let idx = counter.fetch_add(1, Ordering::Relaxed);
-                if idx >= n {
-                    break;
-                }
-                if let Some((i, c)) = items[idx].lock().unwrap().take() {
-                    body(i, c);
-                }
-            });
-        }
+    // Wrapper keeps the pointer's provenance (no int round-trip) while
+    // letting the closure cross threads.
+    struct SendPtr<T>(*mut T);
+    unsafe impl<T> Send for SendPtr<T> {}
+    unsafe impl<T> Sync for SendPtr<T> {}
+    let base = SendPtr(data.as_mut_ptr());
+    parallel_for(n, |i| {
+        let start = i * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: `parallel_for` visits each index exactly once, the ranges
+        // above are disjoint across indices, and `data` is exclusively
+        // borrowed for the whole call (T: Send lets the pieces cross
+        // threads).
+        let piece = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        body(i, piece);
     });
 }
 
@@ -143,10 +308,74 @@ mod tests {
     }
 
     #[test]
+    fn chunks_mut_edge_sizes() {
+        // Empty input: no chunks, no calls.
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_chunks_mut(&mut empty, 4, |_, _| panic!("should not run"));
+        // Chunk larger than the data: one call with the whole slice.
+        let mut v = vec![0usize; 3];
+        parallel_chunks_mut(&mut v, 100, |ci, chunk| {
+            assert_eq!(ci, 0);
+            for x in chunk.iter_mut() {
+                *x = 7;
+            }
+        });
+        assert_eq!(v, vec![7, 7, 7]);
+    }
+
+    #[test]
     fn parallel_map_preserves_order() {
         let out = parallel_map(257, |i| i * i);
         for (i, x) in out.iter().enumerate() {
             assert_eq!(*x, i * i);
         }
+    }
+
+    #[test]
+    fn nested_parallelism_completes() {
+        // A region issued from inside a pool worker (or from the issuer's own
+        // share of an outer region) must not deadlock: callers always
+        // participate, so progress never depends on a free worker.
+        let total = AtomicUsize::new(0);
+        parallel_for(8, |_| {
+            let inner = AtomicUsize::new(0);
+            parallel_for(50, |_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+            total.fetch_add(inner.load(Ordering::Relaxed), Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 8 * 50);
+    }
+
+    #[test]
+    fn panics_in_parallel_bodies_propagate() {
+        let r = std::panic::catch_unwind(|| {
+            parallel_for(64, |i| {
+                if i == 33 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(r.is_err());
+        // The pool must stay usable afterwards.
+        let c = AtomicUsize::new(0);
+        parallel_for(10, |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_small_regions() {
+        // Regression guard for the persistent pool: thousands of dispatches
+        // complete quickly and correctly (with per-call spawning this test
+        // is dominated by thread creation).
+        let sum = AtomicUsize::new(0);
+        for _ in 0..2000 {
+            parallel_for(4, |i| {
+                sum.fetch_add(i, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 2000 * 6);
     }
 }

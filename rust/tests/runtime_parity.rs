@@ -9,7 +9,7 @@ use nanoquant::nn::LayerId;
 use nanoquant::quant::{rank_for_bpw, Engine, LatentFactors, PackedLinear, QuantModel};
 use nanoquant::runtime::{
     flatten_dense_params, flatten_quant_params, kv_cache_literal, literal_f32, packed_literal,
-    scalar_i32, tokens_literal, vec_literal, Runtime,
+    scalar_i32, tokens_literal, vec_literal, Literal, Runtime,
 };
 use nanoquant::tensor::Tensor;
 use nanoquant::util::rng::Rng;
@@ -21,7 +21,17 @@ fn runtime_or_skip() -> Option<Runtime> {
         eprintln!("[skip] artifacts not built; run `make artifacts`");
         return None;
     }
-    Some(Runtime::new(ARTIFACTS).expect("pjrt runtime"))
+    match Runtime::new(ARTIFACTS) {
+        Ok(rt) if rt.can_execute() => Some(rt),
+        Ok(_) => {
+            eprintln!("[skip] artifacts present but this build has no pjrt backend");
+            None
+        }
+        Err(e) => {
+            eprintln!("[skip] artifacts present but runtime unavailable: {e}");
+            None
+        }
+    }
 }
 
 fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
@@ -118,7 +128,7 @@ fn dense_decode_parity_with_kv_cache() {
     for (pos, &tok) in tokens.iter().enumerate() {
         let native_logits = decode_step(&dm, &mut cache, tok);
 
-        let mut args: Vec<xla::Literal> = flat.iter().map(clone_lit).collect();
+        let mut args: Vec<Literal> = flat.iter().map(clone_lit).collect();
         args.push(scalar_i32(tok as i32));
         args.push(scalar_i32(pos as i32));
         args.push(clone_lit(&k_cache));
@@ -180,7 +190,7 @@ fn quant_decode_engines_agree() {
     // Both quantized decode artifacts must agree with it.
     let flat = flatten_quant_params(&qm).unwrap();
     for name in ["l2_s_decode_quant", "l2_s_decode_naive"] {
-        let mut args: Vec<xla::Literal> = flat.iter().map(clone_lit).collect();
+        let mut args: Vec<Literal> = flat.iter().map(clone_lit).collect();
         args.push(scalar_i32(tok as i32));
         args.push(scalar_i32(0));
         args.push(kv_cache_literal(cfg).unwrap());
@@ -193,7 +203,12 @@ fn quant_decode_engines_agree() {
 
 #[test]
 fn manifest_lists_expected_artifacts() {
-    let Some(rt) = runtime_or_skip() else { return };
+    // Needs only the manifest (plain JSON), not a pjrt backend.
+    if !std::path::Path::new(ARTIFACTS).join("manifest.json").exists() {
+        eprintln!("[skip] artifacts not built; run `make artifacts`");
+        return;
+    }
+    let rt = Runtime::new(ARTIFACTS).expect("manifest load");
     let names = rt.available();
     for expect in [
         "l2_s_fwd_dense",
@@ -207,28 +222,8 @@ fn manifest_lists_expected_artifacts() {
     }
 }
 
-/// Literal is not Clone in the xla crate; copy dense arrays by value.
-fn clone_lit(l: &xla::Literal) -> xla::Literal {
-    let shape = l.shape().expect("shape");
-    let array = match &shape {
-        xla::Shape::Array(a) => a,
-        _ => panic!("clone_lit: not an array literal"),
-    };
-    let dims: Vec<i64> = array.dims().to_vec();
-    match array.element_type() {
-        xla::ElementType::F32 => {
-            xla::Literal::vec1(&l.to_vec::<f32>().unwrap()).reshape(&dims).unwrap()
-        }
-        xla::ElementType::U32 => {
-            xla::Literal::vec1(&l.to_vec::<u32>().unwrap()).reshape(&dims).unwrap()
-        }
-        xla::ElementType::S32 => {
-            if dims.is_empty() {
-                xla::Literal::from(l.to_vec::<i32>().unwrap()[0])
-            } else {
-                xla::Literal::vec1(&l.to_vec::<i32>().unwrap()).reshape(&dims).unwrap()
-            }
-        }
-        other => panic!("unsupported element type {other:?}"),
-    }
+/// Copy a literal by value (the offline `runtime::Literal` is `Clone`; the
+/// xla crate's is not, so call sites go through this helper either way).
+fn clone_lit(l: &Literal) -> Literal {
+    l.clone()
 }
