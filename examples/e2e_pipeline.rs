@@ -60,7 +60,7 @@ fn main() {
         // ---- 3. Serve batched requests on the packed engine ----
         let mut server = Server::new(
             qm.to_decode_model(Engine::Packed),
-            ServerConfig { max_batch: 4, seed: 0 },
+            ServerConfig { max_batch: 4, seed: 0, ..Default::default() },
         );
         let prompts = [
             "the robin is a kind of",

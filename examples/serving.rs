@@ -56,7 +56,8 @@ fn main() {
         ("dense f32", dense_decode_model(&params)),
         ("NanoQuant packed", qm.to_decode_model(Engine::Packed)),
     ] {
-        let mut server = Server::new(dm, ServerConfig { max_batch: 4, seed: 0 });
+        let mut server =
+            Server::new(dm, ServerConfig { max_batch: 4, seed: 0, ..Default::default() });
         let resps = server.run(mk_requests());
         let mean_ttft: f64 = resps.iter().map(|r| r.ttft_s).sum::<f64>() / resps.len() as f64;
         println!(

@@ -73,6 +73,18 @@ fn main() {
             println!("{st}");
             record(&mut results, &format!("gemm/{n}x{m}/packed-b{b}"), &st);
         }
+        // Chunked multi-vector path (the serve loop's prefill): one
+        // bit-matrix pass + one stage-2 LUT build amortized over the chunk.
+        for c in [4usize, 16] {
+            let xc = rng.normal_vec(c * m, 1.0);
+            let mut yc = vec![0.0f32; c * n];
+            let st = bench(&format!("gemm-chunk {n}x{m} r{r} packed c{c}"), 0.3, 100, || {
+                packed.forward_chunk(&xc, c, &mut yc);
+                std::hint::black_box(&yc);
+            });
+            println!("{st}");
+            record(&mut results, &format!("gemm/{n}x{m}/packed-chunk{c}"), &st);
+        }
         println!();
     }
 

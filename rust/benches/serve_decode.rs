@@ -56,7 +56,7 @@ fn main() {
             for run in 0..4 {
                 let mut server = Server::new(
                     qm.to_decode_model(engine),
-                    ServerConfig { max_batch: batch, seed: 0 },
+                    ServerConfig { max_batch: batch, seed: 0, ..Default::default() },
                 );
                 let reqs: Vec<Request> = (0..batch as u64)
                     .map(|i| Request::greedy(i, vec![(i * 3 % 250) as u16; 8], MAX_NEW))
@@ -81,6 +81,34 @@ fn main() {
             );
         }
     }
+
+    // Chunked prefill: long-prompt TTFT on the packed engine, legacy
+    // one-token-per-tick vs the multi-token path.
+    const PROMPT_LEN: usize = 96;
+    let mut prefill_results = Json::obj();
+    for chunk in [1usize, 8] {
+        let mut times = Vec::new();
+        for run in 0..4 {
+            let mut server = Server::new(
+                qm.to_decode_model(Engine::Packed),
+                ServerConfig { max_batch: 1, seed: 0, prefill_chunk: chunk, ..Default::default() },
+            );
+            let prompt: Vec<u16> = (0..PROMPT_LEN).map(|i| (i * 3 % 250) as u16).collect();
+            let resps = server.run(vec![Request::greedy(0, prompt, 4)]);
+            assert_eq!(server.metrics.prefill_tokens, PROMPT_LEN);
+            if run > 0 {
+                times.push(resps[0].ttft_s);
+            }
+        }
+        let label = format!("prefill ttft chunk{chunk} ({PROMPT_LEN}-token prompt)");
+        let st = stats_from(&label, &times);
+        println!("{st}");
+        prefill_results.insert(
+            &format!("chunk{chunk}"),
+            Json::obj().set("mean_ttft_s", st.mean_s).set("p50_ttft_s", st.p50_s),
+        );
+    }
+    results.insert("prefill_ttft", prefill_results);
 
     let doc = Json::obj()
         .set("bench", "serve_decode")

@@ -98,9 +98,16 @@ pub const CAUSE_EFFECT: &[(&str, &str)] = &[
 
 const FILLER_SUBJECTS: &[&str] =
     &["the farmer", "the child", "the traveler", "an old woman", "the miller", "a young boy"];
-const FILLER_VERBS: &[&str] = &["walked to", "looked at", "remembered", "found", "returned to", "watched"];
-const FILLER_OBJECTS: &[&str] =
-    &["the village", "the market", "the old bridge", "the quiet road", "the stone wall", "the harvest"];
+const FILLER_VERBS: &[&str] =
+    &["walked to", "looked at", "remembered", "found", "returned to", "watched"];
+const FILLER_OBJECTS: &[&str] = &[
+    "the village",
+    "the market",
+    "the old bridge",
+    "the quiet road",
+    "the stone wall",
+    "the harvest",
+];
 
 /// Distinct categories in the knowledge base.
 pub fn categories() -> Vec<&'static str> {

@@ -172,7 +172,12 @@ fn gen_item(kind: TaskKind, rng: &mut Rng) -> McItem {
 }
 
 /// Shuffle choices of a "prompt + ' ' + choice" item, tracking the answer.
-fn shuffle_with_answer(rng: &mut Rng, prompt: String, choices: Vec<String>, answer: usize) -> McItem {
+fn shuffle_with_answer(
+    rng: &mut Rng,
+    prompt: String,
+    choices: Vec<String>,
+    answer: usize,
+) -> McItem {
     let choices = choices.into_iter().map(|c| format!(" {c}.")).collect();
     shuffle_with_answer_pre(rng, prompt, choices, answer)
 }

@@ -197,7 +197,14 @@ pub fn fig8(ctx: &Ctx) {
     let (_, report) = quantize(&p.teacher, &p.calib, p.seq, &cfg);
     let mut table = Table::new(
         "Fig. 8 — latent dynamics, block 0: sign-flip ratio and |delta| by initial magnitude",
-        &["Layer", "Flip %", "flips@|u0|<q25 %", "flips@|u0|>q75 %", "mean |delta| low-mag", "mean |delta| high-mag"],
+        &[
+            "Layer",
+            "Flip %",
+            "flips@|u0|<q25 %",
+            "flips@|u0|>q75 %",
+            "mean |delta| low-mag",
+            "mean |delta| high-mag",
+        ],
     );
     let mut raw = Json::obj();
     let block0 = report.ste.first().expect("refinement ran");
@@ -268,7 +275,10 @@ pub fn fig9(ctx: &Ctx) {
             format!("{:.4}", at(0.25)),
             format!("{:.4}", at(0.5)),
         ]);
-        raw.insert(&format!("iters{iters}"), Json::Arr(errs.iter().map(|&e| Json::Num(e)).collect()));
+        raw.insert(
+            &format!("iters{iters}"),
+            Json::Arr(errs.iter().map(|&e| Json::Num(e)).collect()),
+        );
     }
 
     // (b) penalty schedules at fixed iterations.

@@ -177,7 +177,10 @@ pub fn table2(ctx: &Ctx) {
 pub fn table3(ctx: &Ctx) {
     let mut table = Table::new(
         "Table 3 — zero-shot accuracy (synthetic suite)",
-        &["Model", "Bits", "Method", "ARC-e*", "ARC-c*", "BoolQ*", "Hella*", "Wino*", "PIQA*", "Avg."],
+        &[
+            "Model", "Bits", "Method", "ARC-e*", "ARC-c*", "BoolQ*", "Hella*", "Wino*", "PIQA*",
+            "Avg.",
+        ],
     );
     let mut raw = Json::obj();
     let items = if ctx.quick { 20 } else { 40 };

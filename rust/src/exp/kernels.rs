@@ -48,32 +48,34 @@ pub fn fig10_13(ctx: &Ctx) {
             packed.matvec_into(&x, &mut y);
             std::hint::black_box(&y);
         });
-        push_row(&mut table, &mut raw, "GEMV", n, m, "packed (ours)", &st, q.effective_bits() / 8_000_000);
+        let mb = q.effective_bits() / 8_000_000;
+        push_row(&mut table, &mut raw, "GEMV", n, m, "packed (ours)", &st, mb);
 
         let naive = NaiveUnpackLinear { q: q.clone() };
         let st = bench(&format!("gemv {n}x{m} naive"), min_t, iters.min(40), || {
             naive.matvec_into(&x, &mut y);
             std::hint::black_box(&y);
         });
-        push_row(&mut table, &mut raw, "GEMV", n, m, "naive-unpack (GemLite-like)", &st, q.effective_bits() / 8_000_000);
+        push_row(&mut table, &mut raw, "GEMV", n, m, "naive-unpack (GemLite-like)", &st, mb);
 
         let dense = q.reconstruct();
         let st = bench(&format!("gemv {n}x{m} dense"), min_t, iters, || {
             dense.matvec_into(&x, &mut y);
             std::hint::black_box(&y);
         });
-        push_row(&mut table, &mut raw, "GEMV", n, m, "dense f32", &st, dense.numel() * 4 / 1_000_000);
+        let dense_mb = dense.numel() * 4 / 1_000_000;
+        push_row(&mut table, &mut raw, "GEMV", n, m, "dense f32", &st, dense_mb);
 
         // Batched GEMM (Fig. 11): batch 8.
         let xb = Tensor::randn(&[8, m], 1.0, &mut rng);
         let st = bench(&format!("gemm {n}x{m} packed b8"), min_t, iters / 4, || {
             std::hint::black_box(packed.forward_batch(&xb));
         });
-        push_row(&mut table, &mut raw, "GEMM-b8", n, m, "packed (ours)", &st, q.effective_bits() / 8_000_000);
+        push_row(&mut table, &mut raw, "GEMM-b8", n, m, "packed (ours)", &st, mb);
         let st = bench(&format!("gemm {n}x{m} dense b8"), min_t, iters / 4, || {
             std::hint::black_box(crate::tensor::matmul_a_bt(&xb, &dense));
         });
-        push_row(&mut table, &mut raw, "GEMM-b8", n, m, "dense f32", &st, dense.numel() * 4 / 1_000_000);
+        push_row(&mut table, &mut raw, "GEMM-b8", n, m, "dense f32", &st, dense_mb);
     }
 
     // --- PJRT artifact engines (the L1 Pallas kernels through XLA) ---

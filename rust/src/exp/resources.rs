@@ -59,7 +59,9 @@ pub fn table4(ctx: &Ctx) {
     // QAT baselines: far more data, far more compute (the paper's gap).
     let tokens = zoo::train_tokens();
     let qat_steps = if ctx.quick { 60 } else { 300 };
-    for (name, init) in [("LittleBit (QAT)", InitMethod::DualSvid), ("DBF (QAT)", InitMethod::DbfAdmm)] {
+    for (name, init) in
+        [("LittleBit (QAT)", InitMethod::DualSvid), ("DBF (QAT)", InitMethod::DbfAdmm)]
+    {
         let qcfg = QatConfig {
             bpw: 1.0,
             init,
@@ -80,13 +82,20 @@ pub fn table4(ctx: &Ctx) {
             format!("{:.1}", report.wall_seconds),
             fmt_ppl(ppl),
         ]);
-        raw.insert(name, Json::obj().set("ppl", ppl).set("tokens", report.tokens_seen).set("wall_s", report.wall_seconds));
+        raw.insert(
+            name,
+            Json::obj()
+                .set("ppl", ppl)
+                .set("tokens", report.tokens_seen)
+                .set("wall_s", report.wall_seconds),
+        );
     }
 
     // NanoQuant: default calibration budget + a 2x-data variant.
     for (label, extra) in [("NanoQuant", 1usize), ("NanoQuant (2x data)", 2)] {
         let mut rng = crate::util::rng::Rng::new(ctx.seed ^ 0xDA7A);
-        let calib = crate::data::sample_sequences(&tokens, p.seq + 1, p.calib.len() * extra, &mut rng);
+        let calib =
+            crate::data::sample_sequences(&tokens, p.seq + 1, p.calib.len() * extra, &mut rng);
         let cfg = pipeline_cfg(ctx, 1.0);
         let (qm, report) = quantize(&p.teacher, &calib, p.seq, &cfg);
         let ppl = ppl_of(&p, &qm.params);

@@ -70,9 +70,10 @@ pub fn table12(ctx: &Ctx) {
             }
             let mut server = Server::new(
                 qm.to_decode_model(Engine::Packed),
-                ServerConfig { max_batch: 1, seed: 0 },
+                ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
             );
-            let prompt: Vec<u16> = (0..len.min(dm.cfg.max_seq - 17)).map(|i| (i % 250) as u16).collect();
+            let prompt: Vec<u16> =
+                (0..len.min(dm.cfg.max_seq - 17)).map(|i| (i % 250) as u16).collect();
             server.run(vec![Request::greedy(0, prompt, 16)]);
             row.push(format!("{:.1}", server.metrics.tokens_per_s));
             j.insert(&len.to_string(), server.metrics.tokens_per_s);
@@ -134,8 +135,10 @@ pub fn fig4_5(ctx: &Ctx) {
     let mut measured = Json::obj();
     let mut tok_s = std::collections::BTreeMap::new();
     for (engine, label) in [(Engine::Dense, "dense f32"), (Engine::Packed, "packed (ours)")] {
-        let mut server =
-            Server::new(qm.to_decode_model(engine), ServerConfig { max_batch: 1, seed: 0 });
+        let mut server = Server::new(
+            qm.to_decode_model(engine),
+            ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
+        );
         server.run(vec![Request::greedy(0, prompt.clone(), 48)]);
         tok_s.insert(label, server.metrics.tokens_per_s);
         table.row(vec![
@@ -173,8 +176,10 @@ pub fn fig7(ctx: &Ctx) {
     ] {
         let mut j = Json::obj();
         for &ol in &out_lens {
-            let mut server =
-                Server::new(qm.to_decode_model(engine), ServerConfig { max_batch: 1, seed: 0 });
+            let mut server = Server::new(
+                qm.to_decode_model(engine),
+                ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
+            );
             let prompt: Vec<u16> = (0..16).map(|i| (i * 7 % 250) as u16).collect();
             server.run(vec![Request::greedy(0, prompt, ol)]);
             table.row(vec![
@@ -204,7 +209,8 @@ pub fn table15(ctx: &Ctx) {
     );
     let mut raw = Json::obj();
     let gen = |dm: crate::nn::decode::DecodeModel| -> String {
-        let mut server = Server::new(dm, ServerConfig { max_batch: 1, seed: ctx.seed });
+        let mut server =
+            Server::new(dm, ServerConfig { max_batch: 1, seed: ctx.seed, ..Default::default() });
         let reqs = vec![Request {
             id: 0,
             prompt: crate::data::tokenize(prompt_text),

@@ -17,11 +17,30 @@ const K: usize = 128; // scale block size
 pub fn table13_14(ctx: &Ctx) {
     let mut t13 = Table::new(
         "Table 13 — quantized model sizes (GB)",
-        &["Model", "BF16", "NanoQuant@1", "BiLLM", "STBLLM4:8", "STBLLM6:8", "ARB-LLM_RC", "HBLLM_row", "HBLLM_col"],
+        &[
+            "Model",
+            "BF16",
+            "NanoQuant@1",
+            "BiLLM",
+            "STBLLM4:8",
+            "STBLLM6:8",
+            "ARB-LLM_RC",
+            "HBLLM_row",
+            "HBLLM_col",
+        ],
     );
     let mut t14 = Table::new(
         "Table 14 — effective bits per weight (decoder linears)",
-        &["Model", "NanoQuant@1", "BiLLM", "STBLLM4:8", "STBLLM6:8", "ARB-LLM_RC", "HBLLM_row", "HBLLM_col"],
+        &[
+            "Model",
+            "NanoQuant@1",
+            "BiLLM",
+            "STBLLM4:8",
+            "STBLLM6:8",
+            "ARB-LLM_RC",
+            "HBLLM_row",
+            "HBLLM_col",
+        ],
     );
     let mut raw = Json::obj();
     for spec in model_specs() {

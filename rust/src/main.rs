@@ -56,7 +56,8 @@ fn cmd_quantize(args: &Args) {
     let size = args.get_or("size", "s");
     let bpw = args.get_f64("bpw", 1.0);
     let tokens = zoo::train_tokens();
-    let teacher = zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+    let teacher =
+        zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
     let seq = args.get_usize("seq", 48);
     let n_calib = args.get_usize("calib", 24);
     let mut rng = Rng::new(args.get_u64("seed", 0));
@@ -85,7 +86,8 @@ fn cmd_eval(args: &Args) {
     let family = args.get_or("family", "l2");
     let size = args.get_or("size", "s");
     let tokens = zoo::train_tokens();
-    let teacher = zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+    let teacher =
+        zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
     let eval_toks = zoo::eval_tokens(CorpusKind::SynthText);
     let ppl = perplexity(&teacher, &eval_toks, 48, 16);
     let (per_task, avg) = zero_shot_suite(&teacher, 40, 0);
@@ -99,11 +101,17 @@ fn cmd_serve(args: &Args) {
     let family = args.get_or("family", "l2");
     let size = args.get_or("size", "s");
     let tokens = zoo::train_tokens();
-    let teacher = zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+    let teacher =
+        zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
     let dm = nanoquant::nn::decode::dense_decode_model(&teacher);
     let mut server = Server::new(
         dm,
-        ServerConfig { max_batch: args.get_usize("max-batch", 4), seed: 0 },
+        ServerConfig {
+            max_batch: args.get_usize("max-batch", 4),
+            prefill_chunk: args.get_usize("prefill-chunk", 8),
+            kv_pages: args.get_usize_opt("kv-pages"),
+            ..Default::default()
+        },
     );
     let prompt = args.get_or("prompt", "the robin is a kind of");
     let reqs: Vec<Request> = (0..args.get_usize("requests", 4))

@@ -59,7 +59,8 @@ mod tests {
         let mut p = vec![0.0f32; 3];
         let mut opt = Adam::new(3, 0.05);
         for _ in 0..2000 {
-            let grad: Vec<f32> = p.iter().zip(target.iter()).map(|(&x, &t)| 2.0 * (x - t)).collect();
+            let grad: Vec<f32> =
+                p.iter().zip(target.iter()).map(|(&x, &t)| 2.0 * (x - t)).collect();
             opt.step(&mut p, &grad, 1.0);
         }
         for (x, t) in p.iter().zip(target.iter()) {

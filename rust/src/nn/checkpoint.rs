@@ -106,7 +106,8 @@ pub fn load_model(path: &str) -> std::io::Result<ModelParams> {
     f.read_exact(&mut hbuf)?;
     let header = Json::parse(std::str::from_utf8(&hbuf).map_err(invalid)?).map_err(invalid)?;
     let cfg = cfg_from_json(header.get("config").ok_or_else(|| invalid("no config"))?);
-    let manifest = header.get("tensors").and_then(|t| t.as_arr()).ok_or_else(|| invalid("no tensors"))?;
+    let manifest =
+        header.get("tensors").and_then(|t| t.as_arr()).ok_or_else(|| invalid("no tensors"))?;
 
     let mut read_tensor = |shape: &[usize]| -> std::io::Result<Vec<f32>> {
         let n: usize = shape.iter().product();

@@ -18,6 +18,21 @@ pub trait MatVec: Send + Sync {
     fn in_dim(&self) -> usize;
     /// Write `W x` into `out` (`out.len() == out_dim()`) without allocating.
     fn matvec_into(&self, x: &[f32], out: &mut [f32]);
+    /// Apply the layer to `c` row-major input vectors (`xs[j * in_dim()..]`),
+    /// writing `c` row-major outputs (`out[j * out_dim()..]`). The default
+    /// loops [`MatVec::matvec_into`]; engines with a batched kernel override
+    /// it (e.g. `PackedLinear` amortizes one bit-matrix pass and one stage-2
+    /// LUT build across the chunk). Per vector, implementations must match
+    /// `matvec_into` bit for bit — chunked prefill relies on this to
+    /// reproduce the single-token decode path exactly.
+    fn matvec_chunk_into(&self, xs: &[f32], c: usize, out: &mut [f32]) {
+        let (m, n) = (self.in_dim(), self.out_dim());
+        assert_eq!(xs.len(), c * m);
+        assert_eq!(out.len(), c * n);
+        for (x, o) in xs.chunks_exact(m).zip(out.chunks_exact_mut(n)) {
+            self.matvec_into(x, o);
+        }
+    }
     /// Allocating wrapper around [`MatVec::matvec_into`].
     fn matvec(&self, x: &[f32]) -> Vec<f32> {
         let mut out = vec![0.0f32; self.out_dim()];
@@ -89,28 +104,133 @@ impl DecodeModel {
     }
 }
 
-/// Per-sequence KV cache.
+/// One fixed-size KV page: `page_size` positions × every layer × K and V
+/// strips, in one contiguous allocation (see [`KvCache`] for the layout).
+pub type KvPage = Box<[f32]>;
+
+/// Positions per page for self-allocating caches (the serve loop's shared
+/// pool picks its own page size via `ServerConfig`).
+pub const DEFAULT_PAGE_SIZE: usize = 32;
+
+/// Per-sequence paged KV cache.
+///
+/// Instead of reserving a `max_seq`-sized slab up front, the cache holds a
+/// page table over fixed-size pages, so a sequence of length `len` only
+/// ever owns `ceil(len / page_size)` pages. Pages either come from the
+/// serving pool (`attach_page`, which is what bounds server KV memory and
+/// enables admission control) or are self-allocated lazily
+/// (`ensure_capacity`, the standalone path tests and one-off decoding use).
+///
+/// Page layout: position `t` lives in page `t / page_size` at in-page slot
+/// `t % page_size`; within a page, layer `l`'s K strip for that slot starts
+/// at `((l * 2) * page_size + slot) * kv_row` and the V strip at
+/// `((l * 2 + 1) * page_size + slot) * kv_row`.
 pub struct KvCache {
-    /// Per layer: [max_seq, n_kv_heads * head_dim].
-    pub k: Vec<Tensor>,
-    pub v: Vec<Tensor>,
+    pages: Vec<KvPage>,
     pub len: usize,
     pub max_seq: usize,
+    page_size: usize,
+    n_layers: usize,
+    kv_row: usize,
 }
 
 impl KvCache {
     pub fn new(cfg: &ModelConfig) -> KvCache {
-        let kv = cfg.n_kv_heads * cfg.head_dim();
+        KvCache::with_page_size(cfg, DEFAULT_PAGE_SIZE)
+    }
+
+    pub fn with_page_size(cfg: &ModelConfig, page_size: usize) -> KvCache {
+        assert!(page_size > 0);
         KvCache {
-            k: (0..cfg.n_layers).map(|_| Tensor::zeros(&[cfg.max_seq, kv])).collect(),
-            v: (0..cfg.n_layers).map(|_| Tensor::zeros(&[cfg.max_seq, kv])).collect(),
+            pages: Vec::new(),
             len: 0,
             max_seq: cfg.max_seq,
+            page_size,
+            n_layers: cfg.n_layers,
+            kv_row: cfg.kv_row(),
         }
     }
 
+    /// Floats in one page of a cache with this geometry.
+    pub fn page_floats_for(cfg: &ModelConfig, page_size: usize) -> usize {
+        page_size * cfg.n_layers * 2 * cfg.kv_row()
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn page_floats(&self) -> usize {
+        self.page_size * self.n_layers * 2 * self.kv_row
+    }
+
+    /// Positions the attached pages can hold.
+    pub fn capacity(&self) -> usize {
+        self.pages.len() * self.page_size
+    }
+
+    pub fn pages_attached(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Self-allocate pages until `positions` fit (no-op when the serve loop
+    /// has already attached pooled pages). Standalone growth path.
+    pub fn ensure_capacity(&mut self, positions: usize) {
+        debug_assert!(positions <= self.max_seq);
+        while self.capacity() < positions {
+            self.pages.push(vec![0.0f32; self.page_floats()].into_boxed_slice());
+        }
+    }
+
+    /// Attach one pool-owned page (must match this cache's page geometry).
+    pub fn attach_page(&mut self, page: KvPage) {
+        assert_eq!(page.len(), self.page_floats(), "attach_page: geometry mismatch");
+        self.pages.push(page);
+    }
+
+    /// Hand every page back (for pool reclamation) and clear the sequence.
+    pub fn detach_pages(&mut self) -> Vec<KvPage> {
+        self.len = 0;
+        std::mem::take(&mut self.pages)
+    }
+
+    #[inline]
+    fn row_index(&self, layer: usize, t: usize, v_strip: bool) -> (usize, usize) {
+        debug_assert!(t < self.capacity(), "KV access beyond attached pages");
+        let (page, slot) = (t / self.page_size, t % self.page_size);
+        let strip = layer * 2 + v_strip as usize;
+        (page, (strip * self.page_size + slot) * self.kv_row)
+    }
+
+    #[inline]
+    pub fn k_row(&self, layer: usize, t: usize) -> &[f32] {
+        let (page, off) = self.row_index(layer, t, false);
+        &self.pages[page][off..off + self.kv_row]
+    }
+
+    #[inline]
+    pub fn v_row(&self, layer: usize, t: usize) -> &[f32] {
+        let (page, off) = self.row_index(layer, t, true);
+        &self.pages[page][off..off + self.kv_row]
+    }
+
+    #[inline]
+    pub fn k_row_mut(&mut self, layer: usize, t: usize) -> &mut [f32] {
+        let (page, off) = self.row_index(layer, t, false);
+        &mut self.pages[page][off..off + self.kv_row]
+    }
+
+    #[inline]
+    pub fn v_row_mut(&mut self, layer: usize, t: usize) -> &mut [f32] {
+        let (page, off) = self.row_index(layer, t, true);
+        &mut self.pages[page][off..off + self.kv_row]
+    }
+
+    /// Bytes of KV storage this cache currently owns (attached pages only —
+    /// the quantity that replaces the old `max_batch × max_seq` reservation
+    /// in peak-memory accounting).
     pub fn bytes(&self) -> usize {
-        self.k.iter().map(|t| t.numel() * 4).sum::<usize>() * 2
+        self.pages.len() * self.page_floats() * std::mem::size_of::<f32>()
     }
 
     pub fn reset(&mut self) {
@@ -127,58 +247,75 @@ fn rmsnorm_into(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     }
 }
 
-/// Reusable per-sequence buffers for [`decode_step_into`]: every temporary
-/// of one token step lives here, so a steady-state decode loop performs no
-/// heap allocation at all (the serving coordinator keeps one arena per KV
-/// slot and reuses it across tokens and requests).
+/// Reusable per-sequence buffers for [`decode_step_into`] /
+/// [`prefill_chunk_into`]: every temporary of a step lives here, so a
+/// steady-state decode loop performs no heap allocation at all (the serving
+/// coordinator keeps one arena per KV slot and reuses it across tokens and
+/// requests). The chunk buffers are sized `chunk_cap` rows; a single decode
+/// token is just the `chunk_cap >= 1` row 0.
 pub struct DecodeScratch {
-    /// Residual stream [d].
-    x: Vec<f32>,
-    /// RMSNorm output, shared by attention/MLP/final norms [d].
+    /// RMSNorm output for the final norm [d].
     h: Vec<f32>,
-    q: Vec<f32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    /// Attention output accumulator [n_heads * head_dim == d].
-    att: Vec<f32>,
     /// Softmax scores [max_seq].
     scores: Vec<f32>,
-    /// Attention / MLP projection outputs [d].
-    o: Vec<f32>,
-    gate: Vec<f32>,
-    up: Vec<f32>,
-    act: Vec<f32>,
-    down: Vec<f32>,
     /// Next-token logits [vocab].
     logits: Vec<f32>,
+    /// Tokens a single prefill call can consume (buffer rows below).
+    chunk_cap: usize,
+    /// Residual stream rows [chunk_cap, d].
+    cx: Vec<f32>,
+    /// Per-block norm output rows [chunk_cap, d].
+    ch: Vec<f32>,
+    cq: Vec<f32>,
+    ck: Vec<f32>,
+    cv: Vec<f32>,
+    /// Attention output rows [chunk_cap, d].
+    catt: Vec<f32>,
+    /// Attention / MLP projection output rows [chunk_cap, d].
+    cproj: Vec<f32>,
+    cgate: Vec<f32>,
+    cup: Vec<f32>,
+    cact: Vec<f32>,
 }
 
 impl DecodeScratch {
-    /// Logits written by the most recent [`decode_step_into`] on this
-    /// scratch (callers that sample after the step read them in place
-    /// instead of copying the vocab-sized buffer).
+    /// Logits written by the most recent [`decode_step_into`] (or
+    /// logits-producing [`prefill_chunk_into`]) on this scratch — callers
+    /// that sample after the step read them in place instead of copying the
+    /// vocab-sized buffer.
     pub fn logits(&self) -> &[f32] {
         &self.logits
     }
 
     pub fn new(cfg: &ModelConfig) -> DecodeScratch {
+        DecodeScratch::with_chunk(cfg, 1)
+    }
+
+    /// Scratch whose chunk buffers hold up to `chunk_cap` prefill tokens.
+    pub fn with_chunk(cfg: &ModelConfig, chunk_cap: usize) -> DecodeScratch {
+        assert!(chunk_cap >= 1);
         let d = cfg.d_model;
-        let kv = cfg.n_kv_heads * cfg.head_dim();
+        let kv = cfg.kv_row();
         DecodeScratch {
-            x: vec![0.0; d],
             h: vec![0.0; d],
-            q: vec![0.0; d],
-            k: vec![0.0; kv],
-            v: vec![0.0; kv],
-            att: vec![0.0; d],
             scores: vec![0.0; cfg.max_seq],
-            o: vec![0.0; d],
-            gate: vec![0.0; cfg.d_ff],
-            up: vec![0.0; cfg.d_ff],
-            act: vec![0.0; cfg.d_ff],
-            down: vec![0.0; d],
             logits: vec![0.0; cfg.vocab],
+            chunk_cap,
+            cx: vec![0.0; chunk_cap * d],
+            ch: vec![0.0; chunk_cap * d],
+            cq: vec![0.0; chunk_cap * d],
+            ck: vec![0.0; chunk_cap * kv],
+            cv: vec![0.0; chunk_cap * kv],
+            catt: vec![0.0; chunk_cap * d],
+            cproj: vec![0.0; chunk_cap * d],
+            cgate: vec![0.0; chunk_cap * cfg.d_ff],
+            cup: vec![0.0; chunk_cap * cfg.d_ff],
+            cact: vec![0.0; chunk_cap * cfg.d_ff],
         }
+    }
+
+    pub fn chunk_capacity(&self) -> usize {
+        self.chunk_cap
     }
 }
 
@@ -202,90 +339,17 @@ fn rope_vec(x: &mut [f32], pos: usize, n_heads: usize, hd: usize, theta: f32) {
 /// temporary taken from `s` — zero heap allocations per token once the
 /// scratch is warm. Returns the logits for the next-token distribution as a
 /// slice into the scratch.
+///
+/// This IS the chunk path at `c = 1` ([`prefill_chunk_into`]); keeping one
+/// implementation is what guarantees chunked prefill and single-token
+/// decode can never drift out of bit-identity.
 pub fn decode_step_into<'s>(
     model: &DecodeModel,
     cache: &mut KvCache,
     token: u16,
     s: &'s mut DecodeScratch,
 ) -> &'s [f32] {
-    let cfg = &model.cfg;
-    let d = cfg.d_model;
-    let hd = cfg.head_dim();
-    let groups = cfg.gqa_groups();
-    let pos = cache.len;
-    assert!(pos < cache.max_seq, "KV cache overflow (max_seq={})", cache.max_seq);
-
-    s.x.copy_from_slice(model.embed.row(token as usize));
-    for (li, b) in model.blocks.iter().enumerate() {
-        // Attention.
-        rmsnorm_into(&s.x, &b.ln1, cfg.eps, &mut s.h);
-        b.wq.matvec_into(&s.h, &mut s.q);
-        b.wk.matvec_into(&s.h, &mut s.k);
-        b.wv.matvec_into(&s.h, &mut s.v);
-        rope_vec(&mut s.q, pos, cfg.n_heads, hd, cfg.rope_theta);
-        rope_vec(&mut s.k, pos, cfg.n_kv_heads, hd, cfg.rope_theta);
-        cache.k[li].row_mut(pos).copy_from_slice(&s.k);
-        cache.v[li].row_mut(pos).copy_from_slice(&s.v);
-
-        let scale = 1.0 / (hd as f32).sqrt();
-        s.att.fill(0.0);
-        for h in 0..cfg.n_heads {
-            let g = h / groups;
-            let qh = &s.q[h * hd..(h + 1) * hd];
-            // scores over positions 0..=pos
-            let scores = &mut s.scores[..=pos];
-            let mut maxv = f32::NEG_INFINITY;
-            for (t, slot) in scores.iter_mut().enumerate() {
-                let kt = &cache.k[li].row(t)[g * hd..(g + 1) * hd];
-                let sc = crate::tensor::dot(qh, kt) * scale;
-                *slot = sc;
-                maxv = maxv.max(sc);
-            }
-            let mut z = 0.0f32;
-            for sc in scores.iter_mut() {
-                *sc = (*sc - maxv).exp();
-                z += *sc;
-            }
-            let inv = 1.0 / z;
-            let out = &mut s.att[h * hd..(h + 1) * hd];
-            for t in 0..=pos {
-                let p = scores[t] * inv;
-                if p != 0.0 {
-                    let vt = &cache.v[li].row(t)[g * hd..(g + 1) * hd];
-                    for (o, &vv) in out.iter_mut().zip(vt.iter()) {
-                        *o += p * vv;
-                    }
-                }
-            }
-        }
-        b.wo.matvec_into(&s.att, &mut s.o);
-        for i in 0..d {
-            s.x[i] += s.o[i];
-        }
-
-        // MLP.
-        rmsnorm_into(&s.x, &b.ln2, cfg.eps, &mut s.h);
-        b.wg.matvec_into(&s.h, &mut s.gate);
-        b.wu.matvec_into(&s.h, &mut s.up);
-        for ((a, &g), &u) in s.act.iter_mut().zip(s.gate.iter()).zip(s.up.iter()) {
-            *a = silu(g) * u;
-        }
-        b.wd.matvec_into(&s.act, &mut s.down);
-        for i in 0..d {
-            s.x[i] += s.down[i];
-        }
-    }
-    cache.len = pos + 1;
-
-    rmsnorm_into(&s.x, &model.ln_f, cfg.eps, &mut s.h);
-    match &model.head {
-        Some(head) => head.matvec_into(&s.h, &mut s.logits),
-        None => {
-            for (i, l) in s.logits.iter_mut().enumerate() {
-                *l = crate::tensor::dot(model.embed.row(i), &s.h);
-            }
-        }
-    }
+    prefill_chunk_into(model, cache, &[token], s, true);
     &s.logits
 }
 
@@ -294,6 +358,136 @@ pub fn decode_step_into<'s>(
 pub fn decode_step(model: &DecodeModel, cache: &mut KvCache, token: u16) -> Vec<f32> {
     let mut s = DecodeScratch::new(&model.cfg);
     decode_step_into(model, cache, token, &mut s).to_vec()
+}
+
+/// Consume up to one chunk of prompt tokens in a single pass: the chunk's
+/// Q/K/V/O and MLP projections run through [`MatVec::matvec_chunk_into`]
+/// (one bit-matrix traversal and one stage-2 LUT build per layer for the
+/// whole chunk on the packed engine), while causal attention walks the
+/// chunk token by token against the freshly written cache rows.
+///
+/// Per-token floating-point order does not depend on the chunk size (the
+/// orchestration here is per-token, and every [`MatVec::matvec_chunk_into`]
+/// implementation is bit-identical per vector to `matvec_into` by
+/// contract), so a prompt prefilled in chunks produces bit-identical cache
+/// contents and logits to one prefilled one token at a time —
+/// [`decode_step_into`] is literally this function at `c = 1`.
+/// `need_logits` skips the vocab projection on chunks that don't end the
+/// prompt (their logits are never sampled); when set, the final token's
+/// logits land in `s.logits()` just like a decode step's.
+pub fn prefill_chunk_into(
+    model: &DecodeModel,
+    cache: &mut KvCache,
+    tokens: &[u16],
+    s: &mut DecodeScratch,
+    need_logits: bool,
+) {
+    let c = tokens.len();
+    if c == 0 {
+        return;
+    }
+    assert!(c <= s.chunk_cap, "chunk {} exceeds scratch capacity {}", c, s.chunk_cap);
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let dff = cfg.d_ff;
+    let hd = cfg.head_dim();
+    let kvr = cfg.kv_row();
+    let groups = cfg.gqa_groups();
+    let pos0 = cache.len;
+    assert!(pos0 + c <= cache.max_seq, "KV cache overflow (max_seq={})", cache.max_seq);
+    cache.ensure_capacity(pos0 + c);
+
+    for (j, &tok) in tokens.iter().enumerate() {
+        s.cx[j * d..(j + 1) * d].copy_from_slice(model.embed.row(tok as usize));
+    }
+    for (li, b) in model.blocks.iter().enumerate() {
+        // Attention projections for the whole chunk, then RoPE + cache
+        // writes per token. All of the chunk's K/V rows for this layer are
+        // in place before any token's attention reads them.
+        for j in 0..c {
+            rmsnorm_into(&s.cx[j * d..(j + 1) * d], &b.ln1, cfg.eps, &mut s.ch[j * d..(j + 1) * d]);
+        }
+        b.wq.matvec_chunk_into(&s.ch[..c * d], c, &mut s.cq[..c * d]);
+        b.wk.matvec_chunk_into(&s.ch[..c * d], c, &mut s.ck[..c * kvr]);
+        b.wv.matvec_chunk_into(&s.ch[..c * d], c, &mut s.cv[..c * kvr]);
+        for j in 0..c {
+            let pos = pos0 + j;
+            rope_vec(&mut s.cq[j * d..(j + 1) * d], pos, cfg.n_heads, hd, cfg.rope_theta);
+            rope_vec(&mut s.ck[j * kvr..(j + 1) * kvr], pos, cfg.n_kv_heads, hd, cfg.rope_theta);
+            cache.k_row_mut(li, pos).copy_from_slice(&s.ck[j * kvr..(j + 1) * kvr]);
+            cache.v_row_mut(li, pos).copy_from_slice(&s.cv[j * kvr..(j + 1) * kvr]);
+        }
+
+        // Causal attention, token by token over positions 0..=pos.
+        let scale = 1.0 / (hd as f32).sqrt();
+        s.catt[..c * d].fill(0.0);
+        for j in 0..c {
+            let pos = pos0 + j;
+            let att = &mut s.catt[j * d..(j + 1) * d];
+            for h in 0..cfg.n_heads {
+                let g = h / groups;
+                let qh = &s.cq[j * d + h * hd..j * d + (h + 1) * hd];
+                let scores = &mut s.scores[..=pos];
+                let mut maxv = f32::NEG_INFINITY;
+                for (t, slot) in scores.iter_mut().enumerate() {
+                    let kt = &cache.k_row(li, t)[g * hd..(g + 1) * hd];
+                    let sc = crate::tensor::dot(qh, kt) * scale;
+                    *slot = sc;
+                    maxv = maxv.max(sc);
+                }
+                let mut z = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxv).exp();
+                    z += *sc;
+                }
+                let inv = 1.0 / z;
+                let out = &mut att[h * hd..(h + 1) * hd];
+                for t in 0..=pos {
+                    let p = scores[t] * inv;
+                    if p != 0.0 {
+                        let vt = &cache.v_row(li, t)[g * hd..(g + 1) * hd];
+                        for (o, &vv) in out.iter_mut().zip(vt.iter()) {
+                            *o += p * vv;
+                        }
+                    }
+                }
+            }
+        }
+        b.wo.matvec_chunk_into(&s.catt[..c * d], c, &mut s.cproj[..c * d]);
+        for (x, &p) in s.cx[..c * d].iter_mut().zip(s.cproj[..c * d].iter()) {
+            *x += p;
+        }
+
+        // MLP.
+        for j in 0..c {
+            rmsnorm_into(&s.cx[j * d..(j + 1) * d], &b.ln2, cfg.eps, &mut s.ch[j * d..(j + 1) * d]);
+        }
+        b.wg.matvec_chunk_into(&s.ch[..c * d], c, &mut s.cgate[..c * dff]);
+        b.wu.matvec_chunk_into(&s.ch[..c * d], c, &mut s.cup[..c * dff]);
+        for ((a, &gt), &u) in
+            s.cact[..c * dff].iter_mut().zip(s.cgate[..c * dff].iter()).zip(s.cup[..c * dff].iter())
+        {
+            *a = silu(gt) * u;
+        }
+        b.wd.matvec_chunk_into(&s.cact[..c * dff], c, &mut s.cproj[..c * d]);
+        for (x, &p) in s.cx[..c * d].iter_mut().zip(s.cproj[..c * d].iter()) {
+            *x += p;
+        }
+    }
+    cache.len = pos0 + c;
+
+    if need_logits {
+        let last = (c - 1) * d;
+        rmsnorm_into(&s.cx[last..last + d], &model.ln_f, cfg.eps, &mut s.h);
+        match &model.head {
+            Some(head) => head.matvec_into(&s.h, &mut s.logits),
+            None => {
+                for (i, l) in s.logits.iter_mut().enumerate() {
+                    *l = crate::tensor::dot(model.embed.row(i), &s.h);
+                }
+            }
+        }
+    }
 }
 
 /// Feed a prompt through the model (prefill), returning the final logits.
@@ -363,6 +557,82 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_single_token_prefill() {
+        // Chunk orchestration (norms, RoPE, paged cache writes, causal
+        // attention, logits) must reproduce the one-token-at-a-time path
+        // exactly — asserted with ==, not a tolerance.
+        for family in ["l2", "g3"] {
+            let cfg = family_config(family, "xs");
+            let mut rng = Rng::new(7);
+            let params = ModelParams::init(&cfg, &mut rng);
+            let dm = dense_decode_model(&params);
+            let prompt: Vec<u16> = (0..13).map(|i| (i * 29 % 250) as u16).collect();
+
+            let mut cache_a = KvCache::new(&cfg);
+            let mut s_a = DecodeScratch::new(&cfg);
+            for &t in &prompt {
+                decode_step_into(&dm, &mut cache_a, t, &mut s_a);
+            }
+
+            for chunk in [1usize, 4, 5, 13] {
+                let mut cache_b = KvCache::new(&cfg);
+                let mut s_b = DecodeScratch::with_chunk(&cfg, chunk);
+                let mut cur = 0;
+                while cur < prompt.len() {
+                    let end = (cur + chunk).min(prompt.len());
+                    prefill_chunk_into(
+                        &dm,
+                        &mut cache_b,
+                        &prompt[cur..end],
+                        &mut s_b,
+                        end == prompt.len(),
+                    );
+                    cur = end;
+                }
+                assert_eq!(cache_b.len, prompt.len());
+                assert_eq!(s_a.logits(), s_b.logits(), "{family} chunk={chunk} logits diverged");
+                for li in 0..cfg.n_layers {
+                    for t in 0..prompt.len() {
+                        let (ka, kb) = (cache_a.k_row(li, t), cache_b.k_row(li, t));
+                        assert_eq!(ka, kb, "{family} K l{li} t{t}");
+                        let (va, vb) = (cache_a.v_row(li, t), cache_b.v_row(li, t));
+                        assert_eq!(va, vb, "{family} V l{li} t{t}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_cache_is_page_size_invariant() {
+        // Any page size must give exactly the same decode results; pages
+        // grow lazily so a short sequence owns only ceil(len/page) pages.
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(3);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let dm = dense_decode_model(&params);
+        let tokens: Vec<u16> = (0..9).map(|i| (i * 13 % 250) as u16).collect();
+
+        let mut base_cache = KvCache::new(&cfg);
+        let mut base = Vec::new();
+        for &t in &tokens {
+            base.push(decode_step(&dm, &mut base_cache, t));
+        }
+        for page_size in [1usize, 2, 4, 7, 64] {
+            let mut cache = KvCache::with_page_size(&cfg, page_size);
+            for (i, &t) in tokens.iter().enumerate() {
+                let logits = decode_step(&dm, &mut cache, t);
+                assert_eq!(logits, base[i], "page_size={page_size} pos={i}");
+            }
+            assert_eq!(cache.pages_attached(), tokens.len().div_ceil(page_size));
+            assert_eq!(
+                cache.bytes(),
+                cache.pages_attached() * KvCache::page_floats_for(&cfg, page_size) * 4
+            );
         }
     }
 

@@ -32,6 +32,10 @@ impl ModelConfig {
     pub fn gqa_groups(&self) -> usize {
         self.n_heads / self.n_kv_heads
     }
+    /// Floats in one KV-cache position of one layer (K or V strip).
+    pub fn kv_row(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
 }
 
 /// Which linear inside a block.
@@ -182,7 +186,14 @@ pub fn rmsnorm(x: &Tensor, w: &[f32], eps: f32) -> (Tensor, Vec<f32>) {
 
 /// Apply rotary embeddings in place to a `[B*S, H*hd]` tensor.
 /// `positions[i]` is the sequence position of row i.
-pub fn rope_inplace(x: &mut Tensor, positions: &[usize], n_heads: usize, hd: usize, theta: f32, inverse: bool) {
+pub fn rope_inplace(
+    x: &mut Tensor,
+    positions: &[usize],
+    n_heads: usize,
+    hd: usize,
+    theta: f32,
+    inverse: bool,
+) {
     let n = x.rows();
     assert_eq!(x.cols(), n_heads * hd);
     assert_eq!(positions.len(), n);

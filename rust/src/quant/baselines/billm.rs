@@ -137,7 +137,12 @@ mod tests {
         let d_in = vec![1.0f32; 128];
         let (bq, _) = BiLlm::default().quantize_weight(&w, &d_in);
         let (xq, _) = super::super::Xnor.quantize_weight(&w, &d_in);
-        assert!(bq.rel_error(&w) < xq.rel_error(&w), "billm={} xnor={}", bq.rel_error(&w), xq.rel_error(&w));
+        assert!(
+            bq.rel_error(&w) < xq.rel_error(&w),
+            "billm={} xnor={}",
+            bq.rel_error(&w),
+            xq.rel_error(&w)
+        );
     }
 
     #[test]

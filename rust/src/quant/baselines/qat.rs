@@ -52,7 +52,11 @@ pub struct QatReport {
 }
 
 /// End-to-end STE training of all latent binary layers on `tokens`.
-pub fn qat_train(teacher: &ModelParams, tokens: &[u16], cfg: &QatConfig) -> (QuantModel, QatReport) {
+pub fn qat_train(
+    teacher: &ModelParams,
+    tokens: &[u16],
+    cfg: &QatConfig,
+) -> (QuantModel, QatReport) {
     let t0 = std::time::Instant::now();
     let mcfg = &teacher.cfg;
     let mut rng = Rng::new(cfg.seed);

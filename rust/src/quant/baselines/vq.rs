@@ -204,7 +204,12 @@ mod tests {
             }
             s
         };
-        assert!(werr(&tuned) <= werr(&plain) * 1.05, "tuned={} plain={}", werr(&tuned), werr(&plain));
+        assert!(
+            werr(&tuned) <= werr(&plain) * 1.05,
+            "tuned={} plain={}",
+            werr(&tuned),
+            werr(&plain)
+        );
     }
 
     #[test]

@@ -151,6 +151,7 @@ impl ModelSpec {
 }
 
 /// The 16 pretrained models of Table 13/14.
+#[rustfmt::skip] // keep the spec table tabular (one model per line)
 pub fn model_specs() -> Vec<ModelSpec> {
     vec![
         ModelSpec { name: "L2-7", vocab: 32000, d: 4096, layers: 32, q_dim: 4096, kv_dim: 4096, ffn: 11008, tied: false },

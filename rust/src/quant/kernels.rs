@@ -5,7 +5,9 @@
 //! the rank-r intermediate register/cache resident exactly as the CUDA
 //! kernel keeps it in shared memory).
 
-use super::pack::{build_byte_lut, lut_dot, packed_gemv};
+use super::pack::{
+    build_byte_lut, build_byte_lut_multi, lut_dot, lut_dot_multi, packed_gemm, packed_gemv,
+};
 use super::scheme::QuantLinear;
 use crate::nn::decode::MatVec;
 use crate::tensor::Tensor;
@@ -28,6 +30,10 @@ struct KernelScratch {
     xs: Vec<f32>,
     t: Vec<f32>,
     lut: Vec<f32>,
+    /// Chunk path only: per-vector input sums, then per-vector rank sums.
+    totals: Vec<f32>,
+    /// Chunk path only: one LUT row's `c` partial results.
+    vals: Vec<f32>,
 }
 
 thread_local! {
@@ -84,6 +90,55 @@ impl PackedLinear {
         });
     }
 
+    /// Chunked forward: `c` row-major input vectors (`xs[j * in_dim..]`) to
+    /// `c` row-major outputs, with one traversal of each packed bit matrix
+    /// serving the whole chunk and a single stage-2 LUT build amortized
+    /// across the chunk's GEMMs (see [`build_byte_lut_multi`]). Per vector
+    /// the result is bit-identical to [`PackedLinear::forward_into`] — the
+    /// chunked-prefill correctness contract.
+    pub fn forward_chunk(&self, xs: &[f32], c: usize, out: &mut [f32]) {
+        let q = &self.q;
+        let (m, n, r) = (q.in_dim(), q.out_dim(), q.rank());
+        assert_eq!(xs.len(), c * m);
+        assert_eq!(out.len(), c * n);
+        SCRATCH.with(|cell| {
+            let s = &mut *cell.borrow_mut();
+            // Stage 0: fuse the input scale, per vector.
+            s.xs.clear();
+            s.xs.reserve(c * m);
+            for j in 0..c {
+                s.xs.extend(
+                    xs[j * m..(j + 1) * m].iter().zip(q.s2.iter()).map(|(&a, &sc)| a * sc),
+                );
+            }
+            s.totals.clear();
+            s.totals.extend((0..c).map(|j| s.xs[j * m..(j + 1) * m].iter().sum::<f32>()));
+            // Stage 1: T = Vᵀ Xs (c rank-length intermediates, one bit-matrix pass).
+            s.t.resize(c * r, 0.0);
+            packed_gemm(&q.vt, &s.xs, c, &s.totals, &mut s.t);
+            // Stage 2: Y = s1 ⊙ (U T).
+            s.totals.clear();
+            s.totals.extend((0..c).map(|j| s.t[j * r..(j + 1) * r].iter().sum::<f32>()));
+            if n >= LUT_MIN_ROWS {
+                build_byte_lut_multi(&s.t, c, r, q.u.words_per_row, &mut s.lut);
+                s.vals.resize(c, 0.0);
+                for i in 0..n {
+                    lut_dot_multi(q.u.row(i), &s.lut, c, &s.totals, &mut s.vals);
+                    for j in 0..c {
+                        out[j * n + i] = q.s1[i] * s.vals[j];
+                    }
+                }
+            } else {
+                packed_gemm(&q.u, &s.t, c, &s.totals, out);
+                for j in 0..c {
+                    for (o, &sc) in out[j * n..(j + 1) * n].iter_mut().zip(q.s1.iter()) {
+                        *o *= sc;
+                    }
+                }
+            }
+        });
+    }
+
     /// Allocating wrapper around [`PackedLinear::forward_into`].
     pub fn forward_vec(&self, x: &[f32]) -> Vec<f32> {
         let mut y = vec![0.0f32; self.q.out_dim()];
@@ -114,6 +169,9 @@ impl MatVec for PackedLinear {
     }
     fn matvec_into(&self, x: &[f32], out: &mut [f32]) {
         self.forward_into(x, out);
+    }
+    fn matvec_chunk_into(&self, xs: &[f32], c: usize, out: &mut [f32]) {
+        self.forward_chunk(xs, c, out);
     }
     /// Effective compressed bytes: packed bits + FP16 scales
     /// (matches Appendix F accounting).
@@ -239,6 +297,31 @@ mod tests {
                 assert_eq!(out, want, "n={n} m={m} r={r}");
             }
         }
+    }
+
+    #[test]
+    fn forward_chunk_is_bit_identical_to_forward_into() {
+        // Both stage-2 paths (blocked GEMM below LUT_MIN_ROWS, byte LUT
+        // above), several chunk widths, exact equality — the contract that
+        // makes chunked prefill reproduce single-token decoding byte for
+        // byte.
+        check("forward_chunk == forward_into (exact)", 20, |g| {
+            let n = if g.bool() { g.int(64, 150) } else { g.int(1, 63) };
+            let m = g.int(1, 70);
+            let r = g.int(1, 40);
+            let c = g.int(1, 8);
+            let q = random_q(n, m, r, g.seed);
+            let pl = PackedLinear::new(q);
+            let mut rng = Rng::new(g.seed ^ 21);
+            let xs = rng.normal_vec(c * m, 1.0);
+            let mut got = vec![f32::NAN; c * n];
+            pl.forward_chunk(&xs, c, &mut got);
+            for j in 0..c {
+                let mut want = vec![f32::NAN; n];
+                pl.forward_into(&xs[j * m..(j + 1) * m], &mut want);
+                assert_eq!(&got[j * n..(j + 1) * n], &want[..], "n={n} m={m} r={r} c={c} j={j}");
+            }
+        });
     }
 
     #[test]

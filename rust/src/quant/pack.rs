@@ -194,6 +194,94 @@ pub fn packed_gemv(bits: &PackedBits, x: &[f32], total: f32, out: &mut [f32]) {
     }
 }
 
+/// Multi-vector packed GEMM: `out[j][i] = dot(signs_row_i, x_j)` for each
+/// of the `c` row-major input vectors in `xs` (`xs[j * cols..]`), written
+/// row-major by vector into `out` (`out[j * rows + i]`).
+///
+/// One pass over the bit matrix serves all `c` vectors, so the packed-word
+/// traffic (and the `w == 0` skip tests) amortize across the chunk — this
+/// is the stage the serve loop's chunked prefill rides. Per vector the
+/// floating-point evaluation order is *identical* to [`packed_gemv`] /
+/// [`packed_dot`], so a chunked prefill reproduces the single-token path
+/// bit for bit.
+///
+/// `totals[j]` must be `xs[j].iter().sum()`.
+pub fn packed_gemm(bits: &PackedBits, xs: &[f32], c: usize, totals: &[f32], out: &mut [f32]) {
+    assert_eq!(xs.len(), c * bits.cols, "packed_gemm: xs length vs c * cols");
+    assert_eq!(totals.len(), c, "packed_gemm: totals length vs c");
+    assert_eq!(out.len(), c * bits.rows, "packed_gemm: out length vs c * rows");
+    let wpr = bits.words_per_row;
+    let full_words = bits.cols / 32;
+    let blocks = bits.rows / ROW_BLOCK;
+    let rows_n = bits.rows;
+    // Selected-sum accumulators live in `out` directly (zeroed here, scaled
+    // to `2·sel − total` at the end): per vector the adds happen in the same
+    // order as `packed_gemv`'s local `sel`, so results match bit for bit.
+    for blk in 0..blocks {
+        let i0 = blk * ROW_BLOCK;
+        let rows: [&[u32]; ROW_BLOCK] =
+            [bits.row(i0), bits.row(i0 + 1), bits.row(i0 + 2), bits.row(i0 + 3)];
+        for j in 0..c {
+            for l in 0..ROW_BLOCK {
+                out[j * rows_n + i0 + l] = 0.0;
+            }
+        }
+        for wi in 0..full_words {
+            let ws = [rows[0][wi], rows[1][wi], rows[2][wi], rows[3][wi]];
+            if (ws[0] | ws[1] | ws[2] | ws[3]) == 0 {
+                continue;
+            }
+            for j in 0..c {
+                let chunk = &xs[j * bits.cols + wi * 32..j * bits.cols + wi * 32 + 32];
+                for (l, &w) in ws.iter().enumerate() {
+                    if w == 0 {
+                        continue;
+                    }
+                    let mut acc = [0.0f32; 4];
+                    for k in 0..4 {
+                        let mut a = acc[k];
+                        for b in 0..8 {
+                            let bit = (w >> (k * 8 + b)) & 1;
+                            a += (bit as f32) * chunk[k * 8 + b];
+                        }
+                        acc[k] = a;
+                    }
+                    out[j * rows_n + i0 + l] += acc.iter().sum::<f32>();
+                }
+            }
+        }
+        // Tail word (partial; absent when cols % 32 == 0).
+        if full_words < wpr {
+            let base = full_words * 32;
+            let tail = bits.cols - base;
+            for j in 0..c {
+                for (l, row) in rows.iter().enumerate() {
+                    let w = row[full_words];
+                    let mut s = 0.0f32;
+                    for b in 0..tail {
+                        s += (((w >> b) & 1) as f32) * xs[j * bits.cols + base + b];
+                    }
+                    out[j * rows_n + i0 + l] += s;
+                }
+            }
+        }
+        for j in 0..c {
+            for l in 0..ROW_BLOCK {
+                let slot = &mut out[j * rows_n + i0 + l];
+                *slot = 2.0 * *slot - totals[j];
+            }
+        }
+    }
+    // Remainder rows: defer to `packed_dot` per vector (same path the
+    // single-vector GEMV takes, keeping bit-identical accumulation order).
+    for i in blocks * ROW_BLOCK..rows_n {
+        for j in 0..c {
+            out[j * rows_n + i] =
+                packed_dot(bits.row(i), &xs[j * bits.cols..(j + 1) * bits.cols], totals[j]);
+        }
+    }
+}
+
 /// Build the T-MAC-style byte lookup tables for [`lut_dot`]: one 256-entry
 /// table per byte group of `t`, where `table[g][b] = Σ_{bit j set in b}
 /// t[8g + j]`. With the tables built, a packed sign dot against `t` costs
@@ -241,6 +329,69 @@ pub fn lut_dot(row: &[u32], lut: &[f32], total: f32) -> f32 {
             + lut[g + 768 + ((w >> 24) & 0xFF) as usize];
     }
     2.0 * sel - total
+}
+
+/// Multi-vector variant of [`build_byte_lut`]: one build serves a whole
+/// chunk of `c` vectors (`ts[j * tlen..]`, row-major). Entry layout is
+/// vector-minor — `lut[(g * 256 + b) * c + j]` — so [`lut_dot_multi`] reads
+/// each byte group's `c` partial sums contiguously.
+///
+/// Per vector the subset-sum recurrence performs exactly the adds of the
+/// single-vector build, so the table entries (and therefore every
+/// [`lut_dot_multi`] result) are bit-identical to the per-vector path; the
+/// win is that each packed row of the weight matrix is then traversed once
+/// per *chunk* instead of once per vector.
+pub fn build_byte_lut_multi(
+    ts: &[f32],
+    c: usize,
+    tlen: usize,
+    words_per_row: usize,
+    lut: &mut Vec<f32>,
+) {
+    assert_eq!(ts.len(), c * tlen, "build_byte_lut_multi: ts length vs c * tlen");
+    let groups = words_per_row * 4;
+    lut.clear();
+    lut.resize(groups * 256 * c, 0.0);
+    for g in 0..groups {
+        let base = g * 8;
+        let table = &mut lut[g * 256 * c..(g + 1) * 256 * c];
+        for b in 1usize..256 {
+            let j = base + b.trailing_zeros() as usize;
+            let parent = (b & (b - 1)) * c;
+            for vi in 0..c {
+                let v = if j < tlen { ts[vi * tlen + j] } else { 0.0 };
+                table[b * c + vi] = table[parent + vi] + v;
+            }
+        }
+    }
+}
+
+/// `dot(signs_row, t_j)` for each of the `c` vectors behind a
+/// [`build_byte_lut_multi`] table, written to `out` (`out.len() == c`).
+/// Bit-identical per vector to [`lut_dot`] (same lookup-add order).
+#[inline]
+pub fn lut_dot_multi(row: &[u32], lut: &[f32], c: usize, totals: &[f32], out: &mut [f32]) {
+    debug_assert!(lut.len() >= row.len() * 4 * 256 * c);
+    debug_assert_eq!(out.len(), c);
+    debug_assert_eq!(totals.len(), c);
+    out.fill(0.0);
+    for (wi, &w) in row.iter().enumerate() {
+        if w == 0 {
+            // All-zero word: every byte indexes table[0] == 0.
+            continue;
+        }
+        let g = wi * 4 * 256 * c;
+        let b0 = g + (w & 0xFF) as usize * c;
+        let b1 = g + (256 + ((w >> 8) & 0xFF) as usize) * c;
+        let b2 = g + (512 + ((w >> 16) & 0xFF) as usize) * c;
+        let b3 = g + (768 + ((w >> 24) & 0xFF) as usize) * c;
+        for j in 0..c {
+            out[j] += lut[b0 + j] + lut[b1 + j] + lut[b2 + j] + lut[b3 + j];
+        }
+    }
+    for (o, &t) in out.iter_mut().zip(totals.iter()) {
+        *o = 2.0 * *o - t;
+    }
 }
 
 #[cfg(test)]
@@ -346,6 +497,56 @@ mod tests {
                     "packed_gemv r{rows} c{cols} i{i}: {} vs {want}",
                     got[i]
                 );
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_and_multi_lut_are_bit_identical_to_single_vector_paths() {
+        // The chunked-prefill contract: the multi-vector kernels must equal
+        // the single-vector kernels *exactly* (same FP evaluation order),
+        // so chunked and single-token prefill generate identical tokens.
+        check("packed_gemm/lut_multi == per-vector kernels (exact)", 40, |g| {
+            let rows = g.int(1, 70);
+            let cols = match g.int(0, 3) {
+                0 => 32 * g.int(1, 4),
+                1 => 1,
+                _ => g.int(1, 130),
+            };
+            let c = g.int(1, 6);
+            let mut rng = Rng::new(g.seed);
+            let signs = Tensor::randn(&[rows, cols], 1.0, &mut rng).sign_pm1();
+            let p = PackedBits::from_signs(&signs);
+            let xs: Vec<f32> = rng.normal_vec(c * cols, 1.0);
+            let totals: Vec<f32> =
+                (0..c).map(|j| xs[j * cols..(j + 1) * cols].iter().sum()).collect();
+
+            // packed_gemm vs packed_gemv per vector: exact equality.
+            let mut got = vec![f32::NAN; c * rows];
+            packed_gemm(&p, &xs, c, &totals, &mut got);
+            for j in 0..c {
+                let mut want = vec![0.0f32; rows];
+                packed_gemv(&p, &xs[j * cols..(j + 1) * cols], totals[j], &mut want);
+                assert_eq!(&got[j * rows..(j + 1) * rows], &want[..], "gemm vec {j}");
+            }
+
+            // multi-LUT vs single LUT per vector: exact equality.
+            let mut mlut = Vec::new();
+            build_byte_lut_multi(&xs, c, cols, p.words_per_row, &mut mlut);
+            let sluts: Vec<Vec<f32>> = (0..c)
+                .map(|j| {
+                    let mut slut = Vec::new();
+                    build_byte_lut(&xs[j * cols..(j + 1) * cols], p.words_per_row, &mut slut);
+                    slut
+                })
+                .collect();
+            let mut per_vec = vec![f32::NAN; c];
+            for i in 0..rows {
+                lut_dot_multi(p.row(i), &mlut, c, &totals, &mut per_vec);
+                for j in 0..c {
+                    let want = lut_dot(p.row(i), &sluts[j], totals[j]);
+                    assert_eq!(per_vec[j], want, "lut row {i} vec {j}");
+                }
             }
         });
     }

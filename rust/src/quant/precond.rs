@@ -29,7 +29,8 @@ pub fn robust_diag(second_moments: &[f64], cfg: &RobustDiagConfig) -> Vec<f32> {
     assert!((0.0..=1.0).contains(&cfg.gamma));
     let n = second_moments.len();
     // D = sqrt(moment + damping)
-    let mut d: Vec<f64> = second_moments.iter().map(|&m| (m.max(0.0) + cfg.damping).sqrt()).collect();
+    let mut d: Vec<f64> =
+        second_moments.iter().map(|&m| (m.max(0.0) + cfg.damping).sqrt()).collect();
     // Normalize to unit mean so clipping is scale-free (the reconstruction
     // objective is invariant to a global rescale of D).
     let mean = d.iter().sum::<f64>() / n as f64;
@@ -94,10 +95,15 @@ mod tests {
     #[test]
     fn shrinkage_interpolates() {
         let moments = vec![0.25, 1.0, 4.0, 16.0];
-        let none = robust_diag(&moments, &RobustDiagConfig { tau: 100.0, gamma: 0.0, damping: 0.0 });
-        let half = robust_diag(&moments, &RobustDiagConfig { tau: 100.0, gamma: 0.5, damping: 0.0 });
+        let none =
+            robust_diag(&moments, &RobustDiagConfig { tau: 100.0, gamma: 0.0, damping: 0.0 });
+        let half =
+            robust_diag(&moments, &RobustDiagConfig { tau: 100.0, gamma: 0.5, damping: 0.0 });
         // Spread (max-min) shrinks monotonically with gamma.
-        let spread = |d: &[f32]| d.iter().cloned().fold(0.0f32, f32::max) - d.iter().cloned().fold(f32::INFINITY, f32::min);
+        let spread = |d: &[f32]| {
+            let hi = d.iter().cloned().fold(0.0f32, f32::max);
+            hi - d.iter().cloned().fold(f32::INFINITY, f32::min)
+        };
         assert!(spread(&half) < spread(&none));
         assert!(spread(&half) > 0.0);
     }

@@ -1,0 +1,183 @@
+//! Shared paged KV-cache pool — the block allocator behind the serving
+//! coordinator's memory bound.
+//!
+//! The pre-pool server reserved `max_batch × max_seq` worth of KV up front
+//! for every slot regardless of use; a 32-position page granule plus
+//! reservation-based admission replaces that with "pay for what you
+//! decode". The pool owns a fixed budget of fixed-size pages (one page =
+//! `page_size` positions × every layer × K and V strips, see
+//! [`KvCache`][crate::nn::decode::KvCache] for the in-page layout) and
+//! moves them through three states:
+//!
+//! 1. **reserved** — admission control promises a finishing sequence its
+//!    whole footprint (`prompt + max_new`, clamped to `max_seq`) before the
+//!    first token runs, so an admitted request can never strand mid-decode
+//!    on an empty pool. A request whose footprint doesn't fit is *deferred*
+//!    (left queued), never dropped.
+//! 2. **in use** — pages physically attached to a slot's cache, handed out
+//!    lazily as the sequence actually grows. Peak bytes are tracked here,
+//!    which is what `ServeMetrics::peak_kv_bytes` reports.
+//! 3. **free** — materialized buffers returned by finished sequences,
+//!    recycled without touching the allocator again.
+
+use crate::nn::decode::{KvCache, KvPage};
+use crate::nn::model::ModelConfig;
+
+pub struct KvPool {
+    page_size: usize,
+    page_floats: usize,
+    total_pages: usize,
+    /// Pages promised to admitted sequences (includes attached ones).
+    reserved: usize,
+    /// Pages currently attached to a slot's cache.
+    in_use: usize,
+    peak_in_use: usize,
+    /// Materialized-but-idle buffers, recycled across requests.
+    free: Vec<KvPage>,
+    /// Buffers ever materialized (lazy: short workloads never touch the
+    /// full budget).
+    materialized: usize,
+}
+
+impl KvPool {
+    /// A pool with `total_pages` of budget, clamped up so a single
+    /// `max_seq`-length sequence always fits (otherwise the head of the
+    /// queue could never be admitted and the scheduler would stall).
+    pub fn new(cfg: &ModelConfig, page_size: usize, total_pages: usize) -> KvPool {
+        assert!(page_size > 0);
+        let min_pages = cfg.max_seq.div_ceil(page_size);
+        KvPool {
+            page_size,
+            page_floats: KvCache::page_floats_for(cfg, page_size),
+            total_pages: total_pages.max(min_pages),
+            reserved: 0,
+            in_use: 0,
+            peak_in_use: 0,
+            free: Vec::new(),
+            materialized: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Bytes of one page, derived from the cache's element type (not a
+    /// hard-coded 4-bytes-per-element).
+    pub fn page_bytes(&self) -> usize {
+        self.page_floats * std::mem::size_of::<f32>()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    /// Pages a sequence of `positions` total positions needs.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_size)
+    }
+
+    /// Pages not yet promised to an admitted sequence.
+    pub fn unreserved_pages(&self) -> usize {
+        self.total_pages - self.reserved
+    }
+
+    /// Admission control: promise `pages` to a sequence, or refuse and
+    /// leave the budget untouched (the scheduler then defers the request —
+    /// per-request deferral accounting lives there, since the pool sees
+    /// every retry tick, not unique requests).
+    pub fn try_reserve(&mut self, pages: usize) -> bool {
+        if pages <= self.unreserved_pages() {
+            self.reserved += pages;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Hand out one page from a prior reservation (recycles a free buffer
+    /// when one exists, materializes otherwise).
+    pub fn take_page(&mut self) -> KvPage {
+        debug_assert!(self.in_use < self.reserved, "take_page without a covering reservation");
+        self.in_use += 1;
+        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        self.free.pop().unwrap_or_else(|| {
+            self.materialized += 1;
+            debug_assert!(self.materialized <= self.total_pages);
+            vec![0.0f32; self.page_floats].into_boxed_slice()
+        })
+    }
+
+    /// Reclaim a finished sequence's pages immediately and release its full
+    /// reservation (`reserved` may exceed `pages.len()` when the sequence
+    /// finished before touching its whole footprint).
+    pub fn release(&mut self, pages: Vec<KvPage>, reserved: usize) {
+        debug_assert!(pages.len() <= reserved);
+        debug_assert!(pages.len() <= self.in_use && reserved <= self.reserved);
+        self.in_use -= pages.len();
+        self.reserved -= reserved;
+        self.free.extend(pages);
+    }
+
+    pub fn in_use_pages(&self) -> usize {
+        self.in_use
+    }
+
+    /// Peak bytes of KV pages simultaneously attached to sequences — the
+    /// pool's actual footprint, measurably below the old
+    /// `max_batch × max_seq` reservation on short-prompt workloads.
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_in_use * self.page_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+
+    fn cfg() -> ModelConfig {
+        family_config("l2", "xs")
+    }
+
+    #[test]
+    fn reserve_take_release_roundtrip() {
+        let cfg = cfg();
+        let mut pool = KvPool::new(&cfg, 4, 100);
+        assert_eq!(pool.pages_for(1), 1);
+        assert_eq!(pool.pages_for(4), 1);
+        assert_eq!(pool.pages_for(5), 2);
+        assert!(pool.try_reserve(3));
+        assert_eq!(pool.unreserved_pages(), 97);
+        let a = pool.take_page();
+        let b = pool.take_page();
+        assert_eq!(a.len(), KvCache::page_floats_for(&cfg, 4));
+        assert_eq!(pool.in_use_pages(), 2);
+        // Finished early: only 2 of the 3 reserved pages were touched.
+        pool.release(vec![a, b], 3);
+        assert_eq!(pool.in_use_pages(), 0);
+        assert_eq!(pool.unreserved_pages(), 100);
+        assert_eq!(pool.peak_bytes(), 2 * pool.page_bytes());
+        // Buffers are recycled, not re-materialized.
+        assert!(pool.try_reserve(1));
+        let _c = pool.take_page();
+        assert_eq!(pool.materialized, 2);
+    }
+
+    #[test]
+    fn exhausted_budget_refuses_until_released() {
+        let mut pool = KvPool::new(&cfg(), 4, 8);
+        assert!(pool.try_reserve(8));
+        assert!(!pool.try_reserve(1));
+        assert_eq!(pool.unreserved_pages(), 0);
+        pool.release(Vec::new(), 8);
+        assert!(pool.try_reserve(1));
+    }
+
+    #[test]
+    fn budget_clamps_to_one_full_sequence() {
+        let cfg = cfg();
+        let pool = KvPool::new(&cfg, 4, 0);
+        assert_eq!(pool.total_pages(), cfg.max_seq.div_ceil(4));
+    }
+}

@@ -1,13 +1,26 @@
 //! Serving coordinator: request queue, continuous (dynamic) batcher,
-//! KV-cache slot manager, sampling, and metrics — the L3 runtime that the
-//! paper's inference-efficiency experiments (Figs. 4–5, 7, 10–13; Tables
-//! 12, 15) run on. Works with any [`DecodeModel`] engine: dense FP32,
-//! NanoQuant packed kernels, naive-unpack, or VQ baselines.
+//! paged KV-cache pool, chunked prefill, sampling, and metrics — the L3
+//! runtime that the paper's inference-efficiency experiments (Figs. 4–5, 7,
+//! 10–13; Tables 12, 15) run on. Works with any [`DecodeModel`] engine:
+//! dense FP32, NanoQuant packed kernels, naive-unpack, or VQ baselines.
+//!
+//! Memory: slots draw fixed-size KV pages from a shared [`KvPool`] instead
+//! of reserving `max_seq` up front; admission defers queued requests whose
+//! `prompt + max_new` footprint the pool can't promise, and a finished
+//! slot's pages are reclaimed immediately. Latency: prefill consumes up to
+//! `prefill_chunk` prompt tokens per scheduler tick through the engines'
+//! multi-token path, so TTFT no longer scales with tick overhead × prompt
+//! length.
 
 pub mod device;
+pub mod kv_pool;
+
+pub use kv_pool::KvPool;
 
 use crate::data::detokenize;
-use crate::nn::decode::{decode_step_into, DecodeModel, DecodeScratch, KvCache};
+use crate::nn::decode::{
+    decode_step_into, prefill_chunk_into, DecodeModel, DecodeScratch, KvCache,
+};
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks_mut;
 use std::collections::VecDeque;
@@ -21,6 +34,9 @@ pub struct Request {
     pub max_new: usize,
     /// 0.0 = greedy.
     pub temperature: f32,
+    /// Sampling truncation: keep the `top_k` highest-probability tokens
+    /// before sampling. `0` means no truncation (the full vocabulary);
+    /// `1` is greedy regardless of temperature.
     pub top_k: usize,
 }
 
@@ -48,25 +64,56 @@ pub struct ServerConfig {
     /// Max concurrent sequences (KV slots).
     pub max_batch: usize,
     pub seed: u64,
+    /// Positions per KV page — the pool's allocation granule.
+    pub page_size: usize,
+    /// Total pages the shared KV pool may hand out. `None` sizes the pool
+    /// for the old full reservation (`max_batch × max_seq`), i.e. admission
+    /// never defers; either way the budget is clamped up so one
+    /// `max_seq`-length sequence always fits.
+    pub kv_pages: Option<usize>,
+    /// Prompt tokens consumed per scheduler tick during prefill (chunked
+    /// prefill; `1` reproduces the legacy one-token-per-tick behavior with
+    /// byte-identical outputs).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 4, seed: 0 }
+        ServerConfig { max_batch: 4, seed: 0, page_size: 32, kv_pages: None, prefill_chunk: 8 }
     }
 }
 
 /// Aggregate serving metrics for one `run` call.
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
+    /// Generated (decode) tokens.
     pub total_tokens: usize,
+    /// Prompt tokens consumed by prefill (counted explicitly — not folded
+    /// into `total_tokens`, not silently dropped).
+    pub prefill_tokens: usize,
     pub wall_s: f64,
+    /// Decode-output throughput: `total_tokens / wall_s` (the axis the
+    /// paper's serving tables report). Prefill work is visible separately
+    /// via [`ServeMetrics::prefill_tokens`] and `throughput_tokens_per_s`.
     pub tokens_per_s: f64,
+    /// End-to-end processed-token throughput:
+    /// `(total_tokens + prefill_tokens) / wall_s`.
+    pub throughput_tokens_per_s: f64,
     pub peak_active_slots: usize,
+    /// Scheduler ticks spent in prefill, summed over slots (chunked prefill
+    /// divides this by the chunk factor relative to one-token-per-tick).
+    pub prefill_ticks: usize,
     /// Weight bytes of the engine (effective compressed size).
     pub weight_bytes: usize,
-    /// Peak KV bytes across concurrently active slots.
+    /// Peak bytes of KV pages simultaneously attached to active slots —
+    /// the pool's real footprint (page granularity, element size derived
+    /// from the cache storage type), not a `max_batch × max_seq` bound.
     pub peak_kv_bytes: usize,
+    /// Requests whose admission was deferred at least once because the KV
+    /// pool couldn't cover their footprint (each deferred request counts
+    /// once, however many ticks it waited; deferred ≠ dropped — every
+    /// deferred request is admitted later and completes).
+    pub admission_deferrals: usize,
 }
 
 struct Slot {
@@ -77,9 +124,16 @@ struct Slot {
     /// no allocation inside the model step. Also holds the step's logits,
     /// which sampling reads in place (no vocab-sized copy per token).
     scratch: DecodeScratch,
+    /// Pages promised to this request at admission (released in full when
+    /// the slot finishes, even if the sequence never touched them all).
+    reserved_pages: usize,
     generated: Vec<u16>,
     prefill_done: bool,
     prefill_cursor: usize,
+    /// Prompt cursor this tick's prefill will advance to — the single
+    /// source of truth shared by the serial page-attach/accounting phase
+    /// and the parallel tick.
+    prefill_target: usize,
     started: Instant,
     ttft_s: Option<f64>,
 }
@@ -130,70 +184,128 @@ impl Server {
                 queue.push_back(req);
             }
         }
+        let max_seq = self.model.cfg.max_seq;
+        let page_size = self.cfg.page_size;
+        let prefill_chunk = self.cfg.prefill_chunk.max(1);
+        let full_reservation_pages = self.cfg.max_batch * max_seq.div_ceil(page_size);
+        let mut pool = KvPool::new(
+            &self.model.cfg,
+            page_size,
+            self.cfg.kv_pages.unwrap_or(full_reservation_pages),
+        );
         let mut active: Vec<Option<Slot>> = (0..self.cfg.max_batch).map(|_| None).collect();
         let mut rng = Rng::new(self.cfg.seed);
         let mut total_tokens = 0usize;
+        let mut prefill_tokens = 0usize;
+        let mut prefill_ticks = 0usize;
         let mut peak_active = 0usize;
-        let mut peak_kv = 0usize;
-        // KV caches and decode arenas recovered from finished requests;
-        // recycling them keeps steady-state admission allocation-free.
+        let mut deferrals = 0usize;
+        // Counts each deferred request once across its (many) retry ticks.
+        let mut last_deferred: Option<u64> = None;
+        // KV caches (page tables, detached) and decode arenas recovered from
+        // finished requests; recycling them keeps steady-state admission
+        // allocation-free.
         let mut spares: Vec<(KvCache, DecodeScratch)> = Vec::new();
 
         loop {
-            // ---- Admission: fill free slots FIFO ----
+            // ---- Admission: fill free slots in strict FIFO order. A
+            // request is admitted only when the pool can promise its whole
+            // footprint (prompt + max_new, clamped to max_seq); otherwise it
+            // is deferred — left at the head of the queue, never dropped,
+            // and re-tried once finished slots release pages. Nothing
+            // behind the head jumps it.
             for slot in active.iter_mut() {
-                if slot.is_none() {
-                    if let Some(req) = queue.pop_front() {
-                        let (mut cache, scratch) = spares.pop().unwrap_or_else(|| {
-                            (KvCache::new(&self.model.cfg), DecodeScratch::new(&self.model.cfg))
-                        });
-                        cache.reset();
-                        *slot = Some(Slot {
-                            cache,
-                            scratch,
-                            generated: Vec::with_capacity(req.max_new),
-                            prefill_done: false,
-                            prefill_cursor: 0,
-                            started: Instant::now(),
-                            ttft_s: None,
-                            req,
-                        });
-                    }
+                if slot.is_some() {
+                    continue;
                 }
+                let Some(req) = queue.front() else { break };
+                let need = (req.prompt.len() + req.max_new).min(max_seq);
+                let pages = pool.pages_for(need);
+                if !pool.try_reserve(pages) {
+                    if last_deferred != Some(req.id) {
+                        last_deferred = Some(req.id);
+                        deferrals += 1;
+                    }
+                    break;
+                }
+                let req = queue.pop_front().unwrap();
+                if last_deferred == Some(req.id) {
+                    last_deferred = None;
+                }
+                let (mut cache, scratch) = spares.pop().unwrap_or_else(|| {
+                    (
+                        KvCache::with_page_size(&self.model.cfg, page_size),
+                        DecodeScratch::with_chunk(&self.model.cfg, prefill_chunk),
+                    )
+                });
+                cache.reset();
+                *slot = Some(Slot {
+                    cache,
+                    scratch,
+                    reserved_pages: pages,
+                    generated: Vec::with_capacity(req.max_new),
+                    prefill_done: false,
+                    prefill_cursor: 0,
+                    prefill_target: 0,
+                    started: Instant::now(),
+                    ttft_s: None,
+                    req,
+                });
             }
             let n_active = active.iter().filter(|s| s.is_some()).count();
             if n_active == 0 {
+                // The pool is clamped to hold one max_seq sequence, so the
+                // queue head is always admissible once every slot drains.
+                assert!(queue.is_empty(), "scheduler stalled with queued requests");
                 break;
             }
             peak_active = peak_active.max(n_active);
-            peak_kv = peak_kv.max(
-                active
-                    .iter()
-                    .flatten()
-                    .map(|s| {
-                        // Bytes actually occupied by this slot's context.
-                        let kv_row = self.model.cfg.n_kv_heads * self.model.cfg.head_dim();
-                        2 * self.model.cfg.n_layers * s.cache.len * kv_row * 4
-                    })
-                    .sum(),
-            );
 
-            // ---- One scheduler tick: advance every active slot ----
+            // ---- Attach this tick's pages (serial: the pool is never
+            // touched inside the parallel section) and account prefill
+            // progress. Pages come out of the slot's admission-time
+            // reservation, materialized only as the sequence actually
+            // grows.
+            for slot in active.iter_mut().flatten() {
+                let step = if !slot.prefill_done {
+                    let end = (slot.prefill_cursor + prefill_chunk).min(slot.req.prompt.len());
+                    slot.prefill_target = end;
+                    let step = end - slot.prefill_cursor;
+                    prefill_tokens += step;
+                    prefill_ticks += 1;
+                    step
+                } else {
+                    1
+                };
+                let need = (slot.cache.len + step).min(max_seq);
+                while slot.cache.capacity() < need {
+                    slot.cache.attach_page(pool.take_page());
+                }
+            }
+
+            // ---- One scheduler tick: advance every active slot — one
+            // decode token, or up to `prefill_chunk` prompt tokens. ----
             let model = &self.model;
             parallel_chunks_mut(&mut active, 1, |_, slot_chunk| {
                 if let Some(slot) = slot_chunk[0].as_mut() {
-                    let next_token = if !slot.prefill_done {
-                        slot.req.prompt[slot.prefill_cursor]
-                    } else {
-                        *slot.generated.last().unwrap()
-                    };
-                    decode_step_into(model, &mut slot.cache, next_token, &mut slot.scratch);
                     if !slot.prefill_done {
-                        slot.prefill_cursor += 1;
-                        if slot.prefill_cursor == slot.req.prompt.len() {
+                        let end = slot.prefill_target;
+                        let last = end == slot.req.prompt.len();
+                        prefill_chunk_into(
+                            model,
+                            &mut slot.cache,
+                            &slot.req.prompt[slot.prefill_cursor..end],
+                            &mut slot.scratch,
+                            last,
+                        );
+                        slot.prefill_cursor = end;
+                        if last {
                             slot.prefill_done = true;
                             slot.ttft_s = Some(slot.started.elapsed().as_secs_f64());
                         }
+                    } else {
+                        let next_token = *slot.generated.last().unwrap();
+                        decode_step_into(model, &mut slot.cache, next_token, &mut slot.scratch);
                     }
                 }
             });
@@ -218,7 +330,12 @@ impl Server {
                     }
                 };
                 if finished {
-                    let slot = slot_opt.take().unwrap();
+                    let mut slot = slot_opt.take().unwrap();
+                    // Immediate page reclamation: detached buffers go back
+                    // to the pool's free list; the reservation is released
+                    // in full.
+                    let pages = slot.cache.detach_pages();
+                    pool.release(pages, slot.reserved_pages);
                     spares.push((slot.cache, slot.scratch));
                     done.push(Response {
                         id: slot.req.id,
@@ -235,20 +352,26 @@ impl Server {
         let wall = t0.elapsed().as_secs_f64();
         self.metrics = ServeMetrics {
             total_tokens,
+            prefill_tokens,
             wall_s: wall,
             tokens_per_s: total_tokens as f64 / wall.max(1e-9),
+            throughput_tokens_per_s: (total_tokens + prefill_tokens) as f64 / wall.max(1e-9),
             peak_active_slots: peak_active,
+            prefill_ticks,
             weight_bytes: self.model.weight_bytes(),
-            peak_kv_bytes: peak_kv,
+            peak_kv_bytes: pool.peak_bytes(),
+            admission_deferrals: deferrals,
         };
         done.sort_by_key(|r| r.id);
         done
     }
 }
 
-/// Temperature + top-k sampling (temperature 0 = greedy).
+/// Temperature + top-k sampling. `temperature <= 0` or `top_k == 1` is
+/// greedy; `top_k == 0` means no truncation (sample the full vocabulary),
+/// per the usual serving convention — see the contract on [`Request`].
 pub fn sample(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> u16 {
-    if temperature <= 0.0 || top_k <= 1 {
+    if temperature <= 0.0 || top_k == 1 {
         let mut best = 0usize;
         let mut best_v = f32::NEG_INFINITY;
         for (i, &v) in logits.iter().enumerate() {
@@ -259,8 +382,8 @@ pub fn sample(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> 
         }
         return best as u16;
     }
-    // Top-k filter.
-    let k = top_k.min(logits.len());
+    // Top-k filter (0 = keep everything).
+    let k = if top_k == 0 { logits.len() } else { top_k.min(logits.len()) };
     let mut idx: Vec<usize> = (0..logits.len()).collect();
     idx.sort_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
     idx.truncate(k);
@@ -281,10 +404,14 @@ mod tests {
     use crate::util::quickcheck::check;
 
     fn tiny_server(max_batch: usize) -> Server {
-        let cfg = family_config("l2", "xs");
+        tiny_server_cfg(ServerConfig { max_batch, ..Default::default() })
+    }
+
+    fn tiny_server_cfg(cfg: ServerConfig) -> Server {
+        let mcfg = family_config("l2", "xs");
         let mut rng = Rng::new(0);
-        let params = ModelParams::init(&cfg, &mut rng);
-        Server::new(dense_decode_model(&params), ServerConfig { max_batch, seed: 0 })
+        let params = ModelParams::init(&mcfg, &mut rng);
+        Server::new(dense_decode_model(&params), cfg)
     }
 
     #[test]
@@ -340,7 +467,8 @@ mod tests {
             let reqs: Vec<Request> = (0..n_reqs)
                 .map(|i| {
                     let plen = g.int(1, 6);
-                    let prompt: Vec<u16> = (0..plen).map(|j| ((i * 13 + j * 7) % 250) as u16).collect();
+                    let prompt: Vec<u16> =
+                        (0..plen).map(|j| ((i * 13 + j * 7) % 250) as u16).collect();
                     Request::greedy(i as u64, prompt, g.int(1, 6))
                 })
                 .collect();
@@ -358,6 +486,150 @@ mod tests {
             let expect_tokens: usize = want.iter().map(|(_, m)| m).sum();
             assert_eq!(srv.metrics.total_tokens, expect_tokens);
         });
+    }
+
+    #[test]
+    fn greedy_outputs_invariant_across_batch_and_chunk() {
+        // Batching width and prefill chunking are scheduling choices — they
+        // must never change what any request generates (byte-identical
+        // tokens, the chunked-prefill acceptance bar).
+        let prompts: Vec<Vec<u16>> = vec![
+            vec![3],
+            (0..5).map(|j| (j * 11 % 250) as u16).collect(),
+            (0..17).map(|j| (j * 7 + 1) as u16 % 250).collect(),
+            vec![9, 9, 9],
+            (0..12).map(|j| (j * 3 + 5) as u16 % 250).collect(),
+        ];
+        let mk_reqs = || -> Vec<Request> {
+            prompts
+                .iter()
+                .enumerate()
+                .map(|(i, p)| Request::greedy(i as u64, p.clone(), 6))
+                .collect()
+        };
+        let mut reference = tiny_server_cfg(ServerConfig {
+            max_batch: 1,
+            prefill_chunk: 1,
+            ..Default::default()
+        });
+        let want: Vec<Vec<u16>> =
+            reference.run(mk_reqs()).into_iter().map(|r| r.tokens).collect();
+        for (max_batch, prefill_chunk) in [(1, 5), (2, 4), (8, 1), (8, 3), (8, 8)] {
+            let mut srv = tiny_server_cfg(ServerConfig {
+                max_batch,
+                prefill_chunk,
+                ..Default::default()
+            });
+            let got = srv.run(mk_reqs());
+            for (r, w) in got.iter().zip(want.iter()) {
+                assert_eq!(
+                    &r.tokens, w,
+                    "request {} diverged at max_batch={max_batch} chunk={prefill_chunk}",
+                    r.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_reduces_prefill_ticks_by_chunk_factor() {
+        let prompt: Vec<u16> = (0..24).map(|i| (i * 5 % 250) as u16).collect();
+        let mut chunked = tiny_server_cfg(ServerConfig {
+            max_batch: 1,
+            prefill_chunk: 8,
+            ..Default::default()
+        });
+        let got = chunked.run(vec![Request::greedy(0, prompt.clone(), 5)]);
+        let mut single = tiny_server_cfg(ServerConfig {
+            max_batch: 1,
+            prefill_chunk: 1,
+            ..Default::default()
+        });
+        let want = single.run(vec![Request::greedy(0, prompt.clone(), 5)]);
+        assert_eq!(got[0].tokens, want[0].tokens, "chunking changed the output");
+        assert_eq!(chunked.metrics.prefill_tokens, prompt.len());
+        assert_eq!(single.metrics.prefill_tokens, prompt.len());
+        assert_eq!(chunked.metrics.prefill_ticks, 3);
+        assert_eq!(single.metrics.prefill_ticks, 24);
+        assert!(
+            single.metrics.prefill_ticks >= 8 * chunked.metrics.prefill_ticks,
+            "chunked prefill must cut ticks by at least the chunk factor"
+        );
+    }
+
+    #[test]
+    fn short_prompts_use_far_less_kv_than_full_reservation() {
+        // The paged-pool acceptance bar: actual peak KV bytes on a
+        // short-prompt workload sit measurably below the old
+        // max_batch × max_seq up-front reservation.
+        let mut srv = tiny_server(4);
+        let reqs: Vec<Request> =
+            (0..4).map(|i| Request::greedy(i, vec![(1 + i) as u16; 4], 4)).collect();
+        srv.run(reqs);
+        let mcfg = family_config("l2", "xs");
+        let page_bytes =
+            crate::nn::decode::KvCache::page_floats_for(&mcfg, srv.cfg.page_size)
+                * std::mem::size_of::<f32>();
+        let full_reservation_bytes =
+            srv.cfg.max_batch * mcfg.max_seq.div_ceil(srv.cfg.page_size) * page_bytes;
+        // 4 + 4 positions fit in one 32-position page per slot.
+        assert!(srv.metrics.peak_kv_bytes > 0);
+        assert!(
+            srv.metrics.peak_kv_bytes <= 4 * page_bytes,
+            "peak {} exceeds one page per short request",
+            srv.metrics.peak_kv_bytes
+        );
+        assert!(
+            srv.metrics.peak_kv_bytes * 4 <= full_reservation_bytes,
+            "paged pool should be well under the {} byte full reservation (got {})",
+            full_reservation_bytes,
+            srv.metrics.peak_kv_bytes
+        );
+    }
+
+    #[test]
+    fn pool_exhaustion_defers_requests_until_pages_free() {
+        // Budget of 4 pages (the clamp minimum: one full sequence). Each
+        // request needs 2 pages (40 + 8 positions), so only two run
+        // concurrently even though max_batch = 4 — the rest defer and then
+        // complete once reclamation frees pages. Nothing is dropped.
+        let mut srv = tiny_server_cfg(ServerConfig {
+            max_batch: 4,
+            kv_pages: Some(4),
+            ..Default::default()
+        });
+        let reqs: Vec<Request> = (0..5)
+            .map(|i| {
+                let prompt = (0..40).map(|j| ((i as usize * 7 + j) % 250) as u16).collect();
+                Request::greedy(i, prompt, 8)
+            })
+            .collect();
+        let resps = srv.run(reqs);
+        assert_eq!(resps.len(), 5);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tokens.len(), 8, "deferred request {i} must still complete");
+        }
+        assert!(srv.metrics.admission_deferrals > 0, "expected admission pressure");
+        assert!(srv.metrics.peak_active_slots <= 2, "2-page requests on a 4-page pool");
+        let mcfg = family_config("l2", "xs");
+        let page_bytes =
+            crate::nn::decode::KvCache::page_floats_for(&mcfg, srv.cfg.page_size)
+                * std::mem::size_of::<f32>();
+        assert!(srv.metrics.peak_kv_bytes <= 4 * page_bytes, "budget exceeded");
+    }
+
+    #[test]
+    fn prompt_at_exactly_max_seq_minus_one_completes() {
+        let mut srv = tiny_server(1);
+        let max_seq = srv.model.cfg.max_seq;
+        let prompt: Vec<u16> = (0..max_seq - 1).map(|i| (i % 250) as u16).collect();
+        let resps = srv.run(vec![Request::greedy(0, prompt, 5)]);
+        assert_eq!(resps.len(), 1);
+        // One position left: exactly one token, then the capacity check
+        // finishes the request.
+        assert_eq!(resps[0].tokens.len(), 1);
+        assert_eq!(srv.metrics.prefill_tokens, max_seq - 1);
     }
 
     #[test]
@@ -380,6 +652,20 @@ mod tests {
             }
         }
         assert!(saw_other);
+        // top_k == 0 means "full vocabulary", not greedy: at high
+        // temperature it must reach the low-logit tokens too.
+        let mut saw_low = false;
+        for _ in 0..500 {
+            let t = sample(&logits, 50.0, 0, &mut rng);
+            if t == 0 || t == 2 {
+                saw_low = true;
+            }
+        }
+        assert!(saw_low, "top_k == 0 fell into the greedy branch");
+        // ...while top_k == 1 stays greedy at any temperature.
+        for _ in 0..20 {
+            assert_eq!(sample(&logits, 50.0, 1, &mut rng), 1);
+        }
     }
 
     #[test]

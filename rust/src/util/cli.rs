@@ -59,6 +59,13 @@ impl Args {
             .unwrap_or(default)
     }
 
+    /// Like [`Args::get_usize`] but with "absent" as a meaningful state
+    /// (e.g. `--kv-pages` where absence means "size for full reservation").
+    pub fn get_usize_opt(&self, name: &str) -> Option<usize> {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))

@@ -41,13 +41,39 @@ fn packed_and_naive_engines_generate_identical_greedy_output() {
     let prompt: Vec<u16> = vec![5, 10, 15, 20];
     let mut out = Vec::new();
     for engine in [Engine::Packed, Engine::NaiveUnpack, Engine::Dense] {
-        let mut server =
-            Server::new(qm.to_decode_model(engine), ServerConfig { max_batch: 1, seed: 0 });
+        let mut server = Server::new(
+            qm.to_decode_model(engine),
+            ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
+        );
         let resp = server.run(vec![Request::greedy(0, prompt.clone(), 12)]);
         out.push(resp[0].tokens.clone());
     }
     assert_eq!(out[0], out[1], "packed vs naive-unpack");
     assert_eq!(out[0], out[2], "packed vs dense(materialized)");
+}
+
+#[test]
+fn chunked_prefill_is_byte_identical_on_the_packed_engine() {
+    // The acceptance bar for chunked prefill, on the real packed kernels
+    // (multi-token packed GEMM + chunk-wide byte LUT): any chunk size must
+    // generate exactly the tokens of the one-token-per-tick path, while
+    // spending ceil(prompt / chunk) prefill ticks.
+    let qm = quant_model();
+    let prompt: Vec<u16> = (0..33).map(|i| ((i * 11 + 3) % 250) as u16).collect();
+    let mut want: Option<Vec<u16>> = None;
+    for chunk in [1usize, 4, 8, 33] {
+        let mut server = Server::new(
+            qm.to_decode_model(Engine::Packed),
+            ServerConfig { max_batch: 1, seed: 0, prefill_chunk: chunk, ..Default::default() },
+        );
+        let resp = server.run(vec![Request::greedy(0, prompt.clone(), 10)]);
+        assert_eq!(server.metrics.prefill_ticks, prompt.len().div_ceil(chunk));
+        assert_eq!(server.metrics.prefill_tokens, prompt.len());
+        match &want {
+            None => want = Some(resp[0].tokens.clone()),
+            Some(w) => assert_eq!(&resp[0].tokens, w, "chunk={chunk} diverged"),
+        }
+    }
 }
 
 #[test]
@@ -71,7 +97,7 @@ fn property_continuous_batching_equals_isolated_runs() {
             .map(|r| {
                 let mut s = Server::new(
                     qm.to_decode_model(Engine::Packed),
-                    ServerConfig { max_batch: 1, seed: 0 },
+                    ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
                 );
                 s.run(vec![r.clone()])[0].tokens.clone()
             })
@@ -79,7 +105,7 @@ fn property_continuous_batching_equals_isolated_runs() {
         // Batched.
         let mut s = Server::new(
             qm.to_decode_model(Engine::Packed),
-            ServerConfig { max_batch: 3, seed: 0 },
+            ServerConfig { max_batch: 3, seed: 0, ..Default::default() },
         );
         let batched = s.run(reqs);
         for (i, r) in batched.iter().enumerate() {
@@ -93,8 +119,10 @@ fn kv_slots_never_leak_across_requests() {
     // Two identical requests must produce identical outputs even when a
     // third, longer request shares the batch between them.
     let qm = quant_model();
-    let mut server =
-        Server::new(qm.to_decode_model(Engine::Packed), ServerConfig { max_batch: 2, seed: 0 });
+    let mut server = Server::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 2, seed: 0, ..Default::default() },
+    );
     let same = vec![7u16, 8, 9];
     let reqs = vec![
         Request::greedy(0, same.clone(), 6),
@@ -110,12 +138,13 @@ fn sampled_generation_is_seed_deterministic() {
     let qm = quant_model();
     let run = |seed: u64| -> Vec<u16> {
         let mut server =
-            Server::new(qm.to_decode_model(Engine::Packed), ServerConfig { max_batch: 1, seed });
-        server
-            .run(vec![Request { id: 0, prompt: vec![1, 2, 3], max_new: 10, temperature: 0.9, top_k: 16 }])
-            [0]
-        .tokens
-        .clone()
+            Server::new(
+                qm.to_decode_model(Engine::Packed),
+                ServerConfig { max_batch: 1, seed, ..Default::default() },
+            );
+        let req =
+            Request { id: 0, prompt: vec![1, 2, 3], max_new: 10, temperature: 0.9, top_k: 16 };
+        server.run(vec![req])[0].tokens.clone()
     };
     assert_eq!(run(11), run(11));
     assert_ne!(run(11), run(12), "different seeds should explore");
