@@ -73,12 +73,11 @@ fn main() {
         let reqs: Vec<Request> = prompts
             .iter()
             .enumerate()
-            .map(|(i, p)| Request {
-                id: i as u64,
-                prompt: nanoquant::data::tokenize(p),
-                max_new: 24,
-                temperature: 0.7,
-                top_k: 20,
+            .map(|(i, p)| {
+                Request::new(i as u64, nanoquant::data::tokenize(p))
+                    .max_new(24)
+                    .temperature(0.7)
+                    .top_k(20)
             })
             .collect();
         let resps = server.run(reqs);

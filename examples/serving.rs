@@ -1,6 +1,8 @@
-//! Serving demo: continuous batching over mixed-length requests, comparing
-//! the dense engine against the NanoQuant packed engine, plus the device
-//! cost model's view of the paper's consumer-GPU headline claim.
+//! Serving demo: the event-driven engine — token streaming, mid-flight
+//! submission, deferral under a tight KV budget, and cancellation — on the
+//! NanoQuant packed kernels, then an offline dense-vs-packed throughput
+//! comparison and the device cost model's view of the paper's consumer-GPU
+//! headline claim.
 //!
 //!     cargo run --release --example serving
 
@@ -10,7 +12,7 @@ use nanoquant::nn::model::{LayerKind, ModelParams};
 use nanoquant::nn::LayerId;
 use nanoquant::quant::{rank_for_bpw, Engine, LatentFactors, QuantModel};
 use nanoquant::serve::device::{estimate_decode, RTX_3050};
-use nanoquant::serve::{Request, Server, ServerConfig};
+use nanoquant::serve::{Engine as ServeEngine, Event, Request, Server, ServerConfig};
 use nanoquant::tensor::Tensor;
 use nanoquant::util::rng::Rng;
 
@@ -39,6 +41,71 @@ fn main() {
         qm.freeze_block(bi);
     }
 
+    // ---- 1. The event loop: four slots but only a 4-page KV budget, three
+    // 2-page requests (the third defers on pages, not slots), one more
+    // submitted mid-flight, and a cancellation once request 1 is decoding.
+    // Tokens stream per tick; the timeline below is the whole serve-side
+    // API surface.
+    println!("== event-driven engine (NanoQuant packed) ==");
+    let mut engine = ServeEngine::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 4, kv_pages: Some(4), seed: 0, ..Default::default() },
+    );
+    let mk_prompt = |i: u64| -> Vec<u16> {
+        (0..40).map(|j| ((i as usize * 31 + j * 7) % 250) as u16).collect()
+    };
+    for i in 0..3 {
+        engine.submit(Request::greedy(i, mk_prompt(i), 12));
+    }
+    let mut step = 0usize;
+    let mut streamed = vec![0usize; 8];
+    let mut late_submitted = false;
+    let mut cancel_sent = false;
+    while !engine.is_idle() {
+        for ev in engine.step() {
+            match ev {
+                Event::Started { id } => println!("  tick {step:>3}  [{id}] started"),
+                Event::Deferred { id } => {
+                    println!("  tick {step:>3}  [{id}] deferred (KV pool full; stays queued)")
+                }
+                Event::Token { id, token } => {
+                    streamed[id as usize] += 1;
+                    if streamed[id as usize] == 1 {
+                        println!("  tick {step:>3}  [{id}] first token {token} (TTFT observable)");
+                    }
+                }
+                Event::Finished { response, reason } => println!(
+                    "  tick {step:>3}  [{}] finished {reason:?}: {} tokens, queue {:.1} ms, ttft {:.1} ms",
+                    response.id,
+                    response.tokens.len(),
+                    response.queue_s * 1e3,
+                    response.ttft_s * 1e3,
+                ),
+            }
+        }
+        step += 1;
+        if !late_submitted && step == 4 {
+            late_submitted = true;
+            println!("  tick {step:>3}  ---- submitting request 3 mid-flight ----");
+            engine.submit(Request::greedy(3, mk_prompt(3), 12));
+        }
+        if !cancel_sent && streamed[1] >= 2 {
+            cancel_sent = true;
+            println!("  tick {step:>3}  ---- cancelling request 1 mid-decode ----");
+            engine.cancel(1);
+        }
+    }
+    let m = engine.snapshot();
+    println!(
+        "  engine: {:.1} tok/s, {} deferrals, {} cancellations, peak KV {:.0} KB\n",
+        m.tokens_per_s,
+        m.admission_deferrals,
+        m.cancellations,
+        m.peak_kv_bytes as f64 / 1e3,
+    );
+
+    // ---- 2. Offline batch comparison through the Server compatibility
+    // loop (same engine underneath).
     let mk_requests = || -> Vec<Request> {
         (0..8)
             .map(|i| {

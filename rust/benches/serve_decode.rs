@@ -9,7 +9,7 @@ use nanoquant::nn::family_config;
 use nanoquant::nn::model::{LayerKind, ModelParams};
 use nanoquant::nn::LayerId;
 use nanoquant::quant::{rank_for_bpw, Engine, LatentFactors, QuantModel};
-use nanoquant::serve::{Request, Server, ServerConfig};
+use nanoquant::serve::{Engine as ServeEngine, Event, Request, Server, ServerConfig};
 use nanoquant::tensor::Tensor;
 use nanoquant::util::json::{write_json, Json};
 use nanoquant::util::rng::Rng;
@@ -109,6 +109,46 @@ fn main() {
         );
     }
     results.insert("prefill_ttft", prefill_results);
+
+    // Event-engine streaming loop: the same batch-4 packed workload driven
+    // through submit/step with every event drained — its tok/s vs the
+    // `Server::run` shim above bounds the event-plumbing overhead (the
+    // compute per tick is identical by construction).
+    {
+        let mut times = Vec::new();
+        for run in 0..4 {
+            let mut engine = ServeEngine::new(
+                qm.to_decode_model(Engine::Packed),
+                ServerConfig { max_batch: 4, seed: 0, ..Default::default() },
+            );
+            for i in 0..4u64 {
+                engine.submit(Request::greedy(i, vec![(i * 3 % 250) as u16; 8], MAX_NEW));
+            }
+            let mut tokens = 0usize;
+            while !engine.is_idle() {
+                for ev in engine.step() {
+                    if matches!(ev, Event::Token { .. }) {
+                        tokens += 1;
+                    }
+                }
+            }
+            assert_eq!(tokens, 4 * MAX_NEW);
+            if run > 0 {
+                times.push(engine.snapshot().wall_s);
+            }
+        }
+        let st = stats_from("serve packed engine-stream batch4", &times);
+        let tok_s = (4 * MAX_NEW) as f64 / st.mean_s;
+        println!("{st}   [{tok_s:.1} tok/s]");
+        results.insert(
+            "packed/engine-stream-batch4",
+            Json::obj()
+                .set("tok_s", tok_s)
+                .set("mean_wall_s", st.mean_s)
+                .set("min_wall_s", st.min_s)
+                .set("p50_wall_s", st.p50_s),
+        );
+    }
 
     let doc = Json::obj()
         .set("bench", "serve_decode")

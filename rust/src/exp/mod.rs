@@ -63,6 +63,7 @@ pub fn run(id: &str, ctx: &Ctx) {
         "fig4" | "fig5" | "fig4_5" => serving::fig4_5(ctx),
         "fig7" => serving::fig7(ctx),
         "table15" => serving::table15(ctx),
+        "streaming" => serving::streaming(ctx),
         "fig10" | "fig11" | "fig12" | "fig13" | "fig10_13" => kernels::fig10_13(ctx),
         "table13" | "table14" | "table13_14" => sizes::table13_14(ctx),
         "all" => {
@@ -70,7 +71,7 @@ pub fn run(id: &str, ctx: &Ctx) {
             for id in [
                 "table13_14", "fig10_13", "table2", "fig1", "fig6", "table3", "table5",
                 "table6", "table9", "table10", "fig8", "fig9", "table4", "table7", "table8",
-                "table12", "fig4_5", "fig7", "table15",
+                "table12", "fig4_5", "fig7", "table15", "streaming",
             ] {
                 eprintln!("\n=== exp {id} ===");
                 run(id, ctx);

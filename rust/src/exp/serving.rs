@@ -12,7 +12,7 @@ use super::Ctx;
 use crate::quant::bpw::model_specs;
 use crate::quant::Engine;
 use crate::serve::device::{estimate_decode, H100, RTX_3050};
-use crate::serve::{Request, Server, ServerConfig};
+use crate::serve::{Engine as ServeEngine, Event, FinishReason, Request, Server, ServerConfig};
 use crate::util::json::Json;
 use crate::util::tables::Table;
 
@@ -211,13 +211,10 @@ pub fn table15(ctx: &Ctx) {
     let gen = |dm: crate::nn::decode::DecodeModel| -> String {
         let mut server =
             Server::new(dm, ServerConfig { max_batch: 1, seed: ctx.seed, ..Default::default() });
-        let reqs = vec![Request {
-            id: 0,
-            prompt: crate::data::tokenize(prompt_text),
-            max_new: 48,
-            temperature: 0.8,
-            top_k: 32,
-        }];
+        let reqs = vec![Request::new(0, crate::data::tokenize(prompt_text))
+            .max_new(48)
+            .temperature(0.8)
+            .top_k(32)];
         server.run(reqs)[0].text.clone()
     };
     let teacher_dm = crate::nn::decode::dense_decode_model(&p.teacher);
@@ -231,4 +228,177 @@ pub fn table15(ctx: &Ctx) {
         raw.insert(&format!("bpw{bpw}"), text);
     }
     ctx.save("table15", &table, raw);
+}
+
+// ---------------------------------------------------------------------------
+// Streaming / online / cancellation workloads — the event-engine axes.
+// No direct paper analogue: these measure what the offline batch API could
+// not even express (externally observable TTFT, mid-flight arrival parity,
+// page reclamation on cancel) on the real packed engine.
+// ---------------------------------------------------------------------------
+
+pub fn streaming(ctx: &Ctx) {
+    let size = if ctx.quick { "xs" } else { "s" };
+    let p = prepare(ctx, "l2", size);
+    let (qm, _, _) = nanoquant_run(ctx, &p, 1.0);
+    let mut table = Table::new(
+        "Streaming serving workloads — event-driven engine on the packed kernels (token streaming, online arrival, cancellation)",
+        &["Scenario", "Metric", "Value"],
+    );
+    let mut raw = Json::obj();
+
+    // -- Token streaming: the first Token event lands strictly before the
+    // request finishes, making TTFT externally observable.
+    let mut engine = ServeEngine::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
+    );
+    let prompt: Vec<u16> = (0..48).map(|i| (i * 5 % 250) as u16).collect();
+    engine.submit(Request::greedy(0, prompt, 16));
+    let (mut first_token_step, mut finish_step) = (None::<usize>, 0usize);
+    let mut ttft_s = 0.0f64;
+    let mut step = 0usize;
+    while !engine.is_idle() {
+        for ev in engine.step() {
+            match ev {
+                Event::Token { .. } if first_token_step.is_none() => {
+                    first_token_step = Some(step);
+                }
+                Event::Finished { response, .. } => {
+                    finish_step = step;
+                    ttft_s = response.ttft_s;
+                }
+                _ => {}
+            }
+        }
+        step += 1;
+    }
+    let m = engine.snapshot();
+    let first = first_token_step.expect("no token streamed");
+    table.row(vec![
+        "stream".into(),
+        "first-token step / finish step".into(),
+        format!("{first} / {finish_step}"),
+    ]);
+    table.row(vec!["stream".into(), "ttft (s)".into(), format!("{ttft_s:.4}")]);
+    table.row(vec![
+        "stream".into(),
+        "decode throughput (tok/s)".into(),
+        format!("{:.1}", m.tokens_per_s),
+    ]);
+    raw.insert(
+        "stream",
+        Json::obj()
+            .set("first_token_step", first)
+            .set("finish_step", finish_step)
+            .set("ttft_s", ttft_s)
+            .set("tok_s", m.tokens_per_s),
+    );
+
+    // -- Online arrival: a request submitted mid-flight must generate
+    // exactly what it would have generated submitted up front.
+    let pa: Vec<u16> = (0..12).map(|i| (i * 13 % 250) as u16).collect();
+    let pb: Vec<u16> = (0..7).map(|i| (i * 17 + 2) as u16 % 250).collect();
+    let mut offline = Server::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 2, seed: 0, ..Default::default() },
+    );
+    let want: Vec<Vec<u16>> = offline
+        .run(vec![Request::greedy(0, pa.clone(), 8), Request::greedy(1, pb.clone(), 8)])
+        .into_iter()
+        .map(|r| r.tokens)
+        .collect();
+    let mut engine = ServeEngine::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 2, seed: 0, ..Default::default() },
+    );
+    engine.submit(Request::greedy(0, pa, 8));
+    for _ in 0..3 {
+        engine.step();
+    }
+    engine.submit(Request::greedy(1, pb, 8));
+    let mut got: Vec<(u64, Vec<u16>)> = Vec::new();
+    while !engine.is_idle() {
+        for ev in engine.step() {
+            if let Event::Finished { response, .. } = ev {
+                got.push((response.id, response.tokens));
+            }
+        }
+    }
+    got.sort_by_key(|(id, _)| *id);
+    let online_ok = got.len() == 2 && got[0].1 == want[0] && got[1].1 == want[1];
+    assert!(online_ok, "mid-flight submission changed the output");
+    table.row(vec![
+        "online-arrival".into(),
+        "mid-flight tokens == up-front tokens".into(),
+        format!("{online_ok}"),
+    ]);
+    raw.insert("online_arrival_ok", online_ok);
+
+    // -- Cancellation: cancel one of three page-hungry requests mid-decode;
+    // its pages must come back and the deferred request must complete.
+    let mut engine = ServeEngine::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 4, seed: 0, kv_pages: Some(4), ..Default::default() },
+    );
+    let total_pages = engine.pool().total_pages();
+    for i in 0..3u64 {
+        let prompt: Vec<u16> = (0..40).map(|j| ((i as usize * 7 + j) % 250) as u16).collect();
+        engine.submit(Request::greedy(i, prompt, 8));
+    }
+    let mut deferred_seen = false;
+    let mut cancelled_at: Option<usize> = None;
+    let mut finished: Vec<(u64, usize, FinishReason)> = Vec::new();
+    let mut step = 0usize;
+    while !engine.is_idle() {
+        let events = engine.step();
+        for ev in &events {
+            if matches!(ev, Event::Deferred { .. }) {
+                deferred_seen = true;
+            }
+        }
+        if cancelled_at.is_none()
+            && events.iter().any(|e| matches!(e, Event::Token { id: 0, .. }))
+        {
+            engine.cancel(0);
+            cancelled_at = Some(step);
+        }
+        for ev in events {
+            if let Event::Finished { response, reason } = ev {
+                finished.push((response.id, response.tokens.len(), reason));
+            }
+        }
+        step += 1;
+    }
+    let pool_restored =
+        engine.pool().in_use_pages() == 0 && engine.pool().unreserved_pages() == total_pages;
+    let cancelled = finished.iter().any(|&(id, _, r)| id == 0 && r == FinishReason::Cancelled);
+    let survivors_ok = finished
+        .iter()
+        .filter(|&&(id, _, _)| id != 0)
+        .all(|&(_, n, r)| n == 8 && r == FinishReason::MaxNew);
+    assert!(cancelled && survivors_ok && pool_restored, "cancellation workload failed");
+    table.row(vec![
+        "cancel".into(),
+        "deferral observed / pages restored".into(),
+        format!("{deferred_seen} / {pool_restored}"),
+    ]);
+    table.row(vec![
+        "cancel".into(),
+        "cancelled mid-decode at step".into(),
+        format!("{}", cancelled_at.unwrap_or(0)),
+    ]);
+    table.row(vec![
+        "cancel".into(),
+        "survivors completed (tokens)".into(),
+        "8 / 8".into(),
+    ]);
+    raw.insert(
+        "cancel",
+        Json::obj()
+            .set("deferred_seen", deferred_seen)
+            .set("pool_restored", pool_restored)
+            .set("cancellations", engine.snapshot().cancellations),
+    );
+    ctx.save("streaming", &table, raw);
 }

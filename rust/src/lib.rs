@@ -8,9 +8,10 @@
 //!   quantization pipeline (robust Hessian preconditioning, LB-ADMM latent
 //!   binary factorization, magnitude balancing, STE block refinement,
 //!   scale-only KL model reconstruction), every baseline quantizer the paper
-//!   compares against, a serving runtime with a dynamic batcher and KV-cache
-//!   manager, and the experiment harness that regenerates every table and
-//!   figure of the paper.
+//!   compares against, an event-driven serving runtime (online submission,
+//!   token streaming, cancellation, continuous batching over a paged
+//!   KV-cache pool — see [`serve::Engine`]), and the experiment harness that
+//!   regenerates every table and figure of the paper.
 //! - **Layer 2 (python/compile/model.py)** — the JAX transformer graphs,
 //!   AOT-lowered once to HLO text and executed from Rust via PJRT.
 //! - **Layer 1 (python/compile/kernels/)** — Pallas packed binary low-rank

@@ -5,7 +5,7 @@
 //!   train   --family --size     train one teacher
 //!   quantize --family --size --bpw ...   run Algorithm 1, save checkpoint stats
 //!   eval    --family --size [--bpw]      perplexity + zero-shot
-//!   serve   --family --size --engine     demo serving run with metrics
+//!   serve   --family --size [--stream] [--stop-tokens a,b]   event-loop serving demo
 //!   exp <id>                    regenerate a paper table/figure (or `all`)
 //!   artifacts-check             load every AOT artifact via PJRT
 //!   size    --bpw               Appendix-F model-size calculator
@@ -14,7 +14,7 @@ use nanoquant::data::{sample_sequences, CorpusKind};
 use nanoquant::eval::{perplexity, zero_shot_suite};
 use nanoquant::exp::{self, zoo, Ctx};
 use nanoquant::quant::{self, InitMethod, PipelineConfig};
-use nanoquant::serve::{Request, Server, ServerConfig};
+use nanoquant::serve::{Engine, Event, Request, ServerConfig};
 use nanoquant::util::cli::Args;
 use nanoquant::util::rng::Rng;
 
@@ -104,34 +104,61 @@ fn cmd_serve(args: &Args) {
     let teacher =
         zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
     let dm = nanoquant::nn::decode::dense_decode_model(&teacher);
-    let mut server = Server::new(
+    let mut engine = Engine::new(
         dm,
         ServerConfig {
             max_batch: args.get_usize("max-batch", 4),
             prefill_chunk: args.get_usize("prefill-chunk", 8),
             kv_pages: args.get_usize_opt("kv-pages"),
+            seed: args.get_u64("seed", 0),
             ..Default::default()
         },
     );
     let prompt = args.get_or("prompt", "the robin is a kind of");
-    let reqs: Vec<Request> = (0..args.get_usize("requests", 4))
-        .map(|i| Request {
-            id: i as u64,
-            prompt: nanoquant::data::tokenize(prompt),
-            max_new: args.get_usize("max-new", 32),
-            temperature: args.get_f32("temperature", 0.8),
-            top_k: args.get_usize("top-k", 32),
-        })
-        .collect();
-    let resps = server.run(reqs);
-    for r in &resps {
-        println!("[{}] ttft={:.1}ms  {:?}", r.id, r.ttft_s * 1e3, r.text);
+    let stop_tokens = args.get_u16_list("stop-tokens");
+    for i in 0..args.get_usize("requests", 4) {
+        engine.submit(
+            Request::new(i as u64, nanoquant::data::tokenize(prompt))
+                .max_new(args.get_usize("max-new", 32))
+                .temperature(args.get_f32("temperature", 0.8))
+                .top_k(args.get_usize("top-k", 32))
+                .stop_tokens(stop_tokens.clone()),
+        );
     }
+    // Event loop: tokens stream out per tick; `--stream` shows them live,
+    // the finish line always carries reason + timings.
+    let stream = args.flag("stream");
+    while !engine.is_idle() {
+        for event in engine.step() {
+            match event {
+                Event::Started { id } => {
+                    if stream {
+                        println!("[{id}] started");
+                    }
+                }
+                Event::Deferred { id } => println!("[{id}] deferred (KV pool full; will retry)"),
+                Event::Token { id, token } => {
+                    if stream {
+                        println!("[{id}] token {token}");
+                    }
+                }
+                Event::Finished { response: r, reason } => println!(
+                    "[{}] {reason:?} queue={:.1}ms ttft={:.1}ms decode={:.1}ms  {:?}",
+                    r.id,
+                    r.queue_s * 1e3,
+                    r.ttft_s * 1e3,
+                    r.decode_s * 1e3,
+                    r.text
+                ),
+            }
+        }
+    }
+    let m = engine.snapshot();
     println!(
         "throughput: {:.1} tok/s  peak slots: {}  weights: {:.2} MB",
-        server.metrics.tokens_per_s,
-        server.metrics.peak_active_slots,
-        server.metrics.weight_bytes as f64 / 1e6
+        m.tokens_per_s,
+        m.peak_active_slots,
+        m.weight_bytes as f64 / 1e6
     );
 }
 

@@ -490,6 +490,58 @@ pub fn prefill_chunk_into(
     }
 }
 
+/// Reference single-sequence greedy generation with stop-token support:
+/// prefill the prompt one token at a time, then decode until `max_new`
+/// tokens, a stop token, or KV capacity. A sampled stop token ends
+/// generation and is **withheld** — it never appears in the output. This
+/// loop is the semantic spec the serving engine's greedy path must match
+/// token for token (asserted in the `serve` tests); the stop check runs on
+/// the sampled token *before* it is committed, so generation can never run
+/// past a stop token.
+///
+/// Degenerate inputs mirror the serving engine's normalization: an empty
+/// prompt or `max_new == 0` returns no tokens, and a prompt longer than
+/// `max_seq - 1` is truncated to leave one position for generation.
+pub fn generate_greedy(
+    model: &DecodeModel,
+    prompt: &[u16],
+    max_new: usize,
+    stop_tokens: &[u16],
+) -> Vec<u16> {
+    let mut out = Vec::new();
+    let cap = model.cfg.max_seq.saturating_sub(1);
+    let prompt = &prompt[..prompt.len().min(cap)];
+    if prompt.is_empty() || max_new == 0 {
+        return out;
+    }
+    let mut cache = KvCache::new(&model.cfg);
+    let mut s = DecodeScratch::new(&model.cfg);
+    for &t in prompt {
+        decode_step_into(model, &mut cache, t, &mut s);
+    }
+    loop {
+        // Greedy pick: first index of the maximum, exactly as serve::sample
+        // does at temperature 0 (strict `>` keeps ties at the first max).
+        let mut tok = 0u16;
+        let mut best = f32::NEG_INFINITY;
+        for (i, &v) in s.logits().iter().enumerate() {
+            if v > best {
+                best = v;
+                tok = i as u16;
+            }
+        }
+        if stop_tokens.contains(&tok) {
+            break;
+        }
+        out.push(tok);
+        if out.len() >= max_new || cache.len + 1 >= cache.max_seq {
+            break;
+        }
+        decode_step_into(model, &mut cache, tok, &mut s);
+    }
+    out
+}
+
 /// Feed a prompt through the model (prefill), returning the final logits.
 pub fn prefill(model: &DecodeModel, cache: &mut KvCache, prompt: &[u16]) -> Vec<f32> {
     if prompt.is_empty() {
@@ -634,6 +686,36 @@ mod tests {
                 cache.pages_attached() * KvCache::page_floats_for(&cfg, page_size) * 4
             );
         }
+    }
+
+    #[test]
+    fn generate_greedy_respects_budget_and_stop_tokens() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(5);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let dm = dense_decode_model(&params);
+        let prompt: Vec<u16> = vec![7, 21, 35];
+        // No stop tokens: exactly max_new tokens, reproducible.
+        let free = generate_greedy(&dm, &prompt, 6, &[]);
+        assert_eq!(free.len(), 6);
+        assert_eq!(free, generate_greedy(&dm, &prompt, 6, &[]));
+        // Stopping on the k-th generated token truncates to k-1 tokens and
+        // withholds the stop token itself.
+        let stop = free[3];
+        let stopped = generate_greedy(&dm, &prompt, 6, &[stop]);
+        let cut = free.iter().position(|&t| t == stop).unwrap();
+        assert_eq!(stopped, free[..cut], "must cut at the first stop occurrence");
+        assert!(!stopped.contains(&stop), "stop token must be withheld");
+        // A stop set that never fires changes nothing.
+        let unused_stop = (0..cfg.vocab as u16).find(|t| !free.contains(t)).unwrap();
+        assert_eq!(generate_greedy(&dm, &prompt, 6, &[unused_stop]), free);
+        // Degenerate inputs.
+        assert!(generate_greedy(&dm, &[], 6, &[]).is_empty());
+        assert!(generate_greedy(&dm, &prompt, 0, &[]).is_empty());
+        // Overlong prompts truncate (one position left => one token), same
+        // as the serving engine's submit-time normalization.
+        let long: Vec<u16> = (0..cfg.max_seq + 9).map(|i| (i % 250) as u16).collect();
+        assert_eq!(generate_greedy(&dm, &long, 6, &[]).len(), 1);
     }
 
     #[test]

@@ -19,6 +19,11 @@
 //!    which is what `ServeMetrics::peak_kv_bytes` reports.
 //! 3. **free** — materialized buffers returned by finished sequences,
 //!    recycled without touching the allocator again.
+//!
+//! Sequences leave the pool through one door — [`KvPool::release`] — however
+//! they end (budget reached, stop token, cancellation), so a cancelled
+//! request's whole reservation is back in the budget at the same tick
+//! boundary the cancel takes effect.
 
 use crate::nn::decode::{KvCache, KvPage};
 use crate::nn::model::ModelConfig;
@@ -119,8 +124,26 @@ impl KvPool {
         self.free.extend(pages);
     }
 
+    /// Pages currently attached to a sequence's cache.
     pub fn in_use_pages(&self) -> usize {
         self.in_use
+    }
+
+    /// Pages currently promised to admitted sequences (attached or not).
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved
+    }
+
+    /// Materialized-but-idle page buffers available for recycling.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Restart peak tracking from the current occupancy (reservations and
+    /// attached pages are untouched). [`crate::serve::Engine::reset`] calls
+    /// this so each reset lifetime reports its own peak.
+    pub fn reset_stats(&mut self) {
+        self.peak_in_use = self.in_use;
     }
 
     /// Peak bytes of KV pages simultaneously attached to sequences — the
@@ -172,6 +195,28 @@ mod tests {
         assert_eq!(pool.unreserved_pages(), 0);
         pool.release(Vec::new(), 8);
         assert!(pool.try_reserve(1));
+    }
+
+    #[test]
+    fn stats_reset_and_free_list_accounting() {
+        let cfg = cfg();
+        let mut pool = KvPool::new(&cfg, 4, 16);
+        assert!(pool.try_reserve(4));
+        let a = pool.take_page();
+        let b = pool.take_page();
+        assert_eq!(pool.reserved_pages(), 4);
+        assert_eq!(pool.free_pages(), 0);
+        pool.release(vec![a, b], 4);
+        assert_eq!(pool.reserved_pages(), 0);
+        assert_eq!(pool.free_pages(), 2);
+        assert_eq!(pool.peak_bytes(), 2 * pool.page_bytes());
+        // reset_stats restarts peak tracking from current occupancy (0).
+        pool.reset_stats();
+        assert_eq!(pool.peak_bytes(), 0);
+        assert!(pool.try_reserve(1));
+        let c = pool.take_page();
+        assert_eq!(pool.peak_bytes(), pool.page_bytes());
+        pool.release(vec![c], 1);
     }
 
     #[test]

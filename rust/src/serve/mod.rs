@@ -1,16 +1,27 @@
-//! Serving coordinator: request queue, continuous (dynamic) batcher,
-//! paged KV-cache pool, chunked prefill, sampling, and metrics — the L3
-//! runtime that the paper's inference-efficiency experiments (Figs. 4–5, 7,
-//! 10–13; Tables 12, 15) run on. Works with any [`DecodeModel`] engine:
-//! dense FP32, NanoQuant packed kernels, naive-unpack, or VQ baselines.
+//! Serving runtime: an event-driven engine with online request submission,
+//! token streaming, cancellation, and finish reasons — the L3 runtime that
+//! the paper's inference-efficiency experiments (Figs. 4–5, 7, 10–13;
+//! Tables 12, 15) run on. Works with any [`DecodeModel`] engine: dense
+//! FP32, NanoQuant packed kernels, naive-unpack, or VQ baselines.
+//!
+//! The front door is [`Engine`]: [`Engine::submit`] may be called at any
+//! time (online arrivals join the same FIFO admission/deferral queue as
+//! in-flight work), [`Engine::step`] advances one scheduler tick and
+//! returns the tick's [`Event`]s — tokens are streamed as they are
+//! generated, including the first one, so TTFT is externally observable —
+//! and [`Engine::cancel`] takes effect at the next tick boundary,
+//! releasing every reserved KV page whether the request was queued,
+//! deferred, prefilling, or decoding. [`Server::run`] is a thin offline
+//! compatibility loop over the engine (submit all, step until drained,
+//! collect finishes) with byte-identical greedy outputs.
 //!
 //! Memory: slots draw fixed-size KV pages from a shared [`KvPool`] instead
 //! of reserving `max_seq` up front; admission defers queued requests whose
-//! `prompt + max_new` footprint the pool can't promise, and a finished
-//! slot's pages are reclaimed immediately. Latency: prefill consumes up to
-//! `prefill_chunk` prompt tokens per scheduler tick through the engines'
-//! multi-token path, so TTFT no longer scales with tick overhead × prompt
-//! length.
+//! `prompt + max_new` footprint the pool can't promise, and a finished or
+//! cancelled slot's pages are reclaimed at the same tick. Latency: prefill
+//! consumes up to `prefill_chunk` prompt tokens per scheduler tick through
+//! the engines' multi-token path, so TTFT no longer scales with tick
+//! overhead × prompt length.
 
 pub mod device;
 pub mod kv_pool;
@@ -26,36 +37,170 @@ use crate::util::threadpool::parallel_chunks_mut;
 use std::collections::VecDeque;
 use std::time::Instant;
 
+/// Identifier handed back by [`Engine::submit`] and carried by every
+/// [`Event`]; it is the caller-chosen [`Request::id`], echoed so call sites
+/// that build requests inline don't have to thread the id separately.
+pub type RequestId = u64;
+
+/// Token budget a [`Request::new`] request gets before `.max_new(..)` is
+/// called.
+pub const DEFAULT_MAX_NEW: usize = 64;
+
 /// A generation request.
+///
+/// Built builder-style: `Request::new(id, prompt)` is a greedy request for
+/// [`DEFAULT_MAX_NEW`] tokens; chain [`method@Request::max_new`],
+/// [`method@Request::temperature`], [`method@Request::top_k`], and
+/// [`method@Request::stop_tokens`] to configure it.
 #[derive(Clone, Debug)]
 pub struct Request {
-    pub id: u64,
+    /// Caller-chosen identifier, echoed in every [`Event`] and [`Response`].
+    pub id: RequestId,
+    /// Prompt tokens (prefilled before the first generated token).
     pub prompt: Vec<u16>,
+    /// Maximum generated tokens (generation can end earlier on a stop token
+    /// or when the KV context fills).
     pub max_new: usize,
     /// 0.0 = greedy.
     pub temperature: f32,
     /// Sampling truncation: keep the `top_k` highest-probability tokens
-    /// before sampling. `0` means no truncation (the full vocabulary);
-    /// `1` is greedy regardless of temperature.
+    /// before sampling. `0` means no truncation (the full vocabulary, as
+    /// does any `top_k >= vocab`); `1` is greedy regardless of temperature.
     pub top_k: usize,
+    /// Tokens that end generation: when the decode loop samples one of
+    /// these the request finishes with [`FinishReason::Stop`], and the stop
+    /// token itself is *not* emitted or appended to the output.
+    pub stop_tokens: Vec<u16>,
 }
 
 impl Request {
-    pub fn greedy(id: u64, prompt: Vec<u16>, max_new: usize) -> Request {
-        Request { id, prompt, max_new, temperature: 0.0, top_k: 1 }
+    /// The root of the builder chain: a request for [`DEFAULT_MAX_NEW`]
+    /// tokens, greedy by default (`temperature` 0.0), with no top-k
+    /// truncation and no stop tokens. `top_k` defaults to 0 (full vocab)
+    /// rather than 1 so that chaining `.temperature(..)` alone is enough to
+    /// switch on stochastic sampling — a `top_k` of 1 would silently pin
+    /// the request greedy regardless of temperature (see [`sample`]).
+    pub fn new(id: RequestId, prompt: Vec<u16>) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new: DEFAULT_MAX_NEW,
+            temperature: 0.0,
+            top_k: 0,
+            stop_tokens: Vec::new(),
+        }
+    }
+
+    /// Greedy request with an explicit token budget (shorthand kept for the
+    /// very common `Request::new(id, p).max_new(n)`).
+    pub fn greedy(id: RequestId, prompt: Vec<u16>, max_new: usize) -> Request {
+        Request::new(id, prompt).max_new(max_new)
+    }
+
+    /// Set the generated-token budget.
+    pub fn max_new(mut self, max_new: usize) -> Request {
+        self.max_new = max_new;
+        self
+    }
+
+    /// Set the sampling temperature (0.0 = greedy).
+    pub fn temperature(mut self, temperature: f32) -> Request {
+        self.temperature = temperature;
+        self
+    }
+
+    /// Set the top-k truncation (see the field contract on
+    /// [`field@Request::top_k`]).
+    pub fn top_k(mut self, top_k: usize) -> Request {
+        self.top_k = top_k;
+        self
+    }
+
+    /// Set the stop-token set (see the field contract on
+    /// [`field@Request::stop_tokens`]).
+    pub fn stop_tokens(mut self, stop_tokens: Vec<u16>) -> Request {
+        self.stop_tokens = stop_tokens;
+        self
     }
 }
 
-/// A completed generation.
+/// Why a request finished (carried by [`Event::Finished`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The token budget was reached — `max_new` tokens generated, the KV
+    /// context filled, or the request was degenerate (empty prompt /
+    /// `max_new == 0`) and completed with zero tokens.
+    MaxNew,
+    /// A [`field@Request::stop_tokens`] token was sampled (and withheld
+    /// from the output).
+    Stop,
+    /// The request was cancelled via [`Engine::cancel`]; the response
+    /// carries whatever tokens were generated before the cancel took
+    /// effect.
+    Cancelled,
+}
+
+/// One scheduler-tick occurrence, streamed out of [`Engine::step`].
+///
+/// Per-request ordering guarantee: `Started` (or `Deferred* → Started`)
+/// precedes every `Token`, tokens arrive in generation order one per
+/// decode tick, and `Finished` is the request's last event. Within one
+/// `step()` call the events appear in scheduler phase order: cancellations,
+/// degenerate completions, admission (`Deferred`/`Started`), then per-slot
+/// `Token` followed (on the final token) by that slot's `Finished`.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// The request was admitted into a KV slot and starts prefilling this
+    /// tick.
+    Started {
+        /// Id of the admitted request.
+        id: RequestId,
+    },
+    /// Admission was attempted but the KV pool could not promise the
+    /// request's `prompt + max_new` footprint; the request stays queued
+    /// (FIFO, never dropped) and will be retried every tick. Emitted once
+    /// per request, however many ticks it waits.
+    Deferred {
+        /// Id of the deferred request.
+        id: RequestId,
+    },
+    /// One generated token, emitted the tick it was sampled (the first one
+    /// is what makes TTFT observable externally).
+    Token {
+        /// Id of the generating request.
+        id: RequestId,
+        /// The sampled token.
+        token: u16,
+    },
+    /// The request completed; its slot and every reserved KV page were
+    /// released before this event was returned.
+    Finished {
+        /// The completed generation, including per-request timings.
+        response: Response,
+        /// Why it finished.
+        reason: FinishReason,
+    },
+}
+
+/// A completed generation (carried by [`Event::Finished`]).
 #[derive(Clone, Debug)]
 pub struct Response {
-    pub id: u64,
+    /// Id of the request this response answers.
+    pub id: RequestId,
+    /// Generated tokens (stop token excluded).
     pub tokens: Vec<u16>,
+    /// `tokens` detokenized.
     pub text: String,
-    /// Time to first token (prefill) in seconds.
+    /// Time from submission to the first streamed token, in seconds
+    /// (includes queue wait and prefill; 0.0 if no token was generated).
     pub ttft_s: f64,
-    /// Pure decode time (after prefill).
+    /// Pure decode time after the first token (0.0 if no token was
+    /// generated).
     pub decode_s: f64,
+    /// Time from submission to admission into a KV slot. For a request
+    /// cancelled while still queued this is its wait until the cancel took
+    /// effect; degenerate submissions that never queue report 0.0.
+    pub queue_s: f64,
 }
 
 /// Server configuration.
@@ -63,6 +208,8 @@ pub struct Response {
 pub struct ServerConfig {
     /// Max concurrent sequences (KV slots).
     pub max_batch: usize,
+    /// Sampling RNG seed ([`Engine::new`] and every [`Server::run`] call
+    /// seed from this, so runs are reproducible).
     pub seed: u64,
     /// Positions per KV page — the pool's allocation granule.
     pub page_size: usize,
@@ -83,22 +230,28 @@ impl Default for ServerConfig {
     }
 }
 
-/// Aggregate serving metrics for one `run` call.
+/// Aggregate serving metrics, cumulative over an [`Engine`]'s lifetime
+/// (reset only by [`Engine::reset`]); obtained via [`Engine::snapshot`].
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
-    /// Generated (decode) tokens.
+    /// Generated (decode) tokens streamed out as [`Event::Token`]
+    /// (withheld stop tokens are not counted).
     pub total_tokens: usize,
     /// Prompt tokens consumed by prefill (counted explicitly — not folded
     /// into `total_tokens`, not silently dropped).
     pub prefill_tokens: usize,
+    /// Wall-clock seconds spent inside [`Engine::step`].
     pub wall_s: f64,
     /// Decode-output throughput: `total_tokens / wall_s` (the axis the
-    /// paper's serving tables report). Prefill work is visible separately
-    /// via [`ServeMetrics::prefill_tokens`] and `throughput_tokens_per_s`.
+    /// paper's serving tables report; 0.0 when no time has been spent, so
+    /// empty or instantly-completing runs never report NaN/inf). Prefill
+    /// work is visible separately via [`ServeMetrics::prefill_tokens`] and
+    /// `throughput_tokens_per_s`.
     pub tokens_per_s: f64,
     /// End-to-end processed-token throughput:
-    /// `(total_tokens + prefill_tokens) / wall_s`.
+    /// `(total_tokens + prefill_tokens) / wall_s` (0.0 when `wall_s` is 0).
     pub throughput_tokens_per_s: f64,
+    /// Peak concurrently-active KV slots.
     pub peak_active_slots: usize,
     /// Scheduler ticks spent in prefill, summed over slots (chunked prefill
     /// divides this by the chunk factor relative to one-token-per-tick).
@@ -112,8 +265,18 @@ pub struct ServeMetrics {
     /// Requests whose admission was deferred at least once because the KV
     /// pool couldn't cover their footprint (each deferred request counts
     /// once, however many ticks it waited; deferred ≠ dropped — every
-    /// deferred request is admitted later and completes).
+    /// deferred request is admitted later unless cancelled).
     pub admission_deferrals: usize,
+    /// Requests finished with [`FinishReason::Cancelled`].
+    pub cancellations: usize,
+}
+
+/// A request waiting for admission (never dropped; head-of-line FIFO).
+struct Queued {
+    req: Request,
+    submitted: Instant,
+    /// Whether this request's one [`Event::Deferred`] has been emitted.
+    deferred: bool,
 }
 
 struct Slot {
@@ -125,7 +288,8 @@ struct Slot {
     /// which sampling reads in place (no vocab-sized copy per token).
     scratch: DecodeScratch,
     /// Pages promised to this request at admission (released in full when
-    /// the slot finishes, even if the sequence never touched them all).
+    /// the slot finishes or is cancelled, even if the sequence never
+    /// touched them all).
     reserved_pages: usize,
     generated: Vec<u16>,
     prefill_done: bool,
@@ -134,234 +298,498 @@ struct Slot {
     /// source of truth shared by the serial page-attach/accounting phase
     /// and the parallel tick.
     prefill_target: usize,
-    started: Instant,
+    submitted: Instant,
+    queue_s: f64,
     ttft_s: Option<f64>,
 }
 
-/// The serving coordinator.
-pub struct Server {
+/// The event-driven serving engine: owns the KV slots, the shared page
+/// pool, the admission queue, and lifetime-cumulative metrics.
+///
+/// State machine per request:
+///
+/// ```text
+/// submit ─→ queued ─(pool can promise footprint)─→ active(prefill) ─→ active(decode) ─→ Finished
+///              │  └─(pool can't)─→ deferred ──retry─┘                      │
+///              └────────────── cancel (any state, next tick boundary) ─────┴─→ Finished(Cancelled)
+/// ```
+///
+/// `step()` is the only method that advances time; between calls the engine
+/// is inert, so callers own the cadence (drive it from a loop, a network
+/// poller, a bench harness, ...).
+pub struct Engine {
+    /// The decode model every slot steps through.
     pub model: DecodeModel,
-    pub cfg: ServerConfig,
+    cfg: ServerConfig,
+    pool: KvPool,
+    queue: VecDeque<Queued>,
+    active: Vec<Option<Slot>>,
+    /// KV caches (page tables, detached) and decode arenas recovered from
+    /// finished requests; recycling them keeps steady-state admission
+    /// allocation-free.
+    spares: Vec<(KvCache, DecodeScratch)>,
+    rng: Rng,
+    /// Cancellations requested since the last tick boundary (applied, in
+    /// call order, at the start of the next `step()`).
+    cancels: Vec<RequestId>,
+    /// Degenerate submissions (empty prompt / `max_new == 0`) completing at
+    /// the next tick boundary without ever occupying a slot.
+    instant_done: Vec<Response>,
+    // Cumulative counters behind `snapshot()`.
+    total_tokens: usize,
+    prefill_tokens: usize,
+    prefill_ticks: usize,
+    peak_active: usize,
+    deferrals: usize,
+    cancellations: usize,
+    wall_s: f64,
+}
+
+impl Engine {
+    /// An idle engine with an empty queue and a KV pool sized per `cfg`.
+    pub fn new(model: DecodeModel, cfg: ServerConfig) -> Engine {
+        let full_reservation_pages = cfg.max_batch * model.cfg.max_seq.div_ceil(cfg.page_size);
+        let pool = KvPool::new(
+            &model.cfg,
+            cfg.page_size,
+            cfg.kv_pages.unwrap_or(full_reservation_pages),
+        );
+        let active = (0..cfg.max_batch).map(|_| None).collect();
+        let rng = Rng::new(cfg.seed);
+        Engine {
+            model,
+            pool,
+            active,
+            rng,
+            queue: VecDeque::new(),
+            spares: Vec::new(),
+            cancels: Vec::new(),
+            instant_done: Vec::new(),
+            total_tokens: 0,
+            prefill_tokens: 0,
+            prefill_ticks: 0,
+            peak_active: 0,
+            deferrals: 0,
+            cancellations: 0,
+            wall_s: 0.0,
+            cfg,
+        }
+    }
+
+    /// The configuration the engine was built with.
+    pub fn cfg(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// The shared KV page pool (read-only introspection: budget,
+    /// reservations, peak bytes).
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    /// Enqueue a request; it joins the FIFO admission queue behind any
+    /// deferred in-flight work and will produce events from subsequent
+    /// [`Engine::step`] calls. May be called at any time, including between
+    /// steps of an already-running workload.
+    ///
+    /// Degenerate requests are normalized here, exactly as the offline
+    /// server always did: a prompt longer than `max_seq - 1` is truncated
+    /// to leave one position for generation, and an empty prompt or
+    /// `max_new == 0` completes at the next tick with zero tokens
+    /// ([`FinishReason::MaxNew`]) instead of panicking in the decode loop.
+    pub fn submit(&mut self, mut req: Request) -> RequestId {
+        let id = req.id;
+        let cap = self.model.cfg.max_seq.saturating_sub(1);
+        if req.prompt.len() > cap {
+            req.prompt.truncate(cap);
+        }
+        if req.prompt.is_empty() || req.max_new == 0 {
+            self.instant_done.push(Response {
+                id,
+                tokens: Vec::new(),
+                text: String::new(),
+                ttft_s: 0.0,
+                decode_s: 0.0,
+                queue_s: 0.0,
+            });
+        } else {
+            self.queue.push_back(Queued { req, submitted: Instant::now(), deferred: false });
+        }
+        id
+    }
+
+    /// Request cancellation of `id`. Takes effect at the next tick
+    /// boundary (the start of the next [`Engine::step`] call), whatever
+    /// state the request is in — queued, deferred, prefilling, or decoding
+    /// — releasing its slot and every reserved KV page and emitting
+    /// [`Event::Finished`] with [`FinishReason::Cancelled`] and the tokens
+    /// generated so far.
+    ///
+    /// Each accepted `cancel` call consumes exactly one in-flight instance
+    /// of `id`, oldest first, so duplicated live ids can each be cancelled
+    /// by their own call; calls beyond the number of instances currently in
+    /// flight (unknown ids, already-finished ids, or surplus duplicates)
+    /// are a no-op *at call time*, so a stale cancel can never hit a later
+    /// request that reuses the id. Degenerate submissions (empty prompt /
+    /// `max_new == 0`) are already complete and not cancellable — they emit
+    /// their [`FinishReason::MaxNew`] finish at the next tick regardless.
+    pub fn cancel(&mut self, id: RequestId) {
+        let in_flight = self.queue.iter().filter(|q| q.req.id == id).count()
+            + self.active.iter().flatten().filter(|s| s.req.id == id).count();
+        let recorded = self.cancels.iter().filter(|&&c| c == id).count();
+        if recorded < in_flight {
+            self.cancels.push(id);
+        }
+    }
+
+    /// Whether the engine has nothing queued, active, or pending
+    /// completion (new [`Engine::submit`] calls un-idle it).
+    pub fn is_idle(&self) -> bool {
+        self.in_flight() == 0
+    }
+
+    /// Requests currently queued, active, or pending completion.
+    pub fn in_flight(&self) -> usize {
+        self.queue.len()
+            + self.instant_done.len()
+            + self.active.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Cumulative metrics since construction (or the last
+    /// [`Engine::reset`]), with the throughput rates derived at call time —
+    /// and guarded: a zero-wall engine reports 0.0, not NaN/inf.
+    pub fn snapshot(&self) -> ServeMetrics {
+        let (tokens_per_s, throughput_tokens_per_s) = if self.wall_s > 0.0 {
+            (
+                self.total_tokens as f64 / self.wall_s,
+                (self.total_tokens + self.prefill_tokens) as f64 / self.wall_s,
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        ServeMetrics {
+            total_tokens: self.total_tokens,
+            prefill_tokens: self.prefill_tokens,
+            wall_s: self.wall_s,
+            tokens_per_s,
+            throughput_tokens_per_s,
+            peak_active_slots: self.peak_active,
+            prefill_ticks: self.prefill_ticks,
+            weight_bytes: self.model.weight_bytes(),
+            peak_kv_bytes: self.pool.peak_bytes(),
+            admission_deferrals: self.deferrals,
+            cancellations: self.cancellations,
+        }
+    }
+
+    /// Abandon all in-flight work (queued and active, without emitting
+    /// events), release every KV page, zero the cumulative metrics, and
+    /// re-seed the sampling RNG — the engine behaves as freshly built.
+    /// Materialized KV pages and decode arenas stay cached for reuse.
+    /// [`Server::run`] calls this so each offline batch reproduces the
+    /// legacy per-call semantics exactly.
+    pub fn reset(&mut self) {
+        for slot_opt in self.active.iter_mut() {
+            if let Some(mut slot) = slot_opt.take() {
+                let pages = slot.cache.detach_pages();
+                self.pool.release(pages, slot.reserved_pages);
+                self.spares.push((slot.cache, slot.scratch));
+            }
+        }
+        self.queue.clear();
+        self.cancels.clear();
+        self.instant_done.clear();
+        self.pool.reset_stats();
+        self.rng = Rng::new(self.cfg.seed);
+        self.total_tokens = 0;
+        self.prefill_tokens = 0;
+        self.prefill_ticks = 0;
+        self.peak_active = 0;
+        self.deferrals = 0;
+        self.cancellations = 0;
+        self.wall_s = 0.0;
+    }
+
+    /// Release a slot's pages, recycle its buffers, and build its response.
+    fn finish_slot(&mut self, mut slot: Slot) -> Response {
+        let pages = slot.cache.detach_pages();
+        self.pool.release(pages, slot.reserved_pages);
+        let generated = std::mem::take(&mut slot.generated);
+        let ttft = slot.ttft_s.unwrap_or(0.0);
+        let decode_s = if slot.ttft_s.is_some() {
+            (slot.submitted.elapsed().as_secs_f64() - ttft).max(0.0)
+        } else {
+            0.0
+        };
+        let response = Response {
+            id: slot.req.id,
+            text: detokenize(&generated),
+            tokens: generated,
+            ttft_s: ttft,
+            decode_s,
+            queue_s: slot.queue_s,
+        };
+        self.spares.push((slot.cache, slot.scratch));
+        response
+    }
+
+    /// Advance one scheduler tick and return everything that happened, in
+    /// phase order (see [`Event`]): apply pending cancellations, complete
+    /// degenerate submissions, admit queued requests into free slots
+    /// (strict FIFO with pool-reservation admission control), run the
+    /// parallel compute tick (chunked prefill or one decode token per
+    /// active slot), then sample — streaming each new token and finishing
+    /// slots that hit their budget, a stop token, or context capacity.
+    ///
+    /// Calling `step()` on an idle engine is a cheap no-op returning no
+    /// events.
+    pub fn step(&mut self) -> Vec<Event> {
+        let t0 = Instant::now();
+        let mut events = Vec::new();
+        let max_seq = self.model.cfg.max_seq;
+        let page_size = self.cfg.page_size;
+        let prefill_chunk = self.cfg.prefill_chunk.max(1);
+
+        // ---- Tick boundary: cancellations first, so a cancelled slot can
+        // be re-admitted into this very tick and a cancelled queued request
+        // never burns pool budget. Each recorded cancel consumes exactly
+        // one in-flight instance of its id, oldest first — active slot,
+        // then queue front-to-back. FIFO admission means an active instance
+        // is always older than any still-queued one, so a reused live id is
+        // resolved against the instance that existed when `cancel` was
+        // called, and a second `cancel` call reaches the newer duplicate.
+        for id in std::mem::take(&mut self.cancels) {
+            // Oldest active instance by submission time — slot index is
+            // recycling order, not age.
+            let hit = self
+                .active
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.as_ref().map(|slot| (i, slot)))
+                .filter(|(_, slot)| slot.req.id == id)
+                .min_by_key(|(_, slot)| slot.submitted)
+                .map(|(i, _)| i);
+            if let Some(si) = hit {
+                let slot = self.active[si].take().unwrap();
+                let response = self.finish_slot(slot);
+                self.cancellations += 1;
+                events.push(Event::Finished { response, reason: FinishReason::Cancelled });
+                continue;
+            }
+            if let Some(pos) = self.queue.iter().position(|q| q.req.id == id) {
+                let q = self.queue.remove(pos).unwrap();
+                self.cancellations += 1;
+                events.push(Event::Finished {
+                    response: Response {
+                        id,
+                        tokens: Vec::new(),
+                        text: String::new(),
+                        ttft_s: 0.0,
+                        decode_s: 0.0,
+                        queue_s: q.submitted.elapsed().as_secs_f64(),
+                    },
+                    reason: FinishReason::Cancelled,
+                });
+            }
+            // Consumed by an earlier duplicate cancel this tick: no-op.
+        }
+
+        // ---- Degenerate submissions complete without touching a slot.
+        for response in self.instant_done.drain(..) {
+            events.push(Event::Finished { response, reason: FinishReason::MaxNew });
+        }
+
+        // ---- Admission: fill free slots in strict FIFO order. A request
+        // is admitted only when the pool can promise its whole footprint
+        // (prompt + max_new, clamped to max_seq); otherwise it is deferred
+        // — left at the head of the queue, never dropped, and re-tried
+        // every tick. Nothing behind the head jumps it.
+        for slot in self.active.iter_mut() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some(head) = self.queue.front_mut() else { break };
+            let need = (head.req.prompt.len() + head.req.max_new).min(max_seq);
+            let pages = self.pool.pages_for(need);
+            if !self.pool.try_reserve(pages) {
+                if !head.deferred {
+                    head.deferred = true;
+                    self.deferrals += 1;
+                    events.push(Event::Deferred { id: head.req.id });
+                }
+                break;
+            }
+            let q = self.queue.pop_front().unwrap();
+            let (mut cache, scratch) = self.spares.pop().unwrap_or_else(|| {
+                (
+                    KvCache::with_page_size(&self.model.cfg, page_size),
+                    DecodeScratch::with_chunk(&self.model.cfg, prefill_chunk),
+                )
+            });
+            cache.reset();
+            events.push(Event::Started { id: q.req.id });
+            *slot = Some(Slot {
+                cache,
+                scratch,
+                reserved_pages: pages,
+                generated: Vec::with_capacity(q.req.max_new),
+                prefill_done: false,
+                prefill_cursor: 0,
+                prefill_target: 0,
+                submitted: q.submitted,
+                queue_s: q.submitted.elapsed().as_secs_f64(),
+                ttft_s: None,
+                req: q.req,
+            });
+        }
+        let n_active = self.active.iter().filter(|s| s.is_some()).count();
+        if n_active == 0 {
+            // The pool is clamped to hold one max_seq sequence, so the
+            // queue head is always admissible once every slot drains.
+            assert!(self.queue.is_empty(), "scheduler stalled with queued requests");
+            // Eventless idle polls don't accrue wall time: a caller that
+            // busy-polls between arrivals must not dilute the lifetime
+            // tokens_per_s that snapshot() reports.
+            if !events.is_empty() {
+                self.wall_s += t0.elapsed().as_secs_f64();
+            }
+            return events;
+        }
+        self.peak_active = self.peak_active.max(n_active);
+
+        // ---- Attach this tick's pages (serial: the pool is never touched
+        // inside the parallel section) and account prefill progress. Pages
+        // come out of the slot's admission-time reservation, materialized
+        // only as the sequence actually grows.
+        for slot in self.active.iter_mut().flatten() {
+            let step = if !slot.prefill_done {
+                let end = (slot.prefill_cursor + prefill_chunk).min(slot.req.prompt.len());
+                slot.prefill_target = end;
+                let step = end - slot.prefill_cursor;
+                self.prefill_tokens += step;
+                self.prefill_ticks += 1;
+                step
+            } else {
+                1
+            };
+            let need = (slot.cache.len + step).min(max_seq);
+            while slot.cache.capacity() < need {
+                slot.cache.attach_page(self.pool.take_page());
+            }
+        }
+
+        // ---- One scheduler tick: advance every active slot — one decode
+        // token, or up to `prefill_chunk` prompt tokens. ----
+        let model = &self.model;
+        parallel_chunks_mut(&mut self.active, 1, |_, slot_chunk| {
+            if let Some(slot) = slot_chunk[0].as_mut() {
+                if !slot.prefill_done {
+                    let end = slot.prefill_target;
+                    let last = end == slot.req.prompt.len();
+                    prefill_chunk_into(
+                        model,
+                        &mut slot.cache,
+                        &slot.req.prompt[slot.prefill_cursor..end],
+                        &mut slot.scratch,
+                        last,
+                    );
+                    slot.prefill_cursor = end;
+                    if last {
+                        slot.prefill_done = true;
+                    }
+                } else {
+                    let next_token = *slot.generated.last().unwrap();
+                    decode_step_into(model, &mut slot.cache, next_token, &mut slot.scratch);
+                }
+            }
+        });
+
+        // ---- Sampling + streaming + completion (serial: needs the shared
+        // RNG; slot order, so greedy outputs are reproducible) ----
+        for i in 0..self.active.len() {
+            let finished: Option<FinishReason> = {
+                let Some(slot) = self.active[i].as_mut() else { continue };
+                if !slot.prefill_done {
+                    None
+                } else {
+                    let tok = sample(
+                        slot.scratch.logits(),
+                        slot.req.temperature,
+                        slot.req.top_k,
+                        &mut self.rng,
+                    );
+                    if slot.req.stop_tokens.contains(&tok) {
+                        // The stop token ends the request and is withheld
+                        // from the stream and the response.
+                        Some(FinishReason::Stop)
+                    } else {
+                        slot.generated.push(tok);
+                        self.total_tokens += 1;
+                        if slot.ttft_s.is_none() {
+                            slot.ttft_s = Some(slot.submitted.elapsed().as_secs_f64());
+                        }
+                        events.push(Event::Token { id: slot.req.id, token: tok });
+                        if slot.generated.len() >= slot.req.max_new
+                            || slot.cache.len + 1 >= slot.cache.max_seq
+                        {
+                            Some(FinishReason::MaxNew)
+                        } else {
+                            None
+                        }
+                    }
+                }
+            };
+            if let Some(reason) = finished {
+                let slot = self.active[i].take().unwrap();
+                let response = self.finish_slot(slot);
+                events.push(Event::Finished { response, reason });
+            }
+        }
+
+        self.wall_s += t0.elapsed().as_secs_f64();
+        events
+    }
+}
+
+/// Offline batch façade over [`Engine`], kept for every call site (CLI,
+/// experiment harness, benches, tests) that wants the closed
+/// submit-everything / collect-everything shape.
+pub struct Server {
+    /// The engine the batch loop drives; reach through for streaming,
+    /// cancellation, or pool introspection.
+    pub engine: Engine,
+    /// Snapshot of the engine metrics as of the last [`Server::run`] call.
     pub metrics: ServeMetrics,
 }
 
 impl Server {
+    /// A server whose engine is freshly built from `model` and `cfg`.
     pub fn new(model: DecodeModel, cfg: ServerConfig) -> Server {
-        Server { model, cfg, metrics: ServeMetrics::default() }
+        Server { engine: Engine::new(model, cfg), metrics: ServeMetrics::default() }
     }
 
-    /// Serve a set of requests to completion with continuous batching:
-    /// requests are admitted FIFO into up to `max_batch` KV slots; each
-    /// scheduler tick advances every active slot by one token (prefill
-    /// consumes prompt tokens first); finished slots are recycled
-    /// immediately. Slots step in parallel across OS threads.
+    /// Serve a closed set of requests to completion with continuous
+    /// batching and return the responses sorted by request id.
+    ///
+    /// This is a ~15-line compatibility loop over the event engine: reset
+    /// (fresh RNG and metrics, exactly the legacy per-call semantics),
+    /// submit everything, step until drained, collect the
+    /// [`Event::Finished`] responses. Greedy outputs are byte-identical to
+    /// the pre-engine offline server.
     pub fn run(&mut self, requests: Vec<Request>) -> Vec<Response> {
-        let t0 = Instant::now();
-        let mut done: Vec<Response> = Vec::new();
-        // Normalize degenerate requests once, before scheduling:
-        // - A prompt that would overflow the KV cache panics mid-prefill;
-        //   truncate to leave one position for generation (the post-sample
-        //   capacity check then finishes the request gracefully). At
-        //   max_seq <= 1 nothing can prefill, so the prompt empties.
-        // - Empty prompt (nothing to decode from) or max_new == 0 (nothing
-        //   asked for): complete immediately with no tokens instead of
-        //   panicking / overshooting in the tick.
-        let cap = self.model.cfg.max_seq.saturating_sub(1);
-        let mut queue: VecDeque<Request> = VecDeque::with_capacity(requests.len());
-        for mut req in requests {
-            if req.prompt.len() > cap {
-                req.prompt.truncate(cap);
-            }
-            if req.prompt.is_empty() || req.max_new == 0 {
-                done.push(Response {
-                    id: req.id,
-                    tokens: Vec::new(),
-                    text: String::new(),
-                    ttft_s: 0.0,
-                    decode_s: 0.0,
-                });
-            } else {
-                queue.push_back(req);
-            }
+        self.engine.reset();
+        for req in requests {
+            self.engine.submit(req);
         }
-        let max_seq = self.model.cfg.max_seq;
-        let page_size = self.cfg.page_size;
-        let prefill_chunk = self.cfg.prefill_chunk.max(1);
-        let full_reservation_pages = self.cfg.max_batch * max_seq.div_ceil(page_size);
-        let mut pool = KvPool::new(
-            &self.model.cfg,
-            page_size,
-            self.cfg.kv_pages.unwrap_or(full_reservation_pages),
-        );
-        let mut active: Vec<Option<Slot>> = (0..self.cfg.max_batch).map(|_| None).collect();
-        let mut rng = Rng::new(self.cfg.seed);
-        let mut total_tokens = 0usize;
-        let mut prefill_tokens = 0usize;
-        let mut prefill_ticks = 0usize;
-        let mut peak_active = 0usize;
-        let mut deferrals = 0usize;
-        // Counts each deferred request once across its (many) retry ticks.
-        let mut last_deferred: Option<u64> = None;
-        // KV caches (page tables, detached) and decode arenas recovered from
-        // finished requests; recycling them keeps steady-state admission
-        // allocation-free.
-        let mut spares: Vec<(KvCache, DecodeScratch)> = Vec::new();
-
-        loop {
-            // ---- Admission: fill free slots in strict FIFO order. A
-            // request is admitted only when the pool can promise its whole
-            // footprint (prompt + max_new, clamped to max_seq); otherwise it
-            // is deferred — left at the head of the queue, never dropped,
-            // and re-tried once finished slots release pages. Nothing
-            // behind the head jumps it.
-            for slot in active.iter_mut() {
-                if slot.is_some() {
-                    continue;
-                }
-                let Some(req) = queue.front() else { break };
-                let need = (req.prompt.len() + req.max_new).min(max_seq);
-                let pages = pool.pages_for(need);
-                if !pool.try_reserve(pages) {
-                    if last_deferred != Some(req.id) {
-                        last_deferred = Some(req.id);
-                        deferrals += 1;
-                    }
-                    break;
-                }
-                let req = queue.pop_front().unwrap();
-                if last_deferred == Some(req.id) {
-                    last_deferred = None;
-                }
-                let (mut cache, scratch) = spares.pop().unwrap_or_else(|| {
-                    (
-                        KvCache::with_page_size(&self.model.cfg, page_size),
-                        DecodeScratch::with_chunk(&self.model.cfg, prefill_chunk),
-                    )
-                });
-                cache.reset();
-                *slot = Some(Slot {
-                    cache,
-                    scratch,
-                    reserved_pages: pages,
-                    generated: Vec::with_capacity(req.max_new),
-                    prefill_done: false,
-                    prefill_cursor: 0,
-                    prefill_target: 0,
-                    started: Instant::now(),
-                    ttft_s: None,
-                    req,
-                });
-            }
-            let n_active = active.iter().filter(|s| s.is_some()).count();
-            if n_active == 0 {
-                // The pool is clamped to hold one max_seq sequence, so the
-                // queue head is always admissible once every slot drains.
-                assert!(queue.is_empty(), "scheduler stalled with queued requests");
-                break;
-            }
-            peak_active = peak_active.max(n_active);
-
-            // ---- Attach this tick's pages (serial: the pool is never
-            // touched inside the parallel section) and account prefill
-            // progress. Pages come out of the slot's admission-time
-            // reservation, materialized only as the sequence actually
-            // grows.
-            for slot in active.iter_mut().flatten() {
-                let step = if !slot.prefill_done {
-                    let end = (slot.prefill_cursor + prefill_chunk).min(slot.req.prompt.len());
-                    slot.prefill_target = end;
-                    let step = end - slot.prefill_cursor;
-                    prefill_tokens += step;
-                    prefill_ticks += 1;
-                    step
-                } else {
-                    1
-                };
-                let need = (slot.cache.len + step).min(max_seq);
-                while slot.cache.capacity() < need {
-                    slot.cache.attach_page(pool.take_page());
-                }
-            }
-
-            // ---- One scheduler tick: advance every active slot — one
-            // decode token, or up to `prefill_chunk` prompt tokens. ----
-            let model = &self.model;
-            parallel_chunks_mut(&mut active, 1, |_, slot_chunk| {
-                if let Some(slot) = slot_chunk[0].as_mut() {
-                    if !slot.prefill_done {
-                        let end = slot.prefill_target;
-                        let last = end == slot.req.prompt.len();
-                        prefill_chunk_into(
-                            model,
-                            &mut slot.cache,
-                            &slot.req.prompt[slot.prefill_cursor..end],
-                            &mut slot.scratch,
-                            last,
-                        );
-                        slot.prefill_cursor = end;
-                        if last {
-                            slot.prefill_done = true;
-                            slot.ttft_s = Some(slot.started.elapsed().as_secs_f64());
-                        }
-                    } else {
-                        let next_token = *slot.generated.last().unwrap();
-                        decode_step_into(model, &mut slot.cache, next_token, &mut slot.scratch);
-                    }
-                }
-            });
-
-            // ---- Sampling + completion (serial: needs the shared RNG) ----
-            for slot_opt in active.iter_mut() {
-                let finished = {
-                    let Some(slot) = slot_opt.as_mut() else { continue };
-                    if !slot.prefill_done {
-                        false
-                    } else {
-                        let tok = sample(
-                            slot.scratch.logits(),
-                            slot.req.temperature,
-                            slot.req.top_k,
-                            &mut rng,
-                        );
-                        slot.generated.push(tok);
-                        total_tokens += 1;
-                        slot.generated.len() >= slot.req.max_new
-                            || slot.cache.len + 1 >= slot.cache.max_seq
-                    }
-                };
-                if finished {
-                    let mut slot = slot_opt.take().unwrap();
-                    // Immediate page reclamation: detached buffers go back
-                    // to the pool's free list; the reservation is released
-                    // in full.
-                    let pages = slot.cache.detach_pages();
-                    pool.release(pages, slot.reserved_pages);
-                    spares.push((slot.cache, slot.scratch));
-                    done.push(Response {
-                        id: slot.req.id,
-                        text: detokenize(&slot.generated),
-                        tokens: slot.generated,
-                        ttft_s: slot.ttft_s.unwrap_or(0.0),
-                        decode_s: slot.started.elapsed().as_secs_f64()
-                            - slot.ttft_s.unwrap_or(0.0),
-                    });
+        let mut done = Vec::new();
+        while !self.engine.is_idle() {
+            for event in self.engine.step() {
+                if let Event::Finished { response, .. } = event {
+                    done.push(response);
                 }
             }
         }
-
-        let wall = t0.elapsed().as_secs_f64();
-        self.metrics = ServeMetrics {
-            total_tokens,
-            prefill_tokens,
-            wall_s: wall,
-            tokens_per_s: total_tokens as f64 / wall.max(1e-9),
-            throughput_tokens_per_s: (total_tokens + prefill_tokens) as f64 / wall.max(1e-9),
-            peak_active_slots: peak_active,
-            prefill_ticks,
-            weight_bytes: self.model.weight_bytes(),
-            peak_kv_bytes: pool.peak_bytes(),
-            admission_deferrals: deferrals,
-        };
+        self.metrics = self.engine.snapshot();
         done.sort_by_key(|r| r.id);
         done
     }
@@ -369,7 +797,8 @@ impl Server {
 
 /// Temperature + top-k sampling. `temperature <= 0` or `top_k == 1` is
 /// greedy; `top_k == 0` means no truncation (sample the full vocabulary),
-/// per the usual serving convention — see the contract on [`Request`].
+/// per the usual serving convention, and any `top_k >= logits.len()`
+/// behaves identically to `top_k == 0` — see the contract on [`Request`].
 pub fn sample(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> u16 {
     if temperature <= 0.0 || top_k == 1 {
         let mut best = 0usize;
@@ -398,7 +827,7 @@ pub fn sample(logits: &[f32], temperature: f32, top_k: usize, rng: &mut Rng) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::decode::dense_decode_model;
+    use crate::nn::decode::{dense_decode_model, generate_greedy};
     use crate::nn::family_config;
     use crate::nn::model::ModelParams;
     use crate::util::quickcheck::check;
@@ -408,10 +837,45 @@ mod tests {
     }
 
     fn tiny_server_cfg(cfg: ServerConfig) -> Server {
+        Server::new(tiny_model(), cfg)
+    }
+
+    fn tiny_model() -> DecodeModel {
         let mcfg = family_config("l2", "xs");
         let mut rng = Rng::new(0);
         let params = ModelParams::init(&mcfg, &mut rng);
-        Server::new(dense_decode_model(&params), cfg)
+        dense_decode_model(&params)
+    }
+
+    fn tiny_engine(cfg: ServerConfig) -> Engine {
+        Engine::new(tiny_model(), cfg)
+    }
+
+    /// Drive an engine until idle, collecting every event with the step
+    /// index it arrived at.
+    fn drain(engine: &mut Engine) -> Vec<(usize, Event)> {
+        let mut out = Vec::new();
+        let mut step = 0usize;
+        while !engine.is_idle() {
+            for ev in engine.step() {
+                out.push((step, ev));
+            }
+            step += 1;
+            assert!(step < 10_000, "engine failed to drain");
+        }
+        out
+    }
+
+    fn finished_of(events: &[(usize, Event)], id: RequestId) -> (usize, Response, FinishReason) {
+        events
+            .iter()
+            .find_map(|(s, ev)| match ev {
+                Event::Finished { response, reason } if response.id == id => {
+                    Some((*s, response.clone(), *reason))
+                }
+                _ => None,
+            })
+            .unwrap_or_else(|| panic!("request {id} never finished"))
     }
 
     #[test]
@@ -567,11 +1031,11 @@ mod tests {
             (0..4).map(|i| Request::greedy(i, vec![(1 + i) as u16; 4], 4)).collect();
         srv.run(reqs);
         let mcfg = family_config("l2", "xs");
-        let page_bytes =
-            crate::nn::decode::KvCache::page_floats_for(&mcfg, srv.cfg.page_size)
-                * std::mem::size_of::<f32>();
+        let page_size = srv.engine.cfg().page_size;
+        let page_bytes = crate::nn::decode::KvCache::page_floats_for(&mcfg, page_size)
+            * std::mem::size_of::<f32>();
         let full_reservation_bytes =
-            srv.cfg.max_batch * mcfg.max_seq.div_ceil(srv.cfg.page_size) * page_bytes;
+            srv.engine.cfg().max_batch * mcfg.max_seq.div_ceil(page_size) * page_bytes;
         // 4 + 4 positions fit in one 32-position page per slot.
         assert!(srv.metrics.peak_kv_bytes > 0);
         assert!(
@@ -614,7 +1078,7 @@ mod tests {
         assert!(srv.metrics.peak_active_slots <= 2, "2-page requests on a 4-page pool");
         let mcfg = family_config("l2", "xs");
         let page_bytes =
-            crate::nn::decode::KvCache::page_floats_for(&mcfg, srv.cfg.page_size)
+            crate::nn::decode::KvCache::page_floats_for(&mcfg, srv.engine.cfg().page_size)
                 * std::mem::size_of::<f32>();
         assert!(srv.metrics.peak_kv_bytes <= 4 * page_bytes, "budget exceeded");
     }
@@ -622,7 +1086,7 @@ mod tests {
     #[test]
     fn prompt_at_exactly_max_seq_minus_one_completes() {
         let mut srv = tiny_server(1);
-        let max_seq = srv.model.cfg.max_seq;
+        let max_seq = srv.engine.model.cfg.max_seq;
         let prompt: Vec<u16> = (0..max_seq - 1).map(|i| (i % 250) as u16).collect();
         let resps = srv.run(vec![Request::greedy(0, prompt, 5)]);
         assert_eq!(resps.len(), 1);
@@ -669,6 +1133,41 @@ mod tests {
     }
 
     #[test]
+    fn property_sample_top_k_boundaries() {
+        // The two boundary contracts documented on `Request::top_k`:
+        // any top_k >= vocab behaves exactly as top_k == 0 (full vocab),
+        // and top_k == 1 ignores temperature entirely (always greedy).
+        check("sample top-k boundaries", 16, |g| {
+            let n = g.int(2, 12);
+            let logits: Vec<f32> = (0..n).map(|_| g.f32(-5.0, 5.0)).collect();
+            let temperature = g.f32(0.05, 4.0);
+            // Identical RNG streams: overshooting top_k must consume
+            // randomness identically to top_k == 0, draw for draw.
+            let mut full = Rng::new(g.seed);
+            let mut over = Rng::new(g.seed);
+            let overshoot = n + g.int(1, 5);
+            for _ in 0..8 {
+                assert_eq!(
+                    sample(&logits, temperature, 0, &mut full),
+                    sample(&logits, temperature, overshoot, &mut over),
+                    "top_k > vocab must behave as full-vocab sampling"
+                );
+            }
+            // top_k == 1: greedy whatever the temperature (including a
+            // temperature that would otherwise flatten the distribution).
+            let greedy = sample(&logits, 0.0, 1, &mut Rng::new(g.seed));
+            let hot = g.f32(0.1, 50.0);
+            for _ in 0..8 {
+                assert_eq!(
+                    sample(&logits, hot, 1, &mut full),
+                    greedy,
+                    "top_k == 1 must ignore temperature"
+                );
+            }
+        });
+    }
+
+    #[test]
     fn empty_prompts_complete_without_tokens_or_starving_real_requests() {
         // Two leading empties on a 2-slot server must not consume the
         // admission pops and strand the real request in the queue.
@@ -698,11 +1197,11 @@ mod tests {
 
     #[test]
     fn overlong_prompt_is_truncated_not_panicking() {
-        // Prompt longer than max_seq: truncated at admission to leave one
+        // Prompt longer than max_seq: truncated at submission to leave one
         // position for generation; the capacity check then finishes the
         // request after a single token instead of overflowing the KV cache.
         let mut srv = tiny_server(1);
-        let max_seq = srv.model.cfg.max_seq;
+        let max_seq = srv.engine.model.cfg.max_seq;
         let prompt: Vec<u16> = (0..max_seq + 40).map(|i| (i % 250) as u16).collect();
         let resps = srv.run(vec![Request::greedy(0, prompt, 5)]);
         assert_eq!(resps.len(), 1);
@@ -716,5 +1215,473 @@ mod tests {
         srv.run(reqs);
         assert!(srv.metrics.peak_kv_bytes > 0);
         assert!(srv.metrics.weight_bytes > 0);
+    }
+
+    // ---- Engine event-loop tests -------------------------------------
+
+    #[test]
+    fn engine_streams_tokens_incrementally_with_ordered_events() {
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.submit(Request::greedy(7, vec![3, 4, 5], 5));
+        let events = drain(&mut engine);
+        // Started precedes every Token; exactly one Token per decode step;
+        // the first Token arrives strictly before Finished.
+        let started_step = events
+            .iter()
+            .find_map(|(s, ev)| matches!(ev, Event::Started { id: 7 }).then_some(*s))
+            .expect("no Started event");
+        let token_steps: Vec<usize> = events
+            .iter()
+            .filter_map(|(s, ev)| matches!(ev, Event::Token { id: 7, .. }).then_some(*s))
+            .collect();
+        assert_eq!(token_steps.len(), 5);
+        assert!(started_step <= token_steps[0]);
+        for w in token_steps.windows(2) {
+            assert_eq!(w[1], w[0] + 1, "tokens must stream one per decode step");
+        }
+        let (finish_step, response, reason) = finished_of(&events, 7);
+        assert_eq!(reason, FinishReason::MaxNew);
+        assert_eq!(response.tokens.len(), 5);
+        assert!(
+            token_steps[0] < finish_step,
+            "first token (step {}) must precede finish (step {finish_step})",
+            token_steps[0]
+        );
+        // The streamed tokens are exactly the response tokens, in order.
+        let streamed: Vec<u16> = events
+            .iter()
+            .filter_map(|(_, ev)| match ev {
+                Event::Token { id: 7, token } => Some(*token),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(streamed, response.tokens);
+        assert!(engine.is_idle());
+    }
+
+    #[test]
+    fn engine_matches_reference_greedy_generation() {
+        // The engine's greedy decode (prefill + stream + stop) must equal
+        // the reference single-sequence loop in nn::decode.
+        let model = tiny_model();
+        let prompt: Vec<u16> = (0..9).map(|i| (i * 23 % 250) as u16).collect();
+        let want = generate_greedy(&model, &prompt, 7, &[]);
+        let mut engine = Engine::new(model, ServerConfig::default());
+        engine.submit(Request::greedy(0, prompt, 7));
+        let events = drain(&mut engine);
+        let (_, response, _) = finished_of(&events, 0);
+        assert_eq!(response.tokens, want);
+    }
+
+    #[test]
+    fn engine_stop_token_finishes_with_stop_reason_and_withholds_it() {
+        let model = tiny_model();
+        let prompt: Vec<u16> = vec![11, 12, 13];
+        let free = generate_greedy(&model, &prompt, 6, &[]);
+        assert!(free.len() >= 3, "need a few tokens to pick a stop from");
+        let stop = free[2];
+        let cut = free.iter().position(|&t| t == stop).unwrap();
+        let want = generate_greedy(&model, &prompt, 6, &[stop]);
+        assert_eq!(want, &free[..cut], "reference loop must truncate at the stop token");
+        let mut engine = Engine::new(model, ServerConfig::default());
+        engine.submit(Request::greedy(0, prompt, 6).stop_tokens(vec![stop]));
+        let events = drain(&mut engine);
+        let (_, response, reason) = finished_of(&events, 0);
+        assert_eq!(reason, FinishReason::Stop);
+        assert_eq!(response.tokens, want);
+        let stop_streamed = events
+            .iter()
+            .any(|(_, ev)| matches!(ev, Event::Token { token, .. } if *token == stop));
+        assert!(!stop_streamed, "the stop token must never be streamed");
+    }
+
+    #[test]
+    fn engine_online_submission_joins_inflight_work() {
+        // A request submitted mid-flight generates exactly what it would
+        // have generated submitted up front (greedy).
+        let mut offline = tiny_server(2);
+        let p0: Vec<u16> = (0..12).map(|i| (i * 13 % 250) as u16).collect();
+        let p1: Vec<u16> = vec![42, 43, 44];
+        let want: Vec<Vec<u16>> = offline
+            .run(vec![Request::greedy(0, p0.clone(), 6), Request::greedy(1, p1.clone(), 6)])
+            .into_iter()
+            .map(|r| r.tokens)
+            .collect();
+        let mut engine = tiny_engine(ServerConfig { max_batch: 2, ..Default::default() });
+        engine.submit(Request::greedy(0, p0, 6));
+        let mut events = Vec::new();
+        for step in 0..3 {
+            for ev in engine.step() {
+                events.push((step, ev));
+            }
+        }
+        engine.submit(Request::greedy(1, p1, 6));
+        events.extend(drain(&mut engine).into_iter().map(|(s, ev)| (s + 3, ev)));
+        let (_, r0, _) = finished_of(&events, 0);
+        let (_, r1, _) = finished_of(&events, 1);
+        assert_eq!(r0.tokens, want[0]);
+        assert_eq!(r1.tokens, want[1], "mid-flight submission changed the output");
+    }
+
+    #[test]
+    fn engine_cancel_releases_pages_from_every_state() {
+        // Cancel one request while queued, one while deferred, one
+        // mid-prefill, and one mid-decode; every reserved page must come
+        // back and a subsequently deferred request must get admitted.
+        let long_prompt = |i: u64| -> Vec<u16> {
+            (0..40).map(|j| ((i as usize * 7 + j) % 250) as u16).collect()
+        };
+        // 4-page pool, 2 pages per request (40 + 8 positions): two run,
+        // the rest defer.
+        let cfg = ServerConfig {
+            max_batch: 4,
+            kv_pages: Some(4),
+            prefill_chunk: 4,
+            ..Default::default()
+        };
+        let mut engine = tiny_engine(cfg);
+        let total = engine.pool().total_pages();
+        for i in 0..4 {
+            engine.submit(Request::greedy(i, long_prompt(i), 8));
+        }
+        // Tick once: 0 and 1 admitted (prefilling), 2 deferred, 3 queued
+        // behind it.
+        let evs = engine.step();
+        assert!(evs.iter().any(|e| matches!(e, Event::Started { id: 0 })));
+        assert!(evs.iter().any(|e| matches!(e, Event::Started { id: 1 })));
+        assert!(evs.iter().any(|e| matches!(e, Event::Deferred { id: 2 })));
+        // Mid-prefill cancel (0 is still prefilling: 40 tokens / chunk 4),
+        // deferred cancel (2), plain-queued cancel (3).
+        engine.cancel(0);
+        engine.cancel(2);
+        engine.cancel(3);
+        let evs = engine.step();
+        for id in [0u64, 2, 3] {
+            assert!(
+                evs.iter().any(|e| matches!(
+                    e,
+                    Event::Finished { response, reason: FinishReason::Cancelled }
+                        if response.id == id
+                )),
+                "request {id} not cancelled"
+            );
+        }
+        // Drive 1 into decode, then cancel it mid-decode.
+        let mut saw_token = false;
+        for _ in 0..40 {
+            if engine.step().iter().any(|e| matches!(e, Event::Token { id: 1, .. })) {
+                saw_token = true;
+                break;
+            }
+        }
+        assert!(saw_token, "request 1 never reached decode");
+        engine.cancel(1);
+        let evs = engine.step();
+        let cancelled = evs.iter().find_map(|e| match e {
+            Event::Finished { response, reason: FinishReason::Cancelled } => Some(response.clone()),
+            _ => None,
+        });
+        let partial = cancelled.expect("mid-decode cancel must finish the request");
+        assert_eq!(partial.id, 1);
+        assert!(!partial.tokens.is_empty(), "mid-decode cancel keeps the partial output");
+        assert!(partial.tokens.len() < 8, "cancelled before the budget");
+        // Everything released: the pool is back to its initial state.
+        assert!(engine.is_idle());
+        assert_eq!(engine.pool().in_use_pages(), 0);
+        assert_eq!(engine.pool().unreserved_pages(), total);
+        assert_eq!(engine.snapshot().cancellations, 4);
+        // ...and a fresh over-budget workload still defers then admits.
+        for i in 10..13 {
+            engine.submit(Request::greedy(i, long_prompt(i), 8));
+        }
+        let events = drain(&mut engine);
+        assert!(
+            events.iter().any(|(_, e)| matches!(e, Event::Deferred { id: 12 })),
+            "third 2-page request should defer on a 4-page pool"
+        );
+        for id in 10..13u64 {
+            let (_, r, reason) = finished_of(&events, id);
+            assert_eq!(reason, FinishReason::MaxNew);
+            assert_eq!(r.tokens.len(), 8, "post-cancel deferral must still complete");
+        }
+        assert_eq!(engine.pool().in_use_pages(), 0);
+        assert_eq!(engine.pool().unreserved_pages(), total);
+    }
+
+    #[test]
+    fn engine_cancel_frees_budget_for_deferred_request() {
+        // A deferred request must be admitted the very tick a cancel
+        // releases the pages it was waiting for.
+        let cfg = ServerConfig { max_batch: 2, kv_pages: Some(4), ..Default::default() };
+        let mut engine = tiny_engine(cfg);
+        let prompt: Vec<u16> = (0..40).map(|j| (j % 250) as u16).collect();
+        engine.submit(Request::greedy(0, prompt.clone(), 80)); // 4 pages: whole budget
+        engine.submit(Request::greedy(1, prompt.clone(), 8)); // 2 pages: must wait
+        let evs = engine.step();
+        assert!(evs.iter().any(|e| matches!(e, Event::Started { id: 0 })));
+        assert!(evs.iter().any(|e| matches!(e, Event::Deferred { id: 1 })));
+        engine.cancel(0);
+        let evs = engine.step();
+        assert!(
+            evs.iter().any(|e| matches!(
+                e,
+                Event::Finished { response, reason: FinishReason::Cancelled } if response.id == 0
+            )),
+            "cancel must land at the tick boundary"
+        );
+        assert!(
+            evs.iter().any(|e| matches!(e, Event::Started { id: 1 })),
+            "freed pages must admit the deferred request in the same tick"
+        );
+        let events = drain(&mut engine);
+        let (_, r, _) = finished_of(&events, 1);
+        assert_eq!(r.tokens.len(), 8);
+    }
+
+    #[test]
+    fn engine_cancel_unknown_or_finished_ids_is_noop() {
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.cancel(99); // never submitted
+        assert!(engine.is_idle());
+        assert!(engine.step().is_empty());
+        engine.submit(Request::greedy(0, vec![1, 2], 2));
+        let events = drain(&mut engine);
+        let (_, _, reason) = finished_of(&events, 0);
+        assert_eq!(reason, FinishReason::MaxNew);
+        engine.cancel(0); // already finished
+        assert!(engine.step().is_empty());
+        assert_eq!(engine.snapshot().cancellations, 0);
+        // A stale cancel must not kill a later request reusing the id:
+        // cancel a finished id, then resubmit it *before* the next step.
+        engine.cancel(0);
+        engine.submit(Request::greedy(0, vec![3, 4], 2));
+        let events = drain(&mut engine);
+        let (_, r, reason) = finished_of(&events, 0);
+        assert_eq!(reason, FinishReason::MaxNew, "stale cancel hit the reused id");
+        assert_eq!(r.tokens.len(), 2);
+        assert_eq!(engine.snapshot().cancellations, 0);
+    }
+
+    #[test]
+    fn engine_cancel_targets_oldest_instance_of_a_reused_id() {
+        // cancel(5) aimed at a decoding request must still hit it when a
+        // newer request reusing id 5 is submitted before the next step.
+        let mut engine = tiny_engine(ServerConfig { max_batch: 2, ..Default::default() });
+        engine.submit(Request::greedy(5, vec![1, 2, 3], 10));
+        let mut streamed = 0usize;
+        for _ in 0..20 {
+            streamed += engine
+                .step()
+                .iter()
+                .filter(|e| matches!(e, Event::Token { id: 5, .. }))
+                .count();
+            if streamed >= 2 {
+                break;
+            }
+        }
+        assert!(streamed >= 2, "request never started decoding");
+        engine.cancel(5);
+        engine.submit(Request::greedy(5, vec![9, 8], 3));
+        let events = drain(&mut engine);
+        let finishes: Vec<(usize, FinishReason)> = events
+            .iter()
+            .filter_map(|(_, ev)| match ev {
+                Event::Finished { response, reason } if response.id == 5 => {
+                    Some((response.tokens.len(), *reason))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(finishes.len(), 2);
+        // First finish: the cancelled original with its partial stream.
+        assert_eq!(finishes[0], (streamed, FinishReason::Cancelled));
+        // Second finish: the reused-id request, untouched by the cancel.
+        assert_eq!(finishes[1], (3, FinishReason::MaxNew));
+        assert_eq!(engine.snapshot().cancellations, 1);
+    }
+
+    #[test]
+    fn engine_cancel_consumes_one_instance_per_call() {
+        // With a reused live id, a second cancel() call must reach the
+        // newer duplicate (one in-flight instance consumed per call).
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.submit(Request::greedy(5, vec![1, 2, 3], 10));
+        engine.step(); // id 5 is active (prefilled + first token)
+        engine.cancel(5); // aimed at the active instance
+        engine.submit(Request::greedy(5, vec![9, 8], 3)); // queued duplicate
+        engine.cancel(5); // aimed at the duplicate
+        let events = drain(&mut engine);
+        let cancelled: Vec<usize> = events
+            .iter()
+            .filter_map(|(_, ev)| match ev {
+                Event::Finished { response, reason: FinishReason::Cancelled } => {
+                    Some(response.tokens.len())
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(cancelled.len(), 2, "both instances must be cancelled");
+        assert_eq!(cancelled[0], 1, "oldest (active, one streamed token) dies first");
+        assert_eq!(cancelled[1], 0, "queued duplicate dies with no tokens");
+        assert_eq!(engine.snapshot().cancellations, 2);
+        assert!(engine.is_idle());
+    }
+
+    #[test]
+    fn engine_cancel_prefers_older_of_two_active_duplicates() {
+        // Slot index is recycling order, not age: when two ACTIVE slots
+        // share an id, cancel must kill the instance submitted first even
+        // if the newer one landed in a lower slot.
+        let mut engine = tiny_engine(ServerConfig { max_batch: 2, ..Default::default() });
+        engine.submit(Request::greedy(1, vec![1, 2], 2)); // slot 0, finishes fast
+        engine.submit(Request::greedy(7, vec![5, 6, 7], 20)); // slot 1, long-running
+        let mut steps = 0;
+        loop {
+            let done = engine
+                .step()
+                .iter()
+                .any(|e| matches!(e, Event::Finished { response, .. } if response.id == 1));
+            if done {
+                break;
+            }
+            steps += 1;
+            assert!(steps < 100, "id 1 never finished");
+        }
+        // The newer duplicate of id 7 is admitted into the freed slot 0.
+        engine.submit(Request::greedy(7, vec![9], 20));
+        engine.step();
+        engine.cancel(7);
+        let evs = engine.step();
+        let cancelled = evs
+            .iter()
+            .find_map(|e| match e {
+                Event::Finished { response, reason: FinishReason::Cancelled } => {
+                    Some(response.clone())
+                }
+                _ => None,
+            })
+            .expect("cancel must land at the tick boundary");
+        assert!(
+            cancelled.tokens.len() >= 3,
+            "the older long-running instance (3+ tokens streamed) must be the one cancelled, \
+             got {} tokens",
+            cancelled.tokens.len()
+        );
+        // The newer duplicate is untouched and runs to its budget.
+        let events = drain(&mut engine);
+        let (_, survivor, reason) = finished_of(&events, 7);
+        assert_eq!(reason, FinishReason::MaxNew);
+        assert_eq!(survivor.tokens.len(), 20);
+    }
+
+    #[test]
+    fn engine_surplus_cancels_never_hit_a_reused_id() {
+        // Two cancel() calls against ONE live instance record only one
+        // pending cancel, so a request reusing the id submitted afterwards
+        // is untouched.
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.submit(Request::greedy(5, vec![1, 2, 3], 10));
+        engine.step(); // active
+        engine.cancel(5);
+        engine.cancel(5); // surplus: dropped at call time
+        engine.submit(Request::greedy(5, vec![9, 8], 3));
+        let events = drain(&mut engine);
+        let reasons: Vec<FinishReason> = events
+            .iter()
+            .filter_map(|(_, ev)| match ev {
+                Event::Finished { response, reason } if response.id == 5 => Some(*reason),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(reasons, vec![FinishReason::Cancelled, FinishReason::MaxNew]);
+        assert_eq!(engine.snapshot().cancellations, 1);
+    }
+
+    #[test]
+    fn engine_degenerate_submissions_are_not_cancellable() {
+        // Degenerate requests are complete the moment they are submitted;
+        // cancel is a no-op and they still report MaxNew at the next tick.
+        let mut engine = tiny_engine(ServerConfig::default());
+        engine.submit(Request::greedy(7, Vec::new(), 5));
+        engine.cancel(7);
+        let events = drain(&mut engine);
+        let (_, r, reason) = finished_of(&events, 7);
+        assert_eq!(reason, FinishReason::MaxNew);
+        assert!(r.tokens.is_empty());
+        assert_eq!(engine.snapshot().cancellations, 0);
+    }
+
+    #[test]
+    fn engine_metrics_accumulate_across_workloads() {
+        let mut engine = tiny_engine(ServerConfig { max_batch: 2, ..Default::default() });
+        engine.submit(Request::greedy(0, vec![1, 2, 3], 4));
+        while !engine.is_idle() {
+            engine.step();
+        }
+        let first = engine.snapshot();
+        assert_eq!(first.total_tokens, 4);
+        engine.submit(Request::greedy(1, vec![4, 5], 3));
+        while !engine.is_idle() {
+            engine.step();
+        }
+        let second = engine.snapshot();
+        assert_eq!(second.total_tokens, 7, "metrics must be cumulative over the lifetime");
+        assert_eq!(second.prefill_tokens, 5);
+        assert!(second.wall_s >= first.wall_s);
+        engine.reset();
+        let zero = engine.snapshot();
+        assert_eq!(zero.total_tokens, 0);
+        assert_eq!(zero.wall_s, 0.0);
+        assert_eq!(zero.tokens_per_s, 0.0, "zero-wall snapshot must not be NaN/inf");
+        assert_eq!(zero.throughput_tokens_per_s, 0.0);
+    }
+
+    #[test]
+    fn request_builder_defaults_keep_temperature_effective() {
+        // top_k defaults to 0 (full vocab), not 1, so that
+        // `.temperature(..)` alone switches on stochastic sampling instead
+        // of being silently pinned greedy by the top-k == 1 branch.
+        let r = Request::new(3, vec![1, 2]);
+        assert_eq!(r.max_new, DEFAULT_MAX_NEW);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!(r.top_k, 0);
+        assert!(r.stop_tokens.is_empty());
+        let r = Request::new(3, vec![1, 2]).temperature(0.9);
+        assert!(r.temperature > 0.0 && r.top_k != 1, "temperature must not be a no-op");
+    }
+
+    #[test]
+    fn zero_wall_metrics_are_finite() {
+        // The NaN/inf guard: snapshots and degenerate run() calls report
+        // 0.0 rates, never NaN or infinity. Idle polling accrues no wall
+        // time either, so lulls never dilute lifetime throughput.
+        let mut engine = tiny_engine(ServerConfig::default());
+        for _ in 0..5 {
+            assert!(engine.step().is_empty());
+        }
+        let m = engine.snapshot();
+        assert_eq!(m.wall_s, 0.0, "eventless idle polls must not accrue wall time");
+        assert_eq!(m.tokens_per_s, 0.0);
+        assert_eq!(m.throughput_tokens_per_s, 0.0);
+        let mut srv = tiny_server(1);
+        let resps = srv.run(Vec::new());
+        assert!(resps.is_empty());
+        assert!(srv.metrics.tokens_per_s.is_finite());
+        assert!(srv.metrics.throughput_tokens_per_s.is_finite());
+    }
+
+    #[test]
+    fn response_timings_are_consistent() {
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.submit(Request::greedy(0, vec![5; 6], 4));
+        engine.submit(Request::greedy(1, vec![6; 6], 4)); // waits for slot 0
+        let events = drain(&mut engine);
+        let (_, r0, _) = finished_of(&events, 0);
+        let (_, r1, _) = finished_of(&events, 1);
+        for r in [&r0, &r1] {
+            assert!(r.ttft_s >= 0.0 && r.decode_s >= 0.0 && r.queue_s >= 0.0);
+            assert!(r.ttft_s >= r.queue_s, "TTFT includes the queue wait");
+        }
+        assert!(r1.queue_s >= r0.queue_s, "the queued request waits at least as long");
     }
 }

@@ -66,6 +66,21 @@ impl Args {
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
     }
 
+    /// Comma-separated `u16` list (`--stop-tokens 7,13,99`); absent or
+    /// empty means the empty list. Spaces around commas are tolerated.
+    pub fn get_u16_list(&self, name: &str) -> Vec<u16> {
+        let Some(raw) = self.get(name) else { return Vec::new() };
+        raw.split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects comma-separated u16 values, got '{raw}'")
+                })
+            })
+            .collect()
+    }
+
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
@@ -122,6 +137,18 @@ mod tests {
         assert_eq!(a.get_usize("iters", 7), 7);
         assert_eq!(a.get_or("name", "x"), "x");
         assert!(!a.flag("nope"));
+    }
+
+    #[test]
+    fn u16_list_values() {
+        let a = parse("--stop-tokens 7,13,99");
+        assert_eq!(a.get_u16_list("stop-tokens"), vec![7, 13, 99]);
+        let b = parse("--stop-tokens=42");
+        assert_eq!(b.get_u16_list("stop-tokens"), vec![42]);
+        // Absent, and tolerant of spaces / trailing commas.
+        assert!(parse("").get_u16_list("stop-tokens").is_empty());
+        let c = parse("--stop-tokens 1,,2,");
+        assert_eq!(c.get_u16_list("stop-tokens"), vec![1, 2]);
     }
 
     #[test]

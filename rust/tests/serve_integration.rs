@@ -5,7 +5,7 @@ use nanoquant::nn::family_config;
 use nanoquant::nn::model::{LayerKind, ModelParams};
 use nanoquant::nn::LayerId;
 use nanoquant::quant::{rank_for_bpw, Engine, LatentFactors, QuantModel};
-use nanoquant::serve::{Request, Server, ServerConfig};
+use nanoquant::serve::{Engine as ServeEngine, Event, FinishReason, Request, Server, ServerConfig};
 use nanoquant::tensor::Tensor;
 use nanoquant::util::quickcheck::check;
 use nanoquant::util::rng::Rng;
@@ -133,6 +133,178 @@ fn kv_slots_never_leak_across_requests() {
     assert_eq!(resps[0].tokens, resps[2].tokens, "slot reuse contaminated a request");
 }
 
+/// Drive an engine until idle, collecting every event with its step index.
+fn drain(engine: &mut ServeEngine) -> Vec<(usize, Event)> {
+    let mut out = Vec::new();
+    let mut step = 0usize;
+    while !engine.is_idle() {
+        for ev in engine.step() {
+            out.push((step, ev));
+        }
+        step += 1;
+        assert!(step < 10_000, "engine failed to drain");
+    }
+    out
+}
+
+fn finished_of(events: &[(usize, Event)], id: u64) -> (usize, Vec<u16>, FinishReason) {
+    events
+        .iter()
+        .find_map(|(s, ev)| match ev {
+            Event::Finished { response, reason } if response.id == id => {
+                Some((*s, response.tokens.clone(), *reason))
+            }
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("request {id} never finished"))
+}
+
+#[test]
+fn online_submission_matches_upfront_submission() {
+    // Acceptance (a): a request submitted after step() has begun completes
+    // with identical tokens to one submitted up front, on the real packed
+    // engine.
+    let qm = quant_model();
+    let pa: Vec<u16> = (0..14).map(|i| ((i * 19 + 1) % 250) as u16).collect();
+    let pb: Vec<u16> = vec![33, 44, 55, 66];
+    let mut offline = Server::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 2, seed: 0, ..Default::default() },
+    );
+    let want: Vec<Vec<u16>> = offline
+        .run(vec![Request::greedy(0, pa.clone(), 9), Request::greedy(1, pb.clone(), 9)])
+        .into_iter()
+        .map(|r| r.tokens)
+        .collect();
+    let mut engine = ServeEngine::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 2, seed: 0, ..Default::default() },
+    );
+    engine.submit(Request::greedy(0, pa, 9));
+    let mut events: Vec<(usize, Event)> = Vec::new();
+    for step in 0..4 {
+        for ev in engine.step() {
+            events.push((step, ev));
+        }
+    }
+    engine.submit(Request::greedy(1, pb, 9));
+    events.extend(drain(&mut engine).into_iter().map(|(s, ev)| (s + 4, ev)));
+    let (_, t0, _) = finished_of(&events, 0);
+    let (_, t1, _) = finished_of(&events, 1);
+    assert_eq!(t0, want[0], "in-flight request perturbed by the late arrival");
+    assert_eq!(t1, want[1], "mid-flight submission must match up-front submission");
+}
+
+#[test]
+fn token_events_stream_incrementally() {
+    // Acceptance (b): the first Token event precedes Finished by >= 1 step
+    // whenever max_new > 1 — tokens are streamed as generated, not dumped
+    // at completion.
+    let qm = quant_model();
+    let mut engine = ServeEngine::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
+    );
+    engine.submit(Request::greedy(0, vec![5, 10, 15, 20], 8));
+    let events = drain(&mut engine);
+    let token_steps: Vec<usize> = events
+        .iter()
+        .filter_map(|(s, ev)| matches!(ev, Event::Token { .. }).then_some(*s))
+        .collect();
+    assert_eq!(token_steps.len(), 8);
+    let (finish_step, tokens, reason) = finished_of(&events, 0);
+    assert_eq!(reason, FinishReason::MaxNew);
+    assert!(
+        token_steps[0] < finish_step,
+        "first token at step {} must precede finish at step {finish_step}",
+        token_steps[0]
+    );
+    for w in token_steps.windows(2) {
+        assert_eq!(w[1], w[0] + 1, "one streamed token per decode tick");
+    }
+    // The stream and the final response agree exactly.
+    let streamed: Vec<u16> = events
+        .iter()
+        .filter_map(|(_, ev)| match ev {
+            Event::Token { token, .. } => Some(*token),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(streamed, tokens);
+}
+
+#[test]
+fn stop_token_requests_finish_with_stop_reason() {
+    // Acceptance (c): a stop-token request finishes with FinishReason::Stop,
+    // does not emit the stop token, and does not run past it.
+    let qm = quant_model();
+    let prompt: Vec<u16> = vec![5, 10, 15, 20];
+    let mut server = Server::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
+    );
+    let free = server.run(vec![Request::greedy(0, prompt.clone(), 12)])[0].tokens.clone();
+    assert!(free.len() >= 4, "need a few greedy tokens to pick a stop from");
+    let stop = free[3];
+    let cut = free.iter().position(|&t| t == stop).unwrap();
+    let mut engine = ServeEngine::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 1, seed: 0, ..Default::default() },
+    );
+    engine.submit(Request::greedy(0, prompt, 12).stop_tokens(vec![stop]));
+    let events = drain(&mut engine);
+    let (_, tokens, reason) = finished_of(&events, 0);
+    assert_eq!(reason, FinishReason::Stop);
+    assert_eq!(tokens, free[..cut], "generation must cut exactly at the stop token");
+    assert!(!tokens.contains(&stop), "the stop token must be withheld");
+    assert!(
+        !events
+            .iter()
+            .any(|(_, ev)| matches!(ev, Event::Token { token, .. } if *token == stop)),
+        "the stop token must never be streamed"
+    );
+}
+
+#[test]
+fn cancellation_mid_decode_returns_partial_output_and_pages() {
+    let qm = quant_model();
+    let mut engine = ServeEngine::new(
+        qm.to_decode_model(Engine::Packed),
+        ServerConfig { max_batch: 2, seed: 0, ..Default::default() },
+    );
+    let total = engine.pool().total_pages();
+    engine.submit(Request::greedy(0, vec![7, 8, 9], 20));
+    engine.submit(Request::greedy(1, vec![100; 10], 6));
+    // Step until request 0 has streamed a few tokens, then cancel it.
+    let mut events: Vec<(usize, Event)> = Vec::new();
+    let mut streamed0 = 0usize;
+    let mut pre_steps = 0usize;
+    for step in 0..200 {
+        for ev in engine.step() {
+            if matches!(ev, Event::Token { id: 0, .. }) {
+                streamed0 += 1;
+            }
+            events.push((step, ev));
+        }
+        pre_steps = step + 1;
+        if streamed0 >= 3 {
+            break;
+        }
+    }
+    assert!(streamed0 >= 3, "request 0 never got going");
+    engine.cancel(0);
+    events.extend(drain(&mut engine).into_iter().map(|(s, ev)| (s + pre_steps, ev)));
+    let (_, tokens, reason) = finished_of(&events, 0);
+    assert_eq!(reason, FinishReason::Cancelled);
+    assert_eq!(tokens.len(), streamed0, "partial output must match what was streamed");
+    let (_, t1, r1) = finished_of(&events, 1);
+    assert_eq!(r1, FinishReason::MaxNew);
+    assert_eq!(t1.len(), 6, "the surviving request must be untouched");
+    assert!(engine.is_idle());
+    assert_eq!(engine.pool().in_use_pages(), 0, "cancelled pages must be reclaimed");
+    assert_eq!(engine.pool().unreserved_pages(), total, "reservation must be released");
+}
+
 #[test]
 fn sampled_generation_is_seed_deterministic() {
     let qm = quant_model();
@@ -142,8 +314,7 @@ fn sampled_generation_is_seed_deterministic() {
                 qm.to_decode_model(Engine::Packed),
                 ServerConfig { max_batch: 1, seed, ..Default::default() },
             );
-        let req =
-            Request { id: 0, prompt: vec![1, 2, 3], max_new: 10, temperature: 0.9, top_k: 16 };
+        let req = Request::new(0, vec![1, 2, 3]).max_new(10).temperature(0.9).top_k(16);
         server.run(vec![req])[0].tokens.clone()
     };
     assert_eq!(run(11), run(11));
