@@ -1,0 +1,169 @@
+//! HTTP gateway demo: starts the std-only SSE gateway on an ephemeral
+//! loopback port, then acts as its own HTTP client — liveness check, a
+//! full-response generation, a live token stream, a mid-stream disconnect
+//! (watch the engine cancel and the KV pool refill), and the metrics view.
+//!
+//!     cargo run --release --example http_gateway
+
+use nanoquant::nn::decode::dense_decode_model;
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::ModelParams;
+use nanoquant::serve::http::{Gateway, GatewayConfig};
+use nanoquant::serve::{Engine, ServerConfig};
+use nanoquant::util::json::Json;
+use nanoquant::util::rng::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let cfg = family_config("l2", "s");
+    let mut rng = Rng::new(3);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let engine = Engine::new(
+        dense_decode_model(&params),
+        ServerConfig { max_batch: 4, kv_pages: Some(8), seed: 0, ..Default::default() },
+    );
+    let gateway = Gateway::start(
+        engine,
+        GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .expect("bind loopback gateway");
+    let addr = gateway.local_addr();
+    println!("gateway up on http://{addr}\n");
+
+    // ---- 1. Liveness.
+    let (status, body) = request(addr, "GET", "/healthz", "");
+    println!("GET /healthz            -> {status} {body}");
+
+    // ---- 2. Full-response generation.
+    let (status, body) =
+        request(addr, "POST", "/v1/generate", "{\"prompt\": \"the robin is a kind of\", \"max_new\": 12}");
+    println!("POST /v1/generate       -> {status}");
+    let resp = Json::parse(&body).expect("response JSON");
+    println!(
+        "  finish={} ttft={:.1}ms text={:?}",
+        resp.get("finish_reason").and_then(Json::as_str).unwrap_or("?"),
+        resp.get("ttft_s").and_then(Json::as_f64).unwrap_or(0.0) * 1e3,
+        resp.get("text").and_then(Json::as_str).unwrap_or(""),
+    );
+
+    // ---- 3. SSE stream: tokens arrive the tick they are sampled.
+    println!("POST /v1/generate?stream=1");
+    let mut reader = open_sse(addr, "{\"prompt\": \"the robin is a kind of\", \"max_new\": 10}");
+    let t0 = Instant::now();
+    while let Some(frame) = next_frame(&mut reader) {
+        if frame.get("done").and_then(Json::as_bool) == Some(true) {
+            println!(
+                "  done: finish={} wire-wall={:.1}ms",
+                frame.get("finish_reason").and_then(Json::as_str).unwrap_or("?"),
+                t0.elapsed().as_secs_f64() * 1e3,
+            );
+            break;
+        }
+        if let Some(tok) = frame.get("token").and_then(Json::as_usize) {
+            println!("  +{:>6.1}ms token {tok}", t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+
+    // ---- 4. Disconnect containment: drop a stream mid-flight and watch
+    // the cancel land and the page reservation come back.
+    println!("\nmid-stream disconnect:");
+    let mut reader = open_sse(addr, "{\"prompt\": \"the robin is a kind of\", \"max_new\": 400}");
+    let mut seen = 0usize;
+    while seen < 3 {
+        let frame = next_frame(&mut reader).expect("stream ended early");
+        if frame.get("token").is_some() {
+            seen += 1;
+        }
+    }
+    drop(reader); // hang up without reading the rest
+    println!("  dropped the connection after 3 tokens");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (_, body) = request(addr, "GET", "/v1/metrics", "");
+        let m = Json::parse(&body).expect("metrics JSON");
+        let cancellations = m.get("cancellations").and_then(Json::as_usize).unwrap_or(0);
+        if cancellations >= 1 {
+            let pool = m.get("kv_pool").expect("kv_pool");
+            println!(
+                "  engine cancelled it: cancellations={cancellations} reserved_pages={} in_use_pages={}",
+                pool.get("reserved_pages").and_then(Json::as_usize).unwrap_or(9999),
+                pool.get("in_use_pages").and_then(Json::as_usize).unwrap_or(9999),
+            );
+            break;
+        }
+        assert!(Instant::now() < deadline, "cancel never landed");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    // ---- 5. Lifetime metrics, then a clean shutdown.
+    let (_, body) = request(addr, "GET", "/v1/metrics", "");
+    let m = Json::parse(&body).expect("metrics JSON");
+    println!(
+        "\nmetrics: total_tokens={} tokens_per_s={:.1} peak_kv_bytes={}",
+        m.get("total_tokens").and_then(Json::as_usize).unwrap_or(0),
+        m.get("tokens_per_s").and_then(Json::as_f64).unwrap_or(0.0),
+        m.get("peak_kv_bytes").and_then(Json::as_usize).unwrap_or(0),
+    );
+    gateway.shutdown();
+    println!("gateway shut down cleanly");
+}
+
+fn request(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: demo\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("write request");
+    let mut raw = String::new();
+    BufReader::new(stream).read_to_string(&mut raw).expect("read response");
+    let status = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    let body_at = raw.find("\r\n\r\n").expect("head/body split") + 4;
+    (status, raw[body_at..].to_string())
+}
+
+fn open_sse(addr: SocketAddr, body: &str) -> BufReader<TcpStream> {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    write!(
+        stream,
+        "POST /v1/generate?stream=1 HTTP/1.1\r\nHost: demo\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("write request");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+    loop {
+        line.clear();
+        reader.read_line(&mut line).expect("header");
+        if line.trim_end().is_empty() {
+            return reader;
+        }
+    }
+}
+
+fn next_frame(reader: &mut BufReader<TcpStream>) -> Option<Json> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).ok()? == 0 {
+            return None;
+        }
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            continue;
+        }
+        return Json::parse(trimmed.strip_prefix("data: ")?).ok();
+    }
+}

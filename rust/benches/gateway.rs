@@ -1,0 +1,199 @@
+//! `cargo bench` — end-to-end loopback latency through the HTTP gateway:
+//! TTFT and per-token gap as a real TCP client sees them, plus the
+//! engine-reported TTFT from the final SSE frame so the wire/plumbing
+//! overhead is isolated from model time.
+//!
+//! Results land in `BENCH_gateway.json` at the repository root
+//! (machine-readable, overwritten per run), same trajectory convention as
+//! the other benches.
+
+use nanoquant::nn::decode::dense_decode_model;
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::ModelParams;
+use nanoquant::serve::http::{Gateway, GatewayConfig};
+use nanoquant::serve::{Engine, ServerConfig};
+use nanoquant::util::json::{write_json, Json};
+use nanoquant::util::rng::Rng;
+use nanoquant::util::timer::stats_from;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gateway.json");
+const MAX_NEW: usize = 24;
+/// Run 0 is an untimed warm-up (worker spawn, page materialization).
+const RUNS: usize = 6;
+
+fn main() {
+    println!("== HTTP gateway loopback latency (l2-s dense) ==");
+    let cfg = family_config("l2", "s");
+    let mut rng = Rng::new(0);
+    let params = ModelParams::init(&cfg, &mut rng);
+    let engine = Engine::new(
+        dense_decode_model(&params),
+        ServerConfig { max_batch: 4, seed: 0, ..Default::default() },
+    );
+    let gateway =
+        Gateway::start(engine, GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() })
+            .expect("bind loopback gateway");
+    let addr = gateway.local_addr();
+    let body = format!("{{\"prompt\": [5, 10, 15, 20, 25, 30, 35, 40], \"max_new\": {MAX_NEW}}}");
+
+    // ---- SSE mode: wire TTFT + inter-token gap, one connection per
+    // request (worst-case client behavior).
+    let mut wire_ttfts = Vec::new();
+    let mut gap_means = Vec::new();
+    let mut engine_ttfts = Vec::new();
+    let mut walls = Vec::new();
+    for run in 0..RUNS {
+        let m = sse_once(addr, &body);
+        assert_eq!(m.tokens, MAX_NEW, "short stream");
+        if run > 0 {
+            wire_ttfts.push(m.wire_ttft_s);
+            gap_means.push(m.mean_gap_s);
+            engine_ttfts.push(m.engine_ttft_s);
+            walls.push(m.wall_s);
+        }
+    }
+    let ttft = stats_from("gateway sse wire ttft", &wire_ttfts);
+    println!("{ttft}");
+    let gap = stats_from("gateway sse token gap", &gap_means);
+    println!("{gap}");
+    let engine_ttft = stats_from("gateway sse engine ttft", &engine_ttfts);
+    println!("{engine_ttft}");
+    let sse_wall = stats_from("gateway sse request wall", &walls);
+    let tok_s = MAX_NEW as f64 / sse_wall.mean_s;
+    println!("{sse_wall}   [{tok_s:.1} tok/s]");
+    let overhead_s = (ttft.mean_s - engine_ttft.mean_s).max(0.0);
+    println!("mean wire-vs-engine TTFT overhead: {:.3} ms", overhead_s * 1e3);
+
+    // ---- Full-response mode: one framed request/response round trip.
+    let mut full_walls = Vec::new();
+    for run in 0..RUNS {
+        let t0 = Instant::now();
+        let n = full_once(addr, &body);
+        assert_eq!(n, MAX_NEW);
+        if run > 0 {
+            full_walls.push(t0.elapsed().as_secs_f64());
+        }
+    }
+    let full = stats_from("gateway full-response wall", &full_walls);
+    println!("{full}");
+
+    let doc = Json::obj()
+        .set("bench", "gateway")
+        .set("model", cfg.name.as_str())
+        .set("threads", nanoquant::util::threadpool::num_threads())
+        .set(
+            "results",
+            Json::obj()
+                .set(
+                    "sse",
+                    Json::obj()
+                        .set("mean_ttft_s", ttft.mean_s)
+                        .set("p50_ttft_s", ttft.p50_s)
+                        .set("mean_token_gap_s", gap.mean_s)
+                        .set("p50_token_gap_s", gap.p50_s)
+                        .set("mean_wall_s", sse_wall.mean_s)
+                        .set("tok_s", tok_s),
+                )
+                .set("engine_reported", Json::obj().set("mean_ttft_s", engine_ttft.mean_s))
+                .set("overhead", Json::obj().set("mean_ttft_overhead_s", overhead_s))
+                .set(
+                    "full_response",
+                    Json::obj().set("mean_wall_s", full.mean_s).set("p50_wall_s", full.p50_s),
+                ),
+        );
+    match write_json(OUT_PATH, &doc) {
+        Ok(()) => println!("wrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+    gateway.shutdown();
+}
+
+struct StreamMeasure {
+    wire_ttft_s: f64,
+    mean_gap_s: f64,
+    engine_ttft_s: f64,
+    wall_s: f64,
+    tokens: usize,
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+}
+
+fn sse_once(addr: SocketAddr, body: &str) -> StreamMeasure {
+    let mut stream = connect(addr);
+    let t0 = Instant::now();
+    write!(
+        stream,
+        "POST /v1/generate?stream=1 HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("request write");
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+    loop {
+        line.clear();
+        reader.read_line(&mut line).expect("header");
+        if line.trim_end().is_empty() {
+            break;
+        }
+    }
+    let mut wire_ttft_s = 0.0f64;
+    let mut last_token_at: Option<Instant> = None;
+    let mut gaps = Vec::new();
+    let mut tokens = 0usize;
+    let mut engine_ttft_s = 0.0f64;
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("frame line");
+        assert!(n > 0, "stream ended without a done frame");
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let frame = Json::parse(trimmed.strip_prefix("data: ").expect("data line"))
+            .expect("frame JSON");
+        if frame.get("done").and_then(Json::as_bool) == Some(true) {
+            engine_ttft_s = frame.get("ttft_s").and_then(Json::as_f64).expect("ttft_s");
+            break;
+        }
+        if frame.get("token").is_some() {
+            let now = Instant::now();
+            if let Some(prev) = last_token_at {
+                gaps.push(now.duration_since(prev).as_secs_f64());
+            } else {
+                wire_ttft_s = t0.elapsed().as_secs_f64();
+            }
+            last_token_at = Some(now);
+            tokens += 1;
+        }
+    }
+    let mean_gap_s = if gaps.is_empty() { 0.0 } else { gaps.iter().sum::<f64>() / gaps.len() as f64 };
+    StreamMeasure { wire_ttft_s, mean_gap_s, engine_ttft_s, wall_s: t0.elapsed().as_secs_f64(), tokens }
+}
+
+fn full_once(addr: SocketAddr, body: &str) -> usize {
+    let mut stream = connect(addr);
+    write!(
+        stream,
+        "POST /v1/generate HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("request write");
+    let mut raw = String::new();
+    BufReader::new(stream).read_to_string(&mut raw).expect("response");
+    let json_start = raw.find("\r\n\r\n").expect("header/body split") + 4;
+    let json = Json::parse(&raw[json_start..]).expect("response JSON");
+    json.get("tokens").and_then(Json::as_arr).expect("tokens").len()
+}

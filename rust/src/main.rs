@@ -6,6 +6,7 @@
 //!   quantize --family --size --bpw ...   run Algorithm 1, save checkpoint stats
 //!   eval    --family --size [--bpw]      perplexity + zero-shot
 //!   serve   --family --size [--stream] [--stop-tokens a,b]   event-loop serving demo
+//!   gateway --addr 127.0.0.1:8080 [--kv-pages N] [--max-batch N]   HTTP/SSE gateway
 //!   exp <id>                    regenerate a paper table/figure (or `all`)
 //!   artifacts-check             load every AOT artifact via PJRT
 //!   size    --bpw               Appendix-F model-size calculator
@@ -14,6 +15,7 @@ use nanoquant::data::{sample_sequences, CorpusKind};
 use nanoquant::eval::{perplexity, zero_shot_suite};
 use nanoquant::exp::{self, zoo, Ctx};
 use nanoquant::quant::{self, InitMethod, PipelineConfig};
+use nanoquant::serve::http::{Gateway, GatewayConfig};
 use nanoquant::serve::{Engine, Event, Request, ServerConfig};
 use nanoquant::util::cli::Args;
 use nanoquant::util::rng::Rng;
@@ -36,6 +38,7 @@ fn main() {
         "quantize" => cmd_quantize(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
+        "gateway" => cmd_gateway(&args),
         "exp" => {
             let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
             exp::run(id, &Ctx::from_args(&args));
@@ -44,7 +47,8 @@ fn main() {
         "size" => cmd_size(&args),
         _ => {
             eprintln!(
-                "usage: nanoquant <zoo|train|quantize|eval|serve|exp|artifacts-check|size> [--flags]\n\
+                "usage: nanoquant <zoo|train|quantize|eval|serve|gateway|exp|artifacts-check|size> \
+                 [--flags]\n\
                  see README.md for details"
             );
         }
@@ -160,6 +164,47 @@ fn cmd_serve(args: &Args) {
         m.peak_active_slots,
         m.weight_bytes as f64 / 1e6
     );
+}
+
+fn cmd_gateway(args: &Args) {
+    let family = args.get_or("family", "l2");
+    let size = args.get_or("size", "s");
+    let tokens = zoo::train_tokens();
+    let teacher =
+        zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+    let dm = nanoquant::nn::decode::dense_decode_model(&teacher);
+    let engine = Engine::new(
+        dm,
+        ServerConfig {
+            max_batch: args.get_usize("max-batch", 4),
+            prefill_chunk: args.get_usize("prefill-chunk", 8),
+            kv_pages: args.get_usize_opt("kv-pages"),
+            seed: args.get_u64("seed", 0),
+            ..Default::default()
+        },
+    );
+    let cfg = GatewayConfig {
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        ..Default::default()
+    };
+    let gateway = match Gateway::start(engine, cfg) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("gateway failed to bind: {e}");
+            std::process::exit(1);
+        }
+    };
+    let addr = gateway.local_addr();
+    println!("gateway listening on http://{addr}  ({family}-{size}, dense engine)");
+    println!("  POST /v1/generate            full JSON response");
+    println!("  POST /v1/generate?stream=1   SSE: one data: frame per token");
+    println!("  POST /v1/cancel/<id>         cancel at the next engine tick");
+    println!("  GET  /v1/metrics             lifetime metrics + KV pool occupancy");
+    println!("  GET  /healthz                liveness");
+    println!("try: curl -N -X POST 'http://{addr}/v1/generate?stream=1' \\");
+    println!("          -d '{{\"prompt\": \"the robin is a kind of\", \"max_new\": 16}}'");
+    // Serve until the process is killed (Ctrl-C).
+    gateway.join();
 }
 
 fn cmd_artifacts_check(args: &Args) {

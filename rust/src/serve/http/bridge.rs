@@ -1,0 +1,385 @@
+//! The engine side of the gateway: a dedicated thread owning the
+//! [`Engine`], driven over mpsc command channels. Connection handlers never
+//! touch the engine directly — they hold a cloneable [`EngineHandle`] and
+//! speak three verbs: submit (returns a per-request event receiver), cancel
+//! (lands at the engine's next tick boundary), metrics (one-shot snapshot).
+//!
+//! **Park/wake:** when nothing is in flight the engine thread blocks on
+//! `recv()` — parked by the OS, zero CPU — and a `Submit` arriving on the
+//! channel wakes it. While work is in flight it drains commands with
+//! `try_recv()` between `step()` calls, so cancels and new arrivals land at
+//! the next tick boundary. Hot-spinning `step()` on an empty engine (the
+//! pre-gateway demo-loop pattern) is gone.
+//!
+//! **Disconnect containment:** each request's events go out over its own
+//! channel. If a send fails the subscriber is gone — its handler died or
+//! detected a client disconnect on write failure — and the bridge cancels
+//! the request itself, so the slot and its whole page reservation are
+//! released even if the handler never got to call
+//! [`EngineHandle::cancel`]. Handlers cancel too; the engine drops surplus
+//! cancels at call time, so the overlap is harmless.
+
+use crate::serve::{Engine, Event, FinishReason, Request, RequestId, Response, ServeMetrics};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+/// Events delivered to one request's subscriber, in order:
+/// `Deferred* → Started → Token* → Finished`; the channel closes after the
+/// terminal event (or, on gateway shutdown, without one).
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// Admission deferred (KV pool pressure); the request stays queued.
+    Deferred,
+    /// Admitted into a KV slot; prefill starts this tick.
+    Started,
+    /// One generated token, forwarded the tick it was sampled.
+    Token(u16),
+    /// Terminal: the full response and why it finished.
+    Finished {
+        response: Response,
+        reason: FinishReason,
+    },
+}
+
+/// Engine metrics and pool occupancy in one message — the `/v1/metrics`
+/// payload needs both, and the pool is only reachable on the engine thread.
+#[derive(Clone, Debug)]
+pub struct GatewaySnapshot {
+    pub serve: ServeMetrics,
+    pub total_pages: usize,
+    pub reserved_pages: usize,
+    pub in_use_pages: usize,
+    pub free_pages: usize,
+    pub in_flight: usize,
+}
+
+impl GatewaySnapshot {
+    /// JSON shape served by `GET /v1/metrics`: the flattened
+    /// [`ServeMetrics`] object plus a nested `kv_pool` occupancy object.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        self.serve
+            .to_json()
+            .set("in_flight", self.in_flight)
+            .set(
+                "kv_pool",
+                crate::util::json::Json::obj()
+                    .set("total_pages", self.total_pages)
+                    .set("reserved_pages", self.reserved_pages)
+                    .set("in_use_pages", self.in_use_pages)
+                    .set("free_pages", self.free_pages),
+            )
+    }
+}
+
+/// The engine thread has exited (gateway shut down).
+#[derive(Clone, Copy, Debug)]
+pub struct BridgeClosed;
+
+impl std::fmt::Display for BridgeClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "engine thread has shut down")
+    }
+}
+
+enum Command {
+    Submit {
+        req: Request,
+        reply: Sender<(RequestId, Receiver<StreamEvent>)>,
+    },
+    Cancel(RequestId),
+    Metrics {
+        reply: Sender<GatewaySnapshot>,
+    },
+    Shutdown,
+}
+
+/// Cloneable client half of the bridge; one per connection handler.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Command>,
+}
+
+impl EngineHandle {
+    /// Enqueue a request and return its bridge-assigned id plus the event
+    /// stream. The caller's `req.id` is overwritten: the bridge owns id
+    /// assignment (monotonic, never reused) so one handler's cancel can
+    /// never land on another connection's request.
+    pub fn submit(&self, req: Request) -> Result<(RequestId, Receiver<StreamEvent>), BridgeClosed> {
+        let (reply, reply_rx) = channel();
+        self.tx.send(Command::Submit { req, reply }).map_err(|_| BridgeClosed)?;
+        reply_rx.recv().map_err(|_| BridgeClosed)
+    }
+
+    /// Request cancellation; takes effect at the engine's next tick
+    /// boundary. Unknown or already-finished ids are a no-op.
+    pub fn cancel(&self, id: RequestId) -> Result<(), BridgeClosed> {
+        self.tx.send(Command::Cancel(id)).map_err(|_| BridgeClosed)
+    }
+
+    /// Lifetime metrics plus current KV-pool occupancy.
+    pub fn metrics(&self) -> Result<GatewaySnapshot, BridgeClosed> {
+        let (reply, reply_rx) = channel();
+        self.tx.send(Command::Metrics { reply }).map_err(|_| BridgeClosed)?;
+        reply_rx.recv().map_err(|_| BridgeClosed)
+    }
+
+    /// Ask the engine thread to exit; in-flight work is abandoned and every
+    /// subscriber channel closes. Idempotent (errors are already-down).
+    pub fn request_shutdown(&self) {
+        let _ = self.tx.send(Command::Shutdown);
+    }
+}
+
+/// Move `engine` onto its dedicated thread and return the client handle
+/// plus the thread's join handle. The thread also exits when every
+/// [`EngineHandle`] clone has been dropped.
+pub fn start(engine: Engine) -> (EngineHandle, std::thread::JoinHandle<()>) {
+    let (tx, rx) = channel();
+    let join = std::thread::Builder::new()
+        .name("nanoquant-engine".into())
+        .spawn(move || engine_thread(engine, rx))
+        .expect("spawn engine thread");
+    (EngineHandle { tx }, join)
+}
+
+fn engine_thread(mut engine: Engine, rx: Receiver<Command>) {
+    let mut subscribers: HashMap<RequestId, Sender<StreamEvent>> = HashMap::new();
+    let mut next_id: RequestId = 1;
+    'run: loop {
+        if engine.is_idle() {
+            // Park until the next command (or until every handle is gone).
+            match rx.recv() {
+                Ok(cmd) => {
+                    if !handle_command(&mut engine, cmd, &mut subscribers, &mut next_id) {
+                        break 'run;
+                    }
+                }
+                Err(_) => break 'run,
+            }
+        }
+        // Drain whatever else is pending so a burst of submits/cancels all
+        // lands at this tick boundary.
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    if !handle_command(&mut engine, cmd, &mut subscribers, &mut next_id) {
+                        break 'run;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break 'run,
+            }
+        }
+        if !engine.is_idle() {
+            for event in engine.step() {
+                dispatch(&mut engine, event, &mut subscribers);
+            }
+        }
+    }
+    // Dropping the engine (and the subscriber senders) closes every
+    // per-request channel; handlers see the close and end their streams.
+}
+
+/// Apply one command; `false` = shut down.
+fn handle_command(
+    engine: &mut Engine,
+    cmd: Command,
+    subscribers: &mut HashMap<RequestId, Sender<StreamEvent>>,
+    next_id: &mut RequestId,
+) -> bool {
+    match cmd {
+        Command::Submit { mut req, reply } => {
+            req.id = *next_id;
+            *next_id += 1;
+            let (ev_tx, ev_rx) = channel();
+            let id = engine.submit(req);
+            subscribers.insert(id, ev_tx);
+            // A dropped reply receiver means the handler died between send
+            // and recv; the first event send will fail and auto-cancel.
+            let _ = reply.send((id, ev_rx));
+            true
+        }
+        Command::Cancel(id) => {
+            engine.cancel(id);
+            true
+        }
+        Command::Metrics { reply } => {
+            let pool = engine.pool();
+            let _ = reply.send(GatewaySnapshot {
+                total_pages: pool.total_pages(),
+                reserved_pages: pool.reserved_pages(),
+                in_use_pages: pool.in_use_pages(),
+                free_pages: pool.free_pages(),
+                in_flight: engine.in_flight(),
+                serve: engine.snapshot(),
+            });
+            true
+        }
+        Command::Shutdown => false,
+    }
+}
+
+/// Forward one engine event to its subscriber. A failed send means the
+/// subscriber is gone — cancel the request so its slot and whole page
+/// reservation come back (the disconnect-containment path).
+fn dispatch(
+    engine: &mut Engine,
+    event: Event,
+    subscribers: &mut HashMap<RequestId, Sender<StreamEvent>>,
+) {
+    let (id, ev) = match event {
+        Event::Finished { response, reason } => {
+            if let Some(tx) = subscribers.remove(&response.id) {
+                let _ = tx.send(StreamEvent::Finished { response, reason });
+            }
+            return;
+        }
+        Event::Started { id } => (id, StreamEvent::Started),
+        Event::Deferred { id } => (id, StreamEvent::Deferred),
+        Event::Token { id, token } => (id, StreamEvent::Token(token)),
+    };
+    let gone = match subscribers.get(&id) {
+        Some(tx) => tx.send(ev).is_err(),
+        // Already cancelled-by-disconnect; residual events (e.g. tokens
+        // from the tick the cancel was recorded on) drop silently.
+        None => false,
+    };
+    if gone {
+        subscribers.remove(&id);
+        engine.cancel(id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::decode::dense_decode_model;
+    use crate::nn::family_config;
+    use crate::nn::model::ModelParams;
+    use crate::serve::ServerConfig;
+    use crate::util::rng::Rng;
+    use std::time::{Duration, Instant};
+
+    fn tiny_engine(cfg: ServerConfig) -> Engine {
+        let mcfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let params = ModelParams::init(&mcfg, &mut rng);
+        Engine::new(dense_decode_model(&params), cfg)
+    }
+
+    fn recv_all(events: &Receiver<StreamEvent>) -> (Vec<u16>, Option<FinishReason>) {
+        let mut tokens = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match events.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(StreamEvent::Token(t)) => tokens.push(t),
+                Ok(StreamEvent::Finished { reason, .. }) => return (tokens, Some(reason)),
+                Ok(_) => {}
+                Err(_) => return (tokens, None),
+            }
+        }
+    }
+
+    #[test]
+    fn bridge_submits_streams_and_parks_idle() {
+        let (handle, join) = start(tiny_engine(ServerConfig::default()));
+        let (id, events) = handle.submit(Request::greedy(0, vec![1, 2, 3], 5)).unwrap();
+        assert_eq!(id, 1, "bridge assigns its own ids starting at 1");
+        let (tokens, reason) = recv_all(&events);
+        assert_eq!(tokens.len(), 5);
+        assert_eq!(reason, Some(FinishReason::MaxNew));
+        // Parked now (no busy loop to observe directly, but the thread must
+        // still answer commands from the parked state).
+        let snap = handle.metrics().unwrap();
+        assert_eq!(snap.serve.total_tokens, 5);
+        assert_eq!(snap.in_flight, 0);
+        assert_eq!(snap.reserved_pages, 0);
+        handle.request_shutdown();
+        join.join().unwrap();
+        assert!(handle.submit(Request::greedy(0, vec![1], 1)).is_err(), "closed after shutdown");
+        assert!(handle.metrics().is_err());
+    }
+
+    #[test]
+    fn bridge_assigns_fresh_ids_ignoring_caller_ids() {
+        let (handle, join) = start(tiny_engine(ServerConfig { max_batch: 2, ..Default::default() }));
+        let (ida, ea) = handle.submit(Request::greedy(77, vec![1, 2], 2)).unwrap();
+        let (idb, eb) = handle.submit(Request::greedy(77, vec![3, 4], 2)).unwrap();
+        assert_ne!(ida, idb, "caller-chosen duplicate ids must not collide");
+        let (ta, ra) = recv_all(&ea);
+        let (tb, rb) = recv_all(&eb);
+        assert_eq!((ta.len(), ra), (2, Some(FinishReason::MaxNew)));
+        assert_eq!((tb.len(), rb), (2, Some(FinishReason::MaxNew)));
+        handle.request_shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn dropped_subscriber_cancels_and_releases_reservation() {
+        // The disconnect-containment path without any TCP: drop the event
+        // receiver mid-stream and the bridge must cancel the request,
+        // returning the KV pool to fully-free.
+        let cfg = ServerConfig { max_batch: 2, kv_pages: Some(4), ..Default::default() };
+        let (handle, join) = start(tiny_engine(cfg));
+        let prompt: Vec<u16> = (0..40).map(|j| (j % 250) as u16).collect();
+        let (_, events) = handle.submit(Request::greedy(0, prompt, 80)).unwrap();
+        // Wait until it is actually decoding (a token arrived), then drop.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match events.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(StreamEvent::Token(_)) => break,
+                Ok(_) => {}
+                Err(e) => panic!("request never reached decode: {e:?}"),
+            }
+        }
+        drop(events);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let snap = handle.metrics().unwrap();
+            if snap.serve.cancellations == 1 {
+                assert_eq!(snap.reserved_pages, 0, "whole reservation must come back");
+                assert_eq!(snap.in_use_pages, 0);
+                assert_eq!(snap.in_flight, 0);
+                assert!(snap.free_pages > 0, "touched pages return to the free list");
+                break;
+            }
+            assert!(Instant::now() < deadline, "bridge never cancelled the dropped stream");
+            std::thread::yield_now();
+        }
+        // The engine is healthy afterwards: a fresh request completes.
+        let (_, events) = handle.submit(Request::greedy(0, vec![5, 6], 3)).unwrap();
+        let (tokens, reason) = recv_all(&events);
+        assert_eq!((tokens.len(), reason), (3, Some(FinishReason::MaxNew)));
+        handle.request_shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn cancel_via_handle_finishes_with_cancelled_reason() {
+        let (handle, join) = start(tiny_engine(ServerConfig::default()));
+        let (id, events) = handle.submit(Request::greedy(0, vec![1, 2, 3], 200)).unwrap();
+        // Let it stream a little, then cancel through the handle.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut streamed = 0usize;
+        while streamed < 2 {
+            match events.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(StreamEvent::Token(_)) => streamed += 1,
+                Ok(_) => {}
+                Err(e) => panic!("stream stalled: {e:?}"),
+            }
+        }
+        handle.cancel(id).unwrap();
+        let (more, reason) = recv_all(&events);
+        assert_eq!(reason, Some(FinishReason::Cancelled));
+        assert!(streamed + more.len() < 200, "cancel must land well before the budget");
+        handle.request_shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn dropping_every_handle_stops_the_engine_thread() {
+        let (handle, join) = start(tiny_engine(ServerConfig::default()));
+        drop(handle);
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,43 @@
+//! `serve::http` — a dependency-free HTTP/1.1 gateway with SSE streaming
+//! in front of [`crate::serve::Engine`]: the layer that turns the
+//! event-driven serving loop into something real clients can reach.
+//!
+//! Three pieces, one per file:
+//!
+//! - [`protocol`] — the wire: a hardened request parser (head/header/body
+//!   size limits, `Content-Length` framing) and response/SSE writers over
+//!   plain `Read`/`Write`.
+//! - [`bridge`] — the engine side: the [`Engine`] runs on one dedicated
+//!   thread, parked on its command channel when idle (no hot `step()`
+//!   spin) and woken by submit; handlers talk to it through a cloneable
+//!   [`EngineHandle`] and receive per-request [`StreamEvent`] channels.
+//! - [`server`] — the network side: the accept loop, connection handlers
+//!   on the blocking-task pool, routing, and [`Gateway`] lifecycle
+//!   (bind/serve/graceful shutdown).
+//!
+//! Quickstart (`cargo run --release -- gateway --addr 127.0.0.1:8080`):
+//!
+//! ```text
+//! curl -N -X POST 'http://127.0.0.1:8080/v1/generate?stream=1' \
+//!      -d '{"prompt": "the robin is a kind of", "max_new": 16}'
+//! data: {"id":1,"started":true}
+//! data: {"id":1,"index":0,"token":57}
+//! ...
+//! data: {"done":true,"finish_reason":"max_new","tokens":[...],"text":"...","ttft_s":0.012,...}
+//! ```
+//!
+//! Reliability contract: a client that disconnects mid-stream is detected
+//! on the next frame-write failure and translated into an engine cancel,
+//! so its KV slot and whole page reservation return to the pool — a
+//! disconnect storm leaves the pool fully free. See `DESIGN.md` §HTTP
+//! gateway for the full threading diagram.
+//!
+//! [`Engine`]: crate::serve::Engine
+
+pub mod bridge;
+pub mod protocol;
+pub mod server;
+
+pub use bridge::{BridgeClosed, EngineHandle, GatewaySnapshot, StreamEvent};
+pub use protocol::{HttpLimits, HttpRequest, SseWriter};
+pub use server::{Gateway, GatewayConfig};

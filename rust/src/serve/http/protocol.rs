@@ -1,0 +1,409 @@
+//! Minimal HTTP/1.1 wire protocol: a hardened request reader (head, header
+//! and body size limits) plus response and SSE writers, over any
+//! `BufRead`/`Write` pair. `std`-only — no hyper, no async runtime.
+//!
+//! Scope: exactly what the gateway needs. `Content-Length` bodies only
+//! (chunked transfer encoding is rejected as malformed), no percent
+//! decoding (paths and query values here are plain tokens), `HTTP/1.1`
+//! keep-alive honored for framed responses while SSE streams are
+//! terminated by connection close. Every read is charged against a byte
+//! budget so a hostile peer can make a request *fail*, never make the
+//! parser allocate without bound.
+
+use crate::util::json::Json;
+use std::io::{BufRead, Write};
+use std::time::Instant;
+
+/// Wire-level bounds enforced while reading one request. Defaults are sized
+/// for API traffic (small JSON bodies), not uploads.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpLimits {
+    /// Request line + all header lines must fit in this many bytes.
+    pub max_head_bytes: usize,
+    /// Maximum number of header lines.
+    pub max_headers: usize,
+    /// Maximum `Content-Length` accepted (larger bodies → 413 before any
+    /// body byte is read).
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> HttpLimits {
+        HttpLimits { max_head_bytes: 16 << 10, max_headers: 64, max_body_bytes: 1 << 20 }
+    }
+}
+
+/// One parsed request. Header names are lowercased at parse time; the
+/// target is split at `?` into `path` and `raw_query`.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub raw_query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// First header with this (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// First query pair with this key (`?stream=1&x` style; a bare key maps
+    /// to the empty string).
+    pub fn query(&self, key: &str) -> Option<&str> {
+        if self.raw_query.is_empty() {
+            return None;
+        }
+        self.raw_query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+            (k == key).then_some(v)
+        })
+    }
+
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// default unless `Connection: close`).
+    pub fn wants_keep_alive(&self) -> bool {
+        !self.header("connection").is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Why reading a request failed; the server maps the malformed variants to
+/// response statuses and the I/O ones to silent connection close.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Clean EOF before the first request byte — a keep-alive connection
+    /// ended; not an error condition.
+    Closed,
+    /// Socket failure mid-request (includes read timeouts).
+    Io(std::io::Error),
+    /// Unparseable request → 400.
+    Malformed(String),
+    /// Head exceeded `max_head_bytes`/`max_headers` → 431.
+    HeadTooLarge,
+    /// Declared body exceeds `max_body_bytes` → 413.
+    BodyTooLarge,
+}
+
+/// Read one request. `Err(HttpError::Closed)` on clean EOF before any byte
+/// of a request line.
+///
+/// `deadline` bounds the *whole* request read, not just each socket read:
+/// a peer trickling one byte per almost-timeout (slow-loris) is cut off
+/// when the deadline passes, however many reads it keeps alive. The
+/// caller's per-read socket timeout is what makes each blocking read
+/// return in time to notice.
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    limits: &HttpLimits,
+    deadline: Option<Instant>,
+) -> Result<HttpRequest, HttpError> {
+    let mut head_budget = limits.max_head_bytes;
+    let request_line = match read_line(r, &mut head_budget, deadline)? {
+        None => return Err(HttpError::Closed),
+        Some(line) => line,
+    };
+    let mut parts = request_line.split_whitespace();
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => return Err(HttpError::Malformed(format!("bad request line {request_line:?}"))),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+    }
+    let (path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, &mut head_budget, deadline)? {
+            None => return Err(HttpError::Malformed("eof inside headers".into())),
+            Some(line) => line,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::HeadTooLarge);
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::Malformed(format!("bad header line {line:?}")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let req = HttpRequest {
+        method: method.to_string(),
+        path,
+        raw_query,
+        headers,
+        body: Vec::new(),
+    };
+    if req.header("transfer-encoding").is_some() {
+        return Err(HttpError::Malformed("chunked bodies are not supported".into()));
+    }
+    let body_len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed(format!("bad content-length {v:?}")))?,
+    };
+    if body_len > limits.max_body_bytes {
+        return Err(HttpError::BodyTooLarge);
+    }
+    let mut req = req;
+    if body_len > 0 {
+        req.body = vec![0u8; body_len];
+        let mut filled = 0usize;
+        while filled < body_len {
+            check_deadline(deadline)?;
+            let n = r.read(&mut req.body[filled..]).map_err(HttpError::Io)?;
+            if n == 0 {
+                return Err(HttpError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "eof inside body",
+                )));
+            }
+            filled += n;
+        }
+    }
+    Ok(req)
+}
+
+fn check_deadline(deadline: Option<Instant>) -> Result<(), HttpError> {
+    if deadline.is_some_and(|d| Instant::now() > d) {
+        return Err(HttpError::Io(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            "request read deadline exceeded",
+        )));
+    }
+    Ok(())
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, charging each byte to
+/// `budget`. `Ok(None)` = clean EOF with zero bytes read.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+    deadline: Option<Instant>,
+) -> Result<Option<String>, HttpError> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        let n = r.read(&mut byte).map_err(HttpError::Io)?;
+        if n == 0 {
+            if line.is_empty() {
+                return Ok(None);
+            }
+            return Err(HttpError::Malformed("eof inside head line".into()));
+        }
+        if *budget == 0 {
+            return Err(HttpError::HeadTooLarge);
+        }
+        *budget -= 1;
+        if byte[0] == b'\n' {
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            return String::from_utf8(line)
+                .map(Some)
+                .map_err(|_| HttpError::Malformed("non-utf8 head line".into()));
+        }
+        line.push(byte[0]);
+        check_deadline(deadline)?;
+    }
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Status",
+    }
+}
+
+/// Write a complete `Content-Length`-framed response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// [`write_response`] with a JSON body.
+pub fn write_json_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write_response(w, status, "application/json", body.to_string().as_bytes(), keep_alive)
+}
+
+/// Server-sent-events writer: the response head up front, then one
+/// `data: <json>\n\n` frame per event, flushed eagerly so the client sees
+/// each token the tick it was sampled. SSE has no `Content-Length`, so the
+/// stream is delimited by connection close (declared in the head).
+///
+/// The compact JSON writer escapes control characters, so a payload is
+/// always a single line — one `data:` field per frame is valid SSE framing.
+pub struct SseWriter<'a, W: Write> {
+    w: &'a mut W,
+}
+
+impl<'a, W: Write> SseWriter<'a, W> {
+    /// Write the stream head. After this succeeds the response status is on
+    /// the wire; failures are only reportable as in-stream `error` frames.
+    pub fn start(w: &'a mut W) -> std::io::Result<SseWriter<'a, W>> {
+        w.write_all(
+            b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+              Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+        )?;
+        w.flush()?;
+        Ok(SseWriter { w })
+    }
+
+    /// Write and flush one `data:` frame. An `Err` means the client is gone
+    /// — the caller must translate it into an engine cancel.
+    pub fn frame(&mut self, payload: &Json) -> std::io::Result<()> {
+        write!(self.w, "data: {}\n\n", payload.to_string())?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<HttpRequest, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()), &HttpLimits::default(), None)
+    }
+
+    #[test]
+    fn parses_post_with_body_query_and_headers() {
+        let req = parse(
+            "POST /v1/generate?stream=1&x HTTP/1.1\r\nHost: localhost\r\n\
+             Content-Type: application/json\r\nContent-Length: 13\r\n\r\n{\"prompt\":[]}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.query("stream"), Some("1"));
+        assert_eq!(req.query("x"), Some(""));
+        assert_eq!(req.query("absent"), None);
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.header("HOST"), Some("localhost"));
+        assert_eq!(req.body, b"{\"prompt\":[]}");
+        assert!(req.wants_keep_alive());
+    }
+
+    #[test]
+    fn parses_get_without_body_and_bare_lf_lines() {
+        let req = parse("GET /healthz HTTP/1.1\nConnection: close\n\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.raw_query.is_empty());
+        assert!(req.body.is_empty());
+        assert!(!req.wants_keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_is_closed_not_malformed() {
+        assert!(matches!(parse(""), Err(HttpError::Closed)));
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        for raw in [
+            "GARBAGE\r\n\r\n",
+            "GET /x HTTP/2.0\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+            "GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            "GET /x HTTP/1.1\r\nContent-Length: ten\r\n\r\n",
+            "GET /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n",
+            "GET /x HTTP/1.1\r\nHost: truncated-head",
+        ] {
+            assert!(
+                matches!(parse(raw), Err(HttpError::Malformed(_))),
+                "{raw:?} should be malformed"
+            );
+        }
+        // Truncated body: declared length longer than the stream.
+        let raw = "POST /x HTTP/1.1\r\nContent-Length: 99\r\n\r\nshort";
+        assert!(matches!(parse(raw), Err(HttpError::Io(_))));
+    }
+
+    #[test]
+    fn limits_cap_head_headers_and_body() {
+        let tight = HttpLimits { max_head_bytes: 64, max_headers: 2, max_body_bytes: 8 };
+        let mut c = Cursor::new(format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(200)).into_bytes());
+        assert!(matches!(read_request(&mut c, &tight, None), Err(HttpError::HeadTooLarge)));
+        let mut c = Cursor::new(b"GET /x HTTP/1.1\r\na: 1\r\nb: 2\r\nc: 3\r\n\r\n".to_vec());
+        assert!(matches!(read_request(&mut c, &tight, None), Err(HttpError::HeadTooLarge)));
+        let mut c = Cursor::new(b"POST /x HTTP/1.1\r\nContent-Length: 9\r\n\r\n123456789".to_vec());
+        assert!(matches!(read_request(&mut c, &tight, None), Err(HttpError::BodyTooLarge)));
+    }
+
+    #[test]
+    fn expired_deadline_cuts_the_read_off() {
+        // A deadline in the past trips on the first head byte — the whole
+        // slow-loris defense in one assertion (each byte re-checks it).
+        let past = Some(Instant::now() - std::time::Duration::from_secs(1));
+        let mut c = Cursor::new(b"GET /x HTTP/1.1\r\n\r\n".to_vec());
+        match read_request(&mut c, &HttpLimits::default(), past) {
+            Err(HttpError::Io(e)) => assert_eq!(e.kind(), std::io::ErrorKind::TimedOut),
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn response_writer_frames_with_content_length() {
+        let mut out = Vec::new();
+        write_json_response(&mut out, 200, &Json::obj().set("ok", true), true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Type: application/json\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn sse_writer_emits_data_frames() {
+        let mut out = Vec::new();
+        {
+            let mut sse = SseWriter::start(&mut out).unwrap();
+            sse.frame(&Json::obj().set("token", 7usize)).unwrap();
+            sse.frame(&Json::obj().set("done", true)).unwrap();
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Type: text/event-stream\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("\r\n\r\ndata: {\"token\":7}\n\ndata: {\"done\":true}\n\n"));
+    }
+}

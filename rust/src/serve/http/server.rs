@@ -1,0 +1,584 @@
+//! The network side of the gateway: listener, connection lifecycle, and
+//! request routing.
+//!
+//! Threading model: one `nanoquant-accept` thread blocks on the listener
+//! and hands each connection to [`crate::util::threadpool::spawn_task`]
+//! (the blocking-task pool — distinct from the compute workers, so a slow
+//! client can never starve the engine's slot fan-out). Handlers talk to the
+//! engine thread through the [`EngineHandle`] bridge only.
+//!
+//! Endpoints:
+//!
+//! | method | path | behavior |
+//! |---|---|---|
+//! | `POST` | `/v1/generate` | JSON body → full JSON response |
+//! | `POST` | `/v1/generate?stream=1` | same body → SSE, one `data:` frame per token, final frame carries `finish_reason` + timings |
+//! | `POST` | `/v1/cancel/{id}` | cancel lands at the next engine tick |
+//! | `GET` | `/v1/metrics` | lifetime [`ServeMetrics`] + KV-pool occupancy |
+//! | `GET` | `/healthz` | liveness |
+//!
+//! A client disconnect mid-stream surfaces as a frame-write failure; the
+//! handler translates it into [`EngineHandle::cancel`], releasing the slot
+//! and its whole page reservation (the bridge independently cancels when
+//! the handler's event receiver drops — belt and braces).
+//!
+//! [`ServeMetrics`]: crate::serve::ServeMetrics
+
+use super::bridge::{self, EngineHandle, StreamEvent};
+use super::protocol::{self, HttpError, HttpLimits, HttpRequest, SseWriter};
+use crate::data::tokenize;
+use crate::serve::{Engine, FinishReason, Request, RequestId, Response};
+use crate::util::json::{Json, ParseLimits};
+use crate::util::threadpool::spawn_task;
+use std::io::{BufReader, ErrorKind};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Network-face configuration; scheduler/engine knobs live in
+/// [`crate::serve::ServerConfig`].
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (port `0` = ephemeral; read the
+    /// real one from [`Gateway::local_addr`]).
+    pub addr: String,
+    /// Wire-level read limits per request.
+    pub limits: HttpLimits,
+    /// Largest `max_new` a client may ask for — the engine reserves the
+    /// whole `prompt + max_new` KV footprint at admission, so an unbounded
+    /// ask could monopolize the page pool.
+    pub max_max_new: usize,
+    /// Once a request starts arriving it must complete within this window
+    /// (a stalled sender cannot pin a handler forever).
+    pub request_read_timeout: Duration,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> GatewayConfig {
+        GatewayConfig {
+            addr: "127.0.0.1:8080".into(),
+            limits: HttpLimits::default(),
+            max_max_new: 1024,
+            request_read_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Granularity at which an idle keep-alive handler polls the shutdown flag.
+const IDLE_POLL: Duration = Duration::from_millis(200);
+
+/// A running gateway: listener + engine thread. Dropping it (or calling
+/// [`Gateway::shutdown`]) stops both.
+pub struct Gateway {
+    addr: SocketAddr,
+    handle: EngineHandle,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    engine: Option<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind `cfg.addr`, move `engine` onto its dedicated thread, and start
+    /// accepting. Returns once the listener is live.
+    pub fn start(engine: Engine, cfg: GatewayConfig) -> std::io::Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let (handle, engine_join) = bridge::start(engine);
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let handle = handle.clone();
+            let stop = stop.clone();
+            let cfg = Arc::new(cfg);
+            std::thread::Builder::new().name("nanoquant-accept".into()).spawn(move || {
+                accept_loop(listener, handle, cfg, stop)
+            })?
+        };
+        Ok(Gateway {
+            addr,
+            handle,
+            stop,
+            accept: Some(accept),
+            engine: Some(engine_join),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// A cloneable in-process client handle — same bridge the connection
+    /// handlers use (tests and demos drive it directly).
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: stop accepting, wake parked handlers via the stop
+    /// flag, stop the engine thread (in-flight work is abandoned, streams
+    /// close), and join both owned threads.
+    pub fn shutdown(mut self) {
+        self.stop_all();
+    }
+
+    /// Serve until the process exits (the CLI path): parks on the accept
+    /// thread, which never returns absent [`Gateway::shutdown`].
+    pub fn join(mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        if let Some(e) = self.engine.take() {
+            let _ = e.join();
+        }
+    }
+
+    fn stop_all(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept call with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        self.handle.request_shutdown();
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        if let Some(e) = self.engine.take() {
+            let _ = e.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop_all();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    handle: EngineHandle,
+    cfg: Arc<GatewayConfig>,
+    stop: Arc<AtomicBool>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(stream) => stream,
+            Err(_) => {
+                // Transient (ECONNABORTED) or persistent (EMFILE under fd
+                // exhaustion) — either way, back off instead of spinning
+                // the accept thread at 100% CPU on an immediate re-error.
+                std::thread::sleep(Duration::from_millis(50));
+                continue;
+            }
+        };
+        let handle = handle.clone();
+        let cfg = cfg.clone();
+        let stop = stop.clone();
+        spawn_task(move || handle_connection(stream, handle, cfg, stop));
+    }
+}
+
+/// One connection: keep-alive loop of read-request → route → respond.
+/// Between requests the handler parks on a short-timeout `peek`, checking
+/// the stop flag each wake so shutdown is prompt.
+fn handle_connection(
+    stream: TcpStream,
+    handle: EngineHandle,
+    cfg: Arc<GatewayConfig>,
+    stop: Arc<AtomicBool>,
+) {
+    // Token frames are tiny; Nagle would batch them across ticks.
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(cfg.request_read_timeout));
+    let mut reader = BufReader::new(stream);
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        // Idle keep-alive park: wait for the next request's first byte
+        // without consuming it (a read timeout mid-request would lose
+        // framing; a peek timeout loses nothing).
+        if reader.buffer().is_empty() {
+            let sock = reader.get_ref();
+            let _ = sock.set_read_timeout(Some(IDLE_POLL));
+            let mut probe = [0u8; 1];
+            match sock.peek(&mut probe) {
+                Ok(0) => return, // client closed
+                Ok(_) => {}
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    continue;
+                }
+                Err(_) => return,
+            }
+        }
+        // A request is arriving: bound its total read time. The socket
+        // timeout bounds each read; the deadline bounds the whole request,
+        // so a trickling sender (slow-loris) is cut off too.
+        let _ = reader.get_ref().set_read_timeout(Some(cfg.request_read_timeout));
+        let deadline = Some(Instant::now() + cfg.request_read_timeout);
+        let req = match protocol::read_request(&mut reader, &cfg.limits, deadline) {
+            Ok(req) => req,
+            Err(HttpError::Closed) | Err(HttpError::Io(_)) => return,
+            Err(err) => {
+                // Wire-level reject: best-effort status, then close (the
+                // request framing is unrecoverable).
+                let (status, msg) = match err {
+                    HttpError::BodyTooLarge => (413, "body exceeds the size limit".to_string()),
+                    HttpError::HeadTooLarge => (431, "request head too large".to_string()),
+                    HttpError::Malformed(m) => (400, m),
+                    HttpError::Closed | HttpError::Io(_) => unreachable!(),
+                };
+                let _ = protocol::write_json_response(
+                    reader.get_mut(),
+                    status,
+                    &err_json(&msg),
+                    false,
+                );
+                drain_before_close(&mut reader);
+                return;
+            }
+        };
+        match route(&req, &handle, &mut reader, &cfg) {
+            Ok(true) if req.wants_keep_alive() && !stop.load(Ordering::Relaxed) => continue,
+            _ => return,
+        }
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj().set("error", msg)
+}
+
+/// Lingering close: after rejecting a request whose bytes were not fully
+/// consumed (oversized head/body), drain what the client already sent —
+/// bounded in bytes and time — before closing. Closing with unread data
+/// makes the kernel RST the connection, which can discard the just-written
+/// error response before the client reads it.
+fn drain_before_close(reader: &mut BufReader<TcpStream>) {
+    let _ = reader.get_ref().set_read_timeout(Some(Duration::from_millis(500)));
+    let mut sink = [0u8; 4096];
+    let mut budget: usize = 1 << 20;
+    loop {
+        match std::io::Read::read(reader, &mut sink) {
+            Ok(0) | Err(_) => return,
+            Ok(n) => {
+                budget = budget.saturating_sub(n);
+                if budget == 0 {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one request; `Ok(true)` = the connection may be kept alive.
+fn route(
+    req: &HttpRequest,
+    handle: &EngineHandle,
+    reader: &mut BufReader<TcpStream>,
+    cfg: &GatewayConfig,
+) -> std::io::Result<bool> {
+    let w = reader.get_mut();
+    let ka = req.wants_keep_alive();
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            protocol::write_json_response(w, 200, &Json::obj().set("ok", true), ka)?;
+            Ok(true)
+        }
+        ("GET", "/v1/metrics") => match handle.metrics() {
+            Ok(snap) => {
+                protocol::write_json_response(w, 200, &snap.to_json(), ka)?;
+                Ok(true)
+            }
+            Err(closed) => {
+                protocol::write_json_response(w, 503, &err_json(&closed.to_string()), false)?;
+                Ok(false)
+            }
+        },
+        ("POST", "/v1/generate") => generate(req, handle, w, cfg),
+        ("POST", path) if path.starts_with("/v1/cancel/") => {
+            match path["/v1/cancel/".len()..].parse::<RequestId>() {
+                Ok(id) => {
+                    // Accepted, not synchronous: the cancel lands at the
+                    // engine's next tick boundary (unknown ids no-op).
+                    let accepted = handle.cancel(id).is_ok();
+                    let body = Json::obj().set("id", id).set("accepted", accepted);
+                    protocol::write_json_response(w, 200, &body, ka)?;
+                    Ok(true)
+                }
+                Err(_) => {
+                    let body = err_json("cancel id must be an unsigned integer");
+                    protocol::write_json_response(w, 400, &body, ka)?;
+                    Ok(true)
+                }
+            }
+        }
+        ("HEAD", _) => {
+            // Unsupported, and a HEAD response must carry no body despite
+            // its Content-Length — send an empty 405 and close so the
+            // connection framing can't desync.
+            protocol::write_response(w, 405, "application/json", b"", false)?;
+            Ok(false)
+        }
+        ("GET" | "POST" | "PUT" | "DELETE" | "PATCH" | "OPTIONS", _) => {
+            protocol::write_json_response(w, 404, &err_json("no such endpoint"), ka)?;
+            Ok(true)
+        }
+        _ => {
+            protocol::write_json_response(w, 405, &err_json("method not allowed"), ka)?;
+            Ok(true)
+        }
+    }
+}
+
+/// Parsed and validated `/v1/generate` body.
+struct GenerateSpec {
+    request: Request,
+    stream: bool,
+}
+
+fn parse_generate_body(req: &HttpRequest, cfg: &GatewayConfig) -> Result<GenerateSpec, String> {
+    let text = std::str::from_utf8(&req.body).map_err(|_| "body must be UTF-8".to_string())?;
+    let limits = ParseLimits { max_bytes: cfg.limits.max_body_bytes, max_depth: 32 };
+    let body = Json::parse_with_limits(text, limits).map_err(|e| format!("bad JSON body: {e}"))?;
+
+    let prompt: Vec<u16> = match body.get("prompt") {
+        Some(Json::Str(s)) => tokenize(s),
+        Some(Json::Arr(items)) => {
+            let mut toks = Vec::with_capacity(items.len());
+            for (i, item) in items.iter().enumerate() {
+                toks.push(token_u16(item).ok_or_else(|| {
+                    format!("prompt[{i}] must be an integer token id in 0..=65535")
+                })?);
+            }
+            toks
+        }
+        Some(_) => return Err("prompt must be a string or an array of token ids".into()),
+        None => return Err("missing required field: prompt (string or token array)".into()),
+    };
+
+    let max_new = match body.get("max_new") {
+        None => crate::serve::DEFAULT_MAX_NEW,
+        Some(v) => non_negative_int(v).ok_or("max_new must be a non-negative integer")?,
+    };
+    if max_new > cfg.max_max_new {
+        return Err(format!("max_new {} exceeds this gateway's cap of {}", max_new, cfg.max_max_new));
+    }
+    let temperature = match body.get("temperature") {
+        None => 0.0f32,
+        Some(v) => match v.as_f64() {
+            Some(t) if t.is_finite() && t >= 0.0 => t as f32,
+            _ => return Err("temperature must be a finite number >= 0".into()),
+        },
+    };
+    let top_k = match body.get("top_k") {
+        None => 0usize,
+        Some(v) => non_negative_int(v).ok_or("top_k must be a non-negative integer")?,
+    };
+    let stop_tokens: Vec<u16> = match body.get("stop_tokens") {
+        None => Vec::new(),
+        Some(Json::Arr(items)) => {
+            let mut toks = Vec::with_capacity(items.len());
+            for (i, item) in items.iter().enumerate() {
+                toks.push(token_u16(item).ok_or_else(|| {
+                    format!("stop_tokens[{i}] must be an integer token id in 0..=65535")
+                })?);
+            }
+            toks
+        }
+        Some(_) => return Err("stop_tokens must be an array of token ids".into()),
+    };
+    let stream = match body.get("stream") {
+        None => false,
+        Some(v) => v.as_bool().ok_or("stream must be a boolean")?,
+    };
+    // The id is overwritten by the bridge; 0 is a placeholder.
+    let request = Request::new(0, prompt)
+        .max_new(max_new)
+        .temperature(temperature)
+        .top_k(top_k)
+        .stop_tokens(stop_tokens);
+    Ok(GenerateSpec { request, stream })
+}
+
+fn non_negative_int(v: &Json) -> Option<usize> {
+    v.as_f64().filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize)
+}
+
+fn token_u16(v: &Json) -> Option<u16> {
+    v.as_f64()
+        .filter(|x| x.is_finite() && *x >= 0.0 && *x <= f64::from(u16::MAX) && x.fract() == 0.0)
+        .map(|x| x as u16)
+}
+
+fn generate(
+    req: &HttpRequest,
+    handle: &EngineHandle,
+    w: &mut TcpStream,
+    cfg: &GatewayConfig,
+) -> std::io::Result<bool> {
+    let ka = req.wants_keep_alive();
+    let spec = match parse_generate_body(req, cfg) {
+        Ok(spec) => spec,
+        Err(msg) => {
+            protocol::write_json_response(w, 400, &err_json(&msg), ka)?;
+            return Ok(true);
+        }
+    };
+    let stream = spec.stream || req.query("stream").is_some_and(|v| v == "1" || v == "true");
+    let Ok((id, events)) = handle.submit(spec.request) else {
+        protocol::write_json_response(w, 503, &err_json("engine has shut down"), false)?;
+        return Ok(false);
+    };
+    if stream {
+        stream_sse(id, &events, handle, w)
+    } else {
+        respond_full(id, &events, handle, w, ka)
+    }
+}
+
+fn reason_str(reason: FinishReason) -> &'static str {
+    match reason {
+        FinishReason::MaxNew => "max_new",
+        FinishReason::Stop => "stop",
+        FinishReason::Cancelled => "cancelled",
+    }
+}
+
+fn response_json(r: &Response, reason: FinishReason) -> Json {
+    Json::obj()
+        .set("id", r.id)
+        .set("finish_reason", reason_str(reason))
+        .set("tokens", r.tokens.iter().map(|&t| t as usize).collect::<Vec<usize>>())
+        .set("text", r.text.as_str())
+        .set("ttft_s", r.ttft_s)
+        .set("decode_s", r.decode_s)
+        .set("queue_s", r.queue_s)
+}
+
+/// Whether the peer has hung up: a non-blocking `peek` sees EOF or a hard
+/// error. `WouldBlock` (nothing to read, still connected) and pipelined
+/// bytes both mean the client is alive.
+fn client_gone(sock: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    if sock.set_nonblocking(true).is_err() {
+        return false;
+    }
+    let peeked = sock.peek(&mut probe);
+    let _ = sock.set_nonblocking(false);
+    match peeked {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    }
+}
+
+/// Blocking full-response mode: wait for `Finished`, send one JSON body.
+/// There is no socket write to fail until the end, so the disconnect check
+/// is an explicit poll: a client that hung up mid-generation must not keep
+/// its slot and page reservation decoding for a dead peer.
+fn respond_full(
+    id: RequestId,
+    events: &std::sync::mpsc::Receiver<StreamEvent>,
+    handle: &EngineHandle,
+    w: &mut TcpStream,
+    keep_alive: bool,
+) -> std::io::Result<bool> {
+    loop {
+        match events.recv_timeout(IDLE_POLL) {
+            Ok(StreamEvent::Finished { response, reason }) => {
+                debug_assert_eq!(response.id, id);
+                protocol::write_json_response(
+                    w,
+                    200,
+                    &response_json(&response, reason),
+                    keep_alive,
+                )?;
+                return Ok(true);
+            }
+            Ok(_) => continue,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if client_gone(w) {
+                    let _ = handle.cancel(id);
+                    return Ok(false);
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // Engine thread gone mid-request (gateway shutdown).
+                let body = err_json("engine shut down mid-request");
+                protocol::write_json_response(w, 503, &body, false)?;
+                return Ok(false);
+            }
+        }
+    }
+}
+
+/// SSE mode: one frame per token the tick it is sampled; the final frame
+/// carries `finish_reason` plus the per-request timing metrics. A write
+/// failure is the disconnect-detection point: it becomes an engine cancel,
+/// releasing the slot and its whole page reservation.
+fn stream_sse(
+    id: RequestId,
+    events: &std::sync::mpsc::Receiver<StreamEvent>,
+    handle: &EngineHandle,
+    w: &mut TcpStream,
+) -> std::io::Result<bool> {
+    let mut sse = match SseWriter::start(w) {
+        Ok(sse) => sse,
+        Err(e) => {
+            let _ = handle.cancel(id);
+            return Err(e);
+        }
+    };
+    let mut disconnected = false;
+    let mut index = 0usize;
+    loop {
+        match events.recv() {
+            Ok(StreamEvent::Started) => {
+                if sse.frame(&Json::obj().set("id", id).set("started", true)).is_err() {
+                    disconnected = true;
+                    break;
+                }
+            }
+            Ok(StreamEvent::Deferred) => {
+                let frame = Json::obj().set("id", id).set("deferred", true);
+                if sse.frame(&frame).is_err() {
+                    disconnected = true;
+                    break;
+                }
+            }
+            Ok(StreamEvent::Token(token)) => {
+                let frame =
+                    Json::obj().set("id", id).set("token", token as usize).set("index", index);
+                index += 1;
+                if sse.frame(&frame).is_err() {
+                    disconnected = true;
+                    break;
+                }
+            }
+            Ok(StreamEvent::Finished { response, reason }) => {
+                let frame = response_json(&response, reason).set("done", true);
+                let _ = sse.frame(&frame);
+                break;
+            }
+            Err(_) => {
+                // Gateway shutdown mid-stream: say so in-band if possible.
+                let _ = sse.frame(&err_json("engine shut down mid-stream"));
+                break;
+            }
+        }
+    }
+    if disconnected {
+        // The bridge's dropped-receiver path would catch this too once we
+        // return; cancelling here releases the KV reservation a tick
+        // sooner and makes the intent explicit.
+        let _ = handle.cancel(id);
+    }
+    // SSE streams are delimited by connection close, never keep-alive.
+    Ok(false)
+}

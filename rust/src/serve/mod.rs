@@ -24,6 +24,7 @@
 //! overhead × prompt length.
 
 pub mod device;
+pub mod http;
 pub mod kv_pool;
 
 pub use kv_pool::KvPool;
@@ -32,6 +33,7 @@ use crate::data::detokenize;
 use crate::nn::decode::{
     decode_step_into, prefill_chunk_into, DecodeModel, DecodeScratch, KvCache,
 };
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks_mut;
 use std::collections::VecDeque;
@@ -269,6 +271,25 @@ pub struct ServeMetrics {
     pub admission_deferrals: usize,
     /// Requests finished with [`FinishReason::Cancelled`].
     pub cancellations: usize,
+}
+
+impl ServeMetrics {
+    /// The snapshot as a flat JSON object — the HTTP gateway's
+    /// `/v1/metrics` payload, also convenient for experiment result files.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("total_tokens", self.total_tokens)
+            .set("prefill_tokens", self.prefill_tokens)
+            .set("wall_s", self.wall_s)
+            .set("tokens_per_s", self.tokens_per_s)
+            .set("throughput_tokens_per_s", self.throughput_tokens_per_s)
+            .set("peak_active_slots", self.peak_active_slots)
+            .set("prefill_ticks", self.prefill_ticks)
+            .set("weight_bytes", self.weight_bytes)
+            .set("peak_kv_bytes", self.peak_kv_bytes)
+            .set("admission_deferrals", self.admission_deferrals)
+            .set("cancellations", self.cancellations)
+    }
 }
 
 /// A request waiting for admission (never dropped; head-of-line FIFO).

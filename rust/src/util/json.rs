@@ -1,8 +1,17 @@
 //! Minimal JSON value model, writer and parser.
 //!
 //! Offline substitute for `serde_json`, used for experiment result files
-//! (`results/*.json`), checkpoints metadata, and config files. Supports the
-//! full JSON grammar minus exotic number forms; numbers are f64.
+//! (`results/*.json`), checkpoints metadata, config files, and — since the
+//! HTTP gateway — untrusted network bodies. Supports the full JSON grammar
+//! minus exotic number forms; numbers are f64.
+//!
+//! Parsing is hardened for hostile input: an input-size cap and a
+//! container-nesting limit (the parser is recursive, so the depth limit is
+//! what keeps a `[[[[...` body from blowing the stack) are always enforced
+//! — [`Json::parse`] applies generous [`ParseLimits::default`] bounds,
+//! network-facing callers pass tighter ones via
+//! [`Json::parse_with_limits`]. Trailing garbage after the document is an
+//! error, never silently ignored.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -156,16 +165,50 @@ impl Json {
         }
     }
 
-    /// Parse a JSON document.
+    /// Parse a JSON document under the default (generous) [`ParseLimits`] —
+    /// right for trusted local files; use [`Json::parse_with_limits`] for
+    /// network input.
     pub fn parse(text: &str) -> Result<Json, String> {
+        Json::parse_with_limits(text, ParseLimits::default())
+    }
+
+    /// Parse a JSON document, rejecting input over `limits.max_bytes` and
+    /// containers nested deeper than `limits.max_depth` with `Err` (never a
+    /// panic or a stack overflow).
+    pub fn parse_with_limits(text: &str, limits: ParseLimits) -> Result<Json, String> {
         let bytes = text.as_bytes();
+        if bytes.len() > limits.max_bytes {
+            return Err(format!(
+                "input of {} bytes exceeds the {}-byte limit",
+                bytes.len(),
+                limits.max_bytes
+            ));
+        }
         let mut pos = 0usize;
-        let v = parse_value(bytes, &mut pos)?;
+        let v = parse_value(bytes, &mut pos, limits.max_depth)?;
         skip_ws(bytes, &mut pos);
         if pos != bytes.len() {
             return Err(format!("trailing characters at byte {pos}"));
         }
         Ok(v)
+    }
+}
+
+/// Hard bounds enforced while parsing (see the module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct ParseLimits {
+    /// Documents over this many bytes are rejected before any parsing.
+    pub max_bytes: usize,
+    /// Maximum container (array/object) nesting; bounds parser recursion.
+    pub max_depth: usize,
+}
+
+impl Default for ParseLimits {
+    fn default() -> ParseLimits {
+        // Generous enough for every trusted local file the harness writes
+        // (experiment results, checkpoint headers), while still bounding
+        // the parser on arbitrary input.
+        ParseLimits { max_bytes: 64 << 20, max_depth: 128 }
     }
 }
 
@@ -202,7 +245,7 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+fn parse_value(b: &[u8], pos: &mut usize, depth: usize) -> Result<Json, String> {
     skip_ws(b, pos);
     if *pos >= b.len() {
         return Err("unexpected end of input".into());
@@ -213,6 +256,9 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
         b'f' => expect_lit(b, pos, "false", Json::Bool(false)),
         b'"' => parse_string(b, pos).map(Json::Str),
         b'[' => {
+            if depth == 0 {
+                return Err(format!("nesting exceeds the depth limit at byte {pos}"));
+            }
             *pos += 1;
             let mut items = Vec::new();
             skip_ws(b, pos);
@@ -221,7 +267,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                 return Ok(Json::Arr(items));
             }
             loop {
-                items.push(parse_value(b, pos)?);
+                items.push(parse_value(b, pos, depth - 1)?);
                 skip_ws(b, pos);
                 match b.get(*pos) {
                     Some(b',') => *pos += 1,
@@ -234,6 +280,9 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
             }
         }
         b'{' => {
+            if depth == 0 {
+                return Err(format!("nesting exceeds the depth limit at byte {pos}"));
+            }
             *pos += 1;
             let mut m = BTreeMap::new();
             skip_ws(b, pos);
@@ -249,7 +298,7 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                     return Err(format!("expected ':' at byte {pos}"));
                 }
                 *pos += 1;
-                let val = parse_value(b, pos)?;
+                let val = parse_value(b, pos, depth - 1)?;
                 m.insert(key, val);
                 skip_ws(b, pos);
                 match b.get(*pos) {
@@ -299,6 +348,11 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
                     Some(b'b') => s.push('\u{8}'),
                     Some(b'f') => s.push('\u{c}'),
                     Some(b'u') => {
+                        // Bounds-checked: a body truncated inside the four
+                        // hex digits must error, not slice out of range.
+                        if *pos + 5 > b.len() {
+                            return Err("bad \\u escape".into());
+                        }
                         let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
                             .map_err(|_| "bad \\u escape".to_string())?;
                         let code = u32::from_str_radix(hex, 16)
@@ -453,5 +507,127 @@ mod tests {
     fn unicode_roundtrip() {
         let v = Json::Str("héllo ∀ε>0 \u{1F600}".to_string());
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    // ---- Hardened-parser tests (network input) -----------------------
+
+    use crate::util::quickcheck::{check, Gen};
+    use std::collections::BTreeMap;
+
+    /// A random string exercising every escape class the writer emits.
+    fn gen_string(g: &mut Gen) -> String {
+        const POOL: &[char] = &[
+            'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{8}', '\u{c}', '\u{1}',
+            '\u{0}', 'é', '∀', '\u{1F600}', '\u{FFFD}',
+        ];
+        (0..g.int(0, 12)).map(|_| *g.choose(POOL)).collect()
+    }
+
+    /// A random `Json` tree of bounded depth. Numbers are drawn from values
+    /// the writer represents exactly (integers below 1e15 and 1/1024
+    /// binary fractions, both with finite exact decimal forms); NaN/inf are
+    /// excluded because the writer documents them as lossy (-> null).
+    fn gen_json(g: &mut Gen, depth: usize) -> Json {
+        match g.int(0, if depth == 0 { 3 } else { 5 }) {
+            0 => Json::Null,
+            1 => Json::Bool(g.bool()),
+            2 => {
+                if g.bool() {
+                    Json::Num(g.int(0, 2_000_000) as f64 - 1_000_000.0)
+                } else {
+                    Json::Num((g.int(0, 4_000_000) as f64 - 2_000_000.0) / 1024.0)
+                }
+            }
+            3 => Json::Str(gen_string(g)),
+            4 => Json::Arr((0..g.int(0, 4)).map(|_| gen_json(g, depth - 1)).collect()),
+            _ => {
+                let mut m = BTreeMap::new();
+                for i in 0..g.int(0, 4) {
+                    // Suffix with the slot index so colliding random keys
+                    // can't make the tree shrink through the map.
+                    m.insert(format!("{}#{i}", gen_string(g)), gen_json(g, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    #[test]
+    fn property_parse_inverts_to_string() {
+        check("json roundtrip", 64, |g| {
+            let v = gen_json(g, 4);
+            assert_eq!(Json::parse(&v.to_string()).unwrap(), v, "compact form");
+            assert_eq!(Json::parse(&v.pretty()).unwrap(), v, "pretty form");
+        });
+    }
+
+    #[test]
+    fn malformed_inputs_error_instead_of_panicking() {
+        // Table of hostile bodies a network client could send; every one
+        // must come back as Err — no panics, no slice-bounds aborts, no
+        // stack overflow. (A panic fails the test harness by itself.)
+        let deep_opens = "[".repeat(200_000);
+        let deep_mixed = "{\"k\":[".repeat(60_000);
+        let cases: &[&str] = &[
+            "",
+            "   \t\n",
+            "{",
+            "[",
+            "[1, 2",
+            "[1,,2]",
+            "[1 2]",
+            "{\"a\"",
+            "{\"a\":}",
+            "{\"a\":1,}",
+            "{\"a\" 1}",
+            "{1: 2}",
+            "\"abc",
+            "\"\\x\"",
+            "\"\\\"",
+            "\"\\u12",
+            "\"\\u123g\"",
+            "\"\\u123",
+            "tru",
+            "nul",
+            "falsehood",
+            "+",
+            "-",
+            ".",
+            "1e",
+            "0x10",
+            "{} extra",
+            "[1] [2]",
+            "1 2",
+            &deep_opens,
+            &deep_mixed,
+        ];
+        for (i, case) in cases.iter().enumerate() {
+            let head: String = case.chars().take(24).collect();
+            assert!(
+                Json::parse(case).is_err(),
+                "malformed case {i} ({head:?}...) parsed successfully"
+            );
+        }
+    }
+
+    #[test]
+    fn limits_reject_oversized_and_overdeep_input() {
+        let tight = ParseLimits { max_bytes: 16, max_depth: 2 };
+        assert!(Json::parse_with_limits("[1,2,3]", tight).is_ok());
+        assert!(Json::parse_with_limits("[[1]]", tight).is_ok(), "depth 2 is within the limit");
+        assert!(
+            Json::parse_with_limits("[[[1]]]", tight).is_err(),
+            "depth 3 must exceed max_depth = 2"
+        );
+        assert!(
+            Json::parse_with_limits("[1,2,3,4,5,6,7,8]", tight).is_err(),
+            "17 bytes must exceed max_bytes = 16"
+        );
+        // The default limits still bound pathological nesting well below
+        // stack exhaustion.
+        let nested = format!("{}1{}", "[".repeat(129), "]".repeat(129));
+        assert!(Json::parse(&nested).is_err());
+        let ok = format!("{}1{}", "[".repeat(100), "]".repeat(100));
+        assert!(Json::parse(&ok).is_ok());
     }
 }

@@ -1,5 +1,6 @@
 //! Data-parallel helpers on a persistent worker pool (offline substitute
-//! for `rayon`).
+//! for `rayon`), plus a separate blocking-task side ([`spawn_task`]) for
+//! I/O-bound work such as the HTTP gateway's connection handlers.
 //!
 //! The library's hot loops (blocked matmul, per-layer ADMM, batched decode,
 //! the server's slot-step fan-out) are embarrassingly parallel over
@@ -261,6 +262,145 @@ pub fn parallel_chunks_mut<T: Send, F: Fn(usize, &mut [T]) + Sync>(
     });
 }
 
+// ---- Blocking-task side --------------------------------------------------
+//
+// The region workers above are sized for compute (one per hardware thread)
+// and must never be parked on a socket: a connection handler that blocked a
+// region worker for the lifetime of an SSE stream would degrade every
+// matmul fan-out under it. Blocking tasks therefore run on their own small
+// worker set, created lazily and parked between tasks, with transient
+// overflow threads when every persistent worker is occupied — new
+// connections are never queued behind long-lived ones.
+
+type Task = Box<dyn FnOnce() + Send>;
+
+struct TaskPoolState {
+    queue: VecDeque<Task>,
+    /// Workers currently parked in `available.wait` (not between tasks).
+    idle: usize,
+    /// Persistent workers ever started (bounded by [`io_threads`]).
+    workers: usize,
+}
+
+struct TaskPool {
+    state: Mutex<TaskPoolState>,
+    available: Condvar,
+}
+
+/// Number of persistent blocking-task workers, overridable via
+/// `NANOQUANT_IO_THREADS`. Tasks beyond this run on transient threads, so
+/// the value bounds parked-thread memory, not concurrency.
+pub fn io_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let c = CACHED.load(Ordering::Relaxed);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("NANOQUANT_IO_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or_else(|| num_threads().max(4));
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+fn task_pool() -> &'static TaskPool {
+    static POOL: OnceLock<TaskPool> = OnceLock::new();
+    POOL.get_or_init(|| TaskPool {
+        state: Mutex::new(TaskPoolState { queue: VecDeque::new(), idle: 0, workers: 0 }),
+        available: Condvar::new(),
+    })
+}
+
+fn task_worker_loop(pool: &'static TaskPool) {
+    loop {
+        let task = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                if let Some(t) = st.queue.pop_front() {
+                    break t;
+                }
+                st.idle += 1;
+                st = pool.available.wait(st).unwrap();
+                // A submitter that claims a parked worker decrements `idle`
+                // *before* queueing (see `spawn_task`), so a wake that finds
+                // work was already paid for. A wake that finds no work is
+                // spurious — or our claimed task was stolen by a sibling
+                // that was between tasks — so undo the park count before
+                // re-parking (saturating: a steal means our count was
+                // already consumed by the claimant).
+                if st.queue.is_empty() {
+                    st.idle = st.idle.saturating_sub(1);
+                }
+            }
+        };
+        // A panicking task must not take its worker down with it.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+    }
+}
+
+/// Run `task` on the shared blocking-task pool. Fire-and-forget: tasks may
+/// block indefinitely (socket reads, channel receives) without affecting
+/// the compute pool or each other — when every persistent worker is busy,
+/// the task is handed to a transient thread instead of queueing behind
+/// them. Panics inside a task are caught and discarded.
+///
+/// Progress guarantee: a parked worker is *claimed* (its `idle` count
+/// decremented) under the same lock the workers park under, so two
+/// submitters can never count the same worker twice; every unclaimed
+/// submission gets its own runner — a new persistent worker below the
+/// [`io_threads`] cap, a transient burst thread above it. `idle` may
+/// transiently undercount parked workers (a steal by a between-tasks
+/// worker), which at worst spawns a redundant burst thread that exits
+/// immediately; it never overcounts, which is the direction that would
+/// strand a task.
+pub fn spawn_task<F: FnOnce() + Send + 'static>(task: F) {
+    let pool = task_pool();
+    let task: Task = Box::new(task);
+    let mut st = pool.state.lock().unwrap();
+    let claimed = if st.idle > 0 {
+        st.idle -= 1;
+        true
+    } else {
+        false
+    };
+    st.queue.push_back(task);
+    let spawn_persistent = !claimed && st.workers < io_threads();
+    if spawn_persistent {
+        st.workers += 1;
+    }
+    let n = st.workers;
+    drop(st);
+    if claimed {
+        pool.available.notify_one();
+        return;
+    }
+    if spawn_persistent {
+        let started = std::thread::Builder::new()
+            .name(format!("nanoquant-io-{n}"))
+            .spawn(move || task_worker_loop(pool))
+            .is_ok();
+        if started {
+            return;
+        }
+        pool.state.lock().unwrap().workers -= 1;
+        // Could not start a persistent worker: fall through to a transient
+        // drain so the queued task still runs.
+    }
+    // Every persistent worker is occupied (likely parked on a long-lived
+    // connection). A transient helper drains one task — ours, or whichever
+    // reached the queue head first; if even thread spawn fails, the final
+    // notify below lets a worker finishing its current task pick it up.
+    let _ = std::thread::Builder::new().name("nanoquant-io-burst".into()).spawn(move || {
+        let task = task_pool().state.lock().unwrap().queue.pop_front();
+        if let Some(task) = task {
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(task));
+        }
+    });
+    pool.available.notify_one();
+}
+
 /// Parallel map over `0..n` collecting results in index order.
 pub fn parallel_map<T: Send, F: Fn(usize) -> T + Sync>(n: usize, f: F) -> Vec<T> {
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -363,6 +503,46 @@ mod tests {
             c.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(c.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn spawn_task_overflows_beyond_persistent_worker_cap() {
+        // More simultaneously-blocking tasks than persistent workers must
+        // all make progress (burst threads): the barrier only opens once
+        // every task is running at the same time.
+        use std::sync::{mpsc, Arc, Barrier};
+        let n = io_threads() * 2 + 3;
+        let (tx, rx) = mpsc::channel();
+        let gate = Arc::new(Barrier::new(n + 1));
+        for i in 0..n {
+            let tx = tx.clone();
+            let gate = gate.clone();
+            spawn_task(move || {
+                gate.wait();
+                tx.send(i).unwrap();
+            });
+        }
+        gate.wait();
+        let mut got: Vec<usize> = (0..n)
+            .map(|_| rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap())
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..n).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn spawn_task_survives_panicking_tasks() {
+        use std::sync::mpsc;
+        spawn_task(|| panic!("task boom (expected in test output)"));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..4 {
+            let tx = tx.clone();
+            spawn_task(move || tx.send(1usize).unwrap());
+        }
+        let sum: usize = (0..4)
+            .map(|_| rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap())
+            .sum();
+        assert_eq!(sum, 4);
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! Loopback integration tests for the HTTP/SSE gateway: a real
+//! `TcpListener`, real `TcpStream` clients, and the full
+//! parse → bridge → engine → SSE path.
+//!
+//! Every test body runs under a watchdog thread so a hung listener or a
+//! stalled stream fails fast instead of wedging the test job (CI also has
+//! a job-level timeout as the outer belt).
+
+use nanoquant::nn::decode::dense_decode_model;
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::ModelParams;
+use nanoquant::serve::http::{Gateway, GatewayConfig};
+use nanoquant::serve::{Engine, FinishReason, Request, Server, ServerConfig};
+use nanoquant::util::json::Json;
+use nanoquant::util::rng::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+fn tiny_model() -> nanoquant::nn::decode::DecodeModel {
+    let mcfg = family_config("l2", "xs");
+    let mut rng = Rng::new(0);
+    let params = ModelParams::init(&mcfg, &mut rng);
+    dense_decode_model(&params)
+}
+
+fn start_gateway(scfg: ServerConfig, gcfg: GatewayConfig) -> Gateway {
+    let gcfg = GatewayConfig { addr: "127.0.0.1:0".into(), ..gcfg };
+    Gateway::start(Engine::new(tiny_model(), scfg), gcfg).expect("gateway must bind")
+}
+
+/// Run `body` on a helper thread; panic if it takes longer than `secs`.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, body: F) {
+    let (tx, rx) = mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        body();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => {
+            if let Err(payload) = worker.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(payload) = worker.join() {
+                std::panic::resume_unwind(payload);
+            }
+            unreachable!("worker dropped its channel without panicking");
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test exceeded its {secs}s watchdog (hung listener or stalled stream?)");
+        }
+    }
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect(addr).expect("connect to loopback gateway");
+    stream.set_read_timeout(Some(IO_TIMEOUT)).unwrap();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).unwrap();
+    stream
+}
+
+/// Write one request on an open connection (keep-alive framing).
+fn write_request(w: &mut impl Write, method: &str, target: &str, body: &str, close: bool) {
+    write!(
+        w,
+        "{method} {target} HTTP/1.1\r\nHost: loopback\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        body.len(),
+        if close { "close" } else { "keep-alive" },
+    )
+    .expect("request write");
+}
+
+/// Read one `Content-Length`-framed response; returns (status, body JSON).
+fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {line:?}"));
+    let mut content_length = 0usize;
+    loop {
+        line.clear();
+        reader.read_line(&mut line).expect("header line");
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().expect("content-length value");
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("response body");
+    let body = String::from_utf8(body).expect("utf8 body");
+    (status, Json::parse(&body).unwrap_or_else(|e| panic!("bad body JSON ({e}): {body}")))
+}
+
+/// One-shot request on a fresh connection.
+fn oneshot(addr: SocketAddr, method: &str, target: &str, body: &str) -> (u16, Json) {
+    let mut stream = connect(addr);
+    write_request(&mut stream, method, target, body, true);
+    read_response(&mut BufReader::new(stream))
+}
+
+/// Open an SSE generate stream and return the reader positioned after the
+/// response head.
+fn open_sse(addr: SocketAddr, body: &str) -> BufReader<TcpStream> {
+    let mut stream = connect(addr);
+    write_request(&mut stream, "POST", "/v1/generate?stream=1", body, true);
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("SSE status line");
+    assert!(line.starts_with("HTTP/1.1 200"), "unexpected SSE status: {line:?}");
+    loop {
+        line.clear();
+        reader.read_line(&mut line).expect("SSE header line");
+        if line.trim_end().is_empty() {
+            return reader;
+        }
+    }
+}
+
+/// Read the next `data:` frame, or `None` at end of stream.
+fn next_frame(reader: &mut BufReader<TcpStream>) -> Option<Json> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("SSE frame line");
+        if n == 0 {
+            return None;
+        }
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let payload = trimmed.strip_prefix("data: ").expect("SSE line must be a data field");
+        return Some(Json::parse(payload).expect("frame payload must be JSON"));
+    }
+}
+
+/// Drain an SSE stream: (streamed tokens, final `done` frame).
+fn drain_sse(reader: &mut BufReader<TcpStream>) -> (Vec<u16>, Json) {
+    let mut tokens = Vec::new();
+    while let Some(frame) = next_frame(reader) {
+        if frame.get("done").and_then(Json::as_bool) == Some(true) {
+            return (tokens, frame);
+        }
+        if let Some(tok) = frame.get("token").and_then(Json::as_usize) {
+            tokens.push(tok as u16);
+        }
+    }
+    panic!("SSE stream ended without a done frame (streamed {} tokens)", tokens.len());
+}
+
+fn frame_tokens(frame: &Json, key: &str) -> Vec<u16> {
+    frame
+        .get(key)
+        .and_then(Json::as_arr)
+        .unwrap_or_else(|| panic!("frame missing {key}: {frame:?}"))
+        .iter()
+        .map(|t| t.as_usize().expect("token must be an integer") as u16)
+        .collect()
+}
+
+fn kv_pool_field(metrics: &Json, key: &str) -> usize {
+    metrics
+        .get("kv_pool")
+        .and_then(|p| p.get(key))
+        .and_then(Json::as_usize)
+        .unwrap_or_else(|| panic!("metrics missing kv_pool.{key}: {metrics:?}"))
+}
+
+#[test]
+fn sse_stream_is_byte_identical_to_offline_server() {
+    with_watchdog(120, || {
+        let scfg = ServerConfig { max_batch: 2, seed: 0, ..Default::default() };
+        let prompt: Vec<u16> = (0..9).map(|i| ((i * 23 + 1) % 250) as u16).collect();
+        // Reference: the offline Server::run loop on an identical engine.
+        let want = Server::new(tiny_model(), scfg.clone())
+            .run(vec![Request::greedy(0, prompt.clone(), 7)])
+            .remove(0);
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let body = format!(
+            "{{\"prompt\": {:?}, \"max_new\": 7}}",
+            prompt.iter().map(|&t| t as usize).collect::<Vec<usize>>()
+        );
+        let mut reader = open_sse(gateway.local_addr(), &body);
+        let (streamed, done) = drain_sse(&mut reader);
+        assert_eq!(streamed, want.tokens, "SSE stream diverged from Server::run");
+        assert_eq!(frame_tokens(&done, "tokens"), want.tokens, "final frame token mismatch");
+        assert_eq!(done.get("finish_reason").and_then(Json::as_str), Some("max_new"));
+        assert_eq!(done.get("text").and_then(Json::as_str), Some(want.text.as_str()));
+        assert!(done.get("ttft_s").and_then(Json::as_f64).is_some_and(|t| t >= 0.0));
+        assert!(done.get("queue_s").and_then(Json::as_f64).is_some_and(|t| t >= 0.0));
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn full_response_mode_matches_stream_mode_and_honors_stop_tokens() {
+    with_watchdog(120, || {
+        let scfg = ServerConfig { max_batch: 2, seed: 0, ..Default::default() };
+        let prompt: Vec<u16> = vec![11, 12, 13];
+        let free = Server::new(tiny_model(), scfg.clone())
+            .run(vec![Request::greedy(0, prompt.clone(), 6)])
+            .remove(0)
+            .tokens;
+        assert!(free.len() >= 3, "need a few greedy tokens to pick a stop from");
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        // Full-response mode returns exactly the greedy reference tokens.
+        let body = "{\"prompt\": [11, 12, 13], \"max_new\": 6}";
+        let (status, json) = oneshot(addr, "POST", "/v1/generate", body);
+        assert_eq!(status, 200);
+        assert_eq!(frame_tokens(&json, "tokens"), free);
+        assert_eq!(json.get("finish_reason").and_then(Json::as_str), Some("max_new"));
+        // A stop token cuts the generation and is withheld from the output
+        // (cut at its *first* occurrence, which may precede index 2 if the
+        // greedy output repeats tokens).
+        let stop = free[2];
+        let cut = free.iter().position(|&t| t == stop).unwrap();
+        let body = format!("{{\"prompt\": [11, 12, 13], \"max_new\": 6, \"stop_tokens\": [{stop}]}}");
+        let (status, json) = oneshot(addr, "POST", "/v1/generate", &body);
+        assert_eq!(status, 200);
+        assert_eq!(json.get("finish_reason").and_then(Json::as_str), Some("stop"));
+        assert_eq!(frame_tokens(&json, "tokens"), free[..cut].to_vec());
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn disconnect_storm_cancels_requests_and_returns_pool_to_fully_free() {
+    with_watchdog(180, || {
+        // A 4-page pool (the clamp minimum) and requests whose footprint
+        // reserves all of it: a disconnect that leaked pages would
+        // permanently wedge admission.
+        let scfg = ServerConfig {
+            max_batch: 2,
+            seed: 0,
+            kv_pages: Some(4),
+            ..Default::default()
+        };
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        let prompt_json: Vec<usize> = (0..40).map(|j| j % 250).collect();
+        let body = format!("{{\"prompt\": {prompt_json:?}, \"max_new\": 200}}");
+        const STORM: usize = 3;
+        for round in 0..STORM {
+            let mut reader = open_sse(addr, &body);
+            let mut streamed = 0usize;
+            while streamed < 3 {
+                let frame = next_frame(&mut reader)
+                    .unwrap_or_else(|| panic!("round {round}: stream ended early"));
+                assert_ne!(
+                    frame.get("done").and_then(Json::as_bool),
+                    Some(true),
+                    "round {round}: finished before the disconnect"
+                );
+                if frame.get("token").is_some() {
+                    streamed += 1;
+                }
+            }
+            // Drop the connection mid-stream: the handler's next frame
+            // write fails and must become an engine cancel.
+            drop(reader);
+        }
+        // Observe through the public metrics endpoint only.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        let metrics = loop {
+            let (status, metrics) = oneshot(addr, "GET", "/v1/metrics", "");
+            assert_eq!(status, 200);
+            let cancellations =
+                metrics.get("cancellations").and_then(Json::as_usize).expect("cancellations");
+            if cancellations == STORM {
+                break metrics;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "cancellations stuck at {cancellations}/{STORM}: {metrics:?}"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        // FinishReason::Cancelled is what increments this counter — one
+        // per dropped connection, none double-counted.
+        assert_eq!(metrics.get("cancellations").and_then(Json::as_usize), Some(STORM));
+        // The pool is fully free again: nothing reserved, nothing attached,
+        // every touched page back on the recycle list.
+        assert_eq!(kv_pool_field(&metrics, "reserved_pages"), 0);
+        assert_eq!(kv_pool_field(&metrics, "in_use_pages"), 0);
+        assert!(kv_pool_field(&metrics, "free_pages") > 0);
+        assert_eq!(metrics.get("in_flight").and_then(Json::as_usize), Some(0));
+        // Behavioral proof: a fresh whole-budget request is admitted and
+        // completes (a single leaked page would defer it forever).
+        let body = format!("{{\"prompt\": {prompt_json:?}, \"max_new\": 8}}");
+        let (status, json) = oneshot(addr, "POST", "/v1/generate", &body);
+        assert_eq!(status, 200);
+        assert_eq!(frame_tokens(&json, "tokens").len(), 8);
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn cancel_endpoint_finishes_request_with_cancelled_reason() {
+    with_watchdog(120, || {
+        use nanoquant::serve::http::StreamEvent;
+        let gateway = start_gateway(ServerConfig::default(), GatewayConfig::default());
+        let addr = gateway.local_addr();
+        // Submit through the same bridge the HTTP handlers use, so the
+        // FinishReason is directly observable.
+        let (id, events) =
+            gateway.handle().submit(Request::greedy(0, vec![1, 2, 3], 200)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut streamed = 0usize;
+        while streamed < 2 {
+            match events.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(StreamEvent::Token(_)) => streamed += 1,
+                Ok(_) => {}
+                Err(e) => panic!("stream stalled before cancel: {e:?}"),
+            }
+        }
+        let (status, json) = oneshot(addr, "POST", &format!("/v1/cancel/{id}"), "");
+        assert_eq!(status, 200);
+        assert_eq!(json.get("accepted").and_then(Json::as_bool), Some(true));
+        let reason = loop {
+            match events.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(StreamEvent::Finished { reason, .. }) => break reason,
+                Ok(_) => {}
+                Err(e) => panic!("request never finished after cancel: {e:?}"),
+            }
+        };
+        assert_eq!(reason, FinishReason::Cancelled);
+        // Unparseable ids are a 400, unknown ids an accepted no-op.
+        let (status, _) = oneshot(addr, "POST", "/v1/cancel/notanumber", "");
+        assert_eq!(status, 400);
+        let (status, json) = oneshot(addr, "POST", "/v1/cancel/999999", "");
+        assert_eq!(status, 200);
+        assert_eq!(json.get("accepted").and_then(Json::as_bool), Some(true));
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn malformed_and_oversized_requests_get_4xx_not_hangs() {
+    with_watchdog(120, || {
+        let gcfg = GatewayConfig { max_max_new: 32, ..Default::default() };
+        let gateway = start_gateway(ServerConfig::default(), gcfg);
+        let addr = gateway.local_addr();
+        for (body, why) in [
+            ("not json at all", "unparseable body"),
+            ("{\"max_new\": 4}", "missing prompt"),
+            ("{\"prompt\": 7}", "prompt of the wrong type"),
+            ("{\"prompt\": [70000]}", "token above u16::MAX"),
+            ("{\"prompt\": [1.5]}", "fractional token"),
+            ("{\"prompt\": [1], \"max_new\": -3}", "negative max_new"),
+            ("{\"prompt\": [1], \"max_new\": 64}", "max_new above the gateway cap"),
+            ("{\"prompt\": [1], \"temperature\": -1}", "negative temperature"),
+            ("{\"prompt\": [1], \"stream\": \"yes\"}", "non-boolean stream"),
+        ] {
+            let (status, json) = oneshot(addr, "POST", "/v1/generate", body);
+            assert_eq!(status, 400, "{why}: {json:?}");
+            assert!(json.get("error").is_some(), "{why} must explain itself");
+        }
+        let (status, _) = oneshot(addr, "GET", "/no/such/path", "");
+        assert_eq!(status, 404);
+        let (status, _) = oneshot(addr, "GET", "/v1/generate", "");
+        assert_eq!(status, 404, "generate is POST-only");
+        let (status, _) = oneshot(addr, "BREW", "/v1/generate", "");
+        assert_eq!(status, 405);
+        // Declared body over the wire limit → 413 before any body byte.
+        let mut stream = connect(addr);
+        write!(
+            stream,
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nConnection: close\r\nContent-Length: 9999999\r\n\r\n"
+        )
+        .unwrap();
+        let (status, _) = read_response(&mut BufReader::new(stream));
+        assert_eq!(status, 413);
+        // Oversized head → 431. (24 KiB: over the 16 KiB head limit but
+        // small enough to fit loopback socket buffers in one write.)
+        let mut stream = connect(addr);
+        write!(stream, "GET /healthz HTTP/1.1\r\nHost: x\r\nX-Big: {}\r\n\r\n", "a".repeat(24 << 10))
+            .unwrap();
+        let (status, _) = read_response(&mut BufReader::new(stream));
+        assert_eq!(status, 431);
+        // The gateway survives all of the above.
+        let (status, json) = oneshot(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200);
+        assert_eq!(json.get("ok").and_then(Json::as_bool), Some(true));
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_and_metrics_report_work() {
+    with_watchdog(120, || {
+        let gateway = start_gateway(ServerConfig::default(), GatewayConfig::default());
+        let addr = gateway.local_addr();
+        // Three framed requests on one connection.
+        let mut reader = BufReader::new(connect(addr));
+        write_request(reader.get_mut(), "GET", "/healthz", "", false);
+        let (status, json) = read_response(&mut reader);
+        assert_eq!((status, json.get("ok").and_then(Json::as_bool)), (200, Some(true)));
+        write_request(reader.get_mut(), "POST", "/v1/generate", "{\"prompt\": [5, 6], \"max_new\": 3}", false);
+        let (status, json) = read_response(&mut reader);
+        assert_eq!(status, 200);
+        assert_eq!(frame_tokens(&json, "tokens").len(), 3);
+        write_request(reader.get_mut(), "GET", "/v1/metrics", "", true);
+        let (status, metrics) = read_response(&mut reader);
+        assert_eq!(status, 200);
+        assert_eq!(metrics.get("total_tokens").and_then(Json::as_usize), Some(3));
+        assert!(metrics.get("weight_bytes").and_then(Json::as_usize).is_some_and(|b| b > 0));
+        assert!(kv_pool_field(&metrics, "total_pages") > 0);
+        gateway.shutdown();
+    });
+}
