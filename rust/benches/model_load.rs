@@ -1,0 +1,158 @@
+//! `cargo bench --bench model_load` — cold artifact load latency and
+//! resident-memory behavior: zero-copy mmap vs heap deserialize of a
+//! packed NANOQCK2 model, plus time-to-first-logit after each load path.
+//!
+//! Results land in `BENCH_model_load.json` at the repository root
+//! (machine-readable, overwritten per run), same convention as the other
+//! benches. Peak RSS is read from `/proc/self/status` `VmHWM` (0 on
+//! non-Linux); because a single process runs both paths, RSS is reported
+//! as the high-water delta attributable to each phase, mmap first.
+
+use nanoquant::model::{load_packed_model, save_packed_model, Backing};
+use nanoquant::nn::decode::{decode_step_into, DecodeScratch, KvCache};
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::{LayerKind, ModelParams};
+use nanoquant::nn::LayerId;
+use nanoquant::quant::scheme::{rank_for_bpw, LatentFactors};
+use nanoquant::quant::QuantModel;
+use nanoquant::tensor::Tensor;
+use nanoquant::util::json::{write_json, Json};
+use nanoquant::util::rng::Rng;
+use nanoquant::util::timer::stats_from;
+use std::time::Instant;
+
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_model_load.json");
+const ARTIFACT: &str = "/tmp/nanoquant_bench_model_load.nqck";
+/// Run 0 per phase is an untimed warm-up (page cache, allocator).
+const RUNS: usize = 6;
+
+fn main() {
+    println!("== packed artifact load: mmap vs heap (l2-s, ~1 bpw) ==");
+    let qm = build_quantized("l2", "s", 1.0);
+    save_packed_model(ARTIFACT, &qm).expect("write bench artifact");
+    let file_mb = std::fs::metadata(ARTIFACT).map(|m| m.len()).unwrap_or(0) as f64 / 1e6;
+    println!("artifact: {ARTIFACT} ({file_mb:.2} MB)");
+
+    let rss_before = peak_rss_bytes();
+    let (mmap_load, mmap_first) = measure(Backing::Mmap);
+    let rss_after_mmap = peak_rss_bytes();
+    let (heap_load, heap_first) = measure(Backing::Heap);
+    let rss_after_heap = peak_rss_bytes();
+
+    let mmap_load_s = stats_from("mmap cold load", &mmap_load);
+    let heap_load_s = stats_from("heap cold load", &heap_load);
+    let mmap_first_s = stats_from("mmap first-logit", &mmap_first);
+    let heap_first_s = stats_from("heap first-logit", &heap_first);
+    println!("{mmap_load_s}");
+    println!("{heap_load_s}");
+    println!("{mmap_first_s}");
+    println!("{heap_first_s}");
+    let mmap_rss_mb = (rss_after_mmap.saturating_sub(rss_before)) as f64 / 1e6;
+    let heap_rss_mb = (rss_after_heap.saturating_sub(rss_after_mmap)) as f64 / 1e6;
+    let load_speedup =
+        if mmap_load_s.mean_s > 0.0 { heap_load_s.mean_s / mmap_load_s.mean_s } else { 0.0 };
+    println!("peak RSS delta: mmap phase {mmap_rss_mb:.2} MB, heap phase {heap_rss_mb:.2} MB");
+
+    let doc = Json::obj()
+        .set("bench", "model_load")
+        .set("model", "l2-s")
+        .set("bpw", 1.0)
+        .set("artifact_mb", file_mb)
+        .set("threads", nanoquant::util::threadpool::num_threads())
+        .set(
+            "results",
+            Json::obj()
+                .set(
+                    "mmap",
+                    Json::obj()
+                        .set("mean_load_s", mmap_load_s.mean_s)
+                        .set("p50_load_s", mmap_load_s.p50_s)
+                        .set("mean_first_logit_s", mmap_first_s.mean_s)
+                        .set("peak_rss_delta_mb", mmap_rss_mb),
+                )
+                .set(
+                    "heap",
+                    Json::obj()
+                        .set("mean_load_s", heap_load_s.mean_s)
+                        .set("p50_load_s", heap_load_s.p50_s)
+                        .set("mean_first_logit_s", heap_first_s.mean_s)
+                        .set("peak_rss_delta_mb", heap_rss_mb),
+                )
+                .set(
+                    "speedup",
+                    Json::obj().set(
+                        "load_mmap_over_heap",
+                        load_speedup,
+                    ),
+                ),
+        );
+    match write_json(OUT_PATH, &doc) {
+        Ok(()) => println!("wrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+    std::fs::remove_file(ARTIFACT).ok();
+}
+
+/// (cold-load seconds, first-logit seconds) per timed run.
+fn measure(backing: Backing) -> (Vec<f64>, Vec<f64>) {
+    let mut loads = Vec::new();
+    let mut firsts = Vec::new();
+    for run in 0..RUNS {
+        let t0 = Instant::now();
+        let loaded = load_packed_model(ARTIFACT, backing, true).expect("load bench artifact");
+        let load_s = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let mut cache = KvCache::new(&loaded.model.cfg);
+        let mut scratch = DecodeScratch::new(&loaded.model.cfg);
+        decode_step_into(&loaded.model, &mut cache, 1, &mut scratch);
+        let first_s = t1.elapsed().as_secs_f64();
+        if run > 0 {
+            loads.push(load_s);
+            firsts.push(first_s);
+        }
+    }
+    (loads, firsts)
+}
+
+/// A fully-quantized model at roughly `bpw` bits per weight (random
+/// frozen latents — load cost depends on sizes, not training).
+fn build_quantized(family: &str, size: &str, bpw: f64) -> QuantModel {
+    let cfg = family_config(family, size);
+    let mut rng = Rng::new(0);
+    let teacher = ModelParams::init(&cfg, &mut rng);
+    let mut qm = QuantModel::from_teacher(&teacher);
+    for bi in 0..cfg.n_layers {
+        for kind in LayerKind::ALL {
+            let (n, m) = nanoquant::model::packed::expected_dims(&cfg, kind);
+            let r = rank_for_bpw(n, m, bpw);
+            let lat = LatentFactors {
+                u: Tensor::randn(&[n, r], 1.0, &mut rng),
+                v: Tensor::randn(&[m, r], 1.0, &mut rng),
+                s1: (0..n).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+                s2: (0..m).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+            };
+            qm.set_layer(LayerId { block: bi, kind }, lat);
+        }
+        qm.freeze_block(bi);
+    }
+    qm
+}
+
+/// Peak resident set size (`VmHWM`) in bytes; 0 where unavailable.
+fn peak_rss_bytes() -> usize {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: usize = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}

@@ -29,6 +29,7 @@ pub mod data;
 pub mod eval;
 pub mod exp;
 pub mod linalg;
+pub mod model;
 pub mod nn;
 pub mod quant;
 pub mod runtime;

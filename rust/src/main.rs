@@ -4,16 +4,19 @@
 //!   zoo                         train/cache the teacher model zoo
 //!   train   --family --size     train one teacher
 //!   quantize --family --size --bpw ...   run Algorithm 1, save checkpoint stats
+//!   pack    --family --size --bpw --out m.nqck   quantize + write a packed NANOQCK2 serving artifact
+//!   inspect <path>              print a checkpoint/artifact header, tensor table, CRC status
 //!   eval    --family --size [--bpw]      perplexity + zero-shot
 //!   serve   --family --size [--stream] [--stop-tokens a,b]   event-loop serving demo
-//!   gateway --addr 127.0.0.1:8080 [--kv-pages N] [--max-batch N]   HTTP/SSE gateway
+//!   gateway --addr 127.0.0.1:8080 [--models a=a.nqck,b=b.nqck] [--kv-pages N]   multi-model HTTP/SSE gateway
 //!   exp <id>                    regenerate a paper table/figure (or `all`)
-//!   artifacts-check             load every AOT artifact via PJRT
+//!   artifacts-check [--golden tests/golden/tiny.nqck]   verify the golden NANOQCK2 fixture (+ PJRT artifacts)
 //!   size    --bpw               Appendix-F model-size calculator
 
 use nanoquant::data::{sample_sequences, CorpusKind};
 use nanoquant::eval::{perplexity, zero_shot_suite};
 use nanoquant::exp::{self, zoo, Ctx};
+use nanoquant::model::{load_packed_model, save_packed_model, Artifact, Backing};
 use nanoquant::quant::{self, InitMethod, PipelineConfig};
 use nanoquant::serve::http::{Gateway, GatewayConfig};
 use nanoquant::serve::{Engine, Event, Request, ServerConfig};
@@ -36,6 +39,8 @@ fn main() {
             );
         }
         "quantize" => cmd_quantize(&args),
+        "pack" => cmd_pack(&args),
+        "inspect" => cmd_inspect(&args),
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "gateway" => cmd_gateway(&args),
@@ -47,8 +52,8 @@ fn main() {
         "size" => cmd_size(&args),
         _ => {
             eprintln!(
-                "usage: nanoquant <zoo|train|quantize|eval|serve|gateway|exp|artifacts-check|size> \
-                 [--flags]\n\
+                "usage: nanoquant <zoo|train|quantize|pack|inspect|eval|serve|gateway|exp|\
+                 artifacts-check|size> [--flags]\n\
                  see README.md for details"
             );
         }
@@ -84,6 +89,113 @@ fn cmd_quantize(args: &Args) {
     let ppl_t = perplexity(&teacher, &eval_toks, seq, 16);
     let ppl_q = perplexity(&qm.params, &eval_toks, seq, 16);
     println!("teacher ppl={ppl_t:.2}  quantized ppl={ppl_q:.2}");
+}
+
+/// `pack`: run the quantization pipeline and write a packed NANOQCK2
+/// serving artifact (`.nqck`) that `gateway`/`/v1/models/load` can serve
+/// with zero-copy mmap weights.
+fn cmd_pack(args: &Args) {
+    let family = args.get_or("family", "l2");
+    let size = args.get_or("size", "s");
+    let bpw = args.get_f64("bpw", 1.0);
+    let out = args.get_or("out", "").to_string();
+    let out = if out.is_empty() { format!("{family}-{size}-{bpw}bpw.nqck") } else { out };
+    let tokens = zoo::train_tokens();
+    let teacher =
+        zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+    let seq = args.get_usize("seq", 48);
+    let n_calib = args.get_usize("calib", 24);
+    let mut rng = Rng::new(args.get_u64("seed", 0));
+    let calib = sample_sequences(&tokens, seq + 1, n_calib, &mut rng);
+    let pcfg = PipelineConfig {
+        bpw,
+        init: InitMethod::parse(args.get_or("init", "lb-admm")),
+        verbose: true,
+        ..Default::default()
+    };
+    let (qm, report) = quant::quantize(&teacher, &calib, seq, &pcfg);
+    if let Err(e) = save_packed_model(&out, &qm) {
+        eprintln!("pack: could not write {out}: {e}");
+        std::process::exit(1);
+    }
+    let file_bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "packed {family}-{size} @ {:.3} bpw -> {out} ({:.2} MB on disk, effective {:.2} MB)",
+        report.effective_bpw,
+        file_bytes as f64 / 1e6,
+        report.effective_bytes as f64 / 1e6,
+    );
+    println!("serve it:  nanoquant gateway --models {family}-{size}={out}");
+}
+
+/// `inspect`: print an artifact's header, tensor table, and CRC status.
+fn cmd_inspect(args: &Args) {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: nanoquant inspect <path.nqck|path.bin>");
+        std::process::exit(2);
+    };
+    let magic = {
+        let mut buf = [0u8; 8];
+        match std::fs::File::open(path)
+            .and_then(|mut f| std::io::Read::read_exact(&mut f, &mut buf).map(|()| buf))
+        {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("inspect: cannot read {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    };
+    if &magic == nanoquant::nn::checkpoint::MAGIC_V1 {
+        println!("{path}: NANOQCK1 (legacy stream format; no offsets, no CRC)");
+        match nanoquant::nn::checkpoint::load_model(path) {
+            Ok(params) => {
+                let c = &params.cfg;
+                println!(
+                    "  config: {} vocab={} d_model={} layers={} heads={} d_ff={} tied={}",
+                    c.name, c.vocab, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.tied_embeddings
+                );
+                println!("  loads cleanly; re-save with `pack` or `save_model` to upgrade");
+            }
+            Err(e) => {
+                eprintln!("  FAILED to load: {e}");
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    match Artifact::open(path, Backing::Mmap, true) {
+        Ok(a) => {
+            println!(
+                "{path}: NANOQCK2 kind={} ({} tensors, {} bytes, CRC OK, {})",
+                a.kind(),
+                a.tensors().len(),
+                a.file_bytes(),
+                if a.is_mapped() { "mmap" } else { "heap" },
+            );
+            if let Some(cfg) = a.header().get("config") {
+                println!("  config: {}", cfg.to_string());
+            }
+            println!(
+                "  {:<16} {:>5} {:>14} {:>12} {:>10}",
+                "tensor", "dtype", "shape", "offset", "bytes"
+            );
+            for t in a.tensors() {
+                println!(
+                    "  {:<16} {:>5} {:>14} {:>12} {:>10}",
+                    t.name,
+                    t.dtype.name(),
+                    format!("{:?}", t.shape),
+                    t.offset,
+                    t.bytes
+                );
+            }
+        }
+        Err(e) => {
+            eprintln!("{path}: INVALID: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_eval(args: &Args) {
@@ -167,27 +279,61 @@ fn cmd_serve(args: &Args) {
 }
 
 fn cmd_gateway(args: &Args) {
-    let family = args.get_or("family", "l2");
-    let size = args.get_or("size", "s");
-    let tokens = zoo::train_tokens();
-    let teacher =
-        zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
-    let dm = nanoquant::nn::decode::dense_decode_model(&teacher);
-    let engine = Engine::new(
-        dm,
-        ServerConfig {
-            max_batch: args.get_usize("max-batch", 4),
-            prefill_chunk: args.get_usize("prefill-chunk", 8),
-            kv_pages: args.get_usize_opt("kv-pages"),
-            seed: args.get_u64("seed", 0),
-            ..Default::default()
-        },
-    );
-    let cfg = GatewayConfig {
-        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+    let scfg = ServerConfig {
+        max_batch: args.get_usize("max-batch", 4),
+        prefill_chunk: args.get_usize("prefill-chunk", 8),
+        kv_pages: args.get_usize_opt("kv-pages"),
+        seed: args.get_u64("seed", 0),
         ..Default::default()
     };
-    let gateway = match Gateway::start(engine, cfg) {
+    let backing = if args.flag("heap") { Backing::Heap } else { Backing::Mmap };
+    let store = nanoquant::model::ModelStore::new(nanoquant::model::StoreConfig {
+        max_resident: args.get_usize("store-budget", 4),
+        ..Default::default()
+    });
+    let router =
+        std::sync::Arc::new(nanoquant::serve::http::ModelRouter::new(store, scfg.clone()));
+
+    // Packed artifacts: --models name=path[,name=path...] (zero-copy mmap
+    // unless --heap). The first listed model becomes the default.
+    let models = args.get_or("models", "").to_string();
+    let mut served: Vec<String> = Vec::new();
+    for spec in models.split(',').filter(|s| !s.is_empty()) {
+        let Some((name, path)) = spec.split_once('=') else {
+            eprintln!("gateway: bad --models entry {spec:?} (want name=path.nqck)");
+            std::process::exit(2);
+        };
+        match router.load(name, path, backing, scfg.clone(), false) {
+            Ok(_) => served.push(name.to_string()),
+            Err(e) => {
+                eprintln!("gateway: could not load {name} from {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    // No artifacts given: serve a dense teacher as the default model
+    // (the original single-model behavior).
+    let default_name = if served.is_empty() {
+        let family = args.get_or("family", "l2");
+        let size = args.get_or("size", "s");
+        let tokens = zoo::train_tokens();
+        let teacher =
+            zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
+        let dm = nanoquant::nn::decode::dense_decode_model(&teacher);
+        let name = format!("{family}-{size}");
+        router
+            .install(&name, Engine::new(dm, scfg), None, true)
+            .expect("fresh router cannot collide");
+        name
+    } else {
+        served[0].clone()
+    };
+    let cfg = GatewayConfig {
+        addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
+        default_model_name: default_name.clone(),
+        ..Default::default()
+    };
+    let gateway = match Gateway::start_with_router(router, cfg) {
         Ok(g) => g,
         Err(e) => {
             eprintln!("gateway failed to bind: {e}");
@@ -195,10 +341,13 @@ fn cmd_gateway(args: &Args) {
         }
     };
     let addr = gateway.local_addr();
-    println!("gateway listening on http://{addr}  ({family}-{size}, dense engine)");
-    println!("  POST /v1/generate            full JSON response");
+    println!("gateway listening on http://{addr}  (default model: {default_name})");
+    println!("  POST /v1/generate            full JSON response ('model' field routes)");
     println!("  POST /v1/generate?stream=1   SSE: one data: frame per token");
     println!("  POST /v1/cancel/<id>         cancel at the next engine tick");
+    println!("  GET  /v1/models              serving slots + registry");
+    println!("  POST /v1/models/load         {{\"name\": ..., \"path\": \"m.nqck\"}}");
+    println!("  POST /v1/models/unload       {{\"name\": ...}} (drains first)");
     println!("  GET  /v1/metrics             lifetime metrics + KV pool occupancy");
     println!("  GET  /healthz                liveness");
     println!("try: curl -N -X POST 'http://{addr}/v1/generate?stream=1' \\");
@@ -208,11 +357,39 @@ fn cmd_gateway(args: &Args) {
 }
 
 fn cmd_artifacts_check(args: &Args) {
+    // ---- Golden NANOQCK2 fixture (blocking: format drift fails CI) ----
+    let golden = args.get_or("golden", "").to_string();
+    let golden = if golden.is_empty() {
+        // Works from the repo root and from rust/.
+        ["tests/golden/tiny.nqck", "rust/tests/golden/tiny.nqck"]
+            .iter()
+            .find(|p| std::path::Path::new(p).exists())
+            .map(|p| p.to_string())
+    } else {
+        Some(golden)
+    };
+    match golden {
+        None => {
+            eprintln!("artifacts-check: golden fixture not found (tests/golden/tiny.nqck)");
+            std::process::exit(1);
+        }
+        Some(path) => {
+            if let Err(e) = check_golden(&path) {
+                eprintln!("artifacts-check: GOLDEN FIXTURE FAILED ({path}): {e}");
+                eprintln!("  the NANOQCK2 reader no longer parses the committed format —");
+                eprintln!("  either fix the regression or bump the container version.");
+                std::process::exit(1);
+            }
+            println!("golden fixture ok: {path}");
+        }
+    }
+
+    // ---- PJRT AOT artifacts (informational in offline builds) ----
     let dir = args.get_or("artifacts", "artifacts");
     let mut rt = match nanoquant::runtime::Runtime::new(dir) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("artifacts-check unavailable: {e}");
+            eprintln!("pjrt artifacts-check unavailable: {e}");
             return;
         }
     };
@@ -225,6 +402,31 @@ fn cmd_artifacts_check(args: &Args) {
         }
     }
     println!("{} artifacts checked", names.len());
+}
+
+/// Load the committed golden artifact both ways and check the invariants
+/// the format guarantees: magic/CRC/manifest validity, mmap/heap byte
+/// identity of every tensor, and a working packed forward pass.
+fn check_golden(path: &str) -> Result<(), String> {
+    let a = Artifact::open(path, Backing::Heap, true).map_err(|e| e.to_string())?;
+    if a.kind() != "packed-model" {
+        return Err(format!("unexpected kind {:?}", a.kind()));
+    }
+    let heap = load_packed_model(path, Backing::Heap, true).map_err(|e| e.to_string())?;
+    let mapped = load_packed_model(path, Backing::Mmap, true).map_err(|e| e.to_string())?;
+    if heap.quantized_layers == 0 {
+        return Err("golden fixture has no packed layers".into());
+    }
+    let prompt: Vec<u16> = vec![1, 2, 3];
+    let a_toks = nanoquant::nn::decode::generate_greedy(&heap.model, &prompt, 4, &[]);
+    let b_toks = nanoquant::nn::decode::generate_greedy(&mapped.model, &prompt, 4, &[]);
+    if a_toks != b_toks {
+        return Err(format!("mmap/heap generations diverge: {a_toks:?} vs {b_toks:?}"));
+    }
+    if a_toks.len() != 4 {
+        return Err(format!("expected 4 greedy tokens, got {}", a_toks.len()));
+    }
+    Ok(())
 }
 
 fn cmd_size(args: &Args) {

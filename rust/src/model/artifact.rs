@@ -1,0 +1,639 @@
+//! The `NANOQCK2` artifact container — one format for FP checkpoints and
+//! packed serving models.
+//!
+//! ## Layout
+//!
+//! ```text
+//! offset 0   magic  b"NANOQCK2"                                  (8 bytes)
+//! offset 8   header_len: u64 LE                                  (8 bytes)
+//! offset 16  header: JSON (UTF-8, header_len bytes)
+//!            zero padding to the payload base = align64(16 + header_len)
+//!            payloads, each starting at a 64-byte-aligned offset,
+//!            zero-padded between tensors
+//! end - 4    crc: u32 LE — CRC-32 (IEEE) over every preceding byte
+//! ```
+//!
+//! The header is `{"kind": ..., "version": 2, "config"?: ...,
+//! "tensors": [{name, dtype, shape, offset, bytes}, ...]}` where `offset`
+//! is **relative to the payload base** (so the header's own length never
+//! feeds back into the offsets it contains) and every offset is a
+//! multiple of 64. Payload scalars are 4-byte little-endian (`f32`, or
+//! `u32` sign words for dtype `b1`); 64-byte alignment means a mapped
+//! payload can be viewed in place as `&[f32]`/`&[u32]` on any
+//! little-endian target — the zero-copy contract `WeightBytes` enforces.
+//!
+//! `dtype` is `"f32"` (payload = product(shape) × 4 bytes) or `"b1"`
+//! (packed ±1 signs: shape is the logical `[rows, cols]`, payload =
+//! `rows × ceil(cols/32)` u32 words in the `quant::pack` bit layout).
+//!
+//! The trailing CRC makes truncation and bit rot detectable without any
+//! per-tensor checksums; readers may skip payload verification
+//! (`verify_crc = false`) when cold-load latency matters more than
+//! integrity — `inspect`, `artifacts-check`, and the test suite always
+//! verify.
+
+use super::bytes::{Backing, ByteStore, WeightBytes};
+use crate::util::json::{Json, ParseLimits};
+use std::collections::HashMap;
+use std::io::Write;
+use std::sync::Arc;
+
+/// Container magic for the current (v2) format.
+pub const MAGIC_V2: &[u8; 8] = b"NANOQCK2";
+/// Payload alignment granule.
+pub const ALIGN: usize = 64;
+/// Largest header a reader will parse (64 MiB covers ~100k-tensor
+/// manifests with two orders of magnitude of margin).
+pub const MAX_HEADER_BYTES: usize = 64 << 20;
+
+/// Round `x` up to the next multiple of [`ALIGN`].
+pub fn align_up(x: usize) -> usize {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+// ---- CRC-32 (IEEE 802.3, reflected, poly 0xEDB88320) --------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// Streaming CRC-32 (IEEE) — matches zlib/`binascii.crc32`, which is what
+/// the committed golden-fixture generator uses.
+#[derive(Clone, Copy)]
+pub struct Crc32(u32);
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.0;
+        for &b in bytes {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.0 = c;
+    }
+
+    pub fn finish(self) -> u32 {
+        self.0 ^ 0xFFFF_FFFF
+    }
+}
+
+/// CRC-32 of `bytes` in one call.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+// ---- Manifest -----------------------------------------------------------
+
+/// Payload scalar layout of one tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// Dense little-endian `f32`.
+    F32,
+    /// Packed ±1 sign bits: logical shape `[rows, cols]`, stored as
+    /// `rows × ceil(cols/32)` little-endian `u32` words (LSB-first within
+    /// a word, zero padding bits — the `quant::pack` layout).
+    B1,
+}
+
+impl Dtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::B1 => "b1",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "b1" => Some(Dtype::B1),
+            _ => None,
+        }
+    }
+
+    /// Payload bytes implied by a shape (None: invalid shape for dtype).
+    pub fn payload_bytes(&self, shape: &[usize]) -> Option<usize> {
+        match self {
+            Dtype::F32 => {
+                let mut n = 1usize;
+                for &d in shape {
+                    n = n.checked_mul(d)?;
+                }
+                n.checked_mul(4)
+            }
+            Dtype::B1 => {
+                if shape.len() != 2 {
+                    return None;
+                }
+                shape[0].checked_mul(shape[1].div_ceil(32))?.checked_mul(4)
+            }
+        }
+    }
+}
+
+/// One manifest entry (offsets absolute within the file once parsed).
+#[derive(Clone, Debug)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    /// Absolute byte offset of the payload within the artifact.
+    pub offset: usize,
+    /// Payload length in bytes (excludes inter-tensor padding).
+    pub bytes: usize,
+}
+
+// ---- Writer -------------------------------------------------------------
+
+enum PayloadRef<'a> {
+    F32(&'a [f32]),
+    U32(&'a [u32]),
+}
+
+/// Builder for one NANOQCK2 file: register tensors (borrowed — nothing is
+/// copied until [`ArtifactWriter::write`]), attach header metadata, write.
+pub struct ArtifactWriter<'a> {
+    kind: &'a str,
+    meta: Vec<(&'a str, Json)>,
+    tensors: Vec<(String, Dtype, Vec<usize>, PayloadRef<'a>)>,
+}
+
+impl<'a> ArtifactWriter<'a> {
+    /// A writer for an artifact of the given `kind` (free-form tag the
+    /// readers dispatch on, e.g. `"fp-checkpoint"` or `"packed-model"`).
+    pub fn new(kind: &'a str) -> ArtifactWriter<'a> {
+        ArtifactWriter { kind, meta: Vec::new(), tensors: Vec::new() }
+    }
+
+    /// Attach a top-level header field (e.g. `"config"`).
+    pub fn meta(&mut self, key: &'a str, val: Json) {
+        self.meta.push((key, val));
+    }
+
+    /// Register a dense f32 tensor. `data.len()` must equal the shape
+    /// product.
+    pub fn push_f32(&mut self, name: &str, shape: &[usize], data: &'a [f32]) {
+        assert_eq!(
+            data.len() * 4,
+            Dtype::F32.payload_bytes(shape).expect("f32 shape"),
+            "push_f32 {name}: data length vs shape"
+        );
+        self.tensors.push((name.to_string(), Dtype::F32, shape.to_vec(), PayloadRef::F32(data)));
+    }
+
+    /// Register a packed ±1 bit tensor with logical shape `[rows, cols]`;
+    /// `words` is the row-major word buffer (`rows × ceil(cols/32)`).
+    pub fn push_bits(&mut self, name: &str, rows: usize, cols: usize, words: &'a [u32]) {
+        assert_eq!(
+            words.len(),
+            rows * cols.div_ceil(32),
+            "push_bits {name}: word count vs [rows, cols]"
+        );
+        self.tensors.push((name.to_string(), Dtype::B1, vec![rows, cols], PayloadRef::U32(words)));
+    }
+
+    /// Serialize to `path` (parent directories created).
+    ///
+    /// The write is atomic-by-rename: bytes go to a temporary sibling
+    /// file which replaces `path` only after a successful flush. An
+    /// in-place truncate would mutate pages under any live `mmap` of the
+    /// previous artifact (the `ByteStore` soundness contract) and a
+    /// mid-write crash would destroy the old good file; the rename does
+    /// neither — existing mappings keep the old inode alive.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = format!("{path}.tmp.{}", std::process::id());
+        match self.write_to(&tmp).and_then(|()| std::fs::rename(&tmp, path)) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = std::fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    fn write_to(&self, path: &str) -> std::io::Result<()> {
+        // Relative offsets: each payload starts at the next 64-byte
+        // boundary past the previous one. Independent of the header size.
+        let mut manifest = Vec::with_capacity(self.tensors.len());
+        let mut cursor = 0usize;
+        for (name, dtype, shape, payload) in &self.tensors {
+            let offset = align_up(cursor);
+            let bytes = match payload {
+                PayloadRef::F32(d) => d.len() * 4,
+                PayloadRef::U32(d) => d.len() * 4,
+            };
+            manifest.push(
+                Json::obj()
+                    .set("name", name.as_str())
+                    .set("dtype", dtype.name())
+                    .set("shape", shape.clone())
+                    .set("offset", offset)
+                    .set("bytes", bytes),
+            );
+            cursor = offset + bytes;
+        }
+        let mut header = Json::obj().set("kind", self.kind).set("version", 2usize);
+        for (key, val) in &self.meta {
+            header.insert(key, val.clone());
+        }
+        let header = header.set("tensors", Json::Arr(manifest)).to_string();
+
+        let file = std::fs::File::create(path)?;
+        let mut w = CrcWriter { inner: std::io::BufWriter::new(file), crc: Crc32::new() };
+        w.write_all(MAGIC_V2)?;
+        w.write_all(&(header.len() as u64).to_le_bytes())?;
+        w.write_all(header.as_bytes())?;
+        let base = align_up(16 + header.len());
+        w.pad(base - (16 + header.len()))?;
+        let mut cursor = 0usize;
+        for (_, _, _, payload) in &self.tensors {
+            let offset = align_up(cursor);
+            w.pad(offset - cursor)?;
+            cursor = offset;
+            cursor += match payload {
+                PayloadRef::F32(d) => {
+                    w.write_scalars(d.iter().map(|x| x.to_le_bytes()))?;
+                    d.len() * 4
+                }
+                PayloadRef::U32(d) => {
+                    w.write_scalars(d.iter().map(|x| x.to_le_bytes()))?;
+                    d.len() * 4
+                }
+            };
+        }
+        let crc = w.crc.finish();
+        // The CRC itself is excluded from the checksum.
+        w.inner.write_all(&crc.to_le_bytes())?;
+        w.inner.flush()
+    }
+}
+
+struct CrcWriter {
+    inner: std::io::BufWriter<std::fs::File>,
+    crc: Crc32,
+}
+
+impl CrcWriter {
+    fn write_all(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.crc.update(bytes);
+        self.inner.write_all(bytes)
+    }
+
+    fn pad(&mut self, n: usize) -> std::io::Result<()> {
+        const ZEROS: [u8; ALIGN] = [0u8; ALIGN];
+        debug_assert!(n < ALIGN);
+        self.write_all(&ZEROS[..n])
+    }
+
+    /// Write 4-byte scalars through a chunk buffer (one syscall-sized
+    /// memcpy instead of per-element `write_all`).
+    fn write_scalars(&mut self, scalars: impl Iterator<Item = [u8; 4]>) -> std::io::Result<()> {
+        let mut buf = [0u8; 16 << 10];
+        let mut fill = 0usize;
+        for s in scalars {
+            buf[fill..fill + 4].copy_from_slice(&s);
+            fill += 4;
+            if fill == buf.len() {
+                self.write_all(&buf)?;
+                fill = 0;
+            }
+        }
+        if fill > 0 {
+            self.write_all(&buf[..fill])?;
+        }
+        Ok(())
+    }
+}
+
+// ---- Reader -------------------------------------------------------------
+
+/// A parsed, validated NANOQCK2 artifact: the shared byte store plus the
+/// decoded manifest. Tensor views borrow from the store (zero-copy on
+/// mapped little-endian loads).
+pub struct Artifact {
+    store: Arc<ByteStore>,
+    header: Json,
+    kind: String,
+    tensors: Vec<TensorEntry>,
+    /// Name → manifest position, so per-tensor lookups are O(1) — a
+    /// packed model does ~13 lookups per linear, and a linear scan would
+    /// make the cold load quadratic in tensor count.
+    index: HashMap<String, usize>,
+}
+
+impl Artifact {
+    /// Open and validate `path`. Structural checks (magic, header JSON,
+    /// manifest bounds/alignment/size consistency) always run;
+    /// `verify_crc` additionally streams the whole file through the
+    /// trailing CRC — skip it only when cold-load latency matters more
+    /// than integrity.
+    pub fn open(path: &str, backing: Backing, verify_crc: bool) -> std::io::Result<Artifact> {
+        let store = ByteStore::open(path, backing)?;
+        let bytes = store.bytes();
+        if bytes.len() < 16 + 4 {
+            return Err(invalid(format!("artifact too short ({} bytes)", bytes.len())));
+        }
+        if &bytes[..8] != MAGIC_V2 {
+            return Err(invalid(format!(
+                "bad magic {:?} (expected NANOQCK2)",
+                String::from_utf8_lossy(&bytes[..8.min(bytes.len())])
+            )));
+        }
+        let header_len = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        if header_len as usize > MAX_HEADER_BYTES {
+            return Err(invalid(format!("header length {header_len} exceeds the reader cap")));
+        }
+        let header_len = header_len as usize;
+        let payload_base = align_up(16 + header_len);
+        if payload_base + 4 > bytes.len() {
+            return Err(invalid(format!(
+                "header length {header_len} exceeds the {}-byte file",
+                bytes.len()
+            )));
+        }
+        if verify_crc {
+            let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+            let computed = crc32(&bytes[..bytes.len() - 4]);
+            if stored != computed {
+                return Err(invalid(format!(
+                    "CRC mismatch: stored {stored:#010x}, computed {computed:#010x} \
+                     (truncated or corrupt artifact)"
+                )));
+            }
+        }
+        let text = std::str::from_utf8(&bytes[16..16 + header_len])
+            .map_err(|_| invalid("header is not UTF-8"))?;
+        let limits = ParseLimits { max_bytes: MAX_HEADER_BYTES, max_depth: 16 };
+        let header = Json::parse_with_limits(text, limits)
+            .map_err(|e| invalid(format!("header JSON: {e}")))?;
+        let kind = header
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| invalid("header missing \"kind\""))?
+            .to_string();
+        match header.get("version").and_then(Json::as_usize) {
+            Some(2) => {}
+            Some(v) => return Err(invalid(format!("unsupported artifact version {v}"))),
+            None => return Err(invalid("header missing \"version\"")),
+        }
+        let manifest = header
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| invalid("header missing \"tensors\" array"))?;
+        let payload_end = bytes.len() - 4;
+        let mut tensors = Vec::with_capacity(manifest.len());
+        let mut index = HashMap::with_capacity(manifest.len());
+        for (i, entry) in manifest.iter().enumerate() {
+            let tensor = parse_entry(entry, i, payload_base, payload_end)?;
+            if index.insert(tensor.name.clone(), i).is_some() {
+                return Err(invalid(format!("duplicate tensor name {:?}", tensor.name)));
+            }
+            tensors.push(tensor);
+        }
+        Ok(Artifact { store, header, kind, tensors, index })
+    }
+
+    /// The artifact kind tag (`"fp-checkpoint"`, `"packed-model"`, ...).
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    /// The raw parsed header (for `config` and other metadata fields).
+    pub fn header(&self) -> &Json {
+        &self.header
+    }
+
+    /// Whether the backing is a file mapping.
+    pub fn is_mapped(&self) -> bool {
+        self.store.is_mapped()
+    }
+
+    /// Total artifact size in bytes.
+    pub fn file_bytes(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Manifest entries in file order.
+    pub fn tensors(&self) -> &[TensorEntry] {
+        &self.tensors
+    }
+
+    /// Manifest entry by name (O(1) via the name index).
+    pub fn entry(&self, name: &str) -> std::io::Result<&TensorEntry> {
+        self.index
+            .get(name)
+            .map(|&i| &self.tensors[i])
+            .ok_or_else(|| invalid(format!("artifact has no tensor {name:?}")))
+    }
+
+    /// Borrow an f32 tensor's payload (zero-copy on mapped stores).
+    pub fn f32_view(&self, name: &str) -> std::io::Result<WeightBytes<f32>> {
+        let e = self.entry(name)?;
+        if e.dtype != Dtype::F32 {
+            return Err(invalid(format!("tensor {name:?} is {}, not f32", e.dtype.name())));
+        }
+        WeightBytes::from_store(self.store.clone(), e.offset, e.bytes / 4)
+    }
+
+    /// Borrow a b1 tensor's packed words (zero-copy on mapped stores).
+    pub fn bits_view(&self, name: &str) -> std::io::Result<WeightBytes<u32>> {
+        let e = self.entry(name)?;
+        if e.dtype != Dtype::B1 {
+            return Err(invalid(format!("tensor {name:?} is {}, not b1", e.dtype.name())));
+        }
+        WeightBytes::from_store(self.store.clone(), e.offset, e.bytes / 4)
+    }
+
+    /// Copy an f32 tensor out (for heap consumers like `Tensor`).
+    pub fn f32_vec(&self, name: &str) -> std::io::Result<Vec<f32>> {
+        Ok(self.f32_view(name)?.to_vec())
+    }
+}
+
+fn parse_entry(
+    entry: &Json,
+    i: usize,
+    payload_base: usize,
+    payload_end: usize,
+) -> std::io::Result<TensorEntry> {
+    let name = entry
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| invalid(format!("tensors[{i}] missing \"name\"")))?
+        .to_string();
+    let ctx = |field: &str| invalid(format!("tensor {name:?}: missing or invalid \"{field}\""));
+    let dtype = entry
+        .get("dtype")
+        .and_then(Json::as_str)
+        .and_then(Dtype::parse)
+        .ok_or_else(|| ctx("dtype"))?;
+    let shape: Vec<usize> = entry
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ctx("shape"))?
+        .iter()
+        .map(|v| v.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize))
+        .collect::<Option<Vec<usize>>>()
+        .ok_or_else(|| ctx("shape"))?;
+    let rel = entry
+        .get("offset")
+        .and_then(Json::as_f64)
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as usize)
+        .ok_or_else(|| ctx("offset"))?;
+    let bytes = entry
+        .get("bytes")
+        .and_then(Json::as_f64)
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as usize)
+        .ok_or_else(|| ctx("bytes"))?;
+    let expect = dtype
+        .payload_bytes(&shape)
+        .ok_or_else(|| invalid(format!("tensor {name:?}: shape {shape:?} invalid for dtype")))?;
+    if expect != bytes {
+        return Err(invalid(format!(
+            "tensor {name:?}: manifest bytes {bytes} != {expect} implied by dtype/shape"
+        )));
+    }
+    if rel % ALIGN != 0 {
+        return Err(invalid(format!("tensor {name:?}: offset {rel} not {ALIGN}-byte aligned")));
+    }
+    let offset = payload_base.checked_add(rel).ok_or_else(|| ctx("offset"))?;
+    let end = offset.checked_add(bytes).ok_or_else(|| ctx("bytes"))?;
+    if end > payload_end {
+        return Err(invalid(format!(
+            "tensor {name:?}: payload {offset}..{end} exceeds artifact payload region \
+             (file truncated?)"
+        )));
+    }
+    Ok(TensorEntry { name, dtype, shape, offset, bytes })
+}
+
+fn invalid<E: ToString>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard IEEE test vector ("123456789" -> 0xCBF43926), matching
+        // zlib / Python binascii.crc32 (the golden-fixture generator).
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+        let mut streaming = Crc32::new();
+        streaming.update(b"1234");
+        streaming.update(b"56789");
+        assert_eq!(streaming.finish(), 0xCBF43926);
+    }
+
+    fn sample_path(name: &str) -> String {
+        format!("/tmp/nanoquant_artifact_{name}.nqck")
+    }
+
+    fn write_sample(path: &str) -> (Vec<f32>, Vec<u32>) {
+        let f: Vec<f32> = (0..33).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let words: Vec<u32> = (0..6).map(|i| (i as u32 * 5 + 3) & 0xFFFF).collect();
+        let mut w = ArtifactWriter::new("test-artifact");
+        w.meta("config", Json::obj().set("d", 33usize));
+        w.push_f32("scales", &[33], &f);
+        w.push_bits("signs", 6, 16, &words);
+        w.write(path).unwrap();
+        (f, words)
+    }
+
+    #[test]
+    fn roundtrip_heap_and_mmap_with_alignment_and_crc() {
+        let path = sample_path("roundtrip");
+        let (f, words) = write_sample(&path);
+        for backing in [Backing::Heap, Backing::Mmap] {
+            let a = Artifact::open(&path, backing, true).unwrap();
+            assert_eq!(a.kind(), "test-artifact");
+            assert_eq!(
+                a.header().get("config").and_then(|c| c.get("d")).and_then(Json::as_usize),
+                Some(33)
+            );
+            for t in a.tensors() {
+                assert_eq!(t.offset % ALIGN, 0, "{} misaligned", t.name);
+            }
+            assert_eq!(a.f32_view("scales").unwrap().to_vec(), f);
+            assert_eq!(a.bits_view("signs").unwrap().to_vec(), words);
+            assert_eq!(a.entry("signs").unwrap().shape, vec![6, 16]);
+            // Dtype confusion is rejected.
+            assert!(a.f32_view("signs").is_err());
+            assert!(a.bits_view("scales").is_err());
+            assert!(a.entry("nope").is_err());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let path = sample_path("corrupt");
+        write_sample(&path);
+        let good = std::fs::read(&path).unwrap();
+
+        // Flip one payload byte: structural checks pass, CRC catches it.
+        let mut bad = good.clone();
+        let last = bad.len() - 5;
+        bad[last] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Artifact::open(&path, Backing::Heap, true).is_err());
+        assert!(
+            Artifact::open(&path, Backing::Heap, false).is_ok(),
+            "verify_crc=false must skip payload verification"
+        );
+
+        // Truncation: manifest range check fires even without CRC.
+        std::fs::write(&path, &good[..good.len() - 40]).unwrap();
+        assert!(Artifact::open(&path, Backing::Heap, false).is_err());
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Artifact::open(&path, Backing::Heap, false).is_err());
+
+        // Hostile header length: must error, not allocate/scan unbounded.
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        assert!(Artifact::open(&path, Backing::Heap, false).is_err());
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_manifest_roundtrips() {
+        let path = sample_path("empty");
+        ArtifactWriter::new("empty").write(&path).unwrap();
+        let a = Artifact::open(&path, Backing::Heap, true).unwrap();
+        assert_eq!(a.tensors().len(), 0);
+        assert_eq!(a.kind(), "empty");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,395 @@
+//! Artifact byte backing and the `WeightBytes` Cow view.
+//!
+//! A [`ByteStore`] owns the raw bytes of one model artifact — either a
+//! read-once heap buffer or, on 64-bit unix, a read-only `mmap` of the
+//! file. [`WeightBytes<T>`] is the Cow-style slice the weight containers
+//! (`quant::pack::PackedBits` words, `quant::scheme::QuantLinear` scales)
+//! actually hold: it is *either* an owned `Vec<T>` (the training /
+//! quantization path, byte-for-byte the old representation) *or* a typed
+//! borrow into an `Arc<ByteStore>` (the zero-copy serving path). Both
+//! deref to `&[T]`, so every kernel reads through one code path.
+//!
+//! Zero-copy soundness: a borrowed view is only constructed when the byte
+//! range is in bounds, 4-byte aligned, and the target is little-endian
+//! (the on-disk byte order). On big-endian targets the constructor
+//! decodes into an owned buffer instead, so readers stay correct
+//! everywhere and zero-copy is a transparent fast path. The `Arc` keeps
+//! the mapping alive for as long as any view exists — an engine holding
+//! borrowed weights can never outlive its mapping, whatever the registry
+//! does (see `model::store`).
+
+use std::io::Read;
+use std::sync::Arc;
+
+/// Which backing [`ByteStore::open`] should use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backing {
+    /// `mmap` the file read-only (64-bit unix; silently falls back to
+    /// [`Backing::Heap`] elsewhere). Pages are faulted in on first touch,
+    /// so cold load time is O(header) and resident memory tracks what the
+    /// forward pass actually reads.
+    Mmap,
+    /// Read the whole file into one heap buffer up front.
+    Heap,
+}
+
+enum Storage {
+    Heap(Box<[u8]>),
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped {
+        ptr: *const u8,
+        len: usize,
+    },
+}
+
+/// Owner of one artifact's bytes (heap buffer or read-only file mapping).
+pub struct ByteStore {
+    storage: Storage,
+}
+
+// SAFETY: the mapped variant is a private read-only mapping (PROT_READ,
+// MAP_PRIVATE) of a regular file; no writer exists, so shared references
+// from any thread are sound. The heap variant is a plain owned buffer.
+unsafe impl Send for ByteStore {}
+unsafe impl Sync for ByteStore {}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+    // Bound directly against the libc `std` already links — the crate
+    // itself stays dependency-free.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+}
+
+impl ByteStore {
+    /// Open `path` with the requested backing. `Mmap` falls back to `Heap`
+    /// on platforms without the mapping path or for empty files (a
+    /// zero-length `mmap` is an error by POSIX).
+    pub fn open(path: &str, backing: Backing) -> std::io::Result<Arc<ByteStore>> {
+        match backing {
+            Backing::Heap => Self::read_heap(path),
+            Backing::Mmap => Self::map_file(path),
+        }
+    }
+
+    fn read_heap(path: &str) -> std::io::Result<Arc<ByteStore>> {
+        let mut f = std::fs::File::open(path)?;
+        let hint = f.metadata().map(|m| m.len() as usize).unwrap_or(0);
+        let mut buf = Vec::with_capacity(hint);
+        f.read_to_end(&mut buf)?;
+        Ok(Arc::new(ByteStore { storage: Storage::Heap(buf.into_boxed_slice()) }))
+    }
+
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    fn map_file(path: &str) -> std::io::Result<Arc<ByteStore>> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)?;
+        let len = f.metadata()?.len() as usize;
+        if len == 0 {
+            return Self::read_heap(path);
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1.
+        if ptr as isize == -1 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                format!("mmap failed for {path}"),
+            ));
+        }
+        // The fd may be closed once the mapping exists (POSIX keeps the
+        // mapping valid); `f` drops here.
+        Ok(Arc::new(ByteStore { storage: Storage::Mapped { ptr: ptr as *const u8, len } }))
+    }
+
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    fn map_file(path: &str) -> std::io::Result<Arc<ByteStore>> {
+        Self::read_heap(path)
+    }
+
+    /// The full artifact contents.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.storage {
+            Storage::Heap(b) => b,
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Storage::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+        }
+    }
+
+    /// Whether this store is a file mapping (vs a heap copy).
+    pub fn is_mapped(&self) -> bool {
+        match &self.storage {
+            Storage::Heap(_) => false,
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Storage::Mapped { .. } => true,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+}
+
+impl Drop for ByteStore {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Storage::Mapped { ptr, len } = self.storage {
+            unsafe {
+                sys::munmap(ptr as *mut std::os::raw::c_void, len);
+            }
+        }
+    }
+}
+
+/// Element types `WeightBytes` can view. Sealed: exactly the 4-byte
+/// little-endian payload scalars the NANOQCK2 format stores.
+pub trait Pod: Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static + private::Sealed {
+    /// Decode one element from its on-disk little-endian bytes.
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+mod private {
+    pub trait Sealed {}
+    impl Sealed for u32 {}
+    impl Sealed for f32 {}
+}
+
+impl Pod for u32 {
+    fn from_le(bytes: [u8; 4]) -> u32 {
+        u32::from_le_bytes(bytes)
+    }
+}
+
+impl Pod for f32 {
+    fn from_le(bytes: [u8; 4]) -> f32 {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+enum Repr<T: Pod> {
+    Owned(Vec<T>),
+    Borrowed {
+        store: Arc<ByteStore>,
+        /// Byte offset of the first element (4-byte aligned, in bounds).
+        offset: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+/// A weight buffer that is either owned (`Vec<T>`) or a typed borrow into
+/// a shared [`ByteStore`] — the Cow abstraction the zero-copy load path
+/// threads through `quant::pack` and `quant::scheme`.
+pub struct WeightBytes<T: Pod> {
+    repr: Repr<T>,
+}
+
+impl<T: Pod> WeightBytes<T> {
+    /// Borrow `len` elements starting at byte `offset` of `store`.
+    ///
+    /// Checks bounds and 4-byte alignment; on big-endian targets (or a
+    /// misaligned offset, which the NANOQCK2 64-byte payload alignment
+    /// rules out for well-formed files) the bytes are decoded into an
+    /// owned buffer instead — same values, no borrow.
+    pub fn from_store(
+        store: Arc<ByteStore>,
+        offset: usize,
+        len: usize,
+    ) -> std::io::Result<WeightBytes<T>> {
+        let nbytes = len
+            .checked_mul(4)
+            .ok_or_else(|| invalid("tensor length overflows"))?;
+        let end = offset.checked_add(nbytes).ok_or_else(|| invalid("tensor range overflows"))?;
+        if end > store.len() {
+            return Err(invalid(format!(
+                "tensor range {offset}..{end} exceeds artifact size {}",
+                store.len()
+            )));
+        }
+        let base = store.bytes()[offset..].as_ptr();
+        let aligned = (base as usize) % std::mem::align_of::<T>() == 0;
+        if cfg!(target_endian = "little") && aligned {
+            Ok(WeightBytes { repr: Repr::Borrowed { store, offset, len } })
+        } else {
+            // Portable fallback: decode element-wise.
+            let bytes = &store.bytes()[offset..end];
+            let owned: Vec<T> = bytes
+                .chunks_exact(4)
+                .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(WeightBytes { repr: Repr::Owned(owned) })
+        }
+    }
+
+    /// Whether this buffer borrows from a shared store (zero-copy) rather
+    /// than owning its elements.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self.repr, Repr::Borrowed { .. })
+    }
+
+    /// The elements as a slice (whatever the backing).
+    pub fn as_slice(&self) -> &[T] {
+        match &self.repr {
+            Repr::Owned(v) => v,
+            Repr::Borrowed { store, offset, len } => {
+                let bytes = &store.bytes()[*offset..*offset + *len * 4];
+                // SAFETY: construction checked bounds, 4-byte alignment,
+                // and little-endian layout; T is a 4-byte POD. All f32 bit
+                // patterns (incl. signaling NaNs) are valid values.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const T, *len) }
+            }
+        }
+    }
+
+    /// Copy into an owned `Vec` (detaching from any mapping).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for WeightBytes<T> {
+    fn from(v: Vec<T>) -> WeightBytes<T> {
+        WeightBytes { repr: Repr::Owned(v) }
+    }
+}
+
+impl<T: Pod> std::ops::Deref for WeightBytes<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> Clone for WeightBytes<T> {
+    fn clone(&self) -> WeightBytes<T> {
+        match &self.repr {
+            Repr::Owned(v) => WeightBytes { repr: Repr::Owned(v.clone()) },
+            // Borrowed clones are an Arc bump, not a copy — cloning a
+            // packed layer out of a mapped artifact stays zero-copy.
+            Repr::Borrowed { store, offset, len } => WeightBytes {
+                repr: Repr::Borrowed { store: store.clone(), offset: *offset, len: *len },
+            },
+        }
+    }
+}
+
+impl<T: Pod> PartialEq for WeightBytes<T> {
+    fn eq(&self, other: &WeightBytes<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod> std::fmt::Debug for WeightBytes<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let tag = if self.is_borrowed() { "borrowed" } else { "owned" };
+        write!(f, "WeightBytes<{tag}>{:?}", self.as_slice())
+    }
+}
+
+fn invalid<E: ToString>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, bytes: &[u8]) -> String {
+        let path = format!("/tmp/nanoquant_bytes_{name}.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn heap_and_mmap_see_identical_bytes() {
+        let data: Vec<u8> = (0..=255).collect();
+        let path = tmp("roundtrip", &data);
+        let heap = ByteStore::open(&path, Backing::Heap).unwrap();
+        let mapped = ByteStore::open(&path, Backing::Mmap).unwrap();
+        assert_eq!(heap.bytes(), &data[..]);
+        assert_eq!(mapped.bytes(), &data[..]);
+        assert!(!heap.is_mapped());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn weight_bytes_views_decode_u32_and_f32() {
+        let mut bytes = Vec::new();
+        for w in [0x01020304u32, 0xDEADBEEF, 0] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        for x in [1.5f32, -0.25, f32::MAX] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let path = tmp("views", &bytes);
+        for backing in [Backing::Heap, Backing::Mmap] {
+            let store = ByteStore::open(&path, backing).unwrap();
+            let words: WeightBytes<u32> = WeightBytes::from_store(store.clone(), 0, 3).unwrap();
+            assert_eq!(&words[..], &[0x01020304, 0xDEADBEEF, 0]);
+            let scales: WeightBytes<f32> = WeightBytes::from_store(store, 12, 3).unwrap();
+            assert_eq!(&scales[..], &[1.5, -0.25, f32::MAX]);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn out_of_bounds_views_are_rejected() {
+        let path = tmp("oob", &[0u8; 16]);
+        let store = ByteStore::open(&path, Backing::Heap).unwrap();
+        assert!(WeightBytes::<u32>::from_store(store.clone(), 0, 5).is_err());
+        assert!(WeightBytes::<u32>::from_store(store.clone(), 13, 1).is_err());
+        assert!(WeightBytes::<u32>::from_store(store.clone(), usize::MAX, 1).is_err());
+        assert!(WeightBytes::<u32>::from_store(store, 0, usize::MAX / 2).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn owned_and_borrowed_compare_equal_and_clone_cheaply() {
+        let mut bytes = Vec::new();
+        for x in [0.5f32, 2.0, -8.25] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        let path = tmp("cow", &bytes);
+        let store = ByteStore::open(&path, Backing::Mmap).unwrap();
+        let borrowed: WeightBytes<f32> = WeightBytes::from_store(store, 0, 3).unwrap();
+        let owned: WeightBytes<f32> = vec![0.5f32, 2.0, -8.25].into();
+        assert_eq!(borrowed, owned);
+        let clone = borrowed.clone();
+        assert_eq!(clone.is_borrowed(), borrowed.is_borrowed());
+        assert_eq!(clone.to_vec(), vec![0.5, 2.0, -8.25]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mapping_outlives_the_file_handle_and_store_arc_drops() {
+        let data = vec![7u8; 4096];
+        let path = tmp("lifetime", &data);
+        let store = ByteStore::open(&path, Backing::Mmap).unwrap();
+        let view: WeightBytes<u32> = WeightBytes::from_store(store.clone(), 0, 1024).unwrap();
+        drop(store); // the view's Arc keeps the mapping alive
+        assert!(view.iter().all(|&w| w == 0x07070707));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,33 @@
+//! `model` — model artifacts and the multi-model registry.
+//!
+//! The subsystem between "we can quantize" and "we can serve many
+//! scenarios fast":
+//!
+//! - [`bytes`] — [`ByteStore`] (heap or `mmap` backing for one artifact)
+//!   and [`WeightBytes`], the Cow-style buffer that lets `PackedBits`
+//!   words and `QuantLinear` scales either own their data (training /
+//!   quantization) or borrow it straight out of a mapped artifact
+//!   (zero-copy serving).
+//! - [`artifact`] — the `NANOQCK2` container: versioned JSON manifest,
+//!   64-byte-aligned payloads with explicit per-tensor offsets, trailing
+//!   CRC-32. Shared by the FP checkpoints (`nn::checkpoint`) and the
+//!   packed serving artifacts below.
+//! - [`packed`] — save a frozen [`crate::quant::QuantModel`] as a
+//!   `.nqck` serving artifact; load one back as a decode-ready
+//!   [`crate::nn::decode::DecodeModel`] whose packed weights borrow from
+//!   the mapping. Mmap-loaded and heap-loaded models are byte-identical
+//!   in every forward output.
+//! - [`store`] — [`ModelStore`], the named-model registry: ref-counted
+//!   handles, LRU eviction of idle models under a residency budget, hot
+//!   load/unload. The HTTP gateway's multi-model router
+//!   (`serve::http::router`) sits on top.
+
+pub mod artifact;
+pub mod bytes;
+pub mod packed;
+pub mod store;
+
+pub use artifact::{Artifact, ArtifactWriter, Crc32, Dtype, TensorEntry};
+pub use bytes::{Backing, ByteStore, WeightBytes};
+pub use packed::{load_packed_model, save_packed_model, LoadedModel};
+pub use store::{ModelHandle, ModelInfo, ModelStore, StoreConfig};

@@ -1,0 +1,390 @@
+//! Packed serving artifacts (`.nqck`): a frozen [`QuantModel`] on disk,
+//! loadable straight into a decode-ready [`DecodeModel`].
+//!
+//! The artifact is a NANOQCK2 container of kind `"packed-model"`. FP
+//! parts (embeddings, norms, untied head — the parts the paper keeps at
+//! full precision, Appendix F.6) are `f32` tensors; every quantized
+//! decoder linear stores its two packed sign factors as `b1` tensors plus
+//! two `f32` scale vectors:
+//!
+//! ```text
+//! embed                      f32 [vocab, d]
+//! b{i}.ln1 / b{i}.ln2        f32 [d]
+//! b{i}.{wq,...}.u            b1  [n, r]      packed sign(U)
+//! b{i}.{wq,...}.vt           b1  [r, m]      packed sign(V)ᵀ
+//! b{i}.{wq,...}.s1 / .s2     f32 [n] / [m]   channel scales
+//! b{i}.{wq,...}.w            f32 [n, m]      (only for unquantized layers)
+//! ln_f                       f32 [d]
+//! head                       f32 [vocab, d]  (untied models only)
+//! ```
+//!
+//! On load, the `b1` words and the scale vectors become [`WeightBytes`]
+//! views into the artifact's [`ByteStore`] — with `Backing::Mmap` that is
+//! a zero-copy borrow of the mapping (the 64-byte payload alignment
+//! guarantees the in-place `&[u32]`/`&[f32]` casts are aligned), so a
+//! loaded model's packed weights add no resident memory beyond the page
+//! cache. FP parts are materialized into heap `Tensor`s (they feed the
+//! shared `nn` forward, which owns its data). Heap- and mmap-loaded
+//! models read identical bytes, so their forward outputs — and therefore
+//! greedy generations — are bit-for-bit equal; the test suite asserts
+//! this with `==`.
+//!
+//! [`QuantModel`]: crate::quant::QuantModel
+//! [`DecodeModel`]: crate::nn::decode::DecodeModel
+//! [`WeightBytes`]: crate::model::bytes::WeightBytes
+//! [`ByteStore`]: crate::model::bytes::ByteStore
+
+use super::artifact::{Artifact, ArtifactWriter};
+use super::bytes::Backing;
+use crate::nn::checkpoint::{cfg_from_json, cfg_to_json};
+use crate::nn::decode::{DecodeBlock, DecodeModel, MatVec};
+use crate::nn::model::LayerKind;
+use crate::nn::LayerId;
+use crate::quant::kernels::PackedLinear;
+use crate::quant::pack::PackedBits;
+use crate::quant::scheme::QuantLinear;
+use crate::quant::QuantModel;
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+
+/// Artifact kind tag for packed serving models.
+pub const KIND_PACKED: &str = "packed-model";
+
+/// Short layer names, matching the checkpoint convention (`b0.wq`, ...).
+fn short(kind: LayerKind) -> &'static str {
+    match kind {
+        LayerKind::Q => "wq",
+        LayerKind::K => "wk",
+        LayerKind::V => "wv",
+        LayerKind::O => "wo",
+        LayerKind::Gate => "wg",
+        LayerKind::Up => "wu",
+        LayerKind::Down => "wd",
+    }
+}
+
+/// Save `qm` as a packed serving artifact. Quantized layers are written
+/// in their packed form with the *current* scales (exactly what
+/// [`QuantModel::to_decode_model`] would serve); unquantized decoder
+/// linears fall back to dense `f32`.
+///
+/// [`QuantModel::to_decode_model`]: crate::quant::QuantModel::to_decode_model
+pub fn save_packed_model(path: &str, qm: &QuantModel) -> std::io::Result<()> {
+    let p = &qm.params;
+    // Freeze the packed forms first; the writer borrows from them.
+    let frozen: BTreeMap<LayerId, QuantLinear> =
+        qm.layers.iter().map(|(id, q)| (*id, q.packed())).collect();
+
+    let mut w = ArtifactWriter::new(KIND_PACKED);
+    w.meta("config", cfg_to_json(&p.cfg));
+    w.push_f32("embed", &p.embed.shape, &p.embed.data);
+    for (bi, b) in p.blocks.iter().enumerate() {
+        w.push_f32(&format!("b{bi}.ln1"), &[b.ln1.len()], &b.ln1);
+        for kind in LayerKind::ALL {
+            let base = format!("b{bi}.{}", short(kind));
+            match frozen.get(&LayerId { block: bi, kind }) {
+                Some(q) => {
+                    w.push_bits(&format!("{base}.u"), q.u.rows, q.u.cols, &q.u.words);
+                    w.push_bits(&format!("{base}.vt"), q.vt.rows, q.vt.cols, &q.vt.words);
+                    w.push_f32(&format!("{base}.s1"), &[q.s1.len()], &q.s1);
+                    w.push_f32(&format!("{base}.s2"), &[q.s2.len()], &q.s2);
+                }
+                None => {
+                    let t = b.linear(kind);
+                    w.push_f32(&format!("{base}.w"), &t.shape, &t.data);
+                }
+            }
+        }
+        w.push_f32(&format!("b{bi}.ln2"), &[b.ln2.len()], &b.ln2);
+    }
+    w.push_f32("ln_f", &[p.ln_f.len()], &p.ln_f);
+    if let Some(h) = &p.head {
+        w.push_f32("head", &h.shape, &h.data);
+    }
+    w.write(path)
+}
+
+/// A packed model loaded from disk, plus load-path metadata.
+pub struct LoadedModel {
+    /// Decode-ready model (packed engines for quantized layers, dense for
+    /// the rest).
+    pub model: DecodeModel,
+    /// Total artifact size on disk.
+    pub file_bytes: usize,
+    /// Whether the packed weights borrow from a file mapping (zero-copy)
+    /// rather than a heap buffer.
+    pub mapped: bool,
+    /// Decoder linears served by the packed kernels.
+    pub quantized_layers: usize,
+}
+
+/// Load a packed serving artifact.
+///
+/// `backing` selects zero-copy `mmap` or a heap read; outputs are
+/// bit-identical either way. `verify_crc` streams the file through the
+/// trailing CRC before any tensor is touched (recommended everywhere
+/// except latency-critical cold starts on trusted storage).
+pub fn load_packed_model(
+    path: &str,
+    backing: Backing,
+    verify_crc: bool,
+) -> std::io::Result<LoadedModel> {
+    let a = Artifact::open(path, backing, verify_crc)?;
+    if a.kind() != KIND_PACKED {
+        return Err(invalid(format!(
+            "artifact kind {:?} is not a packed model (expected {KIND_PACKED:?})",
+            a.kind()
+        )));
+    }
+    let cfg = cfg_from_json(
+        a.header().get("config").ok_or_else(|| invalid("header missing \"config\""))?,
+    )?;
+    let embed = tensor_of(&a, "embed")?;
+    if embed.shape != [cfg.vocab, cfg.d_model] {
+        return Err(invalid(format!(
+            "embed shape {:?} does not match config [{}, {}]",
+            embed.shape, cfg.vocab, cfg.d_model
+        )));
+    }
+    // Bound the layer count by the manifest before any per-layer work: a
+    // hostile header must error, not abort in the allocator (each layer
+    // needs at least ten tensors, so this is a generous bound).
+    if cfg.n_layers > a.tensors().len() {
+        return Err(invalid(format!(
+            "config claims {} layers but the manifest has only {} tensors",
+            cfg.n_layers,
+            a.tensors().len()
+        )));
+    }
+    let mut quantized_layers = 0usize;
+    let mut blocks = Vec::new();
+    for bi in 0..cfg.n_layers {
+        let mut lin = |kind: LayerKind| -> std::io::Result<Box<dyn MatVec>> {
+            let base = format!("b{bi}.{}", short(kind));
+            let (n, m) = expected_dims(&cfg, kind);
+            if a.entry(&format!("{base}.u")).is_ok() {
+                let boxed = load_packed_linear(&a, &base, n, m)?;
+                quantized_layers += 1;
+                Ok(boxed)
+            } else {
+                let t = tensor_of(&a, &format!("{base}.w"))?;
+                if t.shape != [n, m] {
+                    return Err(invalid(format!(
+                        "{base}.w shape {:?} does not match config [{n}, {m}]",
+                        t.shape
+                    )));
+                }
+                Ok(Box::new(t))
+            }
+        };
+        blocks.push(DecodeBlock {
+            ln1: vec_of(&a, &format!("b{bi}.ln1"), cfg.d_model)?,
+            wq: lin(LayerKind::Q)?,
+            wk: lin(LayerKind::K)?,
+            wv: lin(LayerKind::V)?,
+            wo: lin(LayerKind::O)?,
+            ln2: vec_of(&a, &format!("b{bi}.ln2"), cfg.d_model)?,
+            wg: lin(LayerKind::Gate)?,
+            wu: lin(LayerKind::Up)?,
+            wd: lin(LayerKind::Down)?,
+        });
+    }
+    let ln_f = vec_of(&a, "ln_f", cfg.d_model)?;
+    let head: Option<Box<dyn MatVec>> = if cfg.tied_embeddings {
+        None
+    } else {
+        let h = tensor_of(&a, "head")?;
+        if h.shape != [cfg.vocab, cfg.d_model] {
+            return Err(invalid(format!("head shape {:?} does not match config", h.shape)));
+        }
+        Some(Box::new(h))
+    };
+    Ok(LoadedModel {
+        model: DecodeModel { cfg, embed, blocks, ln_f, head },
+        file_bytes: a.file_bytes(),
+        mapped: a.is_mapped(),
+        quantized_layers,
+    })
+}
+
+/// Out/in dims a decoder linear of `kind` must have under `cfg` — the
+/// single source of truth for the layer-shape convention, shared by the
+/// loader's validation, the tests, and the benches.
+pub fn expected_dims(cfg: &crate::nn::model::ModelConfig, kind: LayerKind) -> (usize, usize) {
+    let d = cfg.d_model;
+    match kind {
+        LayerKind::Q | LayerKind::O => (d, d),
+        LayerKind::K | LayerKind::V => (cfg.kv_row(), d),
+        LayerKind::Gate | LayerKind::Up => (cfg.d_ff, d),
+        LayerKind::Down => (d, cfg.d_ff),
+    }
+}
+
+/// Assemble one packed linear (`{base}.u/.vt/.s1/.s2`) with zero-copy
+/// views, validating every dimension against the config.
+fn load_packed_linear(
+    a: &Artifact,
+    base: &str,
+    n: usize,
+    m: usize,
+) -> std::io::Result<Box<dyn MatVec>> {
+    let ue = a.entry(&format!("{base}.u"))?;
+    if ue.shape.len() != 2 || ue.shape[0] != n {
+        return Err(invalid(format!("{base}.u shape {:?} does not match out dim {n}", ue.shape)));
+    }
+    let r = ue.shape[1];
+    let vte = a.entry(&format!("{base}.vt"))?;
+    if vte.shape != [r, m] {
+        return Err(invalid(format!(
+            "{base}.vt shape {:?} does not match [rank {r}, in dim {m}]",
+            vte.shape
+        )));
+    }
+    let u = PackedBits::from_words(n, r, a.bits_view(&format!("{base}.u"))?)
+        .map_err(invalid)?;
+    let vt = PackedBits::from_words(r, m, a.bits_view(&format!("{base}.vt"))?)
+        .map_err(invalid)?;
+    let s1 = a.f32_view(&format!("{base}.s1"))?;
+    let s2 = a.f32_view(&format!("{base}.s2"))?;
+    if s1.len() != n || s2.len() != m {
+        return Err(invalid(format!(
+            "{base} scale lengths ({}, {}) do not match dims ({n}, {m})",
+            s1.len(),
+            s2.len()
+        )));
+    }
+    Ok(Box::new(PackedLinear::new(QuantLinear { u, vt, s1, s2 })))
+}
+
+fn tensor_of(a: &Artifact, name: &str) -> std::io::Result<Tensor> {
+    let e = a.entry(name)?;
+    let shape = e.shape.clone();
+    Ok(Tensor::new(&shape, a.f32_vec(name)?))
+}
+
+fn vec_of(a: &Artifact, name: &str, expect_len: usize) -> std::io::Result<Vec<f32>> {
+    let v = a.f32_vec(name)?;
+    if v.len() != expect_len {
+        return Err(invalid(format!("{name} length {} != expected {expect_len}", v.len())));
+    }
+    Ok(v)
+}
+
+fn invalid<E: ToString>(e: E) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+}
+
+/// Deterministic fixture used by the crate's tests and benches: a small
+/// quantized model in the zoo shape — every decoder linear of an `l2-xs`
+/// teacher replaced by a rank-8 random latent and frozen. Not a trained
+/// model; it exists so artifact/store/gateway code paths can exercise
+/// real packed layers without running the quantization pipeline.
+pub fn quantized_zoo_model(seed: u64) -> QuantModel {
+    use crate::nn::family_config;
+    use crate::nn::model::ModelParams;
+    use crate::quant::scheme::LatentFactors;
+    use crate::util::rng::Rng;
+    let cfg = family_config("l2", "xs");
+    let mut rng = Rng::new(seed);
+    let teacher = ModelParams::init(&cfg, &mut rng);
+    let mut qm = QuantModel::from_teacher(&teacher);
+    for bi in 0..cfg.n_layers {
+        for kind in LayerKind::ALL {
+            let (n, m) = expected_dims(&cfg, kind);
+            let mut lrng = Rng::new(seed ^ ((bi as u64) << 8) ^ kind as u64);
+            let lat = LatentFactors {
+                u: Tensor::randn(&[n, 8], 1.0, &mut lrng),
+                v: Tensor::randn(&[m, 8], 1.0, &mut lrng),
+                s1: (0..n).map(|_| lrng.uniform_in(0.5, 1.5)).collect(),
+                s2: (0..m).map(|_| lrng.uniform_in(0.5, 1.5)).collect(),
+            };
+            qm.set_layer(LayerId { block: bi, kind }, lat);
+        }
+        qm.freeze_block(bi);
+    }
+    qm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::decode::generate_greedy;
+    use crate::nn::family_config;
+    use crate::nn::model::ModelParams;
+    use crate::quant::scheme::LatentFactors;
+    use crate::quant::Engine;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_preserves_forward_bits_across_backings() {
+        let qm = quantized_zoo_model(42);
+        let path = "/tmp/nanoquant_test_packed_roundtrip.nqck";
+        save_packed_model(path, &qm).unwrap();
+
+        let reference = qm.to_decode_model(Engine::Packed);
+        let heap = load_packed_model(path, Backing::Heap, true).unwrap();
+        let mapped = load_packed_model(path, Backing::Mmap, true).unwrap();
+        assert!(!heap.mapped);
+        assert_eq!(heap.quantized_layers, 2 * 7);
+        assert_eq!(mapped.quantized_layers, 2 * 7);
+        assert_eq!(heap.model.cfg, reference.cfg);
+
+        // Single-layer probe: all three engines agree bit for bit.
+        let mut rng = Rng::new(1);
+        let x = rng.normal_vec(reference.cfg.d_model, 1.0);
+        let want = reference.blocks[0].wq.matvec(&x);
+        assert_eq!(heap.model.blocks[0].wq.matvec(&x), want);
+        assert_eq!(mapped.model.blocks[0].wq.matvec(&x), want);
+
+        // Whole-model acceptance: byte-identical greedy generations.
+        let prompt: Vec<u16> = (0..11).map(|i| (i * 17 % 250) as u16).collect();
+        let want = generate_greedy(&reference, &prompt, 8, &[]);
+        assert_eq!(generate_greedy(&heap.model, &prompt, 8, &[]), want);
+        assert_eq!(generate_greedy(&mapped.model, &prompt, 8, &[]), want);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn partially_quantized_models_mix_packed_and_dense() {
+        // Quantize only block 0's attention; everything else stays dense.
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(5);
+        let teacher = ModelParams::init(&cfg, &mut rng);
+        let mut qm = QuantModel::from_teacher(&teacher);
+        for kind in [LayerKind::Q, LayerKind::O] {
+            let (n, m) = expected_dims(&cfg, kind);
+            let lat = LatentFactors {
+                u: Tensor::randn(&[n, 6], 1.0, &mut rng),
+                v: Tensor::randn(&[m, 6], 1.0, &mut rng),
+                s1: (0..n).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+                s2: (0..m).map(|_| rng.uniform_in(0.5, 1.5)).collect(),
+            };
+            qm.set_layer(LayerId { block: 0, kind }, lat);
+        }
+        qm.freeze_block(0);
+        let path = "/tmp/nanoquant_test_packed_partial.nqck";
+        save_packed_model(path, &qm).unwrap();
+        let loaded = load_packed_model(path, Backing::Mmap, true).unwrap();
+        assert_eq!(loaded.quantized_layers, 2);
+        let reference = qm.to_decode_model(Engine::Packed);
+        let prompt: Vec<u16> = vec![3, 1, 4, 1, 5];
+        assert_eq!(
+            generate_greedy(&loaded.model, &prompt, 6, &[]),
+            generate_greedy(&reference, &prompt, 6, &[])
+        );
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn wrong_kind_and_dim_mismatches_are_rejected() {
+        // An FP checkpoint is a valid NANOQCK2 artifact of the wrong kind.
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(9);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let path = "/tmp/nanoquant_test_packed_wrongkind.nqck";
+        crate::nn::checkpoint::save_model(path, &params).unwrap();
+        let err = load_packed_model(path, Backing::Heap, true).unwrap_err();
+        assert!(err.to_string().contains("kind"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,425 @@
+//! [`ModelStore`] — the named-model registry behind the multi-model
+//! gateway.
+//!
+//! The store owns up to [`StoreConfig::max_resident`] decode-ready models
+//! keyed by name. Callers hold [`ModelHandle`]s: cloning a handle bumps
+//! the entry's ref count, dropping it decrements and stamps a
+//! last-used tick. When a load pushes the registry over budget, **idle**
+//! entries (ref count zero) are evicted least-recently-used first; pinned
+//! entries are never evicted, so the registry can transiently exceed its
+//! budget rather than tear weights out from under a serving engine.
+//!
+//! Eviction and [`ModelStore::unload`] only remove the registry entry —
+//! the model itself is an `Arc<DecodeModel>`, and any engine still
+//! holding one (and through it the mmap'd artifact's `Arc<ByteStore>`)
+//! keeps the weights and the mapping alive until it drains. Borrowed
+//! weights can therefore never dangle, whatever the registry does; the
+//! gateway's unload endpoint still drains in-flight requests first so
+//! memory is actually returned when the call reports success.
+
+use super::bytes::Backing;
+use super::packed::load_packed_model;
+use crate::nn::decode::DecodeModel;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Registry configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StoreConfig {
+    /// Resident-model budget. Loads beyond it evict idle models LRU-first
+    /// (pinned models are never evicted, so the budget is soft under
+    /// all-pinned pressure).
+    pub max_resident: usize,
+    /// Verify the trailing CRC on every artifact load.
+    pub verify_crc: bool,
+}
+
+impl Default for StoreConfig {
+    fn default() -> StoreConfig {
+        StoreConfig { max_resident: 4, verify_crc: true }
+    }
+}
+
+struct Entry {
+    model: Arc<DecodeModel>,
+    path: Option<String>,
+    file_bytes: usize,
+    mapped: bool,
+    refs: usize,
+    last_used: u64,
+}
+
+struct Inner {
+    entries: HashMap<String, Entry>,
+    /// Monotonic use counter (LRU ordering without a clock).
+    tick: u64,
+    evictions: u64,
+}
+
+impl Inner {
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Evict idle LRU entries until the budget holds (or only pinned
+    /// entries remain).
+    fn evict_over_budget(&mut self, max_resident: usize) {
+        while self.entries.len() > max_resident {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| e.refs == 0)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(name, _)| name.clone());
+            match victim {
+                Some(name) => {
+                    self.entries.remove(&name);
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Metadata snapshot of one resident model (see [`ModelStore::list`]).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    /// Effective weight bytes of the decode model.
+    pub weight_bytes: usize,
+    /// Artifact size on disk (0 for models inserted in process).
+    pub file_bytes: usize,
+    /// Whether the packed weights borrow from a file mapping.
+    pub mapped: bool,
+    /// Outstanding handles.
+    pub refs: usize,
+    /// Source artifact path, if loaded from disk.
+    pub path: Option<String>,
+}
+
+/// The registry. Cheap to clone (shared state behind an `Arc`).
+#[derive(Clone)]
+pub struct ModelStore {
+    cfg: StoreConfig,
+    inner: Arc<Mutex<Inner>>,
+}
+
+/// A ref-counted pin on one resident model. Holds the `Arc<DecodeModel>`
+/// directly, so the model stays usable even if the registry entry is
+/// evicted or unloaded while the handle lives.
+pub struct ModelHandle {
+    name: String,
+    model: Arc<DecodeModel>,
+    mapped: bool,
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl ModelHandle {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The pinned model.
+    pub fn model(&self) -> &Arc<DecodeModel> {
+        &self.model
+    }
+
+    /// Whether the pinned model's packed weights borrow from a file
+    /// mapping (zero-copy) rather than a heap buffer.
+    pub fn mapped(&self) -> bool {
+        self.mapped
+    }
+}
+
+impl Clone for ModelHandle {
+    fn clone(&self) -> ModelHandle {
+        let mut inner = self.inner.lock().unwrap();
+        // Only count against the entry if it is still *this* model — a
+        // same-named reload must not inherit our pin.
+        if let Some(e) = inner.entries.get_mut(&self.name) {
+            if Arc::ptr_eq(&e.model, &self.model) {
+                e.refs += 1;
+            }
+        }
+        drop(inner);
+        ModelHandle {
+            name: self.name.clone(),
+            model: self.model.clone(),
+            mapped: self.mapped,
+            inner: self.inner.clone(),
+        }
+    }
+}
+
+impl Drop for ModelHandle {
+    fn drop(&mut self) {
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.touch();
+        if let Some(e) = inner.entries.get_mut(&self.name) {
+            if Arc::ptr_eq(&e.model, &self.model) {
+                e.refs = e.refs.saturating_sub(1);
+                e.last_used = tick;
+            }
+        }
+    }
+}
+
+impl ModelStore {
+    pub fn new(cfg: StoreConfig) -> ModelStore {
+        ModelStore {
+            cfg,
+            inner: Arc::new(Mutex::new(Inner {
+                entries: HashMap::new(),
+                tick: 0,
+                evictions: 0,
+            })),
+        }
+    }
+
+    fn handle(&self, name: &str, model: Arc<DecodeModel>, mapped: bool) -> ModelHandle {
+        ModelHandle { name: name.to_string(), model, mapped, inner: self.inner.clone() }
+    }
+
+    /// Register an in-process model (e.g. the gateway's default dense
+    /// engine), replacing any same-named entry, and pin it.
+    pub fn insert(&self, name: &str, model: DecodeModel) -> ModelHandle {
+        let model = Arc::new(model);
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.touch();
+        inner.entries.insert(
+            name.to_string(),
+            Entry {
+                model: model.clone(),
+                path: None,
+                file_bytes: 0,
+                mapped: false,
+                refs: 1,
+                last_used: tick,
+            },
+        );
+        inner.evict_over_budget(self.cfg.max_resident);
+        drop(inner);
+        ModelHandle { name: name.to_string(), model, mapped: false, inner: self.inner.clone() }
+    }
+
+    /// Load (or re-use) the named model and pin it.
+    ///
+    /// A resident entry whose source is the **same path** is a cache hit
+    /// — the artifact is not re-read (`backing` is then ignored). A
+    /// resident entry from a *different* path (or an in-process
+    /// [`ModelStore::insert`]) is an `AlreadyExists` error: silently
+    /// serving weights other than the ones the caller named would be a
+    /// lie — unload first to swap. Cold loads read the artifact *outside*
+    /// the registry lock (loads of different models proceed
+    /// concurrently), insert, and enforce the budget by evicting idle LRU
+    /// entries.
+    pub fn load(&self, name: &str, path: &str, backing: Backing) -> std::io::Result<ModelHandle> {
+        let cache_hit = |e: &mut Entry, tick: u64| -> std::io::Result<(Arc<DecodeModel>, bool)> {
+            if e.path.as_deref() != Some(path) {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::AlreadyExists,
+                    format!(
+                        "model {name:?} is already resident from {:?}; unload it before \
+                         loading {path:?}",
+                        e.path.as_deref().unwrap_or("(in-process)")
+                    ),
+                ));
+            }
+            e.refs += 1;
+            e.last_used = tick;
+            Ok((e.model.clone(), e.mapped))
+        };
+        {
+            let mut inner = self.inner.lock().unwrap();
+            let tick = inner.touch();
+            if let Some(e) = inner.entries.get_mut(name) {
+                let (model, mapped) = cache_hit(e, tick)?;
+                drop(inner);
+                return Ok(self.handle(name, model, mapped));
+            }
+        }
+        let loaded = load_packed_model(path, backing, self.cfg.verify_crc)?;
+        let model = Arc::new(loaded.model);
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.touch();
+        if let Some(e) = inner.entries.get_mut(name) {
+            // Raced with another load of the same name: keep theirs iff
+            // it came from the same artifact (path mismatch errors).
+            let (model, mapped) = cache_hit(e, tick)?;
+            drop(inner);
+            return Ok(self.handle(name, model, mapped));
+        }
+        let mapped = loaded.mapped;
+        inner.entries.insert(
+            name.to_string(),
+            Entry {
+                model: model.clone(),
+                path: Some(path.to_string()),
+                file_bytes: loaded.file_bytes,
+                mapped,
+                refs: 1,
+                last_used: tick,
+            },
+        );
+        inner.evict_over_budget(self.cfg.max_resident);
+        drop(inner);
+        Ok(self.handle(name, model, mapped))
+    }
+
+    /// Pin a resident model by name (None if not resident).
+    pub fn get(&self, name: &str) -> Option<ModelHandle> {
+        let mut inner = self.inner.lock().unwrap();
+        let tick = inner.touch();
+        let e = inner.entries.get_mut(name)?;
+        e.refs += 1;
+        e.last_used = tick;
+        let (model, mapped) = (e.model.clone(), e.mapped);
+        drop(inner);
+        Some(self.handle(name, model, mapped))
+    }
+
+    /// Remove the named entry from the registry (true if it was
+    /// resident). Outstanding handles keep their model alive; the weights
+    /// and any file mapping are freed when the last one drops.
+    pub fn unload(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().entries.remove(name).is_some()
+    }
+
+    /// Snapshot of every resident model, sorted by name.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let inner = self.inner.lock().unwrap();
+        let mut out: Vec<ModelInfo> = inner
+            .entries
+            .iter()
+            .map(|(name, e)| ModelInfo {
+                name: name.clone(),
+                weight_bytes: e.model.weight_bytes(),
+                file_bytes: e.file_bytes,
+                mapped: e.mapped,
+                refs: e.refs,
+                path: e.path.clone(),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+
+    /// Resident entries right now.
+    pub fn resident(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    /// Idle evictions performed so far.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::packed::save_packed_model;
+    use crate::nn::decode::generate_greedy;
+    use crate::quant::Engine;
+
+    fn store(max_resident: usize) -> ModelStore {
+        ModelStore::new(StoreConfig { max_resident, ..Default::default() })
+    }
+
+    fn save_fixture(name: &str, seed: u64) -> String {
+        let qm = crate::model::packed::quantized_zoo_model(seed);
+        let path = format!("/tmp/nanoquant_test_store_{name}.nqck");
+        save_packed_model(&path, &qm).unwrap();
+        path
+    }
+
+    #[test]
+    fn load_is_cached_and_serves_the_same_weights() {
+        let path = save_fixture("cache", 1);
+        let store = store(4);
+        let a = store.load("m", &path, Backing::Mmap).unwrap();
+        let b = store.load("m", &path, Backing::Heap).unwrap();
+        assert!(Arc::ptr_eq(a.model(), b.model()), "same-path cache hit must not reload");
+        // Same name, different source: refused rather than silently
+        // serving the resident weights under the new path's flag.
+        let err = store.load("m", "/some/other/artifact.nqck", Backing::Heap).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::AlreadyExists, "{err}");
+        assert_eq!(store.resident(), 1);
+        let info = &store.list()[0];
+        assert_eq!(info.refs, 2);
+        assert!(info.file_bytes > 0);
+        drop(a);
+        drop(b);
+        assert_eq!(store.list()[0].refs, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lru_eviction_under_a_small_budget_skips_pinned_models() {
+        let paths: Vec<String> =
+            (0..4).map(|i| save_fixture(&format!("lru{i}"), 10 + i as u64)).collect();
+        let store = store(2);
+        let pin_a = store.load("a", &paths[0], Backing::Heap).unwrap();
+        {
+            let _b = store.load("b", &paths[1], Backing::Heap).unwrap();
+        } // b idle now
+        // Loading c exceeds the budget: b (idle LRU) is evicted, a is
+        // pinned and survives.
+        let _pin_c = store.load("c", &paths[2], Backing::Heap).unwrap();
+        assert_eq!(store.resident(), 2);
+        assert_eq!(store.evictions(), 1);
+        assert!(store.get("b").is_none(), "idle LRU entry must be evicted");
+        assert!(store.get("a").is_some(), "pinned entry must survive");
+        // All pinned + over budget: nothing evictable, budget is soft.
+        let _pin_d = store.load("d", &paths[3], Backing::Heap).unwrap();
+        assert_eq!(store.resident(), 3, "pinned entries are never evicted");
+        drop(pin_a);
+        // The evicted model still works through a surviving handle even
+        // after unload (Arc keeps weights + mapping alive).
+        let handle = store.get("c").unwrap();
+        assert!(store.unload("c"));
+        assert!(store.get("c").is_none());
+        let toks = generate_greedy(handle.model(), &[1, 2, 3], 4, &[]);
+        assert_eq!(toks.len(), 4);
+        for p in &paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn reload_after_unload_reads_the_artifact_again() {
+        let path = save_fixture("reload", 3);
+        let store = store(4);
+        let first = store.load("m", &path, Backing::Heap).unwrap();
+        let reference = {
+            let qm = crate::model::packed::quantized_zoo_model(3);
+            let dm = qm.to_decode_model(Engine::Packed);
+            generate_greedy(&dm, &[5, 6, 7], 5, &[])
+        };
+        assert_eq!(generate_greedy(first.model(), &[5, 6, 7], 5, &[]), reference);
+        store.unload("m");
+        let second = store.load("m", &path, Backing::Mmap).unwrap();
+        assert!(!Arc::ptr_eq(first.model(), second.model()));
+        assert_eq!(generate_greedy(second.model(), &[5, 6, 7], 5, &[]), reference);
+        // A stale handle's drop must not corrupt the new entry's refcount.
+        drop(first);
+        assert_eq!(store.list()[0].refs, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn insert_replaces_and_clone_tracks_refs() {
+        let cfg = crate::nn::family_config("l2", "xs");
+        let mut rng = crate::util::rng::Rng::new(0);
+        let params = crate::nn::model::ModelParams::init(&cfg, &mut rng);
+        let store = store(4);
+        let h = store.insert("default", crate::nn::decode::dense_decode_model(&params));
+        let h2 = h.clone();
+        assert_eq!(store.list()[0].refs, 2);
+        drop(h);
+        drop(h2);
+        assert_eq!(store.list()[0].refs, 0);
+    }
+}

@@ -1,18 +1,34 @@
 //! Binary checkpoint format for teachers and quantized models.
 //!
-//! Layout: a JSON header (config + tensor manifest) length-prefixed with a
-//! u64, followed by raw little-endian payloads in manifest order. Supports
-//! f32 tensors, f32 vectors and packed u32 words, so both FP teachers and
-//! bit-packed NanoQuant models round-trip.
+//! Current container: `NANOQCK2` (see [`crate::model::artifact`]) — a
+//! length-prefixed JSON header (config + tensor manifest with explicit
+//! per-tensor offsets), 64-byte-aligned little-endian payloads, and a
+//! trailing CRC-32. [`save_model`] writes v2; [`load_model`] reads both
+//! v2 and the legacy `NANOQCK1` stream format (sequential unaligned
+//! payloads, no offsets, no checksum), so every checkpoint ever written
+//! by this repo keeps loading. [`save_model_v1`] is retained for the
+//! compat tests and as a migration escape hatch.
+//!
+//! Corrupt or truncated files — any variant — come back as
+//! `io::Error`s naming the defect, never a panic: headers are parsed
+//! under `util::json` size/depth limits and every manifest field is
+//! validated before a byte of payload is read.
 
 use super::model::{BlockWeights, ModelConfig, ModelParams};
+use crate::model::artifact::{Artifact, ArtifactWriter, MAX_HEADER_BYTES};
+use crate::model::bytes::Backing;
 use crate::tensor::Tensor;
-use crate::util::json::Json;
+use crate::util::json::{Json, ParseLimits};
 use std::io::{Read, Write};
 
-const MAGIC: &[u8; 8] = b"NANOQCK1";
+/// Legacy stream-format magic (reader support only).
+pub const MAGIC_V1: &[u8; 8] = b"NANOQCK1";
+/// Artifact kind tag for FP checkpoints in the NANOQCK2 container.
+pub const KIND_FP: &str = "fp-checkpoint";
 
-fn cfg_to_json(cfg: &ModelConfig) -> Json {
+/// Serialize a [`ModelConfig`] as the header `config` object (shared with
+/// the packed-model artifacts in `model::packed`).
+pub fn cfg_to_json(cfg: &ModelConfig) -> Json {
     Json::obj()
         .set("name", cfg.name.as_str())
         .set("vocab", cfg.vocab)
@@ -27,27 +43,78 @@ fn cfg_to_json(cfg: &ModelConfig) -> Json {
         .set("eps", cfg.eps)
 }
 
-fn cfg_from_json(j: &Json) -> ModelConfig {
-    ModelConfig {
-        name: j.get("name").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
-        vocab: j.get("vocab").unwrap().as_usize().unwrap(),
-        d_model: j.get("d_model").unwrap().as_usize().unwrap(),
-        n_layers: j.get("n_layers").unwrap().as_usize().unwrap(),
-        n_heads: j.get("n_heads").unwrap().as_usize().unwrap(),
-        n_kv_heads: j.get("n_kv_heads").unwrap().as_usize().unwrap(),
-        d_ff: j.get("d_ff").unwrap().as_usize().unwrap(),
-        max_seq: j.get("max_seq").unwrap().as_usize().unwrap(),
-        rope_theta: j.get("rope_theta").unwrap().as_f64().unwrap() as f32,
-        tied_embeddings: j.get("tied").unwrap().as_bool().unwrap(),
-        eps: j.get("eps").unwrap().as_f64().unwrap() as f32,
+/// Parse a header `config` object. Every missing or mistyped field is an
+/// `InvalidData` error naming the field — corrupt headers must surface as
+/// errors, not panics.
+pub fn cfg_from_json(j: &Json) -> std::io::Result<ModelConfig> {
+    let field = |name: &str| -> std::io::Result<&Json> {
+        j.get(name).ok_or_else(|| invalid(format!("config missing field {name:?}")))
+    };
+    let usize_field = |name: &str| -> std::io::Result<usize> {
+        field(name)?
+            .as_f64()
+            .filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0)
+            .map(|x| x as usize)
+            .ok_or_else(|| invalid(format!("config field {name:?} must be a non-negative integer")))
+    };
+    let f32_field = |name: &str| -> std::io::Result<f32> {
+        field(name)?
+            .as_f64()
+            .filter(|x| x.is_finite())
+            .map(|x| x as f32)
+            .ok_or_else(|| invalid(format!("config field {name:?} must be a finite number")))
+    };
+    let cfg = ModelConfig {
+        name: field("name")?
+            .as_str()
+            .ok_or_else(|| invalid("config field \"name\" must be a string"))?
+            .to_string(),
+        vocab: usize_field("vocab")?,
+        d_model: usize_field("d_model")?,
+        n_layers: usize_field("n_layers")?,
+        n_heads: usize_field("n_heads")?,
+        n_kv_heads: usize_field("n_kv_heads")?,
+        d_ff: usize_field("d_ff")?,
+        max_seq: usize_field("max_seq")?,
+        rope_theta: f32_field("rope_theta")?,
+        tied_embeddings: field("tied")?
+            .as_bool()
+            .ok_or_else(|| invalid("config field \"tied\" must be a boolean"))?,
+        eps: f32_field("eps")?,
+    };
+    // Structural invariants the model math divides by — a corrupt header
+    // must come back as an error, never reach a divide-by-zero panic in
+    // `head_dim`/`gqa_groups`/the decode loop.
+    for (name, v) in [
+        ("vocab", cfg.vocab),
+        ("d_model", cfg.d_model),
+        ("n_heads", cfg.n_heads),
+        ("n_kv_heads", cfg.n_kv_heads),
+        ("d_ff", cfg.d_ff),
+        ("max_seq", cfg.max_seq),
+    ] {
+        if v == 0 {
+            return Err(invalid(format!("config field {name:?} must be >= 1")));
+        }
     }
+    if cfg.d_model % cfg.n_heads != 0 {
+        return Err(invalid(format!(
+            "config d_model {} is not divisible by n_heads {}",
+            cfg.d_model, cfg.n_heads
+        )));
+    }
+    if cfg.n_heads % cfg.n_kv_heads != 0 {
+        return Err(invalid(format!(
+            "config n_heads {} is not divisible by n_kv_heads {}",
+            cfg.n_heads, cfg.n_kv_heads
+        )));
+    }
+    Ok(cfg)
 }
 
-/// Save a FP model checkpoint.
-pub fn save_model(path: &str, params: &ModelParams) -> std::io::Result<()> {
-    if let Some(parent) = std::path::Path::new(path).parent() {
-        std::fs::create_dir_all(parent)?;
-    }
+/// The (name, shape, data) triple list shared by both writers: manifest
+/// order is load order.
+fn collect_tensors(params: &ModelParams) -> Vec<(String, Vec<usize>, &[f32])> {
     let mut tensors: Vec<(String, Vec<usize>, &[f32])> = Vec::new();
     tensors.push(("embed".into(), params.embed.shape.clone(), &params.embed.data));
     for (i, b) in params.blocks.iter().enumerate() {
@@ -69,7 +136,28 @@ pub fn save_model(path: &str, params: &ModelParams) -> std::io::Result<()> {
     if let Some(h) = &params.head {
         tensors.push(("head".into(), h.shape.clone(), &h.data));
     }
+    tensors
+}
 
+/// Save a FP model checkpoint in the current NANOQCK2 container.
+pub fn save_model(path: &str, params: &ModelParams) -> std::io::Result<()> {
+    let tensors = collect_tensors(params);
+    let mut w = ArtifactWriter::new(KIND_FP);
+    w.meta("config", cfg_to_json(&params.cfg));
+    for (name, shape, data) in &tensors {
+        w.push_f32(name, shape, data);
+    }
+    w.write(path)
+}
+
+/// Save in the legacy NANOQCK1 stream format (no alignment, no offsets,
+/// no CRC). Kept so the v1 compat-read path stays test-covered; new
+/// checkpoints should use [`save_model`].
+pub fn save_model_v1(path: &str, params: &ModelParams) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tensors = collect_tensors(params);
     let manifest: Vec<Json> = tensors
         .iter()
         .map(|(n, s, _)| Json::obj().set("name", n.as_str()).set("shape", s.clone()))
@@ -80,7 +168,7 @@ pub fn save_model(path: &str, params: &ModelParams) -> std::io::Result<()> {
         .to_string();
 
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
+    f.write_all(MAGIC_V1)?;
     f.write_all(&(header.len() as u64).to_le_bytes())?;
     f.write_all(header.as_bytes())?;
     for (_, _, data) in &tensors {
@@ -91,73 +179,157 @@ pub fn save_model(path: &str, params: &ModelParams) -> std::io::Result<()> {
     Ok(())
 }
 
-/// Load a FP model checkpoint.
+/// Load a FP model checkpoint — NANOQCK2 (CRC-verified) or legacy
+/// NANOQCK1, dispatched on the magic.
 pub fn load_model(path: &str) -> std::io::Result<ModelParams> {
+    let mut magic = [0u8; 8];
+    std::fs::File::open(path)?.read_exact(&mut magic).map_err(|_| {
+        invalid("file too short for a checkpoint magic")
+    })?;
+    if &magic == MAGIC_V1 {
+        return load_model_v1(path);
+    }
+    // Anything else (including a bad magic) gets the v2 reader's precise
+    // diagnostics.
+    let artifact = Artifact::open(path, Backing::Heap, true)?;
+    if artifact.kind() != KIND_FP {
+        return Err(invalid(format!(
+            "artifact kind {:?} is not an FP checkpoint (expected {KIND_FP:?})",
+            artifact.kind()
+        )));
+    }
+    let cfg = cfg_from_json(
+        artifact.header().get("config").ok_or_else(|| invalid("header missing \"config\""))?,
+    )?;
+    // Bound the layer count by what the manifest can possibly hold before
+    // any per-layer allocation: a hostile header must error, not abort.
+    if cfg.n_layers > artifact.tensors().len() {
+        return Err(invalid(format!(
+            "config claims {} layers but the manifest has only {} tensors",
+            cfg.n_layers,
+            artifact.tensors().len()
+        )));
+    }
+    let get_t = |name: &str| -> std::io::Result<Tensor> {
+        let e = artifact.entry(name)?;
+        Ok(Tensor::new(&e.shape, artifact.f32_vec(name)?))
+    };
+    let get_v = |name: &str| -> std::io::Result<Vec<f32>> { artifact.f32_vec(name) };
+    assemble_params(cfg, &get_t, &get_v)
+}
+
+/// Build `ModelParams` from per-name tensor accessors (shared by the v1
+/// and v2 readers).
+fn assemble_params(
+    cfg: ModelConfig,
+    get_t: &dyn Fn(&str) -> std::io::Result<Tensor>,
+    get_v: &dyn Fn(&str) -> std::io::Result<Vec<f32>>,
+) -> std::io::Result<ModelParams> {
+    // Grown incrementally (no up-front capacity): `cfg.n_layers` is
+    // header-controlled, and the first missing tensor errors the loop
+    // out, so memory tracks real file contents, not hostile claims.
+    let mut blocks = Vec::new();
+    for i in 0..cfg.n_layers {
+        blocks.push(BlockWeights {
+            ln1: get_v(&format!("b{i}.ln1"))?,
+            wq: get_t(&format!("b{i}.wq"))?,
+            wk: get_t(&format!("b{i}.wk"))?,
+            wv: get_t(&format!("b{i}.wv"))?,
+            wo: get_t(&format!("b{i}.wo"))?,
+            ln2: get_v(&format!("b{i}.ln2"))?,
+            wg: get_t(&format!("b{i}.wg"))?,
+            wu: get_t(&format!("b{i}.wu"))?,
+            wd: get_t(&format!("b{i}.wd"))?,
+        });
+    }
+    Ok(ModelParams {
+        embed: get_t("embed")?,
+        blocks,
+        ln_f: get_v("ln_f")?,
+        head: if cfg.tied_embeddings { None } else { Some(get_t("head")?) },
+        cfg,
+    })
+}
+
+/// Legacy NANOQCK1 reader: sequential payloads in manifest order.
+fn load_model_v1(path: &str) -> std::io::Result<ModelParams> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "bad magic"));
+    if &magic != MAGIC_V1 {
+        return Err(invalid("bad magic"));
     }
     let mut lenb = [0u8; 8];
     f.read_exact(&mut lenb)?;
-    let hlen = u64::from_le_bytes(lenb) as usize;
-    let mut hbuf = vec![0u8; hlen];
-    f.read_exact(&mut hbuf)?;
-    let header = Json::parse(std::str::from_utf8(&hbuf).map_err(invalid)?).map_err(invalid)?;
-    let cfg = cfg_from_json(header.get("config").ok_or_else(|| invalid("no config"))?);
+    let hlen = u64::from_le_bytes(lenb);
+    if hlen as usize > MAX_HEADER_BYTES {
+        return Err(invalid(format!("header length {hlen} exceeds the reader cap")));
+    }
+    let mut hbuf = vec![0u8; hlen as usize];
+    f.read_exact(&mut hbuf).map_err(|_| invalid("truncated header"))?;
+    let text = std::str::from_utf8(&hbuf).map_err(|_| invalid("header is not UTF-8"))?;
+    let limits = ParseLimits { max_bytes: MAX_HEADER_BYTES, max_depth: 16 };
+    let header =
+        Json::parse_with_limits(text, limits).map_err(|e| invalid(format!("header JSON: {e}")))?;
+    let cfg = cfg_from_json(header.get("config").ok_or_else(|| invalid("no config"))?)?;
     let manifest =
         header.get("tensors").and_then(|t| t.as_arr()).ok_or_else(|| invalid("no tensors"))?;
 
     let mut read_tensor = |shape: &[usize]| -> std::io::Result<Vec<f32>> {
-        let n: usize = shape.iter().product();
-        let mut buf = vec![0u8; n * 4];
-        f.read_exact(&mut buf)?;
-        Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+        let n: usize = shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d)).ok_or_else(
+            || invalid("tensor shape overflows"),
+        )?;
+        // No up-front capacity: a hostile shape claiming petabytes must
+        // fail on the (chunked) reads, not abort in the allocator.
+        let mut data = Vec::new();
+        let mut buf = [0u8; 16 << 10];
+        let mut left = n.checked_mul(4).ok_or_else(|| invalid("tensor size overflows"))?;
+        while left > 0 {
+            let take = left.min(buf.len());
+            f.read_exact(&mut buf[..take]).map_err(|_| invalid("truncated tensor payload"))?;
+            data.extend(
+                buf[..take]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+            left -= take;
+        }
+        Ok(data)
     };
 
     let mut tensors: std::collections::BTreeMap<String, (Vec<usize>, Vec<f32>)> =
         std::collections::BTreeMap::new();
-    for entry in manifest {
-        let name = entry.get("name").and_then(|v| v.as_str()).unwrap().to_string();
+    for (i, entry) in manifest.iter().enumerate() {
+        let name = entry
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| invalid(format!("tensors[{i}] missing \"name\"")))?
+            .to_string();
         let shape: Vec<usize> = entry
             .get("shape")
             .and_then(|v| v.as_arr())
-            .unwrap()
+            .ok_or_else(|| invalid(format!("tensor {name:?} missing \"shape\"")))?
             .iter()
-            .map(|v| v.as_usize().unwrap())
-            .collect();
+            .map(|v| v.as_f64().filter(|x| *x >= 0.0 && x.fract() == 0.0).map(|x| x as usize))
+            .collect::<Option<Vec<usize>>>()
+            .ok_or_else(|| invalid(format!("tensor {name:?} has a non-integer shape")))?;
         let data = read_tensor(&shape)?;
         tensors.insert(name, (shape, data));
     }
 
-    let get_t = |name: &str| -> Tensor {
-        let (shape, data) = tensors.get(name).unwrap_or_else(|| panic!("missing tensor {name}"));
-        Tensor::new(shape, data.clone())
+    let get_t = |name: &str| -> std::io::Result<Tensor> {
+        let (shape, data) =
+            tensors.get(name).ok_or_else(|| invalid(format!("missing tensor {name:?}")))?;
+        Ok(Tensor::new(shape, data.clone()))
     };
-    let get_v = |name: &str| -> Vec<f32> { tensors.get(name).unwrap().1.clone() };
-
-    let blocks = (0..cfg.n_layers)
-        .map(|i| BlockWeights {
-            ln1: get_v(&format!("b{i}.ln1")),
-            wq: get_t(&format!("b{i}.wq")),
-            wk: get_t(&format!("b{i}.wk")),
-            wv: get_t(&format!("b{i}.wv")),
-            wo: get_t(&format!("b{i}.wo")),
-            ln2: get_v(&format!("b{i}.ln2")),
-            wg: get_t(&format!("b{i}.wg")),
-            wu: get_t(&format!("b{i}.wu")),
-            wd: get_t(&format!("b{i}.wd")),
-        })
-        .collect();
-
-    Ok(ModelParams {
-        embed: get_t("embed"),
-        blocks,
-        ln_f: get_v("ln_f"),
-        head: if cfg.tied_embeddings { None } else { Some(get_t("head")) },
-        cfg,
-    })
+    let get_v = |name: &str| -> std::io::Result<Vec<f32>> {
+        Ok(tensors
+            .get(name)
+            .ok_or_else(|| invalid(format!("missing tensor {name:?}")))?
+            .1
+            .clone())
+    };
+    assemble_params(cfg, &get_t, &get_v)
 }
 
 fn invalid<E: ToString>(e: E) -> std::io::Error {
@@ -200,10 +372,150 @@ mod tests {
     }
 
     #[test]
+    fn v1_checkpoints_still_load() {
+        // Compat contract: a NANOQCK1 file written by the legacy writer
+        // loads bit-identically through the same `load_model` front door.
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(7);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let path = "/tmp/nanoquant_test_ckpt_v1.bin";
+        save_model_v1(path, &params).unwrap();
+        let bytes = std::fs::read(path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V1, "v1 writer must emit the legacy magic");
+        let back = load_model(path).unwrap();
+        assert_eq!(back.cfg, params.cfg);
+        assert_eq!(back.embed, params.embed);
+        assert_eq!(back.blocks[1].wd, params.blocks[1].wd);
+        assert_eq!(back.head.unwrap(), params.head.unwrap());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn v2_payloads_are_aligned_and_crc_guarded() {
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(3);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let path = "/tmp/nanoquant_test_ckpt_v2_layout.bin";
+        save_model(path, &params).unwrap();
+        let a = Artifact::open(path, Backing::Heap, true).unwrap();
+        assert_eq!(a.kind(), KIND_FP);
+        for t in a.tensors() {
+            assert_eq!(t.offset % crate::model::artifact::ALIGN, 0, "{} misaligned", t.name);
+        }
+        // One flipped payload bit is caught by the trailing CRC.
+        let mut bytes = std::fs::read(path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        std::fs::write(path, &bytes).unwrap();
+        let err = load_model(path).unwrap_err();
+        assert!(err.to_string().contains("CRC"), "unexpected error: {err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn rejects_garbage_file() {
         let path = "/tmp/nanoquant_test_ckpt_garbage.bin";
         std::fs::write(path, b"not a checkpoint").unwrap();
         assert!(load_model(path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn malformed_headers_error_instead_of_panicking() {
+        // The corrupt-file table: every entry must come back as an
+        // io::Error (never a panic, never an OOM attempt). Built by
+        // mutating a valid v1 checkpoint, plus synthetic variants.
+        let cfg = family_config("l2", "xs");
+        let mut rng = Rng::new(11);
+        let params = ModelParams::init(&cfg, &mut rng);
+        let base = "/tmp/nanoquant_test_ckpt_malformed_base.bin";
+        save_model_v1(base, &params).unwrap();
+        let good = std::fs::read(base).unwrap();
+        let hlen = u64::from_le_bytes(good[8..16].try_into().unwrap()) as usize;
+
+        let truncated_magic = good[..5].to_vec();
+        let mut wrong_magic = good.clone();
+        wrong_magic[..8].copy_from_slice(b"NANOQCK9");
+        let mut huge_length_prefix = good.clone();
+        huge_length_prefix[8..16].copy_from_slice(&(u64::MAX).to_le_bytes());
+        let mut oversized_header = good.clone();
+        oversized_header[8..16]
+            .copy_from_slice(&((MAX_HEADER_BYTES as u64 + 1).to_le_bytes()));
+        // Header claims more bytes than the file holds (but under the cap).
+        let mut header_past_eof = good.clone();
+        header_past_eof[8..16].copy_from_slice(&((good.len() as u64) * 2).to_le_bytes());
+        // Valid length prefix, unparseable JSON.
+        let mut bad_json = good.clone();
+        bad_json[16] = b'!';
+        // Missing config field: header with "vocab" renamed away.
+        let header_text = std::str::from_utf8(&good[16..16 + hlen]).unwrap();
+        let missing_field_text = header_text.replacen("\"vocab\"", "\"vocab_gone\"", 1);
+        let mut missing_field = good[..8].to_vec();
+        missing_field.extend_from_slice(&(missing_field_text.len() as u64).to_le_bytes());
+        missing_field.extend_from_slice(missing_field_text.as_bytes());
+        missing_field.extend_from_slice(&good[16 + hlen..]);
+        // Payload cut short.
+        let truncated_payload = good[..good.len() - 64].to_vec();
+
+        for (bytes, why) in [
+            (truncated_magic, "truncated magic"),
+            (wrong_magic, "unknown magic"),
+            (huge_length_prefix, "u64::MAX length prefix"),
+            (oversized_header, "header length above the reader cap"),
+            (header_past_eof, "header length past EOF"),
+            (bad_json, "unparseable header JSON"),
+            (missing_field, "missing config field"),
+            (truncated_payload, "truncated tensor payload"),
+        ] {
+            let path = "/tmp/nanoquant_test_ckpt_malformed_case.bin";
+            std::fs::write(path, &bytes).unwrap();
+            let err = load_model(path).expect_err(why);
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{why}: {err}");
+            std::fs::remove_file(path).ok();
+        }
+        std::fs::remove_file(base).ok();
+
+        // The same table's v2 analogues (CRC + manifest checks) are
+        // covered in model::artifact; here, check the missing-field path
+        // through a real v2 checkpoint too.
+        let path = "/tmp/nanoquant_test_ckpt_malformed_v2.bin";
+        save_model(path, &params).unwrap();
+        let bytes = std::fs::read(path).unwrap();
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let text = std::str::from_utf8(&bytes[16..16 + hlen]).unwrap();
+        let patched = text.replacen("\"d_model\"", "\"d_model_gone\"", 1);
+        assert_eq!(patched.len(), text.len() + 5);
+        // Rewrite with a recomputed CRC so only the config defect fires.
+        let mut out = bytes[..8].to_vec();
+        out.extend_from_slice(&(patched.len() as u64).to_le_bytes());
+        out.extend_from_slice(patched.as_bytes());
+        let base_old = crate::model::artifact::align_up(16 + hlen);
+        let base_new = crate::model::artifact::align_up(16 + patched.len());
+        out.resize(base_new, 0);
+        out.extend_from_slice(&bytes[base_old..bytes.len() - 4]);
+        let crc = crate::model::artifact::crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        std::fs::write(path, &out).unwrap();
+        let err = load_model(path).expect_err("missing v2 config field");
+        assert!(err.to_string().contains("d_model"), "should name the field: {err}");
+
+        // Degenerate config values (n_heads = 0 would divide-by-zero in
+        // head_dim) must error too. Same-length in-place header patch,
+        // CRC recomputed.
+        save_model(path, &params).unwrap();
+        let mut bytes = std::fs::read(path).unwrap();
+        let hlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let text = std::str::from_utf8(&bytes[16..16 + hlen]).unwrap();
+        let heads = params.cfg.n_heads;
+        let patched = text.replacen(&format!("\"n_heads\":{heads}"), "\"n_heads\":0", 1);
+        assert_eq!(patched.len(), text.len(), "patch must keep the header length");
+        bytes[16..16 + hlen].copy_from_slice(patched.as_bytes());
+        let n = bytes.len();
+        let crc = crate::model::artifact::crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        std::fs::write(path, &bytes).unwrap();
+        let err = load_model(path).expect_err("zero n_heads must be rejected");
+        assert!(err.to_string().contains("n_heads"), "should name the field: {err}");
         std::fs::remove_file(path).ok();
     }
 }

@@ -7,15 +7,21 @@
 //! This layout is shared verbatim with the Pallas kernels
 //! (`python/compile/kernels/binary_gemv.py`) and the AOT artifacts.
 
+use crate::model::bytes::WeightBytes;
 use crate::tensor::Tensor;
 
 /// A packed ±1 matrix.
+///
+/// `words` is Cow-like ([`WeightBytes`]): owned when packed in process
+/// (`from_signs`), or borrowed straight out of an mmap'd NANOQCK2
+/// artifact on the zero-copy load path (`model::packed`). Either way it
+/// derefs to `&[u32]`, so the kernels below see one representation.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PackedBits {
     pub rows: usize,
     pub cols: usize,
     pub words_per_row: usize,
-    pub words: Vec<u32>,
+    pub words: WeightBytes<u32>,
 }
 
 impl PackedBits {
@@ -33,7 +39,26 @@ impl PackedBits {
                 }
             }
         }
-        PackedBits { rows, cols, words_per_row: wpr, words }
+        PackedBits { rows, cols, words_per_row: wpr, words: words.into() }
+    }
+
+    /// Assemble from logical dims and a word buffer (the artifact load
+    /// path; `words` may borrow from a mapped [`crate::model::ByteStore`]).
+    /// Errors if the buffer size does not match `rows × ceil(cols/32)`.
+    pub fn from_words(
+        rows: usize,
+        cols: usize,
+        words: WeightBytes<u32>,
+    ) -> Result<PackedBits, String> {
+        let wpr = cols.div_ceil(32);
+        if words.len() != rows * wpr {
+            return Err(format!(
+                "packed bits [{rows}, {cols}] need {} words, got {}",
+                rows * wpr,
+                words.len()
+            ));
+        }
+        Ok(PackedBits { rows, cols, words_per_row: wpr, words })
     }
 
     /// Row of packed words.
@@ -553,7 +578,7 @@ mod tests {
 
     #[test]
     fn gemv_handles_empty_rows() {
-        let p = PackedBits { rows: 0, cols: 48, words_per_row: 2, words: Vec::new() };
+        let p = PackedBits { rows: 0, cols: 48, words_per_row: 2, words: Vec::new().into() };
         let x = vec![1.0f32; 48];
         let mut out: Vec<f32> = Vec::new();
         packed_gemv(&p, &x, 48.0, &mut out);

@@ -31,8 +31,8 @@ impl QLayer {
                 // Scales may have been tuned after packing (Phase 3): always
                 // rebuild from packed signs + current scales.
                 let mut q2 = q.clone();
-                q2.s1 = self.latent.s1.clone();
-                q2.s2 = self.latent.s2.clone();
+                q2.s1 = self.latent.s1.clone().into();
+                q2.s2 = self.latent.s2.clone().into();
                 q2.reconstruct()
             }
             None => self.latent.reconstruct(),
@@ -56,8 +56,8 @@ impl QLayer {
             .frozen
             .clone()
             .unwrap_or_else(|| self.latent.freeze());
-        q.s1 = self.latent.s1.clone();
-        q.s2 = self.latent.s2.clone();
+        q.s1 = self.latent.s1.clone().into();
+        q.s2 = self.latent.s2.clone().into();
         q
     }
 }

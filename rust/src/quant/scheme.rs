@@ -7,6 +7,7 @@
 //! `BPW = (r(n+m) + 16(n+m)) / (nm)`.
 
 use super::pack::PackedBits;
+use crate::model::bytes::WeightBytes;
 use crate::tensor::{matmul_a_bt, Tensor};
 
 /// Continuous latent factorization (pre-binarization): `𝒰, 𝒱` and scales.
@@ -42,21 +43,25 @@ impl LatentFactors {
             // V is stored transposed ([r, m]) so the serving matvec reduces
             // over contiguous packed input-dim words.
             vt: PackedBits::from_signs(&self.v.t()),
-            s1: self.s1.clone(),
-            s2: self.s2.clone(),
+            s1: self.s1.clone().into(),
+            s2: self.s2.clone().into(),
         }
     }
 }
 
 /// Frozen, packed quantized linear layer.
+///
+/// Bit words and channel scales are [`WeightBytes`]: owned after an
+/// in-process `freeze()`, borrowed out of the mapped artifact on the
+/// `model::packed` zero-copy load path.
 #[derive(Clone, Debug)]
 pub struct QuantLinear {
     /// Packed sign(U): [n, r].
     pub u: PackedBits,
     /// Packed sign(V)ᵀ: [r, m].
     pub vt: PackedBits,
-    pub s1: Vec<f32>,
-    pub s2: Vec<f32>,
+    pub s1: WeightBytes<f32>,
+    pub s2: WeightBytes<f32>,
 }
 
 impl QuantLinear {

@@ -232,7 +232,7 @@ pub fn vec_literal(v: &[f32]) -> Literal {
 
 /// Packed u32 words -> literal [rows, words_per_row].
 pub fn packed_literal(p: &crate::quant::PackedBits) -> Result<Literal> {
-    Literal::vec1(&p.words).reshape(&[p.rows as i64, p.words_per_row as i64])
+    Literal::vec1(&p.words[..]).reshape(&[p.rows as i64, p.words_per_row as i64])
 }
 
 /// Tokens -> i32 literal of shape [batch, seq].

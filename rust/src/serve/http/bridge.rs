@@ -90,6 +90,14 @@ enum Command {
     Metrics {
         reply: Sender<GatewaySnapshot>,
     },
+    /// Graceful shutdown: stop accepting submits, step until every
+    /// in-flight request finishes (their subscribers get their events as
+    /// usual), then reply with the final pool snapshot and exit. The
+    /// multi-model router's unload path — the snapshot is the proof the
+    /// KV pool returned to fully-free before the weights were dropped.
+    Drain {
+        reply: Sender<GatewaySnapshot>,
+    },
     Shutdown,
 }
 
@@ -123,6 +131,17 @@ impl EngineHandle {
         reply_rx.recv().map_err(|_| BridgeClosed)
     }
 
+    /// Drain and stop: the engine rejects new submits, finishes every
+    /// in-flight request (subscribers receive their streams to
+    /// completion), then exits. Returns the final snapshot taken after
+    /// the last request released its pages — `reserved_pages`/`in_flight`
+    /// are 0 by construction. Blocks until the drain completes.
+    pub fn drain(&self) -> Result<GatewaySnapshot, BridgeClosed> {
+        let (reply, reply_rx) = channel();
+        self.tx.send(Command::Drain { reply }).map_err(|_| BridgeClosed)?;
+        reply_rx.recv().map_err(|_| BridgeClosed)
+    }
+
     /// Ask the engine thread to exit; in-flight work is abandoned and every
     /// subscriber channel closes. Idempotent (errors are already-down).
     pub fn request_shutdown(&self) {
@@ -145,12 +164,22 @@ pub fn start(engine: Engine) -> (EngineHandle, std::thread::JoinHandle<()>) {
 fn engine_thread(mut engine: Engine, rx: Receiver<Command>) {
     let mut subscribers: HashMap<RequestId, Sender<StreamEvent>> = HashMap::new();
     let mut next_id: RequestId = 1;
+    // Drain repliers collected since the first `Drain` command; non-empty
+    // = draining (submits rejected, no parking — step to empty instead).
+    let mut draining: Vec<Sender<GatewaySnapshot>> = Vec::new();
     'run: loop {
-        if engine.is_idle() {
+        if engine.is_idle() && draining.is_empty() {
             // Park until the next command (or until every handle is gone).
             match rx.recv() {
                 Ok(cmd) => {
-                    if !handle_command(&mut engine, cmd, &mut subscribers, &mut next_id) {
+                    let keep = handle_command(
+                        &mut engine,
+                        cmd,
+                        &mut subscribers,
+                        &mut next_id,
+                        &mut draining,
+                    );
+                    if !keep {
                         break 'run;
                     }
                 }
@@ -162,7 +191,14 @@ fn engine_thread(mut engine: Engine, rx: Receiver<Command>) {
         loop {
             match rx.try_recv() {
                 Ok(cmd) => {
-                    if !handle_command(&mut engine, cmd, &mut subscribers, &mut next_id) {
+                    let keep = handle_command(
+                        &mut engine,
+                        cmd,
+                        &mut subscribers,
+                        &mut next_id,
+                        &mut draining,
+                    );
+                    if !keep {
                         break 'run;
                     }
                 }
@@ -175,9 +211,30 @@ fn engine_thread(mut engine: Engine, rx: Receiver<Command>) {
                 dispatch(&mut engine, event, &mut subscribers);
             }
         }
+        if engine.is_idle() && !draining.is_empty() {
+            // Every in-flight request has finished and released its
+            // reservation: answer the drain(s) with the proof and exit.
+            let snap = make_snapshot(&engine);
+            for reply in draining.drain(..) {
+                let _ = reply.send(snap.clone());
+            }
+            break 'run;
+        }
     }
     // Dropping the engine (and the subscriber senders) closes every
     // per-request channel; handlers see the close and end their streams.
+}
+
+fn make_snapshot(engine: &Engine) -> GatewaySnapshot {
+    let pool = engine.pool();
+    GatewaySnapshot {
+        total_pages: pool.total_pages(),
+        reserved_pages: pool.reserved_pages(),
+        in_use_pages: pool.in_use_pages(),
+        free_pages: pool.free_pages(),
+        in_flight: engine.in_flight(),
+        serve: engine.snapshot(),
+    }
 }
 
 /// Apply one command; `false` = shut down.
@@ -186,9 +243,15 @@ fn handle_command(
     cmd: Command,
     subscribers: &mut HashMap<RequestId, Sender<StreamEvent>>,
     next_id: &mut RequestId,
+    draining: &mut Vec<Sender<GatewaySnapshot>>,
 ) -> bool {
     match cmd {
         Command::Submit { mut req, reply } => {
+            if !draining.is_empty() {
+                // Draining: reject by dropping the reply channel — the
+                // submitter's recv errors out as BridgeClosed.
+                return true;
+            }
             req.id = *next_id;
             *next_id += 1;
             let (ev_tx, ev_rx) = channel();
@@ -204,15 +267,11 @@ fn handle_command(
             true
         }
         Command::Metrics { reply } => {
-            let pool = engine.pool();
-            let _ = reply.send(GatewaySnapshot {
-                total_pages: pool.total_pages(),
-                reserved_pages: pool.reserved_pages(),
-                in_use_pages: pool.in_use_pages(),
-                free_pages: pool.free_pages(),
-                in_flight: engine.in_flight(),
-                serve: engine.snapshot(),
-            });
+            let _ = reply.send(make_snapshot(engine));
+            true
+        }
+        Command::Drain { reply } => {
+            draining.push(reply);
             true
         }
         Command::Shutdown => false,
@@ -380,6 +439,46 @@ mod tests {
     fn dropping_every_handle_stops_the_engine_thread() {
         let (handle, join) = start(tiny_engine(ServerConfig::default()));
         drop(handle);
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn drain_completes_in_flight_work_rejects_new_and_frees_the_pool() {
+        let (handle, join) = start(tiny_engine(ServerConfig::default()));
+        let (_, events) = handle.submit(Request::greedy(0, vec![1, 2, 3], 6)).unwrap();
+        // Make sure the request is genuinely mid-flight before draining.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut seen = 0usize;
+        while seen < 1 {
+            match events.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                Ok(StreamEvent::Token(_)) => seen += 1,
+                Ok(_) => {}
+                Err(e) => panic!("request never started decoding: {e:?}"),
+            }
+        }
+        let snap = handle.drain().unwrap();
+        // The drain snapshot is taken after the last request released its
+        // reservation: pool fully free, nothing in flight.
+        assert_eq!(snap.in_flight, 0);
+        assert_eq!(snap.reserved_pages, 0);
+        assert_eq!(snap.in_use_pages, 0);
+        assert_eq!(snap.serve.total_tokens, 6, "drained request must run to completion");
+        // The subscriber still received the full stream + Finished.
+        let (rest, reason) = recv_all(&events);
+        assert_eq!(seen + rest.len(), 6);
+        assert_eq!(reason, Some(FinishReason::MaxNew));
+        // Post-drain, the bridge is closed for everything.
+        assert!(handle.submit(Request::greedy(0, vec![1], 1)).is_err());
+        assert!(handle.metrics().is_err());
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn drain_on_an_idle_engine_returns_immediately() {
+        let (handle, join) = start(tiny_engine(ServerConfig::default()));
+        let snap = handle.drain().unwrap();
+        assert_eq!(snap.in_flight, 0);
+        assert_eq!(snap.reserved_pages, 0);
         join.join().unwrap();
     }
 }

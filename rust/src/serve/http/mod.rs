@@ -11,6 +11,10 @@
 //!   thread, parked on its command channel when idle (no hot `step()`
 //!   spin) and woken by submit; handlers talk to it through a cloneable
 //!   [`EngineHandle`] and receive per-request [`StreamEvent`] channels.
+//! - [`router`] — the multi-model layer: one engine (own KV pool) per
+//!   served model behind a name → [`EngineHandle`] table, backed by the
+//!   [`crate::model::ModelStore`] registry; hot load/unload with
+//!   drain-before-drop semantics.
 //! - [`server`] — the network side: the accept loop, connection handlers
 //!   on the blocking-task pool, routing, and [`Gateway`] lifecycle
 //!   (bind/serve/graceful shutdown).
@@ -36,8 +40,10 @@
 
 pub mod bridge;
 pub mod protocol;
+pub mod router;
 pub mod server;
 
 pub use bridge::{BridgeClosed, EngineHandle, GatewaySnapshot, StreamEvent};
 pub use protocol::{HttpLimits, HttpRequest, SseWriter};
+pub use router::{ModelRouter, RouteError};
 pub use server::{Gateway, GatewayConfig};

@@ -1,0 +1,374 @@
+//! Multi-model routing: one [`Engine`] (own KV pool, own bridge thread,
+//! shared compute threadpool) per served model, fronted by a name →
+//! [`EngineHandle`] table, with a [`ModelStore`] registry tracking the
+//! artifact-backed weights behind them.
+//!
+//! Lifecycle of a hot load/unload, without restarting the process:
+//!
+//! 1. `load(name, path)` — the store loads (or cache-hits) the `.nqck`
+//!    artifact, an engine is spawned over the shared `Arc<DecodeModel>`,
+//!    and the slot becomes routable. The store handle is pinned inside
+//!    the slot, so the registry can never evict a serving model.
+//! 2. Requests carrying `"model": name` resolve to that engine; requests
+//!    without a model field go to the default slot.
+//! 3. `unload(name)` — the slot is removed from the table first (new
+//!    requests get 404), then the engine **drains**: in-flight requests
+//!    run to completion and their subscribers receive every event. The
+//!    drain's final snapshot (pool fully free, nothing in flight) is
+//!    returned to the caller. Only then are the engine — and with it the
+//!    `Arc<DecodeModel>` and any mmap backing — dropped, so borrowed
+//!    weights can never dangle under a live request.
+//!
+//! [`Engine`]: crate::serve::Engine
+//! [`ModelStore`]: crate::model::ModelStore
+
+use super::bridge::{self, EngineHandle, GatewaySnapshot};
+use crate::model::{Backing, ModelHandle, ModelStore};
+use crate::serve::{Engine, ServerConfig};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// Why a routing operation failed; the HTTP layer maps these to statuses.
+#[derive(Debug)]
+pub enum RouteError {
+    /// No serving slot under this name (404).
+    NoSuchModel(String),
+    /// A slot with this name is already serving (409).
+    AlreadyServing(String),
+    /// The target engine's bridge has shut down (503).
+    Closed,
+    /// Artifact load failure — bad path, bad CRC, wrong kind (400).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::NoSuchModel(name) => write!(f, "no such model: {name}"),
+            RouteError::AlreadyServing(name) => write!(f, "model {name} is already serving"),
+            RouteError::Closed => write!(f, "engine has shut down"),
+            RouteError::Io(e) => write!(f, "artifact load failed: {e}"),
+        }
+    }
+}
+
+struct ModelSlot {
+    handle: EngineHandle,
+    join: JoinHandle<()>,
+    weight_bytes: usize,
+    mapped: bool,
+    /// Pins the store entry (and through it the artifact mapping) while
+    /// this slot serves. Dropped after the drain on unload.
+    _pin: Option<ModelHandle>,
+}
+
+struct RouterState {
+    slots: HashMap<String, ModelSlot>,
+    default_model: Option<String>,
+}
+
+/// The name → engine table plus the model registry. One per gateway;
+/// connection handlers share it behind an `Arc`.
+pub struct ModelRouter {
+    store: ModelStore,
+    scfg: ServerConfig,
+    state: Mutex<RouterState>,
+}
+
+impl ModelRouter {
+    /// An empty router. `scfg` is the engine template hot loads inherit
+    /// (per-load overrides via [`ModelRouter::load`]'s `scfg` argument).
+    pub fn new(store: ModelStore, scfg: ServerConfig) -> ModelRouter {
+        ModelRouter {
+            store,
+            scfg,
+            state: Mutex::new(RouterState { slots: HashMap::new(), default_model: None }),
+        }
+    }
+
+    /// The engine template new loads start from.
+    pub fn server_config(&self) -> ServerConfig {
+        self.scfg.clone()
+    }
+
+    /// The model registry (shared; e.g. for pre-warming).
+    pub fn store(&self) -> &ModelStore {
+        &self.store
+    }
+
+    /// Install an already-built engine under `name` (the gateway's
+    /// default-engine path and the programmatic API). Spawns the bridge
+    /// thread; `pin` optionally ties a store entry's lifetime to the slot.
+    pub fn install(
+        &self,
+        name: &str,
+        engine: Engine,
+        pin: Option<ModelHandle>,
+        make_default: bool,
+    ) -> Result<EngineHandle, RouteError> {
+        let weight_bytes = engine.model.weight_bytes();
+        let mapped = pin.as_ref().is_some_and(ModelHandle::mapped);
+        let mut state = self.state.lock().unwrap();
+        if state.slots.contains_key(name) {
+            return Err(RouteError::AlreadyServing(name.to_string()));
+        }
+        let (handle, join) = bridge::start(engine);
+        state.slots.insert(
+            name.to_string(),
+            ModelSlot { handle: handle.clone(), join, weight_bytes, mapped, _pin: pin },
+        );
+        if make_default || state.default_model.is_none() {
+            state.default_model = Some(name.to_string());
+        }
+        Ok(handle)
+    }
+
+    /// Hot-load `path` into the store and start serving it as `name`.
+    pub fn load(
+        &self,
+        name: &str,
+        path: &str,
+        backing: Backing,
+        scfg: ServerConfig,
+        make_default: bool,
+    ) -> Result<EngineHandle, RouteError> {
+        // Fast reject before paying for the artifact read; the install
+        // below re-checks under the lock (a racing load of the same name
+        // turns into AlreadyServing there).
+        if self.state.lock().unwrap().slots.contains_key(name) {
+            return Err(RouteError::AlreadyServing(name.to_string()));
+        }
+        let pin = self.store.load(name, path, backing).map_err(RouteError::Io)?;
+        let engine = Engine::shared(pin.model().clone(), scfg);
+        self.install(name, engine, Some(pin), make_default)
+    }
+
+    /// Resolve a request's engine: `Some(name)` → that slot, `None` →
+    /// the default slot.
+    pub fn resolve(&self, name: Option<&str>) -> Result<EngineHandle, RouteError> {
+        let state = self.state.lock().unwrap();
+        let name = match name {
+            Some(n) => n.to_string(),
+            None => state
+                .default_model
+                .clone()
+                .ok_or_else(|| RouteError::NoSuchModel("(no default model)".into()))?,
+        };
+        state
+            .slots
+            .get(&name)
+            .map(|s| s.handle.clone())
+            .ok_or(RouteError::NoSuchModel(name))
+    }
+
+    /// The current default model name.
+    pub fn default_name(&self) -> Option<String> {
+        self.state.lock().unwrap().default_model.clone()
+    }
+
+    /// Stop serving `name`: unroutable immediately, then the engine
+    /// drains (in-flight requests complete and stream out normally)
+    /// before the weights drop. Returns the post-drain snapshot — its
+    /// `reserved_pages`/`in_flight` are zero by construction.
+    pub fn unload(&self, name: &str) -> Result<GatewaySnapshot, RouteError> {
+        let slot = {
+            let mut state = self.state.lock().unwrap();
+            let slot = state
+                .slots
+                .remove(name)
+                .ok_or_else(|| RouteError::NoSuchModel(name.to_string()))?;
+            if state.default_model.as_deref() == Some(name) {
+                state.default_model = None;
+            }
+            // Evict the registry entry NOW, not after the drain: a
+            // same-name load issued while we drain must re-read its
+            // artifact, never cache-hit the outgoing weights. The slot's
+            // pin keeps the Arc (and any mapping) alive until the drain
+            // finishes regardless.
+            self.store.unload(name);
+            slot
+        };
+        // Outside the lock: the drain can take as long as the longest
+        // in-flight generation, and other models must keep serving.
+        let drained = slot.handle.drain();
+        // Join and drop the slot (engine, pin, weights) on every path —
+        // a failed drain (engine thread already gone, e.g. shutdown race)
+        // must not leak the thread handle or the pinned entry.
+        let _ = slot.join.join();
+        drained.map_err(|_| RouteError::Closed)
+    }
+
+    /// Names currently serving, sorted.
+    pub fn serving(&self) -> Vec<String> {
+        let state = self.state.lock().unwrap();
+        let mut names: Vec<String> = state.slots.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// The `GET /v1/models` payload: per-slot identity + live engine
+    /// occupancy, plus registry totals.
+    pub fn list_json(&self) -> Json {
+        let (slots, default_model) = {
+            let state = self.state.lock().unwrap();
+            let slots: Vec<(String, EngineHandle, usize, bool)> = state
+                .slots
+                .iter()
+                .map(|(n, s)| (n.clone(), s.handle.clone(), s.weight_bytes, s.mapped))
+                .collect();
+            (slots, state.default_model.clone())
+        };
+        let mut models: Vec<(String, Json)> = slots
+            .into_iter()
+            .map(|(name, handle, weight_bytes, mapped)| {
+                let mut j = Json::obj()
+                    .set("name", name.as_str())
+                    .set("weight_bytes", weight_bytes)
+                    .set("mapped", mapped)
+                    .set("default", default_model.as_deref() == Some(name.as_str()));
+                match handle.metrics() {
+                    Ok(snap) => {
+                        j = j
+                            .set("state", "serving")
+                            .set("in_flight", snap.in_flight)
+                            .set("reserved_pages", snap.reserved_pages)
+                            .set("total_pages", snap.total_pages);
+                    }
+                    Err(_) => j = j.set("state", "closed"),
+                }
+                (name, j)
+            })
+            .collect();
+        models.sort_by(|a, b| a.0.cmp(&b.0));
+        let store = self.store.list();
+        Json::obj()
+            .set(
+                "default",
+                match &default_model {
+                    Some(n) => Json::Str(n.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set("models", Json::Arr(models.into_iter().map(|(_, j)| j).collect()))
+            .set(
+                "store",
+                Json::obj()
+                    .set("resident", store.len())
+                    .set("evictions", self.store.evictions() as usize),
+            )
+    }
+
+    /// The `GET /v1/metrics` payload: the default engine's snapshot
+    /// flattened at the top level (wire-compatible with the single-model
+    /// gateway) plus a per-model map. A slot whose bridge has died (an
+    /// engine-thread panic) degrades to `{"state": "closed"}` — one sick
+    /// model must not blind monitoring on the healthy ones.
+    pub fn metrics_json(&self) -> Json {
+        let (slots, default_model) = {
+            let state = self.state.lock().unwrap();
+            let slots: Vec<(String, EngineHandle)> =
+                state.slots.iter().map(|(n, s)| (n.clone(), s.handle.clone())).collect();
+            (slots, state.default_model.clone())
+        };
+        let mut per_model = Json::obj();
+        let mut default_snapshot: Option<GatewaySnapshot> = None;
+        for (name, handle) in slots {
+            match handle.metrics() {
+                Ok(snap) => {
+                    if default_model.as_deref() == Some(name.as_str()) {
+                        default_snapshot = Some(snap.clone());
+                    }
+                    per_model.insert(&name, snap.to_json());
+                }
+                Err(_) => per_model.insert(&name, Json::obj().set("state", "closed")),
+            }
+        }
+        let mut top = match default_snapshot {
+            Some(snap) => snap.to_json(),
+            None => Json::obj(),
+        };
+        top.insert("models", per_model);
+        top
+    }
+
+    /// Hard-stop every engine (in-flight work abandoned) and join the
+    /// bridge threads. Gateway shutdown path.
+    pub fn shutdown(&self) {
+        let slots: Vec<ModelSlot> = {
+            let mut state = self.state.lock().unwrap();
+            state.default_model = None;
+            state.slots.drain().map(|(_, s)| s).collect()
+        };
+        for slot in &slots {
+            slot.handle.request_shutdown();
+        }
+        for slot in slots {
+            let _ = slot.join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::decode::dense_decode_model;
+    use crate::nn::family_config;
+    use crate::nn::model::ModelParams;
+    use crate::serve::Request;
+    use crate::util::rng::Rng;
+
+    fn tiny_engine() -> Engine {
+        let mcfg = family_config("l2", "xs");
+        let mut rng = Rng::new(0);
+        let params = ModelParams::init(&mcfg, &mut rng);
+        Engine::new(dense_decode_model(&params), ServerConfig::default())
+    }
+
+    fn router() -> ModelRouter {
+        ModelRouter::new(ModelStore::new(Default::default()), ServerConfig::default())
+    }
+
+    #[test]
+    fn install_resolve_default_and_duplicate_rejection() {
+        let r = router();
+        assert!(matches!(r.resolve(None), Err(RouteError::NoSuchModel(_))));
+        r.install("a", tiny_engine(), None, false).unwrap();
+        assert_eq!(r.default_name().as_deref(), Some("a"), "first install becomes default");
+        r.install("b", tiny_engine(), None, false).unwrap();
+        assert_eq!(r.default_name().as_deref(), Some("a"));
+        assert!(matches!(
+            r.install("a", tiny_engine(), None, false),
+            Err(RouteError::AlreadyServing(_))
+        ));
+        assert!(r.resolve(Some("b")).is_ok());
+        assert!(matches!(r.resolve(Some("zzz")), Err(RouteError::NoSuchModel(_))));
+        assert_eq!(r.serving(), vec!["a".to_string(), "b".to_string()]);
+        r.shutdown();
+    }
+
+    #[test]
+    fn unload_drains_and_clears_default() {
+        let r = router();
+        r.install("only", tiny_engine(), None, true).unwrap();
+        let handle = r.resolve(None).unwrap();
+        let (_, events) = handle.submit(Request::greedy(0, vec![1, 2], 4)).unwrap();
+        let snap = r.unload("only").unwrap();
+        assert_eq!(snap.in_flight, 0);
+        assert_eq!(snap.reserved_pages, 0);
+        assert_eq!(snap.serve.total_tokens, 4, "in-flight request must finish before unload");
+        // Subscriber got the full stream.
+        let tokens: Vec<u16> = events
+            .iter()
+            .filter_map(|ev| match ev {
+                super::super::bridge::StreamEvent::Token(t) => Some(t),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(tokens.len(), 4);
+        assert!(r.default_name().is_none());
+        assert!(matches!(r.unload("only"), Err(RouteError::NoSuchModel(_))));
+        r.shutdown();
+    }
+}

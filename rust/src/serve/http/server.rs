@@ -11,10 +11,13 @@
 //!
 //! | method | path | behavior |
 //! |---|---|---|
-//! | `POST` | `/v1/generate` | JSON body → full JSON response |
+//! | `POST` | `/v1/generate` | JSON body → full JSON response; optional `"model"` field routes to a named model |
 //! | `POST` | `/v1/generate?stream=1` | same body → SSE, one `data:` frame per token, final frame carries `finish_reason` + timings |
-//! | `POST` | `/v1/cancel/{id}` | cancel lands at the next engine tick |
-//! | `GET` | `/v1/metrics` | lifetime [`ServeMetrics`] + KV-pool occupancy |
+//! | `POST` | `/v1/cancel/{id}[?model=name]` | cancel lands at that engine's next tick |
+//! | `GET` | `/v1/models` | serving slots + registry occupancy |
+//! | `POST` | `/v1/models/load` | hot-load a `.nqck` artifact and serve it (own engine + KV pool) |
+//! | `POST` | `/v1/models/unload` | stop routing, drain in-flight work, drop the weights |
+//! | `GET` | `/v1/metrics` | lifetime [`ServeMetrics`] + KV-pool occupancy (default model at the top level, all models under `models`) |
 //! | `GET` | `/healthz` | liveness |
 //!
 //! A client disconnect mid-stream surfaces as a frame-write failure; the
@@ -24,10 +27,12 @@
 //!
 //! [`ServeMetrics`]: crate::serve::ServeMetrics
 
-use super::bridge::{self, EngineHandle, StreamEvent};
+use super::bridge::{EngineHandle, StreamEvent};
 use super::protocol::{self, HttpError, HttpLimits, HttpRequest, SseWriter};
+use super::router::{ModelRouter, RouteError};
 use crate::data::tokenize;
-use crate::serve::{Engine, FinishReason, Request, RequestId, Response};
+use crate::model::{Backing, ModelStore, StoreConfig};
+use crate::serve::{Engine, FinishReason, Request, RequestId, Response, ServerConfig};
 use crate::util::json::{Json, ParseLimits};
 use crate::util::threadpool::spawn_task;
 use std::io::{BufReader, ErrorKind};
@@ -53,6 +58,9 @@ pub struct GatewayConfig {
     /// Once a request starts arriving it must complete within this window
     /// (a stalled sender cannot pin a handler forever).
     pub request_read_timeout: Duration,
+    /// Name [`Gateway::start`] registers its engine under (requests
+    /// without a `model` field route here).
+    pub default_model_name: String,
 }
 
 impl Default for GatewayConfig {
@@ -62,6 +70,7 @@ impl Default for GatewayConfig {
             limits: HttpLimits::default(),
             max_max_new: 1024,
             request_read_timeout: Duration::from_secs(10),
+            default_model_name: "default".into(),
         }
     }
 }
@@ -69,39 +78,48 @@ impl Default for GatewayConfig {
 /// Granularity at which an idle keep-alive handler polls the shutdown flag.
 const IDLE_POLL: Duration = Duration::from_millis(200);
 
-/// A running gateway: listener + engine thread. Dropping it (or calling
-/// [`Gateway::shutdown`]) stops both.
+/// A running gateway: listener + one engine thread per served model.
+/// Dropping it (or calling [`Gateway::shutdown`]) stops everything.
 pub struct Gateway {
     addr: SocketAddr,
-    handle: EngineHandle,
+    router: Arc<ModelRouter>,
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
-    engine: Option<JoinHandle<()>>,
 }
 
 impl Gateway {
-    /// Bind `cfg.addr`, move `engine` onto its dedicated thread, and start
-    /// accepting. Returns once the listener is live.
+    /// Bind `cfg.addr`, register `engine` as the default model (named
+    /// [`GatewayConfig::default_model_name`]), and start accepting.
+    /// Returns once the listener is live. Further models can be loaded
+    /// at runtime via `POST /v1/models/load` or
+    /// [`Gateway::router`]`.load(..)`.
     pub fn start(engine: Engine, cfg: GatewayConfig) -> std::io::Result<Gateway> {
+        let scfg = engine.cfg().clone();
+        let router = Arc::new(ModelRouter::new(ModelStore::new(StoreConfig::default()), scfg));
+        router
+            .install(&cfg.default_model_name, engine, None, true)
+            .expect("fresh router cannot have a name collision");
+        Gateway::start_with_router(router, cfg)
+    }
+
+    /// Bind `cfg.addr` over an existing router (possibly pre-loaded with
+    /// several models; possibly empty — load the first model over HTTP).
+    pub fn start_with_router(
+        router: Arc<ModelRouter>,
+        cfg: GatewayConfig,
+    ) -> std::io::Result<Gateway> {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
-        let (handle, engine_join) = bridge::start(engine);
         let stop = Arc::new(AtomicBool::new(false));
         let accept = {
-            let handle = handle.clone();
+            let router = router.clone();
             let stop = stop.clone();
             let cfg = Arc::new(cfg);
             std::thread::Builder::new().name("nanoquant-accept".into()).spawn(move || {
-                accept_loop(listener, handle, cfg, stop)
+                accept_loop(listener, router, cfg, stop)
             })?
         };
-        Ok(Gateway {
-            addr,
-            handle,
-            stop,
-            accept: Some(accept),
-            engine: Some(engine_join),
-        })
+        Ok(Gateway { addr, router, stop, accept: Some(accept) })
     }
 
     /// The bound address (resolves `:0` to the real port).
@@ -109,15 +127,23 @@ impl Gateway {
         self.addr
     }
 
-    /// A cloneable in-process client handle — same bridge the connection
-    /// handlers use (tests and demos drive it directly).
+    /// The default model's in-process client handle — same bridge the
+    /// connection handlers use (tests and demos drive it directly).
+    ///
+    /// Panics if no default model is serving (empty router, or the
+    /// default was unloaded).
     pub fn handle(&self) -> EngineHandle {
-        self.handle.clone()
+        self.router.resolve(None).expect("gateway has no default model")
     }
 
-    /// Graceful shutdown: stop accepting, wake parked handlers via the stop
-    /// flag, stop the engine thread (in-flight work is abandoned, streams
-    /// close), and join both owned threads.
+    /// The model router: load/unload/resolve models programmatically.
+    pub fn router(&self) -> &Arc<ModelRouter> {
+        &self.router
+    }
+
+    /// Graceful shutdown: stop accepting, wake parked handlers via the
+    /// stop flag, stop every engine thread (in-flight work is abandoned,
+    /// streams close), and join all owned threads.
     pub fn shutdown(mut self) {
         self.stop_all();
     }
@@ -128,9 +154,7 @@ impl Gateway {
         if let Some(a) = self.accept.take() {
             let _ = a.join();
         }
-        if let Some(e) = self.engine.take() {
-            let _ = e.join();
-        }
+        self.router.shutdown();
     }
 
     fn stop_all(&mut self) {
@@ -139,13 +163,10 @@ impl Gateway {
         }
         // Unblock the accept call with a throwaway connection.
         let _ = TcpStream::connect(self.addr);
-        self.handle.request_shutdown();
         if let Some(a) = self.accept.take() {
             let _ = a.join();
         }
-        if let Some(e) = self.engine.take() {
-            let _ = e.join();
-        }
+        self.router.shutdown();
     }
 }
 
@@ -157,7 +178,7 @@ impl Drop for Gateway {
 
 fn accept_loop(
     listener: TcpListener,
-    handle: EngineHandle,
+    router: Arc<ModelRouter>,
     cfg: Arc<GatewayConfig>,
     stop: Arc<AtomicBool>,
 ) {
@@ -175,10 +196,10 @@ fn accept_loop(
                 continue;
             }
         };
-        let handle = handle.clone();
+        let router = router.clone();
         let cfg = cfg.clone();
         let stop = stop.clone();
-        spawn_task(move || handle_connection(stream, handle, cfg, stop));
+        spawn_task(move || handle_connection(stream, router, cfg, stop));
     }
 }
 
@@ -187,7 +208,7 @@ fn accept_loop(
 /// the stop flag each wake so shutdown is prompt.
 fn handle_connection(
     stream: TcpStream,
-    handle: EngineHandle,
+    router: Arc<ModelRouter>,
     cfg: Arc<GatewayConfig>,
     stop: Arc<AtomicBool>,
 ) {
@@ -242,7 +263,7 @@ fn handle_connection(
                 return;
             }
         };
-        match route(&req, &handle, &mut reader, &cfg) {
+        match route(&req, &router, &mut reader, &cfg) {
             Ok(true) if req.wants_keep_alive() && !stop.load(Ordering::Relaxed) => continue,
             _ => return,
         }
@@ -275,10 +296,24 @@ fn drain_before_close(reader: &mut BufReader<TcpStream>) {
     }
 }
 
+/// Map a [`RouteError`] to an HTTP status.
+fn route_error_status(err: &RouteError) -> u16 {
+    match err {
+        RouteError::NoSuchModel(_) => 404,
+        RouteError::AlreadyServing(_) => 409,
+        RouteError::Closed => 503,
+        // A same-name/different-path load conflict is a 409 like any
+        // other name collision; remaining load failures (missing file,
+        // bad CRC, wrong kind) are the client's 400.
+        RouteError::Io(e) if e.kind() == ErrorKind::AlreadyExists => 409,
+        RouteError::Io(_) => 400,
+    }
+}
+
 /// Dispatch one request; `Ok(true)` = the connection may be kept alive.
 fn route(
     req: &HttpRequest,
-    handle: &EngineHandle,
+    router: &Arc<ModelRouter>,
     reader: &mut BufReader<TcpStream>,
     cfg: &GatewayConfig,
 ) -> std::io::Result<bool> {
@@ -289,26 +324,42 @@ fn route(
             protocol::write_json_response(w, 200, &Json::obj().set("ok", true), ka)?;
             Ok(true)
         }
-        ("GET", "/v1/metrics") => match handle.metrics() {
-            Ok(snap) => {
-                protocol::write_json_response(w, 200, &snap.to_json(), ka)?;
-                Ok(true)
-            }
-            Err(closed) => {
-                protocol::write_json_response(w, 503, &err_json(&closed.to_string()), false)?;
-                Ok(false)
-            }
-        },
-        ("POST", "/v1/generate") => generate(req, handle, w, cfg),
+        ("GET", "/v1/metrics") => {
+            protocol::write_json_response(w, 200, &router.metrics_json(), ka)?;
+            Ok(true)
+        }
+        ("POST", "/v1/generate") => generate(req, router, w, cfg),
+        ("GET", "/v1/models") => {
+            protocol::write_json_response(w, 200, &router.list_json(), ka)?;
+            Ok(true)
+        }
+        ("POST", "/v1/models/load") => models_load(req, router, w, cfg),
+        ("POST", "/v1/models/unload") => models_unload(req, router, w, cfg),
         ("POST", path) if path.starts_with("/v1/cancel/") => {
             match path["/v1/cancel/".len()..].parse::<RequestId>() {
                 Ok(id) => {
-                    // Accepted, not synchronous: the cancel lands at the
-                    // engine's next tick boundary (unknown ids no-op).
-                    let accepted = handle.cancel(id).is_ok();
-                    let body = Json::obj().set("id", id).set("accepted", accepted);
-                    protocol::write_json_response(w, 200, &body, ka)?;
-                    Ok(true)
+                    // Cancels target one engine's id space: the slot named
+                    // by `?model=`, the default slot otherwise. Accepted,
+                    // not synchronous — the cancel lands at that engine's
+                    // next tick boundary (unknown ids no-op).
+                    match router.resolve(req.query("model")) {
+                        Ok(handle) => {
+                            let accepted = handle.cancel(id).is_ok();
+                            let body = Json::obj().set("id", id).set("accepted", accepted);
+                            protocol::write_json_response(w, 200, &body, ka)?;
+                            Ok(true)
+                        }
+                        Err(err) => {
+                            let status = route_error_status(&err);
+                            protocol::write_json_response(
+                                w,
+                                status,
+                                &err_json(&err.to_string()),
+                                ka,
+                            )?;
+                            Ok(true)
+                        }
+                    }
                 }
                 Err(_) => {
                     let body = err_json("cancel id must be an unsigned integer");
@@ -339,6 +390,8 @@ fn route(
 struct GenerateSpec {
     request: Request,
     stream: bool,
+    /// Target model name (`None` routes to the default slot).
+    model: Option<String>,
 }
 
 fn parse_generate_body(req: &HttpRequest, cfg: &GatewayConfig) -> Result<GenerateSpec, String> {
@@ -396,13 +449,18 @@ fn parse_generate_body(req: &HttpRequest, cfg: &GatewayConfig) -> Result<Generat
         None => false,
         Some(v) => v.as_bool().ok_or("stream must be a boolean")?,
     };
+    let model = match body.get("model") {
+        None => None,
+        Some(Json::Str(name)) => Some(name.clone()),
+        Some(_) => return Err("model must be a string".into()),
+    };
     // The id is overwritten by the bridge; 0 is a placeholder.
     let request = Request::new(0, prompt)
         .max_new(max_new)
         .temperature(temperature)
         .top_k(top_k)
         .stop_tokens(stop_tokens);
-    Ok(GenerateSpec { request, stream })
+    Ok(GenerateSpec { request, stream, model })
 }
 
 fn non_negative_int(v: &Json) -> Option<usize> {
@@ -417,7 +475,7 @@ fn token_u16(v: &Json) -> Option<u16> {
 
 fn generate(
     req: &HttpRequest,
-    handle: &EngineHandle,
+    router: &Arc<ModelRouter>,
     w: &mut TcpStream,
     cfg: &GatewayConfig,
 ) -> std::io::Result<bool> {
@@ -429,15 +487,146 @@ fn generate(
             return Ok(true);
         }
     };
+    // Body `model` wins; `?model=` is the curl-friendly fallback.
+    let model = spec.model.as_deref().or_else(|| req.query("model"));
+    let handle = match router.resolve(model) {
+        Ok(handle) => handle,
+        Err(err) => {
+            let status = route_error_status(&err);
+            protocol::write_json_response(w, status, &err_json(&err.to_string()), ka)?;
+            return Ok(true);
+        }
+    };
     let stream = spec.stream || req.query("stream").is_some_and(|v| v == "1" || v == "true");
     let Ok((id, events)) = handle.submit(spec.request) else {
+        // Resolved, then the engine went away (unload race / shutdown).
         protocol::write_json_response(w, 503, &err_json("engine has shut down"), false)?;
         return Ok(false);
     };
     if stream {
-        stream_sse(id, &events, handle, w)
+        stream_sse(id, &events, &handle, w)
     } else {
-        respond_full(id, &events, handle, w, ka)
+        respond_full(id, &events, &handle, w, ka)
+    }
+}
+
+/// `POST /v1/models/load` — body `{"name", "path", "backing"?,
+/// "max_batch"?, "kv_pages"?, "prefill_chunk"?, "seed"?, "default"?}`.
+/// Loads a packed NANOQCK2 artifact and starts serving it under `name`
+/// with its own engine and KV pool.
+fn models_load(
+    req: &HttpRequest,
+    router: &Arc<ModelRouter>,
+    w: &mut TcpStream,
+    cfg: &GatewayConfig,
+) -> std::io::Result<bool> {
+    let ka = req.wants_keep_alive();
+    let reject = |w: &mut TcpStream, msg: &str| -> std::io::Result<bool> {
+        protocol::write_json_response(w, 400, &err_json(msg), ka)?;
+        Ok(true)
+    };
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return reject(w, "body must be UTF-8"),
+    };
+    let limits = ParseLimits { max_bytes: cfg.limits.max_body_bytes, max_depth: 32 };
+    let body = match Json::parse_with_limits(text, limits) {
+        Ok(b) => b,
+        Err(e) => return reject(w, &format!("bad JSON body: {e}")),
+    };
+    let Some(name) = body.get("name").and_then(Json::as_str) else {
+        return reject(w, "missing required field: name (string)");
+    };
+    let Some(path) = body.get("path").and_then(Json::as_str) else {
+        return reject(w, "missing required field: path (string)");
+    };
+    let backing = match body.get("backing").and_then(Json::as_str) {
+        None | Some("mmap") => Backing::Mmap,
+        Some("heap") => Backing::Heap,
+        Some(other) => return reject(w, &format!("unknown backing {other:?} (mmap|heap)")),
+    };
+    let mut scfg: ServerConfig = router.server_config();
+    let overrides =
+        [("max_batch", &mut scfg.max_batch), ("prefill_chunk", &mut scfg.prefill_chunk)];
+    for (field, slot) in overrides {
+        if let Some(v) = body.get(field) {
+            match v.as_f64().filter(|x| x.is_finite() && *x >= 1.0 && x.fract() == 0.0) {
+                Some(x) => *slot = x as usize,
+                None => return reject(w, &format!("{field} must be a positive integer")),
+            }
+        }
+    }
+    if let Some(v) = body.get("kv_pages") {
+        match v.as_f64().filter(|x| x.is_finite() && *x >= 1.0 && x.fract() == 0.0) {
+            Some(x) => scfg.kv_pages = Some(x as usize),
+            None => return reject(w, "kv_pages must be a positive integer"),
+        }
+    }
+    if let Some(v) = body.get("seed") {
+        match v.as_f64().filter(|x| x.is_finite() && *x >= 0.0 && x.fract() == 0.0) {
+            Some(x) => scfg.seed = x as u64,
+            None => return reject(w, "seed must be a non-negative integer"),
+        }
+    }
+    let make_default = body.get("default").and_then(Json::as_bool).unwrap_or(false);
+    match router.load(name, path, backing, scfg, make_default) {
+        Ok(_) => {
+            let info = router.list_json();
+            let body = Json::obj()
+                .set("name", name)
+                .set("loaded", true)
+                .set("default", router.default_name().as_deref() == Some(name))
+                .set("models", info.get("models").cloned().unwrap_or(Json::Null));
+            protocol::write_json_response(w, 200, &body, ka)?;
+            Ok(true)
+        }
+        Err(err) => {
+            let status = route_error_status(&err);
+            protocol::write_json_response(w, status, &err_json(&err.to_string()), ka)?;
+            Ok(true)
+        }
+    }
+}
+
+/// `POST /v1/models/unload` — body `{"name"}`. Removes the slot from
+/// routing, drains its in-flight requests to completion, then drops the
+/// engine and weights. The response's `final` object is the post-drain
+/// snapshot: `reserved_pages`/`in_flight` are 0 when it reports success.
+fn models_unload(
+    req: &HttpRequest,
+    router: &Arc<ModelRouter>,
+    w: &mut TcpStream,
+    cfg: &GatewayConfig,
+) -> std::io::Result<bool> {
+    let ka = req.wants_keep_alive();
+    let text = std::str::from_utf8(&req.body).unwrap_or("");
+    let limits = ParseLimits { max_bytes: cfg.limits.max_body_bytes, max_depth: 32 };
+    let name = Json::parse_with_limits(text, limits)
+        .ok()
+        .and_then(|b| b.get("name").and_then(Json::as_str).map(str::to_string));
+    let Some(name) = name else {
+        protocol::write_json_response(
+            w,
+            400,
+            &err_json("missing required field: name (string)"),
+            ka,
+        )?;
+        return Ok(true);
+    };
+    match router.unload(&name) {
+        Ok(snapshot) => {
+            let body = Json::obj()
+                .set("name", name.as_str())
+                .set("unloaded", true)
+                .set("final", snapshot.to_json());
+            protocol::write_json_response(w, 200, &body, ka)?;
+            Ok(true)
+        }
+        Err(err) => {
+            let status = route_error_status(&err);
+            protocol::write_json_response(w, status, &err_json(&err.to_string()), ka)?;
+            Ok(true)
+        }
     }
 }
 

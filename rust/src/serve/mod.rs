@@ -37,6 +37,7 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks_mut;
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Identifier handed back by [`Engine::submit`] and carried by every
@@ -339,8 +340,12 @@ struct Slot {
 /// is inert, so callers own the cadence (drive it from a loop, a network
 /// poller, a bench harness, ...).
 pub struct Engine {
-    /// The decode model every slot steps through.
-    pub model: DecodeModel,
+    /// The decode model every slot steps through. Shared (`Arc`) so a
+    /// `model::store::ModelStore` registry and several engines can serve
+    /// one set of weights — e.g. the multi-model gateway spawns one
+    /// engine (own KV pool) per loaded model while the store tracks
+    /// residency.
+    pub model: Arc<DecodeModel>,
     cfg: ServerConfig,
     pool: KvPool,
     queue: VecDeque<Queued>,
@@ -369,6 +374,12 @@ pub struct Engine {
 impl Engine {
     /// An idle engine with an empty queue and a KV pool sized per `cfg`.
     pub fn new(model: DecodeModel, cfg: ServerConfig) -> Engine {
+        Engine::shared(Arc::new(model), cfg)
+    }
+
+    /// [`Engine::new`] over an already-shared model (the multi-model
+    /// path: weights owned by the registry, engine per serving slot).
+    pub fn shared(model: Arc<DecodeModel>, cfg: ServerConfig) -> Engine {
         let full_reservation_pages = cfg.max_batch * model.cfg.max_seq.div_ceil(cfg.page_size);
         let pool = KvPool::new(
             &model.cfg,

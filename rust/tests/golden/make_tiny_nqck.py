@@ -1,0 +1,125 @@
+#!/usr/bin/env python3
+"""Regenerate tests/golden/tiny.nqck — the committed NANOQCK2 golden fixture.
+
+The fixture is written by THIS script, independently of the Rust writer,
+so it pins the on-disk format itself: if the Rust reader drifts (magic,
+header fields, offset rules, alignment, CRC, payload encoding), the
+`golden_fixture_*` tests and the `artifacts-check` CI step fail.
+
+Layout under test (see rust/src/model/artifact.rs):
+    magic "NANOQCK2" | u64 LE header_len | JSON header
+    | zero pad to align64(16 + header_len)
+    | payloads, each at a 64-byte-aligned offset relative to that base
+    | u32 LE CRC-32 (IEEE) over every preceding byte
+
+Model: a deliberately tiny packed model (kind "packed-model") with one
+block whose wq is quantized (b1 sign factors + f32 scales) and every
+other linear dense. All payload values follow closed-form patterns that
+rust/tests/model_store.rs recomputes exactly:
+    f32 tensor named N:  x[i] = ((i*7 + seed(N)) % 13) * 0.25 - 1.5
+                         seed(N) = sum(bytes of N) % 13
+    b1  "...u"  words:   w[i] = (i*5 + 3)  & 0xF   (cols=4)
+    b1  "...vt" words:   w[i] = (i*11 + 1) & 0xFF  (cols=8)
+"""
+import binascii
+import json
+import struct
+
+ALIGN = 64
+
+CONFIG = {
+    "name": "golden-tiny",
+    "vocab": 32,
+    "d_model": 8,
+    "n_layers": 1,
+    "n_heads": 2,
+    "n_kv_heads": 2,
+    "d_ff": 16,
+    "max_seq": 16,
+    "rope_theta": 10000.0,
+    "tied": True,
+    "eps": 0.001,
+}
+
+
+def f32_pattern(name, count):
+    seed = sum(name.encode()) % 13
+    return [((i * 7 + seed) % 13) * 0.25 - 1.5 for i in range(count)]
+
+
+def u_words(count):
+    return [(i * 5 + 3) & 0xF for i in range(count)]
+
+
+def vt_words(count):
+    return [(i * 11 + 1) & 0xFF for i in range(count)]
+
+
+def main():
+    tensors = []  # (name, dtype, shape, payload_bytes)
+
+    def add_f32(name, shape):
+        n = 1
+        for d in shape:
+            n *= d
+        data = struct.pack("<%df" % n, *f32_pattern(name, n))
+        tensors.append((name, "f32", shape, data))
+
+    def add_b1(name, rows, cols, words):
+        assert len(words) == rows * ((cols + 31) // 32)
+        data = struct.pack("<%dI" % len(words), *words)
+        tensors.append((name, "b1", [rows, cols], data))
+
+    d, dff, vocab = CONFIG["d_model"], CONFIG["d_ff"], CONFIG["vocab"]
+    kv = CONFIG["n_kv_heads"] * (d // CONFIG["n_heads"])
+    add_f32("embed", [vocab, d])
+    add_f32("b0.ln1", [d])
+    # wq quantized at rank 4: u [d, 4] (1 word/row), vt [4, d] (1 word/row).
+    add_b1("b0.wq.u", d, 4, u_words(d))
+    add_b1("b0.wq.vt", 4, d, vt_words(4))
+    add_f32("b0.wq.s1", [d])
+    add_f32("b0.wq.s2", [d])
+    for name, shape in [
+        ("b0.wk.w", [kv, d]),
+        ("b0.wv.w", [kv, d]),
+        ("b0.wo.w", [d, d]),
+        ("b0.wg.w", [dff, d]),
+        ("b0.wu.w", [dff, d]),
+        ("b0.wd.w", [d, dff]),
+    ]:
+        add_f32(name, shape)
+    add_f32("b0.ln2", [d])
+    add_f32("ln_f", [d])
+
+    manifest, cursor = [], 0
+    for name, dtype, shape, data in tensors:
+        offset = (cursor + ALIGN - 1) // ALIGN * ALIGN
+        manifest.append(
+            {"name": name, "dtype": dtype, "shape": shape, "offset": offset, "bytes": len(data)}
+        )
+        cursor = offset + len(data)
+
+    header = json.dumps(
+        {"kind": "packed-model", "version": 2, "config": CONFIG, "tensors": manifest}
+    ).encode()
+
+    out = bytearray()
+    out += b"NANOQCK2"
+    out += struct.pack("<Q", len(header))
+    out += header
+    base = (len(out) + ALIGN - 1) // ALIGN * ALIGN
+    out += b"\0" * (base - len(out))
+    for (name, _, _, data), entry in zip(tensors, manifest):
+        want = base + entry["offset"]
+        assert want >= len(out), name
+        out += b"\0" * (want - len(out))
+        out += data
+    out += struct.pack("<I", binascii.crc32(bytes(out)) & 0xFFFFFFFF)
+
+    with open("tiny.nqck", "wb") as f:
+        f.write(bytes(out))
+    print("wrote tiny.nqck (%d bytes, %d tensors)" % (len(out), len(tensors)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,398 @@
+//! Integration tests for the `model::store` subsystem and the
+//! multi-model gateway:
+//!
+//! - the committed golden NANOQCK2 fixture (format pin: reader drift
+//!   breaks the build here and in the `artifacts-check` CI step),
+//! - mmap-vs-heap byte identity of packed-model generations,
+//! - hot load / serve / unload of a second model through a real loopback
+//!   gateway with interleaved SSE streams, and the KV pool returning to
+//!   fully-free after the unload drain.
+
+use nanoquant::model::packed::quantized_zoo_model;
+use nanoquant::model::{load_packed_model, save_packed_model, Artifact, Backing};
+use nanoquant::nn::decode::{dense_decode_model, generate_greedy};
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::ModelParams;
+use nanoquant::quant::Engine as QuantEngine;
+use nanoquant::serve::http::{Gateway, GatewayConfig};
+use nanoquant::serve::{Engine, ServerConfig};
+use nanoquant::util::json::Json;
+use nanoquant::util::rng::Rng;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/tiny.nqck");
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+// ---- shared helpers -----------------------------------------------------
+
+/// Run `body` on a helper thread; panic if it takes longer than `secs`.
+fn with_watchdog<F: FnOnce() + Send + 'static>(secs: u64, body: F) {
+    let (tx, rx) = mpsc::channel();
+    let worker = std::thread::spawn(move || {
+        body();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(()) => {
+            if let Err(payload) = worker.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => {
+            if let Err(payload) = worker.join() {
+                std::panic::resume_unwind(payload);
+            }
+            unreachable!("worker dropped its channel without panicking");
+        }
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("test exceeded its {secs}s watchdog");
+        }
+    }
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let stream = TcpStream::connect(addr).expect("connect to loopback gateway");
+    stream.set_read_timeout(Some(IO_TIMEOUT)).unwrap();
+    stream.set_write_timeout(Some(IO_TIMEOUT)).unwrap();
+    stream
+}
+
+fn write_request(w: &mut impl Write, method: &str, target: &str, body: &str, close: bool) {
+    write!(
+        w,
+        "{method} {target} HTTP/1.1\r\nHost: loopback\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        body.len(),
+        if close { "close" } else { "keep-alive" },
+    )
+    .expect("request write");
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {line:?}"));
+    let mut content_length = 0usize;
+    loop {
+        line.clear();
+        reader.read_line(&mut line).expect("header line");
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().expect("content-length value");
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("response body");
+    let body = String::from_utf8(body).expect("utf8 body");
+    (status, Json::parse(&body).unwrap_or_else(|e| panic!("bad body JSON ({e}): {body}")))
+}
+
+fn oneshot(addr: SocketAddr, method: &str, target: &str, body: &str) -> (u16, Json) {
+    let mut stream = connect(addr);
+    write_request(&mut stream, method, target, body, true);
+    read_response(&mut BufReader::new(stream))
+}
+
+fn open_sse(addr: SocketAddr, body: &str) -> BufReader<TcpStream> {
+    let mut stream = connect(addr);
+    write_request(&mut stream, "POST", "/v1/generate?stream=1", body, true);
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("SSE status line");
+    assert!(line.starts_with("HTTP/1.1 200"), "unexpected SSE status: {line:?}");
+    loop {
+        line.clear();
+        reader.read_line(&mut line).expect("SSE header line");
+        if line.trim_end().is_empty() {
+            return reader;
+        }
+    }
+}
+
+fn next_frame(reader: &mut BufReader<TcpStream>) -> Option<Json> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("SSE frame line");
+        if n == 0 {
+            return None;
+        }
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let payload = trimmed.strip_prefix("data: ").expect("SSE line must be a data field");
+        return Some(Json::parse(payload).expect("frame payload must be JSON"));
+    }
+}
+
+// ---- golden fixture (format pin) ----------------------------------------
+
+/// The closed-form payload patterns `make_tiny_nqck.py` writes.
+fn golden_f32(name: &str, count: usize) -> Vec<f32> {
+    let seed = name.bytes().map(|b| b as usize).sum::<usize>() % 13;
+    (0..count).map(|i| ((i * 7 + seed) % 13) as f32 * 0.25 - 1.5).collect()
+}
+
+#[test]
+fn golden_fixture_parses_with_exact_payloads() {
+    let a = Artifact::open(GOLDEN, Backing::Heap, true).expect("golden fixture must parse");
+    assert_eq!(a.kind(), "packed-model");
+    let cfg = a.header().get("config").expect("config");
+    assert_eq!(cfg.get("name").and_then(Json::as_str), Some("golden-tiny"));
+    assert_eq!(cfg.get("d_model").and_then(Json::as_usize), Some(8));
+    assert_eq!(a.tensors().len(), 14);
+    for t in a.tensors() {
+        assert_eq!(t.offset % 64, 0, "{} misaligned", t.name);
+    }
+    // Every f32 payload matches its generator pattern bit for bit.
+    for (name, count) in [
+        ("embed", 32 * 8),
+        ("b0.ln1", 8),
+        ("b0.wq.s1", 8),
+        ("b0.wq.s2", 8),
+        ("b0.wk.w", 8 * 8),
+        ("b0.wv.w", 8 * 8),
+        ("b0.wo.w", 8 * 8),
+        ("b0.wg.w", 16 * 8),
+        ("b0.wu.w", 16 * 8),
+        ("b0.wd.w", 8 * 16),
+        ("b0.ln2", 8),
+        ("ln_f", 8),
+    ] {
+        let got = a.f32_view(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(&got[..], &golden_f32(name, count)[..], "{name} payload drifted");
+    }
+    // The packed sign words too.
+    let u = a.bits_view("b0.wq.u").unwrap();
+    let want_u: Vec<u32> = (0..8).map(|i| (i * 5 + 3) & 0xF).collect();
+    assert_eq!(&u[..], &want_u[..], "b0.wq.u words drifted");
+    let vt = a.bits_view("b0.wq.vt").unwrap();
+    let want_vt: Vec<u32> = (0..4).map(|i| (i * 11 + 1) & 0xFF).collect();
+    assert_eq!(&vt[..], &want_vt[..], "b0.wq.vt words drifted");
+}
+
+#[test]
+fn golden_fixture_serves_identically_from_mmap_and_heap() {
+    let heap = load_packed_model(GOLDEN, Backing::Heap, true).expect("heap load");
+    let mapped = load_packed_model(GOLDEN, Backing::Mmap, true).expect("mmap load");
+    assert_eq!(heap.quantized_layers, 1);
+    let prompt: Vec<u16> = vec![1, 2, 3];
+    let a = generate_greedy(&heap.model, &prompt, 6, &[]);
+    let b = generate_greedy(&mapped.model, &prompt, 6, &[]);
+    assert_eq!(a, b, "mmap and heap generations must be byte-identical");
+    assert_eq!(a.len(), 6);
+}
+
+// ---- mmap vs heap byte identity on a quantized zoo model ----------------
+
+#[test]
+fn quantized_zoo_artifact_roundtrips_byte_identically() {
+    let qm = quantized_zoo_model(0xA11CE);
+    let path = "/tmp/nanoquant_it_store_roundtrip.nqck";
+    save_packed_model(path, &qm).unwrap();
+    let reference = qm.to_decode_model(QuantEngine::Packed);
+    let heap = load_packed_model(path, Backing::Heap, true).unwrap();
+    let mapped = load_packed_model(path, Backing::Mmap, true).unwrap();
+    for prompt in [vec![7u16], vec![1, 2, 3, 4, 5, 6, 7, 8], vec![250, 0, 13]] {
+        let want = generate_greedy(&reference, &prompt, 10, &[]);
+        assert_eq!(generate_greedy(&heap.model, &prompt, 10, &[]), want, "heap diverged");
+        assert_eq!(generate_greedy(&mapped.model, &prompt, 10, &[]), want, "mmap diverged");
+    }
+    std::fs::remove_file(path).ok();
+}
+
+// ---- multi-model gateway over loopback HTTP -----------------------------
+
+fn dense_tiny_engine(scfg: ServerConfig) -> Engine {
+    let mcfg = family_config("l2", "xs");
+    let mut rng = Rng::new(0);
+    let params = ModelParams::init(&mcfg, &mut rng);
+    Engine::new(dense_decode_model(&params), scfg)
+}
+
+#[test]
+fn gateway_hot_loads_serves_two_models_concurrently_and_unloads_clean() {
+    with_watchdog(180, || {
+        let path = "/tmp/nanoquant_it_gateway_second_model.nqck";
+        save_packed_model(path, &quantized_zoo_model(77)).unwrap();
+
+        let scfg = ServerConfig { max_batch: 2, seed: 0, ..Default::default() };
+        let gateway = Gateway::start(
+            dense_tiny_engine(scfg),
+            GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .expect("gateway must bind");
+        let addr = gateway.local_addr();
+
+        // Before the load, the named model is unroutable.
+        let (status, json) =
+            oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [1], \"model\": \"packed\"}");
+        assert_eq!(status, 404, "{json:?}");
+
+        // Hot-load the packed artifact as a second model.
+        let body = format!(
+            "{{\"name\": \"packed\", \"path\": {path:?}, \"backing\": \"mmap\", \"max_batch\": 2}}"
+        );
+        let (status, json) = oneshot(addr, "POST", "/v1/models/load", &body);
+        assert_eq!(status, 200, "{json:?}");
+        assert_eq!(json.get("loaded").and_then(Json::as_bool), Some(true));
+        // Duplicate load of the same name is a 409.
+        let (status, _) = oneshot(addr, "POST", "/v1/models/load", &body);
+        assert_eq!(status, 409);
+
+        // /v1/models lists both slots, default flagged.
+        let (status, json) = oneshot(addr, "GET", "/v1/models", "");
+        assert_eq!(status, 200);
+        let models = json.get("models").and_then(Json::as_arr).expect("models array");
+        assert_eq!(models.len(), 2, "{json:?}");
+        assert_eq!(json.get("default").and_then(Json::as_str), Some("default"));
+
+        // Interleaved SSE streams against both models at once: read the
+        // two streams frame by frame, alternating, until both finish.
+        let want_default = {
+            let mcfg = family_config("l2", "xs");
+            let mut rng = Rng::new(0);
+            let params = ModelParams::init(&mcfg, &mut rng);
+            generate_greedy(&dense_decode_model(&params), &[5, 6, 7], 8, &[])
+        };
+        let want_packed = {
+            let loaded = load_packed_model(path, Backing::Heap, true).unwrap();
+            generate_greedy(&loaded.model, &[5, 6, 7], 8, &[])
+        };
+        let mut sse_a = open_sse(addr, "{\"prompt\": [5, 6, 7], \"max_new\": 8}");
+        let mut sse_b =
+            open_sse(addr, "{\"prompt\": [5, 6, 7], \"max_new\": 8, \"model\": \"packed\"}");
+        let mut toks_a: Vec<u16> = Vec::new();
+        let mut toks_b: Vec<u16> = Vec::new();
+        let (mut done_a, mut done_b) = (false, false);
+        while !(done_a && done_b) {
+            for (done, reader, toks) in
+                [(&mut done_a, &mut sse_a, &mut toks_a), (&mut done_b, &mut sse_b, &mut toks_b)]
+            {
+                if *done {
+                    continue;
+                }
+                let frame = next_frame(reader).expect("stream ended without done frame");
+                if frame.get("done").and_then(Json::as_bool) == Some(true) {
+                    *done = true;
+                } else if let Some(t) = frame.get("token").and_then(Json::as_usize) {
+                    toks.push(t as u16);
+                }
+            }
+        }
+        assert_eq!(toks_a, want_default, "default model stream diverged under interleaving");
+        assert_eq!(toks_b, want_packed, "packed model stream diverged under interleaving");
+
+        // Unload while a request is mid-flight: kick off a long SSE
+        // generation on the packed model, see two tokens, then unload.
+        // The drain must let it run to completion before the weights go.
+        let body = "{\"prompt\": [9, 9], \"max_new\": 16, \"model\": \"packed\"}";
+        let mut sse = open_sse(addr, body);
+        let mut seen = 0usize;
+        while seen < 2 {
+            let frame = next_frame(&mut sse).expect("stream ended early");
+            if frame.get("token").is_some() {
+                seen += 1;
+            }
+        }
+        let (status, json) = oneshot(addr, "POST", "/v1/models/unload", "{\"name\": \"packed\"}");
+        assert_eq!(status, 200, "{json:?}");
+        assert_eq!(json.get("unloaded").and_then(Json::as_bool), Some(true));
+        let final_snap = json.get("final").expect("final snapshot");
+        // The acceptance bar: after the drain the pool is fully free.
+        let kv = final_snap.get("kv_pool").expect("kv_pool");
+        assert_eq!(kv.get("reserved_pages").and_then(Json::as_usize), Some(0), "{json:?}");
+        assert_eq!(kv.get("in_use_pages").and_then(Json::as_usize), Some(0), "{json:?}");
+        assert_eq!(final_snap.get("in_flight").and_then(Json::as_usize), Some(0));
+        // The drained request streamed to completion.
+        let mut total = seen;
+        let mut finished = false;
+        while let Some(frame) = next_frame(&mut sse) {
+            if frame.get("done").and_then(Json::as_bool) == Some(true) {
+                assert_eq!(frame.get("finish_reason").and_then(Json::as_str), Some("max_new"));
+                finished = true;
+                break;
+            }
+            if frame.get("token").is_some() {
+                total += 1;
+            }
+        }
+        assert!(finished, "drained stream must end with a done frame");
+        assert_eq!(total, 16, "drain must let the in-flight request finish its budget");
+
+        // The unloaded model is gone; the default keeps serving; a second
+        // unload is a 404.
+        let (status, _) =
+            oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [1], \"model\": \"packed\"}");
+        assert_eq!(status, 404);
+        let (status, json) =
+            oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [1, 2], \"max_new\": 3}");
+        assert_eq!(status, 200);
+        assert_eq!(
+            json.get("tokens").and_then(Json::as_arr).map(|a| a.len()),
+            Some(3),
+            "{json:?}"
+        );
+        let (status, _) = oneshot(addr, "POST", "/v1/models/unload", "{\"name\": \"packed\"}");
+        assert_eq!(status, 404);
+
+        gateway.shutdown();
+        std::fs::remove_file(path).ok();
+    });
+}
+
+#[test]
+fn gateway_metrics_report_per_model_and_default_compat() {
+    with_watchdog(120, || {
+        let path = "/tmp/nanoquant_it_gateway_metrics_model.nqck";
+        save_packed_model(path, &quantized_zoo_model(31)).unwrap();
+        let gateway = Gateway::start(
+            dense_tiny_engine(ServerConfig::default()),
+            GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+        )
+        .expect("gateway must bind");
+        let addr = gateway.local_addr();
+        let body = format!("{{\"name\": \"b\", \"path\": {path:?}}}");
+        let (status, _) = oneshot(addr, "POST", "/v1/models/load", &body);
+        assert_eq!(status, 200);
+        // Generate on each model.
+        let (status, _) =
+            oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [1], \"max_new\": 2}");
+        assert_eq!(status, 200);
+        let (status, _) = oneshot(
+            addr,
+            "POST",
+            "/v1/generate",
+            "{\"prompt\": [1], \"max_new\": 5, \"model\": \"b\"}",
+        );
+        assert_eq!(status, 200);
+        let (status, metrics) = oneshot(addr, "GET", "/v1/metrics", "");
+        assert_eq!(status, 200);
+        // Top level stays wire-compatible with the single-model gateway:
+        // it is the default model's snapshot.
+        assert_eq!(metrics.get("total_tokens").and_then(Json::as_usize), Some(2), "{metrics:?}");
+        assert!(metrics.get("kv_pool").is_some());
+        // And the per-model map carries both engines' counters.
+        let models = metrics.get("models").expect("models map");
+        let b = models.get("b").unwrap_or_else(|| panic!("missing model b: {metrics:?}"));
+        assert_eq!(b.get("total_tokens").and_then(Json::as_usize), Some(5));
+        assert_eq!(
+            models.get("default").and_then(|m| m.get("total_tokens")).and_then(Json::as_usize),
+            Some(2)
+        );
+        gateway.shutdown();
+        std::fs::remove_file(path).ok();
+    });
+}
