@@ -1,7 +1,11 @@
 //! `cargo bench` — end-to-end loopback latency through the HTTP gateway:
 //! TTFT and per-token gap as a real TCP client sees them, plus the
 //! engine-reported TTFT from the final SSE frame so the wire/plumbing
-//! overhead is isolated from model time.
+//! overhead is isolated from model time. A final overload section drives
+//! the open-loop synthetic traffic generator at ~2.5× the calibrated
+//! capacity (heavy-tailed lengths, tenant/class mixes, a disconnect
+//! storm) against a small-queue gateway and records goodput, shed rate
+//! and per-class TTFT percentiles — graceful degradation, measured.
 //!
 //! Results land in `BENCH_gateway.json` at the repository root
 //! (machine-readable, overwritten per run), same trajectory convention as
@@ -10,8 +14,9 @@
 use nanoquant::nn::decode::dense_decode_model;
 use nanoquant::nn::family_config;
 use nanoquant::nn::model::ModelParams;
+use nanoquant::serve::http::traffic::{run_traffic, TrafficConfig};
 use nanoquant::serve::http::{Gateway, GatewayConfig};
-use nanoquant::serve::{Engine, ServerConfig};
+use nanoquant::serve::{Engine, ServerConfig, SloClass};
 use nanoquant::util::json::{write_json, Json};
 use nanoquant::util::rng::Rng;
 use nanoquant::util::timer::stats_from;
@@ -80,6 +85,70 @@ fn main() {
     let full = stats_from("gateway full-response wall", &full_walls);
     println!("{full}");
 
+    // ---- Overload: open-loop Poisson traffic at ~2.5× the calibrated
+    // capacity against a deliberately small admission queue. Capacity is
+    // estimated from the serial SSE wall time times the batch width.
+    const OVERLOAD_QUEUE_CAP: usize = 8;
+    let capacity_rps = 4.0 / sse_wall.mean_s.max(1e-6);
+    let offered_rps = 2.5 * capacity_rps;
+    let overload_engine = Engine::new(
+        dense_decode_model(&params),
+        ServerConfig { max_batch: 4, seed: 0, queue_cap: OVERLOAD_QUEUE_CAP, ..Default::default() },
+    );
+    let overload_gw = Gateway::start(
+        overload_engine,
+        GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .expect("bind overload gateway");
+    let overload_addr = overload_gw.local_addr();
+    let tcfg = TrafficConfig {
+        seed: 7,
+        requests: 160,
+        rate_rps: offered_rps,
+        disconnect_frac: 0.1,
+        ..Default::default()
+    };
+    let report = run_traffic(overload_addr, &tcfg);
+    println!(
+        "overload: offered {:.1} rps vs capacity ~{:.1} rps -> shed rate {:.2}, \
+         goodput {:.1} tok/s over {:.1}s",
+        offered_rps, capacity_rps, report.shed_rate, report.goodput_tok_s, report.wall_s
+    );
+    for class in SloClass::ALL {
+        let c = &report.per_class[class.index()];
+        println!(
+            "  {:<12} sent {:>3}  ok {:>3}  shed {:>3}  expired {:>3}  rejected {:>3}  \
+             dropped {:>3}  ttft p50 {:.3}s p99 {:.3}s",
+            class.as_str(),
+            c.sent,
+            c.ok,
+            c.shed,
+            c.expired,
+            c.rejected,
+            c.disconnected,
+            c.ttft_p50_s,
+            c.ttft_p99_s
+        );
+    }
+    // The pool must come all the way back after the storm: disconnect
+    // cancels land at tick boundaries, so poll briefly.
+    let mut reserved_after = usize::MAX;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while Instant::now() < deadline {
+        let m = metrics_once(overload_addr);
+        reserved_after = m
+            .get("kv_pool")
+            .and_then(|p| p.get("reserved_pages"))
+            .and_then(Json::as_usize)
+            .unwrap_or(usize::MAX);
+        if reserved_after == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("overload: reserved pages after drain: {reserved_after}");
+    overload_gw.shutdown();
+
     let doc = Json::obj()
         .set("bench", "gateway")
         .set("model", cfg.name.as_str())
@@ -102,6 +171,16 @@ fn main() {
                 .set(
                     "full_response",
                     Json::obj().set("mean_wall_s", full.mean_s).set("p50_wall_s", full.p50_s),
+                )
+                .set(
+                    "overload",
+                    report
+                        .to_json()
+                        .set("offered_rps", offered_rps)
+                        .set("capacity_est_rps", capacity_rps)
+                        .set("queue_cap", OVERLOAD_QUEUE_CAP)
+                        .set("disconnect_frac", tcfg.disconnect_frac)
+                        .set("reserved_pages_after", reserved_after),
                 ),
         );
     match write_json(OUT_PATH, &doc) {
@@ -180,6 +259,16 @@ fn sse_once(addr: SocketAddr, body: &str) -> StreamMeasure {
     }
     let mean_gap_s = if gaps.is_empty() { 0.0 } else { gaps.iter().sum::<f64>() / gaps.len() as f64 };
     StreamMeasure { wire_ttft_s, mean_gap_s, engine_ttft_s, wall_s: t0.elapsed().as_secs_f64(), tokens }
+}
+
+fn metrics_once(addr: SocketAddr) -> Json {
+    let mut stream = connect(addr);
+    write!(stream, "GET /v1/metrics HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n")
+        .expect("request write");
+    let mut raw = String::new();
+    BufReader::new(stream).read_to_string(&mut raw).expect("metrics response");
+    let json_start = raw.find("\r\n\r\n").expect("header/body split") + 4;
+    Json::parse(&raw[json_start..]).expect("metrics JSON")
 }
 
 fn full_once(addr: SocketAddr, body: &str) -> usize {

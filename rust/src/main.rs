@@ -7,8 +7,9 @@
 //!   pack    --family --size --bpw --out m.nqck   quantize + write a packed NANOQCK2 serving artifact
 //!   inspect <path>              print a checkpoint/artifact header, tensor table, CRC status
 //!   eval    --family --size [--bpw]      perplexity + zero-shot
-//!   serve   --family --size [--stream] [--stop-tokens a,b]   event-loop serving demo
-//!   gateway --addr 127.0.0.1:8080 [--models a=a.nqck,b=b.nqck] [--kv-pages N]   multi-model HTTP/SSE gateway
+//!   serve   --family --size [--stream] [--stop-tokens a,b] [--queue-cap N]   event-loop serving demo
+//!   gateway --addr 127.0.0.1:8080 [--models a=a.nqck,b=b.nqck] [--kv-pages N]
+//!           [--queue-cap N] [--tenant-inflight N]   multi-model HTTP/SSE gateway
 //!   exp <id>                    regenerate a paper table/figure (or `all`)
 //!   artifacts-check [--golden tests/golden/tiny.nqck]   verify the golden NANOQCK2 fixture (+ PJRT artifacts)
 //!   size    --bpw               Appendix-F model-size calculator
@@ -227,6 +228,7 @@ fn cmd_serve(args: &Args) {
             prefill_chunk: args.get_usize("prefill-chunk", 8),
             kv_pages: args.get_usize_opt("kv-pages"),
             seed: args.get_u64("seed", 0),
+            queue_cap: args.get_usize("queue-cap", nanoquant::serve::DEFAULT_QUEUE_CAP),
             ..Default::default()
         },
     );
@@ -284,6 +286,7 @@ fn cmd_gateway(args: &Args) {
         prefill_chunk: args.get_usize("prefill-chunk", 8),
         kv_pages: args.get_usize_opt("kv-pages"),
         seed: args.get_u64("seed", 0),
+        queue_cap: args.get_usize("queue-cap", nanoquant::serve::DEFAULT_QUEUE_CAP),
         ..Default::default()
     };
     let backing = if args.flag("heap") { Backing::Heap } else { Backing::Mmap };
@@ -328,10 +331,13 @@ fn cmd_gateway(args: &Args) {
     } else {
         served[0].clone()
     };
+    let default_gcfg = GatewayConfig::default();
     let cfg = GatewayConfig {
         addr: args.get_or("addr", "127.0.0.1:8080").to_string(),
         default_model_name: default_name.clone(),
-        ..Default::default()
+        tenant_max_inflight: args
+            .get_usize("tenant-inflight", default_gcfg.tenant_max_inflight),
+        ..default_gcfg
     };
     let gateway = match Gateway::start_with_router(router, cfg) {
         Ok(g) => g,
@@ -342,14 +348,16 @@ fn cmd_gateway(args: &Args) {
     };
     let addr = gateway.local_addr();
     println!("gateway listening on http://{addr}  (default model: {default_name})");
-    println!("  POST /v1/generate            full JSON response ('model' field routes)");
+    println!("  POST /v1/generate            full JSON response ('model' field routes;");
+    println!("                               'tenant'/'priority'/'deadline_ms' shape admission)");
     println!("  POST /v1/generate?stream=1   SSE: one data: frame per token");
     println!("  POST /v1/cancel/<id>         cancel at the next engine tick");
+    println!("  POST /v1/drain               refuse new work, finish everything in flight");
     println!("  GET  /v1/models              serving slots + registry");
     println!("  POST /v1/models/load         {{\"name\": ..., \"path\": \"m.nqck\"}}");
     println!("  POST /v1/models/unload       {{\"name\": ...}} (drains first)");
-    println!("  GET  /v1/metrics             lifetime metrics + KV pool occupancy");
-    println!("  GET  /healthz                liveness");
+    println!("  GET  /v1/metrics             lifetime metrics, queue depths, per-tenant stats");
+    println!("  GET  /healthz                liveness + per-model shed/degraded state");
     println!("try: curl -N -X POST 'http://{addr}/v1/generate?stream=1' \\");
     println!("          -d '{{\"prompt\": \"the robin is a kind of\", \"max_new\": 16}}'");
     // Serve until the process is killed (Ctrl-C).

@@ -81,10 +81,32 @@ impl std::fmt::Display for BridgeClosed {
     }
 }
 
+/// Why a submit was refused. Distinguishing drain from death matters at the
+/// HTTP edge: `Draining` maps to a retryable 503 (`Retry-After` set, the
+/// request can go to another replica), while `Closed` means this bridge
+/// will never take work again.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The engine thread has exited; no further commands will be served.
+    Closed,
+    /// The engine is draining: it finishes in-flight work but admits
+    /// nothing new.
+    Draining,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => write!(f, "engine thread has shut down"),
+            SubmitError::Draining => write!(f, "engine is draining; not accepting new requests"),
+        }
+    }
+}
+
 enum Command {
     Submit {
         req: Request,
-        reply: Sender<(RequestId, Receiver<StreamEvent>)>,
+        reply: Sender<Result<(RequestId, Receiver<StreamEvent>), SubmitError>>,
     },
     Cancel(RequestId),
     Metrics {
@@ -112,10 +134,14 @@ impl EngineHandle {
     /// stream. The caller's `req.id` is overwritten: the bridge owns id
     /// assignment (monotonic, never reused) so one handler's cancel can
     /// never land on another connection's request.
-    pub fn submit(&self, req: Request) -> Result<(RequestId, Receiver<StreamEvent>), BridgeClosed> {
+    ///
+    /// `Err(SubmitError::Draining)` when a drain is in progress (the
+    /// engine is finishing in-flight work but admits nothing new);
+    /// `Err(SubmitError::Closed)` when the engine thread has exited.
+    pub fn submit(&self, req: Request) -> Result<(RequestId, Receiver<StreamEvent>), SubmitError> {
         let (reply, reply_rx) = channel();
-        self.tx.send(Command::Submit { req, reply }).map_err(|_| BridgeClosed)?;
-        reply_rx.recv().map_err(|_| BridgeClosed)
+        self.tx.send(Command::Submit { req, reply }).map_err(|_| SubmitError::Closed)?;
+        reply_rx.recv().map_err(|_| SubmitError::Closed)?
     }
 
     /// Request cancellation; takes effect at the engine's next tick
@@ -248,8 +274,9 @@ fn handle_command(
     match cmd {
         Command::Submit { mut req, reply } => {
             if !draining.is_empty() {
-                // Draining: reject by dropping the reply channel — the
-                // submitter's recv errors out as BridgeClosed.
+                // Draining: explicit refusal so the gateway can answer 503
+                // with Retry-After instead of a generic closed error.
+                let _ = reply.send(Err(SubmitError::Draining));
                 return true;
             }
             req.id = *next_id;
@@ -259,7 +286,7 @@ fn handle_command(
             subscribers.insert(id, ev_tx);
             // A dropped reply receiver means the handler died between send
             // and recv; the first event send will fail and auto-cancel.
-            let _ = reply.send((id, ev_rx));
+            let _ = reply.send(Ok((id, ev_rx)));
             true
         }
         Command::Cancel(id) => {
@@ -470,6 +497,41 @@ mod tests {
         // Post-drain, the bridge is closed for everything.
         assert!(handle.submit(Request::greedy(0, vec![1], 1)).is_err());
         assert!(handle.metrics().is_err());
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn submit_during_drain_is_refused_as_draining_then_closed() {
+        let (handle, join) = start(tiny_engine(ServerConfig::default()));
+        // A long-running request keeps the drain in progress while we probe.
+        let (_, events) = handle.submit(Request::greedy(0, vec![1, 2, 3], 500)).unwrap();
+        let drainer = {
+            let h = handle.clone();
+            std::thread::spawn(move || h.drain().unwrap())
+        };
+        // Probe until the Drain command has landed: submits flip from Ok
+        // (raced in ahead of it) to an explicit Draining refusal.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match handle.submit(Request::greedy(0, vec![9], 1)) {
+                Err(SubmitError::Draining) => break,
+                Ok(_) => {}
+                Err(SubmitError::Closed) => panic!("bridge closed while still draining"),
+            }
+            assert!(Instant::now() < deadline, "drain command never observed");
+            std::thread::yield_now();
+        }
+        // Dropping the subscriber cancels the long request, so the drain
+        // completes without generating all 500 tokens.
+        drop(events);
+        let snap = drainer.join().unwrap();
+        assert_eq!(snap.in_flight, 0);
+        assert_eq!(snap.reserved_pages, 0);
+        // Post-drain the thread has exited: submits now report Closed.
+        assert_eq!(
+            handle.submit(Request::greedy(0, vec![1], 1)).unwrap_err(),
+            SubmitError::Closed
+        );
         join.join().unwrap();
     }
 

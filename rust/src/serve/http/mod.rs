@@ -18,6 +18,9 @@
 //! - [`server`] — the network side: the accept loop, connection handlers
 //!   on the blocking-task pool, routing, and [`Gateway`] lifecycle
 //!   (bind/serve/graceful shutdown).
+//! - [`traffic`] — an open-loop synthetic traffic generator (Poisson
+//!   arrivals, heavy-tailed lengths, tenant/class mixes, disconnect
+//!   storms) used by `benches/gateway.rs` and the overload smoke tests.
 //!
 //! Quickstart (`cargo run --release -- gateway --addr 127.0.0.1:8080`):
 //!
@@ -36,14 +39,22 @@
 //! disconnect storm leaves the pool fully free. See `DESIGN.md` §HTTP
 //! gateway for the full threading diagram.
 //!
+//! Overload contract: requests carry `tenant` / `priority` / `deadline_ms`;
+//! the engine sheds on bounded-queue overflow and queued-deadline expiry,
+//! and the gateway maps those to 429/503 with `Retry-After` plus a
+//! machine-readable `"reason"`. `POST /v1/drain` starts a gateway-wide
+//! graceful drain. See `DESIGN.md` §Admission control.
+//!
 //! [`Engine`]: crate::serve::Engine
 
 pub mod bridge;
 pub mod protocol;
 pub mod router;
 pub mod server;
+pub mod traffic;
 
-pub use bridge::{BridgeClosed, EngineHandle, GatewaySnapshot, StreamEvent};
+pub use bridge::{BridgeClosed, EngineHandle, GatewaySnapshot, StreamEvent, SubmitError};
 pub use protocol::{HttpLimits, HttpRequest, SseWriter};
 pub use router::{ModelRouter, RouteError};
 pub use server::{Gateway, GatewayConfig};
+pub use traffic::{ClassReport, TrafficConfig, TrafficReport};

@@ -226,6 +226,7 @@ fn reason(status: u16) -> &'static str {
         405 => "Method Not Allowed",
         409 => "Conflict",
         413 => "Payload Too Large",
+        429 => "Too Many Requests",
         431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
@@ -241,11 +242,28 @@ pub fn write_response<W: Write>(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_with(w, status, content_type, &[], body, keep_alive)
+}
+
+/// [`write_response`] with extra response headers (e.g. `Retry-After` on a
+/// 429/503 reject). Extra headers go right after the status line; callers
+/// must not pass framing headers (`Content-Length`, `Connection`,
+/// `Content-Type`) — those are always written by this function.
+pub fn write_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
+    for (name, value) in extra_headers {
+        write!(w, "{name}: {value}\r\n")?;
+    }
     write!(
         w,
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
-        status,
-        reason(status),
+        "Content-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
         content_type,
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
@@ -262,6 +280,24 @@ pub fn write_json_response<W: Write>(
     keep_alive: bool,
 ) -> std::io::Result<()> {
     write_response(w, status, "application/json", body.to_string().as_bytes(), keep_alive)
+}
+
+/// [`write_json_response`] with extra response headers.
+pub fn write_json_response_with<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra_headers: &[(&str, String)],
+    body: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write_response_with(
+        w,
+        status,
+        "application/json",
+        extra_headers,
+        body.to_string().as_bytes(),
+        keep_alive,
+    )
 }
 
 /// Server-sent-events writer: the response head up front, then one
@@ -391,6 +427,23 @@ mod tests {
         assert!(text.contains("Content-Length: 11\r\n"));
         assert!(text.contains("Connection: keep-alive\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+    }
+
+    #[test]
+    fn extra_headers_precede_framing_headers() {
+        let mut out = Vec::new();
+        write_json_response_with(
+            &mut out,
+            429,
+            &[("Retry-After", "1".to_string())],
+            &Json::obj().set("error", "shed"),
+            false,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\nRetry-After: 1\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("{\"error\":\"shed\"}"));
     }
 
     #[test]

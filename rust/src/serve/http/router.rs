@@ -39,6 +39,8 @@ pub enum RouteError {
     AlreadyServing(String),
     /// The target engine's bridge has shut down (503).
     Closed,
+    /// The gateway is draining: no new models, no new requests (503).
+    Draining,
     /// Artifact load failure — bad path, bad CRC, wrong kind (400).
     Io(std::io::Error),
 }
@@ -49,6 +51,7 @@ impl std::fmt::Display for RouteError {
             RouteError::NoSuchModel(name) => write!(f, "no such model: {name}"),
             RouteError::AlreadyServing(name) => write!(f, "model {name} is already serving"),
             RouteError::Closed => write!(f, "engine has shut down"),
+            RouteError::Draining => write!(f, "gateway is draining; not accepting new work"),
             RouteError::Io(e) => write!(f, "artifact load failed: {e}"),
         }
     }
@@ -67,6 +70,11 @@ struct ModelSlot {
 struct RouterState {
     slots: HashMap<String, ModelSlot>,
     default_model: Option<String>,
+    /// Set (irreversibly) by [`ModelRouter::drain_all`]: new installs,
+    /// loads and generates are refused while in-flight work finishes.
+    /// Deliberately NOT consulted by `resolve` — cancels and metrics must
+    /// keep working against live slots during the drain.
+    draining: bool,
 }
 
 /// The name → engine table plus the model registry. One per gateway;
@@ -84,7 +92,11 @@ impl ModelRouter {
         ModelRouter {
             store,
             scfg,
-            state: Mutex::new(RouterState { slots: HashMap::new(), default_model: None }),
+            state: Mutex::new(RouterState {
+                slots: HashMap::new(),
+                default_model: None,
+                draining: false,
+            }),
         }
     }
 
@@ -111,6 +123,9 @@ impl ModelRouter {
         let weight_bytes = engine.model.weight_bytes();
         let mapped = pin.as_ref().is_some_and(ModelHandle::mapped);
         let mut state = self.state.lock().unwrap();
+        if state.draining {
+            return Err(RouteError::Draining);
+        }
         if state.slots.contains_key(name) {
             return Err(RouteError::AlreadyServing(name.to_string()));
         }
@@ -137,8 +152,14 @@ impl ModelRouter {
         // Fast reject before paying for the artifact read; the install
         // below re-checks under the lock (a racing load of the same name
         // turns into AlreadyServing there).
-        if self.state.lock().unwrap().slots.contains_key(name) {
-            return Err(RouteError::AlreadyServing(name.to_string()));
+        {
+            let state = self.state.lock().unwrap();
+            if state.draining {
+                return Err(RouteError::Draining);
+            }
+            if state.slots.contains_key(name) {
+                return Err(RouteError::AlreadyServing(name.to_string()));
+            }
         }
         let pin = self.store.load(name, path, backing).map_err(RouteError::Io)?;
         let engine = Engine::shared(pin.model().clone(), scfg);
@@ -293,6 +314,91 @@ impl ModelRouter {
         top
     }
 
+    /// Whether a gateway-wide drain has started.
+    pub fn draining(&self) -> bool {
+        self.state.lock().unwrap().draining
+    }
+
+    /// Graceful gateway-wide drain: irreversibly refuse new admissions
+    /// (installs, loads and generates), then drain every routed engine —
+    /// each finishes its in-flight requests and streams them out normally
+    /// before its bridge exits. Returns per-model final snapshots; a
+    /// bridge that already died reports `"state": "closed"`. Slots stay in
+    /// the table afterwards so metrics/cancel endpoints keep answering
+    /// (their bridges are gone, so they degrade to closed).
+    pub fn drain_all(&self) -> Json {
+        let mut slots: Vec<(String, EngineHandle)> = {
+            let mut state = self.state.lock().unwrap();
+            state.draining = true;
+            state.slots.iter().map(|(n, s)| (n.clone(), s.handle.clone())).collect()
+        };
+        // Outside the lock: drains run as long as the longest in-flight
+        // generation, and metrics must stay reachable meanwhile.
+        slots.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut models = Json::obj();
+        for (name, handle) in slots {
+            match handle.drain() {
+                Ok(snap) => models.insert(
+                    &name,
+                    Json::obj()
+                        .set("in_flight", snap.in_flight)
+                        .set("reserved_pages", snap.reserved_pages)
+                        .set("total_tokens", snap.serve.total_tokens),
+                ),
+                Err(_) => models.insert(&name, Json::obj().set("state", "closed")),
+            }
+        }
+        Json::obj().set("draining", true).set("models", models)
+    }
+
+    /// The `GET /healthz` payload. `status` is `"ok"`, `"degraded"` (some
+    /// model is shedding — its queue is at capacity, so the next arrival
+    /// would be dropped — or its bridge died), or `"draining"`. Per-model
+    /// entries carry the overload counters a load balancer needs to route
+    /// around a hot replica.
+    pub fn health_json(&self) -> Json {
+        let (mut slots, draining) = {
+            let state = self.state.lock().unwrap();
+            let slots: Vec<(String, EngineHandle)> =
+                state.slots.iter().map(|(n, s)| (n.clone(), s.handle.clone())).collect();
+            (slots, state.draining)
+        };
+        slots.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut models = Json::obj();
+        let mut all_ok = true;
+        for (name, handle) in slots {
+            match handle.metrics() {
+                Ok(snap) => {
+                    let depth: usize = snap.serve.queue_depth_per_class.iter().sum();
+                    let shedding = depth >= snap.serve.queue_cap;
+                    all_ok &= !shedding;
+                    models.insert(
+                        &name,
+                        Json::obj()
+                            .set("status", if shedding { "degraded" } else { "ok" })
+                            .set("queue_depth", depth)
+                            .set("queue_cap", snap.serve.queue_cap)
+                            .set("shed", snap.serve.shed)
+                            .set("deadline_expired", snap.serve.deadline_expired)
+                            .set("in_flight", snap.in_flight),
+                    );
+                }
+                Err(_) => {
+                    all_ok = false;
+                    models.insert(&name, Json::obj().set("status", "closed"));
+                }
+            }
+        }
+        let status = if draining {
+            "draining"
+        } else if all_ok {
+            "ok"
+        } else {
+            "degraded"
+        };
+        Json::obj().set("ok", !draining && all_ok).set("status", status).set("models", models)
+    }
+
     /// Hard-stop every engine (in-flight work abandoned) and join the
     /// bridge threads. Gateway shutdown path.
     pub fn shutdown(&self) {
@@ -369,6 +475,38 @@ mod tests {
         assert_eq!(tokens.len(), 4);
         assert!(r.default_name().is_none());
         assert!(matches!(r.unload("only"), Err(RouteError::NoSuchModel(_))));
+        r.shutdown();
+    }
+
+    #[test]
+    fn drain_all_finishes_work_refuses_new_models_and_reports_draining_health() {
+        let r = router();
+        r.install("a", tiny_engine(), None, true).unwrap();
+        r.install("b", tiny_engine(), None, false).unwrap();
+        let health = r.health_json();
+        assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+        let handle = r.resolve(Some("a")).unwrap();
+        let (_, events) = handle.submit(Request::greedy(0, vec![1, 2], 4)).unwrap();
+        let report = r.drain_all();
+        assert!(r.draining());
+        // Both models drained to a fully-free pool; the in-flight request
+        // on "a" ran to completion first.
+        for model in ["a", "b"] {
+            let m = report.get("models").and_then(|ms| ms.get(model)).unwrap();
+            assert_eq!(m.get("reserved_pages").and_then(Json::as_usize), Some(0));
+            assert_eq!(m.get("in_flight").and_then(Json::as_usize), Some(0));
+        }
+        let tokens = events
+            .iter()
+            .filter(|ev| matches!(ev, super::super::bridge::StreamEvent::Token(_)))
+            .count();
+        assert_eq!(tokens, 4);
+        // Draining is sticky: no new models, health says draining.
+        assert!(matches!(r.install("c", tiny_engine(), None, false), Err(RouteError::Draining)));
+        let health = r.health_json();
+        assert_eq!(health.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(health.get("status").and_then(Json::as_str), Some("draining"));
         r.shutdown();
     }
 }

@@ -17,8 +17,17 @@
 //! | `GET` | `/v1/models` | serving slots + registry occupancy |
 //! | `POST` | `/v1/models/load` | hot-load a `.nqck` artifact and serve it (own engine + KV pool) |
 //! | `POST` | `/v1/models/unload` | stop routing, drain in-flight work, drop the weights |
+//! | `POST` | `/v1/drain` | gateway-wide graceful drain: refuse new admissions, finish in-flight work on every model |
 //! | `GET` | `/v1/metrics` | lifetime [`ServeMetrics`] + KV-pool occupancy (default model at the top level, all models under `models`) |
-//! | `GET` | `/healthz` | liveness |
+//! | `GET` | `/healthz` | liveness + per-model overload state (`degraded` while shedding, 503 while draining) |
+//!
+//! Overload behavior: the generate body accepts `tenant`, `priority`
+//! (`interactive` | `batch` | `best_effort`) and `deadline_ms`; rejects
+//! carry a machine-readable `"reason"` (`shed`, `deadline_exceeded`,
+//! `tenant_cap`, `draining`, `closed`) and a `Retry-After` header on
+//! 429/503 so clients know to back off. Per-tenant in-flight caps are
+//! charged here at the gateway edge ([`GatewayConfig::tenant_max_inflight`])
+//! before a request ever reaches the bridge.
 //!
 //! A client disconnect mid-stream surfaces as a frame-write failure; the
 //! handler translates it into [`EngineHandle::cancel`], releasing the slot
@@ -27,18 +36,21 @@
 //!
 //! [`ServeMetrics`]: crate::serve::ServeMetrics
 
-use super::bridge::{EngineHandle, StreamEvent};
+use super::bridge::{EngineHandle, StreamEvent, SubmitError};
 use super::protocol::{self, HttpError, HttpLimits, HttpRequest, SseWriter};
 use super::router::{ModelRouter, RouteError};
 use crate::data::tokenize;
 use crate::model::{Backing, ModelStore, StoreConfig};
-use crate::serve::{Engine, FinishReason, Request, RequestId, Response, ServerConfig};
+use crate::serve::{
+    Engine, FinishReason, Request, RequestId, Response, ServerConfig, SloClass, DEFAULT_TENANT,
+};
 use crate::util::json::{Json, ParseLimits};
 use crate::util::threadpool::spawn_task;
+use std::collections::HashMap;
 use std::io::{BufReader, ErrorKind};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -61,6 +73,10 @@ pub struct GatewayConfig {
     /// Name [`Gateway::start`] registers its engine under (requests
     /// without a `model` field route here).
     pub default_model_name: String,
+    /// Per-tenant in-flight cap, charged at the gateway edge before the
+    /// bridge: a tenant with this many generates outstanding gets 429
+    /// (`"reason": "tenant_cap"`) until one finishes. `0` = unlimited.
+    pub tenant_max_inflight: usize,
 }
 
 impl Default for GatewayConfig {
@@ -71,6 +87,65 @@ impl Default for GatewayConfig {
             max_max_new: 1024,
             request_read_timeout: Duration::from_secs(10),
             default_model_name: "default".into(),
+            tenant_max_inflight: 64,
+        }
+    }
+}
+
+/// Seconds clients should wait before retrying a 429/503 reject. One
+/// value for every reject kind: queue pressure here drains in engine
+/// ticks (milliseconds-to-seconds), so a constant small backoff beats
+/// pretending to predict the queue.
+const RETRY_AFTER_S: u64 = 1;
+
+/// Gateway-edge per-tenant in-flight accounting. Lives outside the engine
+/// on purpose: a tenant at its cap is turned away before consuming a
+/// bridge round-trip or a queue slot, and the cap spans every model the
+/// gateway routes (the engine-side DRR fairness is per-model).
+struct TenantGate {
+    cap: usize,
+    counts: Mutex<HashMap<String, usize>>,
+}
+
+impl TenantGate {
+    fn new(cap: usize) -> TenantGate {
+        TenantGate { cap, counts: Mutex::new(HashMap::new()) }
+    }
+
+    /// Charge one in-flight request to `tenant`. `None` = at the cap —
+    /// the caller answers 429 and charges nothing.
+    fn acquire(self: &Arc<Self>, tenant: &str) -> Option<TenantPermit> {
+        if self.cap > 0 {
+            let mut counts = self.counts.lock().unwrap();
+            let n = counts.entry(tenant.to_string()).or_insert(0);
+            if *n >= self.cap {
+                return None;
+            }
+            *n += 1;
+        }
+        Some(TenantPermit { gate: self.clone(), tenant: tenant.to_string() })
+    }
+}
+
+/// RAII release of one [`TenantGate`] charge — dropping the permit (on
+/// any exit path: response written, disconnect, panic unwind) frees the
+/// tenant's slot.
+struct TenantPermit {
+    gate: Arc<TenantGate>,
+    tenant: String,
+}
+
+impl Drop for TenantPermit {
+    fn drop(&mut self) {
+        if self.gate.cap == 0 {
+            return;
+        }
+        let mut counts = self.gate.counts.lock().unwrap();
+        if let Some(n) = counts.get_mut(&self.tenant) {
+            *n -= 1;
+            if *n == 0 {
+                counts.remove(&self.tenant);
+            }
         }
     }
 }
@@ -111,12 +186,13 @@ impl Gateway {
         let listener = TcpListener::bind(&cfg.addr)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(TenantGate::new(cfg.tenant_max_inflight));
         let accept = {
             let router = router.clone();
             let stop = stop.clone();
             let cfg = Arc::new(cfg);
             std::thread::Builder::new().name("nanoquant-accept".into()).spawn(move || {
-                accept_loop(listener, router, cfg, stop)
+                accept_loop(listener, router, cfg, stop, gate)
             })?
         };
         Ok(Gateway { addr, router, stop, accept: Some(accept) })
@@ -181,6 +257,7 @@ fn accept_loop(
     router: Arc<ModelRouter>,
     cfg: Arc<GatewayConfig>,
     stop: Arc<AtomicBool>,
+    gate: Arc<TenantGate>,
 ) {
     for conn in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
@@ -199,7 +276,8 @@ fn accept_loop(
         let router = router.clone();
         let cfg = cfg.clone();
         let stop = stop.clone();
-        spawn_task(move || handle_connection(stream, router, cfg, stop));
+        let gate = gate.clone();
+        spawn_task(move || handle_connection(stream, router, cfg, stop, gate));
     }
 }
 
@@ -211,6 +289,7 @@ fn handle_connection(
     router: Arc<ModelRouter>,
     cfg: Arc<GatewayConfig>,
     stop: Arc<AtomicBool>,
+    gate: Arc<TenantGate>,
 ) {
     // Token frames are tiny; Nagle would batch them across ticks.
     let _ = stream.set_nodelay(true);
@@ -263,7 +342,7 @@ fn handle_connection(
                 return;
             }
         };
-        match route(&req, &router, &mut reader, &cfg) {
+        match route(&req, &router, &mut reader, &cfg, &gate) {
             Ok(true) if req.wants_keep_alive() && !stop.load(Ordering::Relaxed) => continue,
             _ => return,
         }
@@ -272,6 +351,32 @@ fn handle_connection(
 
 fn err_json(msg: &str) -> Json {
     Json::obj().set("error", msg)
+}
+
+/// Error body with a machine-readable `"reason"` slug (`shed`,
+/// `deadline_exceeded`, `tenant_cap`, `draining`, `closed`) so clients can
+/// branch without parsing prose.
+fn err_reason(msg: &str, reason: &str) -> Json {
+    err_json(msg).set("reason", reason)
+}
+
+/// Overload/drain reject: status + `Retry-After` + reasoned error body.
+/// The framing stays intact, so `keep_alive` is honored — a client at its
+/// cap should back off, not reconnect.
+fn reject_backoff(
+    w: &mut TcpStream,
+    status: u16,
+    msg: &str,
+    reason: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    protocol::write_json_response_with(
+        w,
+        status,
+        &[("Retry-After", RETRY_AFTER_S.to_string())],
+        &err_reason(msg, reason),
+        keep_alive,
+    )
 }
 
 /// Lingering close: after rejecting a request whose bytes were not fully
@@ -302,6 +407,7 @@ fn route_error_status(err: &RouteError) -> u16 {
         RouteError::NoSuchModel(_) => 404,
         RouteError::AlreadyServing(_) => 409,
         RouteError::Closed => 503,
+        RouteError::Draining => 503,
         // A same-name/different-path load conflict is a 409 like any
         // other name collision; remaining load failures (missing file,
         // bad CRC, wrong kind) are the client's 400.
@@ -316,19 +422,32 @@ fn route(
     router: &Arc<ModelRouter>,
     reader: &mut BufReader<TcpStream>,
     cfg: &GatewayConfig,
+    gate: &Arc<TenantGate>,
 ) -> std::io::Result<bool> {
     let w = reader.get_mut();
     let ka = req.wants_keep_alive();
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
-            protocol::write_json_response(w, 200, &Json::obj().set("ok", true), ka)?;
+            // Health degrades per model while shedding is active and the
+            // whole endpoint goes 503 once a drain starts — load
+            // balancers stop sending work without a config push.
+            let health = router.health_json();
+            let status = if router.draining() { 503 } else { 200 };
+            protocol::write_json_response(w, status, &health, ka)?;
             Ok(true)
         }
         ("GET", "/v1/metrics") => {
             protocol::write_json_response(w, 200, &router.metrics_json(), ka)?;
             Ok(true)
         }
-        ("POST", "/v1/generate") => generate(req, router, w, cfg),
+        ("POST", "/v1/drain") => {
+            // Blocks until every routed engine has finished its in-flight
+            // work; new admissions are refused from the moment the drain
+            // flag is set (before the first engine drains).
+            protocol::write_json_response(w, 200, &router.drain_all(), ka)?;
+            Ok(true)
+        }
+        ("POST", "/v1/generate") => generate(req, router, w, cfg, gate),
         ("GET", "/v1/models") => {
             protocol::write_json_response(w, 200, &router.list_json(), ka)?;
             Ok(true)
@@ -392,6 +511,9 @@ struct GenerateSpec {
     stream: bool,
     /// Target model name (`None` routes to the default slot).
     model: Option<String>,
+    /// Tenant the request is charged to (mirrors `request.tenant`; kept
+    /// here so the gate can charge before the request is moved out).
+    tenant: String,
 }
 
 fn parse_generate_body(req: &HttpRequest, cfg: &GatewayConfig) -> Result<GenerateSpec, String> {
@@ -454,13 +576,39 @@ fn parse_generate_body(req: &HttpRequest, cfg: &GatewayConfig) -> Result<Generat
         Some(Json::Str(name)) => Some(name.clone()),
         Some(_) => return Err("model must be a string".into()),
     };
+    let tenant = match body.get("tenant") {
+        None => DEFAULT_TENANT.to_string(),
+        Some(Json::Str(s)) => {
+            let s = s.trim();
+            if s.is_empty() || s.len() > 64 {
+                return Err("tenant must be a non-empty string of at most 64 bytes".into());
+            }
+            s.to_string()
+        }
+        Some(_) => return Err("tenant must be a string".into()),
+    };
+    let priority = match body.get("priority") {
+        None => SloClass::default(),
+        Some(Json::Str(s)) => SloClass::parse(s)
+            .ok_or_else(|| format!("unknown priority {s:?} (interactive|batch|best_effort)"))?,
+        Some(_) => return Err("priority must be a string".into()),
+    };
+    let deadline_ms = match body.get("deadline_ms") {
+        None => None,
+        Some(v) => Some(non_negative_int(v).ok_or("deadline_ms must be a non-negative integer")?),
+    };
     // The id is overwritten by the bridge; 0 is a placeholder.
-    let request = Request::new(0, prompt)
+    let mut request = Request::new(0, prompt)
         .max_new(max_new)
         .temperature(temperature)
         .top_k(top_k)
-        .stop_tokens(stop_tokens);
-    Ok(GenerateSpec { request, stream, model })
+        .stop_tokens(stop_tokens)
+        .tenant(tenant.clone())
+        .priority(priority);
+    if let Some(ms) = deadline_ms {
+        request = request.deadline_ms(ms as u64);
+    }
+    Ok(GenerateSpec { request, stream, model, tenant })
 }
 
 fn non_negative_int(v: &Json) -> Option<usize> {
@@ -478,6 +626,7 @@ fn generate(
     router: &Arc<ModelRouter>,
     w: &mut TcpStream,
     cfg: &GatewayConfig,
+    gate: &Arc<TenantGate>,
 ) -> std::io::Result<bool> {
     let ka = req.wants_keep_alive();
     let spec = match parse_generate_body(req, cfg) {
@@ -487,6 +636,11 @@ fn generate(
             return Ok(true);
         }
     };
+    // Gateway-wide drain: turn work away before touching any bridge.
+    if router.draining() {
+        reject_backoff(w, 503, "gateway is draining; not accepting new work", "draining", ka)?;
+        return Ok(true);
+    }
     // Body `model` wins; `?model=` is the curl-friendly fallback.
     let model = spec.model.as_deref().or_else(|| req.query("model"));
     let handle = match router.resolve(model) {
@@ -497,11 +651,32 @@ fn generate(
             return Ok(true);
         }
     };
+    // Charge the tenant's in-flight cap at the edge. The permit's drop
+    // (any exit path below) releases the charge.
+    let Some(_permit) = gate.acquire(&spec.tenant) else {
+        let msg = format!("tenant {:?} is at its in-flight cap", spec.tenant);
+        reject_backoff(w, 429, &msg, "tenant_cap", ka)?;
+        return Ok(true);
+    };
     let stream = spec.stream || req.query("stream").is_some_and(|v| v == "1" || v == "true");
-    let Ok((id, events)) = handle.submit(spec.request) else {
-        // Resolved, then the engine went away (unload race / shutdown).
-        protocol::write_json_response(w, 503, &err_json("engine has shut down"), false)?;
-        return Ok(false);
+    let (id, events) = match handle.submit(spec.request) {
+        Ok(pair) => pair,
+        Err(SubmitError::Draining) => {
+            // Resolved, then this engine began draining (unload race).
+            let msg = "engine is draining; not accepting new requests";
+            reject_backoff(w, 503, msg, "draining", ka)?;
+            return Ok(true);
+        }
+        Err(SubmitError::Closed) => {
+            // Resolved, then the engine went away (unload race / shutdown).
+            protocol::write_json_response(
+                w,
+                503,
+                &err_reason("engine has shut down", "closed"),
+                false,
+            )?;
+            return Ok(false);
+        }
     };
     if stream {
         stream_sse(id, &events, &handle, w)
@@ -560,6 +735,12 @@ fn models_load(
         match v.as_f64().filter(|x| x.is_finite() && *x >= 1.0 && x.fract() == 0.0) {
             Some(x) => scfg.kv_pages = Some(x as usize),
             None => return reject(w, "kv_pages must be a positive integer"),
+        }
+    }
+    if let Some(v) = body.get("queue_cap") {
+        match v.as_f64().filter(|x| x.is_finite() && *x >= 1.0 && x.fract() == 0.0) {
+            Some(x) => scfg.queue_cap = x as usize,
+            None => return reject(w, "queue_cap must be a positive integer"),
         }
     }
     if let Some(v) = body.get("seed") {
@@ -635,6 +816,8 @@ fn reason_str(reason: FinishReason) -> &'static str {
         FinishReason::MaxNew => "max_new",
         FinishReason::Stop => "stop",
         FinishReason::Cancelled => "cancelled",
+        FinishReason::Shed => "shed",
+        FinishReason::DeadlineExceeded => "deadline_exceeded",
     }
 }
 
@@ -682,12 +865,22 @@ fn respond_full(
         match events.recv_timeout(IDLE_POLL) {
             Ok(StreamEvent::Finished { response, reason }) => {
                 debug_assert_eq!(response.id, id);
-                protocol::write_json_response(
-                    w,
-                    200,
-                    &response_json(&response, reason),
-                    keep_alive,
-                )?;
+                match reason {
+                    FinishReason::Shed => {
+                        let msg = "request shed: admission queue at capacity";
+                        reject_backoff(w, 429, msg, "shed", keep_alive)?;
+                    }
+                    FinishReason::DeadlineExceeded => {
+                        let msg = "deadline exceeded while queued";
+                        reject_backoff(w, 503, msg, "deadline_exceeded", keep_alive)?;
+                    }
+                    _ => protocol::write_json_response(
+                        w,
+                        200,
+                        &response_json(&response, reason),
+                        keep_alive,
+                    )?,
+                }
                 return Ok(true);
             }
             Ok(_) => continue,
@@ -711,12 +904,43 @@ fn respond_full(
 /// carries `finish_reason` plus the per-request timing metrics. A write
 /// failure is the disconnect-detection point: it becomes an engine cancel,
 /// releasing the slot and its whole page reservation.
+///
+/// The 200 SSE head is only committed after the first engine event: a
+/// request shed (or expired) straight out of the queue gets a real
+/// 429/503 with `Retry-After`, exactly like full-response mode. A request
+/// that was `Deferred` first has already committed the stream — if it
+/// then expires, the final frame carries `finish_reason:
+/// "deadline_exceeded"` in-band instead.
 fn stream_sse(
     id: RequestId,
     events: &std::sync::mpsc::Receiver<StreamEvent>,
     handle: &EngineHandle,
     w: &mut TcpStream,
 ) -> std::io::Result<bool> {
+    let first = match events.recv() {
+        Ok(ev) => ev,
+        Err(_) => {
+            // Engine thread gone before any event (gateway shutdown).
+            let body = err_reason("engine shut down mid-request", "closed");
+            protocol::write_json_response(w, 503, &body, false)?;
+            return Ok(false);
+        }
+    };
+    if let StreamEvent::Finished { reason, .. } = &first {
+        match reason {
+            FinishReason::Shed => {
+                let msg = "request shed: admission queue at capacity";
+                reject_backoff(w, 429, msg, "shed", false)?;
+                return Ok(false);
+            }
+            FinishReason::DeadlineExceeded => {
+                let msg = "deadline exceeded while queued";
+                reject_backoff(w, 503, msg, "deadline_exceeded", false)?;
+                return Ok(false);
+            }
+            _ => {}
+        }
+    }
     let mut sse = match SseWriter::start(w) {
         Ok(sse) => sse,
         Err(e) => {
@@ -726,8 +950,13 @@ fn stream_sse(
     };
     let mut disconnected = false;
     let mut index = 0usize;
+    let mut next = Some(first);
     loop {
-        match events.recv() {
+        let event = match next.take() {
+            Some(ev) => Ok(ev),
+            None => events.recv().map_err(|_| ()),
+        };
+        match event {
             Ok(StreamEvent::Started) => {
                 if sse.frame(&Json::obj().set("id", id).set("started", true)).is_err() {
                     disconnected = true;

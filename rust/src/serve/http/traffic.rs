@@ -1,0 +1,454 @@
+//! Open-loop synthetic traffic generator for overload validation.
+//!
+//! Open-loop means arrivals follow a fixed schedule (Poisson process at
+//! [`TrafficConfig::rate_rps`]) regardless of how the gateway is coping —
+//! exactly the regime where an unbounded FIFO melts down, and the one a
+//! closed-loop (wait-for-response) driver can never produce. Each arrival
+//! runs on its own thread: connect over loopback, `POST
+//! /v1/generate?stream=1`, then either consume the SSE stream to the end
+//! or — for a configured fraction — hang up right after the first token
+//! (the disconnect storm).
+//!
+//! Prompt and output lengths are heavy-tailed (bounded Pareto): most
+//! requests are short, a few are 10-50× longer, which is what makes
+//! per-tenant DRR fairness and class-priority admission observable at all.
+//! Everything is seeded — the same [`TrafficConfig`] replays the same
+//! arrival schedule, lengths and disconnect choices (wall-clock outcomes
+//! still vary with machine load; counts of *sent* work do not).
+//!
+//! Outcome classification is by HTTP status plus the machine-readable
+//! `"reason"` field the gateway puts in reject bodies: 200 → served (or
+//! `deadline_exceeded` in-band if the request deferred before expiring),
+//! 429 `shed` → shed, 503 `deadline_exceeded` → expired, anything else
+//! rejected. Per-class TTFT percentiles are measured client-side, from
+//! send to first token frame.
+
+use crate::serve::SloClass;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// One synthetic workload. All sampling is driven by `seed`.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    /// Master seed for arrivals, lengths, mixes and disconnect choices.
+    pub seed: u64,
+    /// Total requests to send.
+    pub requests: usize,
+    /// Mean arrival rate (requests/second) of the Poisson process.
+    pub rate_rps: f64,
+    /// Weighted tenant mix; sampled per request.
+    pub tenants: Vec<(String, f64)>,
+    /// Weighted SLO-class mix; sampled per request.
+    pub classes: Vec<(SloClass, f64)>,
+    /// Prompt length bounds (tokens); Pareto-tailed between them.
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    /// `max_new` bounds (tokens); Pareto-tailed between them.
+    pub max_new_min: usize,
+    pub max_new_max: usize,
+    /// Pareto tail index for both length distributions (smaller = heavier
+    /// tail; 1.5 is a classic heavy-tail choice).
+    pub tail_alpha: f64,
+    /// Fraction of requests that hang up right after their first token.
+    pub disconnect_frac: f64,
+    /// Queued-deadline (milliseconds) attached to every request, if any.
+    pub deadline_ms: Option<u64>,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> TrafficConfig {
+        TrafficConfig {
+            seed: 0,
+            requests: 64,
+            rate_rps: 50.0,
+            tenants: vec![("acme".into(), 3.0), ("zeta".into(), 1.0)],
+            classes: vec![
+                (SloClass::Interactive, 2.0),
+                (SloClass::Batch, 1.0),
+                (SloClass::BestEffort, 1.0),
+            ],
+            prompt_min: 4,
+            prompt_max: 64,
+            max_new_min: 2,
+            max_new_max: 32,
+            tail_alpha: 1.5,
+            disconnect_frac: 0.0,
+            deadline_ms: None,
+        }
+    }
+}
+
+/// Per-class outcome counts and client-side TTFT percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct ClassReport {
+    pub sent: usize,
+    /// Served to completion (SSE stream ended with a normal finish).
+    pub ok: usize,
+    /// 429 with `"reason": "shed"`.
+    pub shed: usize,
+    /// 503 `deadline_exceeded`, or the in-band equivalent mid-stream.
+    pub expired: usize,
+    /// Other rejects (tenant cap, draining, closed) and wire errors.
+    pub rejected: usize,
+    /// Deliberate mid-stream hangups (the disconnect storm).
+    pub disconnected: usize,
+    /// Tokens received across served + disconnected streams.
+    pub tokens: usize,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+}
+
+impl ClassReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("sent", self.sent)
+            .set("ok", self.ok)
+            .set("shed", self.shed)
+            .set("expired", self.expired)
+            .set("rejected", self.rejected)
+            .set("disconnected", self.disconnected)
+            .set("tokens", self.tokens)
+            .set("ttft_p50_s", self.ttft_p50_s)
+            .set("ttft_p99_s", self.ttft_p99_s)
+    }
+}
+
+/// Whole-run summary: wall time, goodput, shed rate, per-class breakdown.
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    pub wall_s: f64,
+    /// Tokens/second across requests served to completion.
+    pub goodput_tok_s: f64,
+    /// Shed requests / sent requests.
+    pub shed_rate: f64,
+    /// Keyed in [`SloClass::ALL`] order.
+    pub per_class: [ClassReport; 3],
+}
+
+impl TrafficReport {
+    pub fn to_json(&self) -> Json {
+        let mut classes = Json::obj();
+        for class in SloClass::ALL {
+            classes.insert(class.as_str(), self.per_class[class.index()].to_json());
+        }
+        Json::obj()
+            .set("wall_s", self.wall_s)
+            .set("goodput_tok_s", self.goodput_tok_s)
+            .set("shed_rate", self.shed_rate)
+            .set("classes", classes)
+    }
+
+    /// Total requests sent (all classes).
+    pub fn sent(&self) -> usize {
+        self.per_class.iter().map(|c| c.sent).sum()
+    }
+
+    /// Total shed (all classes).
+    pub fn shed(&self) -> usize {
+        self.per_class.iter().map(|c| c.shed).sum()
+    }
+}
+
+/// How one request ended, as observed by the client thread.
+enum Outcome {
+    Ok { tokens: usize, ttft_s: Option<f64> },
+    Shed,
+    Expired { tokens: usize, ttft_s: Option<f64> },
+    Rejected,
+    Disconnected { tokens: usize, ttft_s: Option<f64> },
+}
+
+/// Everything a request thread needs, sampled up front on the main thread
+/// so the workload is deterministic regardless of thread scheduling.
+struct Plan {
+    tenant: String,
+    class: SloClass,
+    prompt_len: usize,
+    max_new: usize,
+    disconnect: bool,
+}
+
+/// Bounded Pareto sample in `[min, max]`: heavy-tailed, mostly near `min`.
+fn pareto(rng: &mut Rng, min: usize, max: usize, alpha: f64) -> usize {
+    let min = min.max(1);
+    if max <= min {
+        return min;
+    }
+    let u = rng.uniform();
+    let x = min as f64 * (1.0 - u).powf(-1.0 / alpha);
+    (x as usize).clamp(min, max)
+}
+
+/// Run the workload against a live gateway. Blocks until every request
+/// thread has finished (served, rejected, or hung up).
+pub fn run_traffic(addr: SocketAddr, cfg: &TrafficConfig) -> TrafficReport {
+    assert!(cfg.rate_rps > 0.0, "rate_rps must be positive");
+    assert!(!cfg.tenants.is_empty() && !cfg.classes.is_empty());
+    let mut rng = Rng::new(cfg.seed);
+    let tenant_w: Vec<f64> = cfg.tenants.iter().map(|(_, w)| *w).collect();
+    let class_w: Vec<f64> = cfg.classes.iter().map(|(_, w)| *w).collect();
+
+    let start = Instant::now();
+    let mut next_arrival = 0.0f64;
+    let mut workers = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        // Exponential inter-arrival → Poisson process.
+        next_arrival += -(1.0 - rng.uniform()).ln() / cfg.rate_rps;
+        let plan = Plan {
+            tenant: cfg.tenants[rng.categorical(&tenant_w)].0.clone(),
+            class: cfg.classes[rng.categorical(&class_w)].0,
+            prompt_len: pareto(&mut rng, cfg.prompt_min, cfg.prompt_max, cfg.tail_alpha),
+            max_new: pareto(&mut rng, cfg.max_new_min, cfg.max_new_max, cfg.tail_alpha),
+            disconnect: rng.uniform() < cfg.disconnect_frac,
+        };
+        let mut prompt_rng = rng.split();
+        let deadline_ms = cfg.deadline_ms;
+        // Open loop: sleep to the scheduled arrival, never waiting on any
+        // in-flight response.
+        let due = start + Duration::from_secs_f64(next_arrival);
+        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        workers.push(std::thread::spawn(move || {
+            let class = plan.class;
+            (class, drive_request(addr, &plan, deadline_ms, &mut prompt_rng))
+        }));
+    }
+
+    let mut per_class: [ClassReport; 3] = Default::default();
+    let mut ttfts: [Vec<f64>; 3] = Default::default();
+    let mut goodput_tokens = 0usize;
+    for worker in workers {
+        let Ok((class, outcome)) = worker.join() else { continue };
+        let report = &mut per_class[class.index()];
+        report.sent += 1;
+        let ttft = match outcome {
+            Outcome::Ok { tokens, ttft_s } => {
+                report.ok += 1;
+                report.tokens += tokens;
+                goodput_tokens += tokens;
+                ttft_s
+            }
+            Outcome::Shed => {
+                report.shed += 1;
+                None
+            }
+            Outcome::Expired { tokens, ttft_s } => {
+                report.expired += 1;
+                report.tokens += tokens;
+                ttft_s
+            }
+            Outcome::Rejected => {
+                report.rejected += 1;
+                None
+            }
+            Outcome::Disconnected { tokens, ttft_s } => {
+                report.disconnected += 1;
+                report.tokens += tokens;
+                ttft_s
+            }
+        };
+        if let Some(t) = ttft {
+            ttfts[class.index()].push(t);
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    for class in SloClass::ALL {
+        let samples = &mut ttfts[class.index()];
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_class[class.index()].ttft_p50_s = percentile(samples, 0.50);
+        per_class[class.index()].ttft_p99_s = percentile(samples, 0.99);
+    }
+    let sent: usize = per_class.iter().map(|c| c.sent).sum();
+    let shed: usize = per_class.iter().map(|c| c.shed).sum();
+    TrafficReport {
+        wall_s,
+        goodput_tok_s: goodput_tokens as f64 / wall_s.max(1e-9),
+        shed_rate: if sent == 0 { 0.0 } else { shed as f64 / sent as f64 },
+        per_class,
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One request, client side: connect, POST as SSE, classify the outcome.
+/// Any wire failure degrades to `Rejected` — under deliberate overload a
+/// refused connection is backpressure too, and the harness must keep
+/// counting rather than panic.
+fn drive_request(
+    addr: SocketAddr,
+    plan: &Plan,
+    deadline_ms: Option<u64>,
+    rng: &mut Rng,
+) -> Outcome {
+    let Ok(stream) = TcpStream::connect(addr) else { return Outcome::Rejected };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(60)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
+
+    let prompt: Vec<Json> =
+        (0..plan.prompt_len).map(|_| Json::Num(rng.below(250) as f64)).collect();
+    let mut body = Json::obj()
+        .set("prompt", Json::Arr(prompt))
+        .set("max_new", plan.max_new)
+        .set("tenant", plan.tenant.as_str())
+        .set("priority", plan.class.as_str());
+    if let Some(ms) = deadline_ms {
+        body.insert("deadline_ms", ms as usize);
+    }
+    let payload = body.to_string();
+
+    let sent_at = Instant::now();
+    let mut w = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return Outcome::Rejected,
+    };
+    let request = format!(
+        "POST /v1/generate?stream=1 HTTP/1.1\r\nHost: traffic\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        payload.len(),
+        payload
+    );
+    if w.write_all(request.as_bytes()).is_err() || w.flush().is_err() {
+        return Outcome::Rejected;
+    }
+
+    let mut reader = BufReader::new(stream);
+    // Status line + headers.
+    let Some(status) = read_status(&mut reader) else { return Outcome::Rejected };
+    let mut content_length = 0usize;
+    loop {
+        let Some(line) = read_line(&mut reader) else { return Outcome::Rejected };
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if status != 200 {
+        // Reject: classify by the machine-readable reason in the body.
+        let mut body = vec![0u8; content_length];
+        if std::io::Read::read_exact(&mut reader, &mut body).is_err() {
+            return Outcome::Rejected;
+        }
+        let reason = std::str::from_utf8(&body)
+            .ok()
+            .and_then(|t| Json::parse(t).ok())
+            .and_then(|j| j.get("reason").and_then(Json::as_str).map(str::to_string));
+        return match (status, reason.as_deref()) {
+            (429, Some("shed")) => Outcome::Shed,
+            (503, Some("deadline_exceeded")) => Outcome::Expired { tokens: 0, ttft_s: None },
+            _ => Outcome::Rejected,
+        };
+    }
+
+    // SSE: one `data: <json>` line per frame, blank lines between.
+    let mut tokens = 0usize;
+    let mut ttft_s: Option<f64> = None;
+    loop {
+        let Some(line) = read_line(&mut reader) else {
+            // Stream ended without a final frame (gateway shutdown):
+            // count what arrived as a disconnect-like partial.
+            return Outcome::Disconnected { tokens, ttft_s };
+        };
+        let Some(payload) = line.strip_prefix("data: ") else { continue };
+        let Ok(frame) = Json::parse(payload) else { continue };
+        if frame.get("token").is_some() {
+            if ttft_s.is_none() {
+                ttft_s = Some(sent_at.elapsed().as_secs_f64());
+            }
+            tokens += 1;
+            if plan.disconnect {
+                // The storm: vanish mid-stream. The gateway must cancel
+                // and release the whole reservation.
+                return Outcome::Disconnected { tokens, ttft_s };
+            }
+        }
+        if frame.get("done").is_some() {
+            let finish = frame.get("finish_reason").and_then(Json::as_str).unwrap_or("");
+            return match finish {
+                "deadline_exceeded" => Outcome::Expired { tokens, ttft_s },
+                "shed" => Outcome::Shed,
+                _ => Outcome::Ok { tokens, ttft_s },
+            };
+        }
+    }
+}
+
+fn read_status(reader: &mut BufReader<TcpStream>) -> Option<u16> {
+    let line = read_line(reader)?;
+    line.split_whitespace().nth(1)?.parse().ok()
+}
+
+fn read_line(reader: &mut BufReader<TcpStream>) -> Option<String> {
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) | Err(_) => None,
+        Ok(_) => Some(line.trim_end_matches(['\r', '\n']).to_string()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_respects_bounds_and_skews_low() {
+        let mut rng = Rng::new(7);
+        let mut near_min = 0usize;
+        for _ in 0..2000 {
+            let x = pareto(&mut rng, 4, 64, 1.5);
+            assert!((4..=64).contains(&x));
+            if x <= 8 {
+                near_min += 1;
+            }
+        }
+        assert!(near_min > 1000, "heavy tail must still put most mass near min: {near_min}");
+    }
+
+    #[test]
+    fn percentile_handles_edges() {
+        assert_eq!(percentile(&[], 0.99), 0.0);
+        assert_eq!(percentile(&[0.5], 0.5), 0.5);
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+    }
+
+    #[test]
+    fn arrival_schedule_is_deterministic_per_seed() {
+        // Same seed → identical per-request plans (tenant/class/lengths).
+        let cfg = TrafficConfig::default();
+        let sample = |seed: u64| -> Vec<(usize, usize)> {
+            let mut rng = Rng::new(seed);
+            let tenant_w: Vec<f64> = cfg.tenants.iter().map(|(_, w)| *w).collect();
+            let class_w: Vec<f64> = cfg.classes.iter().map(|(_, w)| *w).collect();
+            (0..32)
+                .map(|_| {
+                    let _ = -(1.0 - rng.uniform()).ln();
+                    let _ = rng.categorical(&tenant_w);
+                    let _ = rng.categorical(&class_w);
+                    let p = pareto(&mut rng, cfg.prompt_min, cfg.prompt_max, cfg.tail_alpha);
+                    let m = pareto(&mut rng, cfg.max_new_min, cfg.max_new_max, cfg.tail_alpha);
+                    let _ = rng.uniform();
+                    let _ = rng.split();
+                    (p, m)
+                })
+                .collect()
+        };
+        assert_eq!(sample(42), sample(42));
+        assert_ne!(sample(42), sample(43));
+    }
+}

@@ -5,9 +5,9 @@
 //! FP32, NanoQuant packed kernels, naive-unpack, or VQ baselines.
 //!
 //! The front door is [`Engine`]: [`Engine::submit`] may be called at any
-//! time (online arrivals join the same FIFO admission/deferral queue as
-//! in-flight work), [`Engine::step`] advances one scheduler tick and
-//! returns the tick's [`Event`]s — tokens are streamed as they are
+//! time (online arrivals join the bounded per-class admission structure
+//! alongside in-flight work), [`Engine::step`] advances one scheduler tick
+//! and returns the tick's [`Event`]s — tokens are streamed as they are
 //! generated, including the first one, so TTFT is externally observable —
 //! and [`Engine::cancel`] takes effect at the next tick boundary,
 //! releasing every reserved KV page whether the request was queued,
@@ -22,6 +22,18 @@
 //! consumes up to `prefill_chunk` prompt tokens per scheduler tick through
 //! the engines' multi-token path, so TTFT no longer scales with tick
 //! overhead × prompt length.
+//!
+//! Overload: the admission queue is bounded ([`ServerConfig::queue_cap`])
+//! and class-prioritized. Every [`Request`] carries a tenant, an
+//! [`SloClass`], and an optional queued-[`method@Request::deadline`];
+//! admission serves classes strictly in priority order with
+//! deficit-round-robin fairness across tenants inside a class. When the
+//! queue overflows, the youngest entry of the lowest-priority non-empty
+//! class sheds ([`FinishReason::Shed`]); a deadline that passes while a
+//! request is still queued sheds it too ([`FinishReason::DeadlineExceeded`]).
+//! Shed requests hold no pages, so shedding never leaks pool budget, and
+//! admitted requests' outputs are byte-identical to the unbounded-FIFO
+//! engine — sampling still runs serially in slot order on one RNG.
 
 pub mod device;
 pub mod http;
@@ -36,9 +48,9 @@ use crate::nn::decode::{
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks_mut;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Identifier handed back by [`Engine::submit`] and carried by every
 /// [`Event`]; it is the caller-chosen [`Request::id`], echoed so call sites
@@ -48,6 +60,98 @@ pub type RequestId = u64;
 /// Token budget a [`Request::new`] request gets before `.max_new(..)` is
 /// called.
 pub const DEFAULT_MAX_NEW: usize = 64;
+
+/// Tenant a [`Request::new`] request belongs to before `.tenant(..)` is
+/// called (also what the HTTP gateway assigns when the body has no
+/// `tenant` field).
+pub const DEFAULT_TENANT: &str = "default";
+
+/// Default [`ServerConfig::queue_cap`]: deep enough that offline batch
+/// workloads never shed, small enough that sustained overload turns into
+/// [`FinishReason::Shed`] backpressure instead of unbounded queue growth.
+pub const DEFAULT_QUEUE_CAP: usize = 256;
+
+/// Upper bucket edges (seconds) of the per-class queue-wait histograms in
+/// [`ServeMetrics::queue_wait_hist`]; a final overflow bucket catches
+/// waits at or beyond the last edge.
+pub const QUEUE_WAIT_BUCKETS_S: [f64; 5] = [0.001, 0.01, 0.1, 1.0, 10.0];
+
+/// Buckets per queue-wait histogram: the edges plus the overflow bucket.
+pub const QUEUE_WAIT_NBUCKETS: usize = QUEUE_WAIT_BUCKETS_S.len() + 1;
+
+fn wait_bucket(wait_s: f64) -> usize {
+    QUEUE_WAIT_BUCKETS_S
+        .iter()
+        .position(|&edge| wait_s < edge)
+        .unwrap_or(QUEUE_WAIT_BUCKETS_S.len())
+}
+
+/// Service-level-objective class: a [`Request`]'s admission priority.
+///
+/// Classes are served strictly in order — every queued `Interactive`
+/// request is considered before any `Batch` one, and `Batch` before
+/// `BestEffort` — and the shed policy works the other way around: a full
+/// queue evicts from the lowest-priority non-empty class first, so
+/// `BestEffort` absorbs overload before `Batch`, and `Batch` before
+/// `Interactive`. Fairness *across tenants* applies inside a class, never
+/// across classes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SloClass {
+    /// Latency-sensitive traffic: admitted first, shed last.
+    #[default]
+    Interactive,
+    /// Throughput traffic with relaxed latency targets.
+    Batch,
+    /// Scavenger traffic: first to shed under overload.
+    BestEffort,
+}
+
+impl SloClass {
+    /// Every class, highest priority first — the index order used by all
+    /// per-class arrays ([`ServeMetrics::queue_depth_per_class`],
+    /// [`ServeMetrics::queue_wait_hist`]).
+    pub const ALL: [SloClass; 3] = [SloClass::Interactive, SloClass::Batch, SloClass::BestEffort];
+
+    /// Canonical wire name: `interactive` | `batch` | `best_effort`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+            SloClass::BestEffort => "best_effort",
+        }
+    }
+
+    /// Parse a wire name (hyphen/concatenated spellings of `best_effort`
+    /// are tolerated).
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "batch" => Some(SloClass::Batch),
+            "best_effort" | "best-effort" | "besteffort" => Some(SloClass::BestEffort),
+            _ => None,
+        }
+    }
+
+    /// Index into [`SloClass::ALL`]-ordered arrays.
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+/// Per-tenant admission accounting (see [`ServeMetrics::tenants`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Requests submitted under this tenant (all outcomes).
+    pub submitted: usize,
+    /// Requests admitted into a KV slot (degenerate submissions that
+    /// complete instantly count as admitted — they were served).
+    pub admitted: usize,
+    /// Requests shed by queue-overflow ([`FinishReason::Shed`]).
+    pub shed: usize,
+    /// Requests whose deadline passed while queued
+    /// ([`FinishReason::DeadlineExceeded`]).
+    pub expired: usize,
+}
 
 /// A generation request.
 ///
@@ -74,6 +178,18 @@ pub struct Request {
     /// these the request finishes with [`FinishReason::Stop`], and the stop
     /// token itself is *not* emitted or appended to the output.
     pub stop_tokens: Vec<u16>,
+    /// Fair-share identity: tenants inside one [`SloClass`] split admission
+    /// capacity by deficit round-robin. Defaults to [`DEFAULT_TENANT`].
+    pub tenant: String,
+    /// Admission priority (see [`SloClass`] for the strict-order and
+    /// shed-order contracts). Defaults to [`SloClass::Interactive`].
+    pub priority: SloClass,
+    /// Optional queued-deadline, relative to submission: if the request is
+    /// still waiting for admission when this much time has passed it
+    /// finishes with [`FinishReason::DeadlineExceeded`]. A request admitted
+    /// before the deadline runs to completion regardless — the deadline
+    /// bounds queue wait, not generation.
+    pub deadline: Option<Duration>,
 }
 
 impl Request {
@@ -91,6 +207,9 @@ impl Request {
             temperature: 0.0,
             top_k: 0,
             stop_tokens: Vec::new(),
+            tenant: DEFAULT_TENANT.to_string(),
+            priority: SloClass::Interactive,
+            deadline: None,
         }
     }
 
@@ -125,6 +244,32 @@ impl Request {
         self.stop_tokens = stop_tokens;
         self
     }
+
+    /// Set the owning tenant (see the field contract on
+    /// [`field@Request::tenant`]).
+    pub fn tenant(mut self, tenant: impl Into<String>) -> Request {
+        self.tenant = tenant.into();
+        self
+    }
+
+    /// Set the admission priority (see [`SloClass`]).
+    pub fn priority(mut self, priority: SloClass) -> Request {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the queued-deadline (see the field contract on
+    /// [`field@Request::deadline`]).
+    pub fn deadline(mut self, deadline: Duration) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// [`method@Request::deadline`] in milliseconds — the unit the HTTP
+    /// body's `deadline_ms` field uses.
+    pub fn deadline_ms(self, ms: u64) -> Request {
+        self.deadline(Duration::from_millis(ms))
+    }
 }
 
 /// Why a request finished (carried by [`Event::Finished`]).
@@ -141,6 +286,18 @@ pub enum FinishReason {
     /// carries whatever tokens were generated before the cancel took
     /// effect.
     Cancelled,
+    /// The bounded admission queue overflowed and this request was the
+    /// shed victim (either the arrival that found the queue full, or the
+    /// youngest entry of a lower class evicted to make room — see
+    /// [`SloClass`]). Shed requests never held a slot or any KV pages; the
+    /// response carries no tokens. The gateway maps this to HTTP 429 with
+    /// `Retry-After`.
+    Shed,
+    /// The request's [`method@Request::deadline`] passed while it was
+    /// still queued. Like [`FinishReason::Shed`] it held no pages and
+    /// carries no tokens; the gateway maps this to HTTP 503 with
+    /// `Retry-After`.
+    DeadlineExceeded,
 }
 
 /// One scheduler-tick occurrence, streamed out of [`Engine::step`].
@@ -149,8 +306,9 @@ pub enum FinishReason {
 /// precedes every `Token`, tokens arrive in generation order one per
 /// decode tick, and `Finished` is the request's last event. Within one
 /// `step()` call the events appear in scheduler phase order: cancellations,
-/// degenerate completions, admission (`Deferred`/`Started`), then per-slot
-/// `Token` followed (on the final token) by that slot's `Finished`.
+/// overflow sheds, degenerate completions, deadline expiries, admission
+/// (`Deferred`/`Started`), then per-slot `Token` followed (on the final
+/// token) by that slot's `Finished`.
 #[derive(Clone, Debug)]
 pub enum Event {
     /// The request was admitted into a KV slot and starts prefilling this
@@ -160,9 +318,10 @@ pub enum Event {
         id: RequestId,
     },
     /// Admission was attempted but the KV pool could not promise the
-    /// request's `prompt + max_new` footprint; the request stays queued
-    /// (FIFO, never dropped) and will be retried every tick. Emitted once
-    /// per request, however many ticks it waits.
+    /// request's `prompt + max_new` footprint; the request stays queued in
+    /// its class lane and will be retried every tick (it can still shed if
+    /// the queue overflows or its deadline passes while it waits). Emitted
+    /// once per request, however many ticks it waits.
     Deferred {
         /// Id of the deferred request.
         id: RequestId,
@@ -225,11 +384,25 @@ pub struct ServerConfig {
     /// prefill; `1` reproduces the legacy one-token-per-tick behavior with
     /// byte-identical outputs).
     pub prefill_chunk: usize,
+    /// Bound on requests waiting for admission, summed across all classes
+    /// (clamped up to 1; requests already in KV slots don't count). A
+    /// submit that finds the queue full triggers the shed policy — see
+    /// [`FinishReason::Shed`]. Note the queue also buffers same-tick
+    /// bursts that free slots would absorb next tick, so this must stay
+    /// comfortably above `max_batch`.
+    pub queue_cap: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 4, seed: 0, page_size: 32, kv_pages: None, prefill_chunk: 8 }
+        ServerConfig {
+            max_batch: 4,
+            seed: 0,
+            page_size: 32,
+            kv_pages: None,
+            prefill_chunk: 8,
+            queue_cap: DEFAULT_QUEUE_CAP,
+        }
     }
 }
 
@@ -272,12 +445,49 @@ pub struct ServeMetrics {
     pub admission_deferrals: usize,
     /// Requests finished with [`FinishReason::Cancelled`].
     pub cancellations: usize,
+    /// Requests finished with [`FinishReason::Shed`] (bounded-queue
+    /// overflow victims).
+    pub shed: usize,
+    /// Requests finished with [`FinishReason::DeadlineExceeded`].
+    pub deadline_expired: usize,
+    /// Current admission-queue depth per class, [`SloClass::ALL`] order.
+    pub queue_depth_per_class: [usize; 3],
+    /// The bound those depths sum against ([`ServerConfig::queue_cap`]).
+    pub queue_cap: usize,
+    /// Queue-wait histograms, one per class ([`SloClass::ALL`] order),
+    /// bucketed by [`QUEUE_WAIT_BUCKETS_S`]; a request is recorded the
+    /// tick it is admitted into a KV slot.
+    pub queue_wait_hist: [[usize; QUEUE_WAIT_NBUCKETS]; 3],
+    /// Per-tenant admission stats, sorted by tenant name (deterministic
+    /// JSON output). Cardinality grows with distinct tenant names — the
+    /// gateway bounds name length, and [`Engine::reset`] clears it.
+    pub tenants: Vec<(String, TenantStats)>,
 }
 
 impl ServeMetrics {
     /// The snapshot as a flat JSON object — the HTTP gateway's
     /// `/v1/metrics` payload, also convenient for experiment result files.
     pub fn to_json(&self) -> Json {
+        let mut queue_depth = Json::obj();
+        let mut queue_wait = Json::obj();
+        for (i, class) in SloClass::ALL.iter().enumerate() {
+            queue_depth.insert(class.as_str(), self.queue_depth_per_class[i]);
+            queue_wait.insert(
+                class.as_str(),
+                Json::Arr(self.queue_wait_hist[i].iter().map(|&n| Json::from(n)).collect()),
+            );
+        }
+        let mut tenants = Json::obj();
+        for (name, t) in &self.tenants {
+            tenants.insert(
+                name,
+                Json::obj()
+                    .set("submitted", t.submitted)
+                    .set("admitted", t.admitted)
+                    .set("shed", t.shed)
+                    .set("expired", t.expired),
+            );
+        }
         Json::obj()
             .set("total_tokens", self.total_tokens)
             .set("prefill_tokens", self.prefill_tokens)
@@ -290,15 +500,219 @@ impl ServeMetrics {
             .set("peak_kv_bytes", self.peak_kv_bytes)
             .set("admission_deferrals", self.admission_deferrals)
             .set("cancellations", self.cancellations)
+            .set("shed", self.shed)
+            .set("deadline_expired", self.deadline_expired)
+            .set("queue_cap", self.queue_cap)
+            .set("queue_depth", queue_depth)
+            .set(
+                "queue_wait_buckets_s",
+                Json::Arr(QUEUE_WAIT_BUCKETS_S.iter().map(|&e| Json::from(e)).collect()),
+            )
+            .set("queue_wait_hist", queue_wait)
+            .set("tenants", tenants)
     }
 }
 
-/// A request waiting for admission (never dropped; head-of-line FIFO).
+/// A request waiting for admission in its tenant's FIFO lane.
 struct Queued {
     req: Request,
     submitted: Instant,
     /// Whether this request's one [`Event::Deferred`] has been emitted.
     deferred: bool,
+}
+
+impl Queued {
+    /// Whether this entry's queued-deadline has already passed.
+    fn expired(&self) -> bool {
+        self.req.deadline.is_some_and(|d| self.submitted.elapsed() >= d)
+    }
+}
+
+/// One [`SloClass`]'s admission lane: per-tenant FIFO sub-queues served
+/// with deficit round-robin. The DRR quantum is the page cost of a
+/// `max_seq` sequence — the most any single request can need — so one
+/// top-up always affords the head request, a lone tenant degenerates to
+/// exact FIFO, and with several tenants each round of the ring grants
+/// every tenant roughly equal pages.
+#[derive(Default)]
+struct ClassLane {
+    /// Tenant name → FIFO of waiting requests. A tenant's entry is
+    /// removed the moment its lane empties, so ring size tracks tenants
+    /// with live work, not every tenant ever seen.
+    by_tenant: HashMap<String, VecDeque<Queued>>,
+    /// DRR service order: tenants with queued work, served front first.
+    ring: VecDeque<String>,
+    /// DRR page deficit per tenant in `ring`. Topped up by one quantum
+    /// only when short of the head request's cost, so it stays bounded by
+    /// `quantum + head cost` even across pool-blocked ticks.
+    deficit: HashMap<String, usize>,
+    /// Total entries across all tenant lanes.
+    len: usize,
+}
+
+impl ClassLane {
+    fn push(&mut self, q: Queued) {
+        let lane = self.by_tenant.entry(q.req.tenant.clone()).or_default();
+        if lane.is_empty() {
+            self.ring.push_back(q.req.tenant.clone());
+        }
+        lane.push_back(q);
+        self.len += 1;
+    }
+
+    /// Drop a tenant from the ring and deficit table once its lane empties
+    /// (unused deficit is forfeited — an idle tenant must not bank credit
+    /// against future contention).
+    fn retire_if_empty(&mut self, tenant: &str) {
+        if self.by_tenant.get(tenant).is_some_and(VecDeque::is_empty) {
+            self.by_tenant.remove(tenant);
+            self.deficit.remove(tenant);
+            self.ring.retain(|t| t != tenant);
+        }
+    }
+
+    /// Remove and return the youngest entry across all tenants — the shed
+    /// victim when this class is chosen. Shedding LIFO inside the class
+    /// means the longest-waiting requests keep their place.
+    fn take_youngest(&mut self) -> Option<Queued> {
+        let tenant = self
+            .by_tenant
+            .iter()
+            .filter(|(_, lane)| !lane.is_empty())
+            .max_by_key(|(_, lane)| lane.back().unwrap().submitted)
+            .map(|(t, _)| t.clone())?;
+        let q = self.by_tenant.get_mut(&tenant).unwrap().pop_back().unwrap();
+        self.len -= 1;
+        self.retire_if_empty(&tenant);
+        Some(q)
+    }
+
+    /// Queued instances of `id` in this lane.
+    fn count(&self, id: RequestId) -> usize {
+        self.by_tenant.values().flatten().filter(|q| q.req.id == id).count()
+    }
+
+    /// Submission instant of the oldest queued instance of `id`, if any.
+    fn oldest_of(&self, id: RequestId) -> Option<Instant> {
+        self.by_tenant.values().flatten().filter(|q| q.req.id == id).map(|q| q.submitted).min()
+    }
+
+    /// Remove the oldest queued instance of `id`.
+    fn remove_oldest(&mut self, id: RequestId) -> Option<Queued> {
+        let (tenant, pos) = self
+            .by_tenant
+            .iter()
+            .flat_map(|(t, lane)| lane.iter().enumerate().map(move |(i, q)| (t, i, q)))
+            .filter(|(_, _, q)| q.req.id == id)
+            .min_by_key(|(_, _, q)| q.submitted)
+            .map(|(t, i, _)| (t.clone(), i))?;
+        let q = self.by_tenant.get_mut(&tenant).unwrap().remove(pos).unwrap();
+        self.len -= 1;
+        self.retire_if_empty(&tenant);
+        Some(q)
+    }
+
+    /// Move every entry whose queued-deadline has passed into `out`.
+    fn take_expired_into(&mut self, out: &mut Vec<Queued>) {
+        let tenants: Vec<String> = self.by_tenant.keys().cloned().collect();
+        for tenant in tenants {
+            let lane = self.by_tenant.get_mut(&tenant).unwrap();
+            let mut kept = VecDeque::with_capacity(lane.len());
+            for q in lane.drain(..) {
+                if q.expired() {
+                    self.len -= 1;
+                    out.push(q);
+                } else {
+                    kept.push_back(q);
+                }
+            }
+            *lane = kept;
+            self.retire_if_empty(&tenant);
+        }
+    }
+}
+
+/// The bounded, class-prioritized admission structure that replaced the
+/// single never-drop FIFO: one [`ClassLane`] per [`SloClass`] sharing one
+/// capacity bound, plus the shed policy.
+struct AdmissionQueue {
+    /// Lanes in [`SloClass::ALL`] order (strict admission priority).
+    classes: [ClassLane; 3],
+    /// Total queued-entry bound across all classes (≥ 1).
+    cap: usize,
+}
+
+impl AdmissionQueue {
+    fn new(cap: usize) -> AdmissionQueue {
+        AdmissionQueue { classes: Default::default(), cap: cap.max(1) }
+    }
+
+    fn len(&self) -> usize {
+        self.classes.iter().map(|c| c.len).sum()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.classes.iter().all(|c| c.len == 0)
+    }
+
+    fn depths(&self) -> [usize; 3] {
+        [self.classes[0].len, self.classes[1].len, self.classes[2].len]
+    }
+
+    /// Enqueue `q`, applying the shed policy on overflow: the victim is
+    /// the youngest entry of the lowest-priority non-empty class strictly
+    /// below the arrival's class — or the arrival itself when nothing
+    /// below it can make room. Returns the victim, if any.
+    fn push(&mut self, q: Queued) -> Option<Queued> {
+        if self.len() < self.cap {
+            self.classes[q.req.priority.index()].push(q);
+            return None;
+        }
+        for class in (q.req.priority.index() + 1..SloClass::ALL.len()).rev() {
+            if self.classes[class].len > 0 {
+                let victim = self.classes[class].take_youngest();
+                self.classes[q.req.priority.index()].push(q);
+                return victim;
+            }
+        }
+        Some(q)
+    }
+
+    /// Queued instances of `id` across all classes.
+    fn count(&self, id: RequestId) -> usize {
+        self.classes.iter().map(|c| c.count(id)).sum()
+    }
+
+    /// Remove the oldest queued instance of `id` across all classes.
+    fn remove_oldest(&mut self, id: RequestId) -> Option<Queued> {
+        let class = self
+            .classes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| c.oldest_of(id).map(|at| (i, at)))
+            .min_by_key(|&(_, at)| at)
+            .map(|(i, _)| i)?;
+        self.classes[class].remove_oldest(id)
+    }
+
+    /// Remove every entry whose queued-deadline has passed.
+    fn take_expired(&mut self) -> Vec<Queued> {
+        let mut out = Vec::new();
+        for lane in self.classes.iter_mut() {
+            lane.take_expired_into(&mut out);
+        }
+        out
+    }
+
+    fn clear(&mut self) {
+        self.classes = Default::default();
+    }
+}
+
+/// Zero-token response for requests that never reached a KV slot
+/// (degenerate, cancelled-while-queued, shed, or deadline-expired).
+fn empty_response(id: RequestId, queue_s: f64) -> Response {
+    Response { id, tokens: Vec::new(), text: String::new(), ttft_s: 0.0, decode_s: 0.0, queue_s }
 }
 
 struct Slot {
@@ -331,9 +745,11 @@ struct Slot {
 /// State machine per request:
 ///
 /// ```text
-/// submit ─→ queued ─(pool can promise footprint)─→ active(prefill) ─→ active(decode) ─→ Finished
-///              │  └─(pool can't)─→ deferred ──retry─┘                      │
-///              └────────────── cancel (any state, next tick boundary) ─────┴─→ Finished(Cancelled)
+/// submit ─→ queued(class, tenant) ─(DRR grant + pool promise)─→ active(prefill) ─→ active(decode) ─→ Finished
+///              │  │  └─(pool can't)─→ deferred ──retry─┘                               │
+///              │  ├─(queue overflow, lowest class · youngest first)─→ Finished(Shed)   │
+///              │  └─(deadline passes while queued)─→ Finished(DeadlineExceeded)        │
+///              └────────────── cancel (any state, next tick boundary) ─────────────────┴─→ Finished(Cancelled)
 /// ```
 ///
 /// `step()` is the only method that advances time; between calls the engine
@@ -348,7 +764,7 @@ pub struct Engine {
     pub model: Arc<DecodeModel>,
     cfg: ServerConfig,
     pool: KvPool,
-    queue: VecDeque<Queued>,
+    queue: AdmissionQueue,
     active: Vec<Option<Slot>>,
     /// KV caches (page tables, detached) and decode arenas recovered from
     /// finished requests; recycling them keeps steady-state admission
@@ -361,6 +777,10 @@ pub struct Engine {
     /// Degenerate submissions (empty prompt / `max_new == 0`) completing at
     /// the next tick boundary without ever occupying a slot.
     instant_done: Vec<Response>,
+    /// Overflow victims shed at submit time; their [`FinishReason::Shed`]
+    /// finishes are emitted at the next tick boundary (counted by
+    /// [`Engine::in_flight`] so drivers keep stepping until they drain).
+    shed_pending: Vec<Response>,
     // Cumulative counters behind `snapshot()`.
     total_tokens: usize,
     prefill_tokens: usize,
@@ -368,6 +788,10 @@ pub struct Engine {
     peak_active: usize,
     deferrals: usize,
     cancellations: usize,
+    shed: usize,
+    expired: usize,
+    queue_wait_hist: [[usize; QUEUE_WAIT_NBUCKETS]; 3],
+    tenant_stats: BTreeMap<String, TenantStats>,
     wall_s: f64,
 }
 
@@ -393,16 +817,21 @@ impl Engine {
             pool,
             active,
             rng,
-            queue: VecDeque::new(),
+            queue: AdmissionQueue::new(cfg.queue_cap),
             spares: Vec::new(),
             cancels: Vec::new(),
             instant_done: Vec::new(),
+            shed_pending: Vec::new(),
             total_tokens: 0,
             prefill_tokens: 0,
             prefill_ticks: 0,
             peak_active: 0,
             deferrals: 0,
             cancellations: 0,
+            shed: 0,
+            expired: 0,
+            queue_wait_hist: [[0; QUEUE_WAIT_NBUCKETS]; 3],
+            tenant_stats: BTreeMap::new(),
             wall_s: 0.0,
             cfg,
         }
@@ -419,8 +848,8 @@ impl Engine {
         &self.pool
     }
 
-    /// Enqueue a request; it joins the FIFO admission queue behind any
-    /// deferred in-flight work and will produce events from subsequent
+    /// Enqueue a request; it joins its class's admission lane behind its
+    /// tenant's earlier work and will produce events from subsequent
     /// [`Engine::step`] calls. May be called at any time, including between
     /// steps of an already-running workload.
     ///
@@ -429,23 +858,29 @@ impl Engine {
     /// to leave one position for generation, and an empty prompt or
     /// `max_new == 0` completes at the next tick with zero tokens
     /// ([`FinishReason::MaxNew`]) instead of panicking in the decode loop.
+    ///
+    /// If the bounded queue is full this submit sheds — the victim (see
+    /// [`FinishReason::Shed`]; possibly this very request) finishes at the
+    /// next tick boundary.
     pub fn submit(&mut self, mut req: Request) -> RequestId {
         let id = req.id;
         let cap = self.model.cfg.max_seq.saturating_sub(1);
         if req.prompt.len() > cap {
             req.prompt.truncate(cap);
         }
+        let stats = self.tenant_stats.entry(req.tenant.clone()).or_default();
+        stats.submitted += 1;
         if req.prompt.is_empty() || req.max_new == 0 {
-            self.instant_done.push(Response {
-                id,
-                tokens: Vec::new(),
-                text: String::new(),
-                ttft_s: 0.0,
-                decode_s: 0.0,
-                queue_s: 0.0,
-            });
-        } else {
-            self.queue.push_back(Queued { req, submitted: Instant::now(), deferred: false });
+            stats.admitted += 1;
+            self.instant_done.push(empty_response(id, 0.0));
+            return id;
+        }
+        let queued = Queued { req, submitted: Instant::now(), deferred: false };
+        if let Some(victim) = self.queue.push(queued) {
+            self.shed += 1;
+            self.tenant_stats.entry(victim.req.tenant.clone()).or_default().shed += 1;
+            self.shed_pending
+                .push(empty_response(victim.req.id, victim.submitted.elapsed().as_secs_f64()));
         }
         id
     }
@@ -466,7 +901,7 @@ impl Engine {
     /// `max_new == 0`) are already complete and not cancellable — they emit
     /// their [`FinishReason::MaxNew`] finish at the next tick regardless.
     pub fn cancel(&mut self, id: RequestId) {
-        let in_flight = self.queue.iter().filter(|q| q.req.id == id).count()
+        let in_flight = self.queue.count(id)
             + self.active.iter().flatten().filter(|s| s.req.id == id).count();
         let recorded = self.cancels.iter().filter(|&&c| c == id).count();
         if recorded < in_flight {
@@ -480,10 +915,12 @@ impl Engine {
         self.in_flight() == 0
     }
 
-    /// Requests currently queued, active, or pending completion.
+    /// Requests currently queued, active, or pending completion (including
+    /// shed victims whose finish event has not been emitted yet).
     pub fn in_flight(&self) -> usize {
         self.queue.len()
             + self.instant_done.len()
+            + self.shed_pending.len()
             + self.active.iter().filter(|s| s.is_some()).count()
     }
 
@@ -511,6 +948,12 @@ impl Engine {
             peak_kv_bytes: self.pool.peak_bytes(),
             admission_deferrals: self.deferrals,
             cancellations: self.cancellations,
+            shed: self.shed,
+            deadline_expired: self.expired,
+            queue_depth_per_class: self.queue.depths(),
+            queue_cap: self.queue.cap,
+            queue_wait_hist: self.queue_wait_hist,
+            tenants: self.tenant_stats.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
         }
     }
 
@@ -531,6 +974,7 @@ impl Engine {
         self.queue.clear();
         self.cancels.clear();
         self.instant_done.clear();
+        self.shed_pending.clear();
         self.pool.reset_stats();
         self.rng = Rng::new(self.cfg.seed);
         self.total_tokens = 0;
@@ -539,6 +983,10 @@ impl Engine {
         self.peak_active = 0;
         self.deferrals = 0;
         self.cancellations = 0;
+        self.shed = 0;
+        self.expired = 0;
+        self.queue_wait_hist = [[0; QUEUE_WAIT_NBUCKETS]; 3];
+        self.tenant_stats.clear();
         self.wall_s = 0.0;
     }
 
@@ -566,9 +1014,10 @@ impl Engine {
     }
 
     /// Advance one scheduler tick and return everything that happened, in
-    /// phase order (see [`Event`]): apply pending cancellations, complete
-    /// degenerate submissions, admit queued requests into free slots
-    /// (strict FIFO with pool-reservation admission control), run the
+    /// phase order (see [`Event`]): apply pending cancellations, emit
+    /// overflow sheds, complete degenerate submissions, expire queued
+    /// deadlines, admit queued requests into free slots (class priority +
+    /// per-tenant deficit round-robin, gated by pool reservation), run the
     /// parallel compute tick (chunked prefill or one decode token per
     /// active slot), then sample — streaming each new token and finishing
     /// slots that hit their budget, a stop token, or context capacity.
@@ -585,11 +1034,11 @@ impl Engine {
         // ---- Tick boundary: cancellations first, so a cancelled slot can
         // be re-admitted into this very tick and a cancelled queued request
         // never burns pool budget. Each recorded cancel consumes exactly
-        // one in-flight instance of its id, oldest first — active slot,
-        // then queue front-to-back. FIFO admission means an active instance
-        // is always older than any still-queued one, so a reused live id is
-        // resolved against the instance that existed when `cancel` was
-        // called, and a second `cancel` call reaches the newer duplicate.
+        // one in-flight instance of its id — the oldest active instance if
+        // any, else the oldest queued instance across all class lanes —
+        // so a reused live id is resolved against the instance that
+        // existed when `cancel` was called, and a second `cancel` call
+        // reaches the newer duplicate.
         for id in std::mem::take(&mut self.cancels) {
             // Oldest active instance by submission time — slot index is
             // recycling order, not age.
@@ -608,22 +1057,20 @@ impl Engine {
                 events.push(Event::Finished { response, reason: FinishReason::Cancelled });
                 continue;
             }
-            if let Some(pos) = self.queue.iter().position(|q| q.req.id == id) {
-                let q = self.queue.remove(pos).unwrap();
+            if let Some(q) = self.queue.remove_oldest(id) {
                 self.cancellations += 1;
                 events.push(Event::Finished {
-                    response: Response {
-                        id,
-                        tokens: Vec::new(),
-                        text: String::new(),
-                        ttft_s: 0.0,
-                        decode_s: 0.0,
-                        queue_s: q.submitted.elapsed().as_secs_f64(),
-                    },
+                    response: empty_response(id, q.submitted.elapsed().as_secs_f64()),
                     reason: FinishReason::Cancelled,
                 });
             }
             // Consumed by an earlier duplicate cancel this tick: no-op.
+        }
+
+        // ---- Overflow victims shed at submit time finish here, before
+        // anything else can queue behind them.
+        for response in self.shed_pending.drain(..) {
+            events.push(Event::Finished { response, reason: FinishReason::Shed });
         }
 
         // ---- Degenerate submissions complete without touching a slot.
@@ -631,53 +1078,110 @@ impl Engine {
             events.push(Event::Finished { response, reason: FinishReason::MaxNew });
         }
 
-        // ---- Admission: fill free slots in strict FIFO order. A request
-        // is admitted only when the pool can promise its whole footprint
-        // (prompt + max_new, clamped to max_seq); otherwise it is deferred
-        // — left at the head of the queue, never dropped, and re-tried
-        // every tick. Nothing behind the head jumps it.
-        for slot in self.active.iter_mut() {
-            if slot.is_some() {
-                continue;
-            }
-            let Some(head) = self.queue.front_mut() else { break };
-            let need = (head.req.prompt.len() + head.req.max_new).min(max_seq);
-            let pages = self.pool.pages_for(need);
-            if !self.pool.try_reserve(pages) {
-                if !head.deferred {
-                    head.deferred = true;
-                    self.deferrals += 1;
-                    events.push(Event::Deferred { id: head.req.id });
+        // ---- Deadline expiry: a deadline that passed while the request
+        // was still queued sheds it before admission is attempted. Queued
+        // requests hold no slot and no pages, so "released in full" is
+        // structural here — there is nothing to leak.
+        for q in self.queue.take_expired() {
+            self.expired += 1;
+            self.tenant_stats.entry(q.req.tenant.clone()).or_default().expired += 1;
+            events.push(Event::Finished {
+                response: empty_response(q.req.id, q.submitted.elapsed().as_secs_f64()),
+                reason: FinishReason::DeadlineExceeded,
+            });
+        }
+
+        // ---- Admission: classes in strict priority order; tenants inside
+        // a class share by deficit round-robin (quantum = the page cost of
+        // a max_seq sequence, so one top-up always affords the head
+        // request and a lone tenant is exact FIFO). A request is admitted
+        // only when the pool can promise its whole footprint (prompt +
+        // max_new, clamped to max_seq); a reservation failure defers the
+        // selected head and stops admission for the tick — neither a lower
+        // class nor another tenant may steal the pages it is waiting for,
+        // which is what keeps a big deferred request from starving.
+        let quantum = self.pool.pages_for(max_seq);
+        let mut free_slots: Vec<usize> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.is_none().then_some(i))
+            .collect();
+        // `pop()` hands out the lowest index first: admission order fills
+        // slots exactly as the old head-of-queue loop did.
+        free_slots.reverse();
+        'admission: for (class_idx, lane) in self.queue.classes.iter_mut().enumerate() {
+            while !free_slots.is_empty() && lane.len > 0 {
+                let Some(tenant) = lane.ring.front().cloned() else { break };
+                let head_pages = {
+                    let head = &lane.by_tenant[&tenant][0];
+                    self.pool.pages_for((head.req.prompt.len() + head.req.max_new).min(max_seq))
+                };
+                let deficit = lane.deficit.entry(tenant.clone()).or_insert(0);
+                if *deficit < head_pages {
+                    *deficit += quantum;
                 }
-                break;
+                // Serve this tenant while its deficit lasts.
+                while !free_slots.is_empty() {
+                    let lane_fifo = lane.by_tenant.get_mut(&tenant).unwrap();
+                    let Some(head) = lane_fifo.front_mut() else { break };
+                    let need = (head.req.prompt.len() + head.req.max_new).min(max_seq);
+                    let pages = self.pool.pages_for(need);
+                    if *lane.deficit.get(&tenant).unwrap() < pages {
+                        break;
+                    }
+                    if !self.pool.try_reserve(pages) {
+                        if !head.deferred {
+                            head.deferred = true;
+                            self.deferrals += 1;
+                            events.push(Event::Deferred { id: head.req.id });
+                        }
+                        break 'admission;
+                    }
+                    *lane.deficit.get_mut(&tenant).unwrap() -= pages;
+                    let q = lane_fifo.pop_front().unwrap();
+                    lane.len -= 1;
+                    let queue_s = q.submitted.elapsed().as_secs_f64();
+                    self.queue_wait_hist[class_idx][wait_bucket(queue_s)] += 1;
+                    self.tenant_stats.entry(tenant.clone()).or_default().admitted += 1;
+                    let (mut cache, scratch) = self.spares.pop().unwrap_or_else(|| {
+                        (
+                            KvCache::with_page_size(&self.model.cfg, page_size),
+                            DecodeScratch::with_chunk(&self.model.cfg, prefill_chunk),
+                        )
+                    });
+                    cache.reset();
+                    events.push(Event::Started { id: q.req.id });
+                    let si = free_slots.pop().unwrap();
+                    self.active[si] = Some(Slot {
+                        cache,
+                        scratch,
+                        reserved_pages: pages,
+                        generated: Vec::with_capacity(q.req.max_new),
+                        prefill_done: false,
+                        prefill_cursor: 0,
+                        prefill_target: 0,
+                        submitted: q.submitted,
+                        queue_s,
+                        ttft_s: None,
+                        req: q.req,
+                    });
+                }
+                lane.retire_if_empty(&tenant);
+                // The tenant's turn is over (deficit spent or lane empty):
+                // rotate the ring so the next tenant is served before this
+                // one tops up again.
+                if lane.ring.front().is_some_and(|t| t == &tenant) {
+                    lane.ring.rotate_left(1);
+                }
             }
-            let q = self.queue.pop_front().unwrap();
-            let (mut cache, scratch) = self.spares.pop().unwrap_or_else(|| {
-                (
-                    KvCache::with_page_size(&self.model.cfg, page_size),
-                    DecodeScratch::with_chunk(&self.model.cfg, prefill_chunk),
-                )
-            });
-            cache.reset();
-            events.push(Event::Started { id: q.req.id });
-            *slot = Some(Slot {
-                cache,
-                scratch,
-                reserved_pages: pages,
-                generated: Vec::with_capacity(q.req.max_new),
-                prefill_done: false,
-                prefill_cursor: 0,
-                prefill_target: 0,
-                submitted: q.submitted,
-                queue_s: q.submitted.elapsed().as_secs_f64(),
-                ttft_s: None,
-                req: q.req,
-            });
         }
         let n_active = self.active.iter().filter(|s| s.is_some()).count();
         if n_active == 0 {
-            // The pool is clamped to hold one max_seq sequence, so the
-            // queue head is always admissible once every slot drains.
+            // The pool is clamped to hold one max_seq sequence and a fully
+            // drained engine has nothing reserved, so the first DRR
+            // candidate (top-up ≥ its cost) is always admissible once
+            // every slot drains.
             assert!(self.queue.is_empty(), "scheduler stalled with queued requests");
             // Eventless idle polls don't accrue wall time: a caller that
             // busy-polls between arrivals must not dilute the lifetime
@@ -1715,5 +2219,281 @@ mod tests {
             assert!(r.ttft_s >= r.queue_s, "TTFT includes the queue wait");
         }
         assert!(r1.queue_s >= r0.queue_s, "the queued request waits at least as long");
+    }
+
+    /// Started-event order of a drained run (the admission order).
+    fn started_order(events: &[(usize, Event)]) -> Vec<RequestId> {
+        events
+            .iter()
+            .filter_map(|(_, ev)| match ev {
+                Event::Started { id } => Some(*id),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn classes_admit_in_strict_priority_order() {
+        // One slot; submission order is the reverse of class priority.
+        // Admission must reorder to Interactive → Batch → BestEffort.
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.submit(Request::greedy(0, vec![1, 2], 2).priority(SloClass::BestEffort));
+        engine.submit(Request::greedy(1, vec![3, 4], 2).priority(SloClass::Batch));
+        engine.submit(Request::greedy(2, vec![5, 6], 2).priority(SloClass::Interactive));
+        let events = drain(&mut engine);
+        assert_eq!(started_order(&events), vec![2, 1, 0]);
+        for id in 0..3 {
+            let (_, r, reason) = finished_of(&events, id);
+            assert_eq!(reason, FinishReason::MaxNew);
+            assert_eq!(r.tokens.len(), 2, "request {id} must still run to completion");
+        }
+    }
+
+    #[test]
+    fn single_tenant_single_class_admission_is_exact_fifo() {
+        // The DRR quantum covers any single request, so the legacy
+        // workload shape (one tenant, one class) admits in exact
+        // submission order — the invariant every pre-existing test and
+        // the byte-identity guarantee lean on.
+        let mut engine = tiny_engine(ServerConfig { max_batch: 2, ..Default::default() });
+        for i in 0..6 {
+            engine.submit(Request::greedy(i, vec![1 + i as u16, 2, 3], 3));
+        }
+        let events = drain(&mut engine);
+        assert_eq!(started_order(&events), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn tenants_in_one_class_interleave_by_deficit_round_robin() {
+        // Tenant a floods first; tenant b's requests arrive behind them.
+        // A plain FIFO would run all of a before b — DRR must alternate
+        // turns instead. One slot, so admission order is fully observable.
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        for i in 0..3 {
+            engine.submit(Request::greedy(i, vec![1 + i as u16, 2], 2).tenant("a"));
+        }
+        for i in 3..6 {
+            engine.submit(Request::greedy(i, vec![1 + i as u16, 2], 2).tenant("b"));
+        }
+        let events = drain(&mut engine);
+        let order = started_order(&events);
+        // a's first request was at the ring front, then turns alternate:
+        // each tenant's single-request cost equals one quantum top-up.
+        assert_eq!(order, vec![0, 3, 1, 4, 2, 5], "expected round-robin interleave");
+    }
+
+    #[test]
+    fn queue_overflow_sheds_lowest_class_youngest_first() {
+        // Cap 2. Fill it with a BestEffort and a Batch entry, then submit
+        // an Interactive arrival: the BestEffort entry (lowest non-empty
+        // class) must shed, and the Interactive request must finish.
+        let mut engine =
+            tiny_engine(ServerConfig { max_batch: 1, queue_cap: 2, ..Default::default() });
+        engine.submit(Request::greedy(0, vec![1, 2], 2).priority(SloClass::BestEffort));
+        engine.submit(Request::greedy(1, vec![3, 4], 2).priority(SloClass::Batch));
+        engine.submit(Request::greedy(2, vec![5, 6], 2).priority(SloClass::Interactive));
+        let events = drain(&mut engine);
+        let (_, r0, reason0) = finished_of(&events, 0);
+        assert_eq!(reason0, FinishReason::Shed);
+        assert!(r0.tokens.is_empty() && r0.queue_s >= 0.0);
+        assert_eq!(finished_of(&events, 1).2, FinishReason::MaxNew);
+        assert_eq!(finished_of(&events, 2).2, FinishReason::MaxNew);
+        let m = engine.snapshot();
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.queue_depth_per_class, [0, 0, 0]);
+        // An arrival with nothing below its class sheds itself.
+        engine.submit(Request::greedy(10, vec![1, 2], 2).priority(SloClass::BestEffort));
+        engine.submit(Request::greedy(11, vec![3, 4], 2).priority(SloClass::BestEffort));
+        engine.submit(Request::greedy(12, vec![5, 6], 2).priority(SloClass::BestEffort));
+        let events = drain(&mut engine);
+        assert_eq!(finished_of(&events, 12).2, FinishReason::Shed, "self-shed on overflow");
+        assert_eq!(finished_of(&events, 10).2, FinishReason::MaxNew);
+        assert_eq!(finished_of(&events, 11).2, FinishReason::MaxNew);
+        assert_eq!(engine.snapshot().shed, 2);
+    }
+
+    #[test]
+    fn shed_within_a_class_evicts_the_youngest_entry() {
+        // Cap 2, one slot. Two Batch entries queued; a newer Interactive
+        // arrival must evict the *younger* Batch entry (id 1), never the
+        // longest-waiting one.
+        let mut engine =
+            tiny_engine(ServerConfig { max_batch: 1, queue_cap: 2, ..Default::default() });
+        engine.submit(Request::greedy(0, vec![1, 2], 2).priority(SloClass::Batch));
+        engine.submit(Request::greedy(1, vec![3, 4], 2).priority(SloClass::Batch));
+        engine.submit(Request::greedy(2, vec![5, 6], 2).priority(SloClass::Interactive));
+        let events = drain(&mut engine);
+        assert_eq!(finished_of(&events, 1).2, FinishReason::Shed, "youngest sheds");
+        assert_eq!(finished_of(&events, 0).2, FinishReason::MaxNew, "oldest keeps its place");
+        assert_eq!(finished_of(&events, 2).2, FinishReason::MaxNew);
+    }
+
+    #[test]
+    fn queued_deadline_expires_and_admitted_requests_ignore_deadlines() {
+        // One slot: a long-running request occupies it while a zero-ms
+        // deadline request waits — the waiter must expire at the next
+        // tick, not run. A generous deadline on the occupant itself must
+        // not end an already-admitted generation.
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.submit(Request::greedy(0, vec![1; 4], 6).deadline(Duration::from_secs(3600)));
+        engine.submit(Request::greedy(1, vec![2; 4], 2).deadline_ms(0));
+        let events = drain(&mut engine);
+        let (_, r1, reason1) = finished_of(&events, 1);
+        assert_eq!(reason1, FinishReason::DeadlineExceeded);
+        assert!(r1.tokens.is_empty());
+        let (_, r0, reason0) = finished_of(&events, 0);
+        assert_eq!(reason0, FinishReason::MaxNew, "admitted request runs to completion");
+        assert_eq!(r0.tokens.len(), 6);
+        let m = engine.snapshot();
+        assert_eq!(m.deadline_expired, 1);
+        assert_eq!(m.shed, 0);
+        // Expiry released nothing because nothing was held: the pool is
+        // fully free after the drain.
+        assert_eq!(engine.pool().reserved_pages(), 0);
+    }
+
+    #[test]
+    fn deadline_expiry_after_deferral_leaves_pool_free_and_admits_followup() {
+        // 4-page pool; the first request reserves all of it, so the second
+        // (2 pages, 1 ms deadline) defers under pool pressure, then
+        // expires while still queued. Afterwards the pool must be fully
+        // free and a whole-budget follow-up must be admittable — the
+        // "expiry releases the reservation in full" bar, which holds
+        // structurally because queued requests hold zero pages.
+        let mut engine = tiny_engine(ServerConfig {
+            max_batch: 2,
+            kv_pages: Some(4),
+            ..Default::default()
+        });
+        let big: Vec<u16> = (0..100).map(|j| (j % 250) as u16).collect();
+        engine.submit(Request::greedy(0, big.clone(), 28)); // 4 pages: the whole pool
+        let first = engine.step();
+        assert!(first.iter().any(|e| matches!(e, Event::Started { id: 0 })));
+        engine.submit(Request::greedy(1, vec![1; 40], 8).deadline_ms(1)); // 2 pages
+        let second = engine.step();
+        assert!(
+            second.iter().any(|e| matches!(e, Event::Deferred { id: 1 })),
+            "the waiter must defer under pool pressure before its deadline passes"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+        let mut events: Vec<(usize, Event)> =
+            engine.step().into_iter().map(|e| (2, e)).collect();
+        events.extend(drain(&mut engine).into_iter().map(|(s, e)| (s + 3, e)));
+        assert_eq!(finished_of(&events, 1).2, FinishReason::DeadlineExceeded);
+        assert_eq!(finished_of(&events, 0).2, FinishReason::MaxNew);
+        assert_eq!(engine.pool().reserved_pages(), 0, "expiry must leave no reservation");
+        // Whole-budget follow-up admits — nothing leaked.
+        engine.submit(Request::greedy(2, big, 28));
+        let events = drain(&mut engine);
+        assert_eq!(finished_of(&events, 2).2, FinishReason::MaxNew);
+    }
+
+    #[test]
+    fn shed_and_expired_requests_are_not_cancellable_and_queue_metrics_track() {
+        let mut engine =
+            tiny_engine(ServerConfig { max_batch: 1, queue_cap: 1, ..Default::default() });
+        // Fill the queue, then overflow it: id 1 sheds itself (same class,
+        // nothing below to evict... id 0 is Interactive too, so the
+        // arrival is the victim).
+        engine.submit(Request::greedy(0, vec![1, 2], 2));
+        engine.submit(Request::greedy(1, vec![3, 4], 2));
+        // A cancel for the already-shed id must be a no-op (it is pending
+        // completion, not queued or active).
+        engine.cancel(1);
+        let events = drain(&mut engine);
+        assert_eq!(finished_of(&events, 1).2, FinishReason::Shed, "not Cancelled");
+        assert_eq!(finished_of(&events, 0).2, FinishReason::MaxNew);
+        let m = engine.snapshot();
+        assert_eq!((m.shed, m.cancellations), (1, 0));
+        assert_eq!(m.queue_cap, 1);
+        // Admitted request recorded exactly one queue-wait sample, in the
+        // Interactive histogram.
+        let interactive_waits: usize = m.queue_wait_hist[SloClass::Interactive.index()]
+            .iter()
+            .sum();
+        assert_eq!(interactive_waits, 1);
+        assert_eq!(m.queue_wait_hist[SloClass::Batch.index()].iter().sum::<usize>(), 0);
+    }
+
+    #[test]
+    fn tenant_stats_account_every_outcome() {
+        let mut engine =
+            tiny_engine(ServerConfig { max_batch: 1, queue_cap: 3, ..Default::default() });
+        engine.submit(Request::greedy(0, vec![1, 2], 2).tenant("acme"));
+        engine.submit(
+            Request::greedy(1, vec![3, 4], 2).tenant("acme").priority(SloClass::BestEffort),
+        );
+        engine.submit(Request::greedy(2, vec![5, 6], 2).tenant("zeta"));
+        // Overflow: acme's BestEffort entry sheds to admit this Batch
+        // arrival, which then expires while queued (deadline 0).
+        engine.submit(
+            Request::greedy(3, vec![7, 8], 2).tenant("omega").deadline_ms(0).priority(
+                SloClass::Batch,
+            ),
+        );
+        drain(&mut engine);
+        let m = engine.snapshot();
+        let stats: std::collections::BTreeMap<&str, &TenantStats> =
+            m.tenants.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        assert_eq!(stats["acme"], &TenantStats { submitted: 2, admitted: 1, shed: 1, expired: 0 });
+        assert_eq!(stats["zeta"], &TenantStats { submitted: 1, admitted: 1, shed: 0, expired: 0 });
+        assert_eq!(stats["omega"], &TenantStats { submitted: 1, admitted: 0, shed: 0, expired: 1 });
+        // JSON carries the same structure (spot-check one tenant + the
+        // per-class shapes).
+        let json = m.to_json();
+        assert_eq!(
+            json.get("tenants").and_then(|t| t.get("acme")).and_then(|t| t.get("shed")).and_then(Json::as_usize),
+            Some(1)
+        );
+        assert_eq!(
+            json.get("queue_depth").and_then(|d| d.get("interactive")).and_then(Json::as_usize),
+            Some(0)
+        );
+        assert_eq!(
+            json.get("queue_wait_hist").and_then(|h| h.get("batch")).and_then(Json::as_arr).map(|a| a.len()),
+            Some(QUEUE_WAIT_NBUCKETS)
+        );
+        // reset() clears tenant stats and histograms.
+        engine.reset();
+        let zero = engine.snapshot();
+        assert!(zero.tenants.is_empty());
+        assert_eq!(zero.shed, 0);
+        assert_eq!(zero.deadline_expired, 0);
+    }
+
+    #[test]
+    fn admitted_outputs_are_byte_identical_across_classes_and_tenants() {
+        // Scheduling metadata must never change what an admitted request
+        // generates: same ids, same prompts, same seed — tokens equal
+        // whether requests carry default or exotic tenant/class labels.
+        let prompts: Vec<Vec<u16>> = vec![
+            vec![10, 20, 30],
+            (0..7).map(|j| (j * 11 % 250) as u16).collect(),
+            vec![40, 50],
+        ];
+        let mut plain = tiny_server(2);
+        let want: Vec<Vec<u16>> = plain
+            .run(prompts.iter().cloned().enumerate().map(|(i, p)| Request::greedy(i as u64, p, 5)).collect())
+            .into_iter()
+            .map(|r| r.tokens)
+            .collect();
+        let mut labeled = tiny_server(2);
+        let classes = [SloClass::Interactive, SloClass::Interactive, SloClass::Interactive];
+        let got = labeled.run(
+            prompts
+                .iter()
+                .cloned()
+                .enumerate()
+                .map(|(i, p)| {
+                    Request::greedy(i as u64, p, 5)
+                        .tenant(format!("tenant-{i}"))
+                        .priority(classes[i])
+                        .deadline(Duration::from_secs(3600))
+                })
+                .collect(),
+        );
+        for (i, r) in got.iter().enumerate() {
+            assert_eq!(r.tokens, want[i], "request {i} diverged under tenant/class labels");
+        }
     }
 }

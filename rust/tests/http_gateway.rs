@@ -9,8 +9,9 @@
 use nanoquant::nn::decode::dense_decode_model;
 use nanoquant::nn::family_config;
 use nanoquant::nn::model::ModelParams;
+use nanoquant::serve::http::traffic::{run_traffic, TrafficConfig};
 use nanoquant::serve::http::{Gateway, GatewayConfig};
-use nanoquant::serve::{Engine, FinishReason, Request, Server, ServerConfig};
+use nanoquant::serve::{Engine, FinishReason, Request, Server, ServerConfig, SloClass};
 use nanoquant::util::json::Json;
 use nanoquant::util::rng::Rng;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -77,6 +78,13 @@ fn write_request(w: &mut impl Write, method: &str, target: &str, body: &str, clo
 
 /// Read one `Content-Length`-framed response; returns (status, body JSON).
 fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
+    let (status, _, json) = read_response_headed(reader);
+    (status, json)
+}
+
+/// Like [`read_response`] but also returns the response headers (names
+/// lower-cased), so reject tests can assert `Retry-After`.
+fn read_response_headed(reader: &mut BufReader<TcpStream>) -> (u16, Vec<(String, String)>, Json) {
     let mut line = String::new();
     reader.read_line(&mut line).expect("status line");
     let status: u16 = line
@@ -84,6 +92,7 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| panic!("bad status line {line:?}"));
+    let mut headers = Vec::new();
     let mut content_length = 0usize;
     loop {
         line.clear();
@@ -93,15 +102,23 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> (u16, Json) {
             break;
         }
         if let Some((name, value)) = trimmed.split_once(':') {
-            if name.eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse().expect("content-length value");
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                content_length = value.parse().expect("content-length value");
             }
+            headers.push((name, value));
         }
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body).expect("response body");
     let body = String::from_utf8(body).expect("utf8 body");
-    (status, Json::parse(&body).unwrap_or_else(|e| panic!("bad body JSON ({e}): {body}")))
+    let json = Json::parse(&body).unwrap_or_else(|e| panic!("bad body JSON ({e}): {body}"));
+    (status, headers, json)
+}
+
+fn retry_after(headers: &[(String, String)]) -> Option<&str> {
+    headers.iter().find(|(n, _)| n == "retry-after").map(|(_, v)| v.as_str())
 }
 
 /// One-shot request on a fresh connection.
@@ -169,6 +186,49 @@ fn frame_tokens(frame: &Json, key: &str) -> Vec<u16> {
         .iter()
         .map(|t| t.as_usize().expect("token must be an integer") as u16)
         .collect()
+}
+
+/// Poll `/v1/metrics` until `pred` holds; panics after `secs`.
+fn wait_metrics(addr: SocketAddr, secs: u64, why: &str, pred: impl Fn(&Json) -> bool) -> Json {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        let (status, metrics) = oneshot(addr, "GET", "/v1/metrics", "");
+        assert_eq!(status, 200);
+        if pred(&metrics) {
+            return metrics;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {why}: {metrics:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Total admission-queue depth across all classes.
+fn queue_depth(metrics: &Json) -> usize {
+    SloClass::ALL
+        .iter()
+        .map(|class| {
+            metrics
+                .get("queue_depth")
+                .and_then(|d| d.get(class.as_str()))
+                .and_then(Json::as_usize)
+                .unwrap_or_else(|| panic!("metrics missing queue_depth.{}", class.as_str()))
+        })
+        .sum()
+}
+
+/// Consume SSE frames until the first token arrives (request is running).
+fn wait_first_token(reader: &mut BufReader<TcpStream>) {
+    loop {
+        let frame = next_frame(reader).expect("stream ended before first token");
+        assert_ne!(
+            frame.get("done").and_then(Json::as_bool),
+            Some(true),
+            "request finished before first token: {frame:?}"
+        );
+        if frame.get("token").is_some() {
+            return;
+        }
+    }
 }
 
 fn kv_pool_field(metrics: &Json, key: &str) -> usize {
@@ -419,6 +479,259 @@ fn keep_alive_serves_sequential_requests_and_metrics_report_work() {
         assert_eq!(metrics.get("total_tokens").and_then(Json::as_usize), Some(3));
         assert!(metrics.get("weight_bytes").and_then(Json::as_usize).is_some_and(|b| b > 0));
         assert!(kv_pool_field(&metrics, "total_pages") > 0);
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn overload_sheds_lowest_class_with_429_while_interactive_completes() {
+    with_watchdog(180, || {
+        // One slot, two queue seats: the fourth concurrent request must
+        // push someone out, and strict class priority says who.
+        let scfg = ServerConfig { max_batch: 1, seed: 0, queue_cap: 2, ..Default::default() };
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        // A long Interactive stream pins the only slot while the queue
+        // fills behind it.
+        let mut a = open_sse(
+            addr,
+            "{\"prompt\": [1, 2, 3], \"max_new\": 1000, \"priority\": \"interactive\"}",
+        );
+        wait_first_token(&mut a);
+        // B (best_effort) then C (batch) take the two queue seats; the
+        // depth polls serialize their arrival order.
+        let mut b = BufReader::new(connect(addr));
+        write_request(
+            b.get_mut(),
+            "POST",
+            "/v1/generate",
+            "{\"prompt\": [4], \"max_new\": 2, \"priority\": \"best_effort\"}",
+            true,
+        );
+        wait_metrics(addr, 60, "B to queue", |m| queue_depth(m) == 1);
+        let mut c = BufReader::new(connect(addr));
+        write_request(
+            c.get_mut(),
+            "POST",
+            "/v1/generate",
+            "{\"prompt\": [5], \"max_new\": 2, \"priority\": \"batch\"}",
+            true,
+        );
+        wait_metrics(addr, 60, "C to queue", |m| queue_depth(m) == 2);
+        // D (interactive) overflows the queue. The victim is the youngest
+        // entry of the lowest waiting class strictly below it — B.
+        let mut d = BufReader::new(connect(addr));
+        write_request(
+            d.get_mut(),
+            "POST",
+            "/v1/generate",
+            "{\"prompt\": [6], \"max_new\": 2, \"priority\": \"interactive\"}",
+            true,
+        );
+        let (status, headers, json) = read_response_headed(&mut b);
+        assert_eq!(status, 429, "shed victim must get 429: {json:?}");
+        assert_eq!(json.get("reason").and_then(Json::as_str), Some("shed"));
+        assert_eq!(retry_after(&headers), Some("1"), "429 must carry Retry-After");
+        // The pinned stream finishes untouched...
+        let (streamed, done) = drain_sse(&mut a);
+        assert_eq!(streamed.len(), 1000, "admitted work must be unaffected by shedding");
+        assert_eq!(done.get("finish_reason").and_then(Json::as_str), Some("max_new"));
+        // ...then the surviving queue entries are admitted and served.
+        let (status, json) = read_response(&mut d);
+        assert_eq!(status, 200, "queued Interactive request must be served: {json:?}");
+        assert_eq!(frame_tokens(&json, "tokens").len(), 2);
+        let (status, json) = read_response(&mut c);
+        assert_eq!(status, 200, "queued Batch request must be served: {json:?}");
+        let metrics = wait_metrics(addr, 60, "engine to quiesce", |m| {
+            m.get("in_flight").and_then(Json::as_usize) == Some(0)
+        });
+        assert_eq!(metrics.get("shed").and_then(Json::as_usize), Some(1));
+        assert_eq!(kv_pool_field(&metrics, "reserved_pages"), 0);
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn queued_deadline_expiry_returns_503_and_releases_whole_reservation() {
+    with_watchdog(180, || {
+        let scfg = ServerConfig { max_batch: 1, seed: 0, queue_cap: 4, ..Default::default() };
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        let mut a = open_sse(addr, "{\"prompt\": [1, 2, 3], \"max_new\": 1000}");
+        wait_first_token(&mut a);
+        // Queued behind the pinned slot with a 30 ms budget: the engine
+        // must expire it at a tick, never admit it, and hold zero pages
+        // for it the whole time.
+        let mut e = BufReader::new(connect(addr));
+        write_request(
+            e.get_mut(),
+            "POST",
+            "/v1/generate",
+            "{\"prompt\": [7, 8], \"max_new\": 4, \"priority\": \"batch\", \"deadline_ms\": 30}",
+            true,
+        );
+        let (status, headers, json) = read_response_headed(&mut e);
+        assert_eq!(status, 503, "expired-in-queue must be 503: {json:?}");
+        assert_eq!(json.get("reason").and_then(Json::as_str), Some("deadline_exceeded"));
+        assert_eq!(retry_after(&headers), Some("1"), "503 must carry Retry-After");
+        // Hang up the pinned stream; the pool must come all the way back.
+        drop(a);
+        let metrics = wait_metrics(addr, 60, "pool to drain", |m| {
+            m.get("in_flight").and_then(Json::as_usize) == Some(0)
+                && kv_pool_field(m, "reserved_pages") == 0
+        });
+        assert_eq!(metrics.get("deadline_expired").and_then(Json::as_usize), Some(1));
+        assert_eq!(kv_pool_field(&metrics, "in_use_pages"), 0);
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn tenant_inflight_cap_rejects_with_tenant_cap_reason() {
+    with_watchdog(180, || {
+        let scfg = ServerConfig { max_batch: 2, seed: 0, ..Default::default() };
+        let gcfg = GatewayConfig { tenant_max_inflight: 1, ..Default::default() };
+        let gateway = start_gateway(scfg, gcfg);
+        let addr = gateway.local_addr();
+        let mut a =
+            open_sse(addr, "{\"prompt\": [1, 2], \"max_new\": 1000, \"tenant\": \"acme\"}");
+        wait_first_token(&mut a);
+        // Same tenant, second concurrent request: the gateway-edge cap
+        // fires before the engine ever sees it.
+        let mut b = BufReader::new(connect(addr));
+        write_request(
+            b.get_mut(),
+            "POST",
+            "/v1/generate",
+            "{\"prompt\": [3], \"max_new\": 2, \"tenant\": \"acme\"}",
+            true,
+        );
+        let (status, headers, json) = read_response_headed(&mut b);
+        assert_eq!(status, 429, "over-cap tenant must get 429: {json:?}");
+        assert_eq!(json.get("reason").and_then(Json::as_str), Some("tenant_cap"));
+        assert_eq!(retry_after(&headers), Some("1"));
+        // Another tenant is unaffected — the cap is per-tenant, not global.
+        let (status, json) =
+            oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [4], \"max_new\": 2, \"tenant\": \"zeta\"}");
+        assert_eq!(status, 200, "other tenants must pass: {json:?}");
+        // Dropping acme's stream frees its seat (RAII permit, released
+        // even on disconnect); retry until the cancel lands.
+        drop(a);
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let (status, json) = oneshot(
+                addr,
+                "POST",
+                "/v1/generate",
+                "{\"prompt\": [5], \"max_new\": 2, \"tenant\": \"acme\"}",
+            );
+            if status == 200 {
+                break;
+            }
+            assert_eq!(status, 429, "only the cap may reject here: {json:?}");
+            assert!(Instant::now() < deadline, "acme's seat never freed after disconnect");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn drain_endpoint_refuses_new_work_and_healthz_reports_draining() {
+    with_watchdog(120, || {
+        let gateway = start_gateway(ServerConfig::default(), GatewayConfig::default());
+        let addr = gateway.local_addr();
+        let (status, health) = oneshot(addr, "GET", "/healthz", "");
+        assert_eq!(status, 200);
+        assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+        let (status, _) = oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [1], \"max_new\": 2}");
+        assert_eq!(status, 200);
+        // Drain: the report shows the engine fully quiesced.
+        let (status, report) = oneshot(addr, "POST", "/v1/drain", "");
+        assert_eq!(status, 200);
+        assert_eq!(report.get("draining").and_then(Json::as_bool), Some(true));
+        let model = report
+            .get("models")
+            .and_then(|m| m.get("default"))
+            .unwrap_or_else(|| panic!("drain report missing default model: {report:?}"));
+        assert_eq!(model.get("in_flight").and_then(Json::as_usize), Some(0));
+        assert_eq!(model.get("reserved_pages").and_then(Json::as_usize), Some(0));
+        // New work is refused with a machine-readable reason + Retry-After.
+        let mut g = BufReader::new(connect(addr));
+        write_request(g.get_mut(), "POST", "/v1/generate", "{\"prompt\": [2], \"max_new\": 2}", true);
+        let (status, headers, json) = read_response_headed(&mut g);
+        assert_eq!(status, 503, "draining gateway must refuse generates: {json:?}");
+        assert_eq!(json.get("reason").and_then(Json::as_str), Some("draining"));
+        assert_eq!(retry_after(&headers), Some("1"));
+        // Health flips to draining, and the status code takes the gateway
+        // out of load-balancer rotation.
+        let mut h = BufReader::new(connect(addr));
+        write_request(h.get_mut(), "GET", "/healthz", "", true);
+        let (status, health) = read_response(&mut h);
+        assert_eq!(status, 503);
+        assert_eq!(health.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(health.get("status").and_then(Json::as_str), Some("draining"));
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn traffic_generator_overload_smoke_sheds_and_conserves_outcomes() {
+    with_watchdog(180, || {
+        // A deliberately tiny server (one slot, one queue seat) under a
+        // burst arriving far faster than it can serve, with a disconnect
+        // storm mixed in: some requests must shed, some must be served,
+        // every request must be accounted for exactly once, and the KV
+        // pool must come all the way back. This is the deterministic-seed
+        // smoke run CI exercises in the test job.
+        let scfg = ServerConfig { max_batch: 1, seed: 0, queue_cap: 1, ..Default::default() };
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        let cfg = TrafficConfig {
+            seed: 11,
+            requests: 24,
+            rate_rps: 2000.0,
+            prompt_min: 4,
+            prompt_max: 16,
+            max_new_min: 48,
+            max_new_max: 96,
+            disconnect_frac: 0.25,
+            ..Default::default()
+        };
+        let report = run_traffic(addr, &cfg);
+        assert_eq!(report.sent(), cfg.requests, "open loop must send every planned request");
+        for class in SloClass::ALL {
+            let c = &report.per_class[class.index()];
+            assert_eq!(
+                c.ok + c.shed + c.expired + c.rejected + c.disconnected,
+                c.sent,
+                "{} outcomes must conserve: {c:?}",
+                class.as_str()
+            );
+        }
+        assert!(
+            report.shed() > 0,
+            "a 24-request burst against one slot + one seat must shed: {report:?}"
+        );
+        // At least one admitted request streamed tokens (it either ran to
+        // completion or was one of the planned mid-stream hangups —
+        // which request gets the slot first is scheduling-dependent).
+        assert!(
+            report.per_class.iter().map(|c| c.ok + c.disconnected).sum::<usize>() >= 1,
+            "someone must still stream under overload: {report:?}"
+        );
+        assert!((0.0..=1.0).contains(&report.shed_rate));
+        // Server-side ledger agrees and the pool came all the way back.
+        let metrics = wait_metrics(addr, 60, "pool to drain", |m| {
+            m.get("in_flight").and_then(Json::as_usize) == Some(0)
+                && kv_pool_field(m, "reserved_pages") == 0
+        });
+        let engine_shed = metrics.get("shed").and_then(Json::as_usize).expect("shed counter");
+        assert!(
+            engine_shed >= report.shed(),
+            "engine shed ledger ({engine_shed}) behind client view ({})",
+            report.shed()
+        );
         gateway.shutdown();
     });
 }
