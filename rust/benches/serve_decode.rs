@@ -150,6 +150,57 @@ fn main() {
         );
     }
 
+    // Batched decode: per-slot GEMV ticks vs the cross-request GEMM tick at
+    // widths 1/4/8/16. Outputs are byte-identical either way, so the delta is
+    // pure kernel efficiency (one weight pass amortised over all live slots).
+    let mut batched_results = Json::obj();
+    for width in [1usize, 4, 8, 16] {
+        let mut mean_wall = [0.0f64; 2];
+        let mut tok_s = [0.0f64; 2];
+        for (mode, batched) in [(0usize, false), (1usize, true)] {
+            let mut times = Vec::new();
+            for run in 0..4 {
+                let mut server = Server::new(
+                    qm.to_decode_model(Engine::Packed),
+                    ServerConfig {
+                        max_batch: width,
+                        seed: 0,
+                        batched_decode: batched,
+                        ..Default::default()
+                    },
+                );
+                let reqs: Vec<Request> = (0..width as u64)
+                    .map(|i| Request::greedy(i, vec![(i * 3 % 250) as u16; 4], MAX_NEW))
+                    .collect();
+                server.run(reqs);
+                assert_eq!(server.metrics.total_tokens, width * MAX_NEW);
+                if batched {
+                    assert!(server.metrics.batched_ticks > 0);
+                } else {
+                    assert_eq!(server.metrics.batched_ticks, 0);
+                }
+                if run > 0 {
+                    times.push(server.metrics.wall_s);
+                }
+            }
+            let label = if batched { "batched" } else { "per-slot" };
+            let st = stats_from(&format!("decode {label} width{width}"), &times);
+            mean_wall[mode] = st.mean_s;
+            tok_s[mode] = (width * MAX_NEW) as f64 / st.mean_s;
+            println!("{st}   [{:.1} tok/s]", tok_s[mode]);
+        }
+        batched_results.insert(
+            &format!("width{width}"),
+            Json::obj()
+                .set("per_slot_tok_s", tok_s[0])
+                .set("batched_tok_s", tok_s[1])
+                .set("per_slot_mean_wall_s", mean_wall[0])
+                .set("batched_mean_wall_s", mean_wall[1])
+                .set("speedup", mean_wall[0] / mean_wall[1]),
+        );
+    }
+    results.insert("batched_decode", batched_results);
+
     let doc = Json::obj()
         .set("bench", "serve_decode")
         .set("model", cfg.name.as_str())

@@ -7,7 +7,7 @@
 //!   pack    --family --size --bpw --out m.nqck   quantize + write a packed NANOQCK2 serving artifact
 //!   inspect <path>              print a checkpoint/artifact header, tensor table, CRC status
 //!   eval    --family --size [--bpw]      perplexity + zero-shot
-//!   serve   --family --size [--stream] [--stop-tokens a,b] [--queue-cap N]   event-loop serving demo
+//!   serve   --family --size [--stream] [--stop-tokens a,b] [--queue-cap N] [--per-slot-decode]   event-loop serving demo
 //!   gateway --addr 127.0.0.1:8080 [--models a=a.nqck,b=b.nqck] [--kv-pages N]
 //!           [--queue-cap N] [--tenant-inflight N]   multi-model HTTP/SSE gateway
 //!   exp <id>                    regenerate a paper table/figure (or `all`)
@@ -229,6 +229,9 @@ fn cmd_serve(args: &Args) {
             kv_pages: args.get_usize_opt("kv-pages"),
             seed: args.get_u64("seed", 0),
             queue_cap: args.get_usize("queue-cap", nanoquant::serve::DEFAULT_QUEUE_CAP),
+            // Outputs are byte-identical either way; the per-slot path
+            // exists for A/B comparison against the batched tick.
+            batched_decode: !args.flag("per-slot-decode"),
             ..Default::default()
         },
     );
@@ -287,6 +290,7 @@ fn cmd_gateway(args: &Args) {
         kv_pages: args.get_usize_opt("kv-pages"),
         seed: args.get_u64("seed", 0),
         queue_cap: args.get_usize("queue-cap", nanoquant::serve::DEFAULT_QUEUE_CAP),
+        batched_decode: !args.flag("per-slot-decode"),
         ..Default::default()
     };
     let backing = if args.flag("heap") { Backing::Heap } else { Backing::Mmap };

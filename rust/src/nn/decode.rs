@@ -335,6 +335,57 @@ fn rope_vec(x: &mut [f32], pos: usize, n_heads: usize, hd: usize, theta: f32) {
     }
 }
 
+/// One token's causal attention for layer `li`: score the (RoPE'd) query
+/// row against cache positions `0..=pos`, softmax, and accumulate the V
+/// rows into `att` (pre-zeroed, `[d_model]`, heads concatenated). `scores`
+/// is caller scratch of at least `pos + 1` entries.
+///
+/// [`prefill_chunk_into`] and [`decode_batch_into`] both call this exact
+/// function, so the attention FP order is *structurally* identical across
+/// the single-token, chunked-prefill, and batched-decode paths — the
+/// bit-identity invariant never rests on keeping two loops in sync.
+fn attn_token_into(
+    cfg: &ModelConfig,
+    cache: &KvCache,
+    li: usize,
+    q: &[f32],
+    pos: usize,
+    scores: &mut [f32],
+    att: &mut [f32],
+) {
+    let hd = cfg.head_dim();
+    let groups = cfg.gqa_groups();
+    let scale = 1.0 / (hd as f32).sqrt();
+    for h in 0..cfg.n_heads {
+        let g = h / groups;
+        let qh = &q[h * hd..(h + 1) * hd];
+        let scores = &mut scores[..=pos];
+        let mut maxv = f32::NEG_INFINITY;
+        for (t, slot) in scores.iter_mut().enumerate() {
+            let kt = &cache.k_row(li, t)[g * hd..(g + 1) * hd];
+            let sc = crate::tensor::dot(qh, kt) * scale;
+            *slot = sc;
+            maxv = maxv.max(sc);
+        }
+        let mut z = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - maxv).exp();
+            z += *sc;
+        }
+        let inv = 1.0 / z;
+        let out = &mut att[h * hd..(h + 1) * hd];
+        for t in 0..=pos {
+            let p = scores[t] * inv;
+            if p != 0.0 {
+                let vt = &cache.v_row(li, t)[g * hd..(g + 1) * hd];
+                for (o, &vv) in out.iter_mut().zip(vt.iter()) {
+                    *o += p * vv;
+                }
+            }
+        }
+    }
+}
+
 /// Run one token through the model, appending to the cache, with every
 /// temporary taken from `s` — zero heap allocations per token once the
 /// scratch is warm. Returns the logits for the next-token distribution as a
@@ -392,7 +443,6 @@ pub fn prefill_chunk_into(
     let dff = cfg.d_ff;
     let hd = cfg.head_dim();
     let kvr = cfg.kv_row();
-    let groups = cfg.gqa_groups();
     let pos0 = cache.len;
     assert!(pos0 + c <= cache.max_seq, "KV cache overflow (max_seq={})", cache.max_seq);
     cache.ensure_capacity(pos0 + c);
@@ -418,40 +468,20 @@ pub fn prefill_chunk_into(
             cache.v_row_mut(li, pos).copy_from_slice(&s.cv[j * kvr..(j + 1) * kvr]);
         }
 
-        // Causal attention, token by token over positions 0..=pos.
-        let scale = 1.0 / (hd as f32).sqrt();
+        // Causal attention, token by token over positions 0..=pos (the
+        // exact loop batched decode runs per slot — see [`attn_token_into`]).
         s.catt[..c * d].fill(0.0);
         for j in 0..c {
             let pos = pos0 + j;
-            let att = &mut s.catt[j * d..(j + 1) * d];
-            for h in 0..cfg.n_heads {
-                let g = h / groups;
-                let qh = &s.cq[j * d + h * hd..j * d + (h + 1) * hd];
-                let scores = &mut s.scores[..=pos];
-                let mut maxv = f32::NEG_INFINITY;
-                for (t, slot) in scores.iter_mut().enumerate() {
-                    let kt = &cache.k_row(li, t)[g * hd..(g + 1) * hd];
-                    let sc = crate::tensor::dot(qh, kt) * scale;
-                    *slot = sc;
-                    maxv = maxv.max(sc);
-                }
-                let mut z = 0.0f32;
-                for sc in scores.iter_mut() {
-                    *sc = (*sc - maxv).exp();
-                    z += *sc;
-                }
-                let inv = 1.0 / z;
-                let out = &mut att[h * hd..(h + 1) * hd];
-                for t in 0..=pos {
-                    let p = scores[t] * inv;
-                    if p != 0.0 {
-                        let vt = &cache.v_row(li, t)[g * hd..(g + 1) * hd];
-                        for (o, &vv) in out.iter_mut().zip(vt.iter()) {
-                            *o += p * vv;
-                        }
-                    }
-                }
-            }
+            attn_token_into(
+                cfg,
+                cache,
+                li,
+                &s.cq[j * d..(j + 1) * d],
+                pos,
+                &mut s.scores,
+                &mut s.catt[j * d..(j + 1) * d],
+            );
         }
         b.wo.matvec_chunk_into(&s.catt[..c * d], c, &mut s.cproj[..c * d]);
         for (x, &p) in s.cx[..c * d].iter_mut().zip(s.cproj[..c * d].iter()) {
@@ -484,6 +514,228 @@ pub fn prefill_chunk_into(
             None => {
                 for (i, l) in s.logits.iter_mut().enumerate() {
                     *l = crate::tensor::dot(model.embed.row(i), &s.h);
+                }
+            }
+        }
+    }
+}
+
+/// Arena for one cross-request batched decode step ([`decode_batch_into`]):
+/// every buffer holds `cap` rows (the serving engine sizes it to
+/// `max_batch`), and a tick with `b <= cap` live decode slots uses the
+/// first `b` rows of each. The engine keeps one of these and recycles it
+/// across ticks exactly like the per-slot [`DecodeScratch`] arenas, so
+/// steady-state batched decode performs no heap allocation.
+pub struct BatchScratch {
+    cap: usize,
+    /// Residual stream rows [cap, d].
+    bx: Vec<f32>,
+    /// Per-block norm output rows [cap, d].
+    bh: Vec<f32>,
+    bq: Vec<f32>,
+    bk: Vec<f32>,
+    bv: Vec<f32>,
+    /// Attention output rows [cap, d].
+    batt: Vec<f32>,
+    /// Attention / MLP projection output rows [cap, d].
+    bproj: Vec<f32>,
+    bgate: Vec<f32>,
+    bup: Vec<f32>,
+    bact: Vec<f32>,
+    /// Final-norm output rows [cap, d].
+    bfin: Vec<f32>,
+    /// Per-slot softmax score strips [cap, max_seq] (slot attentions run
+    /// concurrently, so each needs its own strip).
+    scores: Vec<f32>,
+    /// Per-slot next-token logits [cap, vocab].
+    logits: Vec<f32>,
+    /// Stride of one score strip (`cfg.max_seq` at construction).
+    max_seq: usize,
+    /// Stride of one logits row (`cfg.vocab` at construction).
+    vocab: usize,
+}
+
+impl BatchScratch {
+    /// Arena for up to `cap` concurrently decoding slots of `cfg`-shaped
+    /// models.
+    pub fn new(cfg: &ModelConfig, cap: usize) -> BatchScratch {
+        assert!(cap >= 1);
+        let d = cfg.d_model;
+        let kv = cfg.kv_row();
+        BatchScratch {
+            cap,
+            bx: vec![0.0; cap * d],
+            bh: vec![0.0; cap * d],
+            bq: vec![0.0; cap * d],
+            bk: vec![0.0; cap * kv],
+            bv: vec![0.0; cap * kv],
+            batt: vec![0.0; cap * d],
+            bproj: vec![0.0; cap * d],
+            bgate: vec![0.0; cap * cfg.d_ff],
+            bup: vec![0.0; cap * cfg.d_ff],
+            bact: vec![0.0; cap * cfg.d_ff],
+            bfin: vec![0.0; cap * d],
+            scores: vec![0.0; cap * cfg.max_seq],
+            logits: vec![0.0; cap * cfg.vocab],
+            max_seq: cfg.max_seq,
+            vocab: cfg.vocab,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Logits row for batch slot `j`, written by the most recent
+    /// [`decode_batch_into`] on this scratch — callers sample in place
+    /// instead of copying the vocab-sized buffer (mirrors
+    /// [`method@DecodeScratch::logits`]).
+    pub fn logits(&self, j: usize) -> &[f32] {
+        &self.logits[j * self.vocab..(j + 1) * self.vocab]
+    }
+}
+
+/// One decode tick for `b` independent sequences as a single cross-request
+/// chunk: all `b` slots' hidden states run through every projection —
+/// Q/K/V/O, gate/up/down, *and* the vocab head, which (unlike prefill)
+/// every decoding slot needs each tick — via [`MatVec::matvec_chunk_into`]
+/// with `c = b`, so each packed bit matrix is traversed once per *tick*
+/// instead of once per slot. Attention stays per slot against that slot's
+/// own cache and position (sequences are independent), fanned across the
+/// worker pool.
+///
+/// `caches[j]` receives token `tokens[j]` at its own `len` position and
+/// advances by one; slot `j`'s logits land in
+/// [`method@BatchScratch::logits`].
+/// `b` is just `tokens.len()` — slots joining or finishing between ticks
+/// simply change the next call's width, with no state carried here.
+///
+/// Per slot the result is **bit-identical** to [`decode_step_into`]: every
+/// chunk kernel is bit-identical per vector to its `c = 1` form by the
+/// [`MatVec`] contract, and the per-row orchestration (rmsnorm, RoPE,
+/// attention via the shared `attn_token_into` helper, SiLU, residual adds,
+/// final norm, head) performs the same operations in the same order on the
+/// same values as [`prefill_chunk_into`] does for one token.
+pub fn decode_batch_into(
+    model: &DecodeModel,
+    caches: &mut [KvCache],
+    tokens: &[u16],
+    s: &mut BatchScratch,
+) {
+    let b = tokens.len();
+    if b == 0 {
+        return;
+    }
+    assert_eq!(caches.len(), b, "decode_batch_into: caches vs tokens");
+    assert!(b <= s.cap, "batch {} exceeds scratch capacity {}", b, s.cap);
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    let dff = cfg.d_ff;
+    let hd = cfg.head_dim();
+    let kvr = cfg.kv_row();
+    assert_eq!(s.max_seq, cfg.max_seq, "scratch built for a different geometry");
+    assert_eq!(s.vocab, cfg.vocab, "scratch built for a different vocab");
+    for cache in caches.iter_mut() {
+        assert!(cache.len < cache.max_seq, "KV cache overflow (max_seq={})", cache.max_seq);
+        cache.ensure_capacity(cache.len + 1);
+    }
+
+    for (j, &tok) in tokens.iter().enumerate() {
+        s.bx[j * d..(j + 1) * d].copy_from_slice(model.embed.row(tok as usize));
+    }
+    for (li, blk) in model.blocks.iter().enumerate() {
+        // Attention projections for the whole batch, then RoPE + cache
+        // writes per slot at that slot's own position.
+        for j in 0..b {
+            rmsnorm_into(
+                &s.bx[j * d..(j + 1) * d],
+                &blk.ln1,
+                cfg.eps,
+                &mut s.bh[j * d..(j + 1) * d],
+            );
+        }
+        blk.wq.matvec_chunk_into(&s.bh[..b * d], b, &mut s.bq[..b * d]);
+        blk.wk.matvec_chunk_into(&s.bh[..b * d], b, &mut s.bk[..b * kvr]);
+        blk.wv.matvec_chunk_into(&s.bh[..b * d], b, &mut s.bv[..b * kvr]);
+        for (j, cache) in caches.iter_mut().enumerate() {
+            let pos = cache.len;
+            rope_vec(&mut s.bq[j * d..(j + 1) * d], pos, cfg.n_heads, hd, cfg.rope_theta);
+            rope_vec(&mut s.bk[j * kvr..(j + 1) * kvr], pos, cfg.n_kv_heads, hd, cfg.rope_theta);
+            cache.k_row_mut(li, pos).copy_from_slice(&s.bk[j * kvr..(j + 1) * kvr]);
+            cache.v_row_mut(li, pos).copy_from_slice(&s.bv[j * kvr..(j + 1) * kvr]);
+        }
+
+        // Per-slot attention, fanned over the pool: sequences are
+        // independent, so the parallelism that used to span whole slot
+        // steps spans just this phase (the shared GEMMs above parallelize
+        // over weight rows inside the kernels instead). Each task writes
+        // only its own `batt` chunk (handed out disjoint by the pool) and
+        // its own score strip (split by raw pointer, same idiom as
+        // `util::threadpool::parallel_chunks_mut` itself).
+        s.batt[..b * d].fill(0.0);
+        {
+            struct SendPtr(*mut f32);
+            unsafe impl Send for SendPtr {}
+            unsafe impl Sync for SendPtr {}
+            let scores_ptr = SendPtr(s.scores.as_mut_ptr());
+            let max_seq = s.max_seq;
+            let bq = &s.bq;
+            let caches_ro: &[KvCache] = caches;
+            crate::util::threadpool::parallel_chunks_mut(&mut s.batt[..b * d], d, |j, att| {
+                // SAFETY: strip `j` is touched only by chunk-index `j`'s
+                // task, and the buffer outlives the region
+                // (`parallel_chunks_mut` joins before returning).
+                let scores = unsafe {
+                    std::slice::from_raw_parts_mut(scores_ptr.0.add(j * max_seq), max_seq)
+                };
+                let cache = &caches_ro[j];
+                attn_token_into(cfg, cache, li, &bq[j * d..(j + 1) * d], cache.len, scores, att);
+            });
+        }
+        blk.wo.matvec_chunk_into(&s.batt[..b * d], b, &mut s.bproj[..b * d]);
+        for (x, &p) in s.bx[..b * d].iter_mut().zip(s.bproj[..b * d].iter()) {
+            *x += p;
+        }
+
+        // MLP.
+        for j in 0..b {
+            rmsnorm_into(
+                &s.bx[j * d..(j + 1) * d],
+                &blk.ln2,
+                cfg.eps,
+                &mut s.bh[j * d..(j + 1) * d],
+            );
+        }
+        blk.wg.matvec_chunk_into(&s.bh[..b * d], b, &mut s.bgate[..b * dff]);
+        blk.wu.matvec_chunk_into(&s.bh[..b * d], b, &mut s.bup[..b * dff]);
+        for ((a, &gt), &u) in
+            s.bact[..b * dff].iter_mut().zip(s.bgate[..b * dff].iter()).zip(s.bup[..b * dff].iter())
+        {
+            *a = silu(gt) * u;
+        }
+        blk.wd.matvec_chunk_into(&s.bact[..b * dff], b, &mut s.bproj[..b * d]);
+        for (x, &p) in s.bx[..b * d].iter_mut().zip(s.bproj[..b * d].iter()) {
+            *x += p;
+        }
+    }
+    for cache in caches.iter_mut() {
+        cache.len += 1;
+    }
+
+    // Final norm + vocab head for every slot (decode always samples).
+    for j in 0..b {
+        let h = &mut s.bfin[j * d..(j + 1) * d];
+        rmsnorm_into(&s.bx[j * d..(j + 1) * d], &model.ln_f, cfg.eps, h);
+    }
+    match &model.head {
+        Some(head) => head.matvec_chunk_into(&s.bfin[..b * d], b, &mut s.logits[..b * cfg.vocab]),
+        None => {
+            // Tied embeddings: the same per-row dot loop as the c = 1 path,
+            // per slot, so logits stay bit-identical.
+            for j in 0..b {
+                let h = &s.bfin[j * d..(j + 1) * d];
+                for (i, l) in s.logits[j * cfg.vocab..(j + 1) * cfg.vocab].iter_mut().enumerate() {
+                    *l = crate::tensor::dot(model.embed.row(i), h);
                 }
             }
         }
@@ -731,6 +983,114 @@ mod tests {
         assert_eq!(cache.len, 5);
         cache.reset();
         assert_eq!(cache.len, 0);
+    }
+
+    #[test]
+    fn batch_width_one_is_bit_identical_to_decode_step() {
+        // `decode_batch_into` at b = 1 must be `decode_step_into` exactly —
+        // logits and every KV row asserted with ==, across random
+        // geometries, prompts, and step counts.
+        use crate::util::quickcheck::check;
+        check("decode_batch_into b=1 == decode_step_into (exact)", 8, |g| {
+            let family = if g.bool() { "l2" } else { "g3" };
+            let cfg = family_config(family, "xs");
+            let mut rng = Rng::new(g.seed);
+            let params = ModelParams::init(&cfg, &mut rng);
+            let dm = dense_decode_model(&params);
+            let plen = g.int(1, 9);
+            let prompt: Vec<u16> = (0..plen).map(|_| g.int(0, 249) as u16).collect();
+            let steps = g.int(1, 4);
+
+            let mut cache_a = KvCache::new(&cfg);
+            let mut s_a = DecodeScratch::new(&cfg);
+            let mut caches_b = vec![KvCache::new(&cfg)];
+            let mut s_pre = DecodeScratch::new(&cfg);
+            for &t in &prompt {
+                decode_step_into(&dm, &mut cache_a, t, &mut s_a);
+                decode_step_into(&dm, &mut caches_b[0], t, &mut s_pre);
+            }
+            let mut bs = BatchScratch::new(&cfg, 1);
+            for k in 0..steps {
+                let t = ((g.seed as usize + k * 17) % 250) as u16;
+                decode_step_into(&dm, &mut cache_a, t, &mut s_a);
+                decode_batch_into(&dm, &mut caches_b, &[t], &mut bs);
+                assert_eq!(s_a.logits(), bs.logits(0), "{family} step {k} logits diverged");
+            }
+            assert_eq!(cache_a.len, caches_b[0].len);
+            for li in 0..cfg.n_layers {
+                for t in 0..cache_a.len {
+                    assert_eq!(cache_a.k_row(li, t), caches_b[0].k_row(li, t), "K l{li} t{t}");
+                    assert_eq!(cache_a.v_row(li, t), caches_b[0].v_row(li, t), "V l{li} t{t}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn batched_decode_is_bit_identical_to_per_slot_steps_as_width_changes() {
+        // Three packed-engine sequences at *different* positions decode as
+        // one batch; one drops out mid-stream (width 3 → 2), mirroring
+        // slots finishing between serving ticks. Every slot's logits each
+        // round must equal its own `decode_step_into` trajectory exactly —
+        // this pins the real chunk kernels (PackedLinear), not just the
+        // dense reference, and pins that batch width is a free per-call
+        // parameter.
+        use crate::model::packed::quantized_zoo_model;
+        use crate::quant::Engine;
+        let qm = quantized_zoo_model(11);
+        let dm = qm.to_decode_model(Engine::Packed);
+        let cfg = dm.cfg.clone();
+        let prompts: [Vec<u16>; 3] = [
+            (0..5u16).map(|i| i * 7 % 250).collect(),
+            (0..2u16).map(|i| i * 11 + 3).collect(),
+            (0..9u16).map(|i| i * 3 + 1).collect(),
+        ];
+        let tok = |slot: usize, round: usize| ((slot * 41 + round * 13 + 2) % 250) as u16;
+        const ROUNDS: usize = 4;
+        const DROP_AFTER: usize = 2; // slot 1 leaves after this many rounds
+
+        // Reference: each sequence decoded entirely on its own.
+        let mut want: Vec<Vec<Vec<f32>>> = Vec::new();
+        for (slot, prompt) in prompts.iter().enumerate() {
+            let mut cache = KvCache::new(&cfg);
+            let mut s = DecodeScratch::new(&cfg);
+            for &t in prompt {
+                decode_step_into(&dm, &mut cache, t, &mut s);
+            }
+            let rounds = if slot == 1 { DROP_AFTER } else { ROUNDS };
+            want.push(
+                (0..rounds)
+                    .map(|k| decode_step_into(&dm, &mut cache, tok(slot, k), &mut s).to_vec())
+                    .collect(),
+            );
+        }
+
+        // Batched: same prefill, then shrinking-width batch rounds.
+        let mut caches: Vec<KvCache> = Vec::new();
+        let mut live: Vec<usize> = vec![0, 1, 2];
+        for prompt in prompts.iter() {
+            let mut cache = KvCache::new(&cfg);
+            let mut s = DecodeScratch::new(&cfg);
+            for &t in prompt {
+                decode_step_into(&dm, &mut cache, t, &mut s);
+            }
+            caches.push(cache);
+        }
+        let mut bs = BatchScratch::new(&cfg, 3);
+        let mut tokens = Vec::new();
+        for k in 0..ROUNDS {
+            if k == DROP_AFTER {
+                let gone = live.iter().position(|&slot| slot == 1).unwrap();
+                live.remove(gone);
+                caches.remove(gone);
+            }
+            tokens.clear();
+            tokens.extend(live.iter().map(|&slot| tok(slot, k)));
+            decode_batch_into(&dm, &mut caches, &tokens, &mut bs);
+            for (j, &slot) in live.iter().enumerate() {
+                assert_eq!(bs.logits(j), &want[slot][k][..], "slot {slot} round {k} diverged");
+            }
+        }
     }
 
     #[test]

@@ -6,20 +6,40 @@
 //! kernel keeps it in shared memory).
 
 use super::pack::{
-    build_byte_lut, build_byte_lut_multi, lut_dot, lut_dot_multi, packed_gemm, packed_gemv,
+    build_byte_lut, build_byte_lut_multi, lut_dot, lut_gemm_multi, packed_gemm, packed_gemv,
 };
 use super::scheme::QuantLinear;
 use crate::nn::decode::MatVec;
 use crate::tensor::Tensor;
 use std::cell::RefCell;
+use std::sync::OnceLock;
 
 /// Below this output-row count the stage-2 byte LUT does not amortize its
 /// ~256·(r/8) build adds over the rows and the register-blocked GEMV wins.
 /// Analytic crossover ≈ 37 rows (build ~256·g adds vs ~7·8·g saved per row,
 /// g byte groups); 64 leaves margin for the LUT's worse cache behavior.
 /// Re-measure with `cargo bench --bench binary_kernels` (EXPERIMENTS.md
-/// §Perf) before tuning.
+/// §Perf) before tuning, or override per process with
+/// `NANOQUANT_LUT_MIN_ROWS` (see [`lut_min_rows`]).
 const LUT_MIN_ROWS: usize = 64;
+
+/// The GEMV/LUT crossover in effect: the built-in `LUT_MIN_ROWS` (64)
+/// unless the
+/// `NANOQUANT_LUT_MIN_ROWS` environment variable overrides it (parsed once
+/// and cached, like `NANOQUANT_THREADS`). Bench sweeps probe the crossover
+/// by re-running the process with different values — groundwork for the
+/// autotune pass ROADMAP sketches; unparsable values fall back to the
+/// default. `NANOQUANT_LUT_MIN_ROWS=0` forces the LUT path everywhere;
+/// a huge value forces the blocked GEMV everywhere.
+pub fn lut_min_rows() -> usize {
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("NANOQUANT_LUT_MIN_ROWS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(LUT_MIN_ROWS)
+    })
+}
 
 /// Per-thread kernel scratch: scaled input, rank intermediate, and the
 /// stage-2 byte LUT. Reused across calls (and across the rows a worker
@@ -32,7 +52,9 @@ struct KernelScratch {
     lut: Vec<f32>,
     /// Chunk path only: per-vector input sums, then per-vector rank sums.
     totals: Vec<f32>,
-    /// Chunk path only: one LUT row's `c` partial results.
+    /// Chunk path only: the row-major `[out_dim, c]` stage-2 LUT results
+    /// ([`lut_gemm_multi`]'s layout), transposed+scaled into the caller's
+    /// vector-major `out`.
     vals: Vec<f32>,
 }
 
@@ -76,7 +98,7 @@ impl PackedLinear {
             // Stage 2: y = s1 ⊙ (U t).
             let total_t: f32 = s.t.iter().sum();
             let n = q.out_dim();
-            if n >= LUT_MIN_ROWS {
+            if n >= lut_min_rows() {
                 build_byte_lut(&s.t, q.u.words_per_row, &mut s.lut);
                 for (i, o) in out.iter_mut().enumerate() {
                     *o = q.s1[i] * lut_dot(q.u.row(i), &s.lut, total_t);
@@ -93,9 +115,13 @@ impl PackedLinear {
     /// Chunked forward: `c` row-major input vectors (`xs[j * in_dim..]`) to
     /// `c` row-major outputs, with one traversal of each packed bit matrix
     /// serving the whole chunk and a single stage-2 LUT build amortized
-    /// across the chunk's GEMMs (see [`build_byte_lut_multi`]). Per vector
-    /// the result is bit-identical to [`PackedLinear::forward_into`] — the
-    /// chunked-prefill correctness contract.
+    /// across the chunk's GEMMs (see [`build_byte_lut_multi`]). The stage-2
+    /// row loop fans out over the worker pool ([`lut_gemm_multi`]) — this is
+    /// where decode's threadpool parallelism lives once the serve tick
+    /// batches slots into one chunk instead of running one GEMV per slot.
+    /// Per vector the result is bit-identical to
+    /// [`PackedLinear::forward_into`] — the chunked-prefill (and batched
+    /// decode) correctness contract.
     pub fn forward_chunk(&self, xs: &[f32], c: usize, out: &mut [f32]) {
         let q = &self.q;
         let (m, n, r) = (q.in_dim(), q.out_dim(), q.rank());
@@ -119,13 +145,20 @@ impl PackedLinear {
             // Stage 2: Y = s1 ⊙ (U T).
             s.totals.clear();
             s.totals.extend((0..c).map(|j| s.t[j * r..(j + 1) * r].iter().sum::<f32>()));
-            if n >= LUT_MIN_ROWS {
+            if n >= lut_min_rows() {
                 build_byte_lut_multi(&s.t, c, r, q.u.words_per_row, &mut s.lut);
-                s.vals.resize(c, 0.0);
+                // Row-parallel shared GEMM into a row-major strip, then
+                // transpose + scale into the caller's vector-major layout.
+                // The strip is what gives `lut_gemm_multi` contiguous
+                // disjoint per-row chunks to fan over the pool; the single
+                // multiply per element in the transpose keeps each result
+                // bit-identical to the serial `s1[i] * lut_dot(...)` path.
+                s.vals.resize(n * c, 0.0);
+                lut_gemm_multi(&q.u, &s.lut, c, &s.totals, &mut s.vals);
                 for i in 0..n {
-                    lut_dot_multi(q.u.row(i), &s.lut, c, &s.totals, &mut s.vals);
-                    for j in 0..c {
-                        out[j * n + i] = q.s1[i] * s.vals[j];
+                    let strip = &s.vals[i * c..(i + 1) * c];
+                    for (j, &v) in strip.iter().enumerate() {
+                        out[j * n + i] = q.s1[i] * v;
                     }
                 }
             } else {

@@ -419,6 +419,44 @@ pub fn lut_dot_multi(row: &[u32], lut: &[f32], c: usize, totals: &[f32], out: &m
     }
 }
 
+/// Whole-matrix stage-2 GEMM over a [`build_byte_lut_multi`] table:
+/// `out[i * c + j] = dot(signs_row_i, t_j)` for every row of `bits`.
+///
+/// The output is row-major by *weight row* (vector-minor) — note the
+/// transpose relative to [`packed_gemm`]'s vector-major layout. Each row's
+/// `c` results form one contiguous strip written by exactly one
+/// [`lut_dot_multi`] call, which is what lets the row loop fan out over the
+/// worker pool in disjoint `&mut` chunks: parallelism moves *across rows of
+/// the shared matrix*, never inside a row, so per (row, vector) the result
+/// is bit-identical to the serial per-row loop regardless of thread count.
+///
+/// `c` is a plain runtime parameter: the serve loop calls this once per
+/// decode tick with `c = live slots`, and slots joining or finishing
+/// mid-stream just change the chunk width of the next call — the table and
+/// output buffers are caller-owned scratch resized per call.
+pub fn lut_gemm_multi(bits: &PackedBits, lut: &[f32], c: usize, totals: &[f32], out: &mut [f32]) {
+    assert_eq!(totals.len(), c, "lut_gemm_multi: totals length vs c");
+    assert_eq!(out.len(), bits.rows * c, "lut_gemm_multi: out length vs rows * c");
+    if c == 0 || bits.rows == 0 {
+        return;
+    }
+    let wpr = bits.words_per_row;
+    let words = &bits.words[..];
+    // Coarse grain: enough rows per task that handing out tickets is noise
+    // next to the `words * 4 * c` lookups each row costs. A single chunk
+    // degrades to the serial loop inside `parallel_chunks_mut` (the caller
+    // participates, so small matrices never pay a park/unpark round trip).
+    let rows_per_task =
+        (bits.rows / (crate::util::threadpool::num_threads() * 4)).max(16).min(bits.rows);
+    crate::util::threadpool::parallel_chunks_mut(out, rows_per_task * c, |task, strip| {
+        let i0 = task * rows_per_task;
+        for (k, row_out) in strip.chunks_exact_mut(c).enumerate() {
+            let i = i0 + k;
+            lut_dot_multi(&words[i * wpr..(i + 1) * wpr], lut, c, totals, row_out);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -572,6 +610,38 @@ mod tests {
                     let want = lut_dot(p.row(i), &sluts[j], totals[j]);
                     assert_eq!(per_vec[j], want, "lut row {i} vec {j}");
                 }
+            }
+        });
+    }
+
+    #[test]
+    fn lut_gemm_is_bit_identical_to_serial_row_loop() {
+        // The batched-decode contract: fanning the row loop across the pool
+        // must not change any result bit (parallelism only moves rows across
+        // threads; the per-row FP order is lut_dot_multi's either way). Row
+        // counts straddle the parallel grain so both the single-chunk
+        // (serial) and multi-chunk paths are exercised.
+        check("lut_gemm_multi == serial lut_dot_multi rows (exact)", 30, |g| {
+            let rows = match g.int(0, 2) {
+                0 => g.int(1, 40),
+                _ => g.int(100, 400),
+            };
+            let cols = g.int(1, 96);
+            let c = g.int(1, 9);
+            let mut rng = Rng::new(g.seed);
+            let signs = Tensor::randn(&[rows, cols], 1.0, &mut rng).sign_pm1();
+            let p = PackedBits::from_signs(&signs);
+            let ts: Vec<f32> = rng.normal_vec(c * cols, 1.0);
+            let totals: Vec<f32> =
+                (0..c).map(|j| ts[j * cols..(j + 1) * cols].iter().sum()).collect();
+            let mut lut = Vec::new();
+            build_byte_lut_multi(&ts, c, cols, p.words_per_row, &mut lut);
+            let mut got = vec![f32::NAN; rows * c];
+            lut_gemm_multi(&p, &lut, c, &totals, &mut got);
+            let mut want = vec![f32::NAN; c];
+            for i in 0..rows {
+                lut_dot_multi(p.row(i), &lut, c, &totals, &mut want);
+                assert_eq!(&got[i * c..(i + 1) * c], &want[..], "row {i}");
             }
         });
     }

@@ -43,7 +43,8 @@ pub use kv_pool::KvPool;
 
 use crate::data::detokenize;
 use crate::nn::decode::{
-    decode_step_into, prefill_chunk_into, DecodeModel, DecodeScratch, KvCache,
+    decode_batch_into, decode_step_into, prefill_chunk_into, BatchScratch, DecodeModel,
+    DecodeScratch, KvCache,
 };
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -391,6 +392,14 @@ pub struct ServerConfig {
     /// bursts that free slots would absorb next tick, so this must stay
     /// comfortably above `max_batch`.
     pub queue_cap: usize,
+    /// Advance all decode-ready slots as *one* cross-request batched step
+    /// per tick ([`crate::nn::decode::decode_batch_into`]: one chunk pass
+    /// per weight matrix with `c` = live decode slots) instead of one
+    /// per-slot GEMV pass each. Outputs are byte-identical either way
+    /// (pinned by the batch-invariance tests); `false` keeps the legacy
+    /// per-slot path, retained for A/B benching
+    /// (`benches/serve_decode.rs` `results.batched_decode`).
+    pub batched_decode: bool,
 }
 
 impl Default for ServerConfig {
@@ -402,6 +411,7 @@ impl Default for ServerConfig {
             kv_pages: None,
             prefill_chunk: 8,
             queue_cap: DEFAULT_QUEUE_CAP,
+            batched_decode: true,
         }
     }
 }
@@ -432,6 +442,15 @@ pub struct ServeMetrics {
     /// Scheduler ticks spent in prefill, summed over slots (chunked prefill
     /// divides this by the chunk factor relative to one-token-per-tick).
     pub prefill_ticks: usize,
+    /// Ticks whose decode phase ran as one cross-request batched step (at
+    /// least one decode-ready slot and [`ServerConfig::batched_decode`]
+    /// on). Stays 0 on the legacy per-slot path.
+    pub batched_ticks: usize,
+    /// Mean decode-batch width over those ticks — decode slots advanced per
+    /// batched tick (0.0 before any batched tick). The closer this sits to
+    /// the live concurrency, the more each packed bit-matrix traversal is
+    /// amortizing.
+    pub decode_batch_width: f64,
     /// Weight bytes of the engine (effective compressed size).
     pub weight_bytes: usize,
     /// Peak bytes of KV pages simultaneously attached to active slots —
@@ -496,6 +515,8 @@ impl ServeMetrics {
             .set("throughput_tokens_per_s", self.throughput_tokens_per_s)
             .set("peak_active_slots", self.peak_active_slots)
             .set("prefill_ticks", self.prefill_ticks)
+            .set("batched_ticks", self.batched_ticks)
+            .set("decode_batch_width", self.decode_batch_width)
             .set("weight_bytes", self.weight_bytes)
             .set("peak_kv_bytes", self.peak_kv_bytes)
             .set("admission_deferrals", self.admission_deferrals)
@@ -770,6 +791,23 @@ pub struct Engine {
     /// finished requests; recycling them keeps steady-state admission
     /// allocation-free.
     spares: Vec<(KvCache, DecodeScratch)>,
+    /// The cross-request batched-decode arena, recycled across ticks like
+    /// the spare-pool arenas (lazily built to `max_batch` rows on the
+    /// first batched tick, then reused forever — `Option` so the tick can
+    /// take it while `self` stays borrowable).
+    batch: Option<BatchScratch>,
+    /// Slot indices (ascending) decoding in this tick's batched pass —
+    /// row `j` of the batch is slot `batch_rows[j]`. Rebuilt every tick;
+    /// the sampling loop uses it to route each slot to its logits row.
+    batch_rows: Vec<usize>,
+    /// The token each batched slot feeds this tick (parallel to
+    /// `batch_rows`).
+    batch_tokens: Vec<u16>,
+    /// Contiguous staging for the batched slots' caches: moved (struct
+    /// moves — page tables travel, nothing is copied or allocated) out of
+    /// their slots for the `decode_batch_into` call and moved straight
+    /// back. Empty between ticks; the buffer's capacity is what's reused.
+    batch_caches: Vec<KvCache>,
     rng: Rng,
     /// Cancellations requested since the last tick boundary (applied, in
     /// call order, at the start of the next `step()`).
@@ -785,6 +823,10 @@ pub struct Engine {
     total_tokens: usize,
     prefill_tokens: usize,
     prefill_ticks: usize,
+    batched_ticks: usize,
+    /// Decode slots advanced by batched passes, summed over ticks (the
+    /// numerator of the mean `decode_batch_width`).
+    decode_slot_steps: usize,
     peak_active: usize,
     deferrals: usize,
     cancellations: usize,
@@ -819,12 +861,18 @@ impl Engine {
             rng,
             queue: AdmissionQueue::new(cfg.queue_cap),
             spares: Vec::new(),
+            batch: None,
+            batch_rows: Vec::new(),
+            batch_tokens: Vec::new(),
+            batch_caches: Vec::new(),
             cancels: Vec::new(),
             instant_done: Vec::new(),
             shed_pending: Vec::new(),
             total_tokens: 0,
             prefill_tokens: 0,
             prefill_ticks: 0,
+            batched_ticks: 0,
+            decode_slot_steps: 0,
             peak_active: 0,
             deferrals: 0,
             cancellations: 0,
@@ -936,6 +984,11 @@ impl Engine {
         } else {
             (0.0, 0.0)
         };
+        let decode_batch_width = if self.batched_ticks > 0 {
+            self.decode_slot_steps as f64 / self.batched_ticks as f64
+        } else {
+            0.0
+        };
         ServeMetrics {
             total_tokens: self.total_tokens,
             prefill_tokens: self.prefill_tokens,
@@ -944,6 +997,8 @@ impl Engine {
             throughput_tokens_per_s,
             peak_active_slots: self.peak_active,
             prefill_ticks: self.prefill_ticks,
+            batched_ticks: self.batched_ticks,
+            decode_batch_width,
             weight_bytes: self.model.weight_bytes(),
             peak_kv_bytes: self.pool.peak_bytes(),
             admission_deferrals: self.deferrals,
@@ -980,6 +1035,8 @@ impl Engine {
         self.total_tokens = 0;
         self.prefill_tokens = 0;
         self.prefill_ticks = 0;
+        self.batched_ticks = 0;
+        self.decode_slot_steps = 0;
         self.peak_active = 0;
         self.deferrals = 0;
         self.cancellations = 0;
@@ -1214,46 +1271,110 @@ impl Engine {
             }
         }
 
-        // ---- One scheduler tick: advance every active slot — one decode
-        // token, or up to `prefill_chunk` prompt tokens. ----
-        let model = &self.model;
-        parallel_chunks_mut(&mut self.active, 1, |_, slot_chunk| {
-            if let Some(slot) = slot_chunk[0].as_mut() {
-                if !slot.prefill_done {
-                    let end = slot.prefill_target;
-                    let last = end == slot.req.prompt.len();
-                    prefill_chunk_into(
-                        model,
-                        &mut slot.cache,
-                        &slot.req.prompt[slot.prefill_cursor..end],
-                        &mut slot.scratch,
-                        last,
-                    );
-                    slot.prefill_cursor = end;
-                    if last {
-                        slot.prefill_done = true;
+        // ---- Gather this tick's decode set: slots already past prefill,
+        // in ascending slot order (row `j` of the batch is slot
+        // `batch_rows[j]`). Membership is decided *before* the compute
+        // phase, so slots whose prefill completes this very tick sample
+        // from their own prefill logits and join the batch next tick —
+        // exactly when the per-slot path would first decode them.
+        self.batch_rows.clear();
+        self.batch_tokens.clear();
+        if self.cfg.batched_decode {
+            for (i, slot) in self.active.iter().enumerate() {
+                if let Some(slot) = slot {
+                    if slot.prefill_done {
+                        self.batch_rows.push(i);
+                        self.batch_tokens.push(*slot.generated.last().unwrap());
                     }
-                } else {
-                    let next_token = *slot.generated.last().unwrap();
-                    decode_step_into(model, &mut slot.cache, next_token, &mut slot.scratch);
                 }
             }
-        });
+        }
+
+        // ---- Compute phase 1: per-slot chunked prefill, one slot per
+        // worker (and, with batched decode off, the legacy per-slot decode
+        // step). Skipped entirely on pure-decode batched ticks.
+        let model = &self.model;
+        let batched = self.cfg.batched_decode;
+        if !batched || self.active.iter().flatten().any(|s| !s.prefill_done) {
+            parallel_chunks_mut(&mut self.active, 1, |_, slot_chunk| {
+                if let Some(slot) = slot_chunk[0].as_mut() {
+                    if !slot.prefill_done {
+                        let end = slot.prefill_target;
+                        let last = end == slot.req.prompt.len();
+                        prefill_chunk_into(
+                            model,
+                            &mut slot.cache,
+                            &slot.req.prompt[slot.prefill_cursor..end],
+                            &mut slot.scratch,
+                            last,
+                        );
+                        slot.prefill_cursor = end;
+                        if last {
+                            slot.prefill_done = true;
+                        }
+                    } else if !batched {
+                        let next_token = *slot.generated.last().unwrap();
+                        decode_step_into(model, &mut slot.cache, next_token, &mut slot.scratch);
+                    }
+                }
+            });
+        }
+
+        // ---- Compute phase 2: gather → batched decode → scatter. Every
+        // decode-ready slot advances as one cross-request chunk, so each
+        // packed bit matrix is traversed once per *tick* instead of once
+        // per slot (the kernels parallelize over weight rows internally;
+        // per-slot attention fans out inside `decode_batch_into`). Caches
+        // are *moved* into the reusable staging buffer and moved straight
+        // back — struct moves, no page copies — and the arena recycles
+        // across ticks, so the steady-state decode tick allocates nothing.
+        if !self.batch_rows.is_empty() {
+            for &i in &self.batch_rows {
+                let slot = self.active[i].as_mut().unwrap();
+                let placeholder = KvCache::with_page_size(&self.model.cfg, page_size);
+                let cache = std::mem::replace(&mut slot.cache, placeholder);
+                self.batch_caches.push(cache);
+            }
+            let mut bs = self
+                .batch
+                .take()
+                .unwrap_or_else(|| BatchScratch::new(&self.model.cfg, self.cfg.max_batch));
+            decode_batch_into(&self.model, &mut self.batch_caches, &self.batch_tokens, &mut bs);
+            self.batch = Some(bs);
+            while let Some(cache) = self.batch_caches.pop() {
+                let i = self.batch_rows[self.batch_caches.len()];
+                self.active[i].as_mut().unwrap().cache = cache;
+            }
+            self.batched_ticks += 1;
+            self.decode_slot_steps += self.batch_rows.len();
+        }
 
         // ---- Sampling + streaming + completion (serial: needs the shared
-        // RNG; slot order, so greedy outputs are reproducible) ----
+        // RNG; slot order, so greedy outputs are reproducible — identical
+        // order on the batched and per-slot paths) ----
+        let mut next_batch_row = 0usize;
         for i in 0..self.active.len() {
+            // Batched slots read their logits row from the arena; everyone
+            // else (prefill-finishing slots, per-slot mode) reads their own
+            // scratch, as before.
+            let batch_row = if next_batch_row < self.batch_rows.len()
+                && self.batch_rows[next_batch_row] == i
+            {
+                next_batch_row += 1;
+                Some(next_batch_row - 1)
+            } else {
+                None
+            };
             let finished: Option<FinishReason> = {
                 let Some(slot) = self.active[i].as_mut() else { continue };
                 if !slot.prefill_done {
                     None
                 } else {
-                    let tok = sample(
-                        slot.scratch.logits(),
-                        slot.req.temperature,
-                        slot.req.top_k,
-                        &mut self.rng,
-                    );
+                    let logits = match batch_row {
+                        Some(j) => self.batch.as_ref().unwrap().logits(j),
+                        None => slot.scratch.logits(),
+                    };
+                    let tok = sample(logits, slot.req.temperature, slot.req.top_k, &mut self.rng);
                     if slot.req.stop_tokens.contains(&tok) {
                         // The stop token ends the request and is withheld
                         // from the stream and the response.
@@ -1455,6 +1576,111 @@ mod tests {
         let both = batched.run(reqs);
         for (i, r) in both.iter().enumerate() {
             assert_eq!(r.tokens, solo[i], "request {i} diverged under batching");
+        }
+    }
+
+    #[test]
+    fn staggered_arrivals_are_batch_invariant() {
+        // Requests join and finish mid-stream (different arrival steps,
+        // prompt lengths, and budgets), so the decode-batch width changes
+        // tick to tick — including widths the arena was sized above. Greedy
+        // outputs must be byte-identical across max_batch 1/2/8 AND across
+        // the batched vs legacy per-slot decode paths; the width-1
+        // per-slot run is the reference.
+        let plan: &[(u64, usize, usize, usize)] = &[
+            // (id, submit_at_step, prompt_len, max_new)
+            (0, 0, 9, 7),
+            (1, 0, 3, 12),
+            (2, 2, 17, 4),
+            (3, 3, 1, 9),
+            (4, 5, 6, 3),
+            (5, 6, 11, 8),
+        ];
+        let prompt = |id: u64, len: usize| -> Vec<u16> {
+            (0..len).map(|j| ((id as usize * 31 + j * 7 + 5) % 250) as u16).collect()
+        };
+        let run = |max_batch: usize, batched_decode: bool| -> Vec<(u64, Vec<u16>)> {
+            let mut engine = tiny_engine(ServerConfig {
+                max_batch,
+                batched_decode,
+                prefill_chunk: 4,
+                ..Default::default()
+            });
+            let mut done = Vec::new();
+            let mut step = 0usize;
+            let mut pending: Vec<&(u64, usize, usize, usize)> = plan.iter().collect();
+            loop {
+                pending.retain(|(id, at, plen, max_new)| {
+                    if *at <= step {
+                        engine.submit(Request::greedy(*id, prompt(*id, *plen), *max_new));
+                        false
+                    } else {
+                        true
+                    }
+                });
+                for ev in engine.step() {
+                    if let Event::Finished { response, .. } = ev {
+                        done.push((response.id, response.tokens));
+                    }
+                }
+                step += 1;
+                if pending.is_empty() && engine.is_idle() {
+                    break;
+                }
+                assert!(step < 10_000, "engine failed to drain");
+            }
+            done.sort_by_key(|(id, _)| *id);
+            done
+        };
+        let want = run(1, false);
+        assert_eq!(want.len(), plan.len());
+        assert!(want.iter().all(|(_, toks)| !toks.is_empty()));
+        for max_batch in [1usize, 2, 8] {
+            for batched_decode in [false, true] {
+                let got = run(max_batch, batched_decode);
+                assert_eq!(
+                    got, want,
+                    "outputs diverged at max_batch={max_batch} batched={batched_decode}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_metrics_surface_ticks_and_width() {
+        // The batched path must actually engage (batched_ticks > 0, mean
+        // width > 1 with several concurrent streams) and must be visible in
+        // the /v1/metrics JSON; the legacy per-slot path reports zeros.
+        for batched_decode in [true, false] {
+            let mut engine = tiny_engine(ServerConfig {
+                max_batch: 4,
+                batched_decode,
+                ..Default::default()
+            });
+            for i in 0..4u64 {
+                engine.submit(Request::greedy(i, vec![5 + i as u16, 9, 2], 6));
+            }
+            drain(&mut engine);
+            let m = engine.snapshot();
+            assert_eq!(m.total_tokens, 24);
+            if batched_decode {
+                assert!(m.batched_ticks > 0, "batched path never engaged");
+                assert!(
+                    m.decode_batch_width > 1.0 && m.decode_batch_width <= 4.0,
+                    "width {}",
+                    m.decode_batch_width
+                );
+            } else {
+                assert_eq!(m.batched_ticks, 0);
+                assert_eq!(m.decode_batch_width, 0.0);
+            }
+            let json = m.to_json();
+            assert_eq!(json.get("batched_ticks").and_then(Json::as_usize), Some(m.batched_ticks));
+            assert!(json.get("decode_batch_width").is_some());
+            // Cumulative counters reset with everything else.
+            engine.reset();
+            let m = engine.snapshot();
+            assert_eq!((m.batched_ticks, m.decode_batch_width), (0, 0.0));
         }
     }
 
