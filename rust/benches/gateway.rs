@@ -149,6 +149,45 @@ fn main() {
     println!("overload: reserved pages after drain: {reserved_after}");
     overload_gw.shutdown();
 
+    // ---- Prefix cache: hot-vs-cold TTFT on a long shared prompt. Cold
+    // runs opt out via the `cache: "off"` escape hatch (no probe, no
+    // publish); the first cache-on run primes the trie, after which every
+    // hot run reuses all but the last token's worth of prefill (2 full
+    // pages + a 31-row copy-on-write page at the default 32 page size).
+    let prefix_prompt: Vec<usize> = (0..96).map(|j| (j * 13 + 29) % 250).collect();
+    let cold_body = format!("{{\"prompt\": {prefix_prompt:?}, \"max_new\": 8, \"cache\": \"off\"}}");
+    let hot_body = format!("{{\"prompt\": {prefix_prompt:?}, \"max_new\": 8}}");
+    let mut cold_ttfts = Vec::new();
+    let mut hot_ttfts = Vec::new();
+    for run in 0..RUNS {
+        let m = sse_once(addr, &cold_body);
+        assert_eq!(m.tokens, 8, "short cold stream");
+        if run > 0 {
+            cold_ttfts.push(m.engine_ttft_s);
+        }
+    }
+    for run in 0..RUNS {
+        // Run 0 doubles as the priming (publish) run and is untimed.
+        let m = sse_once(addr, &hot_body);
+        assert_eq!(m.tokens, 8, "short hot stream");
+        if run > 0 {
+            hot_ttfts.push(m.engine_ttft_s);
+        }
+    }
+    let cold_ttft = stats_from("prefix cache cold ttft", &cold_ttfts);
+    println!("{cold_ttft}");
+    let hot_ttft = stats_from("prefix cache hot ttft", &hot_ttfts);
+    println!("{hot_ttft}");
+    let m = metrics_once(addr);
+    let pc = m.get("prefix_cache").expect("metrics must carry prefix_cache");
+    let cache_hits = pc.get("hits").and_then(Json::as_usize).unwrap_or(0);
+    let cache_hit_tokens = pc.get("hit_tokens").and_then(Json::as_usize).unwrap_or(0);
+    let ttft_speedup = cold_ttft.mean_s / hot_ttft.mean_s.max(1e-9);
+    println!(
+        "prefix cache: {cache_hits} hits, {cache_hit_tokens} reused prompt tokens, \
+         cold/hot mean ttft {ttft_speedup:.2}x"
+    );
+
     let doc = Json::obj()
         .set("bench", "gateway")
         .set("model", cfg.name.as_str())
@@ -181,6 +220,16 @@ fn main() {
                         .set("queue_cap", OVERLOAD_QUEUE_CAP)
                         .set("disconnect_frac", tcfg.disconnect_frac)
                         .set("reserved_pages_after", reserved_after),
+                )
+                .set(
+                    "prefix_cache",
+                    Json::obj()
+                        .set("prompt_len", prefix_prompt.len())
+                        .set("cold_mean_ttft_s", cold_ttft.mean_s)
+                        .set("hot_mean_ttft_s", hot_ttft.mean_s)
+                        .set("ttft_speedup", ttft_speedup)
+                        .set("hits", cache_hits)
+                        .set("hit_tokens", cache_hit_tokens),
                 ),
         );
     match write_json(OUT_PATH, &doc) {

@@ -6,6 +6,7 @@
 
 use super::model::{silu, ModelConfig};
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// A weight matrix that can multiply a vector: `y = W x` (W: [out, in]).
 ///
@@ -106,7 +107,17 @@ impl DecodeModel {
 
 /// One fixed-size KV page: `page_size` positions × every layer × K and V
 /// strips, in one contiguous allocation (see [`KvCache`] for the layout).
-pub type KvPage = Box<[f32]>;
+///
+/// Pages are reference-counted so the prefix cache (`serve::prefix`) can
+/// share committed prompt pages across sequences read-only. A page with
+/// `Arc::strong_count == 1` is privately owned and writable; shared pages
+/// must be copy-on-write cloned before any append touches them.
+pub type KvPage = Arc<[f32]>;
+
+/// Allocate one zeroed, privately-owned page of `page_floats` floats.
+pub fn alloc_page(page_floats: usize) -> KvPage {
+    Arc::from(vec![0.0f32; page_floats])
+}
 
 /// Positions per page for self-allocating caches (the serve loop's shared
 /// pool picks its own page size via `ServerConfig`).
@@ -178,7 +189,7 @@ impl KvCache {
     pub fn ensure_capacity(&mut self, positions: usize) {
         debug_assert!(positions <= self.max_seq);
         while self.capacity() < positions {
-            self.pages.push(vec![0.0f32; self.page_floats()].into_boxed_slice());
+            self.pages.push(alloc_page(self.page_floats()));
         }
     }
 
@@ -217,13 +228,19 @@ impl KvCache {
     #[inline]
     pub fn k_row_mut(&mut self, layer: usize, t: usize) -> &mut [f32] {
         let (page, off) = self.row_index(layer, t, false);
-        &mut self.pages[page][off..off + self.kv_row]
+        let kv_row = self.kv_row;
+        let page = Arc::get_mut(&mut self.pages[page])
+            .expect("COW violation: mutable KV access to a shared page");
+        &mut page[off..off + kv_row]
     }
 
     #[inline]
     pub fn v_row_mut(&mut self, layer: usize, t: usize) -> &mut [f32] {
         let (page, off) = self.row_index(layer, t, true);
-        &mut self.pages[page][off..off + self.kv_row]
+        let kv_row = self.kv_row;
+        let page = Arc::get_mut(&mut self.pages[page])
+            .expect("COW violation: mutable KV access to a shared page");
+        &mut page[off..off + kv_row]
     }
 
     /// Bytes of KV storage this cache currently owns (attached pages only —
@@ -235,6 +252,16 @@ impl KvCache {
 
     pub fn reset(&mut self) {
         self.len = 0;
+    }
+
+    /// Resume a sequence whose first `committed` positions are already
+    /// present in the attached pages (prefix-cache hits attach shared pages
+    /// holding previously committed prompt KV rows, then prefill continues
+    /// from the divergence point instead of position 0).
+    pub fn resume(&mut self, committed: usize) {
+        assert!(committed <= self.capacity(), "resume beyond attached pages");
+        assert!(committed <= self.max_seq);
+        self.len = committed;
     }
 }
 

@@ -597,6 +597,15 @@ fn parse_generate_body(req: &HttpRequest, cfg: &GatewayConfig) -> Result<Generat
         None => None,
         Some(v) => Some(non_negative_int(v).ok_or("deadline_ms must be a non-negative integer")?),
     };
+    // Prefix-cache escape hatch: `"cache": false` (or the string "off")
+    // opts this request out of prompt-page reuse and publication.
+    let cache = match body.get("cache") {
+        None => true,
+        Some(Json::Bool(b)) => *b,
+        Some(Json::Str(s)) if s == "off" => false,
+        Some(Json::Str(s)) if s == "on" => true,
+        Some(_) => return Err("cache must be a boolean or \"on\"/\"off\"".into()),
+    };
     // The id is overwritten by the bridge; 0 is a placeholder.
     let mut request = Request::new(0, prompt)
         .max_new(max_new)
@@ -604,7 +613,8 @@ fn parse_generate_body(req: &HttpRequest, cfg: &GatewayConfig) -> Result<Generat
         .top_k(top_k)
         .stop_tokens(stop_tokens)
         .tenant(tenant.clone())
-        .priority(priority);
+        .priority(priority)
+        .cache(cache);
     if let Some(ms) = deadline_ms {
         request = request.deadline_ms(ms as u64);
     }

@@ -56,6 +56,16 @@ pub struct TrafficConfig {
     pub disconnect_frac: f64,
     /// Queued-deadline (milliseconds) attached to every request, if any.
     pub deadline_ms: Option<u64>,
+    /// Shared-prefix workload: this fraction of requests prepend one of
+    /// [`TrafficConfig::n_prefixes`] fixed preambles to their (random)
+    /// prompt — the system-prompt/few-shot pattern the engine's prefix
+    /// cache exists for. `0.0` (default) disables.
+    pub prefix_frac: f64,
+    /// Tokens in each fixed preamble (deterministic content per index, so
+    /// every run and every thread agrees byte-for-byte).
+    pub prefix_len: usize,
+    /// Distinct preambles to draw from (uniformly).
+    pub n_prefixes: usize,
 }
 
 impl Default for TrafficConfig {
@@ -77,6 +87,9 @@ impl Default for TrafficConfig {
             tail_alpha: 1.5,
             disconnect_frac: 0.0,
             deadline_ms: None,
+            prefix_frac: 0.0,
+            prefix_len: 0,
+            n_prefixes: 1,
         }
     }
 }
@@ -169,6 +182,15 @@ struct Plan {
     prompt_len: usize,
     max_new: usize,
     disconnect: bool,
+    /// Preamble index to prepend (`None`: fully random prompt).
+    prefix: Option<usize>,
+    prefix_len: usize,
+}
+
+/// Token `j` of preamble `idx` — a fixed function, so every request (and
+/// every rerun) sharing a preamble sends byte-identical leading tokens.
+fn preamble_token(idx: usize, j: usize) -> u16 {
+    ((idx * 31 + j * 7 + 11) % 250) as u16
 }
 
 /// Bounded Pareto sample in `[min, max]`: heavy-tailed, mostly near `min`.
@@ -197,12 +219,20 @@ pub fn run_traffic(addr: SocketAddr, cfg: &TrafficConfig) -> TrafficReport {
     for _ in 0..cfg.requests {
         // Exponential inter-arrival → Poisson process.
         next_arrival += -(1.0 - rng.uniform()).ln() / cfg.rate_rps;
+        // Prefix draws are unconditional so the arrival schedule stays
+        // identical across configs that only toggle the prefix workload.
         let plan = Plan {
             tenant: cfg.tenants[rng.categorical(&tenant_w)].0.clone(),
             class: cfg.classes[rng.categorical(&class_w)].0,
             prompt_len: pareto(&mut rng, cfg.prompt_min, cfg.prompt_max, cfg.tail_alpha),
             max_new: pareto(&mut rng, cfg.max_new_min, cfg.max_new_max, cfg.tail_alpha),
             disconnect: rng.uniform() < cfg.disconnect_frac,
+            prefix: {
+                let share = rng.uniform() < cfg.prefix_frac;
+                let idx = rng.below(cfg.n_prefixes.max(1));
+                (share && cfg.prefix_len > 0).then_some(idx)
+            },
+            prefix_len: cfg.prefix_len,
         };
         let mut prompt_rng = rng.split();
         let deadline_ms = cfg.deadline_ms;
@@ -295,8 +325,13 @@ fn drive_request(
     let _ = stream.set_read_timeout(Some(Duration::from_secs(60)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
 
-    let prompt: Vec<Json> =
-        (0..plan.prompt_len).map(|_| Json::Num(rng.below(250) as f64)).collect();
+    // Shared-prefix requests lead with their fixed preamble; the random
+    // tail keeps each request's full prompt unique past the shared pages.
+    let mut prompt: Vec<Json> = Vec::new();
+    if let Some(idx) = plan.prefix {
+        prompt.extend((0..plan.prefix_len).map(|j| Json::Num(preamble_token(idx, j) as f64)));
+    }
+    prompt.extend((0..plan.prompt_len).map(|_| Json::Num(rng.below(250) as f64)));
     let mut body = Json::obj()
         .set("prompt", Json::Arr(prompt))
         .set("max_new", plan.max_new)
@@ -443,6 +478,8 @@ mod tests {
                     let p = pareto(&mut rng, cfg.prompt_min, cfg.prompt_max, cfg.tail_alpha);
                     let m = pareto(&mut rng, cfg.max_new_min, cfg.max_new_max, cfg.tail_alpha);
                     let _ = rng.uniform();
+                    let _ = rng.uniform(); // prefix share draw
+                    let _ = rng.below(cfg.n_prefixes.max(1)); // prefix index draw
                     let _ = rng.split();
                     (p, m)
                 })

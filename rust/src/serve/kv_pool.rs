@@ -24,9 +24,19 @@
 //! they end (budget reached, stop token, cancellation), so a cancelled
 //! request's whole reservation is back in the budget at the same tick
 //! boundary the cancel takes effect.
+//!
+//! A fourth state joined with the prefix cache (`serve::prefix`):
+//! **cached** — pages whose committed prompt KV rows were published into the
+//! content-addressed trie at finish. Cached pages are owned by the trie, not
+//! by any slot; a subset of them is **pinned** while slots hold shared
+//! read-only references (refcount > 1). Admission guarantees
+//! `reserved + pinned <= total`, so an unpinned cached page is always
+//! available for eviction when a reservation needs to materialize its last
+//! page — a full cache degrades to cold-prefill behavior, never deadlock.
 
-use crate::nn::decode::{KvCache, KvPage};
+use crate::nn::decode::{alloc_page, KvCache, KvPage};
 use crate::nn::model::ModelConfig;
+use std::sync::Arc;
 
 pub struct KvPool {
     page_size: usize,
@@ -34,9 +44,19 @@ pub struct KvPool {
     total_pages: usize,
     /// Pages promised to admitted sequences (includes attached ones).
     reserved: usize,
-    /// Pages currently attached to a slot's cache.
+    /// Pages currently attached to a slot's cache as private (writable)
+    /// pages. Shared prefix-cache pages a slot merely references are counted
+    /// under `cached`/`pinned`, never here — so `peak_bytes` counts a page
+    /// shared by N sequences once.
     in_use: usize,
-    peak_in_use: usize,
+    /// Pages owned by the prefix-cache trie (published committed prompts).
+    cached: usize,
+    /// Cached pages currently referenced read-only by at least one slot
+    /// (trie nodes with a nonzero pin count). Pinned pages cannot be
+    /// evicted, so admission must keep `reserved + pinned <= total`.
+    pinned: usize,
+    /// Peak physical occupancy: `in_use + cached`, shared pages once.
+    peak_physical: usize,
     /// Materialized-but-idle buffers, recycled across requests.
     free: Vec<KvPage>,
     /// Buffers ever materialized (lazy: short workloads never touch the
@@ -57,7 +77,9 @@ impl KvPool {
             total_pages: total_pages.max(min_pages),
             reserved: 0,
             in_use: 0,
-            peak_in_use: 0,
+            cached: 0,
+            pinned: 0,
+            peak_physical: 0,
             free: Vec::new(),
             materialized: 0,
         }
@@ -82,9 +104,11 @@ impl KvPool {
         positions.div_ceil(self.page_size)
     }
 
-    /// Pages not yet promised to an admitted sequence.
+    /// Pages not yet promised to an admitted sequence and not pinned by a
+    /// shared prefix (pinned trie pages cannot be evicted, so they are
+    /// unavailable to back new reservations).
     pub fn unreserved_pages(&self) -> usize {
-        self.total_pages - self.reserved
+        self.total_pages - self.reserved - self.pinned
     }
 
     /// Admission control: promise `pages` to a sequence, or refuse and
@@ -100,28 +124,126 @@ impl KvPool {
         }
     }
 
+    /// Prefix-hit admission: promise `remainder` private pages AND pin
+    /// `fresh_pins` previously-unpinned cached pages, atomically — or refuse
+    /// and change nothing. Keeping both under one gate preserves
+    /// `reserved + pinned <= total`, the invariant that makes eviction
+    /// always possible when a reservation materializes its last page.
+    pub fn try_admit(&mut self, remainder: usize, fresh_pins: usize) -> bool {
+        if remainder + fresh_pins <= self.unreserved_pages() {
+            self.reserved += remainder;
+            self.pinned += fresh_pins;
+            true
+        } else {
+            false
+        }
+    }
+
     /// Hand out one page from a prior reservation (recycles a free buffer
-    /// when one exists, materializes otherwise).
+    /// when one exists, materializes otherwise). When the budget is fully
+    /// materialized and the free list is empty the caller must evict a
+    /// cached page first (see `serve::prefix::draw_page`).
     pub fn take_page(&mut self) -> KvPage {
         debug_assert!(self.in_use < self.reserved, "take_page without a covering reservation");
         self.in_use += 1;
-        self.peak_in_use = self.peak_in_use.max(self.in_use);
+        self.peak_physical = self.peak_physical.max(self.in_use + self.cached);
         self.free.pop().unwrap_or_else(|| {
             self.materialized += 1;
             debug_assert!(self.materialized <= self.total_pages);
-            vec![0.0f32; self.page_floats].into_boxed_slice()
+            alloc_page(self.page_floats)
         })
     }
 
     /// Reclaim a finished sequence's pages immediately and release its full
     /// reservation (`reserved` may exceed `pages.len()` when the sequence
     /// finished before touching its whole footprint).
+    ///
+    /// Refcount-aware: a page still referenced elsewhere (a shared
+    /// prefix-cache page the slot was reading) only has this handle dropped —
+    /// it stays in the trie's custody and was never counted under `in_use`,
+    /// so no ledger movement happens for it. Uniquely-owned pages return to
+    /// the free list.
     pub fn release(&mut self, pages: Vec<KvPage>, reserved: usize) {
-        debug_assert!(pages.len() <= reserved);
-        debug_assert!(pages.len() <= self.in_use && reserved <= self.reserved);
-        self.in_use -= pages.len();
+        debug_assert!(reserved <= self.reserved);
+        for page in pages {
+            if Arc::strong_count(&page) > 1 {
+                drop(page);
+            } else {
+                debug_assert!(self.in_use > 0);
+                self.in_use -= 1;
+                self.free.push(page);
+            }
+        }
         self.reserved -= reserved;
-        self.free.extend(pages);
+    }
+
+    /// Move one privately-owned, slot-attached page into the prefix cache's
+    /// custody (`in_use` → `cached`). The trie keeps the `Arc`; the pool
+    /// only moves the ledger entry.
+    pub fn publish(&mut self) {
+        debug_assert!(self.in_use > 0);
+        self.in_use -= 1;
+        self.cached += 1;
+    }
+
+    /// Return an evicted (unpinned, uniquely-owned) trie page to the free
+    /// list (`cached` → free).
+    pub fn evict(&mut self, page: KvPage) {
+        debug_assert_eq!(Arc::strong_count(&page), 1, "evicting a still-referenced page");
+        debug_assert!(self.cached > 0);
+        self.cached -= 1;
+        self.free.push(page);
+    }
+
+    /// Record `n` cached pages transitioning unpinned → pinned (a slot took
+    /// shared references). Admission already accounted for them via
+    /// [`KvPool::try_admit`].
+    pub fn pin_shared(&mut self, n: usize) {
+        self.pinned += n;
+        debug_assert!(self.pinned <= self.cached);
+    }
+
+    /// Record `n` cached pages transitioning pinned → unpinned (the last
+    /// referencing slot finished).
+    pub fn unpin_shared(&mut self, n: usize) {
+        debug_assert!(n <= self.pinned);
+        self.pinned -= n;
+    }
+
+    /// Ledger conservation, checked (debug builds) after every engine tick:
+    /// every materialized page is in exactly one of {slot-private, trie,
+    /// free}, materialization never exceeds the budget, pins never exceed
+    /// the trie's holdings, and admission's eviction guarantee holds.
+    ///
+    /// Note this refines the naive `in_use + free == total`: the pool
+    /// materializes lazily (short workloads never touch the full budget)
+    /// and the trie holds published pages, so the conserved quantity is
+    /// `materialized`, not `total`.
+    pub fn debug_assert_consistent(&self) {
+        debug_assert_eq!(
+            self.in_use + self.cached + self.free.len(),
+            self.materialized,
+            "page conservation violated (in_use={} cached={} free={} materialized={})",
+            self.in_use,
+            self.cached,
+            self.free.len(),
+            self.materialized
+        );
+        debug_assert!(self.materialized <= self.total_pages);
+        debug_assert!(self.pinned <= self.cached);
+        debug_assert!(
+            self.reserved + self.pinned <= self.total_pages,
+            "eviction guarantee violated (reserved={} pinned={} total={})",
+            self.reserved,
+            self.pinned,
+            self.total_pages
+        );
+    }
+
+    /// True when every budgeted page buffer has been materialized — the
+    /// point past which an empty free list requires eviction.
+    pub fn fully_materialized(&self) -> bool {
+        self.materialized >= self.total_pages
     }
 
     /// Pages currently attached to a sequence's cache.
@@ -139,18 +261,29 @@ impl KvPool {
         self.free.len()
     }
 
+    /// Pages owned by the prefix-cache trie.
+    pub fn cached_pages(&self) -> usize {
+        self.cached
+    }
+
+    /// Trie pages currently pinned by slots holding shared references.
+    pub fn pinned_pages(&self) -> usize {
+        self.pinned
+    }
+
     /// Restart peak tracking from the current occupancy (reservations and
     /// attached pages are untouched). [`crate::serve::Engine::reset`] calls
     /// this so each reset lifetime reports its own peak.
     pub fn reset_stats(&mut self) {
-        self.peak_in_use = self.in_use;
+        self.peak_physical = self.in_use + self.cached;
     }
 
-    /// Peak bytes of KV pages simultaneously attached to sequences — the
-    /// pool's actual footprint, measurably below the old
-    /// `max_batch × max_seq` reservation on short-prompt workloads.
+    /// Peak bytes of KV pages simultaneously resident — slot-private pages
+    /// plus trie-cached pages, with a page shared by N sequences counted
+    /// once. Measurably below the old `max_batch × max_seq` reservation on
+    /// short-prompt workloads.
     pub fn peak_bytes(&self) -> usize {
-        self.peak_in_use * self.page_bytes()
+        self.peak_physical * self.page_bytes()
     }
 }
 
@@ -224,5 +357,85 @@ mod tests {
         let cfg = cfg();
         let pool = KvPool::new(&cfg, 4, 0);
         assert_eq!(pool.total_pages(), cfg.max_seq.div_ceil(4));
+    }
+
+    #[test]
+    fn publish_moves_pages_to_trie_custody_and_evict_recycles() {
+        let mut pool = KvPool::new(&cfg(), 4, 16);
+        assert!(pool.try_reserve(2));
+        let a = pool.take_page();
+        let b = pool.take_page();
+        // Slot finishes; page `a` is published (trie keeps the Arc), `b`
+        // returns to the free list with the reservation.
+        pool.publish();
+        pool.release(vec![b], 2);
+        assert_eq!(pool.in_use_pages(), 0);
+        assert_eq!(pool.cached_pages(), 1);
+        assert_eq!(pool.free_pages(), 1);
+        pool.debug_assert_consistent();
+        // Eviction hands the (now uniquely-owned) page back to the free list.
+        pool.evict(a);
+        assert_eq!(pool.cached_pages(), 0);
+        assert_eq!(pool.free_pages(), 2);
+        pool.debug_assert_consistent();
+    }
+
+    #[test]
+    fn release_is_refcount_aware() {
+        let mut pool = KvPool::new(&cfg(), 4, 16);
+        assert!(pool.try_reserve(1));
+        let page = pool.take_page();
+        pool.publish(); // trie takes custody…
+        let trie_copy = page.clone(); // …and holds its own Arc
+        // A slot that attached `page` read-only releases it: the handle is
+        // dropped but the page survives in the trie, untouched by `in_use`.
+        pool.release(vec![page], 1);
+        assert_eq!(pool.in_use_pages(), 0);
+        assert_eq!(pool.cached_pages(), 1);
+        assert_eq!(pool.free_pages(), 0);
+        assert_eq!(Arc::strong_count(&trie_copy), 1);
+        pool.debug_assert_consistent();
+        pool.evict(trie_copy);
+        pool.debug_assert_consistent();
+    }
+
+    #[test]
+    fn pinned_pages_block_admission_until_unpinned() {
+        let mut pool = KvPool::new(&cfg(), 4, 8);
+        // 3 trie pages, 2 of them pinned by a running slot.
+        assert!(pool.try_reserve(3));
+        let pages: Vec<_> = (0..3).map(|_| pool.take_page()).collect();
+        for _ in 0..3 {
+            pool.publish();
+        }
+        pool.release(Vec::new(), 3);
+        assert!(pool.try_admit(4, 2)); // remainder 4 + fresh pins 2
+        assert_eq!(pool.pinned_pages(), 2);
+        assert_eq!(pool.unreserved_pages(), 2);
+        // 8 total − 4 reserved − 2 pinned leaves room for 2, not 3.
+        assert!(!pool.try_admit(3, 0));
+        assert!(pool.try_admit(2, 0));
+        pool.release(Vec::new(), 6);
+        pool.unpin_shared(2);
+        assert_eq!(pool.unreserved_pages(), 8);
+        drop(pages);
+        pool.debug_assert_consistent();
+    }
+
+    #[test]
+    fn peak_counts_shared_pages_once() {
+        let mut pool = KvPool::new(&cfg(), 4, 16);
+        pool.reset_stats();
+        assert!(pool.try_reserve(2));
+        let a = pool.take_page();
+        let _b = pool.take_page();
+        assert_eq!(pool.peak_bytes(), 2 * pool.page_bytes());
+        // Publishing then re-sharing `a` with more slots adds no physical
+        // pages: peak stays at 2 even with three logical references.
+        pool.publish();
+        let _r1 = a.clone();
+        let _r2 = a.clone();
+        assert_eq!(pool.peak_bytes(), 2 * pool.page_bytes());
+        pool.debug_assert_consistent();
     }
 }

@@ -38,8 +38,12 @@
 pub mod device;
 pub mod http;
 pub mod kv_pool;
+pub mod prefix;
 
 pub use kv_pool::KvPool;
+pub use prefix::{PrefixCache, PrefixStats};
+
+use prefix::{draw_page, page_mut, PinTicket};
 
 use crate::data::detokenize;
 use crate::nn::decode::{
@@ -191,6 +195,12 @@ pub struct Request {
     /// before the deadline runs to completion regardless — the deadline
     /// bounds queue wait, not generation.
     pub deadline: Option<Duration>,
+    /// Prefix-cache participation (default `true`): reuse cached prompt
+    /// pages at admission and publish this request's committed prompt pages
+    /// at finish. `false` opts out of both directions — the escape hatch
+    /// for prompts that must not be shared (the HTTP body's
+    /// `"cache": "off"`). Outputs are byte-identical either way.
+    pub cache: bool,
 }
 
 impl Request {
@@ -211,6 +221,7 @@ impl Request {
             tenant: DEFAULT_TENANT.to_string(),
             priority: SloClass::Interactive,
             deadline: None,
+            cache: true,
         }
     }
 
@@ -270,6 +281,13 @@ impl Request {
     /// body's `deadline_ms` field uses.
     pub fn deadline_ms(self, ms: u64) -> Request {
         self.deadline(Duration::from_millis(ms))
+    }
+
+    /// Opt in or out of the prefix cache (see the field contract on
+    /// [`field@Request::cache`]).
+    pub fn cache(mut self, cache: bool) -> Request {
+        self.cache = cache;
+        self
     }
 }
 
@@ -481,6 +499,13 @@ pub struct ServeMetrics {
     /// JSON output). Cardinality grows with distinct tenant names — the
     /// gateway bounds name length, and [`Engine::reset`] clears it.
     pub tenants: Vec<(String, TenantStats)>,
+    /// Cumulative prefix-cache counters (see [`PrefixStats`]).
+    pub prefix: PrefixStats,
+    /// Trie pages currently pinned by slots holding shared references —
+    /// the "how much sharing is live right now" gauge.
+    pub prefix_shared_pages: usize,
+    /// Pages currently held by the prefix-cache trie.
+    pub prefix_cached_pages: usize,
 }
 
 impl ServeMetrics {
@@ -531,6 +556,16 @@ impl ServeMetrics {
             )
             .set("queue_wait_hist", queue_wait)
             .set("tenants", tenants)
+            .set(
+                "prefix_cache",
+                Json::obj()
+                    .set("hits", self.prefix.hits)
+                    .set("misses", self.prefix.misses)
+                    .set("hit_tokens", self.prefix.hit_tokens)
+                    .set("evictions", self.prefix.evictions)
+                    .set("shared_pages", self.prefix_shared_pages)
+                    .set("cached_pages", self.prefix_cached_pages),
+            )
     }
 }
 
@@ -746,8 +781,15 @@ struct Slot {
     scratch: DecodeScratch,
     /// Pages promised to this request at admission (released in full when
     /// the slot finishes or is cancelled, even if the sequence never
-    /// touched them all).
+    /// touched them all). On a prefix-cache hit this is the *remainder*
+    /// only — shared pages are pinned, not reserved.
     reserved_pages: usize,
+    /// Leading cache pages attached read-only from the prefix trie (the
+    /// publish-on-finish skip count; 0 on a cache miss or opt-out).
+    shared_pages: usize,
+    /// The trie path this slot pinned at admission; unpinned at finish,
+    /// however the request ends.
+    prefix_ticket: Option<PinTicket>,
     generated: Vec<u16>,
     prefill_done: bool,
     prefill_cursor: usize,
@@ -785,6 +827,9 @@ pub struct Engine {
     pub model: Arc<DecodeModel>,
     cfg: ServerConfig,
     pool: KvPool,
+    /// Content-addressed cache of committed prompt pages (per engine, so
+    /// the multi-model router gets one cache per model for free).
+    prefix: PrefixCache,
     queue: AdmissionQueue,
     active: Vec<Option<Slot>>,
     /// KV caches (page tables, detached) and decode arenas recovered from
@@ -857,6 +902,7 @@ impl Engine {
         Engine {
             model,
             pool,
+            prefix: PrefixCache::new(cfg.page_size),
             active,
             rng,
             queue: AdmissionQueue::new(cfg.queue_cap),
@@ -894,6 +940,11 @@ impl Engine {
     /// reservations, peak bytes).
     pub fn pool(&self) -> &KvPool {
         &self.pool
+    }
+
+    /// The prefix cache (read-only introspection: hit counters, trie size).
+    pub fn prefix(&self) -> &PrefixCache {
+        &self.prefix
     }
 
     /// Enqueue a request; it joins its class's admission lane behind its
@@ -1009,6 +1060,9 @@ impl Engine {
             queue_cap: self.queue.cap,
             queue_wait_hist: self.queue_wait_hist,
             tenants: self.tenant_stats.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            prefix: self.prefix.stats.clone(),
+            prefix_shared_pages: self.pool.pinned_pages(),
+            prefix_cached_pages: self.pool.cached_pages(),
         }
     }
 
@@ -1022,10 +1076,16 @@ impl Engine {
         for slot_opt in self.active.iter_mut() {
             if let Some(mut slot) = slot_opt.take() {
                 let pages = slot.cache.detach_pages();
+                if let Some(ticket) = slot.prefix_ticket.take() {
+                    self.prefix.unpin(&ticket, &mut self.pool);
+                }
                 self.pool.release(pages, slot.reserved_pages);
                 self.spares.push((slot.cache, slot.scratch));
             }
         }
+        // With every slot released no shared references or pins remain, so
+        // the whole trie drains back to the pool's free list.
+        self.prefix.clear_into(&mut self.pool);
         self.queue.clear();
         self.cancels.clear();
         self.instant_done.clear();
@@ -1048,8 +1108,24 @@ impl Engine {
     }
 
     /// Release a slot's pages, recycle its buffers, and build its response.
+    /// Prefix-cache bookkeeping happens here — the one door every exit
+    /// (budget, stop token, cancellation) goes through: unpin the shared
+    /// path, publish the fully-committed prompt pages, release the rest.
     fn finish_slot(&mut self, mut slot: Slot) -> Response {
-        let pages = slot.cache.detach_pages();
+        let committed = slot.cache.len;
+        let mut pages = slot.cache.detach_pages();
+        if let Some(ticket) = slot.prefix_ticket.take() {
+            self.prefix.unpin(&ticket, &mut self.pool);
+        }
+        if slot.req.cache {
+            self.prefix.publish(
+                &mut self.pool,
+                &slot.req.prompt,
+                committed,
+                &mut pages,
+                slot.shared_pages,
+            );
+        }
         self.pool.release(pages, slot.reserved_pages);
         let generated = std::mem::take(&mut slot.generated);
         let ttft = slot.ttft_s.unwrap_or(0.0);
@@ -1183,11 +1259,20 @@ impl Engine {
                     let lane_fifo = lane.by_tenant.get_mut(&tenant).unwrap();
                     let Some(head) = lane_fifo.front_mut() else { break };
                     let need = (head.req.prompt.len() + head.req.max_new).min(max_seq);
-                    let pages = self.pool.pages_for(need);
+                    let full_pages = self.pool.pages_for(need);
+                    // Longest cached prefix of the prompt: shared pages are
+                    // pinned rather than reserved, so both the pool promise
+                    // and the tenant's deficit charge shrink to the
+                    // remainder past the shared prefix.
+                    let hit =
+                        if head.req.cache { self.prefix.probe(&head.req.prompt) } else { None };
+                    let shared = hit.as_ref().map_or(0, |h| h.pages.len());
+                    let pages = full_pages - shared;
                     if *lane.deficit.get(&tenant).unwrap() < pages {
                         break;
                     }
-                    if !self.pool.try_reserve(pages) {
+                    let fresh_pins = hit.as_ref().map_or(0, |h| h.fresh_pins);
+                    if !self.pool.try_admit(pages, fresh_pins) {
                         if !head.deferred {
                             head.deferred = true;
                             self.deferrals += 1;
@@ -1209,14 +1294,46 @@ impl Engine {
                     });
                     cache.reset();
                     events.push(Event::Started { id: q.req.id });
+                    // On a hit: pin the trie path (the pool gate above
+                    // already accounted the fresh pins), attach the shared
+                    // pages read-only, COW-copy a partially-matched page
+                    // out of this slot's own reservation, and resume
+                    // prefill at the divergence point. Cached rows are
+                    // bit-identical to cold-prefilled ones (prefill is
+                    // chunk-boundary-invariant), so outputs don't change.
+                    let mut shared_pages = 0usize;
+                    let mut prefix_ticket = None;
+                    let mut prefill_cursor = 0usize;
+                    if let Some(hit) = hit {
+                        let fresh = self.prefix.pin(&hit.ticket);
+                        debug_assert_eq!(fresh, hit.fresh_pins);
+                        shared_pages = hit.pages.len();
+                        for page in hit.pages {
+                            cache.attach_page(page);
+                        }
+                        if let Some((_, src)) = &hit.cow {
+                            let mut copy = draw_page(&mut self.pool, &mut self.prefix);
+                            page_mut(&mut copy).copy_from_slice(src);
+                            cache.attach_page(copy);
+                        }
+                        cache.resume(hit.matched);
+                        prefill_cursor = hit.matched;
+                        self.prefix.stats.hits += 1;
+                        self.prefix.stats.hit_tokens += hit.matched;
+                        prefix_ticket = Some(hit.ticket);
+                    } else if q.req.cache {
+                        self.prefix.stats.misses += 1;
+                    }
                     let si = free_slots.pop().unwrap();
                     self.active[si] = Some(Slot {
                         cache,
                         scratch,
                         reserved_pages: pages,
+                        shared_pages,
+                        prefix_ticket,
                         generated: Vec::with_capacity(q.req.max_new),
                         prefill_done: false,
-                        prefill_cursor: 0,
+                        prefill_cursor,
                         prefill_target: 0,
                         submitted: q.submitted,
                         queue_s,
@@ -1246,6 +1363,7 @@ impl Engine {
             if !events.is_empty() {
                 self.wall_s += t0.elapsed().as_secs_f64();
             }
+            self.pool.debug_assert_consistent();
             return events;
         }
         self.peak_active = self.peak_active.max(n_active);
@@ -1267,7 +1385,11 @@ impl Engine {
             };
             let need = (slot.cache.len + step).min(max_seq);
             while slot.cache.capacity() < need {
-                slot.cache.attach_page(self.pool.take_page());
+                // `draw_page` evicts an unpinned prefix-cache leaf when the
+                // pool is fully materialized with nothing free — the
+                // admission gate guarantees one exists, so a full cache
+                // degrades to cold behavior instead of deadlocking here.
+                slot.cache.attach_page(draw_page(&mut self.pool, &mut self.prefix));
             }
         }
 
@@ -1403,6 +1525,10 @@ impl Engine {
             }
         }
 
+        // Tick-boundary page conservation: every materialized page is in
+        // exactly one of {slot-private, trie-cached, free}, and admission's
+        // eviction guarantee (`reserved + pinned <= total`) held up.
+        self.pool.debug_assert_consistent();
         self.wall_s += t0.elapsed().as_secs_f64();
         events
     }
@@ -2721,5 +2847,159 @@ mod tests {
         for (i, r) in got.iter().enumerate() {
             assert_eq!(r.tokens, want[i], "request {i} diverged under tenant/class labels");
         }
+    }
+
+    #[test]
+    fn prefix_cache_hits_are_byte_identical_to_cold() {
+        // The prefix-cache acceptance bar: reusing cached prompt pages must
+        // be invisible in outputs. Wave 1 runs cold and publishes its
+        // committed prompt pages on finish; wave 2 re-sends the same
+        // prompts into the warm trie and must produce byte-identical
+        // tokens — across batch widths and both decode paths. The cold
+        // reference is a fresh single-slot server per prompt (Server::run
+        // clears the trie, so every reference run starts empty).
+        let preamble: Vec<u16> = (0..40).map(|j| ((j * 7 + 3) % 250) as u16).collect();
+        let prompts: Vec<Vec<u16>> = (0..3usize)
+            .map(|i| {
+                let mut p = preamble.clone();
+                p.extend((0..6).map(|j| ((i * 53 + j * 11 + 1) % 250) as u16));
+                p
+            })
+            .collect();
+        let cold: Vec<Vec<u16>> = prompts
+            .iter()
+            .map(|p| {
+                let mut srv = tiny_server(1);
+                srv.run(vec![Request::greedy(0, p.clone(), 6)])[0].tokens.clone()
+            })
+            .collect();
+        for max_batch in [1usize, 2, 8] {
+            for batched_decode in [false, true] {
+                let mut engine = tiny_engine(ServerConfig {
+                    max_batch,
+                    batched_decode,
+                    ..Default::default()
+                });
+                for wave in 0..2u64 {
+                    for (i, p) in prompts.iter().enumerate() {
+                        engine.submit(Request::greedy(wave * 10 + i as u64, p.clone(), 6));
+                    }
+                    let events = drain(&mut engine);
+                    for (i, want) in cold.iter().enumerate() {
+                        let (_, resp, _) = finished_of(&events, wave * 10 + i as u64);
+                        assert_eq!(
+                            &resp.tokens, want,
+                            "wave {wave} req {i} diverged from cold \
+                             (max_batch={max_batch} batched={batched_decode})"
+                        );
+                    }
+                }
+                // The 40-token preamble spans one full 32-position page, so
+                // every wave-2 request must reuse it from the trie.
+                let stats = engine.prefix().stats.clone();
+                let ps = engine.cfg().page_size;
+                assert!(stats.hits >= 3, "warm wave must hit the trie (hits={})", stats.hits);
+                assert!(
+                    stats.hit_tokens >= 3 * ps,
+                    "expected full-page reuse (hit_tokens={})",
+                    stats.hit_tokens
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cow_divergence_mid_page_is_byte_identical() {
+        // A prompt that diverges *inside* a cached page must COW-copy the
+        // shared rows into a private page, never mutate the published one,
+        // and still generate exactly the cold output — both for itself and
+        // for a later re-run of the original prompt (which would expose
+        // any corruption of the shared page).
+        let a: Vec<u16> = (0..36).map(|j| ((j * 5 + 2) % 250) as u16).collect();
+        let mut b = a[..20].to_vec();
+        b.extend((0..16).map(|j| ((j * 13 + 7) % 250) as u16));
+        let cold = |p: &[u16]| -> Vec<u16> {
+            let mut srv = tiny_server(1);
+            srv.run(vec![Request::greedy(0, p.to_vec(), 6)])[0].tokens.clone()
+        };
+        let (cold_a, cold_b) = (cold(&a), cold(&b));
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.submit(Request::greedy(0, a.clone(), 6));
+        let ev = drain(&mut engine);
+        assert_eq!(finished_of(&ev, 0).1.tokens, cold_a);
+        assert_eq!(engine.prefix().stats.hits, 0, "first run must be cold");
+        // B shares a[..20] then diverges at position 20, mid-way through
+        // the cached 32-position page: a pure-COW hit (no full pages).
+        engine.submit(Request::greedy(1, b.clone(), 6));
+        let ev = drain(&mut engine);
+        assert_eq!(finished_of(&ev, 1).1.tokens, cold_b, "COW path diverged from cold");
+        assert_eq!(engine.prefix().stats.hits, 1);
+        assert_eq!(engine.prefix().stats.hit_tokens, 20, "COW must resume at the divergence");
+        // A again: full-page hit, and the page must be intact despite B's
+        // divergent reuse of its first 20 rows.
+        engine.submit(Request::greedy(2, a.clone(), 6));
+        let ev = drain(&mut engine);
+        assert_eq!(finished_of(&ev, 2).1.tokens, cold_a, "cached page corrupted by COW peer");
+        assert_eq!(engine.prefix().stats.hits, 2);
+        assert_eq!(engine.prefix().stats.hit_tokens, 52);
+    }
+
+    #[test]
+    fn cache_eviction_under_pool_pressure_frees_everything() {
+        // Distinct prompts fill the trie until the pool is fully
+        // materialized; later admissions must evict LRU leaves instead of
+        // deadlocking (cache-full degrades to cold behavior), and a final
+        // reset must leave the pool fully free — page conservation across
+        // slot custody, trie custody, and the free list.
+        let mut engine = tiny_engine(ServerConfig {
+            max_batch: 2,
+            kv_pages: Some(4),
+            ..Default::default()
+        });
+        for i in 0..8u64 {
+            let prompt: Vec<u16> =
+                (0..40).map(|j| ((i as usize * 17 + j * 3 + 1) % 250) as u16).collect();
+            engine.submit(Request::greedy(i, prompt, 6));
+        }
+        let events = drain(&mut engine);
+        let finished =
+            events.iter().filter(|(_, ev)| matches!(ev, Event::Finished { .. })).count();
+        assert_eq!(finished, 8, "pressure must never deadlock or drop requests");
+        let stats = engine.prefix().stats.clone();
+        assert_eq!(stats.misses, 8, "prompts are pairwise divergent at token 0");
+        assert!(stats.evictions > 0, "8 two-page prompts through a 4-page pool must evict");
+        // After the run the trie holds published pages (cached custody)...
+        assert!(engine.pool().cached_pages() > 0);
+        // ...and reset returns every one of them to the free list.
+        engine.reset();
+        let pool = engine.pool();
+        assert_eq!(pool.cached_pages(), 0);
+        assert_eq!(pool.in_use_pages(), 0);
+        assert_eq!(pool.pinned_pages(), 0);
+        assert_eq!(pool.free_pages(), pool.total_pages(), "pages leaked");
+        assert!(engine.prefix().is_empty());
+    }
+
+    #[test]
+    fn cache_off_requests_bypass_the_trie_entirely() {
+        // The `cache: false` escape hatch: no probe, no publish, no stats —
+        // and byte-identical output either way (pinned by the identity
+        // test; here we pin the bypass itself).
+        let prompt: Vec<u16> = (0..40).map(|j| ((j * 7 + 3) % 250) as u16).collect();
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        engine.submit(Request::greedy(0, prompt.clone(), 4).cache(false));
+        drain(&mut engine);
+        assert!(engine.prefix().is_empty(), "cache=false must not publish");
+        assert_eq!(engine.prefix().stats.misses, 0, "cache=false is not a miss");
+        engine.submit(Request::greedy(1, prompt.clone(), 4));
+        drain(&mut engine);
+        assert_eq!(engine.prefix().stats.hits, 0, "nothing was published to hit");
+        assert_eq!(engine.prefix().stats.misses, 1);
+        assert!(!engine.prefix().is_empty(), "cache=true publishes on finish");
+        // A cache=false request also ignores a warm trie on the way in.
+        engine.submit(Request::greedy(2, prompt.clone(), 4).cache(false));
+        drain(&mut engine);
+        assert_eq!(engine.prefix().stats.hits, 0);
+        assert_eq!(engine.prefix().stats.misses, 1);
     }
 }

@@ -1,0 +1,525 @@
+//! Content-addressed prefix cache over the paged KV pool.
+//!
+//! Thousands of requests sharing a system prompt or few-shot preamble
+//! re-prefill the same tokens; with sub-1-bit weights the KV cache is the
+//! dominant memory consumer, so sharing those committed pages is both the
+//! capacity and the latency win. This module indexes *committed prompt
+//! pages* by their token content: a radix trie whose edges are exact
+//! `page_size`-token runs, each node owning one [`KvPage`] holding the KV
+//! rows for that run (given the whole path from the root — content
+//! addressing is positional, a run's rows depend on everything before it).
+//!
+//! Protocol, from the engine's point of view:
+//!
+//! 1. **probe** at admission: walk the trie for the longest cached prefix of
+//!    the prompt, capped at `prompt_len - 1` (at least one prompt token must
+//!    be prefilled to produce first-token logits). Full-page matches are
+//!    shared read-only; a partial match inside the next page yields a
+//!    copy-on-write source.
+//! 2. **admit** with remainder-only footprint: the pool promises only the
+//!    pages *past* the shared prefix ([`KvPool::try_admit`]), atomically
+//!    with pinning the path so admission's eviction guarantee
+//!    (`reserved + pinned <= total`) holds.
+//! 3. **pin** the path ([`PinTicket`]): pinned nodes (and, because pinning
+//!    is path-based, all their ancestors) are immune to eviction while any
+//!    slot reads them.
+//! 4. **resume** prefill at the divergence point (`KvCache::resume`); the
+//!    chunk-boundary-invariance of prefill makes cached rows bit-identical
+//!    to cold-prefilled ones, which is what keeps greedy outputs
+//!    byte-identical hot vs cold.
+//! 5. **publish** at finish: the slot's fully-committed prompt pages are
+//!    inserted (or deduplicated, first publisher wins) into the trie; the
+//!    pool ledger moves them slot-private → trie-cached, counted once
+//!    however many sequences later share them.
+//! 6. **evict** under pressure: when a reservation needs a page and the
+//!    pool is fully materialized with an empty free list, the
+//!    least-recently-used unpinned leaf is evicted ([`draw_page`]). The
+//!    admission gate guarantees one always exists, so a full cache degrades
+//!    to cold-prefill behavior instead of deadlocking.
+
+use super::kv_pool::KvPool;
+use crate::nn::decode::KvPage;
+use std::collections::btree_map::Entry;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// One trie node: the KV page for the `page_size`-token run on the edge
+/// leading here, plus the children extending the prefix by one more run.
+struct Node {
+    page: KvPage,
+    /// Slots currently holding shared references to `page`. Pinning is
+    /// path-based (a pinner pins every node from the root down), so
+    /// `pins > 0` on a node implies `pins > 0` on all its ancestors —
+    /// which is why an unpinned node always roots a fully-unpinned subtree
+    /// and leaf-only eviction can never strand.
+    pins: u32,
+    /// Logical LRU stamp (bumped on pin and publish touches).
+    last_used: u64,
+    children: BTreeMap<Box<[u16]>, Node>,
+}
+
+/// Cumulative prefix-cache counters (reported under `prefix_cache` in
+/// `/v1/metrics`; zeroed by `Engine::reset`).
+#[derive(Clone, Debug, Default)]
+pub struct PrefixStats {
+    /// Cache-enabled admissions that reused at least one cached token.
+    pub hits: usize,
+    /// Cache-enabled admissions that found nothing to reuse.
+    pub misses: usize,
+    /// Prompt tokens skipped by prefill thanks to cache hits (compare
+    /// against `prefill_tokens`, which only counts tokens actually run).
+    pub hit_tokens: usize,
+    /// Trie pages evicted to feed reservations ([`draw_page`]).
+    pub evictions: usize,
+}
+
+/// The node keys (root → leaf) a hit pinned; stored in the slot and handed
+/// back to [`PrefixCache::unpin`] when it finishes, whatever way it ends.
+pub struct PinTicket {
+    keys: Vec<Box<[u16]>>,
+}
+
+/// A successful probe: everything admission needs to attach the shared
+/// prefix and reserve only the remainder.
+pub struct PrefixHit {
+    /// Shared pages covering positions `0..pages.len() * page_size`,
+    /// already cloned (refcount bumped) — attach read-only, in order.
+    pub pages: Vec<KvPage>,
+    /// Partial match inside the page after the full ones: `(j, source)`
+    /// with `1 <= j < page_size` tokens matched. The engine copies `source`
+    /// into a private page (drawn from the slot's own reservation) before
+    /// the slot appends past position `pages.len() * page_size + j`.
+    pub cow: Option<(usize, KvPage)>,
+    /// Committed positions covered: `pages.len() * page_size + j`. Always
+    /// `>= 1` and `<= prompt_len - 1`; prefill resumes here.
+    pub matched: usize,
+    /// Path nodes that would transition unpinned → pinned — the pin count
+    /// [`KvPool::try_admit`] must account for.
+    pub fresh_pins: usize,
+    /// Path to pin once admission succeeds (full runs, then the COW
+    /// source's key when `cow` is present).
+    pub ticket: PinTicket,
+}
+
+/// The per-engine (hence, behind the router, per-model) prefix cache.
+pub struct PrefixCache {
+    page_size: usize,
+    /// The root's children (the root itself holds no page: the empty
+    /// prefix has no KV rows).
+    children: BTreeMap<Box<[u16]>, Node>,
+    /// Logical clock for LRU stamps.
+    clock: u64,
+    pub stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(page_size: usize) -> PrefixCache {
+        assert!(page_size > 0);
+        PrefixCache {
+            page_size,
+            children: BTreeMap::new(),
+            clock: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    /// Longest cached prefix of `prompt`, or `None` when nothing (or only
+    /// position `prompt_len - 1` onward, which must be prefilled anyway)
+    /// matches. Read-only: pinning happens separately via
+    /// [`PrefixCache::pin`] once the pool has admitted the request.
+    pub fn probe(&self, prompt: &[u16]) -> Option<PrefixHit> {
+        let ps = self.page_size;
+        let plen = prompt.len();
+        let mut pages = Vec::new();
+        let mut keys: Vec<Box<[u16]>> = Vec::new();
+        let mut fresh_pins = 0usize;
+        let mut map = &self.children;
+        let mut depth = 0usize;
+        // Full-page matches: exact-run descent, stopping while at least one
+        // prompt token past the match remains to prefill.
+        while (depth + 1) * ps < plen {
+            let run = &prompt[depth * ps..(depth + 1) * ps];
+            let Some(node) = map.get(run) else { break };
+            pages.push(node.page.clone());
+            keys.push(run.into());
+            if node.pins == 0 {
+                fresh_pins += 1;
+            }
+            map = &node.children;
+            depth += 1;
+        }
+        // Partial match inside the next page: the child sharing the longest
+        // common token prefix with what remains becomes the COW source.
+        let base = depth * ps;
+        let limit = (plen - 1).saturating_sub(base).min(ps);
+        let mut cow = None;
+        if limit >= 1 {
+            let want = &prompt[base..base + limit];
+            let mut best_j = 0usize;
+            let mut best: Option<(&[u16], &Node)> = None;
+            for (key, child) in map.iter() {
+                let j = key.iter().zip(want.iter()).take_while(|(a, b)| a == b).count();
+                if j > best_j {
+                    best_j = j;
+                    best = Some((key, child));
+                }
+            }
+            if let Some((key, child)) = best {
+                cow = Some((best_j, child.page.clone()));
+                keys.push(key.into());
+                if child.pins == 0 {
+                    fresh_pins += 1;
+                }
+            }
+        }
+        let matched = base + cow.as_ref().map_or(0, |&(j, _)| j);
+        if matched == 0 {
+            return None;
+        }
+        Some(PrefixHit { pages, cow, matched, fresh_pins, ticket: PinTicket { keys } })
+    }
+
+    /// Pin every node on the ticket's path (called once admission has
+    /// reserved the remainder — [`KvPool::try_admit`] already moved
+    /// `fresh_pins` into the pool's pinned gauge). Returns the number of
+    /// unpinned → pinned transitions, which must equal the probe's
+    /// `fresh_pins` (nothing mutates the trie in between).
+    pub fn pin(&mut self, ticket: &PinTicket) -> usize {
+        self.clock += 1;
+        let stamp = self.clock;
+        let mut fresh = 0usize;
+        let mut map = &mut self.children;
+        for key in &ticket.keys {
+            let node = map.get_mut(key.as_ref()).expect("pin: ticket path vanished");
+            if node.pins == 0 {
+                fresh += 1;
+            }
+            node.pins += 1;
+            node.last_used = stamp;
+            map = &mut node.children;
+        }
+        fresh
+    }
+
+    /// Drop a finished slot's pins, updating the pool's pinned gauge for
+    /// nodes that became evictable. The path is guaranteed intact: pinned
+    /// nodes are never evicted and pins are path-monotone.
+    pub fn unpin(&mut self, ticket: &PinTicket, pool: &mut KvPool) {
+        let mut now_free = 0usize;
+        let mut map = &mut self.children;
+        for key in &ticket.keys {
+            let node = map.get_mut(key.as_ref()).expect("unpin: ticket path vanished");
+            debug_assert!(node.pins > 0, "unpin without a pin");
+            node.pins -= 1;
+            if node.pins == 0 {
+                now_free += 1;
+            }
+            map = &mut node.children;
+        }
+        pool.unpin_shared(now_free);
+    }
+
+    /// Publish a finished slot's fully-committed prompt pages.
+    ///
+    /// `pages` is the slot's detached page vec (index == page index);
+    /// `skip_shared` leading pages came from the trie and are already
+    /// published. Every private page fully covered by committed prompt
+    /// tokens is drained out and inserted keyed by its token run —
+    /// insert-or-dedup: when an identical run is already cached (another
+    /// request won the race), ours is left in `pages` for the caller's
+    /// [`KvPool::release`] instead. The ledger moves inserted pages
+    /// slot-private → trie-cached ([`KvPool::publish`]).
+    pub fn publish(
+        &mut self,
+        pool: &mut KvPool,
+        prompt: &[u16],
+        committed: usize,
+        pages: &mut Vec<KvPage>,
+        skip_shared: usize,
+    ) {
+        let ps = self.page_size;
+        let publishable = committed.min(prompt.len()) / ps;
+        if publishable <= skip_shared {
+            return;
+        }
+        self.clock += 1;
+        let stamp = self.clock;
+        // Descend the already-published shared path.
+        let mut map = &mut self.children;
+        for d in 0..skip_shared {
+            let run = &prompt[d * ps..(d + 1) * ps];
+            let node = map.get_mut(run).expect("publish: shared path vanished");
+            map = &mut node.children;
+        }
+        let drained: Vec<KvPage> = pages.drain(skip_shared..publishable).collect();
+        let mut deduped = Vec::new();
+        for (i, page) in drained.into_iter().enumerate() {
+            let d = skip_shared + i;
+            let run: Box<[u16]> = prompt[d * ps..(d + 1) * ps].into();
+            match map.entry(run) {
+                Entry::Occupied(e) => {
+                    let node = e.into_mut();
+                    node.last_used = stamp;
+                    // Same path + same run ⇒ bit-identical KV rows (chunk
+                    // invariance), so dropping ours loses nothing.
+                    debug_assert_eq!(&node.page[..], &page[..], "prefix dedup: contents diverge");
+                    deduped.push(page);
+                    map = &mut node.children;
+                }
+                Entry::Vacant(v) => {
+                    pool.publish();
+                    let node = v.insert(Node {
+                        page,
+                        pins: 0,
+                        last_used: stamp,
+                        children: BTreeMap::new(),
+                    });
+                    map = &mut node.children;
+                }
+            }
+        }
+        // Deduplicated pages ride back for release with the slot's leftovers.
+        pages.extend(deduped);
+    }
+
+    /// Evict the least-recently-used unpinned leaf, returning its page to
+    /// the pool's free list. `false` only when no unpinned node exists —
+    /// which admission's `reserved + pinned <= total` gate makes impossible
+    /// at the moment [`draw_page`] needs it.
+    pub fn evict_one(&mut self, pool: &mut KvPool) -> bool {
+        fn find(
+            map: &BTreeMap<Box<[u16]>, Node>,
+            path: &mut Vec<Box<[u16]>>,
+            best: &mut Option<(u64, Vec<Box<[u16]>>)>,
+        ) {
+            for (key, node) in map {
+                path.push(key.clone());
+                if node.pins == 0 && node.children.is_empty() {
+                    let better = match best {
+                        Some((t, _)) => node.last_used < *t,
+                        None => true,
+                    };
+                    if better {
+                        *best = Some((node.last_used, path.clone()));
+                    }
+                } else {
+                    find(&node.children, path, best);
+                }
+                path.pop();
+            }
+        }
+        let mut best = None;
+        find(&self.children, &mut Vec::new(), &mut best);
+        let Some((_, path)) = best else { return false };
+        let mut map = &mut self.children;
+        for key in &path[..path.len() - 1] {
+            map = &mut map.get_mut(key.as_ref()).unwrap().children;
+        }
+        let node = map.remove(path.last().unwrap().as_ref()).unwrap();
+        debug_assert!(node.pins == 0 && node.children.is_empty());
+        pool.evict(node.page);
+        self.stats.evictions += 1;
+        true
+    }
+
+    /// Drop the whole trie, returning every page to the pool's free list,
+    /// and zero the stats (`Engine::reset` — slots must already have been
+    /// released so no pins or shared references remain).
+    pub fn clear_into(&mut self, pool: &mut KvPool) {
+        fn drain_nodes(map: &mut BTreeMap<Box<[u16]>, Node>, pool: &mut KvPool) {
+            for (_, mut node) in std::mem::take(map) {
+                debug_assert_eq!(node.pins, 0, "clear with live pins");
+                drain_nodes(&mut node.children, pool);
+                pool.evict(node.page);
+            }
+        }
+        drain_nodes(&mut self.children, pool);
+        self.clock = 0;
+        self.stats = PrefixStats::default();
+    }
+
+    /// Nodes (= cached pages) currently in the trie.
+    pub fn len(&self) -> usize {
+        fn count(map: &BTreeMap<Box<[u16]>, Node>) -> usize {
+            map.values().map(|n| 1 + count(&n.children)).sum()
+        }
+        count(&self.children)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+}
+
+/// Take one page for a covering reservation, evicting the LRU unpinned trie
+/// leaf first when the pool is fully materialized with nothing free — the
+/// single draw point that integrates the cache with reservation-based
+/// admission (cache-full degrades to cold behavior, never deadlock).
+pub fn draw_page(pool: &mut KvPool, prefix: &mut PrefixCache) -> KvPage {
+    if pool.free_pages() == 0 && pool.fully_materialized() {
+        let evicted = prefix.evict_one(pool);
+        debug_assert!(evicted, "nothing evictable in a fully-materialized pool");
+    }
+    pool.take_page()
+}
+
+/// Write access to a freshly drawn (uniquely-owned) page — the COW copy
+/// path and tests use this; a panic here means a shared page leaked into a
+/// private context.
+pub fn page_mut(page: &mut KvPage) -> &mut [f32] {
+    Arc::get_mut(page).expect("page_mut on a shared page")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::family_config;
+    use crate::nn::model::ModelConfig;
+    use crate::util::quickcheck::check;
+
+    fn cfg() -> ModelConfig {
+        family_config("l2", "xs")
+    }
+
+    /// Publish `prompt`'s full pages into the trie as a finished slot
+    /// would: reserve, draw, stamp each page with a recognizable fill,
+    /// publish, release the remainder.
+    fn publish_prompt(pool: &mut KvPool, cache: &mut PrefixCache, prompt: &[u16]) {
+        let ps = pool.page_size();
+        let n = prompt.len() / ps;
+        if n == 0 {
+            return;
+        }
+        assert!(pool.try_admit(n, 0));
+        let mut pages: Vec<KvPage> = Vec::new();
+        for d in 0..n {
+            let mut page = draw_page(pool, cache);
+            // Deterministic content derived from the run so dedup's
+            // bit-identity debug assertion exercises real comparisons.
+            let fill = prompt[d * ps] as f32 + d as f32 * 0.5;
+            page_mut(&mut page).fill(fill);
+            pages.push(page);
+        }
+        cache.publish(pool, prompt, n * ps, &mut pages, 0);
+        pool.release(pages, n);
+    }
+
+    #[test]
+    fn probe_caps_at_one_token_short_of_the_prompt() {
+        let cfg = cfg();
+        let ps = 4;
+        let mut pool = KvPool::new(&cfg, ps, 64);
+        let mut cache = PrefixCache::new(ps);
+        let prompt: Vec<u16> = (0..12).collect();
+        publish_prompt(&mut pool, &mut cache, &prompt);
+        assert_eq!(cache.len(), 3);
+        // Identical prompt: only 2 full pages + a partial COW match may be
+        // reused — position 11 must be prefilled to produce logits.
+        let hit = cache.probe(&prompt).unwrap();
+        assert_eq!(hit.pages.len(), 2);
+        assert_eq!(hit.matched, 11);
+        let (j, _) = hit.cow.as_ref().unwrap();
+        assert_eq!(*j, 3);
+        // A longer prompt with the same prefix reuses all 3 full pages.
+        let longer: Vec<u16> = (0..16).collect();
+        let hit = cache.probe(&longer).unwrap();
+        assert_eq!(hit.pages.len(), 3);
+        assert_eq!(hit.matched, 12);
+        assert!(hit.cow.is_none());
+        pool.debug_assert_consistent();
+    }
+
+    #[test]
+    fn pin_makes_leaves_unevictable_until_unpinned() {
+        let cfg = cfg();
+        let ps = 4;
+        let mut pool = KvPool::new(&cfg, ps, 64);
+        let mut cache = PrefixCache::new(ps);
+        publish_prompt(&mut pool, &mut cache, &[1, 1, 1, 1, 2, 2, 2, 2]);
+        publish_prompt(&mut pool, &mut cache, &[3, 3, 3, 3]);
+        let probe: Vec<u16> = vec![1, 1, 1, 1, 2, 2, 2, 2, 9];
+        let hit = cache.probe(&probe).unwrap();
+        assert_eq!(hit.pages.len(), 2);
+        assert_eq!(hit.fresh_pins, 2);
+        assert!(pool.try_admit(1, hit.fresh_pins));
+        assert_eq!(cache.pin(&hit.ticket), 2);
+        // The pinned chain [1..]->[2..] is immune; only [3..] can go.
+        assert!(cache.evict_one(&mut pool));
+        assert_eq!(cache.len(), 2);
+        assert!(!cache.evict_one(&mut pool));
+        cache.unpin(&hit.ticket, &mut pool);
+        pool.release(Vec::new(), 1);
+        assert!(cache.evict_one(&mut pool));
+        assert!(cache.evict_one(&mut pool));
+        assert!(cache.is_empty());
+        assert_eq!(cache.stats.evictions, 3);
+        pool.debug_assert_consistent();
+        drop(hit);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_touched_leaf_first() {
+        let cfg = cfg();
+        let ps = 4;
+        let mut pool = KvPool::new(&cfg, ps, 64);
+        let mut cache = PrefixCache::new(ps);
+        publish_prompt(&mut pool, &mut cache, &[1, 1, 1, 1]);
+        publish_prompt(&mut pool, &mut cache, &[2, 2, 2, 2]);
+        // Touch [1..] (pin + unpin bumps its stamp past [2..]'s).
+        let hit = cache.probe(&[1, 1, 1, 1, 9]).unwrap();
+        assert!(pool.try_admit(1, hit.fresh_pins));
+        cache.pin(&hit.ticket);
+        cache.unpin(&hit.ticket, &mut pool);
+        pool.release(Vec::new(), 1);
+        assert!(cache.evict_one(&mut pool));
+        // [2..] went; [1..] survives.
+        assert!(cache.probe(&[1, 1, 1, 1, 9]).is_some());
+        assert!(cache.probe(&[2, 2, 2, 2, 9]).is_none());
+    }
+
+    #[test]
+    fn trie_insert_lookup_roundtrips_arbitrary_token_runs() {
+        let cfg = cfg();
+        check("prefix_trie_roundtrip", 40, |g| {
+            let ps = *g.choose(&[1usize, 2, 4, 8]);
+            let mut pool = KvPool::new(&cfg, ps, 4096);
+            let mut cache = PrefixCache::new(ps);
+            // Publish a handful of random prompts (small alphabet so
+            // prefixes actually collide and the trie branches).
+            let n_prompts = g.int(1, 6);
+            let mut prompts: Vec<Vec<u16>> = Vec::new();
+            for _ in 0..n_prompts {
+                let len = g.int(1, 6 * ps);
+                let prompt: Vec<u16> = (0..len).map(|_| g.int(0, 2) as u16).collect();
+                publish_prompt(&mut pool, &mut cache, &prompt);
+                prompts.push(prompt);
+            }
+            pool.debug_assert_consistent();
+            // Every published prompt probes back to the max reusable
+            // prefix: full pages capped one token short of the prompt.
+            for prompt in &prompts {
+                let full = prompt.len() / ps;
+                let full_reusable = full.min((prompt.len() - 1) / ps);
+                match cache.probe(prompt) {
+                    Some(hit) => {
+                        assert_eq!(hit.pages.len(), full_reusable);
+                        assert!(hit.matched >= full_reusable * ps);
+                        assert!(hit.matched >= 1 && hit.matched < prompt.len());
+                    }
+                    None => {
+                        // Only possible when the one-token-to-prefill cap
+                        // leaves nothing of this prompt reusable.
+                        assert_eq!(full_reusable, 0);
+                    }
+                }
+            }
+            // A prompt disjoint from the published alphabet never matches.
+            let fresh: Vec<u16> = (0..2 * ps).map(|_| 7).collect();
+            assert!(cache.probe(&fresh).is_none());
+            // Clearing returns every page: the pool conserves.
+            cache.clear_into(&mut pool);
+            assert_eq!(pool.cached_pages(), 0);
+            pool.debug_assert_consistent();
+        });
+    }
+}

@@ -735,3 +735,70 @@ fn traffic_generator_overload_smoke_sheds_and_conserves_outcomes() {
         gateway.shutdown();
     });
 }
+
+#[test]
+fn shared_prefix_traffic_hits_the_prefix_cache() {
+    with_watchdog(180, || {
+        // Every request leads with one of two 40-token preambles (spanning
+        // one full 32-position KV page), so once the first request of each
+        // preamble publishes its prompt pages, later admissions must reuse
+        // them — visible as nonzero prefix_cache.hits in /v1/metrics.
+        let scfg = ServerConfig { max_batch: 2, seed: 0, ..Default::default() };
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        let cfg = TrafficConfig {
+            seed: 7,
+            requests: 12,
+            rate_rps: 400.0,
+            prompt_min: 4,
+            prompt_max: 12,
+            max_new_min: 4,
+            max_new_max: 8,
+            prefix_frac: 1.0,
+            prefix_len: 40,
+            n_prefixes: 2,
+            ..Default::default()
+        };
+        let report = run_traffic(addr, &cfg);
+        assert_eq!(report.sent(), cfg.requests, "open loop must send every planned request");
+        let metrics = wait_metrics(addr, 60, "engine to quiesce", |m| {
+            m.get("in_flight").and_then(Json::as_usize) == Some(0)
+        });
+        let pc = metrics
+            .get("prefix_cache")
+            .unwrap_or_else(|| panic!("metrics missing prefix_cache: {metrics:?}"));
+        let hits = pc.get("hits").and_then(Json::as_usize).expect("prefix_cache.hits");
+        let hit_tokens =
+            pc.get("hit_tokens").and_then(Json::as_usize).expect("prefix_cache.hit_tokens");
+        assert!(hits > 0, "shared 40-token preambles must hit the cache: {metrics:?}");
+        assert!(
+            hit_tokens >= hits * 32,
+            "every hit here spans the full preamble page (hits={hits} hit_tokens={hit_tokens})"
+        );
+        assert!(pc.get("misses").and_then(Json::as_usize).is_some());
+        assert!(pc.get("evictions").and_then(Json::as_usize).is_some());
+        assert!(
+            pc.get("cached_pages").and_then(Json::as_usize).is_some_and(|c| c > 0),
+            "published prompt pages must sit in trie custody: {metrics:?}"
+        );
+        assert_eq!(
+            pc.get("shared_pages").and_then(Json::as_usize),
+            Some(0),
+            "a quiesced engine pins nothing"
+        );
+        // The cache escape hatch: both spellings parse and still serve;
+        // garbage is a 400, not a silent default.
+        for body in [
+            "{\"prompt\": [1, 2, 3], \"max_new\": 2, \"cache\": \"off\"}",
+            "{\"prompt\": [1, 2, 3], \"max_new\": 2, \"cache\": false}",
+            "{\"prompt\": [1, 2, 3], \"max_new\": 2, \"cache\": \"on\"}",
+        ] {
+            let (status, json) = oneshot(addr, "POST", "/v1/generate", body);
+            assert_eq!(status, 200, "cache knob must not break serving: {json:?}");
+        }
+        let (status, json) =
+            oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [1], \"cache\": 3}");
+        assert_eq!(status, 400, "non-boolean cache value must be rejected: {json:?}");
+        gateway.shutdown();
+    });
+}
