@@ -188,6 +188,43 @@ fn main() {
          cold/hot mean ttft {ttft_speedup:.2}x"
     );
 
+    // ---- Observability overhead: identical serial SSE workloads against
+    // a tracing gateway and a `--no-obs` one. The obs budget is a handful
+    // of clock reads + integer histogram records per tick, so the two
+    // throughputs should be within noise of each other; the recorded
+    // fraction is the proof (or the regression alarm).
+    let mut obs_walls: [Vec<f64>; 2] = Default::default();
+    for (i, obs) in [true, false].into_iter().enumerate() {
+        let e = Engine::new(
+            dense_decode_model(&params),
+            ServerConfig { max_batch: 4, seed: 0, obs, ..Default::default() },
+        );
+        let gw =
+            Gateway::start(e, GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() })
+                .expect("bind obs-overhead gateway");
+        let a = gw.local_addr();
+        for run in 0..RUNS {
+            let m = sse_once(a, &body);
+            assert_eq!(m.tokens, MAX_NEW, "short obs-overhead stream");
+            if run > 0 {
+                obs_walls[i].push(m.wall_s);
+            }
+        }
+        gw.shutdown();
+    }
+    let obs_on = stats_from("gateway sse wall, obs on", &obs_walls[0]);
+    println!("{obs_on}");
+    let obs_off = stats_from("gateway sse wall, obs off", &obs_walls[1]);
+    println!("{obs_off}");
+    let tok_s_obs_on = MAX_NEW as f64 / obs_on.mean_s.max(1e-9);
+    let tok_s_obs_off = MAX_NEW as f64 / obs_off.mean_s.max(1e-9);
+    let obs_overhead_frac = (tok_s_obs_off - tok_s_obs_on) / tok_s_obs_off.max(1e-9);
+    println!(
+        "obs overhead: {tok_s_obs_on:.1} tok/s traced vs {tok_s_obs_off:.1} tok/s off \
+         ({:+.1}%)",
+        obs_overhead_frac * 100.0
+    );
+
     let doc = Json::obj()
         .set("bench", "gateway")
         .set("model", cfg.name.as_str())
@@ -230,6 +267,13 @@ fn main() {
                         .set("ttft_speedup", ttft_speedup)
                         .set("hits", cache_hits)
                         .set("hit_tokens", cache_hit_tokens),
+                )
+                .set(
+                    "obs_overhead",
+                    Json::obj()
+                        .set("tokens_per_s_obs_on", tok_s_obs_on)
+                        .set("tokens_per_s_obs_off", tok_s_obs_off)
+                        .set("overhead_frac", obs_overhead_frac),
                 ),
         );
     match write_json(OUT_PATH, &doc) {

@@ -31,6 +31,7 @@ pub mod exp;
 pub mod linalg;
 pub mod model;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod serve;

@@ -291,6 +291,9 @@ fn cmd_gateway(args: &Args) {
         seed: args.get_u64("seed", 0),
         queue_cap: args.get_usize("queue-cap", nanoquant::serve::DEFAULT_QUEUE_CAP),
         batched_decode: !args.flag("per-slot-decode"),
+        // Tick profiling + request tracing are on by default (outputs are
+        // byte-identical either way); --no-obs drops even the clock reads.
+        obs: !args.flag("no-obs"),
         ..Default::default()
     };
     let backing = if args.flag("heap") { Backing::Heap } else { Backing::Mmap };
@@ -361,6 +364,9 @@ fn cmd_gateway(args: &Args) {
     println!("  POST /v1/models/load         {{\"name\": ..., \"path\": \"m.nqck\"}}");
     println!("  POST /v1/models/unload       {{\"name\": ...}} (drains first)");
     println!("  GET  /v1/metrics             lifetime metrics, queue depths, per-tenant stats");
+    println!("  GET  /v1/metrics?format=prometheus  same snapshots as text exposition");
+    println!("  GET  /v1/trace/<id>          one request's lifecycle span tree");
+    println!("  POST /v1/debug/dump          flight recorder as Chrome-trace NDJSON");
     println!("  GET  /healthz                liveness + per-model shed/degraded state");
     println!("try: curl -N -X POST 'http://{addr}/v1/generate?stream=1' \\");
     println!("          -d '{{\"prompt\": \"the robin is a kind of\", \"max_new\": 16}}'");

@@ -7,6 +7,7 @@
 use super::model::{silu, ModelConfig};
 use crate::tensor::Tensor;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// A weight matrix that can multiply a vector: `y = W x` (W: [out, in]).
 ///
@@ -580,6 +581,19 @@ pub struct BatchScratch {
     max_seq: usize,
     /// Stride of one logits row (`cfg.vocab` at construction).
     vocab: usize,
+    /// When set, [`decode_batch_into`] splits its wall time into
+    /// [`field@BatchScratch::gemm_s`] (shared projections, MLP, vocab
+    /// head) and [`field@BatchScratch::attn_s`] (per-slot attention
+    /// fan-out). Off by default and off means *zero* clock reads — the
+    /// serving engine's tick profiler sets it, harvests the accumulators
+    /// after the call, and `nn` stays free of any `obs` dependency.
+    /// Timing never touches the computed values, so outputs are
+    /// byte-identical either way.
+    pub timing: bool,
+    /// Accumulated GEMM-side seconds since the caller last zeroed it.
+    pub gemm_s: f64,
+    /// Accumulated attention-side seconds since the caller last zeroed it.
+    pub attn_s: f64,
 }
 
 impl BatchScratch {
@@ -606,6 +620,9 @@ impl BatchScratch {
             logits: vec![0.0; cap * cfg.vocab],
             max_seq: cfg.max_seq,
             vocab: cfg.vocab,
+            timing: false,
+            gemm_s: 0.0,
+            attn_s: 0.0,
         }
     }
 
@@ -671,6 +688,7 @@ pub fn decode_batch_into(
         s.bx[j * d..(j + 1) * d].copy_from_slice(model.embed.row(tok as usize));
     }
     for (li, blk) in model.blocks.iter().enumerate() {
+        let t_gemm = if s.timing { Some(Instant::now()) } else { None };
         // Attention projections for the whole batch, then RoPE + cache
         // writes per slot at that slot's own position.
         for j in 0..b {
@@ -699,6 +717,10 @@ pub fn decode_batch_into(
         // only its own `batt` chunk (handed out disjoint by the pool) and
         // its own score strip (split by raw pointer, same idiom as
         // `util::threadpool::parallel_chunks_mut` itself).
+        let t_attn = t_gemm.map(|t| {
+            s.gemm_s += t.elapsed().as_secs_f64();
+            Instant::now()
+        });
         s.batt[..b * d].fill(0.0);
         {
             struct SendPtr(*mut f32);
@@ -719,6 +741,10 @@ pub fn decode_batch_into(
                 attn_token_into(cfg, cache, li, &bq[j * d..(j + 1) * d], cache.len, scores, att);
             });
         }
+        let t_rest = t_attn.map(|t| {
+            s.attn_s += t.elapsed().as_secs_f64();
+            Instant::now()
+        });
         blk.wo.matvec_chunk_into(&s.batt[..b * d], b, &mut s.bproj[..b * d]);
         for (x, &p) in s.bx[..b * d].iter_mut().zip(s.bproj[..b * d].iter()) {
             *x += p;
@@ -744,12 +770,16 @@ pub fn decode_batch_into(
         for (x, &p) in s.bx[..b * d].iter_mut().zip(s.bproj[..b * d].iter()) {
             *x += p;
         }
+        if let Some(t) = t_rest {
+            s.gemm_s += t.elapsed().as_secs_f64();
+        }
     }
     for cache in caches.iter_mut() {
         cache.len += 1;
     }
 
     // Final norm + vocab head for every slot (decode always samples).
+    let t_head = if s.timing { Some(Instant::now()) } else { None };
     for j in 0..b {
         let h = &mut s.bfin[j * d..(j + 1) * d];
         rmsnorm_into(&s.bx[j * d..(j + 1) * d], &model.ln_f, cfg.eps, h);
@@ -766,6 +796,9 @@ pub fn decode_batch_into(
                 }
             }
         }
+    }
+    if let Some(t) = t_head {
+        s.gemm_s += t.elapsed().as_secs_f64();
     }
 }
 

@@ -1,0 +1,313 @@
+//! Fixed-shape log2 histogram: the one histogram type every latency and
+//! size distribution in the repo records into.
+//!
+//! Shape is compile-time fixed ([`NBUCKETS`] buckets, geometric base-2
+//! edges scaled by a per-histogram `unit`), so recording is a couple of
+//! integer ops on a stack array — no heap allocation ever, which is what
+//! lets the serving engine record queue waits, TTFTs, inter-token gaps and
+//! tick-phase times on the decode hot path without breaking its
+//! steady-state allocation-freeness. Two histograms with the same unit are
+//! mergeable bucket-wise, so per-shard or per-thread instances can be
+//! summed into a fleet view without losing anything but intra-bucket
+//! resolution.
+//!
+//! Bucket layout, for unit `u`:
+//!
+//! ```text
+//! bucket 0:            value < u           (upper edge u)
+//! bucket i (1..=26):   u*2^(i-1) <= v < u*2^i   (upper edge u*2^i)
+//! bucket 27:           overflow            (upper edge +Inf)
+//! ```
+//!
+//! With the [`Histogram::seconds`] unit of 1µs the finite range tops out at
+//! `1µs * 2^26 ≈ 67s`; with the [`Histogram::counts`] unit of 1 it tops
+//! out at `2^26 ≈ 6.7e7` — both comfortably beyond anything the serving
+//! stack measures.
+
+/// Number of buckets, including the catch-all underflow bucket 0 and the
+/// overflow bucket `NBUCKETS - 1` (upper edge `+Inf`).
+pub const NBUCKETS: usize = 28;
+
+/// A mergeable fixed-log2-bucket histogram. See the module docs for the
+/// bucket layout.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// Scale of bucket 0's upper edge; all other edges are `unit * 2^i`.
+    unit: f64,
+    counts: [u64; NBUCKETS],
+    count: u64,
+    sum: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new(1.0)
+    }
+}
+
+impl Histogram {
+    /// A histogram whose bucket 0 upper edge is `unit` (must be finite and
+    /// positive).
+    pub fn new(unit: f64) -> Histogram {
+        debug_assert!(unit.is_finite() && unit > 0.0, "histogram unit must be positive");
+        Histogram { unit, counts: [0; NBUCKETS], count: 0, sum: 0.0 }
+    }
+
+    /// The standard unit for durations in seconds: bucket 0 is `< 1µs`,
+    /// finite edges run up to ~67s.
+    pub fn seconds() -> Histogram {
+        Histogram::new(1e-6)
+    }
+
+    /// The standard unit for dimensionless counts (tokens, batch widths):
+    /// bucket 0 is `< 1`, finite edges run up to ~6.7e7.
+    pub fn counts() -> Histogram {
+        Histogram::new(1.0)
+    }
+
+    /// Bucket index for a value: `floor(log2(v / unit)) + 1`, clamped into
+    /// range, via integer bit tricks (no `log2` call, no branch misses on
+    /// the hot path).
+    fn bucket_of(&self, v: f64) -> usize {
+        if !(v >= self.unit) {
+            // Also catches NaN and negatives: they land in bucket 0, and
+            // `record` clamps their sum contribution to 0.
+            return 0;
+        }
+        let r = (v / self.unit) as u64; // >= 1 here
+        let idx = 64 - r.leading_zeros() as usize; // floor(log2(r)) + 1
+        idx.min(NBUCKETS - 1)
+    }
+
+    /// Record one observation. Negative or NaN values count as zeros (they
+    /// land in bucket 0 and contribute 0 to the sum) — consistent with the
+    /// zero-elapsed guards in `ServeMetrics::snapshot`.
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        self.counts[self.bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Add every bucket of `other` into `self`. Both histograms must share
+    /// a unit (same edges), or the merge would be meaningless.
+    pub fn merge(&mut self, other: &Histogram) {
+        debug_assert_eq!(
+            self.unit.to_bits(),
+            other.unit.to_bits(),
+            "merging histograms with different units"
+        );
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    /// Total observations recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of all recorded values (exact, not bucket-approximated).
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Mean of recorded values, or 0.0 when empty (zero-count guard
+    /// consistent with `ServeMetrics::snapshot`).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// The per-histogram scale (bucket 0's upper edge).
+    pub fn unit(&self) -> f64 {
+        self.unit
+    }
+
+    /// Raw bucket counts, index-aligned with [`Histogram::upper_edge`].
+    pub fn buckets(&self) -> &[u64; NBUCKETS] {
+        &self.counts
+    }
+
+    /// Upper edge of bucket `i`: `unit * 2^i` for finite buckets,
+    /// `+Inf` for the overflow bucket.
+    pub fn upper_edge(&self, i: usize) -> f64 {
+        debug_assert!(i < NBUCKETS);
+        if i == NBUCKETS - 1 {
+            f64::INFINITY
+        } else {
+            self.unit * (1u64 << i) as f64
+        }
+    }
+
+    /// Observations whose *bucket* lies entirely at or below `edge` — the
+    /// projection primitive for rendering onto coarser, externally-defined
+    /// bucket bounds (e.g. the legacy queue-wait JSON buckets). Because a
+    /// bucket is only counted once its whole range fits under `edge`, the
+    /// projection is conservative: samples near a coarse edge may be
+    /// reported one coarse bucket later, never earlier, and the total is
+    /// always preserved.
+    pub fn count_le(&self, edge: f64) -> u64 {
+        let mut acc = 0;
+        for i in 0..NBUCKETS {
+            if self.upper_edge(i) <= edge {
+                acc += self.counts[i];
+            }
+        }
+        acc
+    }
+
+    /// Bucket-resolution quantile: the upper edge of the bucket containing
+    /// the `p`-th ordered observation (`0.0 <= p <= 1.0`). Returns 0.0 for
+    /// an empty histogram, and the largest finite edge if the quantile
+    /// lands in the overflow bucket. An upper edge is the honest answer a
+    /// log-bucketed sketch can give: the true value is at most one bucket
+    /// width (2x) below it.
+    pub fn quantile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 1.0);
+        // ceil(p * count), clamped to [1, count]: the rank of the target
+        // observation in ascending order.
+        let target = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut acc = 0u64;
+        for i in 0..NBUCKETS {
+            acc += self.counts[i];
+            if acc >= target {
+                return if i == NBUCKETS - 1 {
+                    self.upper_edge(NBUCKETS - 2)
+                } else {
+                    self.upper_edge(i)
+                };
+            }
+        }
+        self.upper_edge(NBUCKETS - 2)
+    }
+
+    /// Reset to empty, keeping the unit.
+    pub fn reset(&mut self) {
+        self.counts = [0; NBUCKETS];
+        self.count = 0;
+        self.sum = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_partition_the_line() {
+        let h = Histogram::seconds();
+        // Exactly-on-edge values belong to the *next* bucket (half-open
+        // ranges [lo, hi)).
+        assert_eq!(h.bucket_of(0.0), 0);
+        assert_eq!(h.bucket_of(0.5e-6), 0);
+        assert_eq!(h.bucket_of(1e-6), 1);
+        assert_eq!(h.bucket_of(1.5e-6), 1);
+        assert_eq!(h.bucket_of(2e-6), 2);
+        assert_eq!(h.bucket_of(3.9e-6), 2);
+        assert_eq!(h.bucket_of(4e-6), 3);
+        assert_eq!(h.bucket_of(f64::MAX), NBUCKETS - 1);
+        // Edge values: a value in bucket i is strictly below upper_edge(i)
+        // and at least upper_edge(i-1).
+        for i in 1..NBUCKETS - 1 {
+            let lo = h.upper_edge(i - 1);
+            assert_eq!(h.bucket_of(lo), i, "lower edge of bucket {i}");
+            assert_eq!(h.bucket_of(lo * 1.5), i, "interior of bucket {i}");
+        }
+    }
+
+    #[test]
+    fn record_merge_and_count_conservation() {
+        let mut a = Histogram::seconds();
+        let mut b = Histogram::seconds();
+        for i in 0..100 {
+            a.record(i as f64 * 1e-4);
+        }
+        for i in 0..50 {
+            b.record(i as f64 * 1e-2);
+        }
+        let (ca, cb, sa, sb) = (a.count(), b.count(), a.sum(), b.sum());
+        a.merge(&b);
+        assert_eq!(a.count(), ca + cb);
+        assert!((a.sum() - (sa + sb)).abs() < 1e-12);
+        assert_eq!(a.buckets().iter().sum::<u64>(), a.count());
+    }
+
+    #[test]
+    fn degenerate_values_count_as_zeros() {
+        let mut h = Histogram::seconds();
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(f64::INFINITY);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.buckets()[0], 3);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn quantile_walks_buckets() {
+        let mut h = Histogram::counts();
+        assert_eq!(h.quantile(0.5), 0.0); // empty
+        h.record(1.0); // bucket 1 (upper edge 2)
+        assert_eq!(h.quantile(0.0), 2.0);
+        assert_eq!(h.quantile(1.0), 2.0);
+        for _ in 0..99 {
+            h.record(1.0);
+        }
+        h.record(1000.0); // bucket 10 (512..1024), upper edge 1024
+        // 100 of 101 samples are tiny: p50 stays in the small bucket, p997+
+        // reaches the outlier's bucket edge.
+        assert_eq!(h.quantile(0.5), 2.0);
+        assert_eq!(h.quantile(0.9999), 1024.0);
+        // Overflow-bucket quantiles cap at the largest finite edge.
+        let mut o = Histogram::counts();
+        o.record(1e30);
+        assert_eq!(o.quantile(0.5), o.upper_edge(NBUCKETS - 2));
+    }
+
+    #[test]
+    fn count_le_projection_is_conservative_and_total_preserving() {
+        let mut h = Histogram::seconds();
+        let samples = [0.0004, 0.0009, 0.002, 0.05, 0.7, 3.0, 42.0, 120.0];
+        for s in samples {
+            h.record(s);
+        }
+        // Coarse legacy bounds; the projection never loses a sample.
+        let bounds = [0.001, 0.01, 0.1, 1.0, 10.0];
+        let mut cum_prev = 0;
+        let mut total = 0;
+        for b in bounds {
+            let cum = h.count_le(b);
+            assert!(cum >= cum_prev, "cumulative counts are monotone");
+            total += cum - cum_prev;
+            cum_prev = cum;
+        }
+        total += h.count() - cum_prev; // overflow bucket
+        assert_eq!(total, h.count());
+        // Conservative: count_le never exceeds the true number of samples
+        // <= the bound.
+        for b in bounds {
+            let truth = samples.iter().filter(|s| **s <= b).count() as u64;
+            assert!(h.count_le(b) <= truth, "projection overcounted at {b}");
+        }
+    }
+
+    #[test]
+    fn reset_clears_but_keeps_unit() {
+        let mut h = Histogram::seconds();
+        h.record(0.5);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.unit(), 1e-6);
+    }
+}

@@ -1,0 +1,40 @@
+//! Observability: tick/phase profiling, per-request trace spans, and
+//! Prometheus text exposition — dependency-free, allocation-free on the
+//! hot path.
+//!
+//! The layer is three pieces with one shared primitive:
+//!
+//! - [`hist::Histogram`] — a fixed-shape log2-bucketed histogram (stack
+//!   arrays, mergeable, no heap). Every distribution in the repo (queue
+//!   wait, TTFT, inter-token gap, tick phase times, prefix-cache hit
+//!   length, decode batch width, the traffic generator's TTFT sketch)
+//!   records into this one type.
+//! - [`profile::TickProfiler`] — per-phase wall time for each engine tick,
+//!   accumulated in a recycled arena and folded into per-phase histograms.
+//!   Compiled to no-ops when disabled: `begin()` returns `None` without a
+//!   clock read, so byte-identity and steady-state allocation-freeness of
+//!   the decode path are preserved either way (both pinned by tests).
+//! - [`trace::TraceRing`] — a bounded single-owner ring of fixed-size
+//!   lifecycle events per request; doubles as the flight recorder (the
+//!   last N events survive for post-mortem dumps in Chrome-trace format).
+//!
+//! [`prometheus::Registry`] is the render-side: the gateway builds one per
+//! scrape from the snapshots it already collects and serves
+//! `GET /v1/metrics?format=prometheus`, leaving the JSON shape untouched.
+//!
+//! **Overhead budget:** with observability on (the default), the decode
+//! hot path pays a handful of `Instant::now()` reads per tick (tick
+//! granularity, not per-kernel), integer histogram records, and fixed-size
+//! ring writes — no locks, no allocation, no formatting. All string work
+//! happens at scrape/dump time on the HTTP worker. With it off, the cost
+//! is a branch per phase.
+
+pub mod hist;
+pub mod profile;
+pub mod prometheus;
+pub mod trace;
+
+pub use hist::{Histogram, NBUCKETS};
+pub use profile::{Phase, TickProfiler, ALL_PHASES, NPHASES};
+pub use prometheus::{escape_label_value, valid_label_name, valid_metric_name, Registry};
+pub use trace::{reason_str, TraceEvent, TraceKind, TraceRing};

@@ -1,0 +1,255 @@
+//! Tick/phase profiler for the serving engine.
+//!
+//! One scheduler tick (`serve::Engine::step`) is a fixed pipeline of
+//! phases; the profiler answers "where does a tick's wall time go at width
+//! 8?" without perturbing the thing it measures. The design constraints,
+//! in order:
+//!
+//! 1. **No heap allocation, ever.** Per-tick accumulation is a stack array
+//!    of [`NPHASES`] seconds ([`TickProfiler::finish_tick`] recycles it);
+//!    the aggregate is a fixed array of [`Histogram`]s. The engine's
+//!    steady-state allocation-freeness (pinned by tests since the batched
+//!    decode PR) survives with the profiler on *or* off.
+//! 2. **No-op when disabled.** [`TickProfiler::begin`] returns `None`
+//!    without touching the clock, and every other entry point early-outs
+//!    on the flag, so a disabled profiler costs a branch per phase and
+//!    cannot move timestamps, outputs, or allocations (byte-identity is
+//!    pinned by a test).
+//! 3. **Tick granularity, not per-call.** Phases are timed once per tick,
+//!    not per matvec: the engine's unit of scheduling is the tick, the
+//!    interesting regressions (admission stalls, GEMM-vs-attention balance
+//!    at a given width) show up at that grain, and a per-call profiler
+//!    would pay a clock read per kernel invocation on a path where a whole
+//!    layer can cost less than a syscall.
+//!
+//! Phase timings measured inside `nn::decode::decode_batch_into` (GEMM vs
+//! attention split) arrive via [`TickProfiler::add`] from the scratch
+//! arena's accumulators rather than a begin/end pair, keeping `nn` free of
+//! any `obs` dependency.
+
+use std::time::Instant;
+
+use super::hist::Histogram;
+
+/// Phases of one engine tick, in execution order. `DrainCommands` is
+/// recorded by the bridge thread (command drain happens between ticks);
+/// `BatchGemm`/`BatchAttn` are split out of the batched decode call via
+/// the scratch arena's accumulators; everything else brackets a block of
+/// `serve::Engine::step`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Bridge-side: draining the command channel before the tick.
+    DrainCommands = 0,
+    /// Cancellations, shed/instant-done drains, queued-deadline expiry.
+    Triage,
+    /// Class-strict + DRR admission, including prefix-cache probes.
+    Admission,
+    /// Serial page attach for freshly admitted slots.
+    PageAttach,
+    /// Parallel chunked prefill across slots.
+    Prefill,
+    /// Moving slot KV caches into the batch staging area.
+    Gather,
+    /// Cross-request GEMM work inside `decode_batch_into` (projections,
+    /// MLP, vocab head).
+    BatchGemm,
+    /// Per-slot attention inside `decode_batch_into`.
+    BatchAttn,
+    /// Moving KV caches back out of the batch staging area.
+    Scatter,
+    /// Sampling, stop-token checks, streaming, and slot finish.
+    Sampling,
+    /// End-of-tick page-ledger consistency check + reclaim accounting.
+    Reclaim,
+}
+
+/// Number of [`Phase`] variants; sizes every per-phase array.
+pub const NPHASES: usize = 11;
+
+/// All phases in execution order, index-aligned with their discriminants.
+pub const ALL_PHASES: [Phase; NPHASES] = [
+    Phase::DrainCommands,
+    Phase::Triage,
+    Phase::Admission,
+    Phase::PageAttach,
+    Phase::Prefill,
+    Phase::Gather,
+    Phase::BatchGemm,
+    Phase::BatchAttn,
+    Phase::Scatter,
+    Phase::Sampling,
+    Phase::Reclaim,
+];
+
+impl Phase {
+    /// Stable snake_case name, used as the `phase` label in Prometheus
+    /// exposition and as the Chrome-trace event name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Phase::DrainCommands => "drain_commands",
+            Phase::Triage => "triage",
+            Phase::Admission => "admission",
+            Phase::PageAttach => "page_attach",
+            Phase::Prefill => "prefill",
+            Phase::Gather => "gather",
+            Phase::BatchGemm => "batch_gemm",
+            Phase::BatchAttn => "batch_attn",
+            Phase::Scatter => "scatter",
+            Phase::Sampling => "sampling",
+            Phase::Reclaim => "reclaim",
+        }
+    }
+}
+
+/// Per-engine tick profiler: a recycled per-tick arena of phase seconds,
+/// folded into per-phase log2 histograms at tick end. Owned by the engine
+/// (single-threaded custody, like every other engine structure), so no
+/// locks anywhere.
+#[derive(Clone, Debug)]
+pub struct TickProfiler {
+    enabled: bool,
+    /// Current-tick accumulation, seconds per phase. Recycled (zeroed) by
+    /// `finish_tick`, never reallocated.
+    cur: [f64; NPHASES],
+    /// Aggregate distribution of per-tick phase seconds.
+    hist: [Histogram; NPHASES],
+    /// Ticks folded into `hist` (idle early-return ticks included).
+    ticks: u64,
+}
+
+impl TickProfiler {
+    pub fn new(enabled: bool) -> TickProfiler {
+        TickProfiler {
+            enabled,
+            cur: [0.0; NPHASES],
+            hist: std::array::from_fn(|_| Histogram::seconds()),
+            ticks: 0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Start timing a phase. Returns `None` without reading the clock when
+    /// disabled — the caller threads the token to [`TickProfiler::end`],
+    /// so a disabled profiler performs zero clock syscalls per tick.
+    #[inline]
+    pub fn begin(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a phase opened by [`TickProfiler::begin`], accumulating its
+    /// elapsed time into the current tick. Multiple begin/end pairs for
+    /// the same phase within one tick sum.
+    #[inline]
+    pub fn end(&mut self, phase: Phase, started: Option<Instant>) {
+        if let Some(t) = started {
+            self.cur[phase as usize] += t.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Accumulate externally measured seconds (e.g. the GEMM/attention
+    /// split reported by the batch scratch arena) into the current tick.
+    #[inline]
+    pub fn add(&mut self, phase: Phase, secs: f64) {
+        if self.enabled {
+            self.cur[phase as usize] += secs;
+        }
+    }
+
+    /// Fold the current tick's phase times into the aggregate histograms
+    /// and recycle the arena. Phases that saw no time this tick are not
+    /// recorded (a histogram of "0s admission on idle ticks" would bury
+    /// the signal).
+    pub fn finish_tick(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        for i in 0..NPHASES {
+            if self.cur[i] > 0.0 {
+                self.hist[i].record(self.cur[i]);
+            }
+            self.cur[i] = 0.0;
+        }
+        self.ticks += 1;
+    }
+
+    /// Aggregate per-phase histograms, index-aligned with [`ALL_PHASES`].
+    pub fn histograms(&self) -> &[Histogram; NPHASES] {
+        &self.hist
+    }
+
+    /// Ticks folded so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks
+    }
+
+    /// Clear all aggregates (engine `reset`), keeping the enabled flag.
+    pub fn reset(&mut self) {
+        self.cur = [0.0; NPHASES];
+        for h in self.hist.iter_mut() {
+            h.reset();
+        }
+        self.ticks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_never_touches_the_clock_or_histograms() {
+        let mut p = TickProfiler::new(false);
+        let t = p.begin();
+        assert!(t.is_none(), "disabled begin must not read the clock");
+        p.end(Phase::Admission, t);
+        p.add(Phase::BatchGemm, 1.0);
+        p.finish_tick();
+        assert_eq!(p.ticks(), 0);
+        assert!(p.histograms().iter().all(|h| h.count() == 0));
+    }
+
+    #[test]
+    fn enabled_profiler_folds_phases_per_tick() {
+        let mut p = TickProfiler::new(true);
+        let t = p.begin();
+        assert!(t.is_some());
+        p.end(Phase::Admission, t);
+        p.add(Phase::BatchGemm, 0.25);
+        p.add(Phase::BatchGemm, 0.25); // same phase sums within a tick
+        p.finish_tick();
+        assert_eq!(p.ticks(), 1);
+        let h = &p.histograms()[Phase::BatchGemm as usize];
+        assert_eq!(h.count(), 1, "one tick = one sample per active phase");
+        assert!((h.sum() - 0.5).abs() < 1e-12);
+        // Inactive phases record nothing.
+        assert_eq!(p.histograms()[Phase::Prefill as usize].count(), 0);
+        // Arena is recycled.
+        p.finish_tick();
+        assert_eq!(p.ticks(), 2);
+        assert_eq!(p.histograms()[Phase::BatchGemm as usize].count(), 1);
+    }
+
+    #[test]
+    fn phase_discriminants_align_with_all_phases() {
+        for (i, ph) in ALL_PHASES.iter().enumerate() {
+            assert_eq!(*ph as usize, i);
+        }
+    }
+
+    #[test]
+    fn reset_clears_aggregates() {
+        let mut p = TickProfiler::new(true);
+        p.add(Phase::Triage, 0.1);
+        p.finish_tick();
+        p.reset();
+        assert_eq!(p.ticks(), 0);
+        assert!(p.histograms().iter().all(|h| h.count() == 0));
+    }
+}

@@ -1,0 +1,376 @@
+//! Prometheus text exposition (format version 0.0.4), dependency-free.
+//!
+//! A [`Registry`] is not a long-lived stateful object: the gateway builds
+//! one per scrape from the metrics snapshots it already has (engine
+//! `ServeMetrics`, KV-pool gauges, prefix-cache stats, threadpool sizes),
+//! renders it, and drops it. That keeps the exposition layer out of every
+//! hot path — the engine records into its own allocation-free structures;
+//! only the scrape pays for strings.
+//!
+//! Guarantees the renderer enforces:
+//! - `# HELP` / `# TYPE` emitted exactly once per metric family, before
+//!   its samples, however many label sets report into it.
+//! - Metric and label names are linted against the Prometheus grammar
+//!   (`[a-zA-Z_:][a-zA-Z0-9_:]*`, labels without the colon); a bad name is
+//!   a programming error and panics in debug builds, and the offending
+//!   sample is dropped in release builds rather than corrupting the scrape.
+//! - Label values are escaped per the spec (`\\`, `\"`, `\n`).
+//! - Histograms render cumulative `_bucket{le="..."}` series ending in
+//!   `le="+Inf"`, plus `_sum` and `_count`, with `_count` equal to the
+//!   `+Inf` bucket.
+
+use super::hist::{Histogram, NBUCKETS};
+
+/// Metric family kinds (the subset the serving stack uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One labelled sample: a scalar for counters/gauges, a full histogram for
+/// histogram families.
+enum Sample {
+    Scalar { labels: Vec<(String, String)>, value: f64 },
+    Hist { labels: Vec<(String, String)>, hist: Histogram },
+}
+
+struct Family {
+    name: String,
+    help: String,
+    kind: Kind,
+    samples: Vec<Sample>,
+}
+
+/// A per-scrape collection of metric families, rendered to exposition
+/// text. Families keep registration order; samples keep insertion order
+/// within a family.
+#[derive(Default)]
+pub struct Registry {
+    families: Vec<Family>,
+}
+
+/// `true` iff `s` is a valid Prometheus metric name:
+/// `[a-zA-Z_:][a-zA-Z0-9_:]*`.
+pub fn valid_metric_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' || c == ':' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+/// `true` iff `s` is a valid label name: `[a-zA-Z_][a-zA-Z0-9_]*` (no
+/// colons, and the `__` prefix is reserved by Prometheus itself).
+pub fn valid_label_name(s: &str) -> bool {
+    let mut chars = s.chars();
+    match chars.next() {
+        Some(c) if c.is_ascii_alphabetic() || c == '_' => {}
+        _ => return false,
+    }
+    chars.all(|c| c.is_ascii_alphanumeric() || c == '_') && !s.starts_with("__")
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+pub fn escape_label_value(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a HELP text: backslash and newline (quotes are fine there).
+fn escape_help(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a sample value: integral f64s print without a decimal point
+/// (Rust's `{}` already does this), infinities as `+Inf`/`-Inf`.
+fn fmt_value(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Lint names; `true` when the sample may be recorded. Panics in debug
+    /// builds — a bad metric name is a bug in the exporter, not data.
+    fn lint(name: &str, labels: &[(&str, &str)]) -> bool {
+        let ok =
+            valid_metric_name(name) && labels.iter().all(|(k, _)| valid_label_name(k));
+        debug_assert!(ok, "invalid metric or label name: {name} {labels:?}");
+        ok
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: Kind) -> &mut Family {
+        if let Some(i) = self.families.iter().position(|f| f.name == name) {
+            let f = &self.families[i];
+            debug_assert_eq!(f.kind, kind, "family {name} registered with two kinds");
+            return &mut self.families[i];
+        }
+        self.families.push(Family {
+            name: name.to_string(),
+            help: help.to_string(),
+            kind,
+            samples: Vec::new(),
+        });
+        self.families.last_mut().expect("just pushed")
+    }
+
+    fn owned(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+    }
+
+    /// Add a counter sample (monotonically nondecreasing total).
+    pub fn counter(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        if !Self::lint(name, labels) {
+            return;
+        }
+        let labels = Self::owned(labels);
+        self.family(name, help, Kind::Counter).samples.push(Sample::Scalar { labels, value });
+    }
+
+    /// Add a gauge sample (instantaneous value).
+    pub fn gauge(&mut self, name: &str, help: &str, labels: &[(&str, &str)], value: f64) {
+        if !Self::lint(name, labels) {
+            return;
+        }
+        let labels = Self::owned(labels);
+        self.family(name, help, Kind::Gauge).samples.push(Sample::Scalar { labels, value });
+    }
+
+    /// Add a histogram sample (one full [`Histogram`] per label set).
+    pub fn histogram(&mut self, name: &str, help: &str, labels: &[(&str, &str)], hist: &Histogram) {
+        if !Self::lint(name, labels) {
+            return;
+        }
+        let labels = Self::owned(labels);
+        self.family(name, help, Kind::Histogram)
+            .samples
+            .push(Sample::Hist { labels, hist: hist.clone() });
+    }
+
+    fn write_labels(out: &mut String, labels: &[(String, String)], extra: Option<(&str, &str)>) {
+        if labels.is_empty() && extra.is_none() {
+            return;
+        }
+        out.push('{');
+        let mut first = true;
+        for (k, v) in labels {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label_value(v));
+            out.push('"');
+        }
+        if let Some((k, v)) = extra {
+            if !first {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label_value(v));
+            out.push('"');
+        }
+        out.push('}');
+    }
+
+    /// Render the whole registry as exposition text. Serve it with content
+    /// type `text/plain; version=0.0.4`.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.families {
+            out.push_str("# HELP ");
+            out.push_str(&f.name);
+            out.push(' ');
+            out.push_str(&escape_help(&f.help));
+            out.push('\n');
+            out.push_str("# TYPE ");
+            out.push_str(&f.name);
+            out.push(' ');
+            out.push_str(f.kind.as_str());
+            out.push('\n');
+            for s in &f.samples {
+                match s {
+                    Sample::Scalar { labels, value } => {
+                        out.push_str(&f.name);
+                        Self::write_labels(&mut out, labels, None);
+                        out.push(' ');
+                        out.push_str(&fmt_value(*value));
+                        out.push('\n');
+                    }
+                    Sample::Hist { labels, hist } => {
+                        let mut cum = 0u64;
+                        for i in 0..NBUCKETS {
+                            cum += hist.buckets()[i];
+                            let edge = fmt_value(hist.upper_edge(i));
+                            out.push_str(&f.name);
+                            out.push_str("_bucket");
+                            Self::write_labels(&mut out, labels, Some(("le", &edge)));
+                            out.push(' ');
+                            out.push_str(&fmt_value(cum as f64));
+                            out.push('\n');
+                        }
+                        out.push_str(&f.name);
+                        out.push_str("_sum");
+                        Self::write_labels(&mut out, labels, None);
+                        out.push(' ');
+                        out.push_str(&fmt_value(hist.sum()));
+                        out.push('\n');
+                        out.push_str(&f.name);
+                        out.push_str("_count");
+                        Self::write_labels(&mut out, labels, None);
+                        out.push(' ');
+                        out.push_str(&fmt_value(hist.count() as f64));
+                        out.push('\n');
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prometheus_exposition_golden() {
+        // Golden-text test for the renderer: a counter family with two
+        // label sets, a gauge, and a histogram, exercising label escaping
+        // and the _bucket/_sum/_count invariants.
+        let mut reg = Registry::new();
+        reg.counter(
+            "nq_requests_total",
+            "Requests by class.",
+            &[("class", "interactive")],
+            3.0,
+        );
+        reg.counter("nq_requests_total", "Requests by class.", &[("class", "batch")], 1.0);
+        reg.gauge("nq_free_pages", "Free KV pages.", &[], 17.0);
+        let mut h = Histogram::counts();
+        h.record(1.0); // bucket 1, upper edge 2
+        h.record(3.0); // bucket 2, upper edge 4
+        reg.histogram(
+            "nq_width",
+            "Decode batch width.",
+            &[("model", "tiny\"v\\1\n")],
+            &h,
+        );
+        let text = reg.render();
+
+        // HELP/TYPE exactly once per family, before its samples.
+        assert_eq!(text.matches("# HELP nq_requests_total").count(), 1);
+        assert_eq!(text.matches("# TYPE nq_requests_total counter").count(), 1);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "# HELP nq_requests_total Requests by class.");
+        assert_eq!(lines[1], "# TYPE nq_requests_total counter");
+        assert_eq!(lines[2], "nq_requests_total{class=\"interactive\"} 3");
+        assert_eq!(lines[3], "nq_requests_total{class=\"batch\"} 1");
+        assert_eq!(lines[4], "# HELP nq_free_pages Free KV pages.");
+        assert_eq!(lines[5], "# TYPE nq_free_pages gauge");
+        assert_eq!(lines[6], "nq_free_pages 17");
+
+        // Label-value escaping: backslash, quote, newline.
+        assert!(
+            text.contains("model=\"tiny\\\"v\\\\1\\n\""),
+            "escaped label value missing: {text}"
+        );
+
+        // Histogram invariants: cumulative buckets ending in +Inf == _count,
+        // plus _sum.
+        assert!(text.contains("# TYPE nq_width histogram"));
+        assert!(text.contains("le=\"1\"} 0"));
+        assert!(text.contains("le=\"2\"} 1"));
+        assert!(text.contains("le=\"4\"} 2"));
+        assert!(text.contains("le=\"+Inf\"} 2"));
+        let sum_line = lines.iter().find(|l| l.starts_with("nq_width_sum")).unwrap();
+        assert!(sum_line.ends_with(" 4"), "sum of 1+3: {sum_line}");
+        let count_line = lines.iter().find(|l| l.starts_with("nq_width_count")).unwrap();
+        assert!(count_line.ends_with(" 2"), "{count_line}");
+
+        // Cumulative bucket counts are nondecreasing in le order.
+        let mut prev = 0u64;
+        for l in lines.iter().filter(|l| l.starts_with("nq_width_bucket")) {
+            let v: u64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "buckets must be cumulative: {l}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn metric_name_lint() {
+        assert!(valid_metric_name("nq_tokens_total"));
+        assert!(valid_metric_name("a:b_c1"));
+        assert!(valid_metric_name("_x"));
+        assert!(!valid_metric_name(""));
+        assert!(!valid_metric_name("1abc"));
+        assert!(!valid_metric_name("has space"));
+        assert!(!valid_metric_name("has-dash"));
+        assert!(valid_label_name("class"));
+        assert!(!valid_label_name("le:gal"));
+        assert!(!valid_label_name("__reserved"));
+        assert!(!valid_label_name("9lives"));
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn bad_names_are_dropped_in_release() {
+        let mut reg = Registry::new();
+        reg.counter("bad-name", "x", &[], 1.0);
+        assert_eq!(reg.render(), "");
+    }
+
+    #[test]
+    fn escaping_rules() {
+        assert_eq!(escape_label_value("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+        assert_eq!(escape_label_value("plain"), "plain");
+    }
+
+    #[test]
+    fn infinity_formats_as_prometheus_expects() {
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(2.0), "2");
+        assert_eq!(fmt_value(0.25), "0.25");
+    }
+}

@@ -1,0 +1,381 @@
+//! Per-request trace spans and the flight recorder.
+//!
+//! Every request gets tick-stamped lifecycle events (submitted → queued →
+//! admitted/shed/expired → prefill start/end → first token → finished)
+//! pushed into a bounded ring of fixed-size [`TraceEvent`]s.
+//!
+//! **Custody model:** the ring is owned by the engine, which is owned by
+//! one bridge thread, and every reader (trace query, flight-recorder dump)
+//! arrives as a bridge command serviced at a tick boundary — so the ring
+//! needs no locks and no atomics. "Lock-free" here is by construction
+//! (single-owner), not by CAS loops: the cheapest synchronization is the
+//! one the architecture already paid for.
+//!
+//! **Allocation model:** the buffer is reserved up front
+//! ([`TraceRing::new`]); `push` writes into spare capacity until full and
+//! then overwrites in place, so the steady-state decode path records
+//! events without ever touching the allocator. Events are `Copy` structs
+//! of integers — no strings, no boxing.
+//!
+//! **Flight recorder:** when something goes wrong (an overload collapse, a
+//! stall), the last [`TraceRing::capacity`] events are still in the ring
+//! and can be dumped post-mortem as Chrome-trace-format JSON
+//! ([`TraceRing::chrome_events`], one JSON object per line over HTTP) and
+//! loaded into `chrome://tracing` / Perfetto.
+
+use crate::util::json::Json;
+
+/// Lifecycle event kinds, in the order a healthy request emits them.
+/// `Finished` is the single terminal kind — exactly one per submitted
+/// request, whatever path it took (completion, stop token, shed, queued
+/// deadline, cancellation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Request entered the admission queue. `arg` = prompt tokens.
+    Submitted,
+    /// Request was still waiting at the end of a tick (emitted once, the
+    /// first time it waits). `arg` = 0.
+    Deferred,
+    /// Request was admitted to a slot. `arg` = prefix-cache hit tokens
+    /// (0 on a cold miss or with caching off).
+    Admitted,
+    /// First prefill chunk for this slot ran this tick. `arg` = prompt
+    /// tokens left to run (after any prefix-cache resume).
+    PrefillStart,
+    /// Prefill finished; decode starts next tick. `arg` = total prompt
+    /// tokens committed (prefilled plus cache-resumed).
+    PrefillEnd,
+    /// First generated token was sampled. `arg` = 0.
+    FirstToken,
+    /// Terminal event. `arg` = finish-reason code ([`reason_str`]).
+    Finished,
+}
+
+impl TraceKind {
+    /// Stable snake_case name used in trace JSON and Chrome-trace output.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceKind::Submitted => "submitted",
+            TraceKind::Deferred => "deferred",
+            TraceKind::Admitted => "admitted",
+            TraceKind::PrefillStart => "prefill_start",
+            TraceKind::PrefillEnd => "prefill_end",
+            TraceKind::FirstToken => "first_token",
+            TraceKind::Finished => "finished",
+        }
+    }
+}
+
+/// Finish-reason codes carried in [`TraceKind::Finished`] events. The
+/// strings match the machine-readable `"reason"` slugs the HTTP gateway
+/// already emits, so a trace and an error body agree.
+pub fn reason_str(code: u64) -> &'static str {
+    match code {
+        0 => "max_new",
+        1 => "stop",
+        2 => "cancelled",
+        3 => "shed",
+        4 => "deadline_exceeded",
+        _ => "unknown",
+    }
+}
+
+/// One fixed-size lifecycle event: plain integers only, `Copy`, no heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Engine tick counter when the event was recorded (submissions land
+    /// between ticks and carry the upcoming tick's number).
+    pub tick: u64,
+    /// Monotonic seconds since the engine started (an `Instant` delta —
+    /// never wall-clock).
+    pub t_s: f64,
+    /// The request this event belongs to.
+    pub id: u64,
+    pub kind: TraceKind,
+    /// Kind-specific argument; see [`TraceKind`] variant docs.
+    pub arg: u64,
+}
+
+impl TraceEvent {
+    fn to_json(self) -> Json {
+        let j = Json::obj()
+            .set("tick", self.tick)
+            .set("t_s", self.t_s)
+            .set("kind", self.kind.as_str())
+            .set("arg", self.arg);
+        if self.kind == TraceKind::Finished {
+            j.set("reason", reason_str(self.arg))
+        } else {
+            j
+        }
+    }
+}
+
+/// Bounded single-owner ring of recent [`TraceEvent`]s. See the module
+/// docs for the custody and allocation model.
+#[derive(Clone, Debug)]
+pub struct TraceRing {
+    enabled: bool,
+    /// Backing store: reserved to `cap` at construction, grows by `push`
+    /// into spare capacity (never reallocates), then wraps.
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Next write position once the ring has wrapped (`buf.len() == cap`).
+    head: usize,
+    /// Total events ever pushed (so readers can report drops).
+    pushed: u64,
+}
+
+impl TraceRing {
+    /// A ring holding the most recent `cap` events (`cap >= 1`). All
+    /// backing memory is allocated here, up front.
+    pub fn new(cap: usize, enabled: bool) -> TraceRing {
+        let cap = cap.max(1);
+        TraceRing { enabled, buf: Vec::with_capacity(cap), cap, head: 0, pushed: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events pushed since construction/reset; `pushed() - len()`
+    /// events have been overwritten.
+    pub fn pushed(&self) -> u64 {
+        self.pushed
+    }
+
+    /// Record an event. No-op when disabled; never allocates (capacity is
+    /// reserved at construction).
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.pushed += 1;
+    }
+
+    /// Iterate oldest → newest.
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        let (tail, head) = self.buf.split_at(self.head);
+        head.iter().chain(tail.iter())
+    }
+
+    /// Build the span tree for one request from whatever of its events are
+    /// still in the ring. Returns `None` if the ring holds no events for
+    /// `id` (unknown, or already overwritten).
+    ///
+    /// The tree has three derived spans over the raw event list:
+    /// `queued` (submitted → admitted/terminal), `prefill` (prefill_start →
+    /// prefill_end, annotated with the prefix-cache hit length from the
+    /// admission event), and `decode` (prefill_end → finished, annotated
+    /// with time-to-first-token).
+    pub fn span_tree(&self, id: u64) -> Option<Json> {
+        let evs: Vec<&TraceEvent> = self.iter().filter(|e| e.id == id).collect();
+        if evs.is_empty() {
+            return None;
+        }
+        let at = |k: TraceKind| evs.iter().find(|e| e.kind == k);
+        let submitted = at(TraceKind::Submitted);
+        let admitted = at(TraceKind::Admitted);
+        let prefill_start = at(TraceKind::PrefillStart);
+        let prefill_end = at(TraceKind::PrefillEnd);
+        let first_token = at(TraceKind::FirstToken);
+        let finished = at(TraceKind::Finished);
+        let terminal_t = finished.map(|e| e.t_s);
+
+        let mut spans = Vec::new();
+        if let Some(s) = submitted {
+            let end = admitted.map(|e| e.t_s).or(terminal_t);
+            let mut span = Json::obj().set("name", "queued").set("start_s", s.t_s);
+            if let Some(end) = end {
+                span.insert("end_s", end);
+            }
+            spans.push(span);
+        }
+        if let Some(ps) = prefill_start {
+            let mut span = Json::obj().set("name", "prefill").set("start_s", ps.t_s);
+            span.insert("run_tokens", ps.arg);
+            if let Some(a) = admitted {
+                span.insert("prefix_hit_tokens", a.arg);
+            }
+            if let Some(pe) = prefill_end {
+                span.insert("end_s", pe.t_s);
+            }
+            spans.push(span);
+        }
+        if let Some(pe) = prefill_end {
+            let mut span = Json::obj().set("name", "decode").set("start_s", pe.t_s);
+            if let Some(ft) = first_token {
+                span.insert("first_token_s", ft.t_s);
+            }
+            if let Some(end) = terminal_t {
+                span.insert("end_s", end);
+            }
+            spans.push(span);
+        }
+
+        let mut doc = Json::obj()
+            .set("id", id)
+            .set("events", Json::Arr(evs.iter().map(|e| e.to_json()).collect()))
+            .set("spans", Json::Arr(spans));
+        if let Some(f) = finished {
+            doc.insert("finish_reason", reason_str(f.arg));
+        }
+        Some(doc)
+    }
+
+    /// Render the whole ring as Chrome-trace-format event objects (oldest
+    /// first): one `"ph": "i"` instant event per lifecycle event, with the
+    /// request id as the `tid` so chrome://tracing groups each request on
+    /// its own track. Timestamps are microseconds, per the format.
+    pub fn chrome_events(&self) -> Vec<Json> {
+        self.iter()
+            .map(|e| {
+                let args = {
+                    let a = Json::obj().set("tick", e.tick).set("arg", e.arg);
+                    if e.kind == TraceKind::Finished {
+                        a.set("reason", reason_str(e.arg))
+                    } else {
+                        a
+                    }
+                };
+                Json::obj()
+                    .set("name", e.kind.as_str())
+                    .set("ph", "i")
+                    .set("s", "t")
+                    .set("ts", e.t_s * 1e6)
+                    .set("pid", 1u64)
+                    .set("tid", e.id)
+                    .set("args", args)
+            })
+            .collect()
+    }
+
+    /// Drop all events (engine `reset`), keeping capacity and flag.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.pushed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64, kind: TraceKind, t_s: f64, arg: u64) -> TraceEvent {
+        TraceEvent { tick: (t_s * 1000.0) as u64, t_s, id, kind, arg }
+    }
+
+    #[test]
+    fn ring_wraps_without_reallocating() {
+        let mut r = TraceRing::new(4, true);
+        let cap_ptr = r.buf.as_ptr();
+        for i in 0..10u64 {
+            r.push(ev(i, TraceKind::Submitted, i as f64, 0));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.pushed(), 10);
+        assert_eq!(r.buf.as_ptr(), cap_ptr, "ring must never reallocate");
+        let ids: Vec<u64> = r.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![6, 7, 8, 9], "oldest -> newest after wrap");
+    }
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let mut r = TraceRing::new(4, false);
+        r.push(ev(1, TraceKind::Submitted, 0.0, 0));
+        assert!(r.is_empty());
+        assert_eq!(r.pushed(), 0);
+        assert!(r.span_tree(1).is_none());
+    }
+
+    #[test]
+    fn span_tree_covers_the_happy_path() {
+        let mut r = TraceRing::new(64, true);
+        r.push(ev(7, TraceKind::Submitted, 0.001, 12));
+        r.push(ev(7, TraceKind::Admitted, 0.002, 4));
+        r.push(ev(7, TraceKind::PrefillStart, 0.003, 8));
+        r.push(ev(7, TraceKind::PrefillEnd, 0.004, 8));
+        r.push(ev(7, TraceKind::FirstToken, 0.005, 0));
+        r.push(ev(7, TraceKind::Finished, 0.010, 0));
+        r.push(ev(8, TraceKind::Submitted, 0.011, 3));
+        let t = r.span_tree(7).expect("known id");
+        assert_eq!(t.get("id").and_then(|j| j.as_f64()), Some(7.0));
+        assert_eq!(t.get("finish_reason").and_then(|j| j.as_str()), Some("max_new"));
+        let spans = t.get("spans").and_then(|j| j.as_arr()).unwrap();
+        let names: Vec<&str> =
+            spans.iter().map(|s| s.get("name").and_then(|j| j.as_str()).unwrap()).collect();
+        assert_eq!(names, vec!["queued", "prefill", "decode"]);
+        let prefill = &spans[1];
+        assert_eq!(prefill.get("prefix_hit_tokens").and_then(|j| j.as_f64()), Some(4.0));
+        let decode = &spans[2];
+        assert_eq!(decode.get("first_token_s").and_then(|j| j.as_f64()), Some(0.005));
+        assert_eq!(decode.get("end_s").and_then(|j| j.as_f64()), Some(0.010));
+        // Events for id 8 don't leak into id 7's tree.
+        assert_eq!(t.get("events").and_then(|j| j.as_arr()).unwrap().len(), 6);
+        assert!(r.span_tree(99).is_none());
+    }
+
+    #[test]
+    fn shed_request_gets_a_terminal_only_tree() {
+        let mut r = TraceRing::new(8, true);
+        r.push(ev(3, TraceKind::Submitted, 0.001, 5));
+        r.push(ev(3, TraceKind::Finished, 0.002, 3)); // shed
+        let t = r.span_tree(3).unwrap();
+        assert_eq!(t.get("finish_reason").and_then(|j| j.as_str()), Some("shed"));
+        let spans = t.get("spans").and_then(|j| j.as_arr()).unwrap();
+        // Only the queued span exists, closed by the terminal event.
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].get("end_s").and_then(|j| j.as_f64()), Some(0.002));
+    }
+
+    #[test]
+    fn chrome_events_parse_and_carry_required_fields() {
+        let mut r = TraceRing::new(8, true);
+        r.push(ev(1, TraceKind::Submitted, 0.5, 10));
+        r.push(ev(1, TraceKind::Finished, 1.5, 4));
+        let evs = r.chrome_events();
+        assert_eq!(evs.len(), 2);
+        for line in &evs {
+            // Each event must survive a serialize → parse round trip (the
+            // HTTP dump emits one per NDJSON line).
+            let back = Json::parse(&line.to_string()).expect("valid JSON");
+            assert!(back.get("name").is_some());
+            assert_eq!(back.get("ph").and_then(|j| j.as_str()), Some("i"));
+            assert!(back.get("ts").and_then(|j| j.as_f64()).is_some());
+            assert!(back.get("tid").and_then(|j| j.as_f64()).is_some());
+        }
+        assert_eq!(evs[1].get("args").and_then(|a| a.get("reason")).and_then(|j| j.as_str()),
+            Some("deadline_exceeded"));
+    }
+
+    #[test]
+    fn reason_strings_match_the_gateway_slugs() {
+        assert_eq!(reason_str(0), "max_new");
+        assert_eq!(reason_str(1), "stop");
+        assert_eq!(reason_str(2), "cancelled");
+        assert_eq!(reason_str(3), "shed");
+        assert_eq!(reason_str(4), "deadline_exceeded");
+        assert_eq!(reason_str(99), "unknown");
+    }
+}

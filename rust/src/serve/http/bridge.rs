@@ -20,8 +20,10 @@
 //! cancels at call time, so the overlap is harmless.
 
 use crate::serve::{Engine, Event, FinishReason, Request, RequestId, Response, ServeMetrics};
+use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::time::Instant;
 
 /// Events delivered to one request's subscriber, in order:
 /// `Deferred* → Started → Token* → Finished`; the channel closes after the
@@ -112,6 +114,17 @@ enum Command {
     Metrics {
         reply: Sender<GatewaySnapshot>,
     },
+    /// Span tree for one request from the engine's trace ring (`None` if
+    /// its events have been overwritten or the id was never seen).
+    Trace {
+        id: RequestId,
+        reply: Sender<Option<Json>>,
+    },
+    /// Flight-recorder dump: every event still in the trace ring as
+    /// Chrome-trace instant events, oldest first.
+    Dump {
+        reply: Sender<Vec<Json>>,
+    },
     /// Graceful shutdown: stop accepting submits, step until every
     /// in-flight request finishes (their subscribers get their events as
     /// usual), then reply with the final pool snapshot and exit. The
@@ -154,6 +167,23 @@ impl EngineHandle {
     pub fn metrics(&self) -> Result<GatewaySnapshot, BridgeClosed> {
         let (reply, reply_rx) = channel();
         self.tx.send(Command::Metrics { reply }).map_err(|_| BridgeClosed)?;
+        reply_rx.recv().map_err(|_| BridgeClosed)
+    }
+
+    /// Span tree for one request, read from the engine's trace ring at the
+    /// next tick boundary. `Ok(None)` = the id was never traced or its
+    /// events have already been overwritten by newer ones.
+    pub fn trace(&self, id: RequestId) -> Result<Option<Json>, BridgeClosed> {
+        let (reply, reply_rx) = channel();
+        self.tx.send(Command::Trace { id, reply }).map_err(|_| BridgeClosed)?;
+        reply_rx.recv().map_err(|_| BridgeClosed)
+    }
+
+    /// Flight-recorder dump: the trace ring's surviving events as
+    /// Chrome-trace instant events, oldest first.
+    pub fn dump(&self) -> Result<Vec<Json>, BridgeClosed> {
+        let (reply, reply_rx) = channel();
+        self.tx.send(Command::Dump { reply }).map_err(|_| BridgeClosed)?;
         reply_rx.recv().map_err(|_| BridgeClosed)
     }
 
@@ -213,7 +243,10 @@ fn engine_thread(mut engine: Engine, rx: Receiver<Command>) {
             }
         }
         // Drain whatever else is pending so a burst of submits/cancels all
-        // lands at this tick boundary.
+        // lands at this tick boundary. The drain runs outside `step()` but
+        // on the engine thread, so its time is credited to the upcoming
+        // tick's profile (skipping the clock entirely when obs is off).
+        let drain_t0 = if engine.obs_enabled() { Some(Instant::now()) } else { None };
         loop {
             match rx.try_recv() {
                 Ok(cmd) => {
@@ -231,6 +264,9 @@ fn engine_thread(mut engine: Engine, rx: Receiver<Command>) {
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => break 'run,
             }
+        }
+        if let Some(t0) = drain_t0 {
+            engine.obs_note_drain(t0.elapsed().as_secs_f64());
         }
         if !engine.is_idle() {
             for event in engine.step() {
@@ -295,6 +331,14 @@ fn handle_command(
         }
         Command::Metrics { reply } => {
             let _ = reply.send(make_snapshot(engine));
+            true
+        }
+        Command::Trace { id, reply } => {
+            let _ = reply.send(engine.trace_json(id));
+            true
+        }
+        Command::Dump { reply } => {
+            let _ = reply.send(engine.flight_dump());
             true
         }
         Command::Drain { reply } => {

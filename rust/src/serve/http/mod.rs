@@ -45,6 +45,14 @@
 //! machine-readable `"reason"`. `POST /v1/drain` starts a gateway-wide
 //! graceful drain. See `DESIGN.md` §Admission control.
 //!
+//! Observability surface (see `DESIGN.md` §Observability):
+//! `GET /v1/metrics` keeps its JSON shape;
+//! `GET /v1/metrics?format=prometheus` renders the same snapshots as
+//! Prometheus text exposition with the full-resolution histograms;
+//! `GET /v1/trace/{id}` returns one request's lifecycle span tree;
+//! `POST /v1/debug/dump` dumps the flight-recorder ring as Chrome-trace
+//! NDJSON.
+//!
 //! [`Engine`]: crate::serve::Engine
 
 pub mod bridge;

@@ -24,7 +24,8 @@
 
 use super::bridge::{self, EngineHandle, GatewaySnapshot};
 use crate::model::{Backing, ModelHandle, ModelStore};
-use crate::serve::{Engine, ServerConfig};
+use crate::obs::{Registry, ALL_PHASES};
+use crate::serve::{Engine, ServerConfig, SloClass};
 use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -312,6 +313,258 @@ impl ModelRouter {
         };
         top.insert("models", per_model);
         top
+    }
+
+    /// The `GET /v1/metrics?format=prometheus` payload: every counter and
+    /// gauge the JSON endpoint carries plus the full-resolution
+    /// observability histograms, rendered as Prometheus text exposition
+    /// 0.0.4. Built fresh per scrape from the same [`GatewaySnapshot`]s as
+    /// the JSON path, so the two views can never disagree; the JSON shape
+    /// is untouched. Labels: `model` on everything per-engine, `class` on
+    /// per-SLO-class series, `tenant`/`outcome` on the per-tenant
+    /// counters, `phase` on the tick-phase histograms.
+    pub fn prometheus_text(&self) -> String {
+        let mut slots: Vec<(String, EngineHandle)> = {
+            let state = self.state.lock().unwrap();
+            state.slots.iter().map(|(n, s)| (n.clone(), s.handle.clone())).collect()
+        };
+        slots.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut r = Registry::new();
+        // Process-wide gauges first so they render ahead of the per-model
+        // families regardless of slot count.
+        r.gauge(
+            "nanoquant_threadpool_threads",
+            "Compute threadpool size shared by all engines.",
+            &[],
+            crate::util::threadpool::num_threads() as f64,
+        );
+        r.gauge(
+            "nanoquant_io_threads",
+            "Parallel-I/O thread count used for artifact loads.",
+            &[],
+            crate::util::threadpool::io_threads() as f64,
+        );
+        for (name, handle) in slots {
+            let model: &[(&str, &str)] = &[("model", &name)];
+            let snap = match handle.metrics() {
+                Ok(snap) => {
+                    r.gauge("nanoquant_up", "1 if the model's engine bridge answers.", model, 1.0);
+                    snap
+                }
+                Err(_) => {
+                    // A dead bridge must not blind the scrape on healthy
+                    // models; it reports up=0 and nothing else.
+                    r.gauge("nanoquant_up", "1 if the model's engine bridge answers.", model, 0.0);
+                    continue;
+                }
+            };
+            let m = &snap.serve;
+            r.counter(
+                "nanoquant_tokens_total",
+                "Generated (decode) tokens streamed out.",
+                model,
+                m.total_tokens as f64,
+            );
+            r.counter(
+                "nanoquant_prefill_tokens_total",
+                "Prompt tokens consumed by prefill.",
+                model,
+                m.prefill_tokens as f64,
+            );
+            r.counter(
+                "nanoquant_engine_wall_seconds_total",
+                "Wall-clock seconds spent inside Engine::step.",
+                model,
+                m.wall_s,
+            );
+            r.counter(
+                "nanoquant_prefill_ticks_total",
+                "Scheduler ticks spent in prefill, summed over slots.",
+                model,
+                m.prefill_ticks as f64,
+            );
+            r.counter(
+                "nanoquant_batched_ticks_total",
+                "Ticks whose decode ran as one cross-request batched step.",
+                model,
+                m.batched_ticks as f64,
+            );
+            r.counter(
+                "nanoquant_admission_deferrals_total",
+                "Requests deferred at least once on KV pool pressure.",
+                model,
+                m.admission_deferrals as f64,
+            );
+            r.counter(
+                "nanoquant_cancellations_total",
+                "Requests finished as cancelled.",
+                model,
+                m.cancellations as f64,
+            );
+            r.counter(
+                "nanoquant_shed_total",
+                "Requests shed on bounded-queue overflow.",
+                model,
+                m.shed as f64,
+            );
+            r.counter(
+                "nanoquant_deadline_expired_total",
+                "Requests whose deadline passed while queued.",
+                model,
+                m.deadline_expired as f64,
+            );
+            r.gauge(
+                "nanoquant_tokens_per_second",
+                "Decode-output throughput since engine start.",
+                model,
+                m.tokens_per_s,
+            );
+            r.gauge(
+                "nanoquant_peak_active_slots",
+                "Peak concurrently-active KV slots.",
+                model,
+                m.peak_active_slots as f64,
+            );
+            r.gauge(
+                "nanoquant_weight_bytes",
+                "Effective compressed weight bytes of the engine.",
+                model,
+                m.weight_bytes as f64,
+            );
+            r.gauge(
+                "nanoquant_peak_kv_bytes",
+                "Peak bytes of KV pages attached to active slots.",
+                model,
+                m.peak_kv_bytes as f64,
+            );
+            r.gauge(
+                "nanoquant_queue_cap",
+                "Admission queue bound (all classes summed against it).",
+                model,
+                m.queue_cap as f64,
+            );
+            r.gauge(
+                "nanoquant_in_flight",
+                "Requests currently queued or active.",
+                model,
+                snap.in_flight as f64,
+            );
+            for (i, class) in SloClass::ALL.iter().enumerate() {
+                let labels: &[(&str, &str)] = &[("model", &name), ("class", class.as_str())];
+                r.gauge(
+                    "nanoquant_queue_depth",
+                    "Current admission-queue depth per SLO class.",
+                    labels,
+                    m.queue_depth_per_class[i] as f64,
+                );
+                r.histogram(
+                    "nanoquant_queue_wait_seconds",
+                    "Seconds from submit to KV-slot admission.",
+                    labels,
+                    &m.obs.queue_wait[i],
+                );
+                r.histogram(
+                    "nanoquant_ttft_seconds",
+                    "Seconds from submit to first streamed token.",
+                    labels,
+                    &m.obs.ttft[i],
+                );
+            }
+            for (tenant, t) in &m.tenants {
+                for (outcome, v) in [
+                    ("submitted", t.submitted),
+                    ("admitted", t.admitted),
+                    ("shed", t.shed),
+                    ("expired", t.expired),
+                ] {
+                    r.counter(
+                        "nanoquant_tenant_requests_total",
+                        "Per-tenant admission outcomes.",
+                        &[("model", &name), ("tenant", tenant), ("outcome", outcome)],
+                        v as f64,
+                    );
+                }
+            }
+            for (stat, v) in [
+                ("hits", m.prefix.hits),
+                ("misses", m.prefix.misses),
+                ("hit_tokens", m.prefix.hit_tokens),
+                ("evictions", m.prefix.evictions),
+            ] {
+                r.counter(
+                    "nanoquant_prefix_cache_total",
+                    "Prefix-cache counters (hits, misses, hit_tokens, evictions).",
+                    &[("model", &name), ("stat", stat)],
+                    v as f64,
+                );
+            }
+            r.gauge(
+                "nanoquant_prefix_shared_pages",
+                "Trie pages currently pinned by slots holding shared refs.",
+                model,
+                m.prefix_shared_pages as f64,
+            );
+            r.gauge(
+                "nanoquant_prefix_cached_pages",
+                "Pages currently held by the prefix-cache trie.",
+                model,
+                m.prefix_cached_pages as f64,
+            );
+            for (state, v) in [
+                ("total", snap.total_pages),
+                ("reserved", snap.reserved_pages),
+                ("in_use", snap.in_use_pages),
+                ("free", snap.free_pages),
+            ] {
+                r.gauge(
+                    "nanoquant_kv_pool_pages",
+                    "KV page pool occupancy by state.",
+                    &[("model", &name), ("state", state)],
+                    v as f64,
+                );
+            }
+            // Observability-layer series: phase profile and the
+            // full-resolution latency/width sketches.
+            r.gauge(
+                "nanoquant_obs_enabled",
+                "1 if tick profiling and request tracing are on.",
+                model,
+                if m.obs.enabled { 1.0 } else { 0.0 },
+            );
+            r.counter(
+                "nanoquant_profiled_ticks_total",
+                "Engine ticks folded into the phase histograms.",
+                model,
+                m.obs.profiled_ticks as f64,
+            );
+            for (i, phase) in ALL_PHASES.iter().enumerate() {
+                r.histogram(
+                    "nanoquant_tick_phase_seconds",
+                    "Wall seconds per scheduler-tick phase.",
+                    &[("model", &name), ("phase", phase.as_str())],
+                    &m.obs.phase[i],
+                );
+            }
+            r.histogram(
+                "nanoquant_inter_token_gap_seconds",
+                "Gap between consecutive streamed tokens of one request.",
+                model,
+                &m.obs.inter_token_gap,
+            );
+            r.histogram(
+                "nanoquant_prefix_hit_tokens",
+                "Prompt tokens resumed from the prefix cache per hit.",
+                model,
+                &m.obs.prefix_hit_len,
+            );
+            r.histogram(
+                "nanoquant_decode_batch_width",
+                "Decode slots advanced per batched tick.",
+                model,
+                &m.obs.batch_width,
+            );
+        }
+        r.render()
     }
 
     /// Whether a gateway-wide drain has started.

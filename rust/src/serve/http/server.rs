@@ -437,8 +437,99 @@ fn route(
             Ok(true)
         }
         ("GET", "/v1/metrics") => {
-            protocol::write_json_response(w, 200, &router.metrics_json(), ka)?;
+            match req.query("format") {
+                // Prometheus text exposition 0.0.4; the JSON default is
+                // untouched so existing scrapers keep working.
+                Some("prometheus") => {
+                    let text = router.prometheus_text();
+                    protocol::write_response(
+                        w,
+                        200,
+                        "text/plain; version=0.0.4",
+                        text.as_bytes(),
+                        ka,
+                    )?;
+                }
+                _ => protocol::write_json_response(w, 200, &router.metrics_json(), ka)?,
+            }
             Ok(true)
+        }
+        ("GET", path) if path.starts_with("/v1/trace/") => {
+            match path["/v1/trace/".len()..].parse::<RequestId>() {
+                Ok(id) => match router.resolve(req.query("model")) {
+                    Ok(handle) => match handle.trace(id) {
+                        Ok(Some(tree)) => {
+                            protocol::write_json_response(w, 200, &tree, ka)?;
+                            Ok(true)
+                        }
+                        Ok(None) => {
+                            let body = err_json(
+                                "no trace for this id (never seen, evicted from the \
+                                 flight ring, or observability is off)",
+                            );
+                            protocol::write_json_response(w, 404, &body, ka)?;
+                            Ok(true)
+                        }
+                        Err(_) => {
+                            protocol::write_json_response(
+                                w,
+                                503,
+                                &err_json("engine thread has shut down"),
+                                ka,
+                            )?;
+                            Ok(true)
+                        }
+                    },
+                    Err(err) => {
+                        let status = route_error_status(&err);
+                        protocol::write_json_response(w, status, &err_json(&err.to_string()), ka)?;
+                        Ok(true)
+                    }
+                },
+                Err(_) => {
+                    let body = err_json("trace id must be an unsigned integer");
+                    protocol::write_json_response(w, 400, &body, ka)?;
+                    Ok(true)
+                }
+            }
+        }
+        ("POST", "/v1/debug/dump") => {
+            // Flight-recorder dump: one Chrome-trace instant event per
+            // NDJSON line (load into chrome://tracing / Perfetto by
+            // wrapping the lines in a JSON array).
+            match router.resolve(req.query("model")) {
+                Ok(handle) => match handle.dump() {
+                    Ok(events) => {
+                        let mut body = String::new();
+                        for ev in &events {
+                            body.push_str(&ev.to_string());
+                            body.push('\n');
+                        }
+                        protocol::write_response(
+                            w,
+                            200,
+                            "application/x-ndjson",
+                            body.as_bytes(),
+                            ka,
+                        )?;
+                        Ok(true)
+                    }
+                    Err(_) => {
+                        protocol::write_json_response(
+                            w,
+                            503,
+                            &err_json("engine thread has shut down"),
+                            ka,
+                        )?;
+                        Ok(true)
+                    }
+                },
+                Err(err) => {
+                    let status = route_error_status(&err);
+                    protocol::write_json_response(w, status, &err_json(&err.to_string()), ka)?;
+                    Ok(true)
+                }
+            }
         }
         ("POST", "/v1/drain") => {
             // Blocks until every routed engine has finished its in-flight

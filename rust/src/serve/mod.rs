@@ -50,6 +50,7 @@ use crate::nn::decode::{
     decode_batch_into, decode_step_into, prefill_chunk_into, BatchScratch, DecodeModel,
     DecodeScratch, KvCache,
 };
+use crate::obs::{Histogram, Phase, TickProfiler, TraceEvent, TraceKind, TraceRing, NPHASES};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::threadpool::parallel_chunks_mut;
@@ -84,11 +85,43 @@ pub const QUEUE_WAIT_BUCKETS_S: [f64; 5] = [0.001, 0.01, 0.1, 1.0, 10.0];
 /// Buckets per queue-wait histogram: the edges plus the overflow bucket.
 pub const QUEUE_WAIT_NBUCKETS: usize = QUEUE_WAIT_BUCKETS_S.len() + 1;
 
-fn wait_bucket(wait_s: f64) -> usize {
-    QUEUE_WAIT_BUCKETS_S
-        .iter()
-        .position(|&edge| wait_s < edge)
-        .unwrap_or(QUEUE_WAIT_BUCKETS_S.len())
+/// Capacity of the per-engine flight-recorder ring: the most recent
+/// lifecycle [`TraceEvent`]s kept for `GET /v1/trace/{id}` and the
+/// Chrome-trace dump. At ~7 events per request this covers the last
+/// several hundred requests; all memory is reserved at engine build.
+pub const TRACE_RING_CAP: usize = 4096;
+
+/// Record a lifecycle event into the engine's trace ring. A free function
+/// over the exact fields involved (not `&mut self`) so call sites inside
+/// loops that already hold disjoint field borrows — admission iterates
+/// `queue.classes` mutably — can still trace. Reads the clock only when
+/// tracing is enabled.
+#[inline]
+fn push_trace(
+    trace: &mut TraceRing,
+    started: Instant,
+    tick: u64,
+    id: RequestId,
+    kind: TraceKind,
+    arg: u64,
+) {
+    if trace.enabled() {
+        let t_s = started.elapsed().as_secs_f64();
+        trace.push(TraceEvent { tick, t_s, id, kind, arg });
+    }
+}
+
+/// Stable numeric code for a finish reason, carried in
+/// [`TraceKind::Finished`] events ([`crate::obs::reason_str`] maps it back
+/// to the gateway's `"reason"` slug).
+fn reason_code(reason: FinishReason) -> u64 {
+    match reason {
+        FinishReason::MaxNew => 0,
+        FinishReason::Stop => 1,
+        FinishReason::Cancelled => 2,
+        FinishReason::Shed => 3,
+        FinishReason::DeadlineExceeded => 4,
+    }
 }
 
 /// Service-level-objective class: a [`Request`]'s admission priority.
@@ -418,6 +451,15 @@ pub struct ServerConfig {
     /// per-slot path, retained for A/B benching
     /// (`benches/serve_decode.rs` `results.batched_decode`).
     pub batched_decode: bool,
+    /// Observability: the tick/phase profiler, the per-request trace ring
+    /// (`GET /v1/trace/{id}` + flight-recorder dump), and inter-token-gap
+    /// timing. On by default; `false` compiles the record paths to no-ops
+    /// (no clock reads, no ring writes). Outputs are byte-identical either
+    /// way — timing never touches compute — and the decode hot path stays
+    /// allocation-free either way (both pinned by tests). The always-on
+    /// counters and the queue-wait/TTFT histograms (recorded from values
+    /// the engine already computes) are unaffected by this flag.
+    pub obs: bool,
 }
 
 impl Default for ServerConfig {
@@ -430,6 +472,57 @@ impl Default for ServerConfig {
             prefill_chunk: 8,
             queue_cap: DEFAULT_QUEUE_CAP,
             batched_decode: true,
+            obs: true,
+        }
+    }
+}
+
+/// Observability aggregates riding along in [`ServeMetrics`]: the log2
+/// histograms and profiler state behind `GET /v1/metrics?format=prometheus`.
+/// Not serialized into [`ServeMetrics::to_json`] — the JSON metrics shape
+/// is a frozen contract; the Prometheus exposition is where these render.
+///
+/// The queue-wait, TTFT, prefix-hit-length, and batch-width histograms are
+/// always recorded (their inputs are values the engine computes anyway);
+/// the phase histograms, `profiled_ticks`, and the inter-token-gap
+/// histogram are only populated while [`ServerConfig::obs`] is on (they
+/// need extra clock reads).
+#[derive(Clone, Debug)]
+pub struct ObsSnapshot {
+    /// Whether the profiler/tracer were enabled ([`ServerConfig::obs`]).
+    pub enabled: bool,
+    /// Queue-wait seconds per class ([`SloClass::ALL`] order) — the full
+    /// log2-resolution histogram behind the coarse legacy
+    /// [`ServeMetrics::queue_wait_hist`] projection.
+    pub queue_wait: [Histogram; 3],
+    /// Time-to-first-token seconds per class ([`SloClass::ALL`] order),
+    /// submit-based like [`Response::ttft_s`].
+    pub ttft: [Histogram; 3],
+    /// Seconds between consecutive streamed tokens of one request
+    /// (obs-gated: needs a clock read per token).
+    pub inter_token_gap: Histogram,
+    /// Per-tick seconds spent in each scheduler phase, indexed by
+    /// [`crate::obs::ALL_PHASES`] (obs-gated).
+    pub phase: [Histogram; NPHASES],
+    /// Ticks folded into `phase` (obs-gated; 0 when disabled).
+    pub profiled_ticks: u64,
+    /// Prefix-cache hit length in tokens, recorded per cache-enabled hit.
+    pub prefix_hit_len: Histogram,
+    /// Decode-batch width (slots advanced) per batched tick.
+    pub batch_width: Histogram,
+}
+
+impl Default for ObsSnapshot {
+    fn default() -> ObsSnapshot {
+        ObsSnapshot {
+            enabled: false,
+            queue_wait: std::array::from_fn(|_| Histogram::seconds()),
+            ttft: std::array::from_fn(|_| Histogram::seconds()),
+            inter_token_gap: Histogram::seconds(),
+            phase: std::array::from_fn(|_| Histogram::seconds()),
+            profiled_ticks: 0,
+            prefix_hit_len: Histogram::counts(),
+            batch_width: Histogram::counts(),
         }
     }
 }
@@ -493,7 +586,12 @@ pub struct ServeMetrics {
     pub queue_cap: usize,
     /// Queue-wait histograms, one per class ([`SloClass::ALL`] order),
     /// bucketed by [`QUEUE_WAIT_BUCKETS_S`]; a request is recorded the
-    /// tick it is admitted into a KV slot.
+    /// tick it is admitted into a KV slot. Since the observability layer
+    /// landed this is a *projection* of the log2-resolution
+    /// [`ObsSnapshot::queue_wait`] histograms onto the legacy coarse
+    /// edges: totals are exact, and a sample within one log2 bucket
+    /// (a 2x span) of a coarse edge may be reported one coarse bucket
+    /// later, never earlier.
     pub queue_wait_hist: [[usize; QUEUE_WAIT_NBUCKETS]; 3],
     /// Per-tenant admission stats, sorted by tenant name (deterministic
     /// JSON output). Cardinality grows with distinct tenant names — the
@@ -506,6 +604,12 @@ pub struct ServeMetrics {
     pub prefix_shared_pages: usize,
     /// Pages currently held by the prefix-cache trie.
     pub prefix_cached_pages: usize,
+    /// Observability aggregates (full-resolution histograms, tick-phase
+    /// profile). Carried here so every consumer of a snapshot — the
+    /// Prometheus exposition above all — sees one consistent cut, but
+    /// deliberately *not* serialized by [`ServeMetrics::to_json`]: the
+    /// JSON shape is frozen.
+    pub obs: ObsSnapshot,
 }
 
 impl ServeMetrics {
@@ -800,6 +904,15 @@ struct Slot {
     submitted: Instant,
     queue_s: f64,
     ttft_s: Option<f64>,
+    /// Trace bookkeeping: whether the `PrefillStart` / `PrefillEnd`
+    /// lifecycle events have been emitted for this slot (only touched when
+    /// tracing is enabled).
+    traced_prefill_start: bool,
+    traced_prefill_end: bool,
+    /// When the previous token streamed, for the inter-token-gap
+    /// histogram. Only read/written with observability on — with it off
+    /// the sampling loop performs no extra clock reads.
+    last_token_t: Option<Instant>,
 }
 
 /// The event-driven serving engine: owns the KV slots, the shared page
@@ -877,9 +990,32 @@ pub struct Engine {
     cancellations: usize,
     shed: usize,
     expired: usize,
-    queue_wait_hist: [[usize; QUEUE_WAIT_NBUCKETS]; 3],
     tenant_stats: BTreeMap<String, TenantStats>,
     wall_s: f64,
+    // ---- Observability (see `crate::obs`). Engine-owned, single-threaded
+    // custody like everything else here: readers arrive as bridge commands
+    // at tick boundaries, so none of this needs locks.
+    /// Monotonic origin for trace timestamps (`Instant` deltas only — no
+    /// wall-clock arithmetic anywhere in the latency math).
+    started: Instant,
+    /// Scheduler tick counter stamped into trace events.
+    tick: u64,
+    /// Per-phase tick profiler (no-op when [`ServerConfig::obs`] is off).
+    prof: TickProfiler,
+    /// Bounded lifecycle-event ring: per-request traces + flight recorder.
+    trace: TraceRing,
+    /// Full-resolution queue-wait seconds per class; the legacy
+    /// [`ServeMetrics::queue_wait_hist`] is projected from these at
+    /// snapshot time. Always recorded.
+    obs_queue_wait: [Histogram; 3],
+    /// TTFT seconds per class. Always recorded.
+    obs_ttft: [Histogram; 3],
+    /// Seconds between consecutive tokens (obs-gated: extra clock reads).
+    obs_itg: Histogram,
+    /// Prefix-cache hit length in tokens, per hit. Always recorded.
+    obs_prefix_hit: Histogram,
+    /// Decode-batch width per batched tick. Always recorded.
+    obs_batch_width: Histogram,
 }
 
 impl Engine {
@@ -924,9 +1060,17 @@ impl Engine {
             cancellations: 0,
             shed: 0,
             expired: 0,
-            queue_wait_hist: [[0; QUEUE_WAIT_NBUCKETS]; 3],
             tenant_stats: BTreeMap::new(),
             wall_s: 0.0,
+            started: Instant::now(),
+            tick: 0,
+            prof: TickProfiler::new(cfg.obs),
+            trace: TraceRing::new(TRACE_RING_CAP, cfg.obs),
+            obs_queue_wait: std::array::from_fn(|_| Histogram::seconds()),
+            obs_ttft: std::array::from_fn(|_| Histogram::seconds()),
+            obs_itg: Histogram::seconds(),
+            obs_prefix_hit: Histogram::counts(),
+            obs_batch_width: Histogram::counts(),
             cfg,
         }
     }
@@ -967,6 +1111,14 @@ impl Engine {
         if req.prompt.len() > cap {
             req.prompt.truncate(cap);
         }
+        push_trace(
+            &mut self.trace,
+            self.started,
+            self.tick,
+            id,
+            TraceKind::Submitted,
+            req.prompt.len() as u64,
+        );
         let stats = self.tenant_stats.entry(req.tenant.clone()).or_default();
         stats.submitted += 1;
         if req.prompt.is_empty() || req.max_new == 0 {
@@ -1040,6 +1192,20 @@ impl Engine {
         } else {
             0.0
         };
+        // Project the log2 queue-wait histograms onto the legacy coarse
+        // JSON buckets. `count_le` assigns each log2 bucket wholly to the
+        // first coarse edge covering its range, so totals are exact and
+        // the drift is bounded by one log2 bucket at each edge.
+        let mut queue_wait_hist = [[0usize; QUEUE_WAIT_NBUCKETS]; 3];
+        for (ci, h) in self.obs_queue_wait.iter().enumerate() {
+            let mut prev = 0u64;
+            for (bi, edge) in QUEUE_WAIT_BUCKETS_S.iter().enumerate() {
+                let cum = h.count_le(*edge);
+                queue_wait_hist[ci][bi] = (cum - prev) as usize;
+                prev = cum;
+            }
+            queue_wait_hist[ci][QUEUE_WAIT_NBUCKETS - 1] = (h.count() - prev) as usize;
+        }
         ServeMetrics {
             total_tokens: self.total_tokens,
             prefill_tokens: self.prefill_tokens,
@@ -1058,12 +1224,49 @@ impl Engine {
             deadline_expired: self.expired,
             queue_depth_per_class: self.queue.depths(),
             queue_cap: self.queue.cap,
-            queue_wait_hist: self.queue_wait_hist,
+            queue_wait_hist,
             tenants: self.tenant_stats.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
             prefix: self.prefix.stats.clone(),
             prefix_shared_pages: self.pool.pinned_pages(),
             prefix_cached_pages: self.pool.cached_pages(),
+            obs: ObsSnapshot {
+                enabled: self.cfg.obs,
+                queue_wait: self.obs_queue_wait.clone(),
+                ttft: self.obs_ttft.clone(),
+                inter_token_gap: self.obs_itg.clone(),
+                phase: self.prof.histograms().clone(),
+                profiled_ticks: self.prof.ticks(),
+                prefix_hit_len: self.obs_prefix_hit.clone(),
+                batch_width: self.obs_batch_width.clone(),
+            },
         }
+    }
+
+    /// Span tree for one request's lifecycle, assembled from whatever of
+    /// its events are still in the flight-recorder ring (`None` for ids
+    /// the ring no longer covers, or with observability off). Backs
+    /// `GET /v1/trace/{id}`.
+    pub fn trace_json(&self, id: RequestId) -> Option<Json> {
+        self.trace.span_tree(id)
+    }
+
+    /// The flight recorder: every lifecycle event still in the ring,
+    /// oldest first, as Chrome-trace-format JSON objects. Backs
+    /// `POST /v1/debug/dump` (one object per NDJSON line).
+    pub fn flight_dump(&self) -> Vec<Json> {
+        self.trace.chrome_events()
+    }
+
+    /// Credit bridge-side command-drain time to this tick's profile (the
+    /// drain happens outside `step()`, on the same thread, just before it).
+    pub fn obs_note_drain(&mut self, secs: f64) {
+        self.prof.add(Phase::DrainCommands, secs);
+    }
+
+    /// Whether tick profiling / tracing is on — lets the bridge skip its
+    /// drain-timing clock reads entirely when observability is disabled.
+    pub fn obs_enabled(&self) -> bool {
+        self.prof.enabled()
     }
 
     /// Abandon all in-flight work (queued and active, without emitting
@@ -1102,9 +1305,18 @@ impl Engine {
         self.cancellations = 0;
         self.shed = 0;
         self.expired = 0;
-        self.queue_wait_hist = [[0; QUEUE_WAIT_NBUCKETS]; 3];
         self.tenant_stats.clear();
         self.wall_s = 0.0;
+        self.started = Instant::now();
+        self.tick = 0;
+        self.prof.reset();
+        self.trace.reset();
+        for h in self.obs_queue_wait.iter_mut().chain(self.obs_ttft.iter_mut()) {
+            h.reset();
+        }
+        self.obs_itg.reset();
+        self.obs_prefix_hit.reset();
+        self.obs_batch_width.reset();
     }
 
     /// Release a slot's pages, recycle its buffers, and build its response.
@@ -1159,10 +1371,12 @@ impl Engine {
     /// events.
     pub fn step(&mut self) -> Vec<Event> {
         let t0 = Instant::now();
+        self.tick += 1;
         let mut events = Vec::new();
         let max_seq = self.model.cfg.max_seq;
         let page_size = self.cfg.page_size;
         let prefill_chunk = self.cfg.prefill_chunk.max(1);
+        let ph = self.prof.begin();
 
         // ---- Tick boundary: cancellations first, so a cancelled slot can
         // be re-admitted into this very tick and a cancelled queued request
@@ -1187,11 +1401,27 @@ impl Engine {
                 let slot = self.active[si].take().unwrap();
                 let response = self.finish_slot(slot);
                 self.cancellations += 1;
+                push_trace(
+                    &mut self.trace,
+                    self.started,
+                    self.tick,
+                    id,
+                    TraceKind::Finished,
+                    reason_code(FinishReason::Cancelled),
+                );
                 events.push(Event::Finished { response, reason: FinishReason::Cancelled });
                 continue;
             }
             if let Some(q) = self.queue.remove_oldest(id) {
                 self.cancellations += 1;
+                push_trace(
+                    &mut self.trace,
+                    self.started,
+                    self.tick,
+                    id,
+                    TraceKind::Finished,
+                    reason_code(FinishReason::Cancelled),
+                );
                 events.push(Event::Finished {
                     response: empty_response(id, q.submitted.elapsed().as_secs_f64()),
                     reason: FinishReason::Cancelled,
@@ -1203,11 +1433,27 @@ impl Engine {
         // ---- Overflow victims shed at submit time finish here, before
         // anything else can queue behind them.
         for response in self.shed_pending.drain(..) {
+            push_trace(
+                &mut self.trace,
+                self.started,
+                self.tick,
+                response.id,
+                TraceKind::Finished,
+                reason_code(FinishReason::Shed),
+            );
             events.push(Event::Finished { response, reason: FinishReason::Shed });
         }
 
         // ---- Degenerate submissions complete without touching a slot.
         for response in self.instant_done.drain(..) {
+            push_trace(
+                &mut self.trace,
+                self.started,
+                self.tick,
+                response.id,
+                TraceKind::Finished,
+                reason_code(FinishReason::MaxNew),
+            );
             events.push(Event::Finished { response, reason: FinishReason::MaxNew });
         }
 
@@ -1218,11 +1464,21 @@ impl Engine {
         for q in self.queue.take_expired() {
             self.expired += 1;
             self.tenant_stats.entry(q.req.tenant.clone()).or_default().expired += 1;
+            push_trace(
+                &mut self.trace,
+                self.started,
+                self.tick,
+                q.req.id,
+                TraceKind::Finished,
+                reason_code(FinishReason::DeadlineExceeded),
+            );
             events.push(Event::Finished {
                 response: empty_response(q.req.id, q.submitted.elapsed().as_secs_f64()),
                 reason: FinishReason::DeadlineExceeded,
             });
         }
+        self.prof.end(Phase::Triage, ph);
+        let ph = self.prof.begin();
 
         // ---- Admission: classes in strict priority order; tenants inside
         // a class share by deficit round-robin (quantum = the page cost of
@@ -1276,6 +1532,14 @@ impl Engine {
                         if !head.deferred {
                             head.deferred = true;
                             self.deferrals += 1;
+                            push_trace(
+                                &mut self.trace,
+                                self.started,
+                                self.tick,
+                                head.req.id,
+                                TraceKind::Deferred,
+                                0,
+                            );
                             events.push(Event::Deferred { id: head.req.id });
                         }
                         break 'admission;
@@ -1284,7 +1548,7 @@ impl Engine {
                     let q = lane_fifo.pop_front().unwrap();
                     lane.len -= 1;
                     let queue_s = q.submitted.elapsed().as_secs_f64();
-                    self.queue_wait_hist[class_idx][wait_bucket(queue_s)] += 1;
+                    self.obs_queue_wait[class_idx].record(queue_s);
                     self.tenant_stats.entry(tenant.clone()).or_default().admitted += 1;
                     let (mut cache, scratch) = self.spares.pop().unwrap_or_else(|| {
                         (
@@ -1324,6 +1588,17 @@ impl Engine {
                     } else if q.req.cache {
                         self.prefix.stats.misses += 1;
                     }
+                    if prefill_cursor > 0 {
+                        self.obs_prefix_hit.record(prefill_cursor as f64);
+                    }
+                    push_trace(
+                        &mut self.trace,
+                        self.started,
+                        self.tick,
+                        q.req.id,
+                        TraceKind::Admitted,
+                        prefill_cursor as u64,
+                    );
                     let si = free_slots.pop().unwrap();
                     self.active[si] = Some(Slot {
                         cache,
@@ -1338,6 +1613,9 @@ impl Engine {
                         submitted: q.submitted,
                         queue_s,
                         ttft_s: None,
+                        traced_prefill_start: false,
+                        traced_prefill_end: false,
+                        last_token_t: None,
                         req: q.req,
                     });
                 }
@@ -1350,8 +1628,10 @@ impl Engine {
                 }
             }
         }
+        self.prof.end(Phase::Admission, ph);
         let n_active = self.active.iter().filter(|s| s.is_some()).count();
         if n_active == 0 {
+            self.prof.finish_tick();
             // The pool is clamped to hold one max_seq sequence and a fully
             // drained engine has nothing reserved, so the first DRR
             // candidate (top-up ≥ its cost) is always admissible once
@@ -1372,8 +1652,21 @@ impl Engine {
         // inside the parallel section) and account prefill progress. Pages
         // come out of the slot's admission-time reservation, materialized
         // only as the sequence actually grows.
+        let ph = self.prof.begin();
+        let trace_on = self.trace.enabled();
         for slot in self.active.iter_mut().flatten() {
             let step = if !slot.prefill_done {
+                if trace_on && !slot.traced_prefill_start {
+                    slot.traced_prefill_start = true;
+                    push_trace(
+                        &mut self.trace,
+                        self.started,
+                        self.tick,
+                        slot.req.id,
+                        TraceKind::PrefillStart,
+                        (slot.req.prompt.len() - slot.prefill_cursor) as u64,
+                    );
+                }
                 let end = (slot.prefill_cursor + prefill_chunk).min(slot.req.prompt.len());
                 slot.prefill_target = end;
                 let step = end - slot.prefill_cursor;
@@ -1393,12 +1686,15 @@ impl Engine {
             }
         }
 
+        self.prof.end(Phase::PageAttach, ph);
+
         // ---- Gather this tick's decode set: slots already past prefill,
         // in ascending slot order (row `j` of the batch is slot
         // `batch_rows[j]`). Membership is decided *before* the compute
         // phase, so slots whose prefill completes this very tick sample
         // from their own prefill logits and join the batch next tick —
         // exactly when the per-slot path would first decode them.
+        let ph = self.prof.begin();
         self.batch_rows.clear();
         self.batch_tokens.clear();
         if self.cfg.batched_decode {
@@ -1412,9 +1708,12 @@ impl Engine {
             }
         }
 
+        self.prof.end(Phase::Gather, ph);
+
         // ---- Compute phase 1: per-slot chunked prefill, one slot per
         // worker (and, with batched decode off, the legacy per-slot decode
         // step). Skipped entirely on pure-decode batched ticks.
+        let ph = self.prof.begin();
         let model = &self.model;
         let batched = self.cfg.batched_decode;
         if !batched || self.active.iter().flatten().any(|s| !s.prefill_done) {
@@ -1441,6 +1740,28 @@ impl Engine {
                 }
             });
         }
+        self.prof.end(Phase::Prefill, ph);
+        if trace_on {
+            for i in 0..self.active.len() {
+                let emit = match &self.active[i] {
+                    Some(s) => s.prefill_done && s.traced_prefill_start && !s.traced_prefill_end,
+                    None => false,
+                };
+                if emit {
+                    let slot = self.active[i].as_mut().unwrap();
+                    slot.traced_prefill_end = true;
+                    let (id, committed) = (slot.req.id, slot.req.prompt.len() as u64);
+                    push_trace(
+                        &mut self.trace,
+                        self.started,
+                        self.tick,
+                        id,
+                        TraceKind::PrefillEnd,
+                        committed,
+                    );
+                }
+            }
+        }
 
         // ---- Compute phase 2: gather → batched decode → scatter. Every
         // decode-ready slot advances as one cross-request chunk, so each
@@ -1451,29 +1772,44 @@ impl Engine {
         // back — struct moves, no page copies — and the arena recycles
         // across ticks, so the steady-state decode tick allocates nothing.
         if !self.batch_rows.is_empty() {
+            let ph = self.prof.begin();
             for &i in &self.batch_rows {
                 let slot = self.active[i].as_mut().unwrap();
                 let placeholder = KvCache::with_page_size(&self.model.cfg, page_size);
                 let cache = std::mem::replace(&mut slot.cache, placeholder);
                 self.batch_caches.push(cache);
             }
+            self.prof.end(Phase::Gather, ph);
             let mut bs = self
                 .batch
                 .take()
                 .unwrap_or_else(|| BatchScratch::new(&self.model.cfg, self.cfg.max_batch));
+            // The GEMM/attention split is timed inside the decode call via
+            // the scratch arena's accumulators (zeroed here, harvested
+            // after), so `nn` stays free of any `obs` dependency.
+            bs.timing = self.prof.enabled();
+            bs.gemm_s = 0.0;
+            bs.attn_s = 0.0;
             decode_batch_into(&self.model, &mut self.batch_caches, &self.batch_tokens, &mut bs);
+            self.prof.add(Phase::BatchGemm, bs.gemm_s);
+            self.prof.add(Phase::BatchAttn, bs.attn_s);
             self.batch = Some(bs);
+            let ph = self.prof.begin();
             while let Some(cache) = self.batch_caches.pop() {
                 let i = self.batch_rows[self.batch_caches.len()];
                 self.active[i].as_mut().unwrap().cache = cache;
             }
+            self.prof.end(Phase::Scatter, ph);
             self.batched_ticks += 1;
             self.decode_slot_steps += self.batch_rows.len();
+            self.obs_batch_width.record(self.batch_rows.len() as f64);
         }
 
         // ---- Sampling + streaming + completion (serial: needs the shared
         // RNG; slot order, so greedy outputs are reproducible — identical
         // order on the batched and per-slot paths) ----
+        let ph = self.prof.begin();
+        let obs_on = self.cfg.obs;
         let mut next_batch_row = 0usize;
         for i in 0..self.active.len() {
             // Batched slots read their logits row from the arena; everyone
@@ -1505,7 +1841,27 @@ impl Engine {
                         slot.generated.push(tok);
                         self.total_tokens += 1;
                         if slot.ttft_s.is_none() {
-                            slot.ttft_s = Some(slot.submitted.elapsed().as_secs_f64());
+                            let ttft = slot.submitted.elapsed().as_secs_f64();
+                            slot.ttft_s = Some(ttft);
+                            self.obs_ttft[slot.req.priority.index()].record(ttft);
+                            push_trace(
+                                &mut self.trace,
+                                self.started,
+                                self.tick,
+                                slot.req.id,
+                                TraceKind::FirstToken,
+                                0,
+                            );
+                        }
+                        if obs_on {
+                            // Inter-token gap: the only obs clock read on
+                            // the per-token path, gated so an obs-off
+                            // engine's sampling loop is untouched.
+                            let now = Instant::now();
+                            if let Some(prev) = slot.last_token_t {
+                                self.obs_itg.record(now.duration_since(prev).as_secs_f64());
+                            }
+                            slot.last_token_t = Some(now);
                         }
                         events.push(Event::Token { id: slot.req.id, token: tok });
                         if slot.generated.len() >= slot.req.max_new
@@ -1521,14 +1877,26 @@ impl Engine {
             if let Some(reason) = finished {
                 let slot = self.active[i].take().unwrap();
                 let response = self.finish_slot(slot);
+                push_trace(
+                    &mut self.trace,
+                    self.started,
+                    self.tick,
+                    response.id,
+                    TraceKind::Finished,
+                    reason_code(reason),
+                );
                 events.push(Event::Finished { response, reason });
             }
         }
+        self.prof.end(Phase::Sampling, ph);
 
         // Tick-boundary page conservation: every materialized page is in
         // exactly one of {slot-private, trie-cached, free}, and admission's
         // eviction guarantee (`reserved + pinned <= total`) held up.
+        let ph = self.prof.begin();
         self.pool.debug_assert_consistent();
+        self.prof.end(Phase::Reclaim, ph);
+        self.prof.finish_tick();
         self.wall_s += t0.elapsed().as_secs_f64();
         events
     }
@@ -3001,5 +3369,149 @@ mod tests {
         drain(&mut engine);
         assert_eq!(engine.prefix().stats.hits, 0);
         assert_eq!(engine.prefix().stats.misses, 1);
+    }
+
+    /// A mixed workload covering greedy + sampled decoding, classes,
+    /// tenants, and prefix-cache reuse — the surface the byte-identity
+    /// test must hold over.
+    fn obs_workload() -> Vec<Request> {
+        let shared: Vec<u16> = (0..40).map(|j| ((j * 5 + 2) % 250) as u16).collect();
+        let mut reqs = vec![
+            Request::greedy(0, vec![10, 20, 30], 6),
+            Request::new(1, vec![40, 50, 60, 70])
+                .max_new(5)
+                .temperature(0.9)
+                .top_k(16)
+                .tenant("a")
+                .priority(SloClass::Batch),
+            Request::greedy(2, shared.clone(), 4).tenant("b"),
+            Request::greedy(3, shared, 4).tenant("b").priority(SloClass::BestEffort),
+        ];
+        reqs.push(Request::greedy(4, vec![5; 8], 3).stop_tokens(vec![0]));
+        reqs
+    }
+
+    #[test]
+    fn obs_toggle_is_byte_identical() {
+        // The observability layer times the computation; it must never
+        // participate in it. Same seed, same workload, obs on vs off:
+        // every token stream, finish reason, and counter must match
+        // exactly (clock-derived fields excepted).
+        let run = |obs: bool| {
+            let mut srv =
+                tiny_server_cfg(ServerConfig { max_batch: 2, obs, ..Default::default() });
+            let mut resps = srv.run(obs_workload());
+            resps.sort_by_key(|r| r.id);
+            let m = srv.metrics.clone();
+            (resps, m)
+        };
+        let (on, m_on) = run(true);
+        let (off, m_off) = run(false);
+        assert_eq!(on.len(), off.len());
+        for (a, b) in on.iter().zip(off.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens, "request {} diverged with obs on", a.id);
+            assert_eq!(a.text, b.text);
+        }
+        assert_eq!(m_on.total_tokens, m_off.total_tokens);
+        assert_eq!(m_on.prefill_tokens, m_off.prefill_tokens);
+        assert_eq!(m_on.prefix.hits, m_off.prefix.hits);
+        assert_eq!(m_on.prefix.hit_tokens, m_off.prefix.hit_tokens);
+        assert_eq!(m_on.batched_ticks, m_off.batched_ticks);
+        // And the toggle actually toggled: profiling ran only with obs on.
+        assert!(m_on.obs.enabled && m_on.obs.profiled_ticks > 0);
+        assert!(!m_off.obs.enabled && m_off.obs.profiled_ticks == 0);
+        assert_eq!(m_off.obs.inter_token_gap.count(), 0, "obs off reads no clocks for ITG");
+    }
+
+    /// Count terminal (`finished`) events in one request's span tree and
+    /// return the tree's finish reason.
+    fn terminal_of(engine: &Engine, id: RequestId) -> (usize, String) {
+        let tree = engine
+            .trace_json(id)
+            .unwrap_or_else(|| panic!("request {id} left no trace"));
+        let events = tree.get("events").and_then(|e| e.as_arr()).expect("events array");
+        let terminals = events
+            .iter()
+            .filter(|e| e.get("kind").and_then(|k| k.as_str()) == Some("finished"))
+            .count();
+        let reason = tree
+            .get("finish_reason")
+            .and_then(|r| r.as_str())
+            .unwrap_or("<missing>")
+            .to_string();
+        (terminals, reason)
+    }
+
+    #[test]
+    fn every_submission_ends_in_exactly_one_terminal_trace_event() {
+        // Normal completion, queue-overflow shed, queued cancel, active
+        // cancel, and queued-deadline expiry: each path must leave exactly
+        // one `finished` trace event carrying the right reason slug.
+        let mut engine =
+            tiny_engine(ServerConfig { max_batch: 1, queue_cap: 2, ..Default::default() });
+        // id 0: admitted, runs to completion (max_new).
+        engine.submit(Request::greedy(0, vec![1; 4], 8));
+        engine.step(); // id 0 active and decoding
+        // id 1: queued, then cancelled while queued.
+        engine.submit(Request::greedy(1, vec![2; 4], 4));
+        // id 2: queued with an already-passed deadline — expires queued.
+        engine.submit(Request::greedy(2, vec![3; 4], 4).deadline_ms(0));
+        // id 3: overflows the 2-entry queue → shed at submit.
+        engine.submit(Request::greedy(3, vec![4; 4], 4));
+        engine.cancel(1);
+        std::thread::sleep(Duration::from_millis(2));
+        drain(&mut engine);
+        // id 4: admitted then cancelled mid-decode.
+        engine.submit(Request::greedy(4, vec![5; 4], 50));
+        engine.step();
+        engine.cancel(4);
+        drain(&mut engine);
+        for (id, want) in [
+            (0, "max_new"),
+            (1, "cancelled"),
+            (2, "deadline_exceeded"),
+            (3, "shed"),
+            (4, "cancelled"),
+        ] {
+            let (terminals, reason) = terminal_of(&engine, id);
+            assert_eq!(terminals, 1, "request {id}: want exactly one terminal event");
+            assert_eq!(reason, want, "request {id}");
+        }
+        // The happy-path tree also carries the derived spans.
+        let tree = engine.trace_json(0).unwrap();
+        let spans = tree.get("spans").and_then(|s| s.as_arr()).expect("spans array");
+        for want in ["queued", "prefill", "decode"] {
+            assert!(
+                spans.iter().any(|s| s.get("name").and_then(|n| n.as_str()) == Some(want)),
+                "missing span {want:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn legacy_queue_wait_projection_preserves_totals() {
+        // The JSON `queue_wait_hist` is projected from the log2 obs
+        // histograms; per class, its row must sum to exactly the
+        // full-resolution sample count — nothing dropped, nothing
+        // double-counted.
+        let mut engine = tiny_engine(ServerConfig { max_batch: 1, ..Default::default() });
+        for i in 0..5 {
+            engine.submit(Request::greedy(i, vec![1 + i as u16, 2], 2));
+        }
+        drain(&mut engine);
+        let m = engine.snapshot();
+        for (ci, row) in m.queue_wait_hist.iter().enumerate() {
+            let row_sum: usize = row.iter().sum();
+            assert_eq!(row_sum as u64, m.obs.queue_wait[ci].count(), "class {ci}");
+        }
+        assert_eq!(m.queue_wait_hist[0].iter().sum::<usize>(), 5, "all admits are Interactive");
+        // With obs off, traces are absent but the projection still works.
+        let mut quiet = tiny_engine(ServerConfig { max_batch: 1, obs: false, ..Default::default() });
+        quiet.submit(Request::greedy(0, vec![7, 8], 2));
+        drain(&mut quiet);
+        assert!(quiet.trace_json(0).is_none(), "no trace with obs off");
+        let qm = quiet.snapshot();
+        assert_eq!(qm.queue_wait_hist[0].iter().sum::<usize>(), 1);
     }
 }

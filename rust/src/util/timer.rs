@@ -1,6 +1,18 @@
 //! Wall-clock timing and a tiny statistics-collecting bench harness
 //! (offline substitute for `criterion`). Used by `cargo bench` targets
 //! (declared with `harness = false`) and by the experiment drivers.
+//!
+//! **Monotonic-clock invariant (audited with the observability layer):**
+//! every latency in this repo is an [`Instant`] delta — here, in
+//! [`crate::serve::Engine`]'s queue-wait/TTFT/phase timing, the gateway's
+//! SSE `ttft_s`, and the traffic harness. `SystemTime` is never read:
+//! wall-clock steps (NTP, suspend) can make it jump backwards, which
+//! would turn latencies negative; `Instant` cannot go backwards.
+//! Degenerate-duration guards follow the same convention as
+//! [`Engine::snapshot`]'s NaN/inf guards: report 0 rather than divide by
+//! a zero elapsed time.
+//!
+//! [`Engine::snapshot`]: crate::serve::Engine::snapshot
 
 use std::time::Instant;
 
@@ -25,11 +37,14 @@ pub struct BenchStats {
 
 impl BenchStats {
     pub fn throughput_line(&self, unit: &str, per_iter: f64) -> String {
+        // Zero-elapsed guard: an instant iteration reports 0 units/s, not
+        // inf (same convention as Engine::snapshot's tokens_per_s).
+        let per_s = if self.mean_s > 0.0 { per_iter / self.mean_s } else { 0.0 };
         format!(
             "{:<44} {:>10.3} ms/iter  {:>12.1} {unit}/s  (min {:.3} ms, p50 {:.3} ms, n={})",
             self.name,
             self.mean_s * 1e3,
-            per_iter / self.mean_s,
+            per_s,
             self.min_s * 1e3,
             self.p50_s * 1e3,
             self.iters

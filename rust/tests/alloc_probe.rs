@@ -1,0 +1,127 @@
+//! Allocation probes for the serving hot path, backing two claims the
+//! observability layer makes (`DESIGN.md` §Observability):
+//!
+//! 1. steady-state batched decode performs **zero** heap allocation — the
+//!    arenas ([`BatchScratch`], the KV pages, the trace ring) are recycled,
+//!    and the profiler's timing adds clock reads, never allocations;
+//! 2. `Engine::step` allocates **identically** with observability on and
+//!    off — the obs layer records into preallocated fixed-size storage.
+//!
+//! The counting `#[global_allocator]` is scoped to this test binary
+//! (integration tests are separate crates), and counts every thread, so
+//! the tests serialize through one mutex to keep measurements clean.
+
+use nanoquant::nn::decode::{decode_batch_into, dense_decode_model, BatchScratch, KvCache};
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::ModelParams;
+use nanoquant::serve::{Engine, Request, ServerConfig};
+use nanoquant::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// System allocator with an allocation-event counter (alloc, alloc_zeroed
+/// and realloc count; dealloc is free-ing, not allocating).
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// The harness runs tests on parallel threads and the counter is global:
+/// each test holds this for its whole body so measurements never overlap.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn alloc_events() -> u64 {
+    ALLOC_EVENTS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_decode_is_allocation_free_with_and_without_timing() {
+    let _guard = SERIAL.lock().unwrap();
+    let mcfg = family_config("l2", "xs");
+    let mut rng = Rng::new(0);
+    let params = ModelParams::init(&mcfg, &mut rng);
+    let model = dense_decode_model(&params);
+    let mut caches = vec![KvCache::new(&mcfg)];
+    let mut scratch = BatchScratch::new(&mcfg, 1);
+
+    // Warmup: first steps allocate the cache's first KV page; afterwards
+    // every step up to the 32-token page boundary reuses it. Width 1 also
+    // keeps the attention fan-out on the serial path, so the measurement
+    // covers the whole call, threadpool included.
+    for _ in 0..4 {
+        decode_batch_into(&model, &mut caches, &[7], &mut scratch);
+    }
+
+    let before = alloc_events();
+    for _ in 0..8 {
+        decode_batch_into(&model, &mut caches, &[7], &mut scratch);
+    }
+    assert_eq!(alloc_events() - before, 0, "steady-state decode must not allocate");
+
+    // Profiler timing on: clock reads and f64 accumulation only — still
+    // exactly zero allocations.
+    scratch.timing = true;
+    let before = alloc_events();
+    for _ in 0..8 {
+        decode_batch_into(&model, &mut caches, &[7], &mut scratch);
+    }
+    assert_eq!(alloc_events() - before, 0, "phase timing must not allocate");
+    assert!(scratch.gemm_s >= 0.0 && scratch.attn_s >= 0.0);
+}
+
+/// Drive a fresh engine to a mid-decode steady state and count the
+/// allocation events of the next few ticks.
+fn steady_step_allocs(obs: bool) -> u64 {
+    let mcfg = family_config("l2", "xs");
+    let mut rng = Rng::new(0);
+    let params = ModelParams::init(&mcfg, &mut rng);
+    let mut engine = Engine::new(
+        dense_decode_model(&params),
+        ServerConfig { max_batch: 1, obs, ..Default::default() },
+    );
+    engine.submit(Request::greedy(0, vec![3, 4, 5, 6], 40));
+    for _ in 0..4 {
+        engine.step(); // admission + prefill + the first decode ticks
+    }
+    let before = alloc_events();
+    for _ in 0..5 {
+        engine.step();
+    }
+    alloc_events() - before
+}
+
+#[test]
+fn engine_step_allocates_identically_with_obs_on_and_off() {
+    let _guard = SERIAL.lock().unwrap();
+    // step() itself allocates (the per-tick event Vec), so the decode
+    // path's bar is parity, not zero: the trace ring, histograms and
+    // profiler arena are preallocated, so turning obs on must not add a
+    // single allocation event to an identical workload.
+    let with_obs = steady_step_allocs(true);
+    let without = steady_step_allocs(false);
+    assert_eq!(
+        with_obs, without,
+        "obs on allocated {with_obs} events vs {without} with obs off"
+    );
+}

@@ -802,3 +802,148 @@ fn shared_prefix_traffic_hits_the_prefix_cache() {
         gateway.shutdown();
     });
 }
+
+/// Read one `Content-Length`-framed response without assuming a JSON body;
+/// returns (status, content-type, raw body) — for the Prometheus text and
+/// NDJSON endpoints.
+fn read_raw_response(reader: &mut BufReader<TcpStream>) -> (u16, String, String) {
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line {line:?}"));
+    let mut content_length = 0usize;
+    let mut content_type = String::new();
+    loop {
+        line.clear();
+        reader.read_line(&mut line).expect("header line");
+        let trimmed = line.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = trimmed.split_once(':') {
+            match name.trim().to_ascii_lowercase().as_str() {
+                "content-length" => content_length = value.trim().parse().expect("length"),
+                "content-type" => content_type = value.trim().to_string(),
+                _ => {}
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).expect("response body");
+    (status, content_type, String::from_utf8(body).expect("utf8 body"))
+}
+
+fn oneshot_raw(addr: SocketAddr, method: &str, target: &str, body: &str) -> (u16, String, String) {
+    let mut stream = connect(addr);
+    write_request(&mut stream, method, target, body, true);
+    read_raw_response(&mut BufReader::new(stream))
+}
+
+#[test]
+fn trace_endpoint_returns_span_tree_that_round_trips() {
+    with_watchdog(120, || {
+        let scfg = ServerConfig { max_batch: 1, seed: 0, ..Default::default() };
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        let (status, resp) =
+            oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [5, 6, 7], \"max_new\": 4}");
+        assert_eq!(status, 200);
+        let id = resp.get("id").and_then(Json::as_usize).expect("response id");
+        // The tree arrives as JSON text and re-parses through util::json
+        // (read_response already round-trips); check its shape.
+        let (status, tree) = oneshot(addr, "GET", &format!("/v1/trace/{id}"), "");
+        assert_eq!(status, 200, "trace for a finished request: {tree:?}");
+        assert_eq!(tree.get("id").and_then(Json::as_usize), Some(id));
+        assert_eq!(tree.get("finish_reason").and_then(Json::as_str), Some("max_new"));
+        let events = tree.get("events").and_then(Json::as_arr).expect("events");
+        let kinds: Vec<&str> =
+            events.iter().filter_map(|e| e.get("kind").and_then(Json::as_str)).collect();
+        assert_eq!(kinds.first(), Some(&"submitted"));
+        assert_eq!(kinds.last(), Some(&"finished"));
+        assert!(kinds.contains(&"first_token"), "kinds: {kinds:?}");
+        let spans = tree.get("spans").and_then(Json::as_arr).expect("spans array");
+        let names: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+        for span in ["queued", "prefill", "decode"] {
+            assert!(names.contains(&span), "missing span {span:?} in {names:?}");
+        }
+        // Unknown id → 404 with a JSON error; non-numeric id → 400.
+        let (status, _) = oneshot(addr, "GET", "/v1/trace/999999", "");
+        assert_eq!(status, 404);
+        let (status, _) = oneshot(addr, "GET", "/v1/trace/not-a-number", "");
+        assert_eq!(status, 400);
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn debug_dump_streams_chrome_trace_ndjson() {
+    with_watchdog(120, || {
+        let scfg = ServerConfig { max_batch: 2, seed: 0, ..Default::default() };
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        for _ in 0..2 {
+            let (status, _) =
+                oneshot(addr, "POST", "/v1/generate", "{\"prompt\": [1, 2], \"max_new\": 3}");
+            assert_eq!(status, 200);
+        }
+        let (status, ctype, body) = oneshot_raw(addr, "POST", "/v1/debug/dump", "");
+        assert_eq!(status, 200);
+        assert_eq!(ctype, "application/x-ndjson");
+        let lines: Vec<&str> = body.lines().collect();
+        assert!(lines.len() >= 2, "two requests must leave events: {body:?}");
+        for line in &lines {
+            // Each NDJSON line is one Chrome-trace instant event and must
+            // round-trip through util::json.
+            let ev = Json::parse(line).unwrap_or_else(|e| panic!("bad line ({e}): {line}"));
+            assert_eq!(ev.get("ph").and_then(Json::as_str), Some("i"));
+            assert!(ev.get("name").and_then(Json::as_str).is_some());
+            assert!(ev.get("ts").and_then(Json::as_f64).is_some());
+            assert!(ev.get("pid").and_then(Json::as_usize).is_some());
+            assert!(ev.get("tid").and_then(Json::as_usize).is_some());
+        }
+        gateway.shutdown();
+    });
+}
+
+#[test]
+fn prometheus_format_renders_families_and_leaves_json_untouched() {
+    with_watchdog(120, || {
+        let scfg = ServerConfig { max_batch: 1, seed: 0, ..Default::default() };
+        let gateway = start_gateway(scfg, GatewayConfig::default());
+        let addr = gateway.local_addr();
+        let (status, _) = oneshot(
+            addr,
+            "POST",
+            "/v1/generate",
+            "{\"prompt\": [9, 8, 7], \"max_new\": 3, \"tenant\": \"acme\"}",
+        );
+        assert_eq!(status, 200);
+        let (status, ctype, text) =
+            oneshot_raw(addr, "GET", "/v1/metrics?format=prometheus", "");
+        assert_eq!(status, 200);
+        assert_eq!(ctype, "text/plain; version=0.0.4");
+        for needle in [
+            "# TYPE nanoquant_tokens_total counter",
+            "nanoquant_tokens_total{model=\"default\"} 3",
+            "# TYPE nanoquant_queue_wait_seconds histogram",
+            "nanoquant_ttft_seconds_bucket{model=\"default\",class=\"interactive\",le=\"+Inf\"} 1",
+            "nanoquant_tenant_requests_total{model=\"default\",tenant=\"acme\",outcome=\"admitted\"} 1",
+            "nanoquant_tick_phase_seconds_count{model=\"default\",phase=\"sampling\"}",
+            "nanoquant_kv_pool_pages{model=\"default\",state=\"total\"}",
+            "nanoquant_up{model=\"default\"} 1",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in exposition:\n{text}");
+        }
+        // The JSON endpoint is untouched by the new format: same families
+        // of data, legacy shape.
+        let (status, json) = oneshot(addr, "GET", "/v1/metrics", "");
+        assert_eq!(status, 200);
+        assert_eq!(json.get("total_tokens").and_then(Json::as_usize), Some(3));
+        assert!(json.get("queue_wait_hist").is_some());
+        gateway.shutdown();
+    });
+}
