@@ -1,0 +1,91 @@
+//! `cargo bench --bench quant_pipeline` — Algorithm-1 wall time with and
+//! without the run observer (events to a memory sink), plus per-phase
+//! wall-time totals from `QuantReport::phase_hists`. Results land in
+//! `BENCH_quant.json` at the repo root.
+
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::ModelParams;
+use nanoquant::obs::{EventSink, RunObserver, Watchdog};
+use nanoquant::quant::{quantize, quantize_observed, AdmmConfig, PipelineConfig};
+use nanoquant::util::json::{write_json, Json};
+use nanoquant::util::rng::Rng;
+
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_quant.json");
+const RUNS: usize = 3;
+
+fn main() {
+    let cfgm = family_config("l2", "xs");
+    let mut rng = Rng::new(0);
+    let teacher = ModelParams::init(&cfgm, &mut rng);
+    let calib: Vec<Vec<u16>> =
+        (0..8).map(|i| (0..25).map(|j| ((i * 31 + j * 7) % 250) as u16).collect()).collect();
+    let seq = 24;
+    let pcfg = PipelineConfig {
+        bpw: 1.5,
+        t_pre: 8,
+        t_post: 16,
+        t_glob: 8,
+        stats_seqs: 4,
+        admm: AdmmConfig { iters: 10, ..Default::default() },
+        ..Default::default()
+    };
+
+    println!("== quantization pipeline: observer overhead ==");
+    // Telemetry-off runs: the zero-clock-read path.
+    let mut off = Vec::new();
+    for _ in 0..RUNS {
+        let (_, report) = quantize(&teacher, &calib, seq, &pcfg);
+        off.push(report.wall_seconds);
+    }
+    // Events-on runs (memory sink, so filesystem noise stays out of the
+    // timing; warn watchdog exercises the stream checks too).
+    let mut on = Vec::new();
+    let mut phases = Json::obj();
+    for run in 0..RUNS {
+        let mut obs = RunObserver::new(Some(EventSink::memory()), false, Watchdog::Warn);
+        let (_, report) =
+            quantize_observed(&teacher, &calib, seq, &pcfg, Some(&mut obs)).unwrap();
+        on.push(report.wall_seconds);
+        if run == RUNS - 1 {
+            for (name, h) in &report.phase_hists {
+                phases.insert(
+                    name,
+                    Json::obj()
+                        .set("count", h.count())
+                        .set("sum_s", h.sum())
+                        .set("mean_s", h.mean()),
+                );
+            }
+        }
+    }
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    let (off_mean, on_mean) = (mean(&off), mean(&on));
+    let overhead_frac = (on_mean - off_mean) / off_mean.max(1e-12);
+    println!(
+        "quantize: off {off_mean:.3}s  events-on {on_mean:.3}s  overhead {:+.2}%",
+        overhead_frac * 100.0
+    );
+
+    let doc = Json::obj()
+        .set("bench", "quant_pipeline")
+        .set(
+            "note",
+            "Schema: results.off_mean_wall_s / on_mean_wall_s -> mean Algorithm-1 wall \
+             seconds over 3 runs without / with the run observer (memory event sink, warn \
+             watchdog); results.events_overhead_frac -> (on-off)/off; \
+             results.phases.<phase:*|step:*> -> {count, sum_s, mean_s} from \
+             QuantReport.phase_hists of the last observed run.",
+        )
+        .set(
+            "results",
+            Json::obj()
+                .set("off_mean_wall_s", off_mean)
+                .set("on_mean_wall_s", on_mean)
+                .set("events_overhead_frac", overhead_frac)
+                .set("phases", phases),
+        );
+    match write_json(OUT_PATH, &doc) {
+        Ok(()) => println!("wrote {OUT_PATH}"),
+        Err(e) => eprintln!("could not write {OUT_PATH}: {e}"),
+    }
+}

@@ -123,8 +123,9 @@ pub fn table9(ctx: &Ctx) {
             let recon_calib = sample_sequences(&tokens, seq + 1, nm, &mut rng2);
             tune_scales_global(
                 &mut qm, &teacher, &recon_calib, cfg.t_glob, cfg.batch_seqs, seq,
-                cfg.lr_glob, cfg.kl_temperature, &mut rng2,
-            );
+                cfg.lr_glob, cfg.kl_temperature, &mut rng2, None,
+            )
+            .expect("watchdog off");
             let ppl = perplexity(&qm.params, &eval_toks, seq, windows);
             row.push(fmt_ppl(ppl));
             raw.insert(&format!("block{nb}_model{nm}"), ppl);

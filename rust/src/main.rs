@@ -3,8 +3,11 @@
 //! Subcommands:
 //!   zoo                         train/cache the teacher model zoo
 //!   train   --family --size     train one teacher
-//!   quantize --family --size --bpw ...   run Algorithm 1, save checkpoint stats
-//!   pack    --family --size --bpw --out m.nqck   quantize + write a packed NANOQCK2 serving artifact
+//!   quantize --family --size --bpw [--progress] [--events run.ndjson|stderr]
+//!           [--watchdog off|warn|abort] [--rho-schedule constant|linear|exp]
+//!           [--report QUANT_REPORT.json|none]   run Algorithm 1, save run report
+//!   pack    --family --size --bpw --out m.nqck   quantize + write a packed NANOQCK2
+//!           serving artifact (same telemetry flags as quantize)
 //!   inspect <path>              print a checkpoint/artifact header, tensor table, CRC status
 //!   eval    --family --size [--bpw]      perplexity + zero-shot
 //!   serve   --family --size [--stream] [--stop-tokens a,b] [--queue-cap N] [--per-slot-decode]   event-loop serving demo
@@ -18,10 +21,12 @@ use nanoquant::data::{sample_sequences, CorpusKind};
 use nanoquant::eval::{perplexity, zero_shot_suite};
 use nanoquant::exp::{self, zoo, Ctx};
 use nanoquant::model::{load_packed_model, save_packed_model, Artifact, Backing};
-use nanoquant::quant::{self, InitMethod, PipelineConfig};
+use nanoquant::obs::{EventSink, RunObserver, Watchdog};
+use nanoquant::quant::{self, InitMethod, PipelineConfig, QuantReport, RhoSchedule};
 use nanoquant::serve::http::{Gateway, GatewayConfig};
 use nanoquant::serve::{Engine, Event, Request, ServerConfig};
 use nanoquant::util::cli::Args;
+use nanoquant::util::json::write_json;
 use nanoquant::util::rng::Rng;
 
 fn main() {
@@ -61,10 +66,73 @@ fn main() {
     }
 }
 
+/// Build the run observer for `quantize`/`pack` from `--progress`,
+/// `--events <path|stderr|->` and `--watchdog off|warn|abort`. `None` (all
+/// telemetry off) keeps the pipeline on its zero-clock-read path.
+fn build_observer(args: &Args) -> Option<RunObserver> {
+    let watchdog = match Watchdog::parse(args.get_or("watchdog", "off")) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("--watchdog: {e}");
+            std::process::exit(2);
+        }
+    };
+    let progress = args.flag("progress");
+    let sink = match args.get("events") {
+        None => None,
+        Some("-") | Some("stderr") => Some(EventSink::Stderr),
+        Some(path) => match EventSink::file(path) {
+            Ok(s) => Some(s),
+            Err(e) => {
+                eprintln!("--events: cannot open {path}: {e}");
+                std::process::exit(1);
+            }
+        },
+    };
+    if sink.is_none() && !progress && watchdog == Watchdog::Off {
+        return None;
+    }
+    Some(RunObserver::new(sink, progress, watchdog))
+}
+
+/// Common `--rho-schedule` / telemetry-aware pipeline-config construction
+/// for `quantize` and `pack`.
+fn build_pipeline_cfg(args: &Args, bpw: f64) -> PipelineConfig {
+    let mut pcfg = PipelineConfig {
+        bpw,
+        init: InitMethod::parse(args.get_or("init", "lb-admm")),
+        verbose: false,
+        ..Default::default()
+    };
+    match RhoSchedule::parse(args.get_or("rho-schedule", pcfg.admm.schedule.name())) {
+        Ok(s) => pcfg.admm.schedule = s,
+        Err(e) => {
+            eprintln!("--rho-schedule: {e}");
+            std::process::exit(2);
+        }
+    }
+    pcfg
+}
+
+/// Write `QUANT_REPORT.json` (or `--report <path>`; `--report none`
+/// disables). Best-effort: a failed write warns but does not fail the run.
+fn write_quant_report(args: &Args, cmd: &str, report: &QuantReport) {
+    let path = args.get_or("report", "QUANT_REPORT.json");
+    if path == "none" {
+        return;
+    }
+    match write_json(path, &report.to_json()) {
+        Ok(()) => println!("report: {path}"),
+        Err(e) => eprintln!("{cmd}: could not write {path}: {e}"),
+    }
+}
+
 fn cmd_quantize(args: &Args) {
     let family = args.get_or("family", "l2");
     let size = args.get_or("size", "s");
     let bpw = args.get_f64("bpw", 1.0);
+    let pcfg = build_pipeline_cfg(args, bpw);
+    let mut obs = build_observer(args);
     let tokens = zoo::train_tokens();
     let teacher =
         zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
@@ -72,13 +140,15 @@ fn cmd_quantize(args: &Args) {
     let n_calib = args.get_usize("calib", 24);
     let mut rng = Rng::new(args.get_u64("seed", 0));
     let calib = sample_sequences(&tokens, seq + 1, n_calib, &mut rng);
-    let pcfg = PipelineConfig {
-        bpw,
-        init: InitMethod::parse(args.get_or("init", "lb-admm")),
-        verbose: true,
-        ..Default::default()
+    let (qm, report) = match quant::quantize_observed(&teacher, &calib, seq, &pcfg, obs.as_mut())
+    {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("quantize: {e}");
+            std::process::exit(1);
+        }
     };
-    let (qm, report) = quant::quantize(&teacher, &calib, seq, &pcfg);
+    write_quant_report(args, "quantize", &report);
     println!(
         "quantized {family}-{size}: bpw={:.3} size={:.2} MB wall={:.1}s calib_tokens={}",
         report.effective_bpw,
@@ -101,6 +171,8 @@ fn cmd_pack(args: &Args) {
     let bpw = args.get_f64("bpw", 1.0);
     let out = args.get_or("out", "").to_string();
     let out = if out.is_empty() { format!("{family}-{size}-{bpw}bpw.nqck") } else { out };
+    let pcfg = build_pipeline_cfg(args, bpw);
+    let mut obs = build_observer(args);
     let tokens = zoo::train_tokens();
     let teacher =
         zoo::teacher(args.get_or("checkpoints", "checkpoints"), family, size, &tokens, true);
@@ -108,13 +180,15 @@ fn cmd_pack(args: &Args) {
     let n_calib = args.get_usize("calib", 24);
     let mut rng = Rng::new(args.get_u64("seed", 0));
     let calib = sample_sequences(&tokens, seq + 1, n_calib, &mut rng);
-    let pcfg = PipelineConfig {
-        bpw,
-        init: InitMethod::parse(args.get_or("init", "lb-admm")),
-        verbose: true,
-        ..Default::default()
+    let (qm, report) = match quant::quantize_observed(&teacher, &calib, seq, &pcfg, obs.as_mut())
+    {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("pack: {e}");
+            std::process::exit(1);
+        }
     };
-    let (qm, report) = quant::quantize(&teacher, &calib, seq, &pcfg);
+    write_quant_report(args, "pack", &report);
     if let Err(e) = save_packed_model(&out, &qm) {
         eprintln!("pack: could not write {out}: {e}");
         std::process::exit(1);

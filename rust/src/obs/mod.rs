@@ -22,6 +22,12 @@
 //! scrape from the snapshots it already collects and serves
 //! `GET /v1/metrics?format=prometheus`, leaving the JSON shape untouched.
 //!
+//! [`run::RunObserver`] is the quantization-side counterpart: an NDJSON
+//! event stream, per-phase wall-time histograms (the same [`Histogram`]),
+//! an EWMA block ETA, and a divergence watchdog, threaded through
+//! `quant::pipeline` as `Option<&mut RunObserver>` so the telemetry-off
+//! path stays byte-identical with zero clock reads.
+//!
 //! **Overhead budget:** with observability on (the default), the decode
 //! hot path pays a handful of `Instant::now()` reads per tick (tick
 //! granularity, not per-kernel), integer histogram records, and fixed-size
@@ -32,9 +38,11 @@
 pub mod hist;
 pub mod profile;
 pub mod prometheus;
+pub mod run;
 pub mod trace;
 
 pub use hist::{Histogram, NBUCKETS};
 pub use profile::{Phase, TickProfiler, ALL_PHASES, NPHASES};
 pub use prometheus::{escape_label_value, valid_label_name, valid_metric_name, Registry};
+pub use run::{EventSink, RunAborted, RunObserver, Watchdog};
 pub use trace::{reason_str, TraceEvent, TraceKind, TraceRing};

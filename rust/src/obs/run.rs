@@ -1,0 +1,717 @@
+//! Quantization-run observer: structured NDJSON progress events,
+//! convergence traces, an EWMA block ETA, and a divergence watchdog for
+//! the PTQ pipeline (`quant::pipeline`).
+//!
+//! PR 9 gave the *serving* stack histograms, a tick profiler and
+//! Prometheus; this module gives the *quantization* stack the same
+//! treatment. A multi-hour `quantize` run (the paper's 70B-in-13h regime)
+//! is only launchable responsibly if it (a) streams machine-readable
+//! progress, (b) can estimate completion, and (c) kills itself early when
+//! the optimization has diverged instead of burning the remaining hours.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Strictly opt-in.** The observer is threaded through the pipeline
+//!    as `Option<&mut RunObserver>`. With `None`, the quantization path
+//!    takes **zero clock reads** and allocates nothing it didn't before —
+//!    packed bits and scales are byte-identical to the pre-observer code
+//!    (pinned by `quant::pipeline::tests::observer_toggle_is_bit_identical`,
+//!    mirroring the serving stack's `--no-obs` invariant).
+//! 2. **One schema, pinned.** Events are NDJSON — one [`crate::util::json::Json`]
+//!    object per line. `Json` objects serialize from a `BTreeMap`, so keys
+//!    appear in deterministic alphabetical order; the golden event-schema
+//!    test pins the exact key set of every event type. Every event carries
+//!    `ev` (type) and `t` (seconds since run start).
+//! 3. **Bounded volume.** Per-iteration ADMM curves are decimated to at
+//!    most [`MAX_CURVE_POINTS`] points per layer before emission (first
+//!    and last iterations always kept), so a 400-iteration × 7-layer ×
+//!    80-block run emits kilobytes, not the raw trace.
+//!
+//! ## Event stream
+//!
+//! | `ev`             | payload                                                        |
+//! |------------------|----------------------------------------------------------------|
+//! | `run_started`    | model shape, bpw, rank, calib size, ADMM config, watchdog      |
+//! | `phase_started`  | `phase` ∈ calibration / block_recon / global_recon             |
+//! | `phase_done`     | `phase`, wall `seconds`                                        |
+//! | `block_started`  | `block`, `n_blocks`                                            |
+//! | `admm_trace`     | per-layer decimated `iter`/`primal`/`dual`/`rho`/`objective`   |
+//! | `mitigate_curve` | per-block decimated `step`/`loss`                              |
+//! | `ste_curve`      | per-block decimated `step`/`loss`                              |
+//! | `recon_curve`    | global-phase decimated `step`/`loss`                           |
+//! | `block_done`     | `err_before`/`err_after`, block `seconds`, `eta_s`             |
+//! | `watchdog`       | `stage`, `step`, `reason`, `action` (warn \| abort)            |
+//! | `run_done`       | totals: `blocks`, `seconds`, `effective_bpw`/`bytes`           |
+//!
+//! ## Watchdog policy
+//!
+//! Loss streams (mitigate / STE / global recon) are checked per step: a
+//! non-finite value triggers immediately; otherwise a running best is
+//! tracked and [`RunObserver::with_patience`] steps without a relative
+//! improvement of `min_rel_improve` triggers a stall. ADMM residual
+//! curves are checked for non-finite values only — the primal residual is
+//! not monotone under a ramping ρ, so stall detection there would
+//! false-positive on healthy runs. `warn` emits one `watchdog` event per
+//! stream and continues; `abort` flushes the sink and returns a
+//! structured [`RunAborted`] that unwinds out of `quantize_observed`.
+//!
+//! ## ETA model
+//!
+//! Sequential block reconstruction dominates the run and per-block cost
+//! is near-stationary (same shapes every block), so the ETA is an
+//! exponentially-weighted moving average of completed block wall times
+//! (`alpha` = [`ETA_ALPHA`]) times the number of remaining blocks —
+//! robust to a slow first block (allocator warmup) without the lag of a
+//! plain mean.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::time::Instant;
+
+use super::hist::Histogram;
+use crate::util::json::Json;
+
+/// Decimation cap for every emitted curve (ADMM iterations, loss curves).
+pub const MAX_CURVE_POINTS: usize = 64;
+
+/// EWMA coefficient for the per-block wall-time estimate behind `eta_s`.
+pub const ETA_ALPHA: f64 = 0.3;
+
+/// Where NDJSON events go. `Memory` backs the in-process golden tests and
+/// the bench's overhead measurement (no filesystem noise in the timing).
+pub enum EventSink {
+    Stderr,
+    File(BufWriter<File>),
+    Memory(Vec<String>),
+}
+
+impl EventSink {
+    /// Open `path` for NDJSON events, creating parent directories (same
+    /// convention as [`crate::util::json::write_json`]).
+    pub fn file(path: &str) -> std::io::Result<EventSink> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(EventSink::File(BufWriter::new(File::create(path)?)))
+    }
+
+    pub fn memory() -> EventSink {
+        EventSink::Memory(Vec::new())
+    }
+
+    fn write_line(&mut self, line: &str) {
+        match self {
+            EventSink::Stderr => eprintln!("{line}"),
+            // Event-stream writes are best-effort: a full disk must not
+            // kill a quantization run that is otherwise healthy.
+            EventSink::File(w) => {
+                let _ = writeln!(w, "{line}");
+            }
+            EventSink::Memory(v) => v.push(line.to_string()),
+        }
+    }
+
+    fn flush(&mut self) {
+        if let EventSink::File(w) = self {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Divergence-watchdog policy (`--watchdog off|warn|abort`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Watchdog {
+    /// No stream checks at all (the default).
+    Off,
+    /// Emit one `watchdog` event per diverging stream, keep running.
+    Warn,
+    /// Flush the sink and return a structured [`RunAborted`].
+    Abort,
+}
+
+impl Watchdog {
+    pub fn parse(s: &str) -> Result<Watchdog, String> {
+        match s {
+            "off" => Ok(Watchdog::Off),
+            "warn" => Ok(Watchdog::Warn),
+            "abort" => Ok(Watchdog::Abort),
+            _ => Err(format!("unknown watchdog policy '{s}' (expected one of: off, warn, abort)")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Watchdog::Off => "off",
+            Watchdog::Warn => "warn",
+            Watchdog::Abort => "abort",
+        }
+    }
+}
+
+/// Structured error returned when the `abort` watchdog fires: which stage
+/// diverged, where, and why — instead of hours of NaN arithmetic.
+#[derive(Clone, Debug)]
+pub struct RunAborted {
+    /// Diverging stream: `mitigate`, `admm`, `ste`, or `recon`.
+    pub stage: String,
+    /// Block being reconstructed, if the stage is block-scoped.
+    pub block: Option<usize>,
+    /// Step (or ADMM iteration) at which the trigger fired.
+    pub step: usize,
+    pub reason: String,
+}
+
+impl std::fmt::Display for RunAborted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.block {
+            Some(b) => write!(
+                f,
+                "watchdog aborted quantization: {} diverged at block {b}, step {}: {}",
+                self.stage, self.step, self.reason
+            ),
+            None => write!(
+                f,
+                "watchdog aborted quantization: {} diverged at step {}: {}",
+                self.stage, self.step, self.reason
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RunAborted {}
+
+/// Per-stream divergence state (running best + steps since improvement).
+struct StreamState {
+    best: f64,
+    since_improve: usize,
+    warned: bool,
+}
+
+/// The quantization-run observer. Construct one and pass
+/// `Some(&mut observer)` to `quant::quantize_observed`; pass `None` (or
+/// call plain `quantize`) for the telemetry-free path.
+pub struct RunObserver {
+    sink: Option<EventSink>,
+    progress: bool,
+    watchdog: Watchdog,
+    patience: usize,
+    min_rel_improve: f64,
+    start: Instant,
+    n_blocks: usize,
+    blocks_done: usize,
+    cur_block: Option<usize>,
+    ewma_block_s: Option<f64>,
+    block_t0: Option<Instant>,
+    phase_t0: Option<(String, Instant)>,
+    /// Wall-time histograms, keyed `phase:<name>` / `step:<name>`, in
+    /// first-recorded order (moved into `QuantReport::phase_hists`).
+    hists: Vec<(String, Histogram)>,
+    streams: BTreeMap<String, StreamState>,
+}
+
+impl RunObserver {
+    /// `sink`: where NDJSON events go (`None` = progress/watchdog only).
+    /// `progress`: human TTY progress line on stderr.
+    pub fn new(sink: Option<EventSink>, progress: bool, watchdog: Watchdog) -> RunObserver {
+        RunObserver {
+            sink,
+            progress,
+            watchdog,
+            patience: 64,
+            min_rel_improve: 1e-4,
+            start: Instant::now(),
+            n_blocks: 0,
+            blocks_done: 0,
+            cur_block: None,
+            ewma_block_s: None,
+            block_t0: None,
+            phase_t0: None,
+            hists: Vec::new(),
+            streams: BTreeMap::new(),
+        }
+    }
+
+    /// Override the stall detector: trigger after `patience` consecutive
+    /// steps without a relative improvement of at least `min_rel_improve`.
+    /// The default (64 steps, 1e-4) is deliberately wider than the
+    /// pipeline's default step budgets, so stalls only fire on runs long
+    /// enough for the signal to be meaningful.
+    pub fn with_patience(mut self, patience: usize, min_rel_improve: f64) -> RunObserver {
+        self.patience = patience.max(1);
+        self.min_rel_improve = min_rel_improve;
+        self
+    }
+
+    /// Captured event lines (memory sinks only; empty otherwise).
+    pub fn events(&self) -> &[String] {
+        match &self.sink {
+            Some(EventSink::Memory(v)) => v,
+            _ => &[],
+        }
+    }
+
+    /// Seconds since the observer (hence the run) started.
+    fn t(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn emit(&mut self, ev: Json) {
+        if let Some(sink) = &mut self.sink {
+            sink.write_line(&ev.to_string());
+        }
+    }
+
+    fn hist_mut(&mut self, name: &str) -> &mut Histogram {
+        if let Some(i) = self.hists.iter().position(|(n, _)| n == name) {
+            return &mut self.hists[i].1;
+        }
+        self.hists.push((name.to_string(), Histogram::seconds()));
+        &mut self.hists.last_mut().unwrap().1
+    }
+
+    /// Move the accumulated wall-time histograms out (into `QuantReport`).
+    pub fn take_hists(&mut self) -> Vec<(String, Histogram)> {
+        std::mem::take(&mut self.hists)
+    }
+
+    // ---- Run / phase / block lifecycle ---------------------------------
+
+    /// Emit `run_started`. `info` is the pipeline's config/model payload;
+    /// the observer adds `ev`, `t`, `n_blocks` and its watchdog policy.
+    pub fn run_started(&mut self, n_blocks: usize, mut info: Json) {
+        self.n_blocks = n_blocks;
+        info.insert("ev", "run_started");
+        info.insert("t", self.t());
+        info.insert("n_blocks", n_blocks);
+        info.insert("watchdog", self.watchdog.as_str());
+        self.emit(info);
+        if self.progress {
+            eprintln!("[nanoquant] quantization started: {n_blocks} blocks");
+        }
+    }
+
+    pub fn phase_started(&mut self, phase: &str) {
+        self.phase_t0 = Some((phase.to_string(), Instant::now()));
+        let ev = Json::obj().set("ev", "phase_started").set("phase", phase).set("t", self.t());
+        self.emit(ev);
+    }
+
+    pub fn phase_done(&mut self, phase: &str) {
+        let seconds = match self.phase_t0.take() {
+            Some((name, t0)) => {
+                debug_assert_eq!(name, phase, "phase_done without matching phase_started");
+                t0.elapsed().as_secs_f64()
+            }
+            None => 0.0,
+        };
+        self.cur_block = None;
+        self.hist_mut(&format!("phase:{phase}")).record(seconds);
+        let ev = Json::obj()
+            .set("ev", "phase_done")
+            .set("phase", phase)
+            .set("seconds", seconds)
+            .set("t", self.t());
+        self.emit(ev);
+    }
+
+    pub fn block_started(&mut self, block: usize) {
+        self.cur_block = Some(block);
+        self.block_t0 = Some(Instant::now());
+        // Fresh block, fresh loss scales: reset the divergence streams.
+        self.streams.clear();
+        let ev = Json::obj()
+            .set("ev", "block_started")
+            .set("block", block)
+            .set("n_blocks", self.n_blocks)
+            .set("t", self.t());
+        self.emit(ev);
+    }
+
+    pub fn block_done(&mut self, block: usize, err_before: f64, err_after: f64) {
+        let seconds = self.block_t0.take().map(|t0| t0.elapsed().as_secs_f64()).unwrap_or(0.0);
+        self.blocks_done += 1;
+        let ewma = match self.ewma_block_s {
+            None => seconds,
+            Some(prev) => ewma_update(prev, seconds),
+        };
+        self.ewma_block_s = Some(ewma);
+        let remaining = self.n_blocks.saturating_sub(self.blocks_done);
+        let eta_s = ewma * remaining as f64;
+        let ev = Json::obj()
+            .set("ev", "block_done")
+            .set("block", block)
+            .set("blocks_done", self.blocks_done)
+            .set("n_blocks", self.n_blocks)
+            .set("err_before", err_before)
+            .set("err_after", err_after)
+            .set("seconds", seconds)
+            .set("eta_s", eta_s)
+            .set("t", self.t());
+        self.emit(ev);
+        if self.progress {
+            eprint!(
+                "\r[nanoquant] block {}/{}  err {:.4}  eta {:.0}s   ",
+                self.blocks_done, self.n_blocks, err_after, eta_s
+            );
+        }
+    }
+
+    /// Emit `run_done`, print the closing progress line, flush the sink.
+    pub fn run_done(&mut self, effective_bpw: f64, effective_bytes: usize) {
+        let seconds = self.t();
+        let ev = Json::obj()
+            .set("ev", "run_done")
+            .set("blocks", self.blocks_done)
+            .set("effective_bpw", effective_bpw)
+            .set("effective_bytes", effective_bytes)
+            .set("seconds", seconds)
+            .set("t", seconds);
+        self.emit(ev);
+        if self.progress {
+            eprintln!(
+                "\r[nanoquant] done: {} blocks in {seconds:.1}s ({effective_bpw:.3} bpw)      ",
+                self.blocks_done
+            );
+        }
+        if let Some(sink) = &mut self.sink {
+            sink.flush();
+        }
+    }
+
+    // ---- Sub-step wall-time histograms ---------------------------------
+
+    /// Start timing a pipeline sub-step. Only ever called when an observer
+    /// exists, so the telemetry-off path keeps its zero-clock-read
+    /// invariant.
+    pub fn step_start(&self) -> Instant {
+        Instant::now()
+    }
+
+    /// Record `step:<name>` wall time since `t0`. No event — per-step
+    /// timing is histogram-only; the NDJSON stream stays block-grained.
+    pub fn step_done(&mut self, name: &str, t0: Instant) {
+        let secs = t0.elapsed().as_secs_f64();
+        self.hist_mut(&format!("step:{name}")).record(secs);
+    }
+
+    // ---- Convergence curves + watchdog ---------------------------------
+
+    /// Emit a decimated `<stage>_curve` event (no-op for empty curves).
+    pub fn curve(&mut self, stage: &str, losses: &[f64]) {
+        if losses.is_empty() {
+            return;
+        }
+        let idx = decimate_indices(losses.len(), MAX_CURVE_POINTS);
+        let steps: Vec<Json> = idx.iter().map(|&i| Json::Num(i as f64)).collect();
+        let vals: Vec<Json> = idx.iter().map(|&i| Json::Num(losses[i])).collect();
+        let mut ev = Json::obj()
+            .set("ev", format!("{stage}_curve"))
+            .set("step", Json::Arr(steps))
+            .set("loss", Json::Arr(vals))
+            .set("t", self.t());
+        if let Some(b) = self.cur_block {
+            ev.insert("block", b);
+        }
+        self.emit(ev);
+    }
+
+    /// Feed one per-layer ADMM trace: emit the decimated `admm_trace`
+    /// event and run the non-finite check over the residual/objective
+    /// curves. `objective` may be empty (the expensive recon-err trace is
+    /// only recorded for block 0 by default).
+    pub fn admm_layer(
+        &mut self,
+        layer: &str,
+        iters_run: usize,
+        primal: &[f64],
+        dual: &[f64],
+        rho: &[f64],
+        objective: &[f64],
+    ) -> Result<(), RunAborted> {
+        let idx = decimate_indices(primal.len(), MAX_CURVE_POINTS);
+        let pick = |xs: &[f64]| -> Json {
+            Json::Arr(idx.iter().filter_map(|&i| xs.get(i).map(|&v| Json::Num(v))).collect())
+        };
+        let ev = Json::obj()
+            .set("ev", "admm_trace")
+            .set("layer", layer)
+            .set("block", self.cur_block.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null))
+            .set("iters_run", iters_run)
+            .set("points", primal.len())
+            .set("iter", Json::Arr(idx.iter().map(|&i| Json::Num(i as f64)).collect()))
+            .set("primal", pick(primal))
+            .set("dual", pick(dual))
+            .set("rho", pick(rho))
+            .set("objective", pick(objective))
+            .set("t", self.t());
+        self.emit(ev);
+        if self.watchdog == Watchdog::Off {
+            return Ok(());
+        }
+        for (k, &v) in primal.iter().enumerate() {
+            if !v.is_finite() {
+                let reason = format!("non-finite primal residual ({v}) in layer {layer}");
+                return self.trigger("admm", k, reason);
+            }
+        }
+        for (k, &v) in objective.iter().enumerate() {
+            if !v.is_finite() {
+                let reason = format!("non-finite objective ({v}) in layer {layer}");
+                return self.trigger("admm", k, reason);
+            }
+        }
+        Ok(())
+    }
+
+    /// Feed one loss-stream step into the divergence watchdog. Returns
+    /// `Err(RunAborted)` only under the `abort` policy.
+    pub fn scalar_step(
+        &mut self,
+        stage: &'static str,
+        step: usize,
+        value: f64,
+    ) -> Result<(), RunAborted> {
+        if self.watchdog == Watchdog::Off {
+            return Ok(());
+        }
+        if !value.is_finite() {
+            return self.trigger(stage, step, format!("non-finite loss ({value})"));
+        }
+        let (patience, min_rel) = (self.patience, self.min_rel_improve);
+        let st = self.streams.entry(stage.to_string()).or_insert(StreamState {
+            best: value,
+            since_improve: 0,
+            warned: false,
+        });
+        let improved = value < st.best - min_rel * st.best.abs().max(1e-12);
+        if improved {
+            st.best = value;
+            st.since_improve = 0;
+            return Ok(());
+        }
+        st.since_improve += 1;
+        if st.since_improve >= patience {
+            let best = st.best;
+            st.since_improve = 0; // re-arm (warn mode keeps running)
+            let reason =
+                format!("no improvement in {patience} steps (best {best:.6e}, last {value:.6e})");
+            return self.trigger(stage, step, reason);
+        }
+        Ok(())
+    }
+
+    /// Emit the `watchdog` event and apply the policy.
+    fn trigger(&mut self, stage: &str, step: usize, reason: String) -> Result<(), RunAborted> {
+        // Warn-once per stream per block: a stalled stream would otherwise
+        // re-trigger every `patience` steps.
+        if self.watchdog == Watchdog::Warn {
+            if let Some(st) = self.streams.get_mut(stage) {
+                if st.warned {
+                    return Ok(());
+                }
+                st.warned = true;
+            }
+        }
+        let block = self.cur_block;
+        let ev = Json::obj()
+            .set("ev", "watchdog")
+            .set("stage", stage)
+            .set("block", block.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null))
+            .set("step", step)
+            .set("reason", reason.as_str())
+            .set("action", self.watchdog.as_str())
+            .set("t", self.t());
+        self.emit(ev);
+        if self.progress {
+            eprintln!("\n[nanoquant] watchdog ({}): {stage}: {reason}", self.watchdog.as_str());
+        }
+        match self.watchdog {
+            Watchdog::Abort => {
+                if let Some(sink) = &mut self.sink {
+                    sink.flush();
+                }
+                Err(RunAborted { stage: stage.to_string(), block, step, reason })
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// One EWMA step for the per-block wall-time estimate.
+pub fn ewma_update(prev: f64, x: f64) -> f64 {
+    ETA_ALPHA * x + (1.0 - ETA_ALPHA) * prev
+}
+
+/// Stride-sampled indices into a curve of length `len`, at most `cap`
+/// points, always including the first and last index.
+pub fn decimate_indices(len: usize, cap: usize) -> Vec<usize> {
+    debug_assert!(cap >= 2);
+    if len <= cap {
+        return (0..len).collect();
+    }
+    let stride = len.div_ceil(cap);
+    let mut idx: Vec<usize> = (0..len).step_by(stride).collect();
+    match idx.last() {
+        Some(&last) if last != len - 1 => {
+            if idx.len() >= cap {
+                *idx.last_mut().unwrap() = len - 1;
+            } else {
+                idx.push(len - 1);
+            }
+        }
+        _ => {}
+    }
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_events(obs: &RunObserver) -> Vec<Json> {
+        obs.events().iter().map(|l| Json::parse(l).expect("event line parses")).collect()
+    }
+
+    #[test]
+    fn watchdog_parse_lists_accepted_values() {
+        assert_eq!(Watchdog::parse("off").unwrap(), Watchdog::Off);
+        assert_eq!(Watchdog::parse("warn").unwrap(), Watchdog::Warn);
+        assert_eq!(Watchdog::parse("abort").unwrap(), Watchdog::Abort);
+        let err = Watchdog::parse("panic").unwrap_err();
+        assert!(err.contains("off") && err.contains("warn") && err.contains("abort"), "{err}");
+    }
+
+    #[test]
+    fn decimation_caps_and_keeps_endpoints() {
+        for len in [0usize, 1, 2, 63, 64, 65, 100, 129, 400, 4001] {
+            let idx = decimate_indices(len, MAX_CURVE_POINTS);
+            assert!(idx.len() <= MAX_CURVE_POINTS, "len={len} gave {} points", idx.len());
+            if len > 0 {
+                assert_eq!(idx[0], 0, "len={len}");
+                assert_eq!(*idx.last().unwrap(), len - 1, "len={len}");
+            }
+            if len <= MAX_CURVE_POINTS {
+                assert_eq!(idx.len(), len);
+            }
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "strictly increasing, len={len}");
+        }
+    }
+
+    #[test]
+    fn nonfinite_loss_aborts_immediately() {
+        let mut obs = RunObserver::new(Some(EventSink::memory()), false, Watchdog::Abort);
+        obs.block_started(3);
+        obs.scalar_step("ste", 0, 0.5).unwrap();
+        let err = obs.scalar_step("ste", 1, f64::NAN).unwrap_err();
+        assert_eq!(err.stage, "ste");
+        assert_eq!(err.block, Some(3));
+        assert_eq!(err.step, 1);
+        let evs = parse_events(&obs);
+        let wd = evs.iter().find(|e| e.get("ev").unwrap().as_str() == Some("watchdog")).unwrap();
+        assert_eq!(wd.get("action").unwrap().as_str(), Some("abort"));
+        assert_eq!(wd.get("block").unwrap().as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn stall_detection_honors_patience_and_warns_once() {
+        // Warn mode: a flat stream emits exactly one watchdog event.
+        let mut obs = RunObserver::new(Some(EventSink::memory()), false, Watchdog::Warn)
+            .with_patience(3, 1e-3);
+        obs.block_started(0);
+        for step in 0..20 {
+            obs.scalar_step("mitigate", step, 1.0).unwrap();
+        }
+        let evs = parse_events(&obs);
+        let warns =
+            evs.iter().filter(|e| e.get("ev").unwrap().as_str() == Some("watchdog")).count();
+        assert_eq!(warns, 1, "warn-once per stream");
+
+        // Abort mode: same stream errors after exactly `patience` flat steps.
+        let mut obs = RunObserver::new(None, false, Watchdog::Abort).with_patience(3, 1e-3);
+        obs.scalar_step("recon", 0, 1.0).unwrap();
+        obs.scalar_step("recon", 1, 1.0).unwrap();
+        let err = obs.scalar_step("recon", 2, 1.0).unwrap_err();
+        assert!(err.reason.contains("no improvement"), "{}", err.reason);
+        assert_eq!(err.block, None);
+
+        // A decreasing stream never triggers.
+        let mut obs = RunObserver::new(None, false, Watchdog::Abort).with_patience(3, 1e-3);
+        for step in 0..50 {
+            obs.scalar_step("ste", step, 1.0 / (1.0 + step as f64)).unwrap();
+        }
+    }
+
+    #[test]
+    fn watchdog_off_ignores_everything() {
+        let mut obs = RunObserver::new(Some(EventSink::memory()), false, Watchdog::Off);
+        obs.scalar_step("ste", 0, f64::NAN).unwrap();
+        obs.scalar_step("ste", 1, f64::INFINITY).unwrap();
+        assert!(parse_events(&obs)
+            .iter()
+            .all(|e| e.get("ev").unwrap().as_str() != Some("watchdog")));
+    }
+
+    #[test]
+    fn block_streams_reset_between_blocks() {
+        // 2 flat steps per block never reach patience=3 because
+        // block_started clears the stream state.
+        let mut obs = RunObserver::new(None, false, Watchdog::Abort).with_patience(3, 1e-3);
+        for b in 0..5 {
+            obs.block_started(b);
+            obs.scalar_step("mitigate", 0, 1.0).unwrap();
+            obs.scalar_step("mitigate", 1, 1.0).unwrap();
+            obs.block_done(b, 1.0, 0.5);
+        }
+    }
+
+    #[test]
+    fn lifecycle_events_parse_and_carry_schema() {
+        let mut obs = RunObserver::new(Some(EventSink::memory()), false, Watchdog::Warn);
+        obs.run_started(2, Json::obj().set("model", "l2-xs").set("bpw", 1.0));
+        obs.phase_started("block_recon");
+        obs.block_started(0);
+        obs.curve("ste", &[1.0, 0.5, 0.25]);
+        obs.admm_layer("blk0.q", 3, &[0.5, 0.4, 0.3], &[0.1, 0.1, 0.1], &[1.0, 2.0, 3.0], &[])
+            .unwrap();
+        obs.block_done(0, 0.4, 0.2);
+        obs.phase_done("block_recon");
+        obs.run_done(1.0, 1234);
+        let evs = parse_events(&obs);
+        assert_eq!(evs[0].get("ev").unwrap().as_str(), Some("run_started"));
+        assert_eq!(evs[0].get("watchdog").unwrap().as_str(), Some("warn"));
+        assert_eq!(evs[0].get("n_blocks").unwrap().as_usize(), Some(2));
+        let curve = &evs[3];
+        assert_eq!(curve.get("ev").unwrap().as_str(), Some("ste_curve"));
+        assert_eq!(curve.get("block").unwrap().as_usize(), Some(0));
+        assert_eq!(curve.get("loss").unwrap().as_arr().unwrap().len(), 3);
+        let admm = &evs[4];
+        assert_eq!(admm.get("ev").unwrap().as_str(), Some("admm_trace"));
+        assert_eq!(admm.get("points").unwrap().as_usize(), Some(3));
+        assert_eq!(admm.get("objective").unwrap().as_arr().unwrap().len(), 0);
+        let done = evs.last().unwrap();
+        assert_eq!(done.get("ev").unwrap().as_str(), Some("run_done"));
+        assert_eq!(done.get("blocks").unwrap().as_usize(), Some(1));
+        assert_eq!(done.get("effective_bytes").unwrap().as_usize(), Some(1234));
+        // One hist per closed phase, with count conservation.
+        let hists = obs.take_hists();
+        assert_eq!(hists.len(), 1);
+        assert_eq!(hists[0].0, "phase:block_recon");
+        assert_eq!(hists[0].1.count(), 1);
+    }
+
+    #[test]
+    fn ewma_blends_toward_new_samples() {
+        let e1 = ewma_update(10.0, 20.0);
+        assert!(e1 > 10.0 && e1 < 20.0);
+        assert!((ewma_update(5.0, 5.0) - 5.0).abs() < 1e-12);
+        // Repeated samples converge to the sample value.
+        let mut e = 100.0;
+        for _ in 0..60 {
+            e = ewma_update(e, 1.0);
+        }
+        assert!((e - 1.0).abs() < 1e-6);
+    }
+}

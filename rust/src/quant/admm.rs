@@ -23,12 +23,26 @@ pub enum RhoSchedule {
 }
 
 impl RhoSchedule {
-    pub fn parse(s: &str) -> RhoSchedule {
+    /// Parse a user-supplied schedule name (reachable from the CLI's
+    /// `--rho-schedule`, so bad input must be an `Err`, not a panic).
+    pub fn parse(s: &str) -> Result<RhoSchedule, String> {
         match s {
-            "constant" | "const" => RhoSchedule::Constant,
-            "linear" => RhoSchedule::Linear,
-            "exp" | "exponential" => RhoSchedule::Exponential,
-            _ => panic!("unknown rho schedule '{s}'"),
+            "constant" | "const" => Ok(RhoSchedule::Constant),
+            "linear" => Ok(RhoSchedule::Linear),
+            "exp" | "exponential" => Ok(RhoSchedule::Exponential),
+            _ => Err(format!(
+                "unknown rho schedule '{s}' (expected one of: constant, linear, exp)"
+            )),
+        }
+    }
+
+    /// Stable lowercase name (inverse of [`RhoSchedule::parse`]; used as
+    /// the `rho_schedule` field of the `run_started` telemetry event).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RhoSchedule::Constant => "constant",
+            RhoSchedule::Linear => "linear",
+            RhoSchedule::Exponential => "exp",
         }
     }
 
@@ -70,6 +84,10 @@ pub struct AdmmConfig {
     /// Record the (expensive) per-iteration binarized reconstruction error
     /// in the trace (Fig. 9 ablations / tests only).
     pub trace: bool,
+    /// Record the cheap per-iteration dual residual and ρ in the trace
+    /// (set by the run observer; off by default so the telemetry-free
+    /// path allocates exactly what it did before).
+    pub extended: bool,
     /// Seed for the SVD warm start.
     pub seed: u64,
 }
@@ -86,6 +104,7 @@ impl Default for AdmmConfig {
             svid_iters: 4,
             proxy: ProxyKind::RowSvid,
             trace: false,
+            extended: false,
             seed: 0,
         }
     }
@@ -99,6 +118,12 @@ pub struct AdmmTrace {
     pub recon_err: Vec<f64>,
     /// Relative primal residual ‖U − Z_U‖/‖U‖.
     pub primal_res: Vec<f64>,
+    /// Relative (scaled) dual residual ρ‖Z − Z_prev‖/‖U‖ — only recorded
+    /// under [`AdmmConfig::extended`], else empty.
+    pub dual_res: Vec<f64>,
+    /// ρ per outer iteration — only recorded under
+    /// [`AdmmConfig::extended`], else empty.
+    pub rho: Vec<f64>,
     pub iters_run: usize,
 }
 
@@ -160,8 +185,18 @@ pub fn lb_admm(w_target: &Tensor, rank: usize, cfg: &AdmmConfig) -> AdmmResult {
         // --- Proxy updates via SVID on the consensus variables ---
         let p_u = u.add(&l_u);
         let p_v = v.add(&l_v);
-        z_u = proj(&p_u);
-        z_v = proj(&p_v);
+        let z_u_new = proj(&p_u);
+        let z_v_new = proj(&p_v);
+        if cfg.extended {
+            // Scaled-dual residual ρ‖Z_new − Z_old‖/‖factor‖ — cheap, and
+            // gated so the telemetry-off path allocates nothing extra.
+            let d_u = rho * z_u_new.sub(&z_u).fro_norm() / u.fro_norm().max(1e-30);
+            let d_v = rho * z_v_new.sub(&z_v).fro_norm() / v.fro_norm().max(1e-30);
+            trace.dual_res.push(d_u.max(d_v));
+            trace.rho.push(rho);
+        }
+        z_u = z_u_new;
+        z_v = z_v_new;
 
         // --- Dual ascent ---
         l_u = l_u.add(&u).sub(&z_u);
@@ -315,6 +350,38 @@ mod tests {
         let e = RhoSchedule::Exponential;
         assert!((e.rho(0, 10, 0.01, 1.0) - 0.01).abs() < 1e-9);
         assert!(e.rho(5, 10, 0.01, 1.0) < 0.5); // convex ramp
+    }
+
+    #[test]
+    fn rho_schedule_parse_accepts_and_rejects() {
+        assert_eq!(RhoSchedule::parse("linear").unwrap(), RhoSchedule::Linear);
+        assert_eq!(RhoSchedule::parse("const").unwrap(), RhoSchedule::Constant);
+        assert_eq!(RhoSchedule::parse("constant").unwrap(), RhoSchedule::Constant);
+        assert_eq!(RhoSchedule::parse("exp").unwrap(), RhoSchedule::Exponential);
+        assert_eq!(RhoSchedule::parse("exponential").unwrap(), RhoSchedule::Exponential);
+        let err = RhoSchedule::parse("bogus").unwrap_err();
+        assert!(
+            err.contains("constant") && err.contains("linear") && err.contains("exp"),
+            "error must list accepted values: {err}"
+        );
+        // name() inverts parse for every variant.
+        for s in [RhoSchedule::Constant, RhoSchedule::Linear, RhoSchedule::Exponential] {
+            assert_eq!(RhoSchedule::parse(s.name()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn extended_trace_records_dual_and_rho() {
+        let w = random_target(16, 16, 9);
+        let res = lb_admm(&w, 6, &AdmmConfig { iters: 12, extended: true, ..Default::default() });
+        assert_eq!(res.trace.dual_res.len(), res.trace.iters_run);
+        assert_eq!(res.trace.rho.len(), res.trace.iters_run);
+        assert!(res.trace.dual_res.iter().all(|d| d.is_finite()));
+        assert!(res.trace.rho.windows(2).all(|w| w[0] <= w[1]), "linear ramp is monotone");
+        // Default config leaves the extended fields empty (no extra work).
+        let res2 = lb_admm(&w, 6, &AdmmConfig { iters: 5, ..Default::default() });
+        assert!(res2.trace.dual_res.is_empty());
+        assert!(res2.trace.rho.is_empty());
     }
 
     #[test]

@@ -10,6 +10,7 @@
 use crate::nn::adam::{cosine_lr, Adam};
 use crate::nn::backward::block_backward;
 use crate::nn::model::{block_forward, BlockWeights, ModelConfig};
+use crate::obs::run::{RunAborted, RunObserver};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -43,7 +44,8 @@ impl BlockOpt {
 }
 
 /// Tune the FP weights of `weights` to map `x_q -> y_fp`.
-/// Returns the loss curve (MSE per step).
+/// Returns the loss curve (MSE per step). `obs` feeds each step's loss to
+/// the divergence watchdog (`Err` only under the abort policy).
 pub fn mitigate_block(
     mcfg: &ModelConfig,
     weights: &mut BlockWeights,
@@ -55,10 +57,11 @@ pub fn mitigate_block(
     batch_seqs: usize,
     lr: f32,
     rng: &mut Rng,
-) -> Vec<f64> {
+    mut obs: Option<&mut RunObserver>,
+) -> Result<Vec<f64>, RunAborted> {
     let mut losses = Vec::new();
     if steps == 0 {
-        return losses;
+        return Ok(losses);
     }
     let mut opt = BlockOpt::new(weights, lr);
     let batch_seqs = batch_seqs.clamp(1, n_seqs);
@@ -75,7 +78,11 @@ pub fn mitigate_block(
         }
         let (yhat, cache) = block_forward(mcfg, weights, &xb, batch_seqs, seq);
         let diff = yhat.sub(&yb);
-        losses.push(diff.fro_norm_sq() / diff.numel() as f64);
+        let loss = diff.fro_norm_sq() / diff.numel() as f64;
+        losses.push(loss);
+        if let Some(o) = obs.as_deref_mut() {
+            o.scalar_step("mitigate", step, loss)?;
+        }
         let dy = diff.scale(2.0 / diff.numel() as f32);
         let (_, g) = block_backward(mcfg, weights, &cache, &dy, 0, None);
         let s = cosine_lr(step as u64, steps as u64);
@@ -89,7 +96,7 @@ pub fn mitigate_block(
         opt.wu.step(&mut weights.wu.data, &g.wu.data, s);
         opt.wd.step(&mut weights.wd.data, &g.wd.data, s);
     }
-    losses
+    Ok(losses)
 }
 
 #[cfg(test)]
@@ -119,7 +126,9 @@ mod tests {
             y.sub(&y_fp).fro_norm_sq()
         };
         let mut rng2 = Rng::new(1);
-        let losses = mitigate_block(&cfg, &mut w, &x_q, &y_fp, n_seqs, seq, 40, 4, 1e-3, &mut rng2);
+        let losses =
+            mitigate_block(&cfg, &mut w, &x_q, &y_fp, n_seqs, seq, 40, 4, 1e-3, &mut rng2, None)
+                .unwrap();
         let after = {
             let (y, _) = block_forward(&cfg, &w, &x_q, n_seqs, seq);
             y.sub(&y_fp).fro_norm_sq()
@@ -136,7 +145,7 @@ mod tests {
         let mut w = teacher.blocks[0].clone();
         let x = Tensor::zeros(&[8, cfg.d_model]);
         let y = Tensor::zeros(&[8, cfg.d_model]);
-        let losses = mitigate_block(&cfg, &mut w, &x, &y, 1, 8, 0, 1, 1e-3, &mut rng);
+        let losses = mitigate_block(&cfg, &mut w, &x, &y, 1, 8, 0, 1, 1e-3, &mut rng, None).unwrap();
         assert!(losses.is_empty());
         assert_eq!(w.wq, teacher.blocks[0].wq);
     }

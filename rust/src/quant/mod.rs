@@ -32,6 +32,6 @@ pub use admm::{lb_admm, AdmmConfig, RhoSchedule};
 pub use init::InitMethod;
 pub use kernels::{NaiveUnpackLinear, PackedLinear};
 pub use pack::PackedBits;
-pub use pipeline::{quantize, PipelineConfig, QuantReport};
+pub use pipeline::{quantize, quantize_observed, PipelineConfig, QuantReport};
 pub use qmodel::{Engine, QuantModel};
 pub use scheme::{bpw_for_rank, rank_for_bpw, LatentFactors, QuantLinear};

@@ -21,6 +21,9 @@ use crate::nn::loss::cross_entropy;
 use crate::nn::model::{block_forward, model_forward, LayerKind, ModelParams};
 use crate::nn::stats::StatsCollector;
 use crate::nn::LayerId;
+use crate::obs::run::{RunAborted, RunObserver, Watchdog};
+use crate::obs::Histogram;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::timer::time_once;
 use std::collections::BTreeMap;
@@ -53,6 +56,9 @@ pub struct PipelineConfig {
     pub stats_seqs: usize,
     pub kl_temperature: f32,
     pub seed: u64,
+    /// Thin alias for a progress-only [`RunObserver`]: `quantize` builds
+    /// one internally (no event sink, watchdog off) when set. Callers that
+    /// want events or a watchdog use `quantize_observed` directly.
     pub verbose: bool,
 }
 
@@ -95,20 +101,127 @@ pub struct QuantReport {
     pub calib_tokens: usize,
     pub effective_bpw: f64,
     pub effective_bytes: usize,
+    /// Per-phase / per-step wall-time histograms (`phase:<name>`,
+    /// `step:<name>`), populated only when an observer was attached.
+    pub phase_hists: Vec<(String, Histogram)>,
+}
+
+impl QuantReport {
+    /// Serialize for the `QUANT_REPORT.json` artifact the `quantize` and
+    /// `pack` commands write. Parses back with [`Json::parse`] (pinned by
+    /// the roundtrip test in `tests/quant_observer.rs`).
+    pub fn to_json(&self) -> Json {
+        let blocks: Vec<Json> = self
+            .block_errors
+            .iter()
+            .enumerate()
+            .map(|(b, &(before, after))| {
+                Json::obj().set("block", b).set("err_before", before).set("err_after", after)
+            })
+            .collect();
+        let ste: Vec<Json> = self
+            .ste
+            .iter()
+            .enumerate()
+            .map(|(b, s)| {
+                let mut o = Json::obj().set("block", b).set("steps", s.loss_curve.len());
+                if let (Some(&first), Some(&last)) = (s.loss_curve.first(), s.loss_curve.last()) {
+                    o.insert("loss_first", first);
+                    o.insert("loss_last", last);
+                }
+                let flips: Vec<Json> = s
+                    .layers
+                    .iter()
+                    .map(|l| {
+                        Json::obj().set("layer", l.id.to_string()).set("flip_ratio", l.flip_ratio)
+                    })
+                    .collect();
+                o.insert("flips", Json::Arr(flips));
+                o
+            })
+            .collect();
+        let admm: Vec<Json> = self
+            .admm_traces
+            .iter()
+            .map(|(id, t)| {
+                Json::obj()
+                    .set("layer", id.to_string())
+                    .set("iters_run", t.iters_run)
+                    .set("primal_last", t.primal_res.last().copied().unwrap_or(0.0))
+                    .set("recon_err_last", t.recon_err.last().copied().unwrap_or(0.0))
+            })
+            .collect();
+        let recon = Json::obj()
+            .set("steps", self.recon_losses.len())
+            .set("loss_first", self.recon_losses.first().copied().unwrap_or(0.0))
+            .set("loss_last", self.recon_losses.last().copied().unwrap_or(0.0));
+        let hists: Vec<Json> =
+            self.phase_hists.iter().map(|(name, h)| hist_json(name, h)).collect();
+        Json::obj()
+            .set(
+                "achieved",
+                Json::obj().set("bpw", self.effective_bpw).set("bytes", self.effective_bytes),
+            )
+            .set("blocks", Json::Arr(blocks))
+            .set("ste", Json::Arr(ste))
+            .set("admm_block0", Json::Arr(admm))
+            .set("recon", recon)
+            .set("phase_hists", Json::Arr(hists))
+            .set("wall_seconds", self.wall_seconds)
+            .set("calib_tokens", self.calib_tokens)
+    }
+}
+
+fn hist_json(name: &str, h: &Histogram) -> Json {
+    let buckets: Vec<Json> = h.buckets().iter().map(|&c| Json::Num(c as f64)).collect();
+    Json::obj()
+        .set("name", name)
+        .set("unit", h.unit())
+        .set("count", h.count())
+        .set("sum", h.sum())
+        .set("mean", h.mean())
+        .set("buckets", Json::Arr(buckets))
 }
 
 /// Run Algorithm 1. Calibration sequences must be `seq+1` tokens long
 /// (inputs + shifted targets); `seq` is the reconstruction context length.
+///
+/// With `cfg.verbose` a progress-only observer is attached (TTY line per
+/// block, no events, no watchdog); otherwise the run is telemetry-free.
+/// For the full event stream / watchdog, use [`quantize_observed`].
 pub fn quantize(
     teacher: &ModelParams,
     calib: &[Vec<u16>],
     seq: usize,
     cfg: &PipelineConfig,
 ) -> (QuantModel, QuantReport) {
-    let (out, secs) = time_once(|| quantize_inner(teacher, calib, seq, cfg));
-    let (qm, mut report) = out;
+    if cfg.verbose {
+        let mut obs = RunObserver::new(None, true, Watchdog::Off);
+        quantize_observed(teacher, calib, seq, cfg, Some(&mut obs))
+            .expect("progress-only observer cannot abort")
+    } else {
+        quantize_observed(teacher, calib, seq, cfg, None).expect("no watchdog, no abort")
+    }
+}
+
+/// [`quantize`] with an optional run observer attached: NDJSON events,
+/// per-phase wall-time histograms (moved into `QuantReport::phase_hists`),
+/// a TTY progress line, and the divergence watchdog. `Err` only when the
+/// observer's `abort` policy fires. With `None` this is exactly the
+/// telemetry-free path: zero clock reads beyond the single `wall_seconds`
+/// pair, and bit-identical outputs (pinned by
+/// `observer_toggle_is_bit_identical`).
+pub fn quantize_observed(
+    teacher: &ModelParams,
+    calib: &[Vec<u16>],
+    seq: usize,
+    cfg: &PipelineConfig,
+    obs: Option<&mut RunObserver>,
+) -> Result<(QuantModel, QuantReport), RunAborted> {
+    let (out, secs) = time_once(|| quantize_inner(teacher, calib, seq, cfg, obs));
+    let (qm, mut report) = out?;
     report.wall_seconds = secs;
-    (qm, report)
+    Ok((qm, report))
 }
 
 fn quantize_inner(
@@ -116,20 +229,47 @@ fn quantize_inner(
     calib: &[Vec<u16>],
     seq: usize,
     cfg: &PipelineConfig,
-) -> (QuantModel, QuantReport) {
+    mut obs: Option<&mut RunObserver>,
+) -> Result<(QuantModel, QuantReport), RunAborted> {
     assert!(!calib.is_empty(), "need calibration data");
     assert!(calib.iter().all(|s| s.len() > seq), "calib sequences must be seq+1 tokens");
     let mcfg = &teacher.cfg;
+    let observed = obs.is_some();
     let mut rng = Rng::new(cfg.seed);
     let mut report = QuantReport {
         calib_tokens: calib.len() * seq,
         ..Default::default()
     };
 
+    if let Some(o) = obs.as_deref_mut() {
+        let info = Json::obj()
+            .set("model", mcfg.name.as_str())
+            .set("bpw", cfg.bpw)
+            .set("d_model", mcfg.d_model)
+            .set("n_calib", calib.len())
+            .set("seq", seq)
+            .set("admm_iters", cfg.admm.iters)
+            .set("rho_schedule", cfg.admm.schedule.name())
+            .set(
+                "rank_override",
+                cfg.rank_override.map(|r| Json::Num(r as f64)).unwrap_or(Json::Null),
+            );
+        o.run_started(mcfg.n_layers, info);
+    }
+
     // ---------- Phase 1: global calibration ----------
+    if let Some(o) = obs.as_deref_mut() {
+        o.phase_started("calibration");
+    }
     let preconds = calibrate_preconditioners(teacher, calib, seq, cfg);
+    if let Some(o) = obs.as_deref_mut() {
+        o.phase_done("calibration");
+    }
 
     // ---------- Phase 2: block reconstruction ----------
+    if let Some(o) = obs.as_deref_mut() {
+        o.phase_started("block_recon");
+    }
     let mut qm = QuantModel::from_teacher(teacher);
     let n_seqs = calib.len();
     let mut tokens_flat = Vec::with_capacity(n_seqs * seq);
@@ -141,20 +281,25 @@ fn quantize_inner(
     let mut x_q = x_fp.clone();
 
     for b in 0..mcfg.n_layers {
-        if cfg.verbose {
-            eprintln!("[nanoquant] block {b}/{}", mcfg.n_layers);
+        if let Some(o) = obs.as_deref_mut() {
+            o.block_started(b);
         }
         // Teacher output for this block on the clean FP path.
         let (y_fp, _) = block_forward(mcfg, &teacher.blocks[b], &x_fp, n_seqs, seq);
 
         // Step 1: error-propagation mitigation on the FP copy.
         if cfg.enable_mitigation && cfg.t_pre > 0 {
+            let t0 = obs.as_deref().map(|o| o.step_start());
             let mut w = qm.params.blocks[b].clone();
-            mitigate_block(
+            let losses = mitigate_block(
                 mcfg, &mut w, &x_q, &y_fp, n_seqs, seq, cfg.t_pre, cfg.batch_seqs, cfg.lr_pre,
-                &mut rng,
-            );
+                &mut rng, obs.as_deref_mut(),
+            )?;
             qm.params.blocks[b] = w;
+            if let Some(o) = obs.as_deref_mut() {
+                o.step_done("mitigate", t0.unwrap());
+                o.curve("mitigate", &losses);
+            }
         }
 
         // Step 2: low-rank binary initialization per linear.
@@ -175,8 +320,23 @@ fn quantize_inner(
             admm_cfg.seed = cfg.seed ^ ((b as u64) << 8) ^ kind as u64;
             // Record per-iteration traces for block 0 (Fig. 9).
             admm_cfg.trace = cfg.admm.trace || b == 0;
+            // Dual-residual / ρ traces for the event stream (cheap; does
+            // not perturb the iterates, so bit-identity holds either way).
+            admm_cfg.extended = cfg.admm.extended || observed;
             let (p_u, p_v) = if cfg.init == InitMethod::LbAdmm {
+                let t0 = obs.as_deref().map(|o| o.step_start());
                 let res = super::admm::lb_admm(&w_target, rank, &admm_cfg);
+                if let Some(o) = obs.as_deref_mut() {
+                    o.step_done("admm", t0.unwrap());
+                    o.admm_layer(
+                        &id.to_string(),
+                        res.trace.iters_run,
+                        &res.trace.primal_res,
+                        &res.trace.dual_res,
+                        &res.trace.rho,
+                        &res.trace.recon_err,
+                    )?;
+                }
                 if b == 0 {
                     report.admm_traces.push((id, res.trace.clone()));
                 }
@@ -197,10 +357,15 @@ fn quantize_inner(
 
         // Step 3: factorized component refinement (STE).
         if cfg.enable_refine && cfg.t_post > 0 {
+            let t0 = obs.as_deref().map(|o| o.step_start());
             let ste = refine_block(
                 mcfg, &mut qm, b, &x_q, &y_fp, n_seqs, seq, cfg.t_post, cfg.batch_seqs,
-                cfg.lr_post, &mut rng,
-            );
+                cfg.lr_post, &mut rng, obs.as_deref_mut(),
+            )?;
+            if let Some(o) = obs.as_deref_mut() {
+                o.step_done("ste", t0.unwrap());
+                o.curve("ste", &ste.loss_curve);
+            }
             report.ste.push(ste);
         }
         let err_after = {
@@ -210,17 +375,32 @@ fn quantize_inner(
         report.block_errors.push((err_before, err_after));
 
         // Pack the block (Algorithm 1 lines 20–23).
+        let t0 = obs.as_deref().map(|o| o.step_start());
         qm.freeze_block(b);
+        if let Some(o) = obs.as_deref_mut() {
+            o.step_done("pack", t0.unwrap());
+        }
 
         // Advance both activation paths.
         let (xq_next, _) = block_forward(mcfg, &qm.params.blocks[b], &x_q, n_seqs, seq);
         x_q = xq_next;
         let (xfp_next, _) = block_forward(mcfg, &teacher.blocks[b], &x_fp, n_seqs, seq);
         x_fp = xfp_next;
+
+        if let Some(o) = obs.as_deref_mut() {
+            let (before, after) = report.block_errors[b];
+            o.block_done(b, before, after);
+        }
+    }
+    if let Some(o) = obs.as_deref_mut() {
+        o.phase_done("block_recon");
     }
 
     // ---------- Phase 3: scale-only model reconstruction ----------
     if cfg.enable_recon && cfg.t_glob > 0 {
+        if let Some(o) = obs.as_deref_mut() {
+            o.phase_started("global_recon");
+        }
         report.recon_losses = tune_scales_global(
             &mut qm,
             teacher,
@@ -231,12 +411,21 @@ fn quantize_inner(
             cfg.lr_glob,
             cfg.kl_temperature,
             &mut rng,
-        );
+            obs.as_deref_mut(),
+        )?;
+        if let Some(o) = obs.as_deref_mut() {
+            o.curve("recon", &report.recon_losses);
+            o.phase_done("global_recon");
+        }
     }
 
     report.effective_bpw = qm.effective_bpw();
     report.effective_bytes = qm.effective_bytes();
-    (qm, report)
+    if let Some(o) = obs.as_deref_mut() {
+        o.run_done(report.effective_bpw, report.effective_bytes);
+        report.phase_hists = o.take_hists();
+    }
+    Ok((qm, report))
 }
 
 /// Phase 1: run the teacher with CE loss over calibration batches,
@@ -284,6 +473,154 @@ mod tests {
     use crate::data::{gen_corpus, sample_sequences, tokenize, CorpusKind};
     use crate::nn::family_config;
     use crate::nn::trainer::train;
+    use crate::obs::run::EventSink;
+
+    /// Small untrained teacher + calib set + fast pipeline config shared by
+    /// the observer tests (the e2e quality test below trains its own).
+    fn tiny_setup() -> (ModelParams, Vec<Vec<u16>>, usize, PipelineConfig) {
+        let cfgm = family_config("l2", "xs");
+        let mut rng = Rng::new(7);
+        let teacher = ModelParams::init(&cfgm, &mut rng);
+        let calib: Vec<Vec<u16>> =
+            (0..4).map(|i| (0..17).map(|j| ((i * 31 + j * 7) % 250) as u16).collect()).collect();
+        let pcfg = PipelineConfig {
+            bpw: 2.0,
+            t_pre: 4,
+            t_post: 6,
+            t_glob: 4,
+            stats_seqs: 2,
+            admm: AdmmConfig { iters: 5, ..Default::default() },
+            ..Default::default()
+        };
+        (teacher, calib, 16, pcfg)
+    }
+
+    /// The telemetry-off invariant: attaching an observer (events + warn
+    /// watchdog) must not change a single packed bit or scale byte.
+    #[test]
+    fn observer_toggle_is_bit_identical() {
+        let (teacher, calib, seq, pcfg) = tiny_setup();
+        let (qm_off, rep_off) = quantize(&teacher, &calib, seq, &pcfg);
+        let mut obs = RunObserver::new(Some(EventSink::memory()), false, Watchdog::Warn);
+        let (qm_on, rep_on) =
+            quantize_observed(&teacher, &calib, seq, &pcfg, Some(&mut obs)).unwrap();
+
+        assert_eq!(qm_off.layers.len(), qm_on.layers.len());
+        for (id, a) in &qm_off.layers {
+            let b = &qm_on.layers[id];
+            let (fa, fb) = (a.frozen.as_ref().unwrap(), b.frozen.as_ref().unwrap());
+            assert_eq!(fa.u.hamming(&fb.u), 0, "{id}: packed U differs");
+            assert_eq!(fa.vt.hamming(&fb.vt), 0, "{id}: packed Vt differs");
+            assert_eq!(fa.s1.as_slice(), fb.s1.as_slice(), "{id}: s1 differs");
+            assert_eq!(fa.s2.as_slice(), fb.s2.as_slice(), "{id}: s2 differs");
+        }
+        // Observer-only surface: histograms exist exactly when attached.
+        assert!(rep_off.phase_hists.is_empty());
+        assert!(!rep_on.phase_hists.is_empty());
+        assert!(!obs.events().is_empty());
+        // Numeric report content matches too.
+        assert_eq!(rep_off.block_errors, rep_on.block_errors);
+        assert_eq!(rep_off.recon_losses, rep_on.recon_losses);
+    }
+
+    /// Golden NDJSON schema: every event parses, key sets are pinned per
+    /// event type (BTreeMap serialization makes them sorted and stable),
+    /// and lifecycle counts conserve.
+    #[test]
+    fn events_conserve_counts_and_parse() {
+        let (teacher, calib, seq, pcfg) = tiny_setup();
+        let mut obs = RunObserver::new(Some(EventSink::memory()), false, Watchdog::Warn);
+        quantize_observed(&teacher, &calib, seq, &pcfg, Some(&mut obs)).unwrap();
+
+        let lines: Vec<String> = obs.events().to_vec();
+        assert!(!lines.is_empty());
+        // Key-order pin: alphabetical serialization puts admm_iters first
+        // in run_started. A BTreeMap swap or key rename breaks this line.
+        assert!(lines[0].starts_with("{\"admm_iters\":"), "{}", &lines[0]);
+
+        let keys_of = |e: &Json| -> Vec<String> {
+            match e {
+                Json::Obj(m) => m.keys().cloned().collect(),
+                _ => panic!("event is not an object"),
+            }
+        };
+        let expect: &[(&str, &[&str])] = &[
+            (
+                "run_started",
+                &[
+                    "admm_iters", "bpw", "d_model", "ev", "model", "n_blocks", "n_calib",
+                    "rank_override", "rho_schedule", "seq", "t", "watchdog",
+                ],
+            ),
+            ("phase_started", &["ev", "phase", "t"]),
+            ("phase_done", &["ev", "phase", "seconds", "t"]),
+            ("block_started", &["block", "ev", "n_blocks", "t"]),
+            (
+                "block_done",
+                &[
+                    "block", "blocks_done", "err_after", "err_before", "eta_s", "ev", "n_blocks",
+                    "seconds", "t",
+                ],
+            ),
+            (
+                "admm_trace",
+                &[
+                    "block", "dual", "ev", "iter", "iters_run", "layer", "objective", "points",
+                    "primal", "rho", "t",
+                ],
+            ),
+            ("mitigate_curve", &["block", "ev", "loss", "step", "t"]),
+            ("ste_curve", &["block", "ev", "loss", "step", "t"]),
+            ("recon_curve", &["ev", "loss", "step", "t"]),
+            ("run_done", &["blocks", "effective_bpw", "effective_bytes", "ev", "seconds", "t"]),
+        ];
+        let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
+        for line in &lines {
+            let e = Json::parse(line).expect("every event line is valid JSON");
+            let ev = e.get("ev").unwrap().as_str().unwrap().to_string();
+            let (_, want) = expect
+                .iter()
+                .find(|(name, _)| *name == ev)
+                .unwrap_or_else(|| panic!("unexpected event type {ev}"));
+            let mut want: Vec<String> = want.iter().map(|s| s.to_string()).collect();
+            want.sort();
+            assert_eq!(keys_of(&e), want, "key set drifted for {ev}");
+            *counts.entry(ev).or_insert(0) += 1;
+        }
+        let n = teacher.cfg.n_layers;
+        assert_eq!(counts["run_started"], 1);
+        assert_eq!(counts["run_done"], 1);
+        assert_eq!(counts["phase_started"], 3);
+        assert_eq!(counts["phase_done"], 3);
+        assert_eq!(counts["block_started"], n);
+        assert_eq!(counts["block_done"], n);
+        assert_eq!(counts["mitigate_curve"], n);
+        assert_eq!(counts["ste_curve"], n);
+        assert_eq!(counts["admm_trace"], n * 7);
+        assert_eq!(counts["recon_curve"], 1);
+        // run_started opens the stream, run_done closes it.
+        assert!(lines[0].contains("\"ev\":\"run_started\""));
+        assert!(lines.last().unwrap().contains("\"ev\":\"run_done\""));
+    }
+
+    /// A NaN-poisoned teacher weight must abort the run in the first
+    /// block's mitigation step, not after quantizing every block.
+    #[test]
+    fn watchdog_aborts_on_injected_nan() {
+        let (mut teacher, calib, seq, pcfg) = tiny_setup();
+        teacher.blocks[0].wq.data[0] = f32::NAN;
+        let mut obs = RunObserver::new(Some(EventSink::memory()), false, Watchdog::Abort);
+        let err = quantize_observed(&teacher, &calib, seq, &pcfg, Some(&mut obs))
+            .expect_err("poisoned run must abort");
+        assert_eq!(err.stage, "mitigate");
+        assert_eq!(err.block, Some(0));
+        assert!(err.reason.contains("non-finite"), "{}", err.reason);
+        // The run died before any block completed; the watchdog event is
+        // the last thing on the stream.
+        let lines = obs.events();
+        assert!(lines.iter().all(|l| !l.contains("\"ev\":\"block_done\"")));
+        assert!(lines.last().unwrap().contains("\"ev\":\"watchdog\""));
+    }
 
     /// End-to-end smoke: quantizing a (briefly trained) teacher with the
     /// full pipeline must produce a model dramatically better than naive

@@ -12,12 +12,14 @@ use crate::nn::backward::model_backward;
 use crate::nn::loss::kl_divergence;
 use crate::nn::model::{model_forward, ModelParams};
 use crate::nn::LayerId;
+use crate::obs::run::{RunAborted, RunObserver};
 use crate::util::rng::Rng;
 use std::collections::BTreeMap;
 
 /// Tune all scales to align the student's predictive distribution with the
 /// teacher's. Calibration sequences must be at least `seq+1` tokens.
-/// Returns the KL loss curve.
+/// Returns the KL loss curve. `obs` feeds each step's loss to the
+/// divergence watchdog (`Err` only under the abort policy).
 pub fn tune_scales_global(
     qm: &mut QuantModel,
     teacher: &ModelParams,
@@ -28,10 +30,11 @@ pub fn tune_scales_global(
     lr: f32,
     temperature: f32,
     rng: &mut Rng,
-) -> Vec<f64> {
+    mut obs: Option<&mut RunObserver>,
+) -> Result<Vec<f64>, RunAborted> {
     let mut losses = Vec::new();
     if steps == 0 || qm.layers.is_empty() {
-        return losses;
+        return Ok(losses);
     }
     let mut opts: BTreeMap<LayerId, (Adam, Adam)> = qm
         .layers
@@ -53,6 +56,9 @@ pub fn tune_scales_global(
         let (s_logits, cache) = model_forward(&qm.params, &tokens, batch_seqs, seq, true);
         let (loss, dlogits) = kl_divergence(&t_logits, &s_logits, temperature);
         losses.push(loss);
+        if let Some(o) = obs.as_deref_mut() {
+            o.scalar_step("recon", step, loss)?;
+        }
         let grads = model_backward(&qm.params, &cache.unwrap(), &dlogits, None);
         let lr_scale = cosine_lr(step as u64, steps as u64);
 
@@ -74,7 +80,7 @@ pub fn tune_scales_global(
             qm.rematerialize(id);
         }
     }
-    losses
+    Ok(losses)
 }
 
 #[cfg(test)]
@@ -112,7 +118,8 @@ mod tests {
             (0..8).map(|i| (0..17).map(|j| ((i * 31 + j * 7) % 250) as u16).collect()).collect();
         let mut rng2 = Rng::new(1);
         let losses =
-            tune_scales_global(&mut qm, &teacher, &calib, 25, 4, 16, 5e-3, 2.0, &mut rng2);
+            tune_scales_global(&mut qm, &teacher, &calib, 25, 4, 16, 5e-3, 2.0, &mut rng2, None)
+                .unwrap();
         assert_eq!(losses.len(), 25);
         let first: f64 = losses[..3].iter().sum::<f64>() / 3.0;
         let last: f64 = losses[losses.len() - 3..].iter().sum::<f64>() / 3.0;
@@ -131,7 +138,9 @@ mod tests {
         let teacher = ModelParams::init(&cfg, &mut rng);
         let mut qm = QuantModel::from_teacher(&teacher);
         let calib = vec![vec![1u16; 17]];
-        let losses = tune_scales_global(&mut qm, &teacher, &calib, 5, 1, 16, 1e-3, 1.0, &mut rng);
+        let losses =
+            tune_scales_global(&mut qm, &teacher, &calib, 5, 1, 16, 1e-3, 1.0, &mut rng, None)
+                .unwrap();
         assert!(losses.is_empty());
     }
 }

@@ -10,6 +10,7 @@ use crate::nn::adam::{cosine_lr, Adam};
 use crate::nn::backward::block_backward;
 use crate::nn::model::{block_forward, LayerKind, ModelConfig};
 use crate::nn::LayerId;
+use crate::obs::run::{RunAborted, RunObserver};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -44,7 +45,9 @@ struct LayerOpt {
 /// Run STE refinement on block `block`.
 ///
 /// `x_q`: block inputs from the quantized prefix `[n_seqs*seq, d]`;
-/// `y_fp`: teacher block outputs (targets), same shape.
+/// `y_fp`: teacher block outputs (targets), same shape. `obs` feeds each
+/// step's loss to the divergence watchdog (`Err` only under the abort
+/// policy).
 pub fn refine_block(
     mcfg: &ModelConfig,
     qm: &mut QuantModel,
@@ -57,12 +60,13 @@ pub fn refine_block(
     batch_seqs: usize,
     lr: f32,
     rng: &mut Rng,
-) -> SteReport {
+    mut obs: Option<&mut RunObserver>,
+) -> Result<SteReport, RunAborted> {
     assert_eq!(x_q.rows(), n_seqs * seq);
     assert_eq!(y_fp.rows(), n_seqs * seq);
     let mut report = SteReport::default();
     if steps == 0 {
-        return report;
+        return Ok(report);
     }
 
     // Collect the quantized layers of this block.
@@ -72,7 +76,7 @@ pub fn refine_block(
         .filter(|id| qm.layers.contains_key(id))
         .collect();
     if ids.is_empty() {
-        return report;
+        return Ok(report);
     }
     let mut opts: Vec<LayerOpt> = ids
         .iter()
@@ -109,6 +113,9 @@ pub fn refine_block(
         let diff = yhat.sub(&yb);
         let loss = diff.fro_norm_sq() / diff.numel() as f64;
         report.loss_curve.push(loss);
+        if let Some(o) = obs.as_deref_mut() {
+            o.scalar_step("ste", step, loss)?;
+        }
         let dy = diff.scale(2.0 / diff.numel() as f32);
         let (_, grads) = block_backward(mcfg, bw, &cache, &dy, block, None);
 
@@ -159,7 +166,7 @@ pub fn refine_block(
             samples,
         });
     }
-    report
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -203,7 +210,8 @@ mod tests {
         };
         let mut rng2 = Rng::new(1);
         let report =
-            refine_block(&cfg, &mut qm, 0, &x, &y_fp, n_seqs, seq, 30, 4, 1e-3, &mut rng2);
+            refine_block(&cfg, &mut qm, 0, &x, &y_fp, n_seqs, seq, 30, 4, 1e-3, &mut rng2, None)
+                .unwrap();
         let after = {
             let (yq, _) = block_forward(&cfg, &qm.params.blocks[0], &x, n_seqs, seq);
             yq.sub(&y_fp).fro_norm_sq() / yq.numel() as f64
@@ -228,7 +236,7 @@ mod tests {
         let mut qm = QuantModel::from_teacher(&teacher);
         let x = Tensor::zeros(&[4, cfg.d_model]);
         let y = Tensor::zeros(&[4, cfg.d_model]);
-        let r = refine_block(&cfg, &mut qm, 0, &x, &y, 1, 4, 0, 2, 1e-3, &mut rng);
+        let r = refine_block(&cfg, &mut qm, 0, &x, &y, 1, 4, 0, 2, 1e-3, &mut rng, None).unwrap();
         assert!(r.loss_curve.is_empty());
     }
 }

@@ -451,6 +451,21 @@ impl<T: Into<Json>> From<Vec<T>> for Json {
     }
 }
 
+/// Parse newline-delimited JSON (one document per non-empty line), the
+/// format of the quantization run's `--events` stream. Any malformed line
+/// fails the whole parse, with its (1-based) line number in the error.
+pub fn parse_ndjson(text: &str) -> Result<Vec<Json>, String> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 1))?;
+        out.push(v);
+    }
+    Ok(out)
+}
+
 /// Write a JSON value to `path`, creating parent directories.
 pub fn write_json(path: &str, v: &Json) -> std::io::Result<()> {
     if let Some(parent) = std::path::Path::new(path).parent() {
@@ -487,6 +502,17 @@ mod tests {
     fn integers_serialize_without_decimal() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn ndjson_parses_lines_and_reports_bad_line_numbers() {
+        let text = "{\"ev\":\"a\",\"t\":0}\n\n{\"ev\":\"b\"}\n";
+        let evs = parse_ndjson(text).unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[1].get("ev").unwrap().as_str(), Some("b"));
+        assert!(parse_ndjson("").unwrap().is_empty());
+        let err = parse_ndjson("{\"ok\":1}\n{broken\n").unwrap_err();
+        assert!(err.starts_with("line 2:"), "{err}");
     }
 
     #[test]

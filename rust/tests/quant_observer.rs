@@ -1,0 +1,88 @@
+//! Integration: the quantization-run observer's on-disk artifacts — the
+//! `--events` NDJSON stream and `QUANT_REPORT.json` — written through the
+//! real file sink and parsed back, with lifecycle count conservation.
+
+use nanoquant::nn::family_config;
+use nanoquant::nn::model::ModelParams;
+use nanoquant::obs::{EventSink, RunObserver, Watchdog};
+use nanoquant::quant::{quantize_observed, AdmmConfig, PipelineConfig};
+use nanoquant::util::json::{parse_ndjson, write_json, Json};
+use nanoquant::util::rng::Rng;
+
+fn tiny() -> (ModelParams, Vec<Vec<u16>>, usize, PipelineConfig) {
+    let cfgm = family_config("l2", "xs");
+    let mut rng = Rng::new(11);
+    let teacher = ModelParams::init(&cfgm, &mut rng);
+    let calib: Vec<Vec<u16>> =
+        (0..4).map(|i| (0..17).map(|j| ((i * 29 + j * 5) % 250) as u16).collect()).collect();
+    let pcfg = PipelineConfig {
+        bpw: 2.0,
+        t_pre: 3,
+        t_post: 4,
+        t_glob: 3,
+        stats_seqs: 2,
+        admm: AdmmConfig { iters: 4, ..Default::default() },
+        ..Default::default()
+    };
+    (teacher, calib, 16, pcfg)
+}
+
+#[test]
+fn ndjson_file_sink_and_report_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("nanoquant-obs-{}", std::process::id()));
+    let events_path = dir.join("run.ndjson");
+    let report_path = dir.join("QUANT_REPORT.json");
+    let (teacher, calib, seq, pcfg) = tiny();
+
+    let sink = EventSink::file(events_path.to_str().unwrap()).expect("file sink opens");
+    let mut obs = RunObserver::new(Some(sink), false, Watchdog::Warn);
+    let (_qm, report) =
+        quantize_observed(&teacher, &calib, seq, &pcfg, Some(&mut obs)).unwrap();
+    drop(obs); // flush the BufWriter (run_done already flushed; drop is belt+braces)
+
+    // ---- NDJSON stream: parses line-by-line, lifecycle counts conserve ----
+    let text = std::fs::read_to_string(&events_path).unwrap();
+    let events = parse_ndjson(&text).expect("every event line parses");
+    let count = |ev: &str| {
+        events.iter().filter(|e| e.get("ev").and_then(Json::as_str) == Some(ev)).count()
+    };
+    assert_eq!(count("run_started"), 1);
+    assert_eq!(count("run_done"), 1);
+    assert_eq!(count("phase_started"), count("phase_done"));
+    assert_eq!(count("block_started"), count("block_done"));
+    assert_eq!(count("block_done"), teacher.cfg.n_layers);
+    // `t` is monotone non-decreasing across the stream.
+    let ts: Vec<f64> = events.iter().map(|e| e.get("t").unwrap().as_f64().unwrap()).collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "event timestamps went backwards");
+
+    // ---- QUANT_REPORT.json: write -> parse roundtrip through disk ----
+    let doc = report.to_json();
+    write_json(report_path.to_str().unwrap(), &doc).unwrap();
+    let back = Json::parse(&std::fs::read_to_string(&report_path).unwrap()).unwrap();
+    assert_eq!(back, doc, "report must roundtrip bit-for-bit through disk");
+    assert_eq!(back.get("blocks").unwrap().as_arr().unwrap().len(), teacher.cfg.n_layers);
+    assert!(back.get("achieved").unwrap().get("bpw").unwrap().as_f64().unwrap() > 0.0);
+    assert!(back.get("wall_seconds").unwrap().as_f64().unwrap() >= 0.0);
+    // Phase histograms survive serialization with count conservation.
+    let hists = back.get("phase_hists").unwrap().as_arr().unwrap();
+    assert!(!hists.is_empty());
+    let names: Vec<&str> =
+        hists.iter().map(|h| h.get("name").unwrap().as_str().unwrap()).collect();
+    for phase in ["phase:calibration", "phase:block_recon", "phase:global_recon"] {
+        assert!(names.contains(&phase), "missing {phase} in {names:?}");
+    }
+    for h in hists {
+        let n = h.get("count").unwrap().as_f64().unwrap();
+        let bucket_sum: f64 = h
+            .get("buckets")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| b.as_f64().unwrap())
+            .sum();
+        assert_eq!(n, bucket_sum, "histogram {:?} lost samples", h.get("name"));
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
